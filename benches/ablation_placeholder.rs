@@ -1,0 +1,179 @@
+//! Ablation bench: WHY AdaAlter's swapped update order + t'·ε² placeholder
+//! matter — the design argument of paper §4.2–4.3, made measurable.
+//!
+//! Compares three local-update rules on the synthetic non-IID problem
+//! (hand-rolled loop, no trainer, so the ablated variant needs no config
+//! plumbing):
+//!
+//!   A. Local AdaAlter (Alg. 4)    — placeholder denominator; B² identical
+//!                                   on every worker between syncs.
+//!   B. "Naive local AdaGrad"      — each worker accumulates its OWN B²
+//!                                   from local gradients (the obvious-but-
+//!                                   wrong way to make AdaGrad local);
+//!                                   denominators drift apart.
+//!   C. Local AdaAlter w/o ε-placeholder — update divides by the stale
+//!                                   B²_sync only (denom_add = ε² fixed,
+//!                                   not t'·ε²): early steps oversized.
+//!
+//! Reported: (1) cross-worker denominator spread right before each sync
+//! (zero for A by construction — the property Theorem 2's proof uses);
+//! (2) final suboptimality at equal step budget.
+//!
+//! Run: `cargo bench --bench ablation_placeholder`
+
+use adaalter::coordinator::WorkerBackend;
+use adaalter::sim::SyntheticProblem;
+use adaalter::util::math;
+
+const D: usize = 2048;
+const N: usize = 8;
+const H: u64 = 8;
+const STEPS: u64 = 800;
+const ETA: f32 = 0.5;
+const EPS2: f32 = 1.0;
+
+struct W {
+    x: Vec<f32>,
+    b2_sync: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+fn average(fields: Vec<&[f32]>, out: &mut [f32]) {
+    math::mean_into(&fields, out);
+}
+
+/// Run one variant; returns (mean pre-sync denominator spread, final subopt).
+fn run(variant: &str, problem: &SyntheticProblem) -> (f64, f64) {
+    let mut backends: Vec<_> = (0..N).map(|w| problem.backend(w)).collect();
+    let init = backends[0].init_params().unwrap();
+    let mut ws: Vec<W> = (0..N)
+        .map(|_| W { x: init.clone(), b2_sync: vec![1.0; D], acc: vec![1.0; D] })
+        .collect();
+    let mut g = vec![0.0f32; D];
+    let mut spread_sum = 0.0f64;
+    let mut spreads = 0u64;
+    let warmup = 50u64;
+
+    for t in 1..=STEPS {
+        let lr = ETA * (t as f32 / warmup as f32).min(1.0);
+        let t_prime = (t - 1) % H + 1;
+        for (w, b) in ws.iter_mut().zip(backends.iter_mut()) {
+            b.loss_and_grad(&w.x, t, &mut g).unwrap();
+            match variant {
+                "adaalter" | "no_placeholder" => {
+                    let add = if variant == "adaalter" { t_prime as f32 * EPS2 } else { EPS2 };
+                    for j in 0..D {
+                        w.x[j] -= lr * g[j] / (w.b2_sync[j] + add).sqrt();
+                        w.acc[j] += g[j] * g[j];
+                    }
+                }
+                "naive_adagrad" => {
+                    // accumulate-first with the WORKER-LOCAL accumulator —
+                    // denominators depend on each worker's own gradients.
+                    for j in 0..D {
+                        w.acc[j] += g[j] * g[j];
+                        w.x[j] -= lr * g[j] / (w.acc[j] + EPS2).sqrt();
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        if t % H == 0 {
+            // Denominator disagreement right before averaging: the quantity
+            // Local AdaAlter keeps at 0 between syncs (b2_sync identical),
+            // and naive local AdaGrad lets drift (per-worker acc used).
+            let live: Vec<&[f32]> = ws
+                .iter()
+                .map(|w| {
+                    if variant == "naive_adagrad" {
+                        w.acc.as_slice()
+                    } else {
+                        w.b2_sync.as_slice()
+                    }
+                })
+                .collect();
+            // Pairwise vs worker 0 — exactly 0 when denominators are
+            // identical (averaging against the mean would read float
+            // rounding of the 8-way sum as fake drift).
+            let spread: f64 = live[1..]
+                .iter()
+                .map(|v| math::max_abs_diff(v, live[0]) as f64)
+                .fold(0.0, f64::max);
+            spread_sum += spread;
+            spreads += 1;
+
+            // Sync round: average x and acc; install.
+            let xs: Vec<&[f32]> = ws.iter().map(|w| w.x.as_slice()).collect();
+            let mut avg_x = vec![0.0f32; D];
+            average(xs, &mut avg_x);
+            let accs: Vec<&[f32]> = ws.iter().map(|w| w.acc.as_slice()).collect();
+            let mut avg_acc = vec![0.0f32; D];
+            average(accs, &mut avg_acc);
+            for w in ws.iter_mut() {
+                w.x.copy_from_slice(&avg_x);
+                w.acc.copy_from_slice(&avg_acc);
+                w.b2_sync.copy_from_slice(&avg_acc);
+            }
+        }
+    }
+    let xs: Vec<&[f32]> = ws.iter().map(|w| w.x.as_slice()).collect();
+    let mut avg_x = vec![0.0f32; D];
+    average(xs, &mut avg_x);
+    let subopt = problem.global_loss(&avg_x) - problem.global_loss(&problem.optimum());
+    (spread_sum / spreads.max(1) as f64, subopt)
+}
+
+fn main() {
+    println!("=== Ablation: the placeholder denominator (paper §4.2–4.3) ===");
+    println!("(synthetic non-IID, d={D}, n={N}, H={H}, {STEPS} steps)\n");
+    println!(
+        "{:<28} {:>26} {:>18}",
+        "variant", "pre-sync denom spread", "final subopt"
+    );
+    let problem = SyntheticProblem::new(D, N, 7);
+    let mut rows = Vec::new();
+    for v in ["adaalter", "naive_adagrad", "no_placeholder"] {
+        let (spread, subopt) = run(v, &problem);
+        println!("{v:<28} {spread:>26.4} {subopt:>18.6}");
+        rows.push((v, spread, subopt));
+    }
+
+    println!("\n=== checks ===");
+    let get = |name: &str| rows.iter().find(|(v, _, _)| *v == name).unwrap().clone();
+    let (_, s_aa, l_aa) = get("adaalter");
+    let (_, s_ng, l_ng) = get("naive_adagrad");
+    let (_, _, l_np) = get("no_placeholder");
+    println!(
+        "AdaAlter keeps the update denominator IDENTICAL across workers \
+         (spread {s_aa:.1e}) {}",
+        ok(s_aa == 0.0)
+    );
+    println!(
+        "naive local AdaGrad denominators drift (spread {s_ng:.3}) {}",
+        ok(s_ng > 0.0)
+    );
+    // NOTE the honest reading: on a smooth quadratic the naive variant can
+    // converge fine — its failure mode is the *inconsistent objective*
+    // (workers divide by different denominators), which breaks the
+    // Theorem 2 analysis and bites under heterogeneity/scale, not here.
+    // What we check is exactly what §4.3 claims: consistency, bounded cost.
+    println!(
+        "all variants converge on the smooth problem (subopt {l_aa:.3} / \
+         {l_ng:.3} / {l_np:.3} < 1) {}",
+        ok(l_aa < 1.0 && l_ng < 1.0 && l_np < 1.0)
+    );
+    println!(
+        "placeholder damping costs ≤2.5x suboptimality vs its no-placeholder \
+         ablation at equal steps ({l_aa:.3} vs {l_np:.3}) — the price of the \
+         proof-carrying denominator {}",
+        ok(l_aa <= l_np * 2.5)
+    );
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "[OK]"
+    } else {
+        "[MISMATCH]"
+    }
+}

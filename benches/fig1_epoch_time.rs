@@ -1,0 +1,76 @@
+//! Bench: regenerate **Figure 1** — time of one epoch vs number of workers
+//! for every algorithm the paper plots, from the paper-calibrated cluster
+//! model, and check the headline shape claims programmatically.
+//!
+//! Run: `cargo bench --bench fig1_epoch_time`
+
+use adaalter::config::SyncPeriod::{Every, Infinite};
+use adaalter::sim::{EpochModel, SimAlgo};
+
+fn main() {
+    let m = EpochModel::paper();
+    let ns = [1usize, 2, 4, 8];
+    let algos = [
+        SimAlgo::AdaGrad,
+        SimAlgo::AdaAlter,
+        SimAlgo::LocalAdaAlter(Every(4)),
+        SimAlgo::LocalAdaAlter(Every(8)),
+        SimAlgo::LocalAdaAlter(Every(12)),
+        SimAlgo::LocalAdaAlter(Every(16)),
+        SimAlgo::LocalAdaAlter(Infinite),
+        SimAlgo::IdealComputeOnly,
+    ];
+
+    println!("=== Figure 1: time of an epoch (seconds) vs #workers ===");
+    println!("(epoch = 20,000×8×256 samples; paper-calibrated 8×V100 PS model)\n");
+    println!("{:<34} {:>9} {:>9} {:>9} {:>9}", "algorithm", "n=1", "n=2", "n=4", "n=8");
+    for a in &algos {
+        let row: Vec<String> = ns
+            .iter()
+            .map(|&n| format!("{:>9.0}", m.epoch_time_s(*a, n)))
+            .collect();
+        println!("{:<34} {}", a.label(), row.join(" "));
+    }
+
+    // Shape checks the paper's text commits to (§6.3–6.4).
+    println!("\n=== shape checks ===");
+    let sync8 = m.epoch_time_s(SimAlgo::AdaGrad, 8);
+    let h4_8 = m.epoch_time_s(SimAlgo::LocalAdaAlter(Every(4)), 8);
+    let reduction = 100.0 * (1.0 - h4_8 / sync8);
+    println!(
+        "H=4 cuts epoch time by {reduction:.1}% vs fully-sync AdaGrad at n=8 \
+         (paper: ~30%) {}",
+        ok(reduction > 25.0 && reduction < 35.0)
+    );
+
+    let hinf = m.epoch_time_s(SimAlgo::LocalAdaAlter(Infinite), 8);
+    let ideal = m.epoch_time_s(SimAlgo::IdealComputeOnly, 8);
+    let gap = 100.0 * (hinf - ideal) / ideal;
+    println!(
+        "H=∞ sits {gap:.1}% above ideal-compute at n=8 — the §6.4 dataloader \
+         bottleneck {}",
+        ok(gap > 5.0)
+    );
+
+    let gap4 = m.epoch_time_s(SimAlgo::LocalAdaAlter(Infinite), 4)
+        - m.epoch_time_s(SimAlgo::IdealComputeOnly, 4);
+    println!(
+        "…but vanishes at n=4 (loading hidden behind compute) {}",
+        ok(gap4.abs() < 2.0 * m.epoch_time_s(SimAlgo::IdealComputeOnly, 4) * 0.01)
+    );
+
+    let mut monotone = true;
+    for w in [16u64, 12, 8, 4].windows(2) {
+        monotone &= m.epoch_time_s(SimAlgo::LocalAdaAlter(Every(w[0])), 8)
+            <= m.epoch_time_s(SimAlgo::LocalAdaAlter(Every(w[1])), 8);
+    }
+    println!("epoch time monotone decreasing in H {}", ok(monotone));
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "[OK]"
+    } else {
+        "[MISMATCH]"
+    }
+}

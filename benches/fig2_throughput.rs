@@ -1,0 +1,67 @@
+//! Bench: regenerate **Figure 2** — throughput (samples/second) vs number
+//! of workers, plus the §6.4 scaling observation.
+//!
+//! Run: `cargo bench --bench fig2_throughput`
+
+use adaalter::config::SyncPeriod::{Every, Infinite};
+use adaalter::sim::{EpochModel, SimAlgo};
+
+fn main() {
+    let m = EpochModel::paper();
+    let ns = [1usize, 2, 4, 8];
+    let algos = [
+        SimAlgo::AdaGrad,
+        SimAlgo::AdaAlter,
+        SimAlgo::LocalAdaAlter(Every(4)),
+        SimAlgo::LocalAdaAlter(Every(8)),
+        SimAlgo::LocalAdaAlter(Every(12)),
+        SimAlgo::LocalAdaAlter(Every(16)),
+        SimAlgo::LocalAdaAlter(Infinite),
+        SimAlgo::IdealComputeOnly,
+    ];
+
+    println!("=== Figure 2: throughput (samples/s) vs #workers ===\n");
+    println!("{:<34} {:>9} {:>9} {:>9} {:>9}", "algorithm", "n=1", "n=2", "n=4", "n=8");
+    for a in &algos {
+        let row: Vec<String> =
+            ns.iter().map(|&n| format!("{:>9.0}", m.throughput(*a, n))).collect();
+        println!("{:<34} {}", a.label(), row.join(" "));
+    }
+
+    println!("\n=== shape checks ===");
+    // Ordering at n=8: ideal > H=∞ > H=16 > … > H=4 > fully-sync.
+    let mut vals: Vec<f64> = vec![
+        m.throughput(SimAlgo::IdealComputeOnly, 8),
+        m.throughput(SimAlgo::LocalAdaAlter(Infinite), 8),
+        m.throughput(SimAlgo::LocalAdaAlter(Every(16)), 8),
+        m.throughput(SimAlgo::LocalAdaAlter(Every(4)), 8),
+        m.throughput(SimAlgo::AdaGrad, 8),
+    ];
+    let sorted = {
+        let mut s = vals.clone();
+        s.sort_by(|a, b| b.total_cmp(a));
+        s
+    };
+    println!("throughput ordering at n=8 matches Fig. 2 {}", ok(vals == sorted));
+    vals.dedup();
+
+    // §6.4: sub-linear 4→8 scaling for everything except the ideal bound.
+    for a in [SimAlgo::AdaGrad, SimAlgo::LocalAdaAlter(Every(4)), SimAlgo::LocalAdaAlter(Infinite)] {
+        let r = m.throughput(a, 8) / m.throughput(a, 4);
+        println!(
+            "{:<34} 4→8 worker speedup ×{r:.2} (<2: dataloader bound) {}",
+            a.label(),
+            ok(r < 1.7)
+        );
+    }
+    let r = m.throughput(SimAlgo::IdealComputeOnly, 8) / m.throughput(SimAlgo::IdealComputeOnly, 4);
+    println!("{:<34} 4→8 worker speedup ×{r:.2} (=2: ideal) {}", "Ideal computation-only", ok((r - 2.0).abs() < 1e-9));
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "[OK]"
+    } else {
+        "[MISMATCH]"
+    }
+}

@@ -1,0 +1,130 @@
+//! Bench: L3 hot paths — the coordinator-side loops that bound throughput,
+//! plus the PJRT dispatch costs. The before/after numbers in
+//! EXPERIMENTS.md §Perf come from this harness.
+//!
+//! Run: `cargo bench --bench micro_hot_paths`
+//! Knob: ADAALTER_BENCH_DIM (default 1,048,576 — a 4 MiB vector, ~1M-param
+//! model; the paper's 0.83B-param state is 800× this, same loops).
+
+use adaalter::coordinator::aggregate::{average_into, Aggregator};
+use adaalter::data::BatchLoader;
+use adaalter::optim::{AdaAlter, AdaGrad, LocalAdaAlterWorker, SyncOptimizer};
+use adaalter::util::rng::Rng;
+use adaalter::util::timing::{bench, black_box, report};
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn randn(d: usize, seed: u64, sigma: f32) -> Vec<f32> {
+    let mut v = vec![0.0f32; d];
+    Rng::new(seed).fill_normal(&mut v, sigma);
+    v
+}
+
+fn main() {
+    let d: usize = env_or("ADAALTER_BENCH_DIM", 1 << 20);
+    let n_workers = 8usize;
+    println!("=== L3 hot paths (d = {d}, {n_workers} workers) ===\n");
+
+    // --- optimizer steps -------------------------------------------------
+    let g = randn(d, 1, 0.5);
+    let gsq: Vec<f32> = g.iter().map(|v| v * v).collect();
+
+    {
+        let mut x = randn(d, 2, 1.0);
+        let mut opt = AdaGrad::new(d, 1.0, 1.0);
+        let s = bench(4, 12, || {
+            opt.step(&mut x, &g, &gsq, 0.1);
+            black_box(x[0]);
+        });
+        // streams: read g, gsq, rw b2, rw x = 6 vectors of 4d bytes
+        report("adagrad_step (fused accumulate+update)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(24 * d as u64)));
+    }
+    {
+        let mut x = randn(d, 3, 1.0);
+        let mut opt = AdaAlter::new(d, 1.0, 1.0);
+        let s = bench(4, 12, || {
+            opt.step(&mut x, &g, &gsq, 0.1);
+            black_box(x[0]);
+        });
+        report("adaalter_step (fused update+accumulate)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(24 * d as u64)));
+    }
+    {
+        let mut w = LocalAdaAlterWorker::new(randn(d, 4, 1.0), 1.0, 1.0);
+        let s = bench(4, 12, || {
+            w.local_step(&g, 0.1);
+            black_box(w.x()[0]);
+        });
+        report("local_adaalter_step (placeholder denom)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(20 * d as u64)));
+    }
+
+    // --- aggregation -----------------------------------------------------
+    let grads: Vec<Vec<f32>> = (0..n_workers).map(|i| randn(d, 10 + i as u64, 0.5)).collect();
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    {
+        let mut agg = Aggregator::new(d);
+        let s = bench(2, 10, || {
+            agg.mean_grads(&refs);
+            black_box(agg.avg_g[0]);
+        });
+        report("mean_grads (8-way)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(4 * (n_workers + 1) as u64 * d as u64)));
+    }
+    {
+        let mut agg = Aggregator::new(d);
+        let s = bench(2, 10, || {
+            agg.mean_grads_and_squares(&refs);
+            black_box(agg.avg_gsq[0]);
+        });
+        report("mean_grads_and_squares (8-way, 1 pass)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(4 * (n_workers + 2) as u64 * d as u64)));
+    }
+    {
+        let mut out = vec![0.0f32; d];
+        let s = bench(2, 10, || {
+            average_into(&refs, &mut out);
+            black_box(out[0]);
+        });
+        report("average_into (sync round, 8-way)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(4 * (n_workers + 1) as u64 * d as u64)));
+    }
+
+    // --- data pipeline ---------------------------------------------------
+    {
+        let loader = BatchLoader::new(2048, 8, 4, 8, 64, &Default::default(), 7);
+        let mut step = 0u64;
+        let s = bench(64, 10, || {
+            step += 1;
+            black_box(loader.train_batch((step % 8) as usize, step));
+        });
+        report("train_batch (4×65 tokens, zipf+markov)", &s, &format!("{:.2} Mtok/s", 260.0 * s.per_second() / 1e6));
+    }
+
+    // --- PJRT dispatch ---------------------------------------------------
+    if adaalter::runtime::artifacts_available("artifacts") {
+        use adaalter::coordinator::WorkerBackend;
+        use adaalter::runtime::PjrtBackend;
+        let mut b = PjrtBackend::new("artifacts", "tiny", 0, 1, &Default::default(), 3).unwrap();
+        let x = b.init_params().unwrap();
+        let dm = b.dim();
+        let mut grad = vec![0.0f32; dm];
+        let mut step = 0u64;
+        let s = bench(3, 8, || {
+            step += 1;
+            black_box(b.loss_and_grad(&x, step, &mut grad).unwrap());
+        });
+        report("pjrt train_step (tiny fwd+bwd, B=4 S=32)", &s, &format!("{:.1} ms", s.median_ns / 1e6));
+
+        let mut xf = x.clone();
+        let b2 = vec![1.0f32; dm];
+        let mut acc = b2.clone();
+        let s = bench(3, 8, || {
+            step += 1;
+            black_box(
+                b.fused_local_adaalter(&mut xf, &b2, &mut acc, 1.0, 0.1, step)
+                    .unwrap(),
+            );
+        });
+        report("pjrt fused local step (fwd+bwd+update)", &s, &format!("{:.1} ms", s.median_ns / 1e6));
+    } else {
+        println!("(artifacts/ not built — skipping PJRT dispatch benches)");
+    }
+}

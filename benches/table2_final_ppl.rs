@@ -1,0 +1,102 @@
+//! Bench: regenerate **Table 2** — final test PPL (mean ± std over seeds)
+//! and total training time for AdaGrad, AdaAlter, and Local AdaAlter with
+//! H ∈ {4, 8, 12, 16}, on the scaled-down testbed.
+//!
+//! Run: `cargo bench --bench table2_final_ppl`
+//! Knobs: ADAALTER_BENCH_STEPS (default 120), ADAALTER_BENCH_SEEDS (2),
+//!        ADAALTER_BENCH_WORKERS (2).
+
+use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::factory::make_factory;
+use adaalter::coordinator::Trainer;
+use adaalter::runtime::artifacts_available;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n.max(1.0);
+    (mean, var.sqrt())
+}
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available("artifacts") {
+        println!("table2_final_ppl: artifacts/ not built (run `make artifacts`); skipping");
+        return Ok(());
+    }
+    let steps: u64 = env_or("ADAALTER_BENCH_STEPS", 120);
+    let seeds: u64 = env_or("ADAALTER_BENCH_SEEDS", 2);
+    let workers: usize = env_or("ADAALTER_BENCH_WORKERS", 2);
+
+    let rows: Vec<(Algorithm, SyncPeriod, &str)> = vec![
+        (Algorithm::AdaGrad, SyncPeriod::Every(1), "AdaGrad"),
+        (Algorithm::AdaAlter, SyncPeriod::Every(1), "AdaAlter"),
+        (Algorithm::LocalAdaAlter, SyncPeriod::Every(4), "Local AdaAlter H=4"),
+        (Algorithm::LocalAdaAlter, SyncPeriod::Every(8), "Local AdaAlter H=8"),
+        (Algorithm::LocalAdaAlter, SyncPeriod::Every(12), "Local AdaAlter H=12"),
+        (Algorithm::LocalAdaAlter, SyncPeriod::Every(16), "Local AdaAlter H=16"),
+    ];
+
+    println!("=== Table 2: final test PPL and (virtual) training time ===");
+    println!("({} seeds × {} steps, tiny preset, {} workers)\n", seeds, steps, workers);
+    println!("{:<24} {:>18} {:>14}", "Method", "Test PPL", "Time (virt. h)");
+
+    let mut summary = Vec::new();
+    for (algo, h, label) in &rows {
+        let mut ppls = Vec::new();
+        let mut hours = Vec::new();
+        for seed in 0..seeds {
+            let mut cfg = ExperimentConfig::default();
+            cfg.train.preset = "tiny".into();
+            cfg.train.backend = Backend::Pjrt;
+            cfg.train.workers = workers;
+            cfg.train.steps = steps;
+            cfg.train.steps_per_epoch = (steps / 4).max(1);
+            cfg.train.sync_period = *h;
+            cfg.train.seed = 1000 + seed;
+            cfg.train.log_every = steps;
+            cfg.optim.algorithm = *algo;
+            cfg.optim.warmup_steps = steps / 5;
+            cfg.data.eval_batches = 2;
+
+            let r = Trainer::new(cfg.clone(), make_factory(&cfg)?).run()?;
+            ppls.push(r.final_eval.unwrap().ppl.unwrap());
+            hours.push(r.clock.now_s() / 3600.0);
+        }
+        let (pm, ps) = mean_std(&ppls);
+        let (tm, _) = mean_std(&hours);
+        println!("{label:<24} {:>11.2} ± {:>4.2} {:>14.3}", pm, ps, tm);
+        summary.push((label.to_string(), pm, tm));
+    }
+
+    println!("\n=== shape checks (Table 2 structure) ===");
+    let t = |name: &str| summary.iter().find(|(l, _, _)| l == name).unwrap().2;
+    let p = |name: &str| summary.iter().find(|(l, _, _)| l == name).unwrap().1;
+    let mut time_monotone = true;
+    for w in ["Local AdaAlter H=4", "Local AdaAlter H=8", "Local AdaAlter H=12", "Local AdaAlter H=16"].windows(2) {
+        time_monotone &= t(w[1]) <= t(w[0]) + 1e-9;
+    }
+    println!("time decreases with H {}", ok(time_monotone));
+    println!(
+        "all local variants faster than AdaGrad ({:.3} h) {}",
+        t("AdaGrad"),
+        ok(t("Local AdaAlter H=4") < t("AdaGrad"))
+    );
+    let ppl_ratio = p("Local AdaAlter H=4") / p("AdaGrad");
+    println!(
+        "H=4 PPL within 15% of AdaGrad (ratio {ppl_ratio:.3}) {}",
+        ok((0.85..1.15).contains(&ppl_ratio))
+    );
+    Ok(())
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "[OK]"
+    } else {
+        "[MISMATCH]"
+    }
+}

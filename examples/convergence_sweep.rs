@@ -1,0 +1,81 @@
+//! Convergence sweep — the Fig. 3(a)/(b) reproduction on the real LM:
+//! test PPL vs (virtual) time and vs epochs, for AdaGrad, AdaAlter and
+//! Local AdaAlter with several H.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example convergence_sweep            # tiny preset
+//! ADAALTER_STEPS=400 ADAALTER_WORKERS=4 \
+//!   cargo run --release --example convergence_sweep
+//! ```
+//!
+//! Writes one CSV row per (algorithm, eval point); plotting
+//! `ppl` against `virtual_hours` reproduces Fig. 3(a), against `epoch`
+//! Fig. 3(b).
+
+use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::factory::make_factory;
+use adaalter::coordinator::Trainer;
+use adaalter::util::csv::CsvWriter;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps: u64 = env_or("ADAALTER_STEPS", 200);
+    let workers: usize = env_or("ADAALTER_WORKERS", 2);
+    let preset: String = env_or("ADAALTER_PRESET", "tiny".to_string());
+
+    let variants: Vec<(Algorithm, SyncPeriod, &str)> = vec![
+        (Algorithm::AdaGrad, SyncPeriod::Every(1), "AdaGrad"),
+        (Algorithm::AdaAlter, SyncPeriod::Every(1), "AdaAlter"),
+        (Algorithm::LocalAdaAlter, SyncPeriod::Every(4), "Local AdaAlter, H=4"),
+        (Algorithm::LocalAdaAlter, SyncPeriod::Every(8), "Local AdaAlter, H=8"),
+        (Algorithm::LocalAdaAlter, SyncPeriod::Every(16), "Local AdaAlter, H=16"),
+    ];
+
+    std::fs::create_dir_all("results")?;
+    let mut csv = CsvWriter::create(
+        "results/fig3_convergence.csv",
+        &["algorithm", "step", "epoch", "virtual_hours", "eval_loss", "test_ppl"],
+    )?;
+
+    println!("Fig 3 — test PPL vs time/epochs ({preset} preset, {workers} workers, {steps} steps)");
+    for (algo, h, label) in &variants {
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.preset = preset.clone();
+        cfg.train.backend = Backend::Pjrt;
+        cfg.train.workers = workers;
+        cfg.train.steps = steps;
+        cfg.train.steps_per_epoch = (steps / 4).max(1);
+        cfg.train.sync_period = *h;
+        cfg.train.eval_every = (steps / 8).max(1);
+        cfg.train.log_every = steps; // quiet
+        cfg.optim.algorithm = *algo;
+        cfg.optim.warmup_steps = steps / 5;
+        cfg.data.eval_batches = 3;
+
+        let factory = make_factory(&cfg)?;
+        let r = Trainer::new(cfg, factory).run()?;
+        let last = r.recorder.evals.last().unwrap();
+        println!(
+            "  {label:<24} final PPL {:>8.3}  virtual {:>7.2} h",
+            last.ppl.unwrap(),
+            last.virtual_s / 3600.0
+        );
+        for e in &r.recorder.evals {
+            csv.row(&[
+                label.to_string(),
+                e.step.to_string(),
+                format!("{:.3}", e.epoch),
+                format!("{:.5}", e.virtual_s / 3600.0),
+                format!("{:.5}", e.loss),
+                format!("{:.4}", e.ppl.unwrap_or(f64::NAN)),
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("wrote results/fig3_convergence.csv");
+    Ok(())
+}

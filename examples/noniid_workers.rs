@@ -1,0 +1,63 @@
+//! Non-IID robustness study (extension beyond the paper's figures): how the
+//! data-heterogeneity knob affects Local AdaAlter at different H.
+//!
+//! The paper's theory (Thm 2) covers non-IID workers but the evaluation
+//! uses a shared corpus; this example measures the interaction the theory
+//! predicts: more heterogeneity ⇒ local replicas drift faster ⇒ larger H
+//! pays a bigger accuracy price.
+//!
+//! ```bash
+//! cargo run --release --example noniid_workers
+//! ```
+
+use std::sync::Arc;
+
+use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::{BackendFactory, Trainer};
+use adaalter::sim::SyntheticProblem;
+use adaalter::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let dim = 2048;
+    let workers = 8;
+    let steps = 1200;
+
+    std::fs::create_dir_all("results")?;
+    let mut csv = CsvWriter::create(
+        "results/noniid_sweep.csv",
+        &["skew", "H", "final_suboptimality"],
+    )?;
+
+    println!("non-IID skew × H — final suboptimality (synthetic, 8 workers, {steps} steps)");
+    println!("{:>6} {:>6} {:>16}", "skew", "H", "suboptimality");
+    for &skew in &[0.0f32, 0.5, 1.0, 2.0] {
+        for &h in &[1u64, 4, 16, 64] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.train.workers = workers;
+            cfg.train.steps = steps;
+            cfg.train.sync_period = SyncPeriod::Every(h);
+            cfg.train.backend = Backend::RustMath;
+            cfg.train.rust_math_dim = dim;
+            cfg.train.log_every = steps;
+            cfg.optim.algorithm = Algorithm::LocalAdaAlter;
+            cfg.optim.warmup_steps = 50;
+
+            let mut problem = SyntheticProblem::new(dim, workers, cfg.train.seed);
+            problem.skew = skew;
+            let opt_loss = problem.global_loss(&problem.optimum());
+            let p = problem.clone();
+            let factory: BackendFactory =
+                Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>));
+
+            let r = Trainer::new(cfg, factory).run()?;
+            let subopt = r.final_eval.unwrap().loss - opt_loss;
+            println!("{skew:>6.1} {h:>6} {subopt:>16.6}");
+            csv.row(&[skew.to_string(), h.to_string(), format!("{subopt:.6}")])?;
+        }
+    }
+    csv.flush()?;
+    println!("wrote results/noniid_sweep.csv");
+    println!("\nreading: suboptimality should grow with H, and faster at high skew —");
+    println!("the Thm 2 noise term 4η²L²H² scales with the replica-drift magnitude.");
+    Ok(())
+}

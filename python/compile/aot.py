@@ -1,0 +1,188 @@
+"""AOT compile path: lower every L2 graph to HLO TEXT + a JSON manifest.
+
+Run once by ``make artifacts``; the rust coordinator then only touches
+``artifacts/``.  Interchange is HLO *text*, not ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per preset we emit:
+  {p}_train_step          (flat, tokens)                          -> (loss, grad)
+  {p}_local_step_adaalter (flat, b2, acc, tokens, denom_add, lr)  -> (y, acc', loss)
+  {p}_local_step_sgd      (flat, tokens, lr)                      -> (y, loss)
+  {p}_eval_step           (flat, tokens)                          -> (sum_nll, count)
+  {p}_opt_adaalter        (x, b2, acc, g, gsq, denom_add, lr)     -> (y, acc')
+  {p}_opt_adagrad         (x, b2, g, gsq, eps2, lr)               -> (y, b2')
+  {p}_opt_sgd             (x, g, lr)                              -> (y,)
+  {p}_init.f32bin         initial parameters (little-endian f32 raw)
+plus ``manifest.json`` describing shapes/dtypes/offsets for the rust loader.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--presets tiny,small]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import optim
+from .presets import DEFAULT_PRESETS, PRESETS, Preset
+
+MANIFEST_VERSION = 2
+INIT_SEED = 20191121  # arXiv submission date of the paper; fixed for repro.
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sds(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(avals) -> List[dict]:
+    return [
+        {"shape": [int(s) for s in a.shape], "dtype": str(a.dtype)}
+        for a in avals
+    ]
+
+
+def lower_one(name: str, fn: Callable, in_avals: Sequence[jax.ShapeDtypeStruct],
+              out_dir: str) -> dict:
+    """Lower ``fn`` at the given avals, write ``{name}.hlo.txt``, return the
+    manifest entry (file, input/output shapes, HLO size)."""
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*in_avals)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_avals = jax.eval_shape(fn, *in_avals)
+    if not isinstance(out_avals, (tuple, list)):
+        out_avals = (out_avals,)
+    dt = time.time() - t0
+    print(f"  {fname:44s} {len(text)/1024:9.1f} KiB  ({dt:.1f}s)")
+    return {
+        "file": fname,
+        "inputs": _io_entry(in_avals),
+        "outputs": _io_entry(out_avals),
+    }
+
+
+def build_preset(preset: Preset, out_dir: str) -> dict:
+    """Lower all artifacts for one preset; return its manifest subtree."""
+    cfg = preset.model
+    d = model_lib.num_params(cfg)
+    B, S = preset.batch, cfg.seq
+    print(f"preset {preset.name}: d={d} ({d/1e6:.2f}M params), "
+          f"batch={B}, seq={S}, vocab={cfg.vocab}")
+
+    vec = _sds((d,))
+    sc = _sds((1,))
+    tokens = _sds((B, S + 1), jnp.int32)
+    eval_tokens = _sds((preset.eval_batch, S + 1), jnp.int32)
+
+    arts = {}
+    p = preset.name
+    arts["train_step"] = lower_one(
+        f"{p}_train_step",
+        lambda f, t: model_lib.loss_and_grad(cfg, f, t),
+        [vec, tokens], out_dir)
+    arts["local_step_adaalter"] = lower_one(
+        f"{p}_local_step_adaalter",
+        lambda f, b2, acc, t, da, lr: optim.fused_local_step(
+            cfg, f, b2, acc, t, da, lr),
+        [vec, vec, vec, tokens, sc, sc], out_dir)
+    arts["local_step_sgd"] = lower_one(
+        f"{p}_local_step_sgd",
+        lambda f, t, lr: optim.fused_local_sgd_step(cfg, f, t, lr),
+        [vec, tokens, sc], out_dir)
+    arts["eval_step"] = lower_one(
+        f"{p}_eval_step",
+        lambda f, t: model_lib.eval_nll(cfg, f, t),
+        [vec, eval_tokens], out_dir)
+    arts["opt_adaalter"] = lower_one(
+        f"{p}_opt_adaalter", optim.adaalter_step,
+        [vec, vec, vec, vec, vec, sc, sc], out_dir)
+    arts["opt_adagrad"] = lower_one(
+        f"{p}_opt_adagrad", optim.adagrad_step,
+        [vec, vec, vec, vec, sc, sc], out_dir)
+    arts["opt_sgd"] = lower_one(
+        f"{p}_opt_sgd", optim.sgd_step, [vec, vec, sc], out_dir)
+
+    # Initial parameters: raw little-endian f32, loaded with a single read.
+    init = model_lib.init_params(cfg, jax.random.PRNGKey(INIT_SEED))
+    init_file = f"{p}_init.f32bin"
+    np.asarray(init, dtype="<f4").tofile(os.path.join(out_dir, init_file))
+    print(f"  {init_file:44s} {d * 4 / 1024:9.1f} KiB")
+
+    return {
+        "config": dataclasses.asdict(cfg),
+        "d": d,
+        "batch": B,
+        "eval_batch": preset.eval_batch,
+        "seq": S,
+        "vocab": cfg.vocab,
+        "init_params": init_file,
+        "param_spec": [
+            {"name": n, "shape": list(s), "offset": o, "size": math.prod(s)}
+            for n, s, o in model_lib.param_offsets(cfg)
+        ],
+        "artifacts": arts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default=",".join(DEFAULT_PRESETS),
+                    help="comma-separated preset names "
+                         f"(available: {', '.join(PRESETS)})")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [n.strip() for n in args.presets.split(",") if n.strip()]
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "init_seed": INIT_SEED,
+        "presets": {},
+    }
+    t0 = time.time()
+    for name in names:
+        if name not in PRESETS:
+            raise SystemExit(f"unknown preset {name!r}; "
+                             f"available: {', '.join(PRESETS)}")
+        manifest["presets"][name] = build_preset(PRESETS[name], args.out_dir)
+
+    # Merge with a pre-existing manifest so `--presets base100m` extends
+    # rather than clobbers the default artifact set.
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        if old.get("version") == MANIFEST_VERSION:
+            merged = dict(old.get("presets", {}))
+            merged.update(manifest["presets"])
+            manifest["presets"] = merged
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({time.time() - t0:.1f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts).
+
+Modules:
+  common   — 1-D VPU tiling helpers shared by all element-wise kernels
+  adaalter — fused (local) AdaAlter update, the paper's contribution
+  adagrad  — fused AdaGrad baseline (Algorithm 1)
+  sgd      — plain / momentum SGD baselines (Algorithm 2)
+  average  — n-way synchronisation average (Algorithm 4 lines 11-12)
+  ref      — pure-jnp oracles each kernel is pinned against
+"""
+from . import adaalter, adagrad, average, common, ref, sgd  # noqa: F401

@@ -1,0 +1,44 @@
+"""Pallas kernel for distributed AdaGrad (Algorithm 1) — the paper's baseline.
+
+AdaGrad accumulates FIRST, then updates with the fresh denominator:
+
+    b2' = b2 + gsq
+    y   = x - lr * g * rsqrt(b2' + eps^2)
+
+(contrast with AdaAlter, which updates with the *stale* denominator — the
+one-line swap that makes lazy local updates possible).  Same flat-vector
+tiling as ``adaalter.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import as_scalar_arr, auto_tile, elementwise_call, pad1
+
+
+def _adagrad_kernel(x_ref, b2_ref, g_ref, gsq_ref, eps2_ref, lr_ref,
+                    y_ref, b2_out_ref):
+    """Fused AdaGrad tile body: accumulate-then-update."""
+    b2_new = b2_ref[...] + gsq_ref[...]
+    inv = lax.rsqrt(b2_new + eps2_ref[0])
+    y_ref[...] = x_ref[...] - lr_ref[0] * g_ref[...] * inv
+    b2_out_ref[...] = b2_new
+
+
+def adagrad_step(x, b2, g, gsq, eps2, lr, *, tile: int = 0):
+    """Apply one distributed-AdaGrad step over flat f32[d] state.
+
+    In the distributed setting (Alg. 1) the caller passes the *averaged*
+    gradient for both ``g`` and ``gsq = g o g`` (line 6 accumulates the
+    square of the averaged gradient).  Returns (y, b2_out).
+    """
+    d = x.shape[0]
+    tile = tile or auto_tile(d)
+    call = elementwise_call(_adagrad_kernel, n_out=2, d=d, tile=tile,
+                            n_vec_in=4, n_scalar_in=2)
+    y, b2_out = call(pad1(x, tile), pad1(b2, tile), pad1(g, tile),
+                     pad1(gsq, tile), as_scalar_arr(eps2), as_scalar_arr(lr))
+    return y[:d], b2_out[:d]

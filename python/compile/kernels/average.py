@@ -1,0 +1,73 @@
+"""Pallas kernel for the n-way synchronisation average (Alg. 4 lines 11-12).
+
+Every sync round averages the n workers' parameters y_{k,t} and accumulators
+A^2_{k,t}.  The kernel reduces a stacked f32[n, d] across axis 0, tiled along
+d: each grid instance loads an (n, TILE) panel into VMEM and emits its column
+mean.  For the small n of the paper (<= 8) the panel is tiny (8 * 32 KiB).
+
+The rust coordinator normally performs this average itself (it is a
+contiguous SIMD loop and avoids a device round-trip) — this kernel exists so
+the whole sync step can also execute on-device, and serves as the oracle
+cross-check for the rust implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, TILE, padded_size
+
+
+def _average_kernel(stack_ref, mean_ref):
+    # Mean over the worker axis; multiply by 1/n once instead of dividing.
+    n = stack_ref.shape[0]
+    s = jnp.sum(stack_ref[...], axis=0)
+    mean_ref[...] = s * (1.0 / n)
+
+
+def average(stacked, *, tile: int = TILE):
+    """Mean over axis 0 of f32[n, d] -> f32[d]."""
+    n, d = stacked.shape
+    p = padded_size(d, tile)
+    if p != d:
+        stacked = jnp.pad(stacked, ((0, 0), (0, p - d)))
+    out = pl.pallas_call(
+        _average_kernel,
+        grid=(p // tile,),
+        in_specs=[pl.BlockSpec((n, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=INTERPRET,
+    )(stacked)
+    return out[:d]
+
+
+def weighted_average(stacked, weights, *, tile: int = TILE):
+    """Convex combination over axis 0: sum_k w_k * stacked[k].
+
+    Used by the elastic-averaging ablation (DESIGN.md) and for straggler-
+    weighted sync experiments; ``weights`` is f32[n] and should sum to 1.
+    """
+    n, d = stacked.shape
+    p = padded_size(d, tile)
+    if p != d:
+        stacked = jnp.pad(stacked, ((0, 0), (0, p - d)))
+    w = jnp.asarray(weights, jnp.float32).reshape(n, 1)
+
+    def kernel(stack_ref, w_ref, out_ref):
+        out_ref[...] = jnp.sum(stack_ref[...] * w_ref[...], axis=0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(p // tile,),
+        in_specs=[
+            pl.BlockSpec((n, tile), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=INTERPRET,
+    )(stacked, w)
+    return out[:d]

@@ -1,0 +1,110 @@
+"""Shared tiling helpers for the 1-D element-wise optimizer kernels.
+
+All optimizer state in this project is a FLAT f32[d] vector (see DESIGN.md
+"Why a flat parameter vector").  Every Pallas kernel here therefore runs on a
+1-D grid: each program instance streams one `TILE`-element block HBM->VMEM,
+performs the fused coordinate-wise update, and streams the result back.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the natural VPU tile is a
+multiple of 8*128 = 1024 lanes; we default to 8192 (= 8 sublane rows of 8
+vregs) which keeps the VMEM footprint of the busiest kernel
+(5 input tiles + 2 output tiles = 7 * 32 KiB = 224 KiB) far below the
+~16 MiB VMEM budget, leaving headroom for double buffering.
+
+On CPU we execute with ``interpret=True`` — Pallas lowers to plain HLO ops so
+the rust PJRT CPU client can run the artifact (real TPU lowering emits a
+Mosaic custom-call the CPU plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Base element-wise tile: multiple of the 8x128 VPU tile (f32).
+TILE = 8192
+
+# Upper bound keeping the busiest kernel's VMEM footprint (7 streams x 4 B x
+# tile) within ~14 MiB of the ~16 MiB TPU budget.
+MAX_TILE = 512 * 1024
+
+# Always interpret on this image: CPU-only PJRT.  Kept as a module constant so
+# a TPU build can flip it in one place.
+INTERPRET = True
+
+
+def auto_tile(d: int, base: int = TILE, cap: int = MAX_TILE) -> int:
+    """Pick the element-wise tile for dimension ``d``.
+
+    Perf note (EXPERIMENTS.md §Perf, L1): each grid point of an
+    interpret-mode pallas_call lowers to a dynamic-slice / dynamic-update-
+    slice round trip, which on CPU-PJRT costs far more than the tile's
+    arithmetic — a d=117k update ran 3.8x slower with tile=8192 (15 grid
+    points) than with one whole-vector tile. So: cover ``d`` with the
+    fewest tiles allowed by the VMEM cap, keeping the 8192-lane alignment
+    the VPU wants. Real-TPU builds would instead keep small tiles and rely
+    on Mosaic's pipelined grid (see DESIGN.md §Hardware-Adaptation).
+    """
+    needed = padded_size(d, base)
+    return min(needed, cap)
+
+
+def padded_size(d: int, tile: int = TILE) -> int:
+    """Smallest multiple of ``tile`` >= ``d`` (and >= ``tile``)."""
+    if d <= 0:
+        raise ValueError(f"parameter dimension must be positive, got {d}")
+    return ((d + tile - 1) // tile) * tile
+
+
+def pad1(x: jax.Array, tile: int = TILE) -> jax.Array:
+    """Zero-pad a 1-D array up to a tile multiple."""
+    d = x.shape[0]
+    p = padded_size(d, tile)
+    if p == d:
+        return x
+    return jnp.pad(x, (0, p - d))
+
+
+def vec_spec(tile: int) -> pl.BlockSpec:
+    """BlockSpec for a tiled 1-D vector operand: block i -> elements [i*tile, (i+1)*tile)."""
+    return pl.BlockSpec((tile,), lambda i: (i,))
+
+
+def scalar_spec() -> pl.BlockSpec:
+    """BlockSpec for a (1,)-shaped runtime scalar broadcast to every grid point.
+
+    Runtime scalars (learning rate, the t'*eps^2 placeholder) are passed as
+    f32[1] inputs so one compiled executable serves every step of training.
+    """
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def elementwise_call(kernel, n_out: int, d: int, tile: int, n_vec_in: int,
+                     n_scalar_in: int, dtype=jnp.float32):
+    """Build a pallas_call for an element-wise kernel over f32[d_padded].
+
+    ``kernel`` receives ``n_vec_in`` vector refs, then ``n_scalar_in`` scalar
+    refs, then ``n_out`` output refs (pallas convention: inputs then outputs).
+    """
+    p = padded_size(d, tile)
+    grid = (p // tile,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[vec_spec(tile)] * n_vec_in + [scalar_spec()] * n_scalar_in,
+        out_specs=[vec_spec(tile)] * n_out if n_out > 1 else vec_spec(tile),
+        out_shape=(
+            [jax.ShapeDtypeStruct((p,), dtype) for _ in range(n_out)]
+            if n_out > 1
+            else jax.ShapeDtypeStruct((p,), dtype)
+        ),
+        interpret=INTERPRET,
+    )
+
+
+def as_scalar_arr(v) -> jax.Array:
+    """Lift a python/jnp scalar to the f32[1] runtime-scalar convention."""
+    return jnp.asarray(v, dtype=jnp.float32).reshape((1,))

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+Each function here is the textbook transcription of the corresponding line(s)
+of Algorithms 1, 3 and 4 of Xie et al. 2019 ("Local AdaAlter"), with no
+tiling, padding or fusion tricks.  ``python/tests/test_kernels.py`` sweeps the
+Pallas kernels against these with hypothesis-randomised shapes and values, and
+the rust unit tests in ``rust/src/optim/`` encode the same recurrences by
+hand, so all three implementations (Pallas, jnp, rust) are pinned to each
+other.
+
+Conventions (shared with the Pallas kernels and the rust coordinator):
+  * all state is flat f32[d];
+  * ``denom_add`` is the additive placeholder under the square root:
+    eps^2 for fully-synchronous AdaAlter (Alg. 3 line 6) and t' * eps^2 for
+    local AdaAlter (Alg. 4 line 6);
+  * ``gsq`` is whatever the algorithm says to fold into the accumulator:
+    mean_i(G_i o G_i) for Alg. 3 line 7, the local G o G for Alg. 4 line 7,
+    and G_avg o G_avg for AdaGrad (Alg. 1 line 6).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adaalter_step_ref(x, b2_base, acc, g, gsq, denom_add, lr):
+    """One AdaAlter update (Alg. 3 lines 6-7 / Alg. 4 lines 6-7).
+
+    y   = x - lr * g / sqrt(b2_base + denom_add)        (update FIRST ...)
+    acc = acc + gsq                                     (... accumulate AFTER)
+
+    ``b2_base`` is the denominator used for the *update* (last synchronised
+    B^2 in the local variant), ``acc`` the running accumulator A^2 — for the
+    fully synchronous variant the caller passes the same array for both.
+    Returns (y, acc_out).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    denom = jnp.sqrt(b2_base + denom_add)
+    y = x - lr * g / denom
+    acc_out = acc + gsq
+    return y, acc_out
+
+
+def adagrad_step_ref(x, b2, g, gsq, eps2, lr):
+    """One distributed-AdaGrad update (Alg. 1 lines 6-7).
+
+    AdaGrad accumulates FIRST, then updates with the fresh denominator:
+    b2_out = b2 + gsq ;  y = x - lr * g / sqrt(b2_out + eps^2).
+    Returns (y, b2_out).
+    """
+    b2_out = b2 + gsq
+    y = x - lr * g / jnp.sqrt(b2_out + eps2)
+    return y, b2_out
+
+
+def sgd_step_ref(x, g, lr):
+    """Vanilla (local) SGD step, Alg. 2 line 5:  y = x - lr * g."""
+    return x - lr * g
+
+
+def momentum_step_ref(x, m, g, lr, mu):
+    """Heavy-ball SGD:  m_out = mu*m + g ;  y = x - lr*m_out."""
+    m_out = mu * m + g
+    return x - lr * m_out, m_out
+
+
+def average_ref(stacked):
+    """n-way synchronisation average (Alg. 4 lines 11-12): mean over axis 0."""
+    return jnp.mean(jnp.asarray(stacked, jnp.float32), axis=0)
+
+
+def local_adaalter_round_ref(x, b2_sync, grads, eps2, lr):
+    """A full H-step local round on ONE worker (Alg. 4, no communication).
+
+    ``grads``: [H, d] — the H local stochastic gradients.
+    Returns (x_H, a2_H): the parameters and accumulator right before the
+    synchronisation step.  Used to cross-check the rust worker loop.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    a2 = jnp.asarray(b2_sync, jnp.float32)
+    H = grads.shape[0]
+    for s in range(H):
+        t_prime = s + 1  # t' = mod(t-1, H) + 1 walks 1..H within a round
+        x, a2 = adaalter_step_ref(
+            x, b2_sync, a2, grads[s], grads[s] * grads[s],
+            t_prime * eps2, lr,
+        )
+    return x, a2

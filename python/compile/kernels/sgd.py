@@ -1,0 +1,44 @@
+"""Pallas kernels for the SGD baselines (Algorithm 2 of the paper).
+
+Plain and heavy-ball-momentum variants, over the same flat-vector tiling as
+the adaptive kernels.  Local SGD (Alg. 2) is plain SGD on each worker plus
+the coordinator's H-period parameter averaging — the averaging lives in the
+rust comm layer / ``average.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .common import as_scalar_arr, auto_tile, elementwise_call, pad1
+
+
+def _sgd_kernel(x_ref, g_ref, lr_ref, y_ref):
+    y_ref[...] = x_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def sgd_step(x, g, lr, *, tile: int = 0):
+    """y = x - lr * g over flat f32[d]."""
+    d = x.shape[0]
+    tile = tile or auto_tile(d)
+    call = elementwise_call(_sgd_kernel, n_out=1, d=d, tile=tile,
+                            n_vec_in=2, n_scalar_in=1)
+    y = call(pad1(x, tile), pad1(g, tile), as_scalar_arr(lr))
+    return y[:d]
+
+
+def _momentum_kernel(x_ref, m_ref, g_ref, lr_ref, mu_ref, y_ref, m_out_ref):
+    m_new = mu_ref[0] * m_ref[...] + g_ref[...]
+    y_ref[...] = x_ref[...] - lr_ref[0] * m_new
+    m_out_ref[...] = m_new
+
+
+def momentum_step(x, m, g, lr, mu, *, tile: int = 0):
+    """Heavy-ball: m' = mu*m + g; y = x - lr*m'.  Returns (y, m')."""
+    d = x.shape[0]
+    tile = tile or auto_tile(d)
+    call = elementwise_call(_momentum_kernel, n_out=2, d=d, tile=tile,
+                            n_vec_in=3, n_scalar_in=2)
+    y, m_out = call(pad1(x, tile), pad1(m, tile), pad1(g, tile),
+                    as_scalar_arr(lr), as_scalar_arr(mu))
+    return y[:d], m_out[:d]

@@ -1,0 +1,214 @@
+"""L2 — decoder-only transformer language model over a FLAT parameter vector.
+
+The paper trains LSTM-2048-512 ("Big LSTM") on the 1B Word Benchmark; the
+optimizer protocol under study is architecture-agnostic (it is coordinate-wise
+over the flat parameter vector), so we substitute a decoder-only transformer
+LM of configurable size (DESIGN.md §3).  Everything below is build-time JAX:
+``aot.py`` lowers these functions once to HLO text, and the rust coordinator
+executes the artifacts via PJRT — Python never runs on the training path.
+
+Flat-vector contract: every function takes ``flat: f32[d]`` and unflattens it
+inside the traced graph (XLA fuses the slices/reshapes away), so the rust
+side only ever handles contiguous f32 buffers for parameters, gradients and
+optimizer state — exactly the shape the paper's coordinate-wise algorithms
+want.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters of the transformer LM.
+
+    ``seq`` is the training context length; batches are i32[batch, seq+1]
+    token panels (inputs = [:, :-1], targets = [:, 1:]).
+    """
+
+    vocab: int = 256
+    dim: int = 64
+    layers: int = 2
+    heads: int = 2
+    seq: int = 32
+    mlp_mult: int = 4
+    tie_embeddings: bool = True
+
+    def __post_init__(self):
+        if self.dim % self.heads != 0:
+            raise ValueError(
+                f"dim {self.dim} not divisible by heads {self.heads}")
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec / flatten / unflatten
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat-vector layout.
+
+    The order is load-bearing: the rust manifest records (name, shape,
+    offset) so tools can slice individual tensors out of checkpoints.
+    """
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (cfg.vocab, cfg.dim)),
+        ("pos_emb", (cfg.seq, cfg.dim)),
+    ]
+    for l in range(cfg.layers):
+        m = cfg.mlp_mult * cfg.dim
+        spec += [
+            (f"l{l}.ln1", (cfg.dim,)),
+            (f"l{l}.wqkv", (cfg.dim, 3 * cfg.dim)),
+            (f"l{l}.wo", (cfg.dim, cfg.dim)),
+            (f"l{l}.ln2", (cfg.dim,)),
+            (f"l{l}.w1", (cfg.dim, m)),
+            (f"l{l}.w2", (m, cfg.dim)),
+        ]
+    spec.append(("lnf", (cfg.dim,)))
+    if not cfg.tie_embeddings:
+        spec.append(("head", (cfg.dim, cfg.vocab)))
+    return spec
+
+
+def num_params(cfg: ModelConfig) -> int:
+    """Total flat dimension d."""
+    return sum(math.prod(s) for _, s in spec_shapes(cfg))
+
+
+def spec_shapes(cfg: ModelConfig):
+    return param_spec(cfg)
+
+
+def param_offsets(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], int]]:
+    """(name, shape, offset) triples — serialised into the manifest."""
+    out, off = [], 0
+    for name, shape in param_spec(cfg):
+        out.append((name, shape, off))
+        off += math.prod(shape)
+    return out
+
+
+def unflatten(cfg: ModelConfig, flat: jax.Array) -> Dict[str, jax.Array]:
+    """Slice the flat vector into named tensors (inside the traced graph)."""
+    params: Dict[str, jax.Array] = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        n = math.prod(shape)
+        params[name] = jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+        off += n
+    return params
+
+
+def flatten(cfg: ModelConfig, params: Dict[str, jax.Array]) -> jax.Array:
+    """Inverse of :func:`unflatten` (used by tests and init)."""
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_spec(cfg)])
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> jax.Array:
+    """Standard transformer init, returned as the flat vector.
+
+    Embeddings/projections ~ N(0, 0.02); output projections of each block
+    scaled by 1/sqrt(2*layers) (GPT-2 style); norms = 1.
+    """
+    params: Dict[str, jax.Array] = {}
+    resid_scale = 0.02 / math.sqrt(2 * cfg.layers)
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".ln1", ".ln2")) or name == "lnf":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith((".wo", ".w2")):
+            params[name] = resid_scale * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return flatten(cfg, params)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def _attention(cfg: ModelConfig, p: Dict[str, jax.Array], l: int,
+               x: jax.Array) -> jax.Array:
+    """Causal multi-head self-attention for layer ``l``.  x: [B, S, D]."""
+    B, S, D = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+    qkv = x @ p[f"l{l}.wqkv"]                       # [B, S, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, h, hd).transpose(0, 2, 1, 3)  # [B, h, S, hd]
+    k = k.reshape(B, S, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, h, hd).transpose(0, 2, 1, 3)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)  # [B, h, S, S]
+    mask = jnp.tril(jnp.ones((S, S), jnp.bool_))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(B, S, D)
+    return out @ p[f"l{l}.wo"]
+
+
+def _block(cfg: ModelConfig, p: Dict[str, jax.Array], l: int,
+           x: jax.Array) -> jax.Array:
+    x = x + _attention(cfg, p, l, _rms_norm(x, p[f"l{l}.ln1"]))
+    hmid = _rms_norm(x, p[f"l{l}.ln2"]) @ p[f"l{l}.w1"]
+    x = x + jax.nn.gelu(hmid) @ p[f"l{l}.w2"]
+    return x
+
+
+def forward(cfg: ModelConfig, flat: jax.Array, inputs: jax.Array) -> jax.Array:
+    """Logits for token inputs i32[B, S] -> f32[B, S, V]."""
+    p = unflatten(cfg, flat)
+    x = p["tok_emb"][inputs] + p["pos_emb"][None, : inputs.shape[1], :]
+    for l in range(cfg.layers):
+        x = _block(cfg, p, l, x)
+    x = _rms_norm(x, p["lnf"])
+    head = p["tok_emb"].T if cfg.tie_embeddings else p["head"]
+    return x @ head
+
+
+# ---------------------------------------------------------------------------
+# Loss / grad / eval — the functions aot.py lowers
+# ---------------------------------------------------------------------------
+
+def _token_nll(cfg: ModelConfig, flat: jax.Array,
+               tokens: jax.Array) -> jax.Array:
+    """Per-token negative log-likelihood, f32[B, S]."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat, inputs)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1)[..., 0]
+    return logz - tgt_logit
+
+
+def loss_fn(cfg: ModelConfig, flat: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Mean cross-entropy over the B*S predicted tokens (scalar f32)."""
+    return jnp.mean(_token_nll(cfg, flat, tokens))
+
+
+def loss_and_grad(cfg: ModelConfig, flat: jax.Array,
+                  tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(loss, grad[d]) — the ``train_step`` artifact body."""
+    return jax.value_and_grad(lambda f: loss_fn(cfg, f, tokens))(flat)
+
+
+def eval_nll(cfg: ModelConfig, flat: jax.Array,
+             tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(sum_nll, token_count) — rust accumulates these across eval batches
+    and reports PPL = exp(sum_nll / count), the paper's §6.2 metric."""
+    nll = _token_nll(cfg, flat, tokens)
+    return jnp.sum(nll), jnp.asarray(nll.size, jnp.float32)

@@ -1,0 +1,70 @@
+"""L2 — optimizer-step compute graphs, built on the L1 Pallas kernels.
+
+These are the jax functions ``aot.py`` lowers into the per-preset optimizer
+artifacts the rust coordinator calls on its hot path.  Each wraps a kernel
+from ``compile.kernels`` so the Pallas body lowers into the same HLO module
+(interpret=True -> plain HLO ops the CPU PJRT client can run).
+
+``fused_local_step`` is the perf-pass artifact (EXPERIMENTS.md §Perf): during
+the H-1 communication-free local iterations of Algorithm 4, the fwd/bwd and
+the AdaAlter update need no rust-side interleaving, so we fuse them into a
+single executable — one PJRT dispatch per local step instead of two, and the
+gradient never leaves the device buffer.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_lib
+from .kernels import adaalter as k_adaalter
+from .kernels import adagrad as k_adagrad
+from .kernels import sgd as k_sgd
+
+
+def adaalter_step(x, b2_base, acc, g, gsq, denom_add, lr):
+    """(Local) AdaAlter update — Alg. 3/4 lines 6-7.  Scalars are f32[1]."""
+    return k_adaalter.adaalter_step(
+        x, b2_base, acc, g, gsq, denom_add[0], lr[0])
+
+
+def adagrad_step(x, b2, g, gsq, eps2, lr):
+    """Distributed AdaGrad update — Alg. 1 lines 6-7."""
+    return k_adagrad.adagrad_step(x, b2, g, gsq, eps2[0], lr[0])
+
+
+def sgd_step(x, g, lr):
+    """Local SGD update — Alg. 2 line 5."""
+    return k_sgd.sgd_step(x, g, lr[0])
+
+
+def momentum_step(x, m, g, lr, mu):
+    """Heavy-ball baseline."""
+    return k_sgd.momentum_step(x, m, g, lr[0], mu[0])
+
+
+def fused_local_step(cfg: model_lib.ModelConfig, flat, b2_sync, acc, tokens,
+                     denom_add, lr) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One full communication-free local iteration of Algorithm 4.
+
+    fwd/bwd on ``tokens`` then the AdaAlter local update, in one graph:
+
+        G      = grad F(x; tokens)
+        y      = x - lr * G / sqrt(b2_sync + denom_add)   # denom_add = t'*eps^2
+        acc'   = acc + G o G
+
+    Returns (y, acc', loss).
+    """
+    loss, g = model_lib.loss_and_grad(cfg, flat, tokens)
+    y, acc_out = k_adaalter.adaalter_step(
+        flat, b2_sync, acc, g, g * g, denom_add[0], lr[0])
+    return y, acc_out, loss
+
+
+def fused_local_sgd_step(cfg: model_lib.ModelConfig, flat, tokens, lr):
+    """One communication-free local iteration of vanilla local SGD (Alg. 2)."""
+    loss, g = model_lib.loss_and_grad(cfg, flat, tokens)
+    return k_sgd.sgd_step(flat, g, lr[0]), loss

@@ -1,0 +1,53 @@
+"""Model/workload presets shared by aot.py, the tests and the rust manifest.
+
+The paper's workload is LSTM-2048-512 (~1B params) on the 1B Word Benchmark;
+single-CPU-core reproduction scales the model down but keeps every protocol
+constant (eps=1, b0=1, eta=0.5, warm-up 600, H in {4,8,12,16}) — DESIGN.md §3.
+
+  tiny      — unit/integration tests and the convergence benches: steps are
+              a few ms so 5-seed sweeps finish in minutes.
+  small     — the end-to-end example (examples/train_lm.rs): ~0.9M params,
+              a few hundred steps on a synthetic corpus.
+  base100m  — paper-scale-shaped config (~110M params).  Lowering and
+              loading it is exercised; *training* it for hundreds of steps
+              is not practical on one CPU core (documented in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from .model import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    name: str
+    model: ModelConfig
+    batch: int          # per-worker batch size
+    eval_batch: int
+
+
+PRESETS: Dict[str, Preset] = {
+    "tiny": Preset(
+        name="tiny",
+        model=ModelConfig(vocab=256, dim=64, layers=2, heads=2, seq=32),
+        batch=4,
+        eval_batch=8,
+    ),
+    "small": Preset(
+        name="small",
+        model=ModelConfig(vocab=2048, dim=128, layers=3, heads=4, seq=64),
+        batch=4,
+        eval_batch=8,
+    ),
+    "base100m": Preset(
+        name="base100m",
+        model=ModelConfig(vocab=32000, dim=768, layers=12, heads=12, seq=128),
+        batch=1,
+        eval_batch=1,
+    ),
+}
+
+DEFAULT_PRESETS = ("tiny", "small")

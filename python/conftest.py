@@ -1,0 +1,7 @@
+"""Make the build-time `compile` package importable when pytest runs from
+either the repo root or python/."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

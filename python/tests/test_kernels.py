@@ -1,0 +1,179 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle in ref.py.
+
+hypothesis sweeps dimensions (including non-tile-multiples and d < tile),
+tile sizes, and value magnitudes; assert_allclose with tolerances that admit
+rsqrt-vs-sqrt/div rounding but nothing larger.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adaalter, adagrad, average, common, ref, sgd
+
+TOL = dict(rtol=1e-4, atol=1e-6)
+
+dims = st.sampled_from([1, 7, 255, 256, 257, 1000, 8192, 10000])
+tiles = st.sampled_from([256, 1024, 8192])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+scalars = st.floats(min_value=1e-3, max_value=10.0,
+                    allow_nan=False, allow_infinity=False)
+
+
+def _vecs(seed, d, n, scale=1.0, positive=False):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        v = rng.normal(size=d, scale=scale).astype(np.float32)
+        if positive:
+            v = np.abs(v) + 1.0
+        out.append(v)
+    return out
+
+
+class TestAdaAlterKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=seeds, d=dims, tile=tiles, lr=scalars, denom_add=scalars)
+    def test_matches_ref(self, seed, d, tile, lr, denom_add):
+        x, g = _vecs(seed, d, 2)
+        (b2,) = _vecs(seed + 1, d, 1, positive=True)
+        (acc,) = _vecs(seed + 2, d, 1, positive=True)
+        gsq = g * g
+        y, a = adaalter.adaalter_step(x, b2, acc, g, gsq, denom_add, lr,
+                                      tile=tile)
+        yr, ar = ref.adaalter_step_ref(x, b2, acc, g, gsq, denom_add, lr)
+        np.testing.assert_allclose(y, yr, **TOL)
+        np.testing.assert_allclose(a, ar, **TOL)
+
+    def test_update_uses_stale_denominator(self):
+        """The defining AdaAlter property: y must NOT depend on gsq."""
+        d = 512
+        x, g = _vecs(0, d, 2)
+        (b2,) = _vecs(1, d, 1, positive=True)
+        y1, _ = adaalter.adaalter_step(x, b2, b2, g, g * g, 1.0, 0.5)
+        y2, _ = adaalter.adaalter_step(x, b2, b2, g, 100.0 * g * g, 1.0, 0.5)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    def test_accumulator_independent_of_update_inputs(self):
+        """acc' = acc + gsq regardless of lr/denom_add."""
+        d = 300
+        x, g = _vecs(2, d, 2)
+        (b2,) = _vecs(3, d, 1, positive=True)
+        _, a1 = adaalter.adaalter_step(x, b2, b2, g, g * g, 1.0, 0.5)
+        _, a2 = adaalter.adaalter_step(x, b2, b2, g, g * g, 9.0, 0.01)
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=seeds, H=st.integers(min_value=1, max_value=6))
+    def test_local_round_matches_ref(self, seed, H):
+        d = 257
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=d).astype(np.float32)
+        b2 = (1.0 + rng.random(d)).astype(np.float32)
+        grads = rng.normal(size=(H, d)).astype(np.float32)
+        xe, ae = ref.local_adaalter_round_ref(x, b2, grads, 1.0, 0.5)
+        xx, aa = x, b2
+        for s in range(H):
+            xx, aa = adaalter.local_adaalter_step(
+                xx, b2, aa, grads[s], s + 1, 1.0, 0.5, tile=256)
+        np.testing.assert_allclose(xx, xe, **TOL)
+        np.testing.assert_allclose(aa, ae, **TOL)
+
+    def test_zero_grad_is_identity_update(self):
+        d = 100
+        (x,) = _vecs(4, d, 1)
+        (b2,) = _vecs(5, d, 1, positive=True)
+        y, a = adaalter.adaalter_step(x, b2, b2, np.zeros(d, np.float32),
+                                      np.zeros(d, np.float32), 1.0, 0.5)
+        np.testing.assert_allclose(y, x, **TOL)
+        np.testing.assert_allclose(a, b2, **TOL)
+
+
+class TestAdaGradKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=seeds, d=dims, tile=tiles, lr=scalars, eps2=scalars)
+    def test_matches_ref(self, seed, d, tile, lr, eps2):
+        x, g = _vecs(seed, d, 2)
+        (b2,) = _vecs(seed + 1, d, 1, positive=True)
+        gsq = g * g
+        y, b = adagrad.adagrad_step(x, b2, g, gsq, eps2, lr, tile=tile)
+        yr, br = ref.adagrad_step_ref(x, b2, g, gsq, eps2, lr)
+        np.testing.assert_allclose(y, yr, **TOL)
+        np.testing.assert_allclose(b, br, **TOL)
+
+    def test_order_differs_from_adaalter(self):
+        """AdaGrad accumulates first; with a large gsq the two orders must
+        visibly diverge — this is the paper's §4.2 distinction."""
+        d = 64
+        x, g = _vecs(6, d, 2)
+        b2 = np.ones(d, np.float32)
+        gsq = 50.0 * np.ones(d, np.float32)
+        y_ag, _ = adagrad.adagrad_step(x, b2, g, gsq, 1.0, 0.5)
+        y_aa, _ = adaalter.adaalter_step(x, b2, b2, g, gsq, 1.0, 0.5)
+        assert np.max(np.abs(np.asarray(y_ag) - np.asarray(y_aa))) > 1e-3
+
+
+class TestSgdKernels:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=seeds, d=dims, tile=tiles, lr=scalars)
+    def test_sgd_matches_ref(self, seed, d, tile, lr):
+        x, g = _vecs(seed, d, 2)
+        y = sgd.sgd_step(x, g, lr, tile=tile)
+        np.testing.assert_allclose(y, ref.sgd_step_ref(x, g, lr), **TOL)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=seeds, d=dims, lr=scalars,
+           mu=st.floats(min_value=0.0, max_value=0.99))
+    def test_momentum_matches_ref(self, seed, d, lr, mu):
+        x, m, g = _vecs(seed, d, 3)
+        y, mo = sgd.momentum_step(x, m, g, lr, mu)
+        yr, mr = ref.momentum_step_ref(x, m, g, lr, mu)
+        np.testing.assert_allclose(y, yr, **TOL)
+        np.testing.assert_allclose(mo, mr, **TOL)
+
+
+class TestAverageKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=seeds, d=dims, n=st.integers(min_value=1, max_value=8),
+           tile=tiles)
+    def test_matches_ref(self, seed, d, n, tile):
+        rng = np.random.default_rng(seed)
+        stacked = rng.normal(size=(n, d)).astype(np.float32)
+        np.testing.assert_allclose(
+            average.average(stacked, tile=tile), ref.average_ref(stacked),
+            rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=seeds, n=st.integers(min_value=2, max_value=6))
+    def test_weighted_uniform_equals_mean(self, seed, n):
+        rng = np.random.default_rng(seed)
+        stacked = rng.normal(size=(n, 777)).astype(np.float32)
+        w = np.full(n, 1.0 / n, np.float32)
+        np.testing.assert_allclose(
+            average.weighted_average(stacked, w, tile=256),
+            ref.average_ref(stacked), rtol=1e-4, atol=1e-5)
+
+    def test_identical_replicas_fixed_point(self):
+        v = np.random.default_rng(7).normal(size=1000).astype(np.float32)
+        stacked = np.stack([v] * 4)
+        np.testing.assert_allclose(average.average(stacked), v, rtol=1e-6)
+
+
+class TestCommon:
+    @settings(max_examples=30, deadline=None)
+    @given(d=st.integers(min_value=1, max_value=10**6),
+           tile=st.sampled_from([256, 1024, 8192]))
+    def test_padded_size(self, d, tile):
+        p = common.padded_size(d, tile)
+        assert p >= d and p % tile == 0 and p - d < tile
+
+    def test_padded_size_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            common.padded_size(0)
+
+    def test_pad1_roundtrip(self):
+        v = np.arange(300, dtype=np.float32)
+        padded = common.pad1(v, 256)
+        assert padded.shape == (512,)
+        np.testing.assert_array_equal(np.asarray(padded[:300]), v)
+        assert float(np.sum(np.asarray(padded[300:]))) == 0.0

@@ -1,0 +1,155 @@
+"""L2 correctness: transformer LM shapes, flat-vector contract, causality,
+gradient sanity, eval/PPL consistency."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.presets import PRESETS
+
+CFG = PRESETS["tiny"].model
+
+
+def _tokens(rng, cfg, batch):
+    return jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(batch, cfg.seq + 1)), jnp.int32)
+
+
+class TestParamSpec:
+    def test_offsets_are_contiguous(self):
+        off = 0
+        for name, shape, o in M.param_offsets(CFG):
+            assert o == off, name
+            off += math.prod(shape)
+        assert off == M.num_params(CFG)
+
+    def test_flatten_unflatten_roundtrip(self):
+        d = M.num_params(CFG)
+        flat = jnp.arange(d, dtype=jnp.float32)
+        back = M.flatten(CFG, M.unflatten(CFG, flat))
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))
+
+    def test_tied_embeddings_have_no_head(self):
+        names = [n for n, _ in M.param_spec(CFG)]
+        assert "head" not in names
+        cfg2 = M.ModelConfig(vocab=64, dim=16, layers=1, heads=2, seq=8,
+                             tie_embeddings=False)
+        assert "head" in [n for n, _ in M.param_spec(cfg2)]
+
+    def test_dim_heads_validation(self):
+        with pytest.raises(ValueError):
+            M.ModelConfig(vocab=16, dim=10, heads=3, layers=1, seq=4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(dim=st.sampled_from([16, 32, 64]),
+           layers=st.integers(min_value=1, max_value=3),
+           vocab=st.sampled_from([32, 100, 256]))
+    def test_num_params_formula(self, dim, layers, vocab):
+        cfg = M.ModelConfig(vocab=vocab, dim=dim, layers=layers, heads=2,
+                            seq=16)
+        expected = vocab * dim + 16 * dim + layers * (
+            dim + dim * 3 * dim + dim * dim + dim
+            + dim * 4 * dim + 4 * dim * dim) + dim
+        assert M.num_params(cfg) == expected
+
+
+class TestForward:
+    def test_logits_shape(self):
+        rng = np.random.default_rng(0)
+        flat = M.init_params(CFG, jax.random.PRNGKey(0))
+        toks = _tokens(rng, CFG, 3)
+        logits = M.forward(CFG, flat, toks[:, :-1])
+        assert logits.shape == (3, CFG.seq, CFG.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_causality(self):
+        """Changing a future token must not change past logits."""
+        rng = np.random.default_rng(1)
+        flat = M.init_params(CFG, jax.random.PRNGKey(0))
+        toks = np.asarray(_tokens(rng, CFG, 1))[:, :-1]
+        cut = CFG.seq // 2
+        toks2 = toks.copy()
+        toks2[:, cut:] = (toks2[:, cut:] + 1) % CFG.vocab
+        l1 = M.forward(CFG, flat, jnp.asarray(toks))
+        l2 = M.forward(CFG, flat, jnp.asarray(toks2))
+        np.testing.assert_allclose(np.asarray(l1[:, :cut]),
+                                   np.asarray(l2[:, :cut]),
+                                   rtol=1e-5, atol=1e-6)
+        assert np.max(np.abs(np.asarray(l1[:, cut:]) -
+                             np.asarray(l2[:, cut:]))) > 1e-4
+
+    def test_init_deterministic(self):
+        a = M.init_params(CFG, jax.random.PRNGKey(42))
+        b = M.init_params(CFG, jax.random.PRNGKey(42))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        c = M.init_params(CFG, jax.random.PRNGKey(43))
+        assert np.max(np.abs(np.asarray(a) - np.asarray(c))) > 0
+
+
+class TestLossGrad:
+    def test_initial_loss_near_uniform(self):
+        """With 0.02-scale init the LM is ~uniform: loss ≈ ln(V)."""
+        rng = np.random.default_rng(2)
+        flat = M.init_params(CFG, jax.random.PRNGKey(0))
+        loss = M.loss_fn(CFG, flat, _tokens(rng, CFG, 4))
+        assert abs(float(loss) - math.log(CFG.vocab)) < 0.3
+
+    def test_grad_shape_and_finite(self):
+        rng = np.random.default_rng(3)
+        flat = M.init_params(CFG, jax.random.PRNGKey(0))
+        loss, g = M.loss_and_grad(CFG, flat, _tokens(rng, CFG, 2))
+        assert g.shape == (M.num_params(CFG),)
+        assert bool(jnp.all(jnp.isfinite(g)))
+        assert float(jnp.max(jnp.abs(g))) > 0
+
+    def test_grad_matches_finite_difference(self):
+        """Directional finite-difference check on a few random directions."""
+        cfg = M.ModelConfig(vocab=32, dim=16, layers=1, heads=2, seq=8)
+        rng = np.random.default_rng(4)
+        flat = M.init_params(cfg, jax.random.PRNGKey(1))
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(2, cfg.seq + 1)), jnp.int32)
+        _, g = M.loss_and_grad(cfg, flat, toks)
+        f64 = np.asarray(flat, np.float64)
+        for seed in range(3):
+            v = np.random.default_rng(seed).normal(size=f64.size)
+            v /= np.linalg.norm(v)
+            h = 1e-3
+            lp = float(M.loss_fn(cfg, jnp.asarray(f64 + h * v, jnp.float32), toks))
+            lm = float(M.loss_fn(cfg, jnp.asarray(f64 - h * v, jnp.float32), toks))
+            fd = (lp - lm) / (2 * h)
+            an = float(np.dot(np.asarray(g, np.float64), v))
+            assert abs(fd - an) < 5e-3 * max(1.0, abs(an)), (fd, an)
+
+    def test_gradient_descends(self):
+        rng = np.random.default_rng(5)
+        flat = M.init_params(CFG, jax.random.PRNGKey(0))
+        toks = _tokens(rng, CFG, 4)
+        l0, g = M.loss_and_grad(CFG, flat, toks)
+        l1 = M.loss_fn(CFG, flat - 0.5 * g, toks)
+        assert float(l1) < float(l0)
+
+
+class TestEval:
+    def test_eval_consistent_with_loss(self):
+        rng = np.random.default_rng(6)
+        flat = M.init_params(CFG, jax.random.PRNGKey(0))
+        toks = _tokens(rng, CFG, 4)
+        sum_nll, count = M.eval_nll(CFG, flat, toks)
+        loss = M.loss_fn(CFG, flat, toks)
+        assert int(count) == 4 * CFG.seq
+        np.testing.assert_allclose(float(sum_nll) / float(count),
+                                   float(loss), rtol=1e-5)
+
+    def test_ppl_of_uniform_model_is_vocab(self):
+        """A zero-parameter (uniform) model has PPL == vocab size."""
+        rng = np.random.default_rng(7)
+        flat = jnp.zeros(M.num_params(CFG), jnp.float32)
+        sum_nll, count = M.eval_nll(CFG, flat, _tokens(rng, CFG, 2))
+        ppl = math.exp(float(sum_nll) / float(count))
+        assert abs(ppl - CFG.vocab) / CFG.vocab < 1e-3

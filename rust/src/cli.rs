@@ -1,0 +1,130 @@
+//! Minimal CLI argument parser (the offline image has no `clap`).
+//!
+//! Grammar: `adaalter <command> [--flag value]… [--switch]…`. Flags that
+//! take values are declared up front so `--set a=b --set c=d` can repeat
+//! and typos fail loudly.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// The subcommand (first non-flag token).
+    pub command: String,
+    /// Value flags (`--key value`), in order per key.
+    values: BTreeMap<String, Vec<String>>,
+    /// Boolean switches (`--quiet`).
+    switches: BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `value_flags` take an argument; `switch_flags`
+    /// do not; anything else errors.
+    pub fn parse(
+        argv: &[String],
+        value_flags: &[&str],
+        switch_flags: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // Support --key=value in one token.
+                if let Some((k, v)) = name.split_once('=') {
+                    if !value_flags.contains(&k) {
+                        return Err(Error::Config(format!("unknown flag --{k}")));
+                    }
+                    out.values.entry(k.to_string()).or_default().push(v.to_string());
+                } else if value_flags.contains(&name) {
+                    let v = it.next().ok_or_else(|| {
+                        Error::Config(format!("flag --{name} needs a value"))
+                    })?;
+                    out.values.entry(name.to_string()).or_default().push(v.clone());
+                } else if switch_flags.contains(&name) {
+                    out.switches.insert(name.to_string());
+                } else {
+                    return Err(Error::Config(format!("unknown flag --{name}")));
+                }
+            } else if out.command.is_empty() {
+                out.command = tok.clone();
+            } else {
+                return Err(Error::Config(format!("unexpected argument {tok:?}")));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Last value of a flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// All values of a repeatable flag.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.values.get(key).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Is a switch present?
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.contains(key)
+    }
+
+    /// Value with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = Args::parse(
+            &argv("train --experiment paper-default --set a=1 --set b=2 --quiet"),
+            &["experiment", "set"],
+            &["quiet"],
+        )
+        .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("experiment"), Some("paper-default"));
+        assert_eq!(a.get_all("set"), &["a=1".to_string(), "b=2".to_string()]);
+        assert!(a.has("quiet"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&argv("run --steps=50"), &["steps"], &[]).unwrap();
+        assert_eq!(a.get("steps"), Some("50"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse(&argv("x --bogus 1"), &["real"], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&argv("x --experiment"), &["experiment"], &[]).is_err());
+    }
+
+    #[test]
+    fn stray_positional_rejected() {
+        assert!(Args::parse(&argv("x y"), &[], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("t"), &["k"], &[]).unwrap();
+        assert_eq!(a.get_or("k", "fallback"), "fallback");
+        assert!(a.get_all("k").is_empty());
+    }
+}

@@ -1,0 +1,8 @@
+//! Communication substrate: cost model for the paper's parameter-server
+//! setting and ring all-reduce, plus traffic accounting.
+
+pub mod compress;
+pub mod netmodel;
+
+pub use compress::{QsgdQuantizer, SparseGrad, TopKSparsifier};
+pub use netmodel::{NetModel, Topology};

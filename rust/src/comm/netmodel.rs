@@ -1,0 +1,200 @@
+//! α–β network cost model for the communication substrate.
+//!
+//! The paper measures a real V100 cluster; we reproduce the *cost structure*
+//! (DESIGN.md §3): a synchronization round of `v` vectors of `bytes` each
+//! across `n` workers costs
+//!
+//! * **Parameter server** (the paper's architecture, §2): every worker
+//!   pushes to and pulls from the server. The server's ingress/egress link
+//!   is shared, so an incast of n concurrent senders serialises:
+//!   `t = 2·(α + n·bytes / β_server)` per vector (push + pull).
+//! * **Ring all-reduce** (the common alternative): `2(n−1)` pipelined steps
+//!   moving `bytes/n` chunks: `t = 2(n−1)·α + 2·(n−1)/n · bytes / β`.
+//!
+//! α (latency) and β (bandwidth) are per-link constants from
+//! [`crate::sim::calib`]. All times are seconds, bytes are payload only
+//! (framing overhead folds into α).
+
+use crate::config::NetConfig;
+
+/// Communication topology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Centralised parameter server (paper's setting).
+    ParameterServer,
+    /// Ring all-reduce (MPI/NCCL style).
+    RingAllReduce,
+}
+
+impl Topology {
+    /// Parse config spelling ("ps" / "allreduce").
+    pub fn parse(s: &str) -> Option<Topology> {
+        match s {
+            "ps" => Some(Topology::ParameterServer),
+            "allreduce" => Some(Topology::RingAllReduce),
+            _ => None,
+        }
+    }
+}
+
+/// The calibrated cost model.
+#[derive(Clone, Debug)]
+pub struct NetModel {
+    pub topology: Topology,
+    /// Per-message latency α, seconds.
+    pub alpha_s: f64,
+    /// Per-link bandwidth β, bytes/second.
+    pub beta_bytes_per_s: f64,
+    /// Server ingress/egress bandwidth (PS incast), bytes/second.
+    pub server_beta_bytes_per_s: f64,
+}
+
+impl NetModel {
+    /// From the experiment config (validates topology).
+    pub fn from_config(cfg: &NetConfig) -> Self {
+        let topology = Topology::parse(&cfg.topology)
+            .expect("config validation guarantees topology");
+        NetModel {
+            topology,
+            alpha_s: cfg.latency_us * 1e-6,
+            beta_bytes_per_s: cfg.bandwidth_gbps * 1e9 / 8.0,
+            server_beta_bytes_per_s: cfg.server_bandwidth_gbps * 1e9 / 8.0,
+        }
+    }
+
+    /// Time for one point-to-point transfer of `bytes`.
+    pub fn p2p_time(&self, bytes: u64) -> f64 {
+        self.alpha_s + bytes as f64 / self.beta_bytes_per_s
+    }
+
+    /// Time for one synchronization round: `n` workers exchanging `vectors`
+    /// vectors of `bytes_per_vector` each (average + broadcast).
+    ///
+    /// Returns 0 for n == 1 (nothing to exchange).
+    pub fn sync_time(&self, n: usize, bytes_per_vector: u64, vectors: u64) -> f64 {
+        if n <= 1 || vectors == 0 || bytes_per_vector == 0 {
+            return 0.0;
+        }
+        let payload = (bytes_per_vector * vectors) as f64;
+        match self.topology {
+            Topology::ParameterServer => {
+                // Push: n workers into the shared server link, serialised.
+                // Pull: server broadcasts back over the same shared link.
+                2.0 * (self.alpha_s + n as f64 * payload / self.server_beta_bytes_per_s)
+            }
+            Topology::RingAllReduce => {
+                let n = n as f64;
+                2.0 * (n - 1.0) * self.alpha_s
+                    + 2.0 * (n - 1.0) / n * payload / self.beta_bytes_per_s
+            }
+        }
+    }
+
+    /// Total bytes moved cluster-wide in one sync round (for accounting
+    /// the paper's 2/H traffic-reduction claim, independent of timing).
+    pub fn sync_traffic_bytes(&self, n: usize, bytes_per_vector: u64, vectors: u64) -> u64 {
+        if n <= 1 {
+            return 0;
+        }
+        let payload = bytes_per_vector * vectors;
+        match self.topology {
+            // push n·B up + pull n·B down
+            Topology::ParameterServer => 2 * n as u64 * payload,
+            // 2(n-1) chunks of B/n per worker, n workers
+            Topology::RingAllReduce => {
+                (2 * (n as u64 - 1)) * payload
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetConfig;
+    use crate::util::prop;
+
+    fn model(topo: &str) -> NetModel {
+        let cfg = NetConfig { topology: topo.into(), ..Default::default() };
+        NetModel::from_config(&cfg)
+    }
+
+    #[test]
+    fn p2p_is_alpha_plus_size_over_beta() {
+        let m = model("ps");
+        // defaults: 50us, 1056 Gbit/s = 132e9 B/s
+        let t = m.p2p_time(132_000_000);
+        assert!((t - (50e-6 + 1e-3)).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn single_worker_syncs_free() {
+        for topo in ["ps", "allreduce"] {
+            assert_eq!(model(topo).sync_time(1, 1 << 20, 2), 0.0);
+            assert_eq!(model(topo).sync_traffic_bytes(1, 1 << 20, 2), 0);
+        }
+    }
+
+    #[test]
+    fn ps_incast_grows_linearly_with_n() {
+        let m = model("ps");
+        let b = 4 * 1_000_000u64;
+        let t2 = m.sync_time(2, b, 1);
+        let t8 = m.sync_time(8, b, 1);
+        // Remove the 2α constant, then the ratio must be exactly 4.
+        let c = 2.0 * m.alpha_s;
+        assert!(((t8 - c) / (t2 - c) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_saturates() {
+        // (n-1)/n → 1: doubling n beyond a few workers barely changes the
+        // bandwidth term — the scalability argument for all-reduce.
+        let m = model("allreduce");
+        let b = 400 * 1_000_000u64;
+        let t4 = m.sync_time(4, b, 1) - 2.0 * 3.0 * m.alpha_s;
+        let t8 = m.sync_time(8, b, 1) - 2.0 * 7.0 * m.alpha_s;
+        let ratio = t8 / t4;
+        assert!(ratio < 1.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn two_vectors_cost_double_payload() {
+        // Local AdaAlter ships params AND denominators (2 vectors).
+        let m = model("ps");
+        let t1 = m.sync_time(8, 1 << 22, 1);
+        let t2 = m.sync_time(8, 1 << 22, 2);
+        let c = 2.0 * m.alpha_s;
+        assert!(((t2 - c) - 2.0 * (t1 - c)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let m = model("ps");
+        // 8 workers, 1 MiB vector, 2 vectors: push 16 MiB + pull 16 MiB.
+        assert_eq!(m.sync_traffic_bytes(8, 1 << 20, 2), 32 << 20);
+        let r = model("allreduce");
+        assert_eq!(r.sync_traffic_bytes(8, 1 << 20, 2), 14 << 21);
+    }
+
+    #[test]
+    fn properties_monotonicity() {
+        prop::check("netmodel monotone in n, bytes, vectors", 200, |g| {
+            let m = if g.bool() { model("ps") } else { model("allreduce") };
+            let n = g.usize_in(2..16);
+            let b = g.u64_in(1..1 << 24);
+            let v = g.u64_in(1..3);
+            let t = m.sync_time(n, b, v);
+            prop::assert_that(t > 0.0, "positive")?;
+            prop::assert_that(
+                m.sync_time(n + 1, b, v) >= t,
+                "monotone in n",
+            )?;
+            prop::assert_that(
+                m.sync_time(n, b + 1024, v) >= t,
+                "monotone in bytes",
+            )?;
+            prop::assert_that(m.sync_time(n, b, v + 1) >= t, "monotone in vectors")
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Configuration system: TOML-subset parser, typed schema, named presets.
+//!
+//! Load order: preset or file → CLI `--set key=value` overrides → validate.
+
+pub mod presets;
+pub mod schema;
+pub mod toml;
+
+pub use presets::{load_preset, preset_doc, PRESETS};
+pub use schema::{
+    Algorithm, Backend, DataConfig, ExperimentConfig, NetConfig, OptimConfig, SyncPeriod,
+    TrainConfig,
+};
+pub use toml::{TomlDoc, TomlValue};

@@ -1,0 +1,172 @@
+//! Named experiment presets — the paper's evaluation settings, runnable as
+//! `adaalter train --experiment <name>` without writing a config file.
+//!
+//! Each preset is expressed as a TOML snippet so the same parsing/validation
+//! path is exercised whether a config comes from disk, CLI or a preset.
+
+use crate::error::{Error, Result};
+
+use super::schema::ExperimentConfig;
+use super::toml::TomlDoc;
+
+/// A named, documented experiment preset.
+pub struct Preset {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub toml: &'static str,
+}
+
+/// All built-in presets.
+pub const PRESETS: &[Preset] = &[
+    Preset {
+        name: "paper-default",
+        summary: "Paper §6.2 default: 8 workers, local AdaAlter H=4, η=0.5, warm-up 600",
+        toml: r#"
+[train]
+workers = 8
+sync_period = 4
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+[optim]
+algorithm = "local_adaalter"
+"#,
+    },
+    Preset {
+        name: "adagrad-baseline",
+        summary: "Fully-synchronous distributed AdaGrad (Alg. 1), 8 workers",
+        toml: r#"
+[train]
+workers = 8
+sync_period = 1
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+[optim]
+algorithm = "adagrad"
+"#,
+    },
+    Preset {
+        name: "adaalter-sync",
+        summary: "Fully-synchronous AdaAlter (Alg. 3), 8 workers",
+        toml: r#"
+[train]
+workers = 8
+sync_period = 1
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+[optim]
+algorithm = "adaalter"
+"#,
+    },
+    Preset {
+        name: "tiny-lm",
+        summary: "PJRT tiny transformer LM, 4 workers, local AdaAlter H=4",
+        toml: r#"
+[train]
+preset = "tiny"
+workers = 4
+sync_period = 4
+steps = 200
+steps_per_epoch = 50
+log_every = 10
+backend = "pjrt"
+[optim]
+algorithm = "local_adaalter"
+warmup_steps = 50
+"#,
+    },
+    Preset {
+        name: "small-lm",
+        summary: "PJRT small (~0.9M param) LM, 8 workers, local AdaAlter H=4 — the e2e driver",
+        toml: r#"
+[train]
+preset = "small"
+workers = 8
+sync_period = 4
+steps = 300
+steps_per_epoch = 100
+log_every = 10
+eval_every = 50
+backend = "pjrt"
+[optim]
+algorithm = "local_adaalter"
+warmup_steps = 60
+"#,
+    },
+    Preset {
+        name: "noniid-stress",
+        summary: "Fully non-IID shards (D_i disjoint), local AdaAlter H=8",
+        toml: r#"
+[train]
+workers = 8
+sync_period = 8
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+[optim]
+algorithm = "local_adaalter"
+[data]
+noniid = 1.0
+"#,
+    },
+];
+
+/// Resolve a preset by name into a validated config.
+pub fn load_preset(name: &str) -> Result<ExperimentConfig> {
+    let p = PRESETS
+        .iter()
+        .find(|p| p.name == name)
+        .ok_or_else(|| {
+            let names: Vec<_> = PRESETS.iter().map(|p| p.name).collect();
+            Error::Config(format!("unknown experiment preset {name:?}; available: {names:?}"))
+        })?;
+    ExperimentConfig::from_doc(&TomlDoc::parse(p.toml)?)
+}
+
+/// Resolve a preset into its TOML doc (so CLI --set overrides can stack).
+pub fn preset_doc(name: &str) -> Result<TomlDoc> {
+    let p = PRESETS
+        .iter()
+        .find(|p| p.name == name)
+        .ok_or_else(|| Error::Config(format!("unknown experiment preset {name:?}")))?;
+    TomlDoc::parse(p.toml)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::{Algorithm, SyncPeriod};
+
+    #[test]
+    fn all_presets_parse_and_validate() {
+        for p in PRESETS {
+            let c = load_preset(p.name)
+                .unwrap_or_else(|e| panic!("preset {} invalid: {e}", p.name));
+            assert!(c.train.workers >= 1, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn paper_default_matches_paper() {
+        let c = load_preset("paper-default").unwrap();
+        assert_eq!(c.train.workers, 8);
+        assert_eq!(c.train.sync_period, SyncPeriod::Every(4));
+        assert_eq!(c.optim.algorithm, Algorithm::LocalAdaAlter);
+        assert_eq!(c.optim.eta, 0.5);
+        assert_eq!(c.optim.warmup_steps, 600);
+    }
+
+    #[test]
+    fn unknown_preset_lists_options() {
+        let err = load_preset("nope").unwrap_err().to_string();
+        assert!(err.contains("paper-default"), "{err}");
+    }
+
+    #[test]
+    fn noniid_preset_is_fully_disjoint() {
+        let c = load_preset("noniid-stress").unwrap();
+        assert_eq!(c.data.noniid, 1.0);
+    }
+}

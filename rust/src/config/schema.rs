@@ -1,0 +1,591 @@
+//! Typed experiment configuration (the framework's "config system").
+//!
+//! A config describes one training experiment end-to-end: which algorithm
+//! (paper Alg. 1–4), the cluster shape, the synchronization period H, the
+//! compute backend, the network model, the data pipeline, and output paths.
+//! Configs load from the TOML subset in [`super::toml`], can be overridden
+//! from the CLI (`--set key=value`), and validate eagerly.
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+
+use super::toml::{TomlDoc, TomlValue};
+
+/// The training algorithms of the paper (plus plain SGD for completeness).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Fully-synchronous SGD (gradient averaging every step).
+    Sgd,
+    /// Algorithm 2: local SGD, parameter averaging every H steps.
+    LocalSgd,
+    /// Algorithm 1: distributed AdaGrad (baseline).
+    AdaGrad,
+    /// Algorithm 3: fully-synchronous AdaAlter.
+    AdaAlter,
+    /// Algorithm 4: local AdaAlter — the paper's contribution.
+    LocalAdaAlter,
+}
+
+impl Algorithm {
+    /// Parse the config-file spelling.
+    pub fn parse(s: &str) -> Result<Algorithm> {
+        Ok(match s {
+            "sgd" => Algorithm::Sgd,
+            "local_sgd" => Algorithm::LocalSgd,
+            "adagrad" => Algorithm::AdaGrad,
+            "adaalter" => Algorithm::AdaAlter,
+            "local_adaalter" => Algorithm::LocalAdaAlter,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown algorithm {other:?} (expected one of sgd, \
+                     local_sgd, adagrad, adaalter, local_adaalter)"
+                )))
+            }
+        })
+    }
+
+    /// Config-file spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Sgd => "sgd",
+            Algorithm::LocalSgd => "local_sgd",
+            Algorithm::AdaGrad => "adagrad",
+            Algorithm::AdaAlter => "adaalter",
+            Algorithm::LocalAdaAlter => "local_adaalter",
+        }
+    }
+
+    /// Does the algorithm skip synchronization rounds (H > 1 meaningful)?
+    pub fn is_local(self) -> bool {
+        matches!(self, Algorithm::LocalSgd | Algorithm::LocalAdaAlter)
+    }
+
+    /// Does the algorithm synchronize optimizer state (denominators) too?
+    /// Local AdaAlter ships 2 vectors per sync (the paper's 2/H factor);
+    /// local SGD ships 1.
+    pub fn syncs_denominator(self) -> bool {
+        matches!(self, Algorithm::LocalAdaAlter)
+    }
+}
+
+impl fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Synchronization period H. `Infinite` reproduces the paper's
+/// "Local AdaAlter, H = +∞" baseline (communication removed entirely).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncPeriod {
+    Every(u64),
+    Infinite,
+}
+
+impl SyncPeriod {
+    /// From a float (TOML `inf` maps to `Infinite`).
+    pub fn from_f64(v: f64) -> Result<SyncPeriod> {
+        if v.is_infinite() && v > 0.0 {
+            Ok(SyncPeriod::Infinite)
+        } else if v >= 1.0 && v.fract() == 0.0 && v <= u64::MAX as f64 {
+            Ok(SyncPeriod::Every(v as u64))
+        } else {
+            Err(Error::Config(format!("sync period H must be >=1 integer or inf, got {v}")))
+        }
+    }
+
+    /// Steps between syncs, or `None` for never.
+    pub fn period(self) -> Option<u64> {
+        match self {
+            SyncPeriod::Every(h) => Some(h),
+            SyncPeriod::Infinite => None,
+        }
+    }
+}
+
+impl fmt::Display for SyncPeriod {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SyncPeriod::Every(h) => write!(f, "{h}"),
+            SyncPeriod::Infinite => write!(f, "inf"),
+        }
+    }
+}
+
+/// Compute backend for worker gradients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Load `artifacts/*.hlo.txt` and run the real LM through PJRT.
+    Pjrt,
+    /// Pure-rust synthetic workload (non-IID least-squares); no artifacts
+    /// needed. Used by unit/property tests and the comm-only benches.
+    RustMath,
+}
+
+impl Backend {
+    /// Parse config spelling.
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "pjrt" => Backend::Pjrt,
+            "rust_math" => Backend::RustMath,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown backend {other:?} (expected pjrt or rust_math)"
+                )))
+            }
+        })
+    }
+}
+
+/// Optimizer hyperparameters (paper §6.2–6.3 defaults).
+#[derive(Clone, Debug)]
+pub struct OptimConfig {
+    pub algorithm: Algorithm,
+    /// Base learning rate η (paper: 0.5 for 8×256).
+    pub eta: f32,
+    /// ε — numerical stability / local placeholder constant (paper: 1).
+    pub epsilon: f32,
+    /// b₀ — accumulator initialisation (paper: 1).
+    pub b0: f32,
+    /// Warm-up steps (paper §6.2.1: 600; 0 disables).
+    pub warmup_steps: u64,
+    /// Momentum for the SGD baselines (0 = vanilla).
+    pub momentum: f32,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        OptimConfig {
+            algorithm: Algorithm::LocalAdaAlter,
+            eta: crate::paper::ETA,
+            epsilon: crate::paper::EPSILON,
+            b0: crate::paper::B0,
+            warmup_steps: crate::paper::WARM_UP_STEPS,
+            momentum: 0.0,
+        }
+    }
+}
+
+/// Cluster / schedule parameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model preset name (must exist in the artifact manifest for PJRT).
+    pub preset: String,
+    /// Number of workers n.
+    pub workers: usize,
+    /// Synchronization period H.
+    pub sync_period: SyncPeriod,
+    /// Total training steps T (per worker).
+    pub steps: u64,
+    /// Steps per "epoch" for reporting (paper: 20,000).
+    pub steps_per_epoch: u64,
+    /// Evaluate test PPL every this many steps (0 = only at end).
+    pub eval_every: u64,
+    /// Log training metrics every this many steps.
+    pub log_every: u64,
+    /// Experiment seed (controls data, init noise, everything).
+    pub seed: u64,
+    /// Gradient backend.
+    pub backend: Backend,
+    /// Problem dimension for the rust_math backend.
+    pub rust_math_dim: usize,
+    /// Save a checkpoint every this many steps (0 = off). For local
+    /// algorithms this must be a multiple of H — snapshots are taken at
+    /// synchronization boundaries, where every replica agrees.
+    pub checkpoint_every: u64,
+    /// Checkpoint file path ("" = `<out_dir>/checkpoint.bin`).
+    pub checkpoint_path: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "tiny".into(),
+            workers: 8,
+            sync_period: SyncPeriod::Every(4),
+            steps: 400,
+            steps_per_epoch: 100,
+            eval_every: 0,
+            log_every: 20,
+            seed: 42,
+            backend: Backend::RustMath,
+            rust_math_dim: 4096,
+            checkpoint_every: 0,
+            checkpoint_path: String::new(),
+        }
+    }
+}
+
+/// Data-pipeline parameters (synthetic corpus; DESIGN.md S11).
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    /// Zipf exponent of the unigram distribution.
+    pub zipf_s: f64,
+    /// Markov order-1 mixing weight (0 = iid unigrams, 1 = deterministic).
+    pub markov: f64,
+    /// Non-IID skew across workers in [0,1]: 0 = IID shards, 1 = fully
+    /// disjoint topic per worker (the paper's D_i ≠ D_j setting).
+    pub noniid: f64,
+    /// Held-out evaluation batches.
+    pub eval_batches: usize,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig { zipf_s: 1.1, markov: 0.85, noniid: 0.5, eval_batches: 8 }
+    }
+}
+
+/// Network-simulation parameters (DESIGN.md S6; calibrated in sim::calib).
+///
+/// Defaults match the paper-fitted V100/NVLink parameter-server constants
+/// (132 GB/s ≈ 1056 Gbit/s aggregate, 50 µs latency) so `train` runs charge
+/// the same virtual time the Fig. 1/2 analytic model uses. Override for
+/// commodity-network studies (e.g. `net.bandwidth_gbps = 10`).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Topology: "ps" (paper's parameter-server) or "allreduce".
+    pub topology: String,
+    /// Per-message latency α (microseconds).
+    pub latency_us: f64,
+    /// Per-link bandwidth β (Gbit/s).
+    pub bandwidth_gbps: f64,
+    /// Server ingress bandwidth shared by concurrent senders (PS incast).
+    pub server_bandwidth_gbps: f64,
+    /// Data-loading capacity of the host, samples/s (paper §6.4 bottleneck);
+    /// 0 disables the dataloader model.
+    pub dataloader_samples_per_s: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            topology: "ps".into(),
+            latency_us: 50.0,
+            bandwidth_gbps: 1056.0,
+            server_bandwidth_gbps: 1056.0,
+            dataloader_samples_per_s: 8830.0,
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub train: TrainConfig,
+    pub optim: OptimConfig,
+    pub data: DataConfig,
+    pub net: NetConfig,
+    /// Directory for CSV/JSONL outputs.
+    pub out_dir: String,
+    /// Artifact directory (PJRT backend).
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            train: TrainConfig::default(),
+            optim: OptimConfig::default(),
+            data: DataConfig::default(),
+            net: NetConfig::default(),
+            out_dir: "results".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// All dotted keys the config system accepts — `ensure_known_keys` guard.
+pub const KNOWN_KEYS: &[&str] = &[
+    "out_dir",
+    "artifacts_dir",
+    "train.preset",
+    "train.workers",
+    "train.sync_period",
+    "train.steps",
+    "train.steps_per_epoch",
+    "train.eval_every",
+    "train.log_every",
+    "train.seed",
+    "train.backend",
+    "train.rust_math_dim",
+    "train.checkpoint_every",
+    "train.checkpoint_path",
+    "optim.algorithm",
+    "optim.eta",
+    "optim.epsilon",
+    "optim.b0",
+    "optim.warmup_steps",
+    "optim.momentum",
+    "data.zipf_s",
+    "data.markov",
+    "data.noniid",
+    "data.eval_batches",
+    "net.topology",
+    "net.latency_us",
+    "net.bandwidth_gbps",
+    "net.server_bandwidth_gbps",
+    "net.dataloader_samples_per_s",
+];
+
+impl ExperimentConfig {
+    /// Build from a parsed TOML document (defaults fill gaps; unknown keys
+    /// rejected; then validated).
+    pub fn from_doc(doc: &TomlDoc) -> Result<ExperimentConfig> {
+        doc.ensure_known_keys(KNOWN_KEYS)?;
+        let mut c = ExperimentConfig {
+            out_dir: doc.str_or("out_dir", "results")?,
+            artifacts_dir: doc.str_or("artifacts_dir", "artifacts")?,
+            ..Default::default()
+        };
+
+        c.train.preset = doc.str_or("train.preset", &c.train.preset)?;
+        c.train.workers = doc.int_or("train.workers", c.train.workers as i64)? as usize;
+        if let Some(v) = doc.get("train.sync_period") {
+            c.train.sync_period = SyncPeriod::from_f64(v.float()?)?;
+        }
+        c.train.steps = doc.int_or("train.steps", c.train.steps as i64)? as u64;
+        c.train.steps_per_epoch =
+            doc.int_or("train.steps_per_epoch", c.train.steps_per_epoch as i64)? as u64;
+        c.train.eval_every = doc.int_or("train.eval_every", c.train.eval_every as i64)? as u64;
+        c.train.log_every = doc.int_or("train.log_every", c.train.log_every as i64)? as u64;
+        c.train.seed = doc.int_or("train.seed", c.train.seed as i64)? as u64;
+        c.train.backend = Backend::parse(&doc.str_or("train.backend", "rust_math")?)?;
+        c.train.rust_math_dim =
+            doc.int_or("train.rust_math_dim", c.train.rust_math_dim as i64)? as usize;
+        c.train.checkpoint_every =
+            doc.int_or("train.checkpoint_every", c.train.checkpoint_every as i64)? as u64;
+        c.train.checkpoint_path =
+            doc.str_or("train.checkpoint_path", &c.train.checkpoint_path)?;
+
+        if let Some(v) = doc.get("optim.algorithm") {
+            c.optim.algorithm = Algorithm::parse(v.str()?)?;
+        }
+        c.optim.eta = doc.float_or("optim.eta", c.optim.eta as f64)? as f32;
+        c.optim.epsilon = doc.float_or("optim.epsilon", c.optim.epsilon as f64)? as f32;
+        c.optim.b0 = doc.float_or("optim.b0", c.optim.b0 as f64)? as f32;
+        c.optim.warmup_steps =
+            doc.int_or("optim.warmup_steps", c.optim.warmup_steps as i64)? as u64;
+        c.optim.momentum = doc.float_or("optim.momentum", c.optim.momentum as f64)? as f32;
+
+        c.data.zipf_s = doc.float_or("data.zipf_s", c.data.zipf_s)?;
+        c.data.markov = doc.float_or("data.markov", c.data.markov)?;
+        c.data.noniid = doc.float_or("data.noniid", c.data.noniid)?;
+        c.data.eval_batches =
+            doc.int_or("data.eval_batches", c.data.eval_batches as i64)? as usize;
+
+        c.net.topology = doc.str_or("net.topology", &c.net.topology)?;
+        c.net.latency_us = doc.float_or("net.latency_us", c.net.latency_us)?;
+        c.net.bandwidth_gbps = doc.float_or("net.bandwidth_gbps", c.net.bandwidth_gbps)?;
+        c.net.server_bandwidth_gbps =
+            doc.float_or("net.server_bandwidth_gbps", c.net.server_bandwidth_gbps)?;
+        c.net.dataloader_samples_per_s =
+            doc.float_or("net.dataloader_samples_per_s", c.net.dataloader_samples_per_s)?;
+
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Load + parse + validate from a path.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<ExperimentConfig> {
+        ExperimentConfig::from_doc(&TomlDoc::load(path)?)
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<()> {
+        let t = &self.train;
+        if t.workers == 0 {
+            return Err(Error::Config("train.workers must be >= 1".into()));
+        }
+        if t.steps == 0 {
+            return Err(Error::Config("train.steps must be >= 1".into()));
+        }
+        if self.optim.eta <= 0.0 || !self.optim.eta.is_finite() {
+            return Err(Error::Config(format!("optim.eta must be positive, got {}", self.optim.eta)));
+        }
+        if self.optim.epsilon <= 0.0 {
+            return Err(Error::Config("optim.epsilon must be positive (paper Thm 1: arbitrary ε > 0)".into()));
+        }
+        if self.optim.b0 < 1.0 {
+            return Err(Error::Config("optim.b0 must be >= 1 (paper Thm 1/2 assumption b₀ ≥ 1)".into()));
+        }
+        if !(0.0..1.0).contains(&(self.optim.momentum as f64)) {
+            return Err(Error::Config("optim.momentum must be in [0, 1)".into()));
+        }
+        if !self.optim.algorithm.is_local() && self.train.sync_period != SyncPeriod::Every(1) {
+            // Fully-synchronous algorithms sync every step by definition;
+            // accept only the default H so configs stay honest.
+            if let SyncPeriod::Every(h) = self.train.sync_period {
+                if h != 1 {
+                    return Err(Error::Config(format!(
+                        "algorithm {} is fully synchronous; train.sync_period must be 1 (got {h})",
+                        self.optim.algorithm
+                    )));
+                }
+            } else {
+                return Err(Error::Config(format!(
+                    "algorithm {} is fully synchronous; train.sync_period must be 1 (got inf)",
+                    self.optim.algorithm
+                )));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.data.noniid) {
+            return Err(Error::Config("data.noniid must be in [0, 1]".into()));
+        }
+        if !(0.0..=1.0).contains(&self.data.markov) {
+            return Err(Error::Config("data.markov must be in [0, 1]".into()));
+        }
+        if self.train.checkpoint_every > 0 && self.optim.algorithm.is_local() {
+            if let SyncPeriod::Every(h) = self.train.sync_period {
+                if self.train.checkpoint_every % h != 0 {
+                    return Err(Error::Config(format!(
+                        "train.checkpoint_every ({}) must be a multiple of H ({h}) \
+                         for local algorithms (snapshots happen at sync boundaries)",
+                        self.train.checkpoint_every
+                    )));
+                }
+            } else {
+                return Err(Error::Config(
+                    "checkpointing requires finite H for local algorithms".into(),
+                ));
+            }
+        }
+        match self.net.topology.as_str() {
+            "ps" | "allreduce" => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "net.topology must be \"ps\" or \"allreduce\", got {other:?}"
+                )))
+            }
+        }
+        if self.net.latency_us < 0.0 || self.net.bandwidth_gbps <= 0.0 {
+            return Err(Error::Config("net latency/bandwidth out of range".into()));
+        }
+        Ok(())
+    }
+
+    /// Apply a `key=value` CLI override (string values need no quotes).
+    pub fn override_from_doc(doc: &mut TomlDoc, spec: &str) -> Result<()> {
+        let (key, val) = spec.split_once('=').ok_or_else(|| {
+            Error::Config(format!("--set expects key=value, got {spec:?}"))
+        })?;
+        let key = key.trim();
+        let val = val.trim();
+        // Try int, float, bool, then string.
+        let value = if let Ok(i) = val.parse::<i64>() {
+            TomlValue::Int(i)
+        } else if val == "inf" {
+            TomlValue::Float(f64::INFINITY)
+        } else if let Ok(f) = val.parse::<f64>() {
+            TomlValue::Float(f)
+        } else if val == "true" || val == "false" {
+            TomlValue::Bool(val == "true")
+        } else {
+            TomlValue::Str(val.to_string())
+        };
+        doc.set(key, value);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_constants() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.optim.eta, 0.5);
+        assert_eq!(c.optim.epsilon, 1.0);
+        assert_eq!(c.optim.b0, 1.0);
+        assert_eq!(c.optim.warmup_steps, 600);
+        assert_eq!(c.optim.algorithm, Algorithm::LocalAdaAlter);
+    }
+
+    #[test]
+    fn roundtrip_from_toml() {
+        let doc = TomlDoc::parse(
+            "[train]\nworkers = 4\nsync_period = 8\nbackend = \"rust_math\"\n\
+             [optim]\nalgorithm = \"local_adaalter\"\neta = 0.25\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.train.workers, 4);
+        assert_eq!(c.train.sync_period, SyncPeriod::Every(8));
+        assert_eq!(c.optim.eta, 0.25);
+    }
+
+    #[test]
+    fn h_infinity() {
+        let doc = TomlDoc::parse("[train]\nsync_period = inf\n").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.train.sync_period, SyncPeriod::Infinite);
+        assert_eq!(c.train.sync_period.period(), None);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = TomlDoc::parse("[train]\nworkerz = 4\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn sync_algorithm_with_h_rejected() {
+        let doc = TomlDoc::parse(
+            "[train]\nsync_period = 4\n[optim]\nalgorithm = \"adagrad\"\n",
+        )
+        .unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+        assert!(err.to_string().contains("fully synchronous"));
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let mut c = ExperimentConfig::default();
+        c.optim.b0 = 0.5;
+        assert!(c.validate().is_err());
+        c.optim.b0 = 1.0;
+        c.train.workers = 0;
+        assert!(c.validate().is_err());
+        c.train.workers = 2;
+        c.net.topology = "mesh".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn algorithm_parse_and_props() {
+        for a in ["sgd", "local_sgd", "adagrad", "adaalter", "local_adaalter"] {
+            assert_eq!(Algorithm::parse(a).unwrap().name(), a);
+        }
+        assert!(Algorithm::parse("adam").is_err());
+        assert!(Algorithm::LocalAdaAlter.is_local());
+        assert!(Algorithm::LocalAdaAlter.syncs_denominator());
+        assert!(Algorithm::LocalSgd.is_local());
+        assert!(!Algorithm::LocalSgd.syncs_denominator());
+        assert!(!Algorithm::AdaGrad.is_local());
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut doc = TomlDoc::parse("[train]\nworkers = 2\n").unwrap();
+        ExperimentConfig::override_from_doc(&mut doc, "train.workers=6").unwrap();
+        ExperimentConfig::override_from_doc(&mut doc, "optim.eta=0.125").unwrap();
+        ExperimentConfig::override_from_doc(&mut doc, "train.sync_period=inf").unwrap();
+        // fully-sync default algorithm is local_adaalter so inf is OK
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.train.workers, 6);
+        assert_eq!(c.optim.eta, 0.125);
+        assert_eq!(c.train.sync_period, SyncPeriod::Infinite);
+        assert!(ExperimentConfig::override_from_doc(&mut doc, "nonsense").is_err());
+    }
+
+    #[test]
+    fn sync_period_from_f64_bounds() {
+        assert!(SyncPeriod::from_f64(0.0).is_err());
+        assert!(SyncPeriod::from_f64(2.5).is_err());
+        assert!(SyncPeriod::from_f64(-1.0).is_err());
+        assert_eq!(SyncPeriod::from_f64(4.0).unwrap(), SyncPeriod::Every(4));
+        assert_eq!(SyncPeriod::from_f64(f64::INFINITY).unwrap(), SyncPeriod::Infinite);
+    }
+}

@@ -1,0 +1,388 @@
+//! TOML-subset parser for experiment config files.
+//!
+//! The offline image has no `toml`/`serde`, so the framework owns a parser
+//! for the subset its configs use: `[section]` and `[section.sub]` headers,
+//! `key = value` with strings, integers, floats, booleans, and homogeneous
+//! inline arrays, plus `#` comments. Unknown syntax is an error, never
+//! silently ignored — configs drive experiments and must not rot.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// As i64.
+    pub fn int(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(v) => Ok(*v),
+            _ => Err(Error::Config(format!("expected integer, got {self:?}"))),
+        }
+    }
+
+    /// As f64 (integers widen).
+    pub fn float(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(v) => Ok(*v),
+            TomlValue::Int(v) => Ok(*v as f64),
+            _ => Err(Error::Config(format!("expected float, got {self:?}"))),
+        }
+    }
+
+    /// As str.
+    pub fn str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => Err(Error::Config(format!("expected string, got {self:?}"))),
+        }
+    }
+
+    /// As bool.
+    pub fn bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => Err(Error::Config(format!("expected bool, got {self:?}"))),
+        }
+    }
+
+    /// As array.
+    pub fn array(&self) -> Result<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Ok(v),
+            _ => Err(Error::Config(format!("expected array, got {self:?}"))),
+        }
+    }
+}
+
+/// Parsed document: dotted-path key → value (`"train.workers"`).
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let errline = lineno + 1;
+            if let Some(inner) = line.strip_prefix('[') {
+                let inner = inner.strip_suffix(']').ok_or(Error::Parse {
+                    what: "toml",
+                    line: errline,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = inner.trim();
+                if name.is_empty() || !name.split('.').all(is_bare_key) {
+                    return Err(Error::Parse {
+                        what: "toml",
+                        line: errline,
+                        msg: format!("invalid section name {name:?}"),
+                    });
+                }
+                section = name.to_string();
+            } else if let Some(eq) = find_top_level_eq(line) {
+                let key = line[..eq].trim();
+                if !is_bare_key(key) {
+                    return Err(Error::Parse {
+                        what: "toml",
+                        line: errline,
+                        msg: format!("invalid key {key:?}"),
+                    });
+                }
+                let value = parse_value(line[eq + 1..].trim(), errline)?;
+                let full = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                if doc.entries.insert(full.clone(), value).is_some() {
+                    return Err(Error::Parse {
+                        what: "toml",
+                        line: errline,
+                        msg: format!("duplicate key {full:?}"),
+                    });
+                }
+            } else {
+                return Err(Error::Parse {
+                    what: "toml",
+                    line: errline,
+                    msg: format!("cannot parse line {line:?}"),
+                });
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<TomlDoc> {
+        TomlDoc::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Look up a dotted key.
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    /// All keys (dotted), sorted.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    /// Typed accessors with defaults — the schema layer's workhorses.
+    pub fn int_or(&self, key: &str, default: i64) -> Result<i64> {
+        self.get(key).map_or(Ok(default), TomlValue::int)
+    }
+
+    /// f64 with default.
+    pub fn float_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.get(key).map_or(Ok(default), TomlValue::float)
+    }
+
+    /// String with default.
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        self.get(key).map_or(Ok(default.to_string()), |v| v.str().map(String::from))
+    }
+
+    /// bool with default.
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        self.get(key).map_or(Ok(default), TomlValue::bool)
+    }
+
+    /// Set (used by CLI `--set key=value` overrides).
+    pub fn set(&mut self, key: &str, value: TomlValue) {
+        self.entries.insert(key.to_string(), value);
+    }
+
+    /// Reject any key outside the allowed set — typo protection.
+    pub fn ensure_known_keys(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.keys() {
+            if !allowed.contains(&k) {
+                return Err(Error::Config(format!(
+                    "unknown config key {k:?} (allowed: {allowed:?})"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Find the first `=` outside any string (key/value split).
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse a scalar or inline-array value.
+fn parse_value(text: &str, line: usize) -> Result<TomlValue> {
+    let err = |msg: String| Error::Parse { what: "toml", line, msg };
+    let t = text.trim();
+    if t.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(inner) = t.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| err("unterminated array".into()))?;
+        let mut vals = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_array_items(inner) {
+                vals.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(TomlValue::Array(vals));
+    }
+    if let Some(inner) = t.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| err("unterminated string".into()))?;
+        if inner.contains('"') {
+            return Err(err("embedded quote in string (escapes unsupported)".into()));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match t {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    // "inf" for H = ∞ configs.
+    if t == "inf" {
+        return Ok(TomlValue::Float(f64::INFINITY));
+    }
+    if !t.contains(['.', 'e', 'E']) {
+        if let Ok(v) = t.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    if let Ok(v) = t.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    Err(err(format!("cannot parse value {t:?}")))
+}
+
+/// Split inline-array items on top-level commas (strings may hold commas).
+fn split_array_items(inner: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if !inner[start..].trim().is_empty() {
+        items.push(&inner[start..]);
+    }
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+preset = "tiny"
+
+[train]
+workers = 8
+sync_period = 4       # H
+lr = 0.5
+warmup = 600
+algorithms = ["adagrad", "local_adaalter"]
+use_pjrt = true
+
+[net]
+latency_us = 25.0
+bandwidth_gbps = 10
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("preset").unwrap().str().unwrap(), "tiny");
+        assert_eq!(doc.get("train.workers").unwrap().int().unwrap(), 8);
+        assert_eq!(doc.get("train.lr").unwrap().float().unwrap(), 0.5);
+        assert!(doc.get("train.use_pjrt").unwrap().bool().unwrap());
+        let algos = doc.get("train.algorithms").unwrap().array().unwrap();
+        assert_eq!(algos.len(), 2);
+        assert_eq!(algos[1].str().unwrap(), "local_adaalter");
+        // ints widen to float on demand
+        assert_eq!(doc.get("net.bandwidth_gbps").unwrap().float().unwrap(), 10.0);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = TomlDoc::parse("# only a comment\n\na = 1 # trailing\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().int().unwrap(), 1);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s").unwrap().str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn inf_parses_for_h_infinity() {
+        let doc = TomlDoc::parse("h = inf\n").unwrap();
+        assert!(doc.get("h").unwrap().float().unwrap().is_infinite());
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(TomlDoc::parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn bad_lines_error_with_lineno() {
+        let err = TomlDoc::parse("a = 1\nnot a kv\n").unwrap_err();
+        match err {
+            Error::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("wrong error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unterminated_constructs_rejected() {
+        assert!(TomlDoc::parse("[sec\n").is_err());
+        assert!(TomlDoc::parse("a = \"oops\n").is_err());
+        assert!(TomlDoc::parse("a = [1, 2\n").is_err());
+        assert!(TomlDoc::parse("a =\n").is_err());
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut doc = TomlDoc::parse("a = 1\n").unwrap();
+        assert_eq!(doc.int_or("a", 9).unwrap(), 1);
+        assert_eq!(doc.int_or("missing", 9).unwrap(), 9);
+        doc.set("b.c", TomlValue::Str("x".into()));
+        assert_eq!(doc.get("b.c").unwrap().str().unwrap(), "x");
+    }
+
+    #[test]
+    fn unknown_key_guard() {
+        let doc = TomlDoc::parse("a = 1\nb = 2\n").unwrap();
+        assert!(doc.ensure_known_keys(&["a", "b"]).is_ok());
+        assert!(doc.ensure_known_keys(&["a"]).is_err());
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let doc = TomlDoc::parse("n = 1_000_000\n").unwrap();
+        assert_eq!(doc.get("n").unwrap().int().unwrap(), 1_000_000);
+    }
+
+    #[test]
+    fn nested_sections() {
+        let doc = TomlDoc::parse("[a.b]\nc = 3\n").unwrap();
+        assert_eq!(doc.get("a.b.c").unwrap().int().unwrap(), 3);
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = TomlDoc::parse("xs = []\n").unwrap();
+        assert!(doc.get("xs").unwrap().array().unwrap().is_empty());
+    }
+}

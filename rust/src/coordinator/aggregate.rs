@@ -1,0 +1,203 @@
+//! Aggregation — the leader-side averaging of gradients (sync algorithms,
+//! Alg. 1/3 line 5) and of parameters + accumulated denominators (local
+//! algorithms, Alg. 4 lines 11–12).
+//!
+//! Hot path: n ≤ 8 vectors of d up to 1e8; every routine is a streaming
+//! pass with reused scratch buffers (no per-sync allocation — see
+//! EXPERIMENTS.md §Perf).
+
+use crate::util::math;
+
+/// Reusable aggregation scratch space for a d-dimensional model.
+pub struct Aggregator {
+    /// Averaged gradient (valid after `mean_grads`).
+    pub avg_g: Vec<f32>,
+    /// Averaged squared gradients (valid after `mean_grads_and_squares`).
+    pub avg_gsq: Vec<f32>,
+}
+
+impl Aggregator {
+    /// Allocate scratch for dimension `d`.
+    pub fn new(d: usize) -> Self {
+        Aggregator { avg_g: vec![0.0; d], avg_gsq: vec![0.0; d] }
+    }
+
+    /// Dimension.
+    pub fn dim(&self) -> usize {
+        self.avg_g.len()
+    }
+
+    /// `avg_g = (1/n) Σ_i grads[i]` — Alg. 1/3 line 5.
+    pub fn mean_grads(&mut self, grads: &[&[f32]]) -> &[f32] {
+        math::mean_into(grads, &mut self.avg_g);
+        &self.avg_g
+    }
+
+    /// Simultaneously `avg_g = (1/n) Σ_i g_i` and
+    /// `avg_gsq = (1/n) Σ_i g_i ∘ g_i` — one pass over the inputs, both
+    /// outputs written per cache line (Alg. 3 needs both: line 5 + line 7).
+    pub fn mean_grads_and_squares(&mut self, grads: &[&[f32]]) -> (&[f32], &[f32]) {
+        assert!(!grads.is_empty(), "mean_grads_and_squares: no inputs");
+        let d = self.avg_g.len();
+        for g in grads {
+            assert_eq!(g.len(), d, "mean_grads_and_squares: ragged input");
+        }
+        let scale = 1.0 / grads.len() as f32;
+        let (avg_g, avg_gsq) = (&mut self.avg_g[..d], &mut self.avg_gsq[..d]);
+        // Cache-blocked like math::mean_into: both accumulator chunks stay
+        // in L1 across the n input passes (EXPERIMENTS.md §Perf).
+        const CHUNK: usize = 1024;
+        let mut start = 0;
+        while start < d {
+            let end = (start + CHUNK).min(d);
+            let (gc, qc) = (&mut avg_g[start..end], &mut avg_gsq[start..end]);
+            let first = &grads[0][start..end];
+            for i in 0..gc.len() {
+                let v = first[i];
+                gc[i] = v;
+                qc[i] = v * v;
+            }
+            for g in &grads[1..] {
+                let g = &g[start..end];
+                for i in 0..gc.len() {
+                    let v = g[i];
+                    gc[i] += v;
+                    qc[i] += v * v;
+                }
+            }
+            for i in 0..gc.len() {
+                gc[i] *= scale;
+                qc[i] *= scale;
+            }
+            start = end;
+        }
+        (&self.avg_g, &self.avg_gsq)
+    }
+
+    /// Square the already-averaged gradient into `avg_gsq` — AdaGrad's
+    /// Alg. 1 line 6 accumulates `G_t ∘ G_t` of the *averaged* gradient.
+    pub fn square_avg_grad(&mut self) -> &[f32] {
+        let d = self.avg_g.len();
+        for i in 0..d {
+            self.avg_gsq[i] = self.avg_g[i] * self.avg_g[i];
+        }
+        &self.avg_gsq
+    }
+}
+
+/// Average `sources` into `out` (sync of parameters or denominators).
+/// Free function (not on `Aggregator`) because the destination is usually a
+/// worker-owned buffer, not scratch.
+pub fn average_into(sources: &[&[f32]], out: &mut [f32]) {
+    math::mean_into(sources, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mean_grads_basic() {
+        let mut agg = Aggregator::new(3);
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [3.0f32, 2.0, 1.0];
+        assert_eq!(agg.mean_grads(&[&a, &b]), &[2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn joint_mean_matches_separate_passes() {
+        let mut rng = Rng::new(1);
+        let d = 1000;
+        let grads: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+
+        let mut agg = Aggregator::new(d);
+        let (g, gsq) = agg.mean_grads_and_squares(&refs);
+        let (g, gsq) = (g.to_vec(), gsq.to_vec());
+
+        // Separate oracle computation.
+        let mut eg = vec![0.0f32; d];
+        let mut egsq = vec![0.0f32; d];
+        for v in &grads {
+            for i in 0..d {
+                eg[i] += v[i] / 4.0;
+                egsq[i] += v[i] * v[i] / 4.0;
+            }
+        }
+        for i in 0..d {
+            assert!((g[i] - eg[i]).abs() < 1e-5, "g[{i}]");
+            assert!((gsq[i] - egsq[i]).abs() < 1e-4, "gsq[{i}]");
+        }
+    }
+
+    #[test]
+    fn square_avg_grad_is_elementwise_square() {
+        let mut agg = Aggregator::new(2);
+        let a = [3.0f32, -2.0];
+        agg.mean_grads(&[&a]);
+        assert_eq!(agg.square_avg_grad(), &[9.0, 4.0]);
+    }
+
+    #[test]
+    fn avg_gsq_ge_avg_g_squared() {
+        // Jensen: mean of squares >= square of mean — distinguishes the
+        // AdaAlter accumulator (line 7) from AdaGrad's (line 6).
+        prop::check("jensen on aggregation", 100, |g| {
+            let d = g.usize_in(1..64);
+            let n = g.usize_in(1..8);
+            let grads: Vec<Vec<f32>> =
+                (0..n).map(|_| g.vec_f32(d..d + 1, -5.0..5.0)).collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+            let mut agg = Aggregator::new(d);
+            let (avg_g, avg_gsq) = agg.mean_grads_and_squares(&refs);
+            for i in 0..d {
+                if avg_gsq[i] + 1e-5 < avg_g[i] * avg_g[i] {
+                    return Err(format!(
+                        "jensen violated at {i}: {} < {}",
+                        avg_gsq[i],
+                        avg_g[i] * avg_g[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn average_into_identical_replicas_is_identity() {
+        prop::check("sync fixed point", 50, |g| {
+            let v = g.vec_normal(1..128, 2.0);
+            let sources: Vec<&[f32]> = (0..4).map(|_| v.as_slice()).collect();
+            let mut out = vec![0.0f32; v.len()];
+            average_into(&sources, &mut out);
+            prop::assert_close(&out, &v, 1e-6, "identical-replica average")
+        });
+    }
+
+    #[test]
+    fn average_preserves_linearity() {
+        // mean(a+c, b+c) == mean(a,b) + c
+        prop::check("aggregation linearity", 50, |g| {
+            let d = g.usize_in(1..100);
+            let a = g.vec_f32(d..d + 1, -3.0..3.0);
+            let b = g.vec_f32(d..d + 1, -3.0..3.0);
+            let c = g.f32_in(-2.0..2.0);
+            let ac: Vec<f32> = a.iter().map(|v| v + c).collect();
+            let bc: Vec<f32> = b.iter().map(|v| v + c).collect();
+            let mut m1 = vec![0.0f32; d];
+            let mut m2 = vec![0.0f32; d];
+            average_into(&[&a, &b], &mut m1);
+            average_into(&[&ac, &bc], &mut m2);
+            let m1c: Vec<f32> = m1.iter().map(|v| v + c).collect();
+            prop::assert_close(&m2, &m1c, 1e-5, "linearity")
+        });
+    }
+}

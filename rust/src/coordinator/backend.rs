@@ -1,0 +1,63 @@
+//! Gradient-backend abstraction: how a worker turns (x, step) into a loss
+//! and gradient.
+//!
+//! Two implementations:
+//! * [`crate::sim::synthetic::SyntheticBackend`] — pure-rust non-IID
+//!   least-squares (tests / comm benches, no artifacts needed);
+//! * [`crate::runtime::backend::PjrtBackend`] — the real LM through the
+//!   AOT-compiled HLO artifacts.
+//!
+//! Backends are constructed *inside* each worker thread (the PJRT client
+//! is `Rc`-based and not `Send`), so the trainer receives a
+//! [`BackendFactory`] rather than backends.
+
+use crate::error::Result;
+
+/// Held-out evaluation result.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalMetrics {
+    /// Mean held-out loss (per-token NLL for the LM backend).
+    pub loss: f64,
+    /// Perplexity `exp(sum_nll / tokens)` — the paper's §6.2 metric
+    /// (LM backend only).
+    pub ppl: Option<f64>,
+}
+
+/// Per-worker gradient computation.
+pub trait WorkerBackend {
+    /// Model dimension d.
+    fn dim(&self) -> usize;
+
+    /// Compute the local stochastic loss and gradient at `x` for global
+    /// iteration `step`, writing the gradient into `out` (len d).
+    /// Deterministic in (worker identity, step).
+    fn loss_and_grad(&mut self, x: &[f32], step: u64, out: &mut [f32]) -> Result<f32>;
+
+    /// Evaluate on the held-out set.
+    fn eval(&mut self, x: &[f32]) -> Result<EvalMetrics>;
+
+    /// Optional fused local-AdaAlter step (Alg. 4 lines 5–7 in one device
+    /// dispatch): update `x` and `acc` in place given the synchronized
+    /// denominator `b2_sync` and placeholder summand `denom_add = t'·ε²`.
+    /// Returns `Ok(None)` when unsupported — the trainer then composes
+    /// `loss_and_grad` with the rust-side update instead.
+    fn fused_local_adaalter(
+        &mut self,
+        _x: &mut [f32],
+        _b2_sync: &[f32],
+        _acc: &mut [f32],
+        _denom_add: f32,
+        _lr: f32,
+        _step: u64,
+    ) -> Result<Option<f32>> {
+        Ok(None)
+    }
+
+    /// Initial parameters (the PJRT backend loads the artifact init so all
+    /// workers and the paper's warm-start agree; synthetic returns zeros).
+    fn init_params(&self) -> Result<Vec<f32>>;
+}
+
+/// Thread-safe constructor: `factory(worker_id)` runs on the worker thread.
+pub type BackendFactory =
+    std::sync::Arc<dyn Fn(usize) -> Result<Box<dyn WorkerBackend>> + Send + Sync>;

@@ -1,0 +1,281 @@
+//! Checkpointing: durable save/restore of training state.
+//!
+//! A framework a team would deploy resumes 50-epoch runs after preemption.
+//! Format (little-endian, single file, self-validating):
+//!
+//! ```text
+//!   magic  "ADACKPT1"                    8 bytes
+//!   step   u64                           global iteration t
+//!   algo   u8 (Algorithm discriminant)   protocol family check on resume
+//!   nvec   u8                            how many f32[d] sections follow
+//!   d      u64
+//!   <nvec sections of d f32 each>        x, then optional B²/A²/velocity
+//!   crc    u32 (FNV-1a folded)           integrity of everything above
+//! ```
+//!
+//! Sections by algorithm: SGD → [x]; momentum → [x, m]; AdaGrad/AdaAlter →
+//! [x, B²]; Local AdaAlter → [x, B²_sync, A²] (a worker-consistent snapshot
+//! is taken at a synchronization boundary, where all replicas agree).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::config::Algorithm;
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"ADACKPT1";
+
+/// In-memory training snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Global iteration the snapshot was taken after.
+    pub step: u64,
+    pub algorithm: Algorithm,
+    /// State vectors, algorithm-dependent (see module docs). All length d.
+    pub vectors: Vec<Vec<f32>>,
+}
+
+fn algo_tag(a: Algorithm) -> u8 {
+    match a {
+        Algorithm::Sgd => 0,
+        Algorithm::LocalSgd => 1,
+        Algorithm::AdaGrad => 2,
+        Algorithm::AdaAlter => 3,
+        Algorithm::LocalAdaAlter => 4,
+    }
+}
+
+fn algo_from_tag(t: u8) -> Result<Algorithm> {
+    Ok(match t {
+        0 => Algorithm::Sgd,
+        1 => Algorithm::LocalSgd,
+        2 => Algorithm::AdaGrad,
+        3 => Algorithm::AdaAlter,
+        4 => Algorithm::LocalAdaAlter,
+        other => return Err(Error::Data(format!("unknown algorithm tag {other}"))),
+    })
+}
+
+/// Streaming FNV-1a over bytes (checkpoint integrity; not cryptographic).
+#[derive(Clone)]
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+
+    fn fold32(&self) -> u32 {
+        (self.0 ^ (self.0 >> 32)) as u32
+    }
+}
+
+impl Checkpoint {
+    /// Number of state vectors the format expects for `algo`.
+    pub fn expected_vectors(algo: Algorithm) -> usize {
+        match algo {
+            Algorithm::Sgd | Algorithm::LocalSgd => 1,
+            Algorithm::AdaGrad | Algorithm::AdaAlter => 2,
+            Algorithm::LocalAdaAlter => 3,
+        }
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.vectors.is_empty() {
+            return Err(Error::Data("checkpoint has no state vectors".into()));
+        }
+        let d = self.vectors[0].len();
+        if self.vectors.iter().any(|v| v.len() != d) {
+            return Err(Error::Data("checkpoint vectors have mixed lengths".into()));
+        }
+        if self.vectors.len() != Self::expected_vectors(self.algorithm) {
+            return Err(Error::Data(format!(
+                "{} expects {} vectors, checkpoint has {}",
+                self.algorithm,
+                Self::expected_vectors(self.algorithm),
+                self.vectors.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialise to a file (atomic: write tmp + rename).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.validate()?;
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            let mut crc = Fnv::new();
+            let put = |f: &mut dyn Write, crc: &mut Fnv, bytes: &[u8]| -> Result<()> {
+                crc.update(bytes);
+                f.write_all(bytes)?;
+                Ok(())
+            };
+            put(&mut f, &mut crc, MAGIC)?;
+            put(&mut f, &mut crc, &self.step.to_le_bytes())?;
+            put(&mut f, &mut crc, &[algo_tag(self.algorithm)])?;
+            put(&mut f, &mut crc, &[self.vectors.len() as u8])?;
+            let d = self.vectors[0].len() as u64;
+            put(&mut f, &mut crc, &d.to_le_bytes())?;
+            for v in &self.vectors {
+                // Bulk-cast the f32 slice; little-endian hosts only (checked
+                // implicitly by the round-trip tests).
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                };
+                put(&mut f, &mut crc, bytes)?;
+            }
+            f.write_all(&crc.fold32().to_le_bytes())?;
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load and verify a checkpoint file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
+        let mut crc = Fnv::new();
+        let take = |f: &mut dyn Read, crc: &mut Fnv, n: usize| -> Result<Vec<u8>> {
+            let mut buf = vec![0u8; n];
+            f.read_exact(&mut buf)
+                .map_err(|e| Error::Data(format!("truncated checkpoint: {e}")))?;
+            crc.update(&buf);
+            Ok(buf)
+        };
+        let magic = take(&mut f, &mut crc, 8)?;
+        if magic != MAGIC {
+            return Err(Error::Data("not an adaalter checkpoint (bad magic)".into()));
+        }
+        let step = u64::from_le_bytes(take(&mut f, &mut crc, 8)?.try_into().unwrap());
+        let algorithm = algo_from_tag(take(&mut f, &mut crc, 1)?[0])?;
+        let nvec = take(&mut f, &mut crc, 1)?[0] as usize;
+        let d = u64::from_le_bytes(take(&mut f, &mut crc, 8)?.try_into().unwrap()) as usize;
+        if nvec == 0 || nvec > 8 || d == 0 {
+            return Err(Error::Data(format!("implausible checkpoint header: nvec={nvec} d={d}")));
+        }
+        let mut vectors = Vec::with_capacity(nvec);
+        for _ in 0..nvec {
+            let bytes = take(&mut f, &mut crc, d * 4)?;
+            let mut v = Vec::with_capacity(d);
+            for c in bytes.chunks_exact(4) {
+                v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            vectors.push(v);
+        }
+        let mut tail = [0u8; 4];
+        f.read_exact(&mut tail)
+            .map_err(|e| Error::Data(format!("missing checkpoint crc: {e}")))?;
+        let want = u32::from_le_bytes(tail);
+        if want != crc.fold32() {
+            return Err(Error::Data("checkpoint crc mismatch (corrupted file)".into()));
+        }
+        let ck = Checkpoint { step, algorithm, vectors };
+        ck.validate()?;
+        Ok(ck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("adaalter_ckpt_{}_{name}", std::process::id()))
+    }
+
+    fn sample(algo: Algorithm, d: usize) -> Checkpoint {
+        let mut rng = Rng::new(9);
+        let vectors = (0..Checkpoint::expected_vectors(algo))
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        Checkpoint { step: 12345, algorithm: algo, vectors }
+    }
+
+    #[test]
+    fn round_trip_every_algorithm() {
+        for algo in [
+            Algorithm::Sgd,
+            Algorithm::LocalSgd,
+            Algorithm::AdaGrad,
+            Algorithm::AdaAlter,
+            Algorithm::LocalAdaAlter,
+        ] {
+            let path = tmp(algo.name());
+            let ck = sample(algo, 1000);
+            ck.save(&path).unwrap();
+            let back = Checkpoint::load(&path).unwrap();
+            assert_eq!(ck, back, "{algo}");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let path = tmp("corrupt");
+        sample(Algorithm::LocalAdaAlter, 256).save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let path = tmp("trunc");
+        sample(Algorithm::AdaGrad, 256).save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 100]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let path = tmp("magic");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxxxxxxxxxxxxxx").unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn vector_arity_enforced() {
+        let mut ck = sample(Algorithm::LocalAdaAlter, 64);
+        ck.vectors.pop();
+        assert!(ck.validate().is_err());
+        let mut mixed = sample(Algorithm::AdaGrad, 64);
+        mixed.vectors[1].pop();
+        assert!(mixed.validate().is_err());
+    }
+
+    #[test]
+    fn save_is_atomic_no_tmp_left() {
+        let path = tmp("atomic");
+        sample(Algorithm::Sgd, 64).save(&path).unwrap();
+        assert!(path.exists());
+        assert!(!path.with_extension("tmp").exists());
+        std::fs::remove_file(&path).ok();
+    }
+}

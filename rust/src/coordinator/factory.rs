@@ -1,0 +1,61 @@
+//! Backend-factory construction from an experiment config — the one place
+//! that knows about both compute backends.
+
+use std::sync::Arc;
+
+use crate::config::{Backend, ExperimentConfig};
+use crate::coordinator::backend::BackendFactory;
+use crate::error::Result;
+use crate::runtime::PjrtBackend;
+use crate::sim::SyntheticProblem;
+
+/// Build the per-worker backend factory named by the config.
+pub fn make_factory(cfg: &ExperimentConfig) -> Result<BackendFactory> {
+    match cfg.train.backend {
+        Backend::RustMath => {
+            let p = SyntheticProblem::new(
+                cfg.train.rust_math_dim,
+                cfg.train.workers,
+                cfg.train.seed,
+            );
+            Ok(Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>)))
+        }
+        Backend::Pjrt => {
+            let artifacts = cfg.artifacts_dir.clone();
+            let preset = cfg.train.preset.clone();
+            let workers = cfg.train.workers;
+            let data = cfg.data.clone();
+            let seed = cfg.train.seed;
+            Ok(Arc::new(move |w| {
+                Ok(Box::new(PjrtBackend::new(&artifacts, &preset, w, workers, &data, seed)?)
+                    as Box<_>)
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn rust_math_factory_builds_workers() {
+        let cfg = ExperimentConfig::default();
+        let f = make_factory(&cfg).unwrap();
+        let b0 = f(0).unwrap();
+        let b1 = f(1).unwrap();
+        assert_eq!(b0.dim(), cfg.train.rust_math_dim);
+        assert_eq!(b1.dim(), b0.dim());
+    }
+
+    #[test]
+    fn pjrt_factory_fails_cleanly_without_artifacts() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.backend = Backend::Pjrt;
+        cfg.artifacts_dir = "/nonexistent".into();
+        let f = make_factory(&cfg).unwrap();
+        let err = f(0).err().expect("should fail").to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,23 @@
+//! The Layer-3 coordinator — the paper's system contribution.
+//!
+//! * [`sync`] — the H-period synchronization scheduler (Alg. 4 lines 4/8).
+//! * [`schedule`] — warm-up learning rates (§6.2.1) and batch scaling.
+//! * [`aggregate`] — gradient / parameter / denominator averaging.
+//! * [`backend`] — the gradient-backend abstraction workers run on.
+//! * [`worker`] — worker-thread protocol and loop.
+//! * [`trainer`] — the leader: spawning, barriers, sync rounds, metrics.
+
+pub mod aggregate;
+pub mod backend;
+pub mod checkpoint;
+pub mod factory;
+pub mod schedule;
+pub mod sync;
+pub mod trainer;
+pub mod worker;
+
+pub use checkpoint::Checkpoint;
+pub use backend::{BackendFactory, EvalMetrics, WorkerBackend};
+pub use schedule::{scale_lr, ScalingRule, WarmupSchedule};
+pub use sync::SyncScheduler;
+pub use trainer::{RunResult, Trainer};

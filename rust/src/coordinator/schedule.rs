@@ -1,0 +1,107 @@
+//! Learning-rate schedule: the paper's warm-up (§6.2.1) and large-batch
+//! scaling helper (§6.2.2).
+//!
+//! Warm-up: `η_t = η · min(1, t / warm_up_steps)` — AdaAlter's denominator
+//! starts at `b₀²` (no accumulated history), so the first updates would be
+//! oversized without it. The paper uses η = 0.5, warm_up_steps = 600.
+
+/// Warm-up learning-rate schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct WarmupSchedule {
+    eta: f32,
+    warmup_steps: u64,
+}
+
+impl WarmupSchedule {
+    /// Base rate η and warm-up length (0 disables warm-up).
+    pub fn new(eta: f32, warmup_steps: u64) -> Self {
+        assert!(eta > 0.0 && eta.is_finite(), "eta must be positive");
+        WarmupSchedule { eta, warmup_steps }
+    }
+
+    /// η_t for 1-based iteration t.
+    pub fn lr(&self, t: u64) -> f32 {
+        assert!(t >= 1, "iterations are 1-based");
+        if self.warmup_steps == 0 || t >= self.warmup_steps {
+            self.eta
+        } else {
+            self.eta * (t as f32 / self.warmup_steps as f32)
+        }
+    }
+
+    /// Base rate.
+    pub fn eta(&self) -> f32 {
+        self.eta
+    }
+}
+
+/// Batch-size learning-rate scaling rule (§6.2.2 / Goyal et al. 2017).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalingRule {
+    /// η' = η · (B'/B).
+    Linear,
+    /// η' = η · sqrt(B'/B).
+    Sqrt,
+}
+
+/// Re-scale a base learning rate tuned at `base_global_batch` for a run at
+/// `new_global_batch`. The paper scales 0.2 @ 512 → [0.4, 0.8] @ 2048 and
+/// settles on 0.5 (between sqrt and linear).
+pub fn scale_lr(base_lr: f32, base_global_batch: u64, new_global_batch: u64,
+                rule: ScalingRule) -> f32 {
+    assert!(base_global_batch > 0 && new_global_batch > 0);
+    let k = new_global_batch as f32 / base_global_batch as f32;
+    match rule {
+        ScalingRule::Linear => base_lr * k,
+        ScalingRule::Sqrt => base_lr * k.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly_then_flattens() {
+        let s = WarmupSchedule::new(0.5, 600);
+        assert!((s.lr(1) - 0.5 / 600.0).abs() < 1e-9);
+        assert!((s.lr(300) - 0.25).abs() < 1e-6);
+        assert_eq!(s.lr(600), 0.5);
+        assert_eq!(s.lr(10_000), 0.5);
+    }
+
+    #[test]
+    fn warmup_monotone_nondecreasing() {
+        let s = WarmupSchedule::new(0.5, 600);
+        let mut prev = 0.0;
+        for t in 1..=700 {
+            let lr = s.lr(t);
+            assert!(lr >= prev, "t={t}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn zero_warmup_is_constant() {
+        let s = WarmupSchedule::new(0.3, 0);
+        assert_eq!(s.lr(1), 0.3);
+        assert_eq!(s.lr(999), 0.3);
+    }
+
+    #[test]
+    fn paper_scaling_example() {
+        // 4 GPUs × 128 @ 0.2 → 8 GPUs × 256: linear gives 0.8, sqrt 0.4 —
+        // the paper tunes within [0.4, 0.8].
+        let linear = scale_lr(0.2, 4 * 128, 8 * 256, ScalingRule::Linear);
+        let sqrt = scale_lr(0.2, 4 * 128, 8 * 256, ScalingRule::Sqrt);
+        assert!((linear - 0.8).abs() < 1e-6);
+        assert!((sqrt - 0.4).abs() < 1e-6);
+        assert!(sqrt <= 0.5 && 0.5 <= linear, "paper's 0.5 sits in [sqrt, linear]");
+    }
+
+    #[test]
+    #[should_panic(expected = "eta must be positive")]
+    fn rejects_bad_eta() {
+        let _ = WarmupSchedule::new(0.0, 600);
+    }
+}

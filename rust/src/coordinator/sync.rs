@@ -1,0 +1,161 @@
+//! Synchronization scheduler — decides, per global iteration, whether the
+//! cluster communicates (Alg. 4 line 8: `mod(t, H) == 0`) and tracks the
+//! local-step index `t' = mod(t−1, H) + 1` (line 4) that scales the
+//! placeholder denominator.
+//!
+//! Also accounts communication rounds/bytes so benches can report the
+//! paper's `2/H` reduction factor directly.
+
+use crate::config::SyncPeriod;
+
+/// Pure-function scheduler over 1-based global iterations `t ∈ [1, T]`.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncScheduler {
+    period: SyncPeriod,
+}
+
+impl SyncScheduler {
+    /// Scheduler for period H (or ∞ = never synchronize).
+    pub fn new(period: SyncPeriod) -> Self {
+        SyncScheduler { period }
+    }
+
+    /// The configured period.
+    pub fn period(&self) -> SyncPeriod {
+        self.period
+    }
+
+    /// Does iteration `t` (1-based) end with a synchronization?
+    pub fn is_sync_step(&self, t: u64) -> bool {
+        assert!(t >= 1, "iterations are 1-based");
+        match self.period {
+            SyncPeriod::Every(h) => t % h == 0,
+            SyncPeriod::Infinite => false,
+        }
+    }
+
+    /// Local-step index `t' = mod(t−1, H) + 1 ∈ [1, H]` (Alg. 4 line 4).
+    /// For H = ∞ this simply counts steps since start.
+    pub fn t_prime(&self, t: u64) -> u64 {
+        assert!(t >= 1, "iterations are 1-based");
+        match self.period {
+            SyncPeriod::Every(h) => (t - 1) % h + 1,
+            SyncPeriod::Infinite => t,
+        }
+    }
+
+    /// Number of synchronization rounds in iterations `1..=t`.
+    pub fn syncs_up_to(&self, t: u64) -> u64 {
+        match self.period {
+            SyncPeriod::Every(h) => t / h,
+            SyncPeriod::Infinite => 0,
+        }
+    }
+
+    /// Vectors shipped per worker per sync for the given algorithm family:
+    /// 2 when the denominator synchronizes (local AdaAlter), 1 otherwise.
+    pub fn vectors_per_sync(denominator_synced: bool) -> u64 {
+        if denominator_synced {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Average per-iteration communication relative to fully-synchronous
+    /// AdaGrad (1 vector per iteration): the paper's `2/H` (or `1/H`) claim.
+    pub fn comm_fraction(&self, denominator_synced: bool) -> f64 {
+        match self.period {
+            SyncPeriod::Every(h) => {
+                Self::vectors_per_sync(denominator_synced) as f64 / h as f64
+            }
+            SyncPeriod::Infinite => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn h4_schedule_walkthrough() {
+        let s = SyncScheduler::new(SyncPeriod::Every(4));
+        let expect: [(u64, u64, bool); 8] = [
+            (1, 1, false),
+            (2, 2, false),
+            (3, 3, false),
+            (4, 4, true),
+            (5, 1, false),
+            (6, 2, false),
+            (7, 3, false),
+            (8, 4, true),
+        ];
+        for (t, tp, sync) in expect {
+            assert_eq!(s.t_prime(t), tp, "t={t}");
+            assert_eq!(s.is_sync_step(t), sync, "t={t}");
+        }
+        assert_eq!(s.syncs_up_to(8), 2);
+        assert_eq!(s.syncs_up_to(7), 1);
+    }
+
+    #[test]
+    fn h1_syncs_every_step() {
+        let s = SyncScheduler::new(SyncPeriod::Every(1));
+        for t in 1..=10 {
+            assert!(s.is_sync_step(t));
+            assert_eq!(s.t_prime(t), 1);
+        }
+        assert_eq!(s.syncs_up_to(10), 10);
+    }
+
+    #[test]
+    fn infinite_never_syncs() {
+        let s = SyncScheduler::new(SyncPeriod::Infinite);
+        for t in 1..=100 {
+            assert!(!s.is_sync_step(t));
+            assert_eq!(s.t_prime(t), t);
+        }
+        assert_eq!(s.syncs_up_to(100), 0);
+        assert_eq!(s.comm_fraction(true), 0.0);
+    }
+
+    #[test]
+    fn comm_fraction_matches_paper() {
+        // Paper §4.3: local AdaAlter reduces communication to 2/H.
+        let s = SyncScheduler::new(SyncPeriod::Every(4));
+        assert!((s.comm_fraction(true) - 0.5).abs() < 1e-12);
+        assert!((s.comm_fraction(false) - 0.25).abs() < 1e-12);
+        let s16 = SyncScheduler::new(SyncPeriod::Every(16));
+        assert!((s16.comm_fraction(true) - 2.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn properties_hold_for_random_h() {
+        prop::check("sync scheduler invariants", 200, |g| {
+            let h = g.u64_in(1..64);
+            let t = g.u64_in(1..10_000);
+            let s = SyncScheduler::new(SyncPeriod::Every(h));
+            let tp = s.t_prime(t);
+            prop::assert_that((1..=h).contains(&tp), format!("t'={tp} outside [1,{h}]"))?;
+            // sync exactly when t' == H
+            prop::assert_that(
+                s.is_sync_step(t) == (tp == h),
+                format!("sync/t' disagree at t={t}, H={h}"),
+            )?;
+            // exactly floor(T/H) syncs in [1, T]
+            let count = (1..=t).filter(|&u| s.is_sync_step(u)).count() as u64;
+            prop::assert_that(
+                count == t / h && count == s.syncs_up_to(t),
+                format!("sync count {count} != {}", t / h),
+            )
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "1-based")]
+    fn zero_iteration_rejected() {
+        SyncScheduler::new(SyncPeriod::Every(4)).t_prime(0);
+    }
+}

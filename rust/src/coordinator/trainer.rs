@@ -1,0 +1,635 @@
+//! The leader: spawns workers, drives the global iteration loop, owns the
+//! synchronization protocol, the virtual clock and the metrics.
+//!
+//! Two protocol families (dispatched on [`Algorithm::is_local`]):
+//!
+//! * **Fully synchronous** (SGD / AdaGrad / AdaAlter): the leader owns the
+//!   model `x`. Every iteration it broadcasts `x`, gathers all worker
+//!   gradients (the §2 barrier), aggregates (Alg. 1/3 line 5), and applies
+//!   the [`crate::optim::SyncOptimizer`] update.
+//! * **Local** (local SGD / local AdaAlter): workers own their replicas and
+//!   step independently; every H-th iteration the leader gathers
+//!   `(y_{i,t}, A²_{i,t})`, averages both (Alg. 4 lines 11–12), and
+//!   broadcasts the averages back.
+//!
+//! Time: the virtual clock charges the paper-calibrated per-iteration
+//! compute/dataload cost plus the α–β sync cost on communication rounds
+//! (DESIGN.md §3 — wall-clock on this box is meaningless for the figures;
+//! real wall time is still recorded for host-throughput reporting).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::comm::NetModel;
+use crate::config::{Algorithm, ExperimentConfig, SyncPeriod};
+use crate::coordinator::aggregate::{average_into, Aggregator};
+use crate::coordinator::backend::{BackendFactory, EvalMetrics};
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::schedule::WarmupSchedule;
+use crate::coordinator::sync::SyncScheduler;
+use crate::coordinator::worker::{worker_loop, Cmd, Reply, WorkerSpec};
+use crate::error::{Error, Result};
+use crate::metrics::TrainRecorder;
+use crate::optim;
+use crate::sim::{Calibration, Charge, VirtualClock};
+
+/// Result of a training run.
+pub struct RunResult {
+    /// Final (synchronized / averaged) parameters.
+    pub final_x: Vec<f32>,
+    /// Metrics (loss/eval curves, comm accounting, wall throughput).
+    pub recorder: TrainRecorder,
+    /// Virtual-time accounting.
+    pub clock: VirtualClock,
+    /// Final held-out evaluation.
+    pub final_eval: Option<EvalMetrics>,
+}
+
+/// Handle to one spawned worker.
+struct WorkerHandle {
+    tx: Sender<Cmd>,
+    join: std::thread::JoinHandle<()>,
+}
+
+/// The leader/trainer.
+pub struct Trainer {
+    cfg: ExperimentConfig,
+    factory: BackendFactory,
+    /// Use the backend's fused local-step path when available.
+    pub allow_fused: bool,
+    /// Override the virtual-time calibration (default: paper V100).
+    pub calibration: Calibration,
+    /// Resume from a checkpoint (algorithm + dimensions must match).
+    pub resume: Option<Checkpoint>,
+}
+
+impl Trainer {
+    /// Build a trainer for `cfg`; `factory(worker)` constructs each
+    /// worker's gradient backend on its own thread.
+    pub fn new(cfg: ExperimentConfig, factory: BackendFactory) -> Self {
+        Trainer {
+            cfg,
+            factory,
+            allow_fused: true,
+            calibration: Calibration::paper_v100(),
+            resume: None,
+        }
+    }
+
+    /// Run the full training loop.
+    pub fn run(&self) -> Result<RunResult> {
+        let cfg = &self.cfg;
+        let n = cfg.train.workers;
+        let algo = cfg.optim.algorithm;
+        let scheduler = SyncScheduler::new(if algo.is_local() {
+            cfg.train.sync_period
+        } else {
+            SyncPeriod::Every(1)
+        });
+        let warmup = WarmupSchedule::new(cfg.optim.eta, cfg.optim.warmup_steps);
+        let net = NetModel::from_config(&cfg.net);
+
+        // --- Spawn workers -------------------------------------------------
+        // One probe backend determines d and initial params; workers build
+        // their own backends thread-locally (PJRT clients are not Send).
+        let probe = (self.factory)(0)?;
+        let d = probe.dim();
+        let mut start_step = 0u64;
+        let mut resume_opt_state: Vec<Vec<f32>> = Vec::new();
+        let mut resume_acc: Option<Arc<Vec<f32>>> = None;
+        let init: Arc<Vec<f32>> = if let Some(ck) = &self.resume {
+            ck.validate()?;
+            if ck.algorithm != algo {
+                return Err(Error::Protocol(format!(
+                    "checkpoint is for {}, config asks for {algo}",
+                    ck.algorithm
+                )));
+            }
+            if ck.vectors[0].len() != d {
+                return Err(Error::Protocol(format!(
+                    "checkpoint d={} but backend d={d}",
+                    ck.vectors[0].len()
+                )));
+            }
+            start_step = ck.step;
+            match algo {
+                Algorithm::LocalAdaAlter => {
+                    // vectors: [x, b2_sync, acc] — at a sync boundary
+                    // b2_sync == acc == the averaged A²; install via an
+                    // InstallState once workers are up.
+                    resume_acc = Some(Arc::new(ck.vectors[2].clone()));
+                }
+                Algorithm::LocalSgd => {}
+                _ => resume_opt_state = ck.vectors[1..].to_vec(),
+            }
+            Arc::new(ck.vectors[0].clone())
+        } else {
+            Arc::new(probe.init_params()?)
+        };
+        drop(probe);
+        if init.len() != d {
+            return Err(Error::Protocol(format!("init len {} != d {d}", init.len())));
+        }
+
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let mut workers: Vec<WorkerHandle> = Vec::with_capacity(n);
+        for w in 0..n {
+            let (cmd_tx, cmd_rx) = channel::<Cmd>();
+            let spec = WorkerSpec {
+                worker: w,
+                algorithm: algo,
+                epsilon: cfg.optim.epsilon,
+                b0: cfg.optim.b0,
+                init: Arc::clone(&init),
+                allow_fused: self.allow_fused,
+            };
+            let factory = Arc::clone(&self.factory);
+            let rtx = reply_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("adaalter-worker-{w}"))
+                .spawn(move || worker_loop(spec, factory, cmd_rx, rtx))
+                .map_err(Error::Io)?;
+            workers.push(WorkerHandle { tx: cmd_tx, join });
+        }
+        drop(reply_tx);
+
+        let mut run = LeaderLoop {
+            cfg,
+            d,
+            scheduler,
+            warmup,
+            net,
+            calib: &self.calibration,
+            workers,
+            reply_rx,
+            agg: Aggregator::new(d),
+            recorder: TrainRecorder::new(cfg.train.steps_per_epoch),
+            clock: VirtualClock::new(),
+            x: init.as_ref().clone(),
+            opt: if algo.is_local() {
+                None
+            } else {
+                let mut opt = optim::build_sync(&cfg.optim, d);
+                if !resume_opt_state.is_empty() {
+                    opt.restore_state(&resume_opt_state)?;
+                }
+                Some(opt)
+            },
+            start_step,
+            resume_acc,
+        };
+        let out = run.drive();
+        // Always attempt shutdown, even on error.
+        run.shutdown();
+        out.map(|(final_x, final_eval)| RunResult {
+            final_x,
+            recorder: run.recorder,
+            clock: run.clock,
+            final_eval,
+        })
+    }
+}
+
+/// Internal driver state (separated so shutdown can run after errors).
+struct LeaderLoop<'a> {
+    cfg: &'a ExperimentConfig,
+    d: usize,
+    scheduler: SyncScheduler,
+    warmup: WarmupSchedule,
+    net: NetModel,
+    calib: &'a Calibration,
+    workers: Vec<WorkerHandle>,
+    reply_rx: Receiver<Reply>,
+    agg: Aggregator,
+    recorder: TrainRecorder,
+    clock: VirtualClock,
+    /// Leader-owned model (sync algorithms); scratch for local averaging.
+    x: Vec<f32>,
+    opt: Option<Box<dyn optim::SyncOptimizer>>,
+    /// First iteration is start_step + 1 (resume support).
+    start_step: u64,
+    /// Local-AdaAlter accumulator to install on resume.
+    resume_acc: Option<Arc<Vec<f32>>>,
+}
+
+impl<'a> LeaderLoop<'a> {
+    fn n(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn broadcast(&self, make: impl Fn(usize) -> Cmd) -> Result<()> {
+        for (w, h) in self.workers.iter().enumerate() {
+            h.tx.send(make(w)).map_err(|_| {
+                Error::Protocol(format!("worker {w} channel closed"))
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Gather exactly one reply per worker; `sel` extracts/validates.
+    fn gather<T>(&self, mut sel: impl FnMut(Reply) -> Result<(usize, T)>) -> Result<Vec<T>>
+    where
+        T: Default,
+    {
+        let n = self.n();
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut got = 0;
+        while got < n {
+            let reply = self
+                .reply_rx
+                .recv()
+                .map_err(|_| Error::Protocol("all workers disconnected".into()))?;
+            if let Reply::Err { worker, msg } = reply {
+                return Err(Error::Protocol(format!("worker {worker}: {msg}")));
+            }
+            let (w, v) = sel(reply)?;
+            if out[w].replace(v).is_some() {
+                return Err(Error::Protocol(format!("duplicate reply from worker {w}")));
+            }
+            got += 1;
+        }
+        Ok(out.into_iter().map(|v| v.unwrap()).collect())
+    }
+
+    fn wait_ready(&self) -> Result<()> {
+        self.gather(|r| match r {
+            Reply::Ready { worker } => Ok((worker, ())),
+            _ => Err(Error::Protocol("expected Ready".into())),
+        })
+        .map(|_| ())
+    }
+
+    /// Charge one iteration's compute+dataload to the virtual clock.
+    fn charge_iteration(&mut self) {
+        let c = self.calib;
+        let mut compute = c.t_compute_s;
+        if matches!(
+            self.cfg.optim.algorithm,
+            Algorithm::AdaAlter | Algorithm::LocalAdaAlter
+        ) {
+            compute *= 1.0 + c.adaalter_compute_overhead;
+        }
+        self.clock.advance(Charge::Compute, compute);
+        let extra = (c.dataload_s(self.n()) - compute).max(0.0);
+        if extra > 0.0 {
+            self.clock.advance(Charge::DataLoad, extra);
+        }
+    }
+
+    /// Charge and account one sync round of `vectors` vectors.
+    /// `periodic` selects the bulk-sync overlap discount (local algorithms)
+    /// vs the per-iteration gradient-sync discount — see sim::calib.
+    fn charge_sync(&mut self, vectors: u64, periodic: bool) {
+        // Virtual time is modeled at the PAPER's scale (0.83B-param Big
+        // LSTM payload) so PPL-vs-time curves reproduce Fig. 3a's gaps even
+        // though our substitute model is small; traffic accounting uses the
+        // real bytes this run actually shipped.
+        let model_bytes = self.calib.vector_bytes();
+        let overlap = if periodic { self.calib.periodic_overlap } else { self.calib.overlap };
+        let t = (1.0 - overlap) * self.net.sync_time(self.n(), model_bytes, vectors);
+        self.clock.advance(Charge::Communication, t);
+        let real_bytes = 4 * self.d as u64;
+        self.recorder
+            .sync(self.net.sync_traffic_bytes(self.n(), real_bytes, vectors));
+    }
+
+    /// The main loop; returns (final params, final eval).
+    fn drive(&mut self) -> Result<(Vec<f32>, Option<EvalMetrics>)> {
+        self.wait_ready()?;
+        let algo = self.cfg.optim.algorithm;
+        // Resuming a local run: install the checkpointed replica state.
+        if self.start_step > 0 && algo.is_local() {
+            let x = Arc::new(self.x.clone());
+            let acc = self.resume_acc.clone();
+            self.broadcast(|_| Cmd::InstallState { x: Arc::clone(&x), acc: acc.clone() })?;
+            self.wait_ready()?;
+        }
+        let steps = self.cfg.train.steps;
+        let log_every = self.cfg.train.log_every.max(1);
+        let eval_every = self.cfg.train.eval_every;
+        let samples = 0u64; // synthetic backend has no notion of samples; PJRT sets batch below
+        let _ = samples;
+
+        for t in (self.start_step + 1)..=steps {
+            let lr = self.warmup.lr(t);
+            let mean_loss = if algo.is_local() {
+                self.local_iteration(t, lr)?
+            } else {
+                self.sync_iteration(t, lr)?
+            };
+            self.charge_iteration();
+            let log = t % log_every == 0 || t == steps || t == 1;
+            self.recorder
+                .step(t, mean_loss, lr, self.clock.now_s(), self.n() as u64, log);
+
+            if eval_every > 0 && (t % eval_every == 0 || t == steps) {
+                let m = self.evaluate(t)?;
+                self.recorder
+                    .eval(t, m.loss, m.ppl, self.clock.now_s());
+            }
+
+            let ck_every = self.cfg.train.checkpoint_every;
+            if ck_every > 0 && t % ck_every == 0 {
+                self.save_checkpoint(t)?;
+            }
+        }
+
+        // Final consolidated model + eval.
+        let final_x = self.consolidated_x()?;
+        let final_eval = Some(self.eval_at(&final_x)?);
+        Ok((final_x, final_eval))
+    }
+
+    /// One fully-synchronous iteration: broadcast x, gather grads, update.
+    fn sync_iteration(&mut self, t: u64, lr: f32) -> Result<f64> {
+        let x_arc = Arc::new(self.x.clone());
+        self.broadcast(|_| Cmd::SyncStep { t, x: Arc::clone(&x_arc) })?;
+        let grads = self.gather(|r| match r {
+            Reply::Grad { worker, loss, grad } => Ok((worker, (loss, grad))),
+            _ => Err(Error::Protocol("expected Grad".into())),
+        })?;
+        let mean_loss =
+            grads.iter().map(|(l, _)| *l as f64).sum::<f64>() / grads.len() as f64;
+        let grad_refs: Vec<&[f32]> = grads.iter().map(|(_, g)| g.as_slice()).collect();
+
+        let opt = self.opt.as_mut().expect("sync iteration without optimizer");
+        match opt.algorithm() {
+            Algorithm::AdaGrad => {
+                // Alg. 1: accumulate the square of the AVERAGED gradient.
+                self.agg.mean_grads(&grad_refs);
+                self.agg.square_avg_grad();
+            }
+            _ => {
+                // Alg. 3 (and momentum variance bookkeeping): average both
+                // the gradients and their squares in one pass.
+                self.agg.mean_grads_and_squares(&grad_refs);
+            }
+        }
+        opt.step(&mut self.x, &self.agg.avg_g, &self.agg.avg_gsq, lr);
+        // Gradient push/pull every iteration: 1 vector (the PS server
+        // computes the squared average from the pushed gradients for free).
+        self.charge_sync(1, false);
+        Ok(mean_loss)
+    }
+
+    /// One local iteration; runs the sync round when the scheduler says so.
+    fn local_iteration(&mut self, t: u64, lr: f32) -> Result<f64> {
+        self.broadcast(|_| Cmd::LocalStep { t, lr })?;
+        let losses = self.gather(|r| match r {
+            Reply::StepDone { worker, loss } => Ok((worker, loss)),
+            _ => Err(Error::Protocol("expected StepDone".into())),
+        })?;
+        let mean_loss = losses.iter().map(|&l| l as f64).sum::<f64>() / losses.len() as f64;
+
+        if self.scheduler.is_sync_step(t) {
+            self.sync_round()?;
+        }
+        Ok(mean_loss)
+    }
+
+    /// Alg. 4 lines 11–12: gather (y, A²), average, broadcast back.
+    fn sync_round(&mut self) -> Result<()> {
+        let wants_acc = self.cfg.optim.algorithm.syncs_denominator();
+        self.broadcast(|_| Cmd::CollectState)?;
+        let states = self.gather(|r| match r {
+            Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
+            _ => Err(Error::Protocol("expected State".into())),
+        })?;
+
+        let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
+        average_into(&xs, &mut self.x);
+        let avg_x = Arc::new(self.x.clone());
+
+        let avg_acc = if wants_acc {
+            let accs: Vec<&[f32]> = states
+                .iter()
+                .map(|(_, a)| {
+                    a.as_deref()
+                        .ok_or_else(|| Error::Protocol("worker state missing accumulator".into()))
+                })
+                .collect::<Result<_>>()?;
+            let mut acc = vec![0.0f32; self.d];
+            average_into(&accs, &mut acc);
+            Some(Arc::new(acc))
+        } else {
+            None
+        };
+
+        self.broadcast(|_| Cmd::InstallState {
+            x: Arc::clone(&avg_x),
+            acc: avg_acc.clone(),
+        })?;
+        self.wait_ready()?;
+        self.charge_sync(if wants_acc { 2 } else { 1 }, true);
+        Ok(())
+    }
+
+    /// Checkpoint file path from the config.
+    fn checkpoint_path(&self) -> String {
+        if self.cfg.train.checkpoint_path.is_empty() {
+            format!("{}/checkpoint.bin", self.cfg.out_dir)
+        } else {
+            self.cfg.train.checkpoint_path.clone()
+        }
+    }
+
+    /// Snapshot training state at iteration `t` (for local algorithms the
+    /// config validation guarantees `t` is a sync boundary, so replicas
+    /// agree and worker 0's state is THE state).
+    fn save_checkpoint(&mut self, t: u64) -> Result<()> {
+        let algo = self.cfg.optim.algorithm;
+        let vectors = if algo.is_local() {
+            self.broadcast(|_| Cmd::CollectState)?;
+            let states = self.gather(|r| match r {
+                Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
+                _ => Err(Error::Protocol("expected State".into())),
+            })?;
+            let (x0, acc0) = &states[0];
+            match algo {
+                Algorithm::LocalAdaAlter => {
+                    let acc = acc0
+                        .clone()
+                        .ok_or_else(|| Error::Protocol("missing accumulator".into()))?;
+                    vec![x0.clone(), acc.clone(), acc]
+                }
+                _ => vec![x0.clone()],
+            }
+        } else {
+            let mut v = vec![self.x.clone()];
+            v.extend(self.opt.as_ref().expect("sync opt").state_vectors());
+            v
+        };
+        let ck = Checkpoint { step: t, algorithm: algo, vectors };
+        ck.save(self.checkpoint_path())
+    }
+
+    /// Current consolidated model: leader's x for sync algorithms; the
+    /// across-worker average x̄_t (the Theorem 2 sequence) for local ones.
+    fn consolidated_x(&mut self) -> Result<Vec<f32>> {
+        if !self.cfg.optim.algorithm.is_local() {
+            return Ok(self.x.clone());
+        }
+        self.broadcast(|_| Cmd::CollectState)?;
+        let states = self.gather(|r| match r {
+            Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
+            _ => Err(Error::Protocol("expected State".into())),
+        })?;
+        let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
+        let mut out = vec![0.0f32; self.d];
+        average_into(&xs, &mut out);
+        Ok(out)
+    }
+
+    /// Mid-run evaluation at the consolidated model (on worker 0).
+    fn evaluate(&mut self, _t: u64) -> Result<EvalMetrics> {
+        let x = self.consolidated_x()?;
+        self.eval_at(&x)
+    }
+
+    fn eval_at(&mut self, x: &[f32]) -> Result<EvalMetrics> {
+        let x = Arc::new(x.to_vec());
+        self.workers[0]
+            .tx
+            .send(Cmd::Eval { x: Some(x) })
+            .map_err(|_| Error::Protocol("worker 0 channel closed".into()))?;
+        loop {
+            match self
+                .reply_rx
+                .recv()
+                .map_err(|_| Error::Protocol("workers disconnected during eval".into()))?
+            {
+                Reply::Eval { metrics, .. } => return Ok(metrics),
+                Reply::Err { worker, msg } => {
+                    return Err(Error::Protocol(format!("worker {worker}: {msg}")))
+                }
+                _ => return Err(Error::Protocol("unexpected reply during eval".into())),
+            }
+        }
+    }
+
+    fn shutdown(&mut self) {
+        for h in &self.workers {
+            let _ = h.tx.send(Cmd::Stop);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+    use crate::sim::SyntheticProblem;
+
+    fn config(algo: Algorithm, h: SyncPeriod, steps: u64) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.train.workers = 4;
+        c.train.steps = steps;
+        c.train.sync_period = if algo.is_local() { h } else { SyncPeriod::Every(1) };
+        c.train.backend = Backend::RustMath;
+        c.train.rust_math_dim = 64;
+        c.optim.algorithm = algo;
+        c.optim.warmup_steps = 10;
+        c.optim.eta = 0.5;
+        c
+    }
+
+    fn synthetic_factory(cfg: &ExperimentConfig) -> BackendFactory {
+        let p = SyntheticProblem::new(cfg.train.rust_math_dim, cfg.train.workers, cfg.train.seed);
+        Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>))
+    }
+
+    fn run(algo: Algorithm, h: SyncPeriod, steps: u64) -> RunResult {
+        let mut cfg = config(algo, h, steps);
+        if matches!(algo, Algorithm::Sgd | Algorithm::LocalSgd) {
+            // plain SGD needs lr < 2/L = 0.2 on the synthetic problem
+            cfg.optim.eta = 0.1;
+        }
+        let f = synthetic_factory(&cfg);
+        Trainer::new(cfg, f).run().unwrap()
+    }
+
+    #[test]
+    fn all_algorithms_converge_to_the_noniid_optimum() {
+        // The non-IID problem has an irreducible global loss F(x*) > 0
+        // (workers' centres disagree); convergence = small SUBoptimality.
+        let cfg0 = config(Algorithm::AdaGrad, SyncPeriod::Every(1), 1);
+        let p = SyntheticProblem::new(cfg0.train.rust_math_dim, cfg0.train.workers, cfg0.train.seed);
+        use crate::coordinator::backend::WorkerBackend as _;
+        let init_loss = p.global_loss(&p.backend(0).init_params().unwrap());
+        let opt_loss = p.global_loss(&p.optimum());
+        assert!(init_loss > opt_loss + 100.0, "problem too easy");
+
+        for algo in [
+            Algorithm::Sgd,
+            Algorithm::AdaGrad,
+            Algorithm::AdaAlter,
+            Algorithm::LocalSgd,
+            Algorithm::LocalAdaAlter,
+        ] {
+            let r = run(algo, SyncPeriod::Every(4), 400);
+            let subopt = r.final_eval.unwrap().loss - opt_loss;
+            assert!(r.final_x.iter().all(|v| v.is_finite()), "{algo}: non-finite params");
+            assert!(subopt < 1.0, "{algo}: suboptimality {subopt} (opt {opt_loss})");
+        }
+    }
+
+    #[test]
+    fn local_adaalter_h1_equals_sync_adaalter() {
+        // THE equivalence anchor (paper §4.3): with H = 1, Algorithm 4
+        // degenerates to Algorithm 3 exactly (up to f32 associativity).
+        let a = run(Algorithm::LocalAdaAlter, SyncPeriod::Every(1), 40);
+        let b = run(Algorithm::AdaAlter, SyncPeriod::Every(1), 40);
+        let max = crate::util::math::max_abs_diff(&a.final_x, &b.final_x);
+        assert!(max < 5e-4, "H=1 local vs sync AdaAlter diverged: {max}");
+    }
+
+    #[test]
+    fn sync_counts_match_scheduler() {
+        let r = run(Algorithm::LocalAdaAlter, SyncPeriod::Every(5), 63);
+        let (syncs, bytes) = r.recorder.comm();
+        assert_eq!(syncs, 63 / 5);
+        assert!(bytes > 0);
+        let r_inf = run(Algorithm::LocalAdaAlter, SyncPeriod::Infinite, 63);
+        assert_eq!(r_inf.recorder.comm(), (0, 0));
+    }
+
+    #[test]
+    fn fully_sync_communicates_every_step() {
+        let r = run(Algorithm::AdaGrad, SyncPeriod::Every(1), 25);
+        assert_eq!(r.recorder.comm().0, 25);
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let a = run(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 60);
+        let b = run(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 60);
+        assert_eq!(a.final_x, b.final_x, "training is not deterministic");
+        assert_eq!(
+            a.final_eval.unwrap().loss.to_bits(),
+            b.final_eval.unwrap().loss.to_bits()
+        );
+    }
+
+    #[test]
+    fn virtual_clock_charges_components() {
+        let r = run(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 40);
+        assert!(r.clock.total(Charge::Compute) > 0.0);
+        assert!(r.clock.total(Charge::Communication) > 0.0);
+        // 4 workers: dataloader not binding in the paper calibration.
+        assert_eq!(r.clock.total(Charge::DataLoad), 0.0);
+        // comm < compute for H=4 (the whole point of the paper)
+        assert!(r.clock.total(Charge::Communication) < r.clock.total(Charge::Compute));
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 50);
+        cfg.train.workers = 1;
+        let f = synthetic_factory(&cfg);
+        let r = Trainer::new(cfg, f).run().unwrap();
+        assert!(r.final_eval.unwrap().loss.is_finite());
+    }
+}

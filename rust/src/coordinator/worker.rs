@@ -1,0 +1,234 @@
+//! Worker thread: owns a gradient backend (and, for local algorithms, the
+//! local replica + AdaAlter accumulator) and executes leader commands.
+//!
+//! The protocol is a strict request/reply lockstep per iteration — the
+//! synchronous-training barrier of the paper (§2: "synchronous training …
+//! blocks the global update until all the workers respond"). Determinism:
+//! every gradient is keyed by `(worker, step)`, so thread scheduling cannot
+//! change results.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::config::Algorithm;
+use crate::coordinator::backend::{BackendFactory, EvalMetrics};
+use crate::optim::{LocalAdaAlterWorker, Sgd};
+
+/// Leader → worker commands.
+pub enum Cmd {
+    /// Fully-synchronous step: compute the gradient at the broadcast `x`
+    /// and return it (Alg. 1/3 line 4).
+    SyncStep { t: u64, x: Arc<Vec<f32>> },
+    /// Local step (Alg. 2 line 5 / Alg. 4 lines 5–7) on the local replica.
+    LocalStep { t: u64, lr: f32 },
+    /// Send the local replica (and accumulator) for averaging (Alg. 4
+    /// lines 11–12 push).
+    CollectState,
+    /// Install the averaged state (pull side of the sync round).
+    InstallState { x: Arc<Vec<f32>>, acc: Option<Arc<Vec<f32>>> },
+    /// Evaluate on the held-out set: at `x` if given, else at the local
+    /// replica.
+    Eval { x: Option<Arc<Vec<f32>>> },
+    /// Shut down.
+    Stop,
+}
+
+/// Worker → leader replies.
+pub enum Reply {
+    /// Gradient for a `SyncStep` (loss is the local mini-batch loss).
+    Grad { worker: usize, loss: f32, grad: Vec<f32> },
+    /// A `LocalStep` finished.
+    StepDone { worker: usize, loss: f32 },
+    /// Local state snapshot for averaging.
+    State { worker: usize, x: Vec<f32>, acc: Option<Vec<f32>> },
+    /// Evaluation result.
+    Eval { worker: usize, metrics: EvalMetrics },
+    /// Ready after start-up / state install.
+    Ready { worker: usize },
+    /// Fatal worker error.
+    Err { worker: usize, msg: String },
+}
+
+/// Everything a worker thread needs at spawn time.
+pub struct WorkerSpec {
+    pub worker: usize,
+    pub algorithm: Algorithm,
+    /// ε for local AdaAlter.
+    pub epsilon: f32,
+    /// b₀ for local AdaAlter.
+    pub b0: f32,
+    /// Initial parameters (identical across workers, Alg. 2/4 line 1).
+    pub init: Arc<Vec<f32>>,
+    /// Use the backend's fused local-step path when available.
+    pub allow_fused: bool,
+}
+
+/// Local-algorithm replica state.
+enum LocalState {
+    None,
+    Sgd { x: Vec<f32> },
+    AdaAlter(LocalAdaAlterWorker),
+}
+
+/// The worker thread body. Runs until `Stop` (or channel close / error).
+pub fn worker_loop(
+    spec: WorkerSpec,
+    factory: BackendFactory,
+    rx: Receiver<Cmd>,
+    tx: Sender<Reply>,
+) {
+    let worker = spec.worker;
+    let fail = |tx: &Sender<Reply>, msg: String| {
+        let _ = tx.send(Reply::Err { worker, msg });
+    };
+
+    let mut backend = match factory(worker) {
+        Ok(b) => b,
+        Err(e) => return fail(&tx, format!("backend init: {e}")),
+    };
+    let d = backend.dim();
+    if spec.init.len() != d {
+        return fail(&tx, format!("init len {} != backend dim {d}", spec.init.len()));
+    }
+
+    let mut local = match spec.algorithm {
+        Algorithm::LocalSgd => LocalState::Sgd { x: spec.init.as_ref().clone() },
+        Algorithm::LocalAdaAlter => LocalState::AdaAlter(LocalAdaAlterWorker::new(
+            spec.init.as_ref().clone(),
+            spec.b0,
+            spec.epsilon,
+        )),
+        _ => LocalState::None,
+    };
+    let mut grad_buf = vec![0.0f32; d];
+    let eps2 = spec.epsilon * spec.epsilon;
+
+    if tx.send(Reply::Ready { worker }).is_err() {
+        return;
+    }
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::SyncStep { t, x } => {
+                match backend.loss_and_grad(&x, t, &mut grad_buf) {
+                    Ok(loss) => {
+                        let _ = tx.send(Reply::Grad { worker, loss, grad: grad_buf.clone() });
+                    }
+                    Err(e) => return fail(&tx, format!("grad at t={t}: {e}")),
+                }
+            }
+            Cmd::LocalStep { t, lr } => {
+                let loss = match &mut local {
+                    LocalState::Sgd { x } => match backend.loss_and_grad(x, t, &mut grad_buf) {
+                        Ok(loss) => {
+                            Sgd::apply(x, &grad_buf, lr);
+                            loss
+                        }
+                        Err(e) => return fail(&tx, format!("grad at t={t}: {e}")),
+                    },
+                    LocalState::AdaAlter(w) => {
+                        // Try the fused device path first (Alg. 4 lines 5–7
+                        // in one dispatch); fall back to grad + rust update.
+                        let denom_add = (w.t_prime() + 1) as f32 * eps2;
+                        let fused = if spec.allow_fused {
+                            backend.fused_local_adaalter_split(w, denom_add, lr, t)
+                        } else {
+                            Ok(None)
+                        };
+                        match fused {
+                            Ok(Some(loss)) => loss,
+                            Ok(None) => match backend.loss_and_grad(w.x(), t, &mut grad_buf) {
+                                Ok(loss) => {
+                                    w.local_step(&grad_buf, lr);
+                                    loss
+                                }
+                                Err(e) => return fail(&tx, format!("grad at t={t}: {e}")),
+                            },
+                            Err(e) => return fail(&tx, format!("fused step at t={t}: {e}")),
+                        }
+                    }
+                    LocalState::None => {
+                        return fail(&tx, "LocalStep sent to a sync-algorithm worker".into())
+                    }
+                };
+                let _ = tx.send(Reply::StepDone { worker, loss });
+            }
+            Cmd::CollectState => match &local {
+                LocalState::Sgd { x } => {
+                    let _ = tx.send(Reply::State { worker, x: x.clone(), acc: None });
+                }
+                LocalState::AdaAlter(w) => {
+                    let _ = tx.send(Reply::State {
+                        worker,
+                        x: w.x().to_vec(),
+                        acc: Some(w.acc().to_vec()),
+                    });
+                }
+                LocalState::None => {
+                    return fail(&tx, "CollectState sent to a sync-algorithm worker".into())
+                }
+            },
+            Cmd::InstallState { x, acc } => {
+                match &mut local {
+                    LocalState::Sgd { x: lx } => lx.copy_from_slice(&x),
+                    LocalState::AdaAlter(w) => {
+                        let Some(acc) = acc.as_deref() else {
+                            return fail(&tx, "InstallState without accumulator".into());
+                        };
+                        w.apply_sync(&x, acc);
+                    }
+                    LocalState::None => {
+                        return fail(&tx, "InstallState sent to a sync-algorithm worker".into())
+                    }
+                }
+                let _ = tx.send(Reply::Ready { worker });
+            }
+            Cmd::Eval { x } => {
+                let point = match (&x, &local) {
+                    (Some(x), _) => backend.eval(x),
+                    (None, LocalState::Sgd { x }) => backend.eval(x),
+                    (None, LocalState::AdaAlter(w)) => backend.eval(w.x()),
+                    (None, LocalState::None) => {
+                        return fail(&tx, "Eval{None} on a sync-algorithm worker".into())
+                    }
+                };
+                match point {
+                    Ok(metrics) => {
+                        let _ = tx.send(Reply::Eval { worker, metrics });
+                    }
+                    Err(e) => return fail(&tx, format!("eval: {e}")),
+                }
+            }
+            Cmd::Stop => break,
+        }
+    }
+}
+
+/// Extension: run the backend's fused path against a [`LocalAdaAlterWorker`]
+/// whose x/acc it mutates in place.
+trait FusedSplit {
+    fn fused_local_adaalter_split(
+        &mut self,
+        w: &mut LocalAdaAlterWorker,
+        denom_add: f32,
+        lr: f32,
+        step: u64,
+    ) -> crate::error::Result<Option<f32>>;
+}
+
+impl FusedSplit for Box<dyn crate::coordinator::backend::WorkerBackend> {
+    fn fused_local_adaalter_split(
+        &mut self,
+        w: &mut LocalAdaAlterWorker,
+        denom_add: f32,
+        lr: f32,
+        step: u64,
+    ) -> crate::error::Result<Option<f32>> {
+        let (x, b2, acc) = w.split_mut();
+        let r = self.fused_local_adaalter(x, b2, acc, denom_add, lr, step)?;
+        if r.is_some() {
+            w.note_external_step();
+        }
+        Ok(r)
+    }
+}

@@ -1,0 +1,130 @@
+//! Batch assembly: token panels for the PJRT training/eval artifacts.
+//!
+//! A training batch is an `i32[batch, seq+1]` panel (inputs `[:, :-1]`,
+//! targets `[:, 1:]` — the split happens inside the lowered graph). The
+//! loader is stateless: `(worker, step)` fully determines a batch, which is
+//! what makes threaded training runs bit-reproducible and lets tests replay
+//! any worker's stream.
+
+use crate::config::DataConfig;
+
+use super::corpus::SyntheticCorpus;
+
+/// Stateless, deterministic batch loader over a [`SyntheticCorpus`].
+pub struct BatchLoader {
+    corpus: SyntheticCorpus,
+    batch: usize,
+    eval_batch: usize,
+    seq: usize,
+}
+
+impl BatchLoader {
+    /// Loader for `workers` shards of batches `[batch, seq+1]`.
+    pub fn new(
+        vocab: usize,
+        workers: usize,
+        batch: usize,
+        eval_batch: usize,
+        seq: usize,
+        cfg: &DataConfig,
+        seed: u64,
+    ) -> Self {
+        assert!(batch >= 1 && seq >= 2);
+        BatchLoader {
+            corpus: SyntheticCorpus::new(vocab, workers, cfg, seed),
+            batch,
+            eval_batch,
+            seq,
+        }
+    }
+
+    /// Tokens per training batch row (seq + 1).
+    pub fn row_len(&self) -> usize {
+        self.seq + 1
+    }
+
+    /// Flattened `[batch, seq+1]` training panel for `(worker, step)`.
+    pub fn train_batch(&self, worker: usize, step: u64) -> Vec<i32> {
+        let row = self.row_len();
+        let mut tokens = vec![0u32; self.batch * row];
+        // One contiguous stream per (worker, step), chunked into rows: rows
+        // of a batch are consecutive windows of the same stream, which
+        // preserves the Markov structure within each row.
+        self.corpus.fill_stream(worker, step, &mut tokens);
+        tokens.into_iter().map(|t| t as i32).collect()
+    }
+
+    /// Flattened `[eval_batch, seq+1]` held-out panel for eval batch `k`.
+    pub fn eval_batch(&self, k: u64) -> Vec<i32> {
+        let row = self.row_len();
+        let mut tokens = vec![0u32; self.eval_batch * row];
+        self.corpus.fill_eval_stream(k, &mut tokens);
+        tokens.into_iter().map(|t| t as i32).collect()
+    }
+
+    /// Training batch shape.
+    pub fn train_shape(&self) -> [usize; 2] {
+        [self.batch, self.row_len()]
+    }
+
+    /// Eval batch shape.
+    pub fn eval_shape(&self) -> [usize; 2] {
+        [self.eval_batch, self.row_len()]
+    }
+
+    /// Samples (rows) per training batch.
+    pub fn samples_per_batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Underlying corpus (diagnostics).
+    pub fn corpus(&self) -> &SyntheticCorpus {
+        &self.corpus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loader() -> BatchLoader {
+        BatchLoader::new(256, 4, 3, 5, 16, &DataConfig::default(), 11)
+    }
+
+    #[test]
+    fn shapes_and_determinism() {
+        let l = loader();
+        assert_eq!(l.train_shape(), [3, 17]);
+        assert_eq!(l.eval_shape(), [5, 17]);
+        let a = l.train_batch(1, 7);
+        assert_eq!(a.len(), 3 * 17);
+        assert_eq!(a, l.train_batch(1, 7));
+        assert_ne!(a, l.train_batch(1, 8));
+        assert_ne!(a, l.train_batch(2, 7));
+        let e = l.eval_batch(0);
+        assert_eq!(e.len(), 5 * 17);
+        assert_eq!(e, l.eval_batch(0));
+        assert_ne!(e, l.eval_batch(1));
+    }
+
+    #[test]
+    fn tokens_are_valid_ids() {
+        let l = loader();
+        for w in 0..4 {
+            for s in [0u64, 5, 99] {
+                assert!(l.train_batch(w, s).iter().all(|&t| (0..256).contains(&t)));
+            }
+        }
+        assert!(l.eval_batch(3).iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn eval_differs_from_train_streams() {
+        let l = loader();
+        let e: Vec<i32> = l.eval_batch(0)[..17].to_vec();
+        for w in 0..4 {
+            let t: Vec<i32> = l.train_batch(w, 0)[..17].to_vec();
+            assert_ne!(e, t, "worker {w} train stream equals eval stream");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Data pipeline: synthetic Zipf+Markov corpus (the 1B-word stand-in),
+//! deterministic non-IID sharded batch loading.
+
+pub mod corpus;
+pub mod loader;
+
+pub use corpus::SyntheticCorpus;
+pub use loader::BatchLoader;

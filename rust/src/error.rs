@@ -1,0 +1,89 @@
+//! Crate-wide error type.
+//!
+//! Library modules return [`Result`]; binaries convert to `anyhow` at the
+//! edge. Variants are grouped by subsystem so callers can match on the
+//! failing layer (config vs artifact vs runtime vs protocol).
+
+use std::fmt;
+
+/// Unified error for the adaalter crate.
+#[derive(Debug)]
+pub enum Error {
+    /// Configuration file / CLI parse or validation failures.
+    Config(String),
+    /// TOML / JSON syntax errors with location info.
+    Parse { what: &'static str, line: usize, msg: String },
+    /// `artifacts/` problems: missing files, manifest mismatch, bad shapes.
+    Artifact(String),
+    /// PJRT / XLA runtime failures.
+    Runtime(String),
+    /// Training-protocol invariant violations (e.g. state-size mismatch).
+    Protocol(String),
+    /// Data-pipeline failures.
+    Data(String),
+    /// Underlying I/O.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Parse { what, line, msg } => {
+                write!(f, "{what} parse error at line {line}: {msg}")
+            }
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper for runtime-layer errors from the xla crate (whose error type
+    /// we do not want in our public API).
+    pub fn runtime(e: impl fmt::Display) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_subsystem() {
+        assert!(Error::Config("x".into()).to_string().starts_with("config"));
+        assert!(Error::Artifact("x".into()).to_string().starts_with("artifact"));
+        let e = Error::Parse { what: "toml", line: 3, msg: "bad".into() };
+        assert_eq!(e.to_string(), "toml parse error at line 3: bad");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("gone"));
+    }
+}

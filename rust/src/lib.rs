@@ -1,0 +1,59 @@
+//! # adaalter — Local AdaAlter, reproduced as a deployable training framework
+//!
+//! Rust implementation of *Local AdaAlter: Communication-Efficient Stochastic
+//! Gradient Descent with Adaptive Learning Rates* (Xie, Koyejo, Gupta, Lin;
+//! 2019), built as the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: worker
+//!   threads, the H-period synchronization scheduler with the paper's
+//!   `t'·ε²` placeholder denominator, parameter/denominator averaging,
+//!   parameter-server and ring-allreduce communication simulators with an
+//!   α–β network cost model, warm-up learning-rate schedule, data pipeline,
+//!   metrics, CLI.
+//! * **L2 (python/compile, build time only)** — a JAX transformer language
+//!   model lowered once to HLO-text artifacts (`make artifacts`).
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the fused
+//!   optimizer updates, lowered inside the L2 graphs.
+//!
+//! At runtime only this crate runs: artifacts are loaded through the PJRT C
+//! API ([`runtime`]) and Python never sits on the training path.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every figure/table of the paper to a bench target.
+
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// The paper's protocol constants (§6.3: "in all the experiments, we take
+/// ε = 1, b₀ = 1"; §6.2.1: η = 0.5, warm_up_steps = 600).
+pub mod paper {
+    /// Numerical-stability / placeholder constant ε.
+    pub const EPSILON: f32 = 1.0;
+    /// Accumulator initialisation b₀ (B₀² = b₀²·1).
+    pub const B0: f32 = 1.0;
+    /// Tuned base learning rate η for the 8×256 configuration.
+    pub const ETA: f32 = 0.5;
+    /// Warm-up steps for AdaAlter's small-denominator start.
+    pub const WARM_UP_STEPS: u64 = 600;
+    /// Synchronization periods evaluated in Fig. 1/2/3 and Table 2.
+    pub const H_SWEEP: [u64; 4] = [4, 8, 12, 16];
+    /// Iterations per epoch in the paper's setup (each epoch processes
+    /// 20,000 × 8 × 256 samples).
+    pub const STEPS_PER_EPOCH: u64 = 20_000;
+}

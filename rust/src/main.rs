@@ -1,0 +1,214 @@
+//! `adaalter` — the Local AdaAlter training framework CLI (leader entry).
+//!
+//! ```text
+//! adaalter train      --experiment <preset> | --config <file> [--set k=v]…
+//! adaalter presets                       list experiment presets
+//! adaalter inspect    [--artifacts dir]  summarise the AOT artifacts
+//! adaalter epoch-model [--workers n]     print the Fig. 1/2 analytic rows
+//! adaalter version
+//! ```
+
+use std::sync::Arc;
+
+use adaalter::cli::Args;
+use adaalter::config::{self, ExperimentConfig, SyncPeriod, TomlDoc};
+use adaalter::coordinator::factory::make_factory;
+use adaalter::coordinator::Trainer;
+use adaalter::error::Result;
+use adaalter::runtime::Manifest;
+use adaalter::sim::{Charge, EpochModel, SimAlgo};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &["experiment", "config", "set", "artifacts", "workers", "out-dir", "resume"],
+        &["no-fused", "quiet", "help"],
+    )?;
+    match args.command.as_str() {
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        "version" => {
+            println!("adaalter {}", adaalter::version());
+            Ok(())
+        }
+        "presets" => cmd_presets(),
+        "train" => cmd_train(&args),
+        "inspect" => cmd_inspect(&args),
+        "epoch-model" => cmd_epoch_model(&args),
+        other => Err(adaalter::Error::Config(format!(
+            "unknown command {other:?} (try `adaalter help`)"
+        ))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "adaalter {} — Local AdaAlter (Xie et al. 2019) training framework
+
+USAGE:
+  adaalter train --experiment <name> [--set key=value]... [--no-fused]
+  adaalter train --config <file.toml> [--set key=value]...
+  adaalter train ... --resume <checkpoint.bin>
+  adaalter presets
+  adaalter inspect [--artifacts <dir>]
+  adaalter epoch-model
+  adaalter version",
+        adaalter::version()
+    );
+}
+
+fn cmd_presets() -> Result<()> {
+    println!("{:<20} summary", "name");
+    for p in config::PRESETS {
+        println!("{:<20} {}", p.name, p.summary);
+    }
+    Ok(())
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut doc = if let Some(path) = args.get("config") {
+        TomlDoc::load(path)?
+    } else {
+        let name = args.get_or("experiment", "paper-default");
+        config::preset_doc(name)?
+    };
+    for spec in args.get_all("set") {
+        ExperimentConfig::override_from_doc(&mut doc, spec)?;
+    }
+    let mut cfg = ExperimentConfig::from_doc(&doc)?;
+    if let Some(dir) = args.get("out-dir") {
+        cfg.out_dir = dir.to_string();
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let quiet = args.has("quiet");
+    if !quiet {
+        println!(
+            "training: algo={} workers={} H={} steps={} backend={:?} preset={}",
+            cfg.optim.algorithm,
+            cfg.train.workers,
+            cfg.train.sync_period,
+            cfg.train.steps,
+            cfg.train.backend,
+            cfg.train.preset
+        );
+    }
+    let factory = make_factory(&cfg)?;
+    let mut trainer = Trainer::new(cfg.clone(), factory);
+    trainer.allow_fused = !args.has("no-fused");
+    if let Some(path) = args.get("resume") {
+        let ck = adaalter::coordinator::Checkpoint::load(path)?;
+        if !quiet {
+            println!("resuming from {path} at step {}", ck.step);
+        }
+        trainer.resume = Some(ck);
+    }
+    let result = trainer.run()?;
+
+    let (syncs, bytes) = result.recorder.comm();
+    if !quiet {
+        for p in &result.recorder.steps {
+            println!(
+                "step {:>6}  epoch {:>7.3}  loss {:>9.5}  lr {:>7.5}  vtime {:>9.1}s",
+                p.step, p.epoch, p.train_loss, p.lr, p.virtual_s
+            );
+        }
+    }
+    if let Some(ev) = result.final_eval {
+        match ev.ppl {
+            Some(ppl) => println!("final: eval_loss {:.5}  test PPL {:.3}", ev.loss, ppl),
+            None => println!("final: global loss {:.6}", ev.loss),
+        }
+    }
+    println!(
+        "virtual time {:.1}s (compute {:.1}s, dataload {:.1}s, comm {:.1}s); \
+         {syncs} syncs, {:.1} MiB shipped; wall {:.1}s, {:.0} samples/s host",
+        result.clock.now_s(),
+        result.clock.total(Charge::Compute),
+        result.clock.total(Charge::DataLoad),
+        result.clock.total(Charge::Communication),
+        bytes as f64 / (1 << 20) as f64,
+        result.recorder.steps.last().map(|p| p.wall_s).unwrap_or(0.0),
+        result.recorder.wall_throughput(),
+    );
+
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let tag = format!(
+        "{}_w{}_h{}",
+        cfg.optim.algorithm,
+        cfg.train.workers,
+        cfg.train.sync_period
+    );
+    let steps_csv = format!("{}/train_{tag}.csv", cfg.out_dir);
+    let evals_csv = format!("{}/eval_{tag}.csv", cfg.out_dir);
+    result.recorder.write_steps_csv(&steps_csv)?;
+    result.recorder.write_evals_csv(&evals_csv)?;
+    if !quiet {
+        println!("wrote {steps_csv} and {evals_csv}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let m = Manifest::load(dir)?;
+    println!("manifest v{} at {}/", m.version, dir);
+    for (name, p) in &m.presets {
+        println!(
+            "  preset {name}: d={} ({:.2}M params), batch={}, seq={}, vocab={}",
+            p.d,
+            p.d as f64 / 1e6,
+            p.batch,
+            p.seq,
+            p.vocab
+        );
+        for (aname, a) in &p.artifacts {
+            let ins: Vec<String> = a.inputs.iter().map(|t| format!("{:?}", t.shape)).collect();
+            println!("    {aname:<22} {} inputs {}", a.file, ins.join(" "));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_epoch_model(_args: &Args) -> Result<()> {
+    let m = EpochModel::paper();
+    let algos: Vec<SimAlgo> = vec![
+        SimAlgo::AdaGrad,
+        SimAlgo::AdaAlter,
+        SimAlgo::LocalAdaAlter(SyncPeriod::Every(4)),
+        SimAlgo::LocalAdaAlter(SyncPeriod::Every(8)),
+        SimAlgo::LocalAdaAlter(SyncPeriod::Every(12)),
+        SimAlgo::LocalAdaAlter(SyncPeriod::Every(16)),
+        SimAlgo::LocalAdaAlter(SyncPeriod::Infinite),
+        SimAlgo::IdealComputeOnly,
+    ];
+    println!("{:<34} {:>10} {:>10} {:>10} {:>10}", "algorithm \\ epoch seconds", "n=1", "n=2", "n=4", "n=8");
+    for a in &algos {
+        let row: Vec<String> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&n| format!("{:>10.0}", m.epoch_time_s(*a, n)))
+            .collect();
+        println!("{:<34} {}", a.label(), row.join(" "));
+    }
+    Ok(())
+}
+
+// The Arc import is used by make_factory's signature indirectly; keep the
+// compiler honest if the signature changes.
+#[allow(unused)]
+fn _assert_factory_shape(f: adaalter::coordinator::BackendFactory) -> Arc<dyn Fn(usize) -> Result<Box<dyn adaalter::coordinator::WorkerBackend>> + Send + Sync> {
+    f
+}

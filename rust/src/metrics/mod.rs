@@ -1,0 +1,6 @@
+//! Training metrics: loss curves, throughput, PPL, virtual-time axes, and
+//! CSV emission for the figure-regeneration benches.
+
+pub mod recorder;
+
+pub use recorder::{EvalPoint, StepPoint, TrainRecorder};

@@ -1,0 +1,220 @@
+//! Metric recording for a training run.
+//!
+//! The recorder owns the loss/PPL curves (the Fig. 3 series) and the
+//! throughput counters (Fig. 2), on both axes the paper uses: epochs and
+//! (virtual) wall-clock time.
+
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::util::csv::CsvWriter;
+
+/// One logged training step (averaged over workers).
+#[derive(Clone, Copy, Debug)]
+pub struct StepPoint {
+    pub step: u64,
+    pub epoch: f64,
+    pub train_loss: f64,
+    pub lr: f32,
+    pub virtual_s: f64,
+    pub wall_s: f64,
+}
+
+/// One held-out evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    pub step: u64,
+    pub epoch: f64,
+    pub loss: f64,
+    pub ppl: Option<f64>,
+    pub virtual_s: f64,
+    pub wall_s: f64,
+}
+
+/// Accumulates metrics over a run.
+pub struct TrainRecorder {
+    steps_per_epoch: u64,
+    started: Instant,
+    ema_loss: Option<f64>,
+    ema_beta: f64,
+    pub steps: Vec<StepPoint>,
+    pub evals: Vec<EvalPoint>,
+    samples_processed: u64,
+    comm_bytes: u64,
+    syncs: u64,
+}
+
+impl TrainRecorder {
+    /// Recorder; `steps_per_epoch` defines the epoch axis.
+    pub fn new(steps_per_epoch: u64) -> Self {
+        assert!(steps_per_epoch >= 1);
+        TrainRecorder {
+            steps_per_epoch,
+            started: Instant::now(),
+            ema_loss: None,
+            ema_beta: 0.98,
+            steps: Vec::new(),
+            evals: Vec::new(),
+            samples_processed: 0,
+            comm_bytes: 0,
+            syncs: 0,
+        }
+    }
+
+    /// Epoch coordinate of a step.
+    pub fn epoch_of(&self, step: u64) -> f64 {
+        step as f64 / self.steps_per_epoch as f64
+    }
+
+    /// Record a training step (call every step; point storage only happens
+    /// when `log` is true so long runs stay cheap).
+    pub fn step(&mut self, step: u64, loss: f64, lr: f32, virtual_s: f64,
+                samples: u64, log: bool) {
+        self.samples_processed += samples;
+        self.ema_loss = Some(match self.ema_loss {
+            None => loss,
+            Some(e) => self.ema_beta * e + (1.0 - self.ema_beta) * loss,
+        });
+        if log {
+            self.steps.push(StepPoint {
+                step,
+                epoch: self.epoch_of(step),
+                train_loss: loss,
+                lr,
+                virtual_s,
+                wall_s: self.started.elapsed().as_secs_f64(),
+            });
+        }
+    }
+
+    /// Record one sync round's traffic.
+    pub fn sync(&mut self, bytes: u64) {
+        self.syncs += 1;
+        self.comm_bytes += bytes;
+    }
+
+    /// Record a held-out evaluation.
+    pub fn eval(&mut self, step: u64, loss: f64, ppl: Option<f64>, virtual_s: f64) {
+        self.evals.push(EvalPoint {
+            step,
+            epoch: self.epoch_of(step),
+            loss,
+            ppl,
+            virtual_s,
+            wall_s: self.started.elapsed().as_secs_f64(),
+        });
+    }
+
+    /// Smoothed training loss.
+    pub fn ema_loss(&self) -> Option<f64> {
+        self.ema_loss
+    }
+
+    /// Total samples processed.
+    pub fn samples(&self) -> u64 {
+        self.samples_processed
+    }
+
+    /// Sync rounds and total bytes shipped.
+    pub fn comm(&self) -> (u64, u64) {
+        (self.syncs, self.comm_bytes)
+    }
+
+    /// Real-time throughput, samples/s (wall-clock).
+    pub fn wall_throughput(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt > 0.0 {
+            self.samples_processed as f64 / dt
+        } else {
+            0.0
+        }
+    }
+
+    /// Write the step curve as CSV.
+    pub fn write_steps_csv(&self, path: &str) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["step", "epoch", "train_loss", "lr", "virtual_s", "wall_s"],
+        )?;
+        for p in &self.steps {
+            w.row(&[
+                p.step.to_string(),
+                format!("{:.4}", p.epoch),
+                format!("{:.6}", p.train_loss),
+                format!("{:.6}", p.lr),
+                format!("{:.3}", p.virtual_s),
+                format!("{:.3}", p.wall_s),
+            ])?;
+        }
+        w.flush()
+    }
+
+    /// Write the eval curve as CSV.
+    pub fn write_evals_csv(&self, path: &str) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["step", "epoch", "eval_loss", "ppl", "virtual_s", "wall_s"],
+        )?;
+        for p in &self.evals {
+            w.row(&[
+                p.step.to_string(),
+                format!("{:.4}", p.epoch),
+                format!("{:.6}", p.loss),
+                p.ppl.map_or(String::new(), |v| format!("{v:.4}")),
+                format!("{:.3}", p.virtual_s),
+                format!("{:.3}", p.wall_s),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_converges_to_constant_stream() {
+        let mut r = TrainRecorder::new(10);
+        for s in 1..=500 {
+            r.step(s, 2.0, 0.1, 0.0, 4, false);
+        }
+        assert!((r.ema_loss().unwrap() - 2.0).abs() < 1e-6);
+        assert_eq!(r.samples(), 2000);
+        assert!(r.steps.is_empty(), "log=false stores nothing");
+    }
+
+    #[test]
+    fn epoch_axis() {
+        let r = TrainRecorder::new(100);
+        assert_eq!(r.epoch_of(250), 2.5);
+    }
+
+    #[test]
+    fn sync_accounting() {
+        let mut r = TrainRecorder::new(10);
+        r.sync(1024);
+        r.sync(1024);
+        assert_eq!(r.comm(), (2, 2048));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("adaalter_rec_test");
+        let sp = dir.join("steps.csv");
+        let ep = dir.join("evals.csv");
+        let mut r = TrainRecorder::new(10);
+        r.step(1, 3.5, 0.1, 0.5, 4, true);
+        r.eval(1, 3.4, Some(30.0), 0.5);
+        r.eval(2, 3.3, None, 1.0);
+        r.write_steps_csv(sp.to_str().unwrap()).unwrap();
+        r.write_evals_csv(ep.to_str().unwrap()).unwrap();
+        let steps = std::fs::read_to_string(&sp).unwrap();
+        assert!(steps.lines().count() == 2 && steps.contains("3.500000"));
+        let evals = std::fs::read_to_string(&ep).unwrap();
+        assert!(evals.contains("30.0000"));
+        // ppl column empty when None
+        assert!(evals.lines().nth(2).unwrap().contains(",,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

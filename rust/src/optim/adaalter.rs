@@ -1,0 +1,155 @@
+//! Fully-synchronous AdaAlter — Algorithm 3, the paper's first contribution.
+//!
+//! Per step (lines 6–7):
+//!   `x_t ← x_{t-1} − η · G_t / sqrt(B²_{t-1} + ε²·1)`   (update FIRST …)
+//!   `B²_t ← B²_{t-1} + (1/n) Σ_i G_{i,t} ∘ G_{i,t}`     (… accumulate AFTER)
+//!
+//! The one-line swap relative to AdaGrad is what makes the denominator
+//! lazily computable in the local variant (Alg. 4): during local steps the
+//! not-yet-averaged `G ∘ G` contributions are stood in for by `t'·ε²`.
+
+use crate::config::Algorithm;
+
+use super::SyncOptimizer;
+
+/// AdaAlter state: the accumulated denominator (updated *after* each step).
+pub struct AdaAlter {
+    b2: Vec<f32>,
+    eps2: f32,
+}
+
+impl AdaAlter {
+    /// `d`-dimensional state, `B₀² = b0²·1`.
+    pub fn new(d: usize, b0: f32, epsilon: f32) -> Self {
+        AdaAlter { b2: vec![b0 * b0; d], eps2: epsilon * epsilon }
+    }
+
+    /// Borrow the denominator.
+    pub fn b2(&self) -> &[f32] {
+        &self.b2
+    }
+}
+
+impl SyncOptimizer for AdaAlter {
+    fn step(&mut self, x: &mut [f32], g: &[f32], gsq: &[f32], lr: f32) {
+        let d = self.b2.len();
+        assert_eq!(x.len(), d, "AdaAlter: x dim");
+        assert_eq!(g.len(), d, "AdaAlter: g dim");
+        assert_eq!(gsq.len(), d, "AdaAlter: gsq dim");
+        let eps2 = self.eps2;
+        let b2 = &mut self.b2[..d];
+        let x = &mut x[..d];
+        let g = &g[..d];
+        let gsq = &gsq[..d];
+        // Fused single pass: update with the STALE denominator, then fold
+        // the fresh squares in.
+        for i in 0..d {
+            let stale = b2[i];
+            x[i] -= lr * g[i] / (stale + eps2).sqrt();
+            b2[i] = stale + gsq[i];
+        }
+    }
+
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::AdaAlter
+    }
+
+    fn denominator(&self) -> Option<&[f32]> {
+        Some(&self.b2)
+    }
+
+    fn state_vectors(&self) -> Vec<Vec<f32>> {
+        vec![self.b2.clone()]
+    }
+
+    fn restore_state(&mut self, vectors: &[Vec<f32>]) -> crate::error::Result<()> {
+        if vectors.len() != 1 || vectors[0].len() != self.b2.len() {
+            return Err(crate::error::Error::Protocol(
+                "checkpoint state does not match optimizer".into(),
+            ));
+        }
+        self.b2.copy_from_slice(&vectors[0]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::adagrad::AdaGrad;
+
+    #[test]
+    fn matches_hand_computation() {
+        let mut opt = AdaAlter::new(2, 1.0, 1.0); // b2 = [1,1], eps2 = 1
+        let mut x = vec![1.0f32, -2.0];
+        let g = vec![2.0f32, 0.5];
+        let gsq: Vec<f32> = g.iter().map(|v| v * v).collect();
+        opt.step(&mut x, &g, &gsq, 0.5);
+        // update uses STALE b2=1: denom = sqrt(1+1) = sqrt2
+        // x = [1 - 0.5*2/sqrt2, -2 - 0.5*0.5/sqrt2]
+        let s2 = 2.0f32.sqrt();
+        assert!((x[0] - (1.0 - 1.0 / s2)).abs() < 1e-6);
+        assert!((x[1] - (-2.0 - 0.25 / s2)).abs() < 1e-6);
+        // accumulate AFTER: b2 = [5, 1.25]
+        assert_eq!(opt.b2(), &[5.0, 1.25]);
+    }
+
+    #[test]
+    fn update_ignores_fresh_squares() {
+        // The defining property: the update must not see this step's gsq.
+        let mut a = AdaAlter::new(1, 1.0, 1.0);
+        let mut b = AdaAlter::new(1, 1.0, 1.0);
+        let mut xa = vec![0.0f32];
+        let mut xb = vec![0.0f32];
+        a.step(&mut xa, &[1.0], &[1.0], 0.5);
+        b.step(&mut xb, &[1.0], &[1e9], 0.5);
+        assert_eq!(xa[0], xb[0]);
+        assert_ne!(a.b2()[0], b.b2()[0]);
+    }
+
+    #[test]
+    fn first_step_differs_from_adagrad_then_converges_in_shape() {
+        // With identical inputs, AdaAlter's first update is LARGER (stale
+        // denominator is smaller) — the reason the paper adds warm-up.
+        let mut aa = AdaAlter::new(1, 1.0, 1.0);
+        let mut ag = AdaGrad::new(1, 1.0, 1.0);
+        use crate::optim::SyncOptimizer as _;
+        let mut xa = vec![0.0f32];
+        let mut xg = vec![0.0f32];
+        aa.step(&mut xa, &[3.0], &[9.0], 1.0);
+        ag.step(&mut xg, &[3.0], &[9.0], 1.0);
+        assert!(xa[0].abs() > xg[0].abs());
+        // After the step both hold the same accumulated squares.
+        assert_eq!(aa.b2(), ag.b2());
+    }
+
+    #[test]
+    fn adaalter_denominator_lags_adagrad_by_one_step() {
+        // B²(AdaAlter, after t steps) == B²(AdaGrad, after t steps); the
+        // *used* denominator differs by exactly one step's gsq.
+        let mut aa = AdaAlter::new(4, 1.0, 1.0);
+        let mut ag = AdaGrad::new(4, 1.0, 1.0);
+        use crate::optim::SyncOptimizer as _;
+        let mut xa = vec![0.0f32; 4];
+        let mut xg = vec![0.0f32; 4];
+        for s in 0..10 {
+            let g: Vec<f32> = (0..4).map(|i| ((i * 7 + s) as f32 * 0.41).cos()).collect();
+            let gsq: Vec<f32> = g.iter().map(|v| v * v).collect();
+            aa.step(&mut xa, &g, &gsq, 0.3);
+            ag.step(&mut xg, &g, &gsq, 0.3);
+            for i in 0..4 {
+                assert!((aa.b2()[i] - ag.b2()[i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_gradient_fixed_point() {
+        let mut opt = AdaAlter::new(3, 1.0, 1.0);
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        let before = x.clone();
+        opt.step(&mut x, &[0.0; 3], &[0.0; 3], 0.5);
+        assert_eq!(x, before);
+        assert_eq!(opt.b2(), &[1.0; 3]);
+    }
+}

@@ -1,0 +1,129 @@
+//! Distributed AdaGrad — Algorithm 1 of the paper (the baseline).
+//!
+//! Per step (lines 6–7): `B²_t ← B²_{t-1} + G_t ∘ G_t` then
+//! `x_t ← x_{t-1} − η · G_t / sqrt(B²_t + ε²·1)` — accumulate FIRST,
+//! update with the fresh denominator.
+
+use crate::config::Algorithm;
+
+use super::SyncOptimizer;
+
+/// AdaGrad state: the accumulated squared-gradient denominator.
+pub struct AdaGrad {
+    b2: Vec<f32>,
+    eps2: f32,
+}
+
+impl AdaGrad {
+    /// `d`-dimensional state, `B₀² = b0²·1`.
+    pub fn new(d: usize, b0: f32, epsilon: f32) -> Self {
+        AdaGrad { b2: vec![b0 * b0; d], eps2: epsilon * epsilon }
+    }
+
+    /// Borrow the denominator (tests / checkpoints).
+    pub fn b2(&self) -> &[f32] {
+        &self.b2
+    }
+}
+
+impl SyncOptimizer for AdaGrad {
+    fn step(&mut self, x: &mut [f32], g: &[f32], gsq: &[f32], lr: f32) {
+        let d = self.b2.len();
+        assert_eq!(x.len(), d, "AdaGrad: x dim");
+        assert_eq!(g.len(), d, "AdaGrad: g dim");
+        assert_eq!(gsq.len(), d, "AdaGrad: gsq dim");
+        let eps2 = self.eps2;
+        let b2 = &mut self.b2[..d];
+        let x = &mut x[..d];
+        let g = &g[..d];
+        let gsq = &gsq[..d];
+        // Fused single pass: accumulate, then update with the new value.
+        for i in 0..d {
+            let b2i = b2[i] + gsq[i];
+            b2[i] = b2i;
+            x[i] -= lr * g[i] / (b2i + eps2).sqrt();
+        }
+    }
+
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::AdaGrad
+    }
+
+    fn denominator(&self) -> Option<&[f32]> {
+        Some(&self.b2)
+    }
+
+    fn state_vectors(&self) -> Vec<Vec<f32>> {
+        vec![self.b2.clone()]
+    }
+
+    fn restore_state(&mut self, vectors: &[Vec<f32>]) -> crate::error::Result<()> {
+        if vectors.len() != 1 || vectors[0].len() != self.b2.len() {
+            return Err(crate::error::Error::Protocol(
+                "checkpoint state does not match optimizer".into(),
+            ));
+        }
+        self.b2.copy_from_slice(&vectors[0]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-computed two-step recurrence.
+    #[test]
+    fn matches_hand_computation() {
+        let mut opt = AdaGrad::new(2, 1.0, 1.0); // b2 = [1,1], eps2 = 1
+        let mut x = vec![1.0f32, -2.0];
+        let g = vec![2.0f32, 0.5];
+        let gsq: Vec<f32> = g.iter().map(|v| v * v).collect();
+        opt.step(&mut x, &g, &gsq, 0.5);
+        // b2 = [1+4, 1+0.25] = [5, 1.25]; denom = sqrt(b2+1) = [sqrt6, sqrt2.25=1.5]
+        // x = [1 - 0.5*2/sqrt6, -2 - 0.5*0.5/1.5]
+        let e0 = 1.0 - 1.0 / 6.0f32.sqrt();
+        let e1 = -2.0 - 0.25 / 1.5;
+        assert!((x[0] - e0).abs() < 1e-6, "{} vs {e0}", x[0]);
+        assert!((x[1] - e1).abs() < 1e-6, "{} vs {e1}", x[1]);
+        assert_eq!(opt.b2(), &[5.0, 1.25]);
+
+        // second step accumulates on top
+        opt.step(&mut x, &g, &gsq, 0.5);
+        assert_eq!(opt.b2(), &[9.0, 1.5]);
+    }
+
+    #[test]
+    fn uses_fresh_denominator() {
+        // With a huge gsq, the very first update must already be damped —
+        // that is the accumulate-first order.
+        let mut opt = AdaGrad::new(1, 1.0, 1.0);
+        let mut x = vec![0.0f32];
+        opt.step(&mut x, &[1.0], &[1_000_000.0], 1.0);
+        assert!(x[0].abs() < 1.1e-3, "update {} not damped", x[0]);
+    }
+
+    #[test]
+    fn denominator_monotone() {
+        let mut opt = AdaGrad::new(8, 1.0, 0.5);
+        let mut x = vec![0.0f32; 8];
+        let mut prev = opt.b2().to_vec();
+        for s in 0..20 {
+            let g: Vec<f32> = (0..8).map(|i| ((i + s) as f32 * 0.3).sin()).collect();
+            let gsq: Vec<f32> = g.iter().map(|v| v * v).collect();
+            opt.step(&mut x, &g, &gsq, 0.1);
+            for (p, n) in prev.iter().zip(opt.b2()) {
+                assert!(n >= p);
+            }
+            prev = opt.b2().to_vec();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "x dim")]
+    fn dimension_mismatch_panics() {
+        let mut opt = AdaGrad::new(2, 1.0, 1.0);
+        let mut x = vec![0.0f32; 3];
+        opt.step(&mut x, &[0.0; 3], &[0.0; 3], 0.1);
+    }
+}

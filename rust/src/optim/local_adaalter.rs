@@ -1,0 +1,255 @@
+//! Local AdaAlter worker state machine — Algorithm 4, the paper's headline
+//! contribution.
+//!
+//! Each worker holds three `f32[d]` vectors:
+//!
+//! * `x`        — the local model replica `x_{i,t}`;
+//! * `b2_sync`  — the last *synchronized* denominator `B²_{i,t-t'}`
+//!   (identical on every worker between syncs — the property the proof of
+//!   Theorem 2 leans on);
+//! * `acc`      — the running accumulator `A²_{i,t} = B²_{i,t-t'} +
+//!   Σ_s G_{i,s} ∘ G_{i,s}` over the local steps since the last sync.
+//!
+//! During the `H−1` communication-free steps, the *placeholder denominator*
+//! `B²_{i,t-t'} + t'·ε²·1` (line 6) stands in for the not-yet-averaged
+//! squares: each local step contributes exactly one `ε²` per coordinate.
+//! At a synchronization round both the parameters `y_{i,t}` and the
+//! accumulators `A²_{i,t}` are averaged (lines 11–12) — communication is
+//! `2/H` of fully-synchronous AdaGrad per step on average.
+
+use crate::util::math;
+
+/// Per-worker Local AdaAlter state.
+pub struct LocalAdaAlterWorker {
+    x: Vec<f32>,
+    b2_sync: Vec<f32>,
+    acc: Vec<f32>,
+    eps2: f32,
+    /// Local steps since the last synchronization (t' after a step is in
+    /// `1..=H`; 0 means "just synced / fresh").
+    t_prime: u64,
+    /// Total local steps taken (for diagnostics).
+    steps: u64,
+}
+
+impl LocalAdaAlterWorker {
+    /// Fresh worker: `x = init`, `B² = A² = b0²·1` (Alg. 4 line 1).
+    pub fn new(init: Vec<f32>, b0: f32, epsilon: f32) -> Self {
+        let d = init.len();
+        LocalAdaAlterWorker {
+            x: init,
+            b2_sync: vec![b0 * b0; d],
+            acc: vec![b0 * b0; d],
+            eps2: epsilon * epsilon,
+            t_prime: 0,
+            steps: 0,
+        }
+    }
+
+    /// Dimension d.
+    pub fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    /// One local iteration (Alg. 4 lines 4–9, non-sync branch):
+    ///
+    /// t' ← t'+1;
+    /// `x ← x − η · g / sqrt(b2_sync + t'·ε²)`;  `acc ← acc + g∘g`.
+    pub fn local_step(&mut self, g: &[f32], lr: f32) {
+        let d = self.x.len();
+        assert_eq!(g.len(), d, "LocalAdaAlterWorker: g dim");
+        self.t_prime += 1;
+        self.steps += 1;
+        let add = self.t_prime as f32 * self.eps2;
+        let x = &mut self.x[..d];
+        let b2 = &self.b2_sync[..d];
+        let acc = &mut self.acc[..d];
+        let g = &g[..d];
+        // Fused single pass over the three streams.
+        for i in 0..d {
+            let gi = g[i];
+            x[i] -= lr * gi / (b2[i] + add).sqrt();
+            acc[i] += gi * gi;
+        }
+    }
+
+    /// Apply a synchronization result (Alg. 4 lines 11–12): install the
+    /// averaged parameters and averaged accumulators, reset t'.
+    pub fn apply_sync(&mut self, avg_x: &[f32], avg_acc: &[f32]) {
+        assert_eq!(avg_x.len(), self.x.len(), "apply_sync: x dim");
+        assert_eq!(avg_acc.len(), self.acc.len(), "apply_sync: acc dim");
+        self.x.copy_from_slice(avg_x);
+        self.acc.copy_from_slice(avg_acc);
+        self.b2_sync.copy_from_slice(avg_acc);
+        self.t_prime = 0;
+    }
+
+    /// The parameters to contribute to the sync average (`y_{i,t}`).
+    pub fn x(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// The accumulator to contribute to the sync average (`A²_{i,t}`).
+    pub fn acc(&self) -> &[f32] {
+        &self.acc
+    }
+
+    /// The synchronized denominator `B²_{i,t-t'}` (equal across workers).
+    pub fn b2_sync(&self) -> &[f32] {
+        &self.b2_sync
+    }
+
+    /// Local steps since last sync.
+    pub fn t_prime(&self) -> u64 {
+        self.t_prime
+    }
+
+    /// Total local steps taken.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Split mutable access for the fused device path: the backend updates
+    /// `x` and `acc` itself (one PJRT dispatch) while reading `b2_sync`;
+    /// the caller must then call [`Self::note_external_step`].
+    pub fn split_mut(&mut self) -> (&mut [f32], &[f32], &mut [f32]) {
+        (&mut self.x, &self.b2_sync, &mut self.acc)
+    }
+
+    /// Record that one local step was applied externally (fused path):
+    /// advances `t'` and the step counter without touching the vectors.
+    pub fn note_external_step(&mut self) {
+        self.t_prime += 1;
+        self.steps += 1;
+    }
+
+    /// The placeholder denominator the *next* local step would divide by
+    /// (before sqrt): `b2_sync + (t'+1)·ε²` — exposed for invariant tests.
+    pub fn next_placeholder(&self) -> Vec<f32> {
+        let add = (self.t_prime + 1) as f32 * self.eps2;
+        self.b2_sync.iter().map(|&b| b + add).collect()
+    }
+
+    /// Invariant check (debug / property tests): the accumulator equals
+    /// `b2_sync + Σ g∘g ≥ b2_sync`, and both are finite.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if !math::all_finite(&self.x) {
+            return Err("x contains non-finite values".into());
+        }
+        if !math::all_finite(&self.acc) {
+            return Err("acc contains non-finite values".into());
+        }
+        for (i, (&a, &b)) in self.acc.iter().zip(&self.b2_sync).enumerate() {
+            if a < b - 1e-6 {
+                return Err(format!("acc[{i}]={a} < b2_sync[{i}]={b}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_hand_computed() {
+        // d=1, b0=1, eps=1, x=0, g=2, lr=0.5.
+        // t'=1: denom = sqrt(1 + 1*1) = sqrt2; x = -0.5*2/sqrt2 = -1/sqrt2.
+        let mut w = LocalAdaAlterWorker::new(vec![0.0], 1.0, 1.0);
+        w.local_step(&[2.0], 0.5);
+        assert!((w.x()[0] + 1.0 / 2.0f32.sqrt()).abs() < 1e-6);
+        assert_eq!(w.acc(), &[5.0]); // 1 + 4
+        assert_eq!(w.b2_sync(), &[1.0]); // unchanged until sync
+        assert_eq!(w.t_prime(), 1);
+    }
+
+    #[test]
+    fn placeholder_grows_per_local_step() {
+        // Second local step must divide by sqrt(b2_sync + 2*eps²), NOT by
+        // sqrt(acc) — the paper's lazy-denominator trick.
+        let mut w = LocalAdaAlterWorker::new(vec![0.0], 1.0, 1.0);
+        w.local_step(&[100.0], 0.0); // huge gsq into acc, but lr=0 so x fixed
+        assert_eq!(w.x(), &[0.0]);
+        assert_eq!(w.acc(), &[10_001.0]);
+        // Next step uses b2_sync + 2*eps² = 3, not acc.
+        w.local_step(&[1.0], 1.0);
+        assert!((w.x()[0] + 1.0 / 3.0f32.sqrt()).abs() < 1e-6, "x={}", w.x()[0]);
+    }
+
+    #[test]
+    fn sync_installs_averages_and_resets() {
+        let mut w = LocalAdaAlterWorker::new(vec![1.0, 2.0], 1.0, 1.0);
+        w.local_step(&[1.0, -1.0], 0.5);
+        assert_eq!(w.t_prime(), 1);
+        w.apply_sync(&[10.0, 20.0], &[7.0, 8.0]);
+        assert_eq!(w.x(), &[10.0, 20.0]);
+        assert_eq!(w.acc(), &[7.0, 8.0]);
+        assert_eq!(w.b2_sync(), &[7.0, 8.0]);
+        assert_eq!(w.t_prime(), 0);
+        // t' restarts at 1 after sync.
+        w.local_step(&[0.0, 0.0], 0.5);
+        assert_eq!(w.t_prime(), 1);
+    }
+
+    #[test]
+    fn matches_python_ref_recurrence() {
+        // Mirror of ref.local_adaalter_round_ref with H=3, d=4 — values
+        // generated by the same arithmetic, here recomputed longhand.
+        let d = 4;
+        let x0: Vec<f32> = vec![0.1, -0.2, 0.3, -0.4];
+        let b0 = 1.0;
+        let eps = 1.0;
+        let lr = 0.5;
+        let grads: [[f32; 4]; 3] = [
+            [1.0, -0.5, 0.25, 2.0],
+            [-0.3, 0.7, -1.1, 0.9],
+            [0.05, -0.15, 0.6, -2.0],
+        ];
+        let mut w = LocalAdaAlterWorker::new(x0.clone(), b0, eps);
+        for g in &grads {
+            w.local_step(g, lr);
+        }
+        // Longhand expected values.
+        let mut x = x0.clone();
+        let b2 = vec![1.0f32; d];
+        let mut acc = b2.clone();
+        for (s, g) in grads.iter().enumerate() {
+            let add = (s + 1) as f32;
+            for i in 0..d {
+                x[i] -= lr * g[i] / (b2[i] + add).sqrt();
+                acc[i] += g[i] * g[i];
+            }
+        }
+        for i in 0..d {
+            assert!((w.x()[i] - x[i]).abs() < 1e-6);
+            assert!((w.acc()[i] - acc[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn invariants_hold_over_many_steps() {
+        let mut w = LocalAdaAlterWorker::new(vec![0.5; 64], 1.0, 1.0);
+        for s in 0..50 {
+            let g: Vec<f32> = (0..64).map(|i| ((i + s) as f32 * 0.17).sin()).collect();
+            w.local_step(&g, 0.5);
+            w.check_invariants().unwrap();
+            if s % 8 == 7 {
+                let avg_x = w.x().to_vec();
+                let avg_acc = w.acc().to_vec();
+                w.apply_sync(&avg_x, &avg_acc);
+                w.check_invariants().unwrap();
+            }
+        }
+        assert_eq!(w.steps(), 50);
+    }
+
+    #[test]
+    fn invariant_checker_catches_corruption() {
+        let mut w = LocalAdaAlterWorker::new(vec![0.0; 4], 1.0, 1.0);
+        w.local_step(&[1.0; 4], 0.5);
+        // Corrupt: acc below b2_sync.
+        w.acc[0] = 0.0;
+        assert!(w.check_invariants().is_err());
+    }
+}

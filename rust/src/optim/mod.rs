@@ -1,0 +1,124 @@
+//! Optimizer implementations — rust-native mirrors of the paper's
+//! Algorithms 1–4.
+//!
+//! Two execution paths exist for every update:
+//!
+//! 1. the **PJRT path**: the fused Pallas kernels (L1) lowered into
+//!    `artifacts/{preset}_opt_*.hlo.txt` / the fused local-step graphs,
+//!    executed by [`crate::runtime`];
+//! 2. the **rust path** (this module): identical recurrences as fused
+//!    single-pass loops over the flat `f32[d]` state.
+//!
+//! The rust path serves three roles: the coordinator-side update when the
+//! leader owns the state (sync algorithms average gradients, then update
+//! once), the reference the integration tests pin the PJRT path against,
+//! and the backend for the pure-rust synthetic workload benches.
+//!
+//! All implementations are *exact* transcriptions — update-then-accumulate
+//! for AdaAlter (Alg. 3 lines 6–7), accumulate-then-update for AdaGrad
+//! (Alg. 1 lines 6–7), and the `t'·ε²` placeholder for local AdaAlter
+//! (Alg. 4 line 6).
+
+pub mod adaalter;
+pub mod adagrad;
+pub mod local_adaalter;
+pub mod sgd;
+pub mod theory;
+
+pub use adaalter::AdaAlter;
+pub use adagrad::AdaGrad;
+pub use local_adaalter::LocalAdaAlterWorker;
+pub use sgd::{MomentumSgd, Sgd};
+pub use theory::BoundParams;
+
+use crate::config::{Algorithm, OptimConfig};
+
+/// A fully-synchronous optimizer: the leader averages worker gradients each
+/// step and applies one global update (Algorithms 1 and 3, plus SGD).
+pub trait SyncOptimizer: Send {
+    /// Apply one step.
+    ///
+    /// * `x` — global model, updated in place.
+    /// * `g` — averaged gradient `(1/n) Σ_i G_{i,t}`.
+    /// * `gsq` — averaged squared gradients `(1/n) Σ_i G_{i,t} ∘ G_{i,t}`
+    ///   (AdaGrad per Alg. 1 accumulates `G_t ∘ G_t` of the *averaged*
+    ///   gradient and receives `g ∘ g` here; AdaAlter per Alg. 3 line 7
+    ///   receives the worker-averaged squares — the trainer passes the
+    ///   right one for each algorithm).
+    /// * `lr` — warmed-up learning rate η_t.
+    fn step(&mut self, x: &mut [f32], g: &[f32], gsq: &[f32], lr: f32);
+
+    /// Algorithm identifier (for logs and metric labels).
+    fn algorithm(&self) -> Algorithm;
+
+    /// Read access to the accumulator state, if the algorithm has one
+    /// (used by tests and checkpointing).
+    fn denominator(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// Optimizer state vectors for checkpointing (excluding x, which the
+    /// leader owns). Default: stateless.
+    fn state_vectors(&self) -> Vec<Vec<f32>> {
+        Vec::new()
+    }
+
+    /// Restore state saved by [`Self::state_vectors`].
+    fn restore_state(&mut self, vectors: &[Vec<f32>]) -> crate::error::Result<()> {
+        if vectors.is_empty() {
+            Ok(())
+        } else {
+            Err(crate::error::Error::Protocol(format!(
+                "{} is stateless but checkpoint carries {} optimizer vectors",
+                self.algorithm(),
+                vectors.len()
+            )))
+        }
+    }
+}
+
+/// Build the sync optimizer named by the config (dimension `d`).
+///
+/// Panics if asked for a local algorithm — local state machines live on the
+/// workers ([`LocalAdaAlterWorker`]), not behind this trait.
+pub fn build_sync(cfg: &OptimConfig, d: usize) -> Box<dyn SyncOptimizer> {
+    match cfg.algorithm {
+        Algorithm::Sgd => {
+            if cfg.momentum > 0.0 {
+                Box::new(MomentumSgd::new(d, cfg.momentum))
+            } else {
+                Box::new(Sgd::new())
+            }
+        }
+        Algorithm::AdaGrad => Box::new(AdaGrad::new(d, cfg.b0, cfg.epsilon)),
+        Algorithm::AdaAlter => Box::new(AdaAlter::new(d, cfg.b0, cfg.epsilon)),
+        Algorithm::LocalSgd | Algorithm::LocalAdaAlter => {
+            panic!("{} is a local algorithm; use the worker-side state machine", cfg.algorithm)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptimConfig;
+
+    #[test]
+    fn build_sync_dispatches() {
+        let mut cfg = OptimConfig { algorithm: Algorithm::AdaGrad, ..Default::default() };
+        assert_eq!(build_sync(&cfg, 4).algorithm(), Algorithm::AdaGrad);
+        cfg.algorithm = Algorithm::AdaAlter;
+        assert_eq!(build_sync(&cfg, 4).algorithm(), Algorithm::AdaAlter);
+        cfg.algorithm = Algorithm::Sgd;
+        assert_eq!(build_sync(&cfg, 4).algorithm(), Algorithm::Sgd);
+        cfg.momentum = 0.9;
+        assert_eq!(build_sync(&cfg, 4).algorithm(), Algorithm::Sgd);
+    }
+
+    #[test]
+    #[should_panic(expected = "local algorithm")]
+    fn build_sync_rejects_local() {
+        let cfg = OptimConfig { algorithm: Algorithm::LocalAdaAlter, ..Default::default() };
+        let _ = build_sync(&cfg, 4);
+    }
+}

@@ -1,0 +1,121 @@
+//! SGD baselines: plain (Algorithm 2's local step) and heavy-ball momentum.
+
+use crate::config::Algorithm;
+
+use super::SyncOptimizer;
+
+/// Stateless vanilla SGD: `x ← x − η·g`.
+pub struct Sgd;
+
+impl Sgd {
+    /// Construct (no state).
+    pub fn new() -> Self {
+        Sgd
+    }
+
+    /// The local step shared by sync-SGD and local-SGD workers.
+    pub fn apply(x: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(x.len(), g.len(), "Sgd: dim mismatch");
+        for i in 0..x.len() {
+            x[i] -= lr * g[i];
+        }
+    }
+}
+
+impl Default for Sgd {
+    fn default() -> Self {
+        Sgd::new()
+    }
+}
+
+impl SyncOptimizer for Sgd {
+    fn step(&mut self, x: &mut [f32], g: &[f32], _gsq: &[f32], lr: f32) {
+        Sgd::apply(x, g, lr);
+    }
+
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Sgd
+    }
+}
+
+/// Heavy-ball momentum: `m ← μ·m + g; x ← x − η·m`.
+pub struct MomentumSgd {
+    m: Vec<f32>,
+    mu: f32,
+}
+
+impl MomentumSgd {
+    /// `d`-dimensional velocity, momentum coefficient `mu ∈ [0,1)`.
+    pub fn new(d: usize, mu: f32) -> Self {
+        assert!((0.0..1.0).contains(&mu), "momentum must be in [0,1)");
+        MomentumSgd { m: vec![0.0; d], mu }
+    }
+
+    /// Borrow the velocity (tests).
+    pub fn velocity(&self) -> &[f32] {
+        &self.m
+    }
+}
+
+impl SyncOptimizer for MomentumSgd {
+    fn step(&mut self, x: &mut [f32], g: &[f32], _gsq: &[f32], lr: f32) {
+        let d = self.m.len();
+        assert_eq!(x.len(), d, "MomentumSgd: x dim");
+        assert_eq!(g.len(), d, "MomentumSgd: g dim");
+        let mu = self.mu;
+        let m = &mut self.m[..d];
+        let x = &mut x[..d];
+        let g = &g[..d];
+        for i in 0..d {
+            let v = mu * m[i] + g[i];
+            m[i] = v;
+            x[i] -= lr * v;
+        }
+    }
+
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Sgd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_basic() {
+        let mut x = vec![1.0f32, 2.0];
+        Sgd::apply(&mut x, &[0.5, -1.0], 0.1);
+        assert_eq!(x, vec![0.95, 2.1]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = MomentumSgd::new(1, 0.5);
+        let mut x = vec![0.0f32];
+        opt.step(&mut x, &[1.0], &[1.0], 1.0);
+        assert_eq!(opt.velocity(), &[1.0]);
+        assert_eq!(x, vec![-1.0]);
+        opt.step(&mut x, &[1.0], &[1.0], 1.0);
+        // v = 0.5*1 + 1 = 1.5; x = -1 - 1.5 = -2.5
+        assert_eq!(opt.velocity(), &[1.5]);
+        assert_eq!(x, vec![-2.5]);
+    }
+
+    #[test]
+    fn zero_momentum_equals_sgd() {
+        let mut mom = MomentumSgd::new(3, 0.0);
+        let mut xa = vec![1.0f32, 2.0, 3.0];
+        let mut xb = xa.clone();
+        let g = [0.3f32, -0.2, 0.9];
+        mom.step(&mut xa, &g, &g, 0.25);
+        Sgd::apply(&mut xb, &g, 0.25);
+        assert_eq!(xa, xb);
+    }
+
+    #[test]
+    #[should_panic(expected = "momentum must be in [0,1)")]
+    fn invalid_momentum_rejected() {
+        let _ = MomentumSgd::new(1, 1.0);
+    }
+}

@@ -1,0 +1,349 @@
+//! Artifact manifest: the typed view of `artifacts/manifest.json` that
+//! `python/compile/aot.py` emits at build time.
+//!
+//! The manifest is the only contract between the build-time Python layers
+//! and the runtime: per preset it records the flat dimension `d`, batch
+//! geometry, every lowered graph's file + input/output shapes/dtypes, the
+//! parameter layout (name/shape/offset), and the initial-parameter blob.
+//! Everything is validated on load so shape bugs surface at startup, not
+//! mid-training.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Element type of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => Err(Error::Artifact(format!("unsupported dtype {other:?}"))),
+        }
+    }
+}
+
+/// Shape + dtype of one graph input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .req("shape")?
+            .arr()?
+            .iter()
+            .map(|v| v.usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.req("dtype")?.str()?)?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One lowered graph.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactEntry {
+    fn from_json(j: &Json) -> Result<ArtifactEntry> {
+        let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.req(key)?.arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(ArtifactEntry {
+            file: j.req("file")?.str()?.to_string(),
+            inputs: parse_specs("inputs")?,
+            outputs: parse_specs("outputs")?,
+        })
+    }
+}
+
+/// One named parameter tensor inside the flat vector.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// A preset's full manifest subtree.
+#[derive(Clone, Debug)]
+pub struct PresetManifest {
+    pub name: String,
+    /// Flat model dimension.
+    pub d: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub init_params_file: String,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub param_spec: Vec<ParamEntry>,
+}
+
+impl PresetManifest {
+    /// Look up a graph by logical name ("train_step", "eval_step", …).
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "preset {:?} has no artifact {name:?} (have: {:?})",
+                self.name,
+                self.artifacts.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        // Param spec must tile [0, d) exactly.
+        let mut off = 0;
+        for p in &self.param_spec {
+            if p.offset != off || p.size != p.shape.iter().product::<usize>() {
+                return Err(Error::Artifact(format!(
+                    "param {:?}: bad offset/size (offset {} expected {off})",
+                    p.name, p.offset
+                )));
+            }
+            off += p.size;
+        }
+        if off != self.d {
+            return Err(Error::Artifact(format!(
+                "param spec covers {off} of d={}",
+                self.d
+            )));
+        }
+        // Spot-check the core graphs' shapes.
+        let ts = self.artifact("train_step")?;
+        if ts.inputs.first().map(|t| t.shape.as_slice()) != Some(&[self.d][..]) {
+            return Err(Error::Artifact("train_step input 0 is not f32[d]".into()));
+        }
+        if ts.inputs.get(1).map(|t| t.shape.as_slice())
+            != Some(&[self.batch, self.seq + 1][..])
+        {
+            return Err(Error::Artifact("train_step input 1 is not [batch, seq+1]".into()));
+        }
+        Ok(())
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub presets: BTreeMap<String, PresetManifest>,
+    /// Directory the manifest was loaded from (artifact files live here).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let version = j.req("version")?.usize()?;
+        if version != 2 {
+            return Err(Error::Artifact(format!(
+                "manifest version {version} unsupported (want 2); re-run `make artifacts`"
+            )));
+        }
+        let mut presets = BTreeMap::new();
+        for (name, pj) in j.req("presets")?.obj()? {
+            let artifacts = pj
+                .req("artifacts")?
+                .obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), ArtifactEntry::from_json(v)?)))
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            let param_spec = pj
+                .req("param_spec")?
+                .arr()?
+                .iter()
+                .map(|e| {
+                    Ok(ParamEntry {
+                        name: e.req("name")?.str()?.to_string(),
+                        shape: e
+                            .req("shape")?
+                            .arr()?
+                            .iter()
+                            .map(|v| v.usize())
+                            .collect::<Result<_>>()?,
+                        offset: e.req("offset")?.usize()?,
+                        size: e.req("size")?.usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let pm = PresetManifest {
+                name: name.clone(),
+                d: pj.req("d")?.usize()?,
+                batch: pj.req("batch")?.usize()?,
+                eval_batch: pj.req("eval_batch")?.usize()?,
+                seq: pj.req("seq")?.usize()?,
+                vocab: pj.req("vocab")?.usize()?,
+                init_params_file: pj.req("init_params")?.str()?.to_string(),
+                artifacts,
+                param_spec,
+            };
+            pm.validate()?;
+            presets.insert(name.clone(), pm);
+        }
+        Ok(Manifest { version, presets, dir })
+    }
+
+    /// Get a preset or a helpful error.
+    pub fn preset(&self, name: &str) -> Result<&PresetManifest> {
+        self.presets.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "preset {name:?} not in manifest (have: {:?}); \
+                 run `make artifacts` or `python -m compile.aot --presets {name}`",
+                self.presets.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// Load a preset's initial parameters (raw little-endian f32).
+    pub fn load_init_params(&self, preset: &str) -> Result<Vec<f32>> {
+        let p = self.preset(preset)?;
+        let path = self.dir.join(&p.init_params_file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::Artifact(format!("read {}: {e}", path.display())))?;
+        if bytes.len() != 4 * p.d {
+            return Err(Error::Artifact(format!(
+                "{}: {} bytes, expected {}",
+                path.display(),
+                bytes.len(),
+                4 * p.d
+            )));
+        }
+        let mut out = Vec::with_capacity(p.d);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn artifact_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+/// True if artifacts exist at `dir` (used by tests to skip PJRT suites on
+/// fresh checkouts).
+pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Write a minimal-but-valid manifest to a temp dir.
+    fn fake_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("adaalter_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = 8usize;
+        let manifest = format!(
+            r#"{{
+  "version": 2,
+  "presets": {{
+    "fake": {{
+      "d": {d}, "batch": 2, "eval_batch": 2, "seq": 3, "vocab": 16,
+      "init_params": "fake_init.f32bin",
+      "param_spec": [
+        {{"name": "a", "shape": [2, 2], "offset": 0, "size": 4}},
+        {{"name": "b", "shape": [4], "offset": 4, "size": 4}}
+      ],
+      "artifacts": {{
+        "train_step": {{
+          "file": "fake_train_step.hlo.txt",
+          "inputs": [
+            {{"shape": [{d}], "dtype": "float32"}},
+            {{"shape": [2, 4], "dtype": "int32"}}
+          ],
+          "outputs": [
+            {{"shape": [], "dtype": "float32"}},
+            {{"shape": [{d}], "dtype": "float32"}}
+          ]
+        }}
+      }}
+    }}
+  }}
+}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let init: Vec<u8> = (0..d).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        std::fs::write(dir.join("fake_init.f32bin"), init).unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let dir = fake_dir();
+        let m = Manifest::load(&dir).unwrap();
+        let p = m.preset("fake").unwrap();
+        assert_eq!(p.d, 8);
+        assert_eq!(p.artifact("train_step").unwrap().inputs[1].dtype, Dtype::I32);
+        assert!(p.artifact("missing").is_err());
+        let init = m.load_init_params("fake").unwrap();
+        assert_eq!(init, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_mentions_make_artifacts() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { shape: vec![4, 33], dtype: Dtype::I32 };
+        assert_eq!(t.elements(), 132);
+        let scalar = TensorSpec { shape: vec![], dtype: Dtype::F32 };
+        assert_eq!(scalar.elements(), 1);
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Deep-validate the real artifacts when present.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !artifacts_available(&dir) {
+            return; // fresh checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for (name, p) in &m.presets {
+            assert!(p.d > 0, "{name}");
+            assert!(m.load_init_params(name).unwrap().len() == p.d);
+            for (aname, a) in &p.artifacts {
+                let path = m.artifact_path(a);
+                assert!(path.exists(), "{name}/{aname}: missing {}", path.display());
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! PJRT-backed [`WorkerBackend`]: the real transformer LM through the AOT
+//! artifacts.
+//!
+//! Graphs used:
+//! * `train_step`  (flat, tokens) → (loss, grad)           — generic path
+//! * `local_step_adaalter` (flat, b2, acc, tokens, t'ε², η) → (y, acc', loss)
+//!   — the fused Alg. 4 hot path: one dispatch per local iteration and the
+//!   gradient never surfaces to the host (EXPERIMENTS.md §Perf).
+//! * `eval_step`   (flat, tokens) → (Σ nll, count)          — test PPL.
+
+use crate::config::DataConfig;
+use crate::coordinator::backend::{EvalMetrics, WorkerBackend};
+use crate::data::BatchLoader;
+use crate::error::{Error, Result};
+
+use super::engine::{read_f32_into, read_scalar_f32, Arg, Engine, LoadedGraph};
+
+/// PJRT worker backend for one preset.
+pub struct PjrtBackend {
+    engine: Engine,
+    train_step: LoadedGraph,
+    local_step: Option<LoadedGraph>,
+    eval_step: LoadedGraph,
+    loader: BatchLoader,
+    worker: usize,
+    d: usize,
+    eval_batches: usize,
+}
+
+impl PjrtBackend {
+    /// Build the backend for `worker` (call on the worker's own thread).
+    pub fn new(
+        artifacts_dir: &str,
+        preset: &str,
+        worker: usize,
+        workers: usize,
+        data_cfg: &DataConfig,
+        seed: u64,
+    ) -> Result<PjrtBackend> {
+        let engine = Engine::new(artifacts_dir, preset)?;
+        let p = engine.preset();
+        let loader = BatchLoader::new(
+            p.vocab,
+            workers,
+            p.batch,
+            p.eval_batch,
+            p.seq,
+            data_cfg,
+            seed,
+        );
+        let train_step = engine.load_graph("train_step")?;
+        // The fused graph is optional in the manifest (older artifact sets).
+        let local_step = engine.load_graph("local_step_adaalter").ok();
+        let eval_step = engine.load_graph("eval_step")?;
+        let d = p.d;
+        Ok(PjrtBackend {
+            engine,
+            train_step,
+            local_step,
+            eval_step,
+            loader,
+            worker,
+            d,
+            eval_batches: data_cfg.eval_batches.max(1),
+        })
+    }
+
+    /// Tokens per training batch (rows × row-length) — samples/step for
+    /// throughput accounting.
+    pub fn samples_per_step(&self) -> usize {
+        self.loader.samples_per_batch()
+    }
+}
+
+impl WorkerBackend for PjrtBackend {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn loss_and_grad(&mut self, x: &[f32], step: u64, out: &mut [f32]) -> Result<f32> {
+        let tokens = self.loader.train_batch(self.worker, step);
+        let outs = self.train_step.run(&[Arg::F32(x), Arg::I32(&tokens)])?;
+        let loss = read_scalar_f32(&outs[0])?;
+        read_f32_into(&outs[1], out)?;
+        Ok(loss)
+    }
+
+    fn fused_local_adaalter(
+        &mut self,
+        x: &mut [f32],
+        b2_sync: &[f32],
+        acc: &mut [f32],
+        denom_add: f32,
+        lr: f32,
+        step: u64,
+    ) -> Result<Option<f32>> {
+        let Some(graph) = &self.local_step else {
+            return Ok(None);
+        };
+        let tokens = self.loader.train_batch(self.worker, step);
+        let da = [denom_add];
+        let lr_arr = [lr];
+        let outs = graph.run(&[
+            Arg::F32(x),
+            Arg::F32(b2_sync),
+            Arg::F32(acc),
+            Arg::I32(&tokens),
+            Arg::F32(&da),
+            Arg::F32(&lr_arr),
+        ])?;
+        read_f32_into(&outs[0], x)?;
+        read_f32_into(&outs[1], acc)?;
+        let loss = read_scalar_f32(&outs[2])?;
+        Ok(Some(loss))
+    }
+
+    fn eval(&mut self, x: &[f32]) -> Result<EvalMetrics> {
+        let mut sum_nll = 0.0f64;
+        let mut count = 0.0f64;
+        for k in 0..self.eval_batches {
+            let tokens = self.loader.eval_batch(k as u64);
+            let outs = self.eval_step.run(&[Arg::F32(x), Arg::I32(&tokens)])?;
+            sum_nll += read_scalar_f32(&outs[0])? as f64;
+            count += read_scalar_f32(&outs[1])? as f64;
+        }
+        if count == 0.0 {
+            return Err(Error::Runtime("eval produced zero tokens".into()));
+        }
+        let mean = sum_nll / count;
+        Ok(EvalMetrics { loss: mean, ppl: Some(mean.exp()) })
+    }
+
+    fn init_params(&self) -> Result<Vec<f32>> {
+        self.engine.init_params()
+    }
+}

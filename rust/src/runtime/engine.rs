@@ -1,0 +1,179 @@
+//! PJRT engine: load the AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, xla_extension 0.5.1):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. The interchange format is HLO *text* —
+//! jax ≥ 0.5 serialized protos carry 64-bit instruction ids the 0.5.1
+//! parser rejects; the text parser reassigns ids (aot.py docstring,
+//! /opt/xla-example/README.md).
+//!
+//! Thread model: `PjRtClient` is `Rc`-based (not `Send`), so each worker
+//! thread owns its own `Engine` — the factory pattern in
+//! [`crate::coordinator::backend`]. This also mirrors the real topology
+//! (one PJRT device per worker).
+//!
+//! Every lowered graph returns a tuple; PJRT hands it back as a single
+//! tuple buffer which [`LoadedGraph::run`] decomposes into per-output
+//! literals.
+
+use crate::error::{Error, Result};
+
+use super::artifact::{ArtifactEntry, Dtype, Manifest, PresetManifest, TensorSpec};
+
+/// Host-side argument for a graph invocation.
+pub enum Arg<'a> {
+    /// f32 tensor with the artifact-declared shape.
+    F32(&'a [f32]),
+    /// i32 tensor with the artifact-declared shape.
+    I32(&'a [i32]),
+}
+
+impl Arg<'_> {
+    fn dtype(&self) -> Dtype {
+        match self {
+            Arg::F32(_) => Dtype::F32,
+            Arg::I32(_) => Dtype::I32,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Arg::F32(v) => v.len(),
+            Arg::I32(v) => v.len(),
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        let bytes: &[u8] = match self {
+            Arg::F32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+            Arg::I32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+        };
+        let ty = match self {
+            Arg::F32(_) => xla::ElementType::F32,
+            Arg::I32(_) => xla::ElementType::S32,
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &spec.shape, bytes)
+            .map_err(Error::runtime)
+    }
+}
+
+/// A compiled, ready-to-run graph.
+pub struct LoadedGraph {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ArtifactEntry,
+    name: String,
+}
+
+impl LoadedGraph {
+    /// Declared output specs.
+    pub fn outputs(&self) -> &[TensorSpec] {
+        &self.entry.outputs
+    }
+
+    /// Execute with shape/dtype-checked host arguments; returns one
+    /// decomposed literal per declared output.
+    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.entry.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: got {} args, graph takes {}",
+                self.name,
+                args.len(),
+                self.entry.inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, spec)) in args.iter().zip(&self.entry.inputs).enumerate() {
+            if arg.dtype() != spec.dtype || arg.len() != spec.elements() {
+                return Err(Error::Runtime(format!(
+                    "{}: arg {i} is {:?}×{}, graph wants {:?}×{}",
+                    self.name,
+                    arg.dtype(),
+                    arg.len(),
+                    spec.dtype,
+                    spec.elements()
+                )));
+            }
+            literals.push(arg.to_literal(spec)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(Error::runtime)?;
+        let tuple = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime(format!("{}: empty result", self.name)))?
+            .to_literal_sync()
+            .map_err(Error::runtime)?;
+        let parts = tuple.to_tuple().map_err(Error::runtime)?;
+        if parts.len() != self.entry.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: {} outputs, manifest declares {}",
+                self.name,
+                parts.len(),
+                self.entry.outputs.len()
+            )));
+        }
+        Ok(parts)
+    }
+}
+
+/// Copy an f32 output literal into a slice.
+pub fn read_f32_into(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to::<f32>(out).map_err(Error::runtime)
+}
+
+/// Read a scalar f32 output.
+pub fn read_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(Error::runtime)
+}
+
+/// Per-thread PJRT engine for one preset.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    preset: String,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the manifest.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>, preset: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        manifest.preset(preset)?; // validate early
+        let client = xla::PjRtClient::cpu().map_err(Error::runtime)?;
+        Ok(Engine { client, manifest, preset: preset.to_string() })
+    }
+
+    /// The preset manifest.
+    pub fn preset(&self) -> &PresetManifest {
+        self.manifest.preset(&self.preset).expect("validated in new()")
+    }
+
+    /// The whole manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Initial parameters for this preset.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        self.manifest.load_init_params(&self.preset)
+    }
+
+    /// Load + compile one graph by logical name.
+    pub fn load_graph(&self, name: &str) -> Result<LoadedGraph> {
+        let entry = self.preset().artifact(name)?.clone();
+        let path = self.manifest.artifact_path(&entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-utf8 path {}", path.display())))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
+        Ok(LoadedGraph { exe, entry, name: name.to_string() })
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime: PJRT loading and execution of the AOT HLO-text artifacts.
+//!
+//! * [`artifact`] — typed manifest (`artifacts/manifest.json`).
+//! * [`engine`] — PJRT client + graph compile/execute with shape checks.
+//! * [`backend`] — the [`crate::coordinator::WorkerBackend`] over the LM.
+
+pub mod artifact;
+pub mod backend;
+pub mod engine;
+
+pub use artifact::{artifacts_available, Manifest, PresetManifest};
+pub use backend::PjrtBackend;
+pub use engine::{Arg, Engine, LoadedGraph};

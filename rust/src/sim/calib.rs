@@ -1,0 +1,138 @@
+//! Calibration of the cluster simulator against the paper's own numbers.
+//!
+//! The paper's testbed (one machine, 8× V100-16GB, Big-LSTM on 1B-word,
+//! batch 256/GPU) is reproduced as an analytic cost model whose constants
+//! are **fit to Table 2 and §6.4 of the paper itself**:
+//!
+//! Measured by the paper (50 epochs, 20,000 global iterations/epoch):
+//! * AdaGrad (fully sync):      98.05 h  →  0.3530 s/iter
+//! * Local AdaAlter H=4:        69.17 h  →  0.2490 s/iter
+//! * Local AdaAlter H=8:        67.41 h  →  0.2427 s/iter
+//! * Local AdaAlter H=12:       65.49 h  →  0.2358 s/iter
+//! * Local AdaAlter H=16:       64.22 h  →  0.2312 s/iter
+//!
+//! Fitting `t_iter(H) = t_base + t_sync2 · overlap / H` to the four local
+//! rows gives `t_base ≈ 0.232 s` and an *effective* (non-overlapped)
+//! 2-vector sync cost ≈ 0.072 s. The paper's MXNet parameter server
+//! overlaps communication with computation (layer-bucketed push/pull), so
+//! we model a raw α–β sync cost with an overlap discount `γ`:
+//! `t_sync_visible = (1 − γ) · t_sync_raw`.
+//!
+//! Components:
+//! * `t_compute` = 0.195 s/iter — the paper's "ideal computation-only"
+//!   bound at batch 256 (Fig. 1's lowest baseline).
+//! * dataloader capacity C = 8 · 256 / 0.232 ≈ 8,830 samples/s — chosen so
+//!   data loading binds exactly at 8 workers (`§6.4`: "when there are too
+//!   many workers, the data-loading also becomes a bottleneck"; the gap
+//!   between H=∞ and ideal-compute in Fig. 1).
+//! * payload = 4·d bytes with d = 0.83e9 (Big LSTM, §6.1 / Józefowicz et
+//!   al.), server aggregate bandwidth 132 GB/s and γ = 0.7, which lands
+//!   the fully-sync visible cost at `(1−γ)·2·n·4d/β ≈ 0.121 s` so that
+//!   AdaGrad@8 totals 0.353 s/iter — the Table 2 value.
+
+use crate::comm::netmodel::{NetModel, Topology};
+
+/// Paper-calibrated V100 cluster constants.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// Pure computation time per iteration at the reference batch (s).
+    pub t_compute_s: f64,
+    /// Host data-loading capacity, samples/s (shared across workers).
+    pub dataloader_samples_per_s: f64,
+    /// Per-GPU batch size the constants were fit at.
+    pub batch_per_worker: u64,
+    /// Model dimension d (parameters) of the simulated Big LSTM.
+    pub model_params: u64,
+    /// Fraction of the raw per-iteration gradient-sync time hidden by
+    /// compute overlap (γ₁ — layer-bucketed push/pull pipelined with
+    /// backprop).
+    pub overlap: f64,
+    /// Fraction of the raw periodic bulk state sync (local algorithms)
+    /// hidden by overlap (γ₂). Bulk transfers pipeline far better than the
+    /// per-iteration fine-grained KVStore sync: fitted to the paper's
+    /// Table 2 local rows (visible cost ≈ 0.072 s per 2-vector round).
+    pub periodic_overlap: f64,
+    /// The α–β network model (PS topology, paper's setting).
+    pub net: NetModel,
+    /// Relative extra compute of AdaAlter vs AdaGrad (Table 2: +0.4%).
+    pub adaalter_compute_overhead: f64,
+}
+
+impl Calibration {
+    /// The paper's 8×V100 testbed.
+    pub fn paper_v100() -> Self {
+        Calibration {
+            t_compute_s: 0.195,
+            dataloader_samples_per_s: 8830.0,
+            batch_per_worker: 256,
+            model_params: 830_000_000,
+            overlap: 0.70,
+            periodic_overlap: 0.91,
+            net: NetModel {
+                topology: Topology::ParameterServer,
+                alpha_s: 50e-6,
+                beta_bytes_per_s: 132e9,
+                server_beta_bytes_per_s: 132e9,
+            },
+            adaalter_compute_overhead: 0.004,
+        }
+    }
+
+    /// Bytes of one synchronized vector (f32 flat model).
+    pub fn vector_bytes(&self) -> u64 {
+        4 * self.model_params
+    }
+
+    /// Visible (non-overlapped) per-iteration gradient sync time.
+    pub fn visible_sync_s(&self, n: usize, vectors: u64) -> f64 {
+        (1.0 - self.overlap) * self.net.sync_time(n, self.vector_bytes(), vectors)
+    }
+
+    /// Visible time of one periodic bulk state sync (local algorithms).
+    pub fn visible_periodic_sync_s(&self, n: usize, vectors: u64) -> f64 {
+        (1.0 - self.periodic_overlap) * self.net.sync_time(n, self.vector_bytes(), vectors)
+    }
+
+    /// Host data-loading time per iteration with n workers drawing
+    /// `batch_per_worker` samples each from the shared loader.
+    pub fn dataload_s(&self, n: usize) -> f64 {
+        n as f64 * self.batch_per_worker as f64 / self.dataloader_samples_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fully_sync_iteration_matches_table2() {
+        // AdaGrad @ 8 workers must land on ~0.353 s/iter (98.05 h / 50
+        // epochs / 20k iters).
+        let c = Calibration::paper_v100();
+        let t = c.t_compute_s.max(c.dataload_s(8)) + c.visible_sync_s(8, 1);
+        assert!((t - 0.353).abs() < 0.012, "t_iter = {t}");
+    }
+
+    #[test]
+    fn local_h4_lands_near_paper() {
+        let c = Calibration::paper_v100();
+        let t = c.t_compute_s.max(c.dataload_s(8)) + c.visible_periodic_sync_s(8, 2) / 4.0;
+        assert!((t - 0.249).abs() < 0.015, "t_iter = {t}");
+    }
+
+    #[test]
+    fn dataloader_binds_only_at_eight_workers() {
+        // §6.4: scaling stalls going 4 → 8 because loading becomes the
+        // bottleneck.
+        let c = Calibration::paper_v100();
+        assert!(c.dataload_s(4) < c.t_compute_s);
+        assert!(c.dataload_s(8) > c.t_compute_s);
+    }
+
+    #[test]
+    fn overlap_discount_applied() {
+        let c = Calibration::paper_v100();
+        let raw = c.net.sync_time(8, c.vector_bytes(), 1);
+        assert!((c.visible_sync_s(8, 1) - 0.3 * raw).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,107 @@
+//! Virtual clock — deterministic simulated-time accounting.
+//!
+//! Real wall-clock on this 1-core box says nothing about an 8×V100
+//! cluster; every time-axis in the reproduced figures is *virtual*: the
+//! trainer charges each iteration with modeled compute/dataload/sync costs
+//! (from [`super::calib`]) and the clock integrates them. Charges are
+//! labelled so benches can report the time composition (compute vs
+//! communication vs data loading — exactly Fig. 1's decomposition).
+
+use std::collections::BTreeMap;
+
+/// What a time charge pays for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Charge {
+    /// Forward/backward + optimizer computation.
+    Compute,
+    /// Host data loading (the §6.4 bottleneck).
+    DataLoad,
+    /// Synchronization (PS push/pull or all-reduce).
+    Communication,
+    /// Anything else (checkpointing, eval…).
+    Other,
+}
+
+/// Accumulating virtual clock.
+#[derive(Clone, Debug, Default)]
+pub struct VirtualClock {
+    now_s: f64,
+    by_charge: BTreeMap<Charge, f64>,
+}
+
+impl VirtualClock {
+    /// Fresh clock at t = 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance by `dt` seconds, attributed to `charge`.
+    pub fn advance(&mut self, charge: Charge, dt: f64) {
+        assert!(dt >= 0.0 && dt.is_finite(), "bad time charge {dt}");
+        self.now_s += dt;
+        *self.by_charge.entry(charge).or_insert(0.0) += dt;
+    }
+
+    /// Current virtual time, seconds.
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    /// Total attributed to one charge class.
+    pub fn total(&self, charge: Charge) -> f64 {
+        self.by_charge.get(&charge).copied().unwrap_or(0.0)
+    }
+
+    /// (charge, seconds) breakdown, sorted by charge.
+    pub fn breakdown(&self) -> Vec<(Charge, f64)> {
+        self.by_charge.iter().map(|(&c, &t)| (c, t)).collect()
+    }
+
+    /// Fraction of total time in `charge` (0 if clock never advanced).
+    pub fn fraction(&self, charge: Charge) -> f64 {
+        if self.now_s == 0.0 {
+            0.0
+        } else {
+            self.total(charge) / self.now_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_and_attributes() {
+        let mut c = VirtualClock::new();
+        c.advance(Charge::Compute, 1.5);
+        c.advance(Charge::Communication, 0.5);
+        c.advance(Charge::Compute, 0.5);
+        assert_eq!(c.now_s(), 2.5);
+        assert_eq!(c.total(Charge::Compute), 2.0);
+        assert_eq!(c.total(Charge::Communication), 0.5);
+        assert_eq!(c.total(Charge::DataLoad), 0.0);
+        assert!((c.fraction(Charge::Compute) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_sums_to_now() {
+        let mut c = VirtualClock::new();
+        c.advance(Charge::Compute, 1.0);
+        c.advance(Charge::DataLoad, 2.0);
+        c.advance(Charge::Other, 3.0);
+        let sum: f64 = c.breakdown().iter().map(|(_, t)| t).sum();
+        assert_eq!(sum, c.now_s());
+    }
+
+    #[test]
+    #[should_panic(expected = "bad time charge")]
+    fn rejects_negative_time() {
+        VirtualClock::new().advance(Charge::Compute, -1.0);
+    }
+
+    #[test]
+    fn empty_clock_fraction_zero() {
+        assert_eq!(VirtualClock::new().fraction(Charge::Compute), 0.0);
+    }
+}

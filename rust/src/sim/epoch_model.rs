@@ -1,0 +1,252 @@
+//! Analytic epoch-time / throughput model — the engine behind the Fig. 1
+//! and Fig. 2 reproductions.
+//!
+//! For a calibrated cluster ([`super::calib::Calibration`]) and an
+//! algorithm, the per-iteration time decomposes (DESIGN.md §5) as
+//!
+//! ```text
+//!   t_iter = max(t_compute, t_dataload(n))  +  t_sync_visible(n, v) / H
+//! ```
+//!
+//! with `v` vectors per sync (1 for gradient sync / parameter averaging,
+//! 2 for local AdaAlter's params + denominators) and `H` the
+//! synchronization period (H=1 for fully-sync, H=∞ ⇒ no comm term). The
+//! paper's epoch is a fixed 20,000 × 8 × 256 samples regardless of n, so
+//! `iters_per_epoch(n) = 20,000 · 8 / n` at batch 256.
+
+use crate::config::SyncPeriod;
+use crate::sim::calib::Calibration;
+
+/// Algorithm variants as evaluated in Fig. 1/2.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SimAlgo {
+    /// Fully-synchronous distributed AdaGrad (Alg. 1).
+    AdaGrad,
+    /// Fully-synchronous AdaAlter (Alg. 3) — tiny compute overhead.
+    AdaAlter,
+    /// Local AdaAlter (Alg. 4) with period H (or H=∞: comm removed).
+    LocalAdaAlter(SyncPeriod),
+    /// Local SGD (Alg. 2) with period H — ships 1 vector per sync.
+    LocalSgd(SyncPeriod),
+    /// The paper's "ideal computation-only overhead" baseline: no comm,
+    /// no data loading (dummy batches).
+    IdealComputeOnly,
+}
+
+impl SimAlgo {
+    /// Display label (matches the paper's legends).
+    pub fn label(&self) -> String {
+        match self {
+            SimAlgo::AdaGrad => "AdaGrad".into(),
+            SimAlgo::AdaAlter => "AdaAlter".into(),
+            SimAlgo::LocalAdaAlter(SyncPeriod::Every(h)) => format!("Local AdaAlter, H={h}"),
+            SimAlgo::LocalAdaAlter(SyncPeriod::Infinite) => "Local AdaAlter, H=inf".into(),
+            SimAlgo::LocalSgd(SyncPeriod::Every(h)) => format!("Local SGD, H={h}"),
+            SimAlgo::LocalSgd(SyncPeriod::Infinite) => "Local SGD, H=inf".into(),
+            SimAlgo::IdealComputeOnly => "Ideal computation-only overhead".into(),
+        }
+    }
+}
+
+/// Per-iteration time decomposition (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterCost {
+    /// GPU compute (fwd/bwd + optimizer).
+    pub compute_s: f64,
+    /// Extra time the shared dataloader adds beyond compute (0 if hidden).
+    pub dataload_extra_s: f64,
+    /// Amortised visible communication.
+    pub comm_s: f64,
+}
+
+impl IterCost {
+    /// Total per-iteration seconds.
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.dataload_extra_s + self.comm_s
+    }
+}
+
+/// The analytic model.
+pub struct EpochModel {
+    pub calib: Calibration,
+    /// Samples processed per epoch (paper: 20,000 × 8 × 256).
+    pub samples_per_epoch: u64,
+}
+
+impl EpochModel {
+    /// Model with the paper's epoch definition.
+    pub fn paper() -> Self {
+        EpochModel {
+            calib: Calibration::paper_v100(),
+            samples_per_epoch: 20_000 * 8 * 256,
+        }
+    }
+
+    /// Global iterations per epoch with n workers.
+    pub fn iters_per_epoch(&self, n: usize) -> f64 {
+        self.samples_per_epoch as f64 / (n as f64 * self.calib.batch_per_worker as f64)
+    }
+
+    /// Per-iteration cost decomposition for `algo` on n workers.
+    pub fn iter_cost(&self, algo: SimAlgo, n: usize) -> IterCost {
+        let c = &self.calib;
+        // AdaAlter's swapped update adds ~0.4% to the serial path (Table 2:
+        // 98.47 h vs 98.05 h) — applied after the compute/dataload max so it
+        // survives even when loading binds.
+        let overhead = if matches!(algo, SimAlgo::AdaAlter | SimAlgo::LocalAdaAlter(_)) {
+            1.0 + c.adaalter_compute_overhead
+        } else {
+            1.0
+        };
+        if matches!(algo, SimAlgo::IdealComputeOnly) {
+            return IterCost { compute_s: c.t_compute_s, ..Default::default() };
+        }
+        let base = c.t_compute_s.max(c.dataload_s(n)) * overhead;
+        let compute = c.t_compute_s * overhead;
+        let dataload_extra = base - compute;
+        let comm = match algo {
+            // PS: the server sees every worker's gradient, so AdaAlter's
+            // squared-average accumulation costs no extra traffic.
+            SimAlgo::AdaGrad | SimAlgo::AdaAlter => c.visible_sync_s(n, 1),
+            SimAlgo::LocalAdaAlter(p) => match p.period() {
+                Some(h) => c.visible_periodic_sync_s(n, 2) / h as f64,
+                None => 0.0,
+            },
+            SimAlgo::LocalSgd(p) => match p.period() {
+                Some(h) => c.visible_periodic_sync_s(n, 1) / h as f64,
+                None => 0.0,
+            },
+            SimAlgo::IdealComputeOnly => unreachable!(),
+        };
+        IterCost { compute_s: compute, dataload_extra_s: dataload_extra, comm_s: comm }
+    }
+
+    /// Seconds per epoch — the Fig. 1 quantity.
+    pub fn epoch_time_s(&self, algo: SimAlgo, n: usize) -> f64 {
+        self.iters_per_epoch(n) * self.iter_cost(algo, n).total_s()
+    }
+
+    /// Samples/second — the Fig. 2 quantity.
+    pub fn throughput(&self, algo: SimAlgo, n: usize) -> f64 {
+        let t = self.iter_cost(algo, n).total_s();
+        n as f64 * self.calib.batch_per_worker as f64 / t
+    }
+
+    /// End-of-training hours for `epochs` epochs — the Table 2 time column.
+    pub fn training_hours(&self, algo: SimAlgo, n: usize, epochs: u64) -> f64 {
+        epochs as f64 * self.epoch_time_s(algo, n) / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SyncPeriod::{Every, Infinite};
+
+    fn model() -> EpochModel {
+        EpochModel::paper()
+    }
+
+    /// The headline Table 2 reproduction: every time lands within 5% of
+    /// the paper's measured hours.
+    #[test]
+    fn table2_times_within_tolerance() {
+        let m = model();
+        let cases: &[(SimAlgo, f64)] = &[
+            (SimAlgo::AdaGrad, 98.05),
+            (SimAlgo::AdaAlter, 98.47),
+            (SimAlgo::LocalAdaAlter(Every(4)), 69.17),
+            (SimAlgo::LocalAdaAlter(Every(8)), 67.41),
+            (SimAlgo::LocalAdaAlter(Every(12)), 65.49),
+            (SimAlgo::LocalAdaAlter(Every(16)), 64.22),
+        ];
+        for &(algo, want) in cases {
+            let got = m.training_hours(algo, 8, 50);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.05, "{}: {got:.2} h vs paper {want} h ({:.1}%)",
+                    algo.label(), rel * 100.0);
+        }
+    }
+
+    /// Paper §6.3.2: "local AdaAlter can reduce almost 30% of the training
+    /// time" (H=4 vs fully-sync AdaGrad).
+    #[test]
+    fn thirty_percent_reduction_at_h4() {
+        let m = model();
+        let sync = m.epoch_time_s(SimAlgo::AdaGrad, 8);
+        let h4 = m.epoch_time_s(SimAlgo::LocalAdaAlter(Every(4)), 8);
+        let reduction = 1.0 - h4 / sync;
+        assert!((0.25..0.35).contains(&reduction), "reduction {reduction}");
+    }
+
+    #[test]
+    fn ordering_matches_fig1() {
+        // ideal < H=inf < H=16 < … < H=4 < fully-sync, at every n.
+        let m = model();
+        for n in [1usize, 2, 4, 8] {
+            let ideal = m.epoch_time_s(SimAlgo::IdealComputeOnly, n);
+            let hinf = m.epoch_time_s(SimAlgo::LocalAdaAlter(Infinite), n);
+            let mut prev = hinf;
+            assert!(ideal <= hinf + 1e-9, "n={n}");
+            for h in [16u64, 12, 8, 4] {
+                let t = m.epoch_time_s(SimAlgo::LocalAdaAlter(Every(h)), n);
+                assert!(t >= prev - 1e-12, "n={n} H={h}");
+                prev = t;
+            }
+            let sync = m.epoch_time_s(SimAlgo::AdaAlter, n);
+            assert!(sync >= prev, "n={n} sync");
+            if n >= 2 {
+                assert!(m.epoch_time_s(SimAlgo::AdaGrad, n) >= prev, "n={n} adagrad");
+            }
+        }
+    }
+
+    #[test]
+    fn throughput_and_epoch_time_consistent() {
+        let m = model();
+        for n in [1usize, 2, 4, 8] {
+            let tp = m.throughput(SimAlgo::AdaGrad, n);
+            let et = m.epoch_time_s(SimAlgo::AdaGrad, n);
+            let implied = m.samples_per_epoch as f64 / et;
+            assert!((tp - implied).abs() / tp < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sublinear_scaling_from_4_to_8() {
+        // §6.4: "almost all the algorithms do not scale well when changing
+        // the number of workers from 4 to 8" — throughput ratio << 2.
+        let m = model();
+        for algo in [
+            SimAlgo::AdaGrad,
+            SimAlgo::LocalAdaAlter(Every(4)),
+            SimAlgo::LocalAdaAlter(Infinite),
+        ] {
+            let r = m.throughput(algo, 8) / m.throughput(algo, 4);
+            assert!(r < 1.7, "{}: ratio {r}", algo.label());
+        }
+        // …but the ideal baseline scales perfectly by construction.
+        let r = m.throughput(SimAlgo::IdealComputeOnly, 8)
+            / m.throughput(SimAlgo::IdealComputeOnly, 4);
+        assert!((r - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn h_inf_equals_no_comm() {
+        let m = model();
+        let c = m.iter_cost(SimAlgo::LocalAdaAlter(Infinite), 8);
+        assert_eq!(c.comm_s, 0.0);
+        // H=inf differs from ideal only by the dataloader bottleneck.
+        let ideal = m.iter_cost(SimAlgo::IdealComputeOnly, 8);
+        assert!(c.total_s() > ideal.total_s());
+    }
+
+    #[test]
+    fn local_sgd_ships_half_of_local_adaalter() {
+        let m = model();
+        let aa = m.iter_cost(SimAlgo::LocalAdaAlter(Every(4)), 8).comm_s;
+        let sgd = m.iter_cost(SimAlgo::LocalSgd(Every(4)), 8).comm_s;
+        let ratio = aa / sgd;
+        assert!((ratio - 2.0).abs() < 0.01, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Tiny CSV writer for experiment outputs (`results/*.csv`).
+//!
+//! Benches and examples emit the paper's figures/tables as CSV series; this
+//! keeps quoting rules in one place. Reading is not needed (downstream
+//! plotting happens outside the repo).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+/// Quote a field if it contains a comma, quote or newline.
+fn quote(field: &str) -> String {
+    if field.contains([',', '"', '\n']) {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(
+            out,
+            "{}",
+            header.iter().map(|h| quote(h)).collect::<Vec<_>>().join(",")
+        )?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    /// Write one row of stringified fields. Panics if the column count does
+    /// not match the header (catching experiment-harness bugs early).
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        assert_eq!(
+            fields.len(),
+            self.cols,
+            "csv row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        writeln!(
+            self.out,
+            "{}",
+            fields.iter().map(|f| quote(f)).collect::<Vec<_>>().join(",")
+        )?;
+        Ok(())
+    }
+
+    /// Flush to disk.
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Convenience macro: stringify heterogeneous row fields.
+#[macro_export]
+macro_rules! csv_row {
+    ($w:expr, $($field:expr),+ $(,)?) => {
+        $w.row(&[$(format!("{}", $field)),+])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("adaalter_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x,y".into()]).unwrap();
+            csv_row!(w, 2.5, "plain").unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2.5,plain\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row has 1 fields")]
+    fn wrong_arity_panics() {
+        let dir = std::env::temp_dir().join("adaalter_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn quoting_rules() {
+        assert_eq!(quote("plain"), "plain");
+        assert_eq!(quote("a,b"), "\"a,b\"");
+        assert_eq!(quote("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+}

@@ -1,0 +1,172 @@
+//! Flat-vector math used on the coordinator hot paths.
+//!
+//! Everything operates on contiguous `&[f32]` / `&mut [f32]` so LLVM can
+//! auto-vectorise; the loops are written without bounds checks in their hot
+//! bodies (slices are pre-narrowed to a common length). The optimizer-step
+//! fused loops live in [`crate::optim`]; these are the shared aggregation /
+//! norm primitives.
+
+/// Panic-with-context helper for length mismatches (protocol invariant).
+#[inline]
+fn check_len(a: usize, b: usize, what: &str) {
+    assert_eq!(a, b, "length mismatch in {what}: {a} vs {b}");
+}
+
+/// Cache-blocking chunk for multi-input reductions: 4 KiB of f32 keeps the
+/// accumulator chunk resident in L1 across the n input passes, turning the
+/// n-way mean from (n reads + n read-modify-writes of `out`) into
+/// (n reads + 1 write) of DRAM traffic. EXPERIMENTS.md §Perf.
+const MEAN_CHUNK: usize = 1024;
+
+/// `out[i] = mean_k inputs[k][i]` — the Alg. 4 lines 11–12 synchronization
+/// average. `inputs` must be non-empty and same-length.
+pub fn mean_into(inputs: &[&[f32]], out: &mut [f32]) {
+    assert!(!inputs.is_empty(), "mean_into: no inputs");
+    let d = out.len();
+    for v in inputs {
+        check_len(v.len(), d, "mean_into");
+    }
+    let scale = 1.0 / inputs.len() as f32;
+    let mut start = 0;
+    while start < d {
+        let end = (start + MEAN_CHUNK).min(d);
+        let out_c = &mut out[start..end];
+        out_c.copy_from_slice(&inputs[0][start..end]);
+        for v in &inputs[1..] {
+            let v = &v[start..end];
+            for (o, &x) in out_c.iter_mut().zip(v) {
+                *o += x;
+            }
+        }
+        for o in out_c.iter_mut() {
+            *o *= scale;
+        }
+        start = end;
+    }
+}
+
+/// In-place `acc += x`.
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    check_len(acc.len(), x.len(), "add_assign");
+    let d = acc.len();
+    let x = &x[..d];
+    for i in 0..d {
+        acc[i] += x[i];
+    }
+}
+
+/// In-place `acc *= s`.
+pub fn scale_assign(acc: &mut [f32], s: f32) {
+    for v in acc.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// In-place `acc += s * x` (axpy).
+pub fn axpy(acc: &mut [f32], s: f32, x: &[f32]) {
+    check_len(acc.len(), x.len(), "axpy");
+    let d = acc.len();
+    let x = &x[..d];
+    for i in 0..d {
+        acc[i] += s * x[i];
+    }
+}
+
+/// Euclidean norm.
+pub fn l2_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Max |x_i| (the paper's Assumption 2 bound ρ is on the ∞-norm).
+pub fn linf_norm(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// Dot product in f64 accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    check_len(a.len(), b.len(), "dot");
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// `max_i |a_i - b_i|` — the equivalence metric used by the H=1 ≡ sync test.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    check_len(a.len(), b.len(), "max_abs_diff");
+    a.iter().zip(b).fold(0.0f32, |m, (&x, &y)| m.max((x - y).abs()))
+}
+
+/// True if every element is finite (NaN/Inf tripwire after each sync round).
+pub fn all_finite(x: &[f32]) -> bool {
+    x.iter().all(|v| v.is_finite())
+}
+
+/// Mean of a slice (f64 accumulation).
+pub fn mean(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_into_basic() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [3.0f32, 4.0, 5.0];
+        let mut out = [0.0f32; 3];
+        mean_into(&[&a, &b], &mut out);
+        assert_eq!(out, [2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn mean_into_single_input_is_copy() {
+        let a = [1.5f32, -2.5];
+        let mut out = [0.0f32; 2];
+        mean_into(&[&a], &mut out);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mean_into_rejects_ragged() {
+        let a = [1.0f32; 3];
+        let b = [1.0f32; 2];
+        let mut out = [0.0f32; 3];
+        mean_into(&[&a, &b], &mut out);
+    }
+
+    #[test]
+    fn axpy_and_add() {
+        let mut acc = vec![1.0f32; 4];
+        axpy(&mut acc, 2.0, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(acc, vec![3.0, 5.0, 7.0, 9.0]);
+        add_assign(&mut acc, &[1.0; 4]);
+        assert_eq!(acc, vec![4.0, 6.0, 8.0, 10.0]);
+        scale_assign(&mut acc, 0.5);
+        assert_eq!(acc, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn norms_and_dot() {
+        let v = [3.0f32, 4.0];
+        assert!((l2_norm(&v) - 5.0).abs() < 1e-12);
+        assert_eq!(linf_norm(&[-7.0, 2.0]), 7.0);
+        assert!((dot(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diff_and_finite() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 1.0]), 1.0);
+        assert!(all_finite(&[1.0, -2.0]));
+        assert!(!all_finite(&[1.0, f32::NAN]));
+        assert!(!all_finite(&[f32::INFINITY]));
+    }
+
+    #[test]
+    fn mean_empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained substrates the offline build image forces us to own:
+//! PRNG (no `rand`), property-testing harness (no `proptest`), JSON reader
+//! (no `serde`), CSV writer, and the SIMD-friendly vector math the hot paths
+//! use.
+
+pub mod csv;
+pub mod json;
+pub mod math;
+pub mod prop;
+pub mod rng;
+pub mod timing;
+
+pub use rng::Rng;

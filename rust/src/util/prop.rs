@@ -1,0 +1,227 @@
+//! Hand-rolled property-testing mini-framework.
+//!
+//! The offline image has no `proptest`, so coordinator invariants (routing,
+//! batching, sync-state — DESIGN.md §6) are checked with this harness: a
+//! seeded generator API + a runner that, on failure, re-runs with a reduced
+//! "size" parameter to report the smallest failing scale it can find
+//! (coarse-grained shrinking: sizes shrink, seeds are reported verbatim so
+//! every failure is reproducible from the printed seed).
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't get the xla rpath link flags on
+//! # // this image (libstdc++ from /opt/xla_extension), so compile-only.
+//! use adaalter::util::prop::{self, Gen};
+//! prop::check("mean within bounds", 100, |g| {
+//!     let xs = g.vec_f32(1..100, -10.0..10.0);
+//!     let m = xs.iter().sum::<f32>() / xs.len() as f32;
+//!     prop::assert_that(m >= -10.0 && m <= 10.0, "mean out of range")
+//! });
+//! ```
+
+use std::ops::Range;
+
+use super::rng::Rng;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper producing a `PropResult`.
+pub fn assert_that(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("{what}: index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Seeded test-case generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in `[0.0, 1.0]`; shrinking re-runs with smaller sizes.
+    size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    /// Direct access to the underlying RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// usize in `range`, biased smaller as `size` shrinks.
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        let span = (range.end - range.start).max(1);
+        let scaled = ((span as f64 - 1.0) * self.size).round() as usize + 1;
+        range.start + self.rng.below(scaled.min(span) as u64) as usize
+    }
+
+    /// u64 in `range`.
+    pub fn u64_in(&mut self, range: Range<u64>) -> u64 {
+        self.rng.range(range.start, range.end)
+    }
+
+    /// f32 uniform in `range`.
+    pub fn f32_in(&mut self, range: Range<f32>) -> f32 {
+        range.start + self.rng.f32() * (range.end - range.start)
+    }
+
+    /// f64 uniform in `range`.
+    pub fn f64_in(&mut self, range: Range<f64>) -> f64 {
+        range.start + self.rng.f64() * (range.end - range.start)
+    }
+
+    /// Standard-normal f32 vector of generated length.
+    pub fn vec_normal(&mut self, len: Range<usize>, sigma: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        let mut v = vec![0.0f32; n];
+        self.rng.fill_normal(&mut v, sigma);
+        v
+    }
+
+    /// Uniform f32 vector of generated length.
+    pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    /// Pick one of the provided choices.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// Coin flip.
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+}
+
+/// Run `cases` random evaluations of `prop`. Panics (test failure) on the
+/// first failing case, after attempting size-shrinking, with a message that
+/// contains the seed needed to replay the exact case.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    // Base seed: stable per property name so failures replay across runs,
+    // but different properties explore different streams.
+    let base = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(&mut Gen::new(seed, 1.0)) {
+            // Coarse shrink: retry the same seed at smaller sizes and report
+            // the smallest size that still fails.
+            let mut smallest = (1.0, msg.clone());
+            for &size in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                if let Err(m) = prop(&mut Gen::new(seed, size)) {
+                    smallest = (size, m);
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x}, \
+                 smallest failing size {:.2}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed — used to debug a failure printed by
+/// [`check`].
+pub fn replay<F>(seed: u64, size: f64, prop: F) -> PropResult
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    prop(&mut Gen::new(seed, size))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        // Count via a cell: check() takes Fn, so use interior mutability.
+        let counter = std::cell::Cell::new(0u64);
+        check("always true", 50, |g| {
+            counter.set(counter.get() + 1);
+            let v = g.vec_f32(1..10, 0.0..1.0);
+            assert_that(!v.is_empty(), "empty")
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always false\" failed")]
+    fn failing_property_panics_with_seed() {
+        check("always false", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges", 200, |g| {
+            let n = g.usize_in(3..17);
+            assert_that((3..17).contains(&n), format!("usize {n}"))?;
+            let x = g.f32_in(-2.0..5.0);
+            assert_that((-2.0..5.0).contains(&x), format!("f32 {x}"))?;
+            let u = g.u64_in(10..20);
+            assert_that((10..20).contains(&u), format!("u64 {u}"))
+        });
+    }
+
+    #[test]
+    fn vec_lengths_in_range() {
+        check("vec len", 100, |g| {
+            let v = g.vec_normal(1..64, 1.0);
+            assert_that((1..64).contains(&v.len()), "len")
+        });
+    }
+
+    #[test]
+    fn assert_close_catches_divergence() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-7], 1e-5, "x").is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5, "x").is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5, "x").is_err());
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        // A property that records what it saw, keyed by seed.
+        let prop = |g: &mut Gen| -> PropResult {
+            let v = g.vec_f32(1..100, 0.0..1.0);
+            if v.len() > 90 {
+                Err(format!("len {}", v.len()))
+            } else {
+                Ok(())
+            }
+        };
+        // Find a failing seed manually, then confirm replay fails the same way.
+        for seed in 0..5_000u64 {
+            if replay(seed, 1.0, prop).is_err() {
+                assert!(replay(seed, 1.0, prop).is_err());
+                return;
+            }
+        }
+        panic!("no failing seed found in range");
+    }
+}

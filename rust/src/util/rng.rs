@@ -1,0 +1,286 @@
+//! Deterministic PRNG: SplitMix64 seeding + xoshiro256** core.
+//!
+//! The offline image has no `rand` crate, so the framework owns its PRNG.
+//! Determinism is load-bearing: every experiment (data sharding, synthetic
+//! corpus, gradient noise in the rust-math backend) is keyed by
+//! `(experiment seed, worker id, step)` so runs reproduce bit-for-bit across
+//! invocations and worker-thread schedules.
+//!
+//! Algorithms: Blackman & Vigna, <https://prng.di.unimi.it/> (public domain
+//! reference implementations; test vectors below pin ours to them).
+
+/// xoshiro256** generator, seeded via SplitMix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed from a single u64 (SplitMix64-expanded, per Vigna's guidance).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    /// Derive an independent stream for `(worker, step)` style sub-keys.
+    ///
+    /// Mixes the parts through SplitMix64 so nearby keys decorrelate.
+    pub fn derive(seed: u64, parts: &[u64]) -> Self {
+        let mut sm = seed;
+        let mut acc = splitmix64(&mut sm);
+        for &p in parts {
+            let mut k = acc ^ p.wrapping_mul(0xA24BAED4963EE407);
+            acc = splitmix64(&mut k);
+        }
+        Rng::new(acc)
+    }
+
+    /// Next raw u64 (xoshiro256**).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free for our
+    /// non-cryptographic needs: modulo bias < 2^-32 for n < 2^32).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (pairs cached would complicate state;
+    /// the single-call form is plenty for our volumes).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+            }
+        }
+    }
+
+    /// Standard normal as f32.
+    #[inline]
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a slice with N(0, sigma) noise.
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32() * sigma;
+        }
+    }
+
+    /// Sample from Zipf(s) over `{0, .., n-1}` using inverse-CDF on a
+    /// precomputed table — see [`ZipfTable`] for the table-based fast path.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        // Fisher–Yates.
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+/// Precomputed inverse-CDF table for a Zipf distribution over `n` items.
+///
+/// The synthetic corpus (DESIGN.md S11) approximates the 1B-word benchmark's
+/// heavy-tailed unigram distribution with Zipf(s≈1.1); sampling must be O(1)
+/// amortised, so we binary-search a cumulative table.
+#[derive(Clone)]
+pub struct ZipfTable {
+    cdf: Vec<f64>,
+}
+
+impl ZipfTable {
+    /// Build the table for `n` ranks with exponent `s`.
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "ZipfTable needs at least one item");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        ZipfTable { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// True if the table is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Sample a rank in `[0, n)`; rank 0 is the most frequent.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        // partition_point: first index with cdf[i] >= u.
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference vector from Vigna's xoshiro256** C code seeded with
+    /// s = [1, 2, 3, 4].
+    #[test]
+    fn xoshiro_reference_vector() {
+        let mut r = Rng { s: [1, 2, 3, 4] };
+        let expected: [u64; 5] = [
+            11520,
+            0,
+            1509978240,
+            1215971899390074240,
+            1216172134540287360,
+        ];
+        for &e in &expected {
+            assert_eq!(r.next_u64(), e);
+        }
+    }
+
+    #[test]
+    fn splitmix_seeding_is_deterministic_and_sensitive() {
+        let a: Vec<u64> = (0..4).map(|_| Rng::new(7).next_u64()).collect();
+        let b: Vec<u64> = (0..4).map(|_| Rng::new(7).next_u64()).collect();
+        assert_eq!(a, b);
+        assert_ne!(Rng::new(7).next_u64(), Rng::new(8).next_u64());
+    }
+
+    #[test]
+    fn derive_streams_are_independent() {
+        let mut a = Rng::derive(1, &[0, 5]);
+        let mut b = Rng::derive(1, &[0, 6]);
+        let mut c = Rng::derive(1, &[1, 5]);
+        let (x, y, z) = (a.next_u64(), b.next_u64(), c.next_u64());
+        assert_ne!(x, y);
+        assert_ne!(x, z);
+        assert_ne!(y, z);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(123);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(99);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let n = 200_000;
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            sum += v;
+            sumsq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn zipf_rank0_most_frequent() {
+        let t = ZipfTable::new(1000, 1.1);
+        let mut r = Rng::new(3);
+        let mut c0 = 0;
+        let mut c_other = 0;
+        for _ in 0..50_000 {
+            match t.sample(&mut r) {
+                0 => c0 += 1,
+                500.. => c_other += 1,
+                _ => {}
+            }
+        }
+        assert!(c0 > c_other, "rank0 {c0} vs tail {c_other}");
+    }
+
+    #[test]
+    fn zipf_sample_in_range() {
+        let t = ZipfTable::new(17, 1.0);
+        let mut r = Rng::new(11);
+        for _ in 0..10_000 {
+            assert!(t.sample(&mut r) < 17);
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Micro-benchmark timing harness (the offline image has no `criterion`).
+//!
+//! Used by the `benches/` targets (`harness = false`): warmup + repeated
+//! timed batches, reporting median/mean/min over batches. Deliberately
+//! simple — the figure-level benches care about model-derived numbers, and
+//! the hot-path benches about order-of-magnitude and before/after deltas
+//! (EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters_per_batch: u64,
+    pub batches: usize,
+    /// Nanoseconds per iteration.
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    /// Iterations per second at the median.
+    pub fn per_second(&self) -> f64 {
+        1e9 / self.median_ns
+    }
+
+    /// Bytes/s given bytes touched per iteration.
+    pub fn bandwidth_gbs(&self, bytes_per_iter: u64) -> f64 {
+        bytes_per_iter as f64 * self.per_second() / 1e9
+    }
+}
+
+/// Time `f` with `iters` calls per batch over `batches` batches (after one
+/// warmup batch). The closure should include its own black-box sinks.
+pub fn bench(iters: u64, batches: usize, mut f: impl FnMut()) -> BenchStats {
+    assert!(iters > 0 && batches > 0);
+    // Warmup.
+    for _ in 0..iters {
+        f();
+    }
+    let mut per_iter: Vec<f64> = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    per_iter.sort_by(|a, b| a.total_cmp(b));
+    let median_ns = per_iter[per_iter.len() / 2];
+    let mean_ns = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+    BenchStats {
+        iters_per_batch: iters,
+        batches,
+        median_ns,
+        mean_ns,
+        min_ns: per_iter[0],
+    }
+}
+
+/// Prevent the optimiser from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Pretty-print one bench row (aligned for the bench logs).
+pub fn report(name: &str, stats: &BenchStats, extra: &str) {
+    println!(
+        "{name:<44} {:>12.0} ns/iter  {:>14.0} iter/s  {extra}",
+        stats.median_ns,
+        stats.per_second()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut acc = 0u64;
+        let s = bench(100, 5, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.per_second() > 0.0);
+    }
+
+    #[test]
+    fn bandwidth_math() {
+        let s = BenchStats {
+            iters_per_batch: 1,
+            batches: 1,
+            median_ns: 1000.0, // 1 µs/iter
+            mean_ns: 1000.0,
+            min_ns: 1000.0,
+        };
+        // 1 MiB per µs ≈ 1048 GB/s
+        let gbs = s.bandwidth_gbs(1 << 20);
+        assert!((gbs - 1.048576e3).abs() < 1e-6, "{gbs}");
+    }
+}

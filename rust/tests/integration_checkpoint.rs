@@ -1,0 +1,130 @@
+//! Integration: checkpoint/resume correctness — a resumed run must be
+//! bitwise-equal to an uninterrupted one (training is deterministic, so any
+//! divergence is a state-capture bug).
+
+use std::sync::Arc;
+
+use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::{BackendFactory, Checkpoint, Trainer};
+use adaalter::sim::SyntheticProblem;
+
+fn cfg(algo: Algorithm, h: SyncPeriod, steps: u64, ckpt_every: u64, dir: &str) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.train.workers = 4;
+    c.train.steps = steps;
+    c.train.sync_period = if algo.is_local() { h } else { SyncPeriod::Every(1) };
+    c.train.backend = Backend::RustMath;
+    c.train.rust_math_dim = 128;
+    c.train.checkpoint_every = ckpt_every;
+    c.train.checkpoint_path = format!("{dir}/ck.bin");
+    c.optim.algorithm = algo;
+    c.optim.warmup_steps = 10;
+    c.out_dir = dir.to_string();
+    c
+}
+
+fn factory(c: &ExperimentConfig) -> BackendFactory {
+    let p = SyntheticProblem::new(c.train.rust_math_dim, c.train.workers, c.train.seed);
+    Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>))
+}
+
+fn tmpdir(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("adaalter_ckint_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d.to_str().unwrap().to_string()
+}
+
+fn resume_equals_straight(algo: Algorithm, h: SyncPeriod, mid: u64, total: u64) {
+    let dir = tmpdir(algo.name());
+
+    // Straight run to `total`.
+    let c_straight = cfg(algo, h, total, 0, &dir);
+    let r_straight = Trainer::new(c_straight.clone(), factory(&c_straight)).run().unwrap();
+
+    // First half: run to `mid`, checkpointing at `mid`.
+    let c_half = cfg(algo, h, mid, mid, &dir);
+    let _ = Trainer::new(c_half.clone(), factory(&c_half)).run().unwrap();
+    let ck = Checkpoint::load(format!("{dir}/ck.bin")).unwrap();
+    assert_eq!(ck.step, mid);
+    assert_eq!(ck.algorithm, algo);
+
+    // Second half: resume to `total`.
+    let c_rest = cfg(algo, h, total, 0, &dir);
+    let mut t = Trainer::new(c_rest.clone(), factory(&c_rest));
+    t.resume = Some(ck);
+    let r_resumed = t.run().unwrap();
+
+    let diff = adaalter::util::math::max_abs_diff(&r_straight.final_x, &r_resumed.final_x);
+    assert!(
+        diff == 0.0,
+        "{algo}: resumed run diverged from straight run by {diff}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_exact_adagrad() {
+    resume_equals_straight(Algorithm::AdaGrad, SyncPeriod::Every(1), 30, 60);
+}
+
+#[test]
+fn resume_exact_adaalter() {
+    resume_equals_straight(Algorithm::AdaAlter, SyncPeriod::Every(1), 25, 60);
+}
+
+#[test]
+fn resume_exact_sgd() {
+    resume_equals_straight(Algorithm::Sgd, SyncPeriod::Every(1), 30, 60);
+}
+
+#[test]
+fn resume_exact_local_adaalter_at_sync_boundary() {
+    // checkpoint_every must align with H (validated by the config layer);
+    // mid = 32 is a sync boundary for H = 4.
+    resume_equals_straight(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 32, 64);
+}
+
+#[test]
+fn resume_exact_local_sgd() {
+    resume_equals_straight(Algorithm::LocalSgd, SyncPeriod::Every(4), 32, 64);
+}
+
+#[test]
+fn config_rejects_misaligned_checkpoint_cadence() {
+    let dir = tmpdir("misaligned");
+    let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 64, 6, &dir);
+    c.train.checkpoint_every = 6; // not a multiple of H=4
+    assert!(c.validate().is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_rejects_algorithm_mismatch() {
+    let dir = tmpdir("mismatch");
+    let c1 = cfg(Algorithm::AdaGrad, SyncPeriod::Every(1), 10, 10, &dir);
+    Trainer::new(c1.clone(), factory(&c1)).run().unwrap();
+    let ck = Checkpoint::load(format!("{dir}/ck.bin")).unwrap();
+
+    let c2 = cfg(Algorithm::AdaAlter, SyncPeriod::Every(1), 20, 0, &dir);
+    let mut t = Trainer::new(c2.clone(), factory(&c2));
+    t.resume = Some(ck);
+    let err = t.run().err().expect("must fail").to_string();
+    assert!(err.contains("checkpoint is for"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_rejects_dimension_mismatch() {
+    let dir = tmpdir("dim");
+    let c1 = cfg(Algorithm::AdaGrad, SyncPeriod::Every(1), 10, 10, &dir);
+    Trainer::new(c1.clone(), factory(&c1)).run().unwrap();
+    let ck = Checkpoint::load(format!("{dir}/ck.bin")).unwrap();
+
+    let mut c2 = cfg(Algorithm::AdaGrad, SyncPeriod::Every(1), 20, 0, &dir);
+    c2.train.rust_math_dim = 256;
+    let mut t = Trainer::new(c2.clone(), factory(&c2));
+    t.resume = Some(ck);
+    let err = t.run().err().expect("must fail").to_string();
+    assert!(err.contains("checkpoint d="), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,182 @@
+//! Integration: the algorithmic equivalences the paper's §4 builds on,
+//! exercised through the full threaded trainer (leader + workers +
+//! channels), on the synthetic backend.
+
+use std::sync::Arc;
+
+use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::{BackendFactory, Trainer};
+use adaalter::sim::SyntheticProblem;
+use adaalter::util::math;
+
+fn cfg(algo: Algorithm, h: SyncPeriod, workers: usize, steps: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.train.workers = workers;
+    c.train.steps = steps;
+    c.train.sync_period = if algo.is_local() { h } else { SyncPeriod::Every(1) };
+    c.train.backend = Backend::RustMath;
+    c.train.rust_math_dim = 512;
+    c.optim.algorithm = algo;
+    c.optim.warmup_steps = 25;
+    c
+}
+
+fn factory(c: &ExperimentConfig) -> BackendFactory {
+    let p = SyntheticProblem::new(c.train.rust_math_dim, c.train.workers, c.train.seed);
+    Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>))
+}
+
+fn run(c: ExperimentConfig) -> adaalter::coordinator::RunResult {
+    let f = factory(&c);
+    Trainer::new(c, f).run().expect("training failed")
+}
+
+/// Paper §4.3: with H=1, Algorithm 4 must coincide with Algorithm 3 —
+/// every worker's placeholder is exactly ε², and sync averaging of the
+/// accumulators equals the leader-side mean of squares. This holds across
+/// worker counts.
+#[test]
+fn local_h1_equals_sync_adaalter_across_worker_counts() {
+    for workers in [1usize, 2, 5, 8] {
+        let local = run(cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(1), workers, 60));
+        let sync = run(cfg(Algorithm::AdaAlter, SyncPeriod::Every(1), workers, 60));
+        let diff = math::max_abs_diff(&local.final_x, &sync.final_x);
+        assert!(diff < 1e-3, "workers={workers}: divergence {diff}");
+    }
+}
+
+/// Same equivalence for local SGD vs fully-synchronous SGD at H=1
+/// (averaging linear updates commutes with the update).
+#[test]
+fn local_sgd_h1_equals_sync_sgd() {
+    let mut a = cfg(Algorithm::LocalSgd, SyncPeriod::Every(1), 4, 60);
+    let mut b = cfg(Algorithm::Sgd, SyncPeriod::Every(1), 4, 60);
+    a.optim.eta = 0.1;
+    b.optim.eta = 0.1;
+    let (ra, rb) = (run(a), run(b));
+    let diff = math::max_abs_diff(&ra.final_x, &rb.final_x);
+    assert!(diff < 1e-3, "divergence {diff}");
+}
+
+/// Larger H must not crash, must sync exactly floor(T/H) times, and must
+/// still converge to a sane region.
+#[test]
+fn h_sweep_converges_and_counts_syncs() {
+    for h in [2u64, 4, 7, 16] {
+        let c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), 4, 160);
+        let r = run(c);
+        assert_eq!(r.recorder.comm().0, 160 / h, "H={h}");
+        let loss = r.final_eval.unwrap().loss;
+        assert!(loss.is_finite() && loss < 600.0, "H={h}: loss {loss}");
+    }
+}
+
+/// The monotone noise story of Theorem 2, measured: with the SAME seed and
+/// budget, larger H must not dramatically beat smaller H near the optimum
+/// (trade-off direction check on train suboptimality averaged over the
+/// final quarter).
+#[test]
+fn larger_h_is_noisier_near_convergence() {
+    let problem = SyntheticProblem::new(512, 4, 42);
+    let opt_loss = problem.global_loss(&problem.optimum());
+    let mut finals = Vec::new();
+    for h in [1u64, 16] {
+        let c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), 4, 600);
+        let r = run(c);
+        finals.push(r.final_eval.unwrap().loss - opt_loss);
+    }
+    // H=16 ends at least as far from the optimum as H=1 (allow 20% slack
+    // for noise).
+    assert!(
+        finals[1] >= finals[0] * 0.8 - 1e-4,
+        "H=16 subopt {} unexpectedly beats H=1 subopt {}",
+        finals[1],
+        finals[0]
+    );
+}
+
+/// Worker failure (backend construction error) must surface as an error,
+/// not a deadlock.
+#[test]
+fn worker_failure_propagates() {
+    let c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 4, 50);
+    let p = SyntheticProblem::new(c.train.rust_math_dim, 4, 1);
+    let f: BackendFactory = Arc::new(move |w| {
+        if w == 2 {
+            Err(adaalter::Error::Data("injected failure".into()))
+        } else {
+            Ok(Box::new(p.backend(w)) as Box<_>)
+        }
+    });
+    let err = Trainer::new(c, f).run().err().expect("must fail");
+    assert!(err.to_string().contains("injected failure"), "{err}");
+}
+
+/// Mid-training gradient failure must also surface cleanly.
+#[test]
+fn mid_training_failure_propagates() {
+    use adaalter::coordinator::{EvalMetrics, WorkerBackend};
+
+    struct Flaky {
+        inner: adaalter::sim::SyntheticBackend,
+        fail_at: u64,
+    }
+    impl WorkerBackend for Flaky {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+        fn loss_and_grad(
+            &mut self,
+            x: &[f32],
+            step: u64,
+            out: &mut [f32],
+        ) -> adaalter::Result<f32> {
+            if step == self.fail_at {
+                return Err(adaalter::Error::Data("flaky gradient".into()));
+            }
+            self.inner.loss_and_grad(x, step, out)
+        }
+        fn eval(&mut self, x: &[f32]) -> adaalter::Result<EvalMetrics> {
+            self.inner.eval(x)
+        }
+        fn init_params(&self) -> adaalter::Result<Vec<f32>> {
+            self.inner.init_params()
+        }
+    }
+
+    let c = cfg(Algorithm::AdaGrad, SyncPeriod::Every(1), 3, 50);
+    let p = SyntheticProblem::new(c.train.rust_math_dim, 3, 1);
+    let f: BackendFactory = Arc::new(move |w| {
+        Ok(Box::new(Flaky { inner: p.backend(w), fail_at: 17 }) as Box<_>)
+    });
+    let err = Trainer::new(c, f).run().err().expect("must fail");
+    assert!(err.to_string().contains("flaky gradient"), "{err}");
+}
+
+/// Thread-schedule independence: two runs with the same seed but different
+/// worker counts *differ*, same worker count *agree bitwise*.
+#[test]
+fn determinism_and_seed_sensitivity() {
+    let base = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 4, 80);
+    let r1 = run(base.clone());
+    let r2 = run(base.clone());
+    assert_eq!(r1.final_x, r2.final_x);
+
+    let mut seeded = base.clone();
+    seeded.train.seed = 43;
+    let r3 = run(seeded);
+    assert_ne!(r1.final_x, r3.final_x, "seed must matter");
+}
+
+/// Warm-up interacts with the accumulator: disabling warm-up with a large
+/// η must still produce finite parameters (AdaAlter's stale denominator
+/// tolerates it on this smooth problem), and warm-up must not change the
+/// late-training trajectory materially.
+#[test]
+fn warmup_robustness() {
+    let mut no_warm = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 4, 200);
+    no_warm.optim.warmup_steps = 0;
+    let r = run(no_warm);
+    assert!(r.final_x.iter().all(|v| v.is_finite()));
+    assert!(r.final_eval.unwrap().loss.is_finite());
+}
