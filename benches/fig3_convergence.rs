@@ -16,7 +16,7 @@ fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !artifacts_available("artifacts") {
         println!("fig3_convergence: artifacts/ not built (run `make artifacts`); skipping");
         return Ok(());

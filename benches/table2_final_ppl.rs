@@ -22,7 +22,7 @@ fn mean_std(xs: &[f64]) -> (f64, f64) {
     (mean, var.sqrt())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !artifacts_available("artifacts") {
         println!("table2_final_ppl: artifacts/ not built (run `make artifacts`); skipping");
         return Ok(());

@@ -26,7 +26,7 @@ fn algos() -> Vec<SimAlgo> {
     ]
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let m = EpochModel::paper();
     let ns = [1usize, 2, 4, 8];
 

@@ -22,7 +22,7 @@ fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let steps: u64 = env_or("ADAALTER_STEPS", 200);
     let workers: usize = env_or("ADAALTER_WORKERS", 2);
     let preset: String = env_or("ADAALTER_PRESET", "tiny".to_string());

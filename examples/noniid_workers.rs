@@ -17,7 +17,7 @@ use adaalter::coordinator::{BackendFactory, Trainer};
 use adaalter::sim::SyntheticProblem;
 use adaalter::util::csv::CsvWriter;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dim = 2048;
     let workers = 8;
     let steps = 1200;

@@ -14,7 +14,7 @@ use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
 use adaalter::coordinator::{BackendFactory, Trainer};
 use adaalter::sim::{Charge, SyntheticProblem};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. Configure: 8 workers, Local AdaAlter, synchronize every H = 4
     //    steps — the paper's default setting (ε = 1, b₀ = 1, η = 0.5).
     let mut cfg = ExperimentConfig::default();

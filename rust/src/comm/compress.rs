@@ -30,37 +30,64 @@ pub struct QsgdQuantizer {
 }
 
 impl QsgdQuantizer {
-    /// `s` quantization levels (the paper's QSGD uses s = 2^b − 1 for b-bit
-    /// codes).
+    /// `s` quantization levels. `s` must be in `1..=127`: levels are i8
+    /// codes, and an `s` above 127 would wrap negative in the clamp and
+    /// silently flip every gradient's sign.
     pub fn new(s: u8) -> Self {
-        assert!(s >= 1, "need at least one level");
+        assert!((1..=127).contains(&s), "QSGD levels must be in 1..=127 (i8 code space)");
         QsgdQuantizer { s }
     }
 
     /// Encode: `levels[i] = sign(g_i) · ξ(|g_i|·s/‖g‖)` where ξ rounds up
     /// with probability equal to the fractional part (unbiasedness).
+    ///
+    /// Edge cases are handled explicitly so `decode(encode(g))` is finite
+    /// for every all-finite input and degrades gracefully otherwise:
+    /// non-finite coordinates encode to level 0 (dropped), the norm is
+    /// computed over finite coordinates only and saturates at `f32::MAX`,
+    /// and levels are clamped to `s` (fp roundoff can push `|g_i|/‖g‖`
+    /// past 1, and `|decoded_i| ≤ ‖g‖` only holds under the clamp).
     pub fn encode(&self, g: &[f32], rng: &mut Rng) -> QsgdEncoded {
-        let norm = crate::util::math::l2_norm(g) as f32;
+        let norm64 = g
+            .iter()
+            .filter(|v| v.is_finite())
+            .map(|&v| (v as f64) * (v as f64))
+            .sum::<f64>()
+            .sqrt();
+        let norm = (norm64 as f32).min(f32::MAX);
         let mut levels = vec![0i8; g.len()];
         if norm > 0.0 {
             let s = self.s as f32;
             for (l, &v) in levels.iter_mut().zip(g) {
-                let u = v.abs() / norm * s;
+                if !v.is_finite() {
+                    continue;
+                }
+                let u = (v.abs() / norm * s).min(s);
                 let floor = u.floor();
-                let level = floor + if rng.f32() < u - floor { 1.0 } else { 0.0 };
-                *l = (level as i8).min(self.s as i8) * v.signum() as i8;
+                let up = rng.f32() < u - floor;
+                let level = (floor as i8 + up as i8).min(self.s as i8);
+                *l = if v.is_sign_negative() { -level } else { level };
             }
         }
         QsgdEncoded { norm, levels, s: self.s }
     }
 
-    /// Decode back to a dense vector.
+    /// Decode back to a dense vector. The product is taken in f64 and
+    /// clamped: with a saturated norm (`f32::MAX`) and a max-level
+    /// coordinate, `level · fl32(norm/s)` rounds up to +inf in f32, which
+    /// would break the finite-roundtrip guarantee.
     pub fn decode(&self, enc: &QsgdEncoded, out: &mut [f32]) {
         assert_eq!(enc.levels.len(), out.len());
-        let scale = enc.norm / enc.s as f32;
+        let scale = enc.norm as f64 / enc.s as f64;
+        let max = f32::MAX as f64;
         for (o, &l) in out.iter_mut().zip(&enc.levels) {
-            *o = l as f32 * scale;
+            *o = (l as f64 * scale).clamp(-max, max) as f32;
         }
+    }
+
+    /// The configured level count `s`.
+    pub fn levels(&self) -> u8 {
+        self.s
     }
 
     /// Wire bytes for one encoded gradient: 4 (norm) + ceil(d·b/8) with
@@ -189,6 +216,113 @@ mod tests {
         // s=4 → 9 symbols → 4 bits/coord.
         assert_eq!(QsgdQuantizer::new(4).wire_bytes(1000), 4 + 500);
         // dense f32 would be 4000 — ≥8x reduction at s=4.
+    }
+
+    #[test]
+    fn qsgd_unbiased_in_expectation_prop() {
+        // E[decode(encode(g))] = g for random directions and random level
+        // counts — the Alistarh et al. Lemma 3.1 property, checked
+        // statistically: the per-coordinate estimator error is bounded by
+        // ‖g‖/s per trial, so the K-trial mean is within ~6·‖g‖/(s·√K) of
+        // the truth with overwhelming probability.
+        prop::check("qsgd unbiasedness", 4, |gen| {
+            let d = gen.usize_in(4..32);
+            let g = gen.vec_normal(d..d + 1, 1.0);
+            let s = *gen.choose(&[2u8, 4, 15]);
+            let q = QsgdQuantizer::new(s);
+            let norm = crate::util::math::l2_norm(&g);
+            let trials = 2000u64;
+            let mut mean = vec![0.0f64; g.len()];
+            let mut out = vec![0.0f32; g.len()];
+            for _ in 0..trials {
+                let enc = q.encode(&g, gen.rng());
+                q.decode(&enc, &mut out);
+                for (m, &v) in mean.iter_mut().zip(&out) {
+                    *m += v as f64 / trials as f64;
+                }
+            }
+            let tol = 6.0 * norm / (s as f64 * (trials as f64).sqrt()) + 1e-6;
+            for (i, (&m, &v)) in mean.iter().zip(&g).enumerate() {
+                prop::assert_that(
+                    (m - v as f64).abs() < tol,
+                    format!("coord {i}: mean {m} vs {v} (tol {tol})"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qsgd_decode_finite_for_all_finite_inputs() {
+        // The satellite invariant: all-finite input ⇒ all-finite roundtrip,
+        // including extreme magnitudes whose f32 norm saturates.
+        prop::check("qsgd finite roundtrip", 60, |gen| {
+            let mut g = gen.vec_f32(2..200, -1e30..1e30);
+            // f32::MAX forces a saturated norm AND a max-level coordinate —
+            // the pair that overflows a pure-f32 decode.
+            g[0] = f32::MAX;
+            g[1] = -3.0e38;
+            let s = *gen.choose(&[1u8, 4, 15, 127]);
+            let q = QsgdQuantizer::new(s);
+            let enc = q.encode(&g, gen.rng());
+            prop::assert_that(enc.norm.is_finite(), "norm not finite")?;
+            let mut out = vec![0.0f32; g.len()];
+            q.decode(&enc, &mut out);
+            prop::assert_that(
+                out.iter().all(|v| v.is_finite()),
+                "non-finite decode",
+            )
+        });
+    }
+
+    #[test]
+    fn qsgd_nonfinite_coordinates_encode_to_zero() {
+        let q = QsgdQuantizer::new(4);
+        let mut rng = Rng::new(2);
+        let g = [1.0f32, f32::NAN, -2.0, f32::INFINITY, 0.5, f32::NEG_INFINITY];
+        let enc = q.encode(&g, &mut rng);
+        assert!(enc.norm.is_finite());
+        assert_eq!(enc.levels[1], 0);
+        assert_eq!(enc.levels[3], 0);
+        assert_eq!(enc.levels[5], 0);
+        let mut out = vec![0.0f32; g.len()];
+        q.decode(&enc, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert_eq!(out[1], 0.0);
+    }
+
+    #[test]
+    fn topk_conserves_mass_prop() {
+        // Error-feedback invariant under random gradient streams: per
+        // coordinate, transmitted + residual equals the total mass fed in
+        // (up to f32 accumulation noise) for any keep fraction.
+        prop::check("topk mass conservation", 40, |gen| {
+            let d = gen.usize_in(2..128);
+            let keep = *gen.choose(&[0.05f64, 0.25, 1.0]);
+            let mut sp = TopKSparsifier::new(d, keep);
+            let rounds = 20;
+            let mut sent = vec![0.0f64; d];
+            let mut total = vec![0.0f64; d];
+            for _ in 0..rounds {
+                let g = gen.vec_normal(d..d + 1, 1.0);
+                for (t, &v) in total.iter_mut().zip(&g) {
+                    *t += v as f64;
+                }
+                let msg = sp.encode(&g);
+                for (&i, &v) in msg.idx.iter().zip(&msg.val) {
+                    sent[i as usize] += v as f64;
+                }
+            }
+            for i in 0..d {
+                let conserved = sent[i] + sp.residual[i] as f64;
+                let err = (conserved - total[i]).abs();
+                prop::assert_that(
+                    err < 1e-3 * (1.0 + total[i].abs()),
+                    format!("coord {i}: {conserved} vs {} (err {err})", total[i]),
+                )?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,8 +1,17 @@
-//! Communication substrate: cost model for the paper's parameter-server
-//! setting and ring all-reduce, plus traffic accounting.
+//! Communication substrate (DESIGN.md §3): the pluggable collective layer
+//! the trainer runs its protocol through, the leader↔worker message
+//! transport, the α–β cost model for the paper's parameter-server setting
+//! and ring all-reduce, and the gradient-compression codecs.
 
+pub mod collective;
 pub mod compress;
 pub mod netmodel;
+pub mod transport;
 
+pub use collective::{
+    build_collective, ChannelCollective, Collective, CommReport, CompressedCollective,
+    SimCost, SimulatedCollective,
+};
 pub use compress::{QsgdQuantizer, SparseGrad, TopKSparsifier};
 pub use netmodel::{NetModel, Topology};
+pub use transport::ChannelTransport;

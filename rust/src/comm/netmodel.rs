@@ -90,6 +90,26 @@ impl NetModel {
         }
     }
 
+    /// Time for one collective round that moves `total_bytes` cluster-wide
+    /// (already summed over directions and participants) — the first-order
+    /// α–β cost used by transports whose payload is not a fixed number of
+    /// dense vectors (compressed collectives report exact wire bytes and
+    /// charge them here; DESIGN.md §3).
+    pub fn bytes_time(&self, n: usize, total_bytes: u64) -> f64 {
+        if n <= 1 || total_bytes == 0 {
+            return 0.0;
+        }
+        match self.topology {
+            Topology::ParameterServer => {
+                2.0 * self.alpha_s + total_bytes as f64 / self.server_beta_bytes_per_s
+            }
+            Topology::RingAllReduce => {
+                2.0 * (n as f64 - 1.0) * self.alpha_s
+                    + total_bytes as f64 / self.beta_bytes_per_s
+            }
+        }
+    }
+
     /// Total bytes moved cluster-wide in one sync round (for accounting
     /// the paper's 2/H traffic-reduction claim, independent of timing).
     pub fn sync_traffic_bytes(&self, n: usize, bytes_per_vector: u64, vectors: u64) -> u64 {
@@ -175,6 +195,18 @@ mod tests {
         assert_eq!(m.sync_traffic_bytes(8, 1 << 20, 2), 32 << 20);
         let r = model("allreduce");
         assert_eq!(r.sync_traffic_bytes(8, 1 << 20, 2), 14 << 21);
+    }
+
+    #[test]
+    fn bytes_time_first_order() {
+        let m = model("ps");
+        assert_eq!(m.bytes_time(1, 1 << 20), 0.0);
+        assert_eq!(m.bytes_time(8, 0), 0.0);
+        let t = m.bytes_time(8, 132_000_000_000);
+        assert!((t - (2.0 * 50e-6 + 1.0)).abs() < 1e-9, "{t}");
+        let r = model("allreduce");
+        let t = r.bytes_time(4, 132_000_000_000);
+        assert!((t - (6.0 * 50e-6 + 1.0)).abs() < 1e-9, "{t}");
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! Leader ↔ worker message transport — the lockstep request/reply channel
+//! layer extracted from the trainer (DESIGN.md §3).
+//!
+//! The coordinator's control plane is a strict request/reply protocol: the
+//! leader broadcasts one command to every worker and then gathers exactly
+//! one reply per worker (the synchronous-training barrier of the paper,
+//! §2). This module owns that plumbing generically over the command/reply
+//! types, so the trainer deals in protocol *intent* and the
+//! [`super::collective`] layer deals in data-plane cost; neither touches
+//! raw `mpsc` endpoints.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+/// A lockstep request/reply transport over in-process channels: one command
+/// sender per worker thread, one shared reply receiver.
+pub struct ChannelTransport<C, R> {
+    txs: Vec<Sender<C>>,
+    rx: Receiver<R>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl<C, R> ChannelTransport<C, R> {
+    /// Assemble from already-spawned worker endpoints. `txs[i]` feeds
+    /// worker `i`; every worker shares the sender side of `rx`.
+    pub fn from_parts(txs: Vec<Sender<C>>, rx: Receiver<R>, joins: Vec<JoinHandle<()>>) -> Self {
+        ChannelTransport { txs, rx, joins }
+    }
+
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Send `make(w)` to every worker `w` (the control-plane broadcast).
+    pub fn broadcast(&self, make: impl Fn(usize) -> C) -> Result<()> {
+        for (w, tx) in self.txs.iter().enumerate() {
+            tx.send(make(w))
+                .map_err(|_| Error::Protocol(format!("worker {w} channel closed")))?;
+        }
+        Ok(())
+    }
+
+    /// Send one command to a single worker.
+    pub fn send_to(&self, w: usize, cmd: C) -> Result<()> {
+        self.txs
+            .get(w)
+            .ok_or_else(|| Error::Protocol(format!("no worker {w}")))?
+            .send(cmd)
+            .map_err(|_| Error::Protocol(format!("worker {w} channel closed")))
+    }
+
+    /// Receive the next reply from any worker.
+    pub fn recv(&self) -> Result<R> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Protocol("all workers disconnected".into()))
+    }
+
+    /// Gather exactly one reply per worker; `sel` extracts the worker index
+    /// and payload (and turns error replies into `Err`). Duplicate or
+    /// missing replies are protocol violations.
+    pub fn gather<T>(&self, mut sel: impl FnMut(R) -> Result<(usize, T)>) -> Result<Vec<T>> {
+        let n = self.n();
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut got = 0;
+        while got < n {
+            let (w, v) = sel(self.recv()?)?;
+            let slot = out
+                .get_mut(w)
+                .ok_or_else(|| Error::Protocol(format!("reply from unknown worker {w}")))?;
+            if slot.replace(v).is_some() {
+                return Err(Error::Protocol(format!("duplicate reply from worker {w}")));
+            }
+            got += 1;
+        }
+        Ok(out.into_iter().map(|v| v.unwrap()).collect())
+    }
+
+    /// Best-effort shutdown: send `stop(w)` to every worker and join the
+    /// threads. Errors are swallowed — shutdown runs on all exit paths,
+    /// including after a protocol error already tore channels down.
+    pub fn shutdown(&mut self, stop: impl Fn(usize) -> C) {
+        for (w, tx) in self.txs.iter().enumerate() {
+            let _ = tx.send(stop(w));
+        }
+        self.txs.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    /// Spin up `n` echo workers that double incoming integers.
+    fn echo_transport(n: usize) -> ChannelTransport<Option<u64>, (usize, u64)> {
+        let (reply_tx, reply_rx) = channel();
+        let mut txs = Vec::new();
+        let mut joins = Vec::new();
+        for w in 0..n {
+            let (tx, rx) = channel::<Option<u64>>();
+            let rtx = reply_tx.clone();
+            joins.push(std::thread::spawn(move || {
+                while let Ok(Some(v)) = rx.recv() {
+                    if rtx.send((w, v * 2)).is_err() {
+                        break;
+                    }
+                }
+            }));
+            txs.push(tx);
+        }
+        ChannelTransport::from_parts(txs, reply_rx, joins)
+    }
+
+    #[test]
+    fn broadcast_gather_roundtrip() {
+        let mut t = echo_transport(4);
+        t.broadcast(|w| Some(w as u64 + 1)).unwrap();
+        let replies = t.gather(|(w, v)| Ok((w, v))).unwrap();
+        assert_eq!(replies, vec![2, 4, 6, 8]);
+        t.shutdown(|_| None);
+    }
+
+    #[test]
+    fn send_to_targets_one_worker() {
+        let mut t = echo_transport(3);
+        t.send_to(1, Some(21)).unwrap();
+        let (w, v) = t.recv().unwrap();
+        assert_eq!((w, v), (1, 42));
+        assert!(t.send_to(7, Some(0)).is_err());
+        t.shutdown(|_| None);
+    }
+
+    #[test]
+    fn gather_rejects_duplicates() {
+        // A 2-worker transport whose reply queue carries two replies from
+        // worker 0 (the command senders are never used).
+        let (tx0, _rx0) = channel::<Option<u64>>();
+        let (tx1, _rx1) = channel::<Option<u64>>();
+        let (reply_tx, reply_rx) = channel();
+        reply_tx.send((0usize, 1u64)).unwrap();
+        reply_tx.send((0usize, 2u64)).unwrap();
+        let t = ChannelTransport::from_parts(vec![tx0, tx1], reply_rx, Vec::new());
+        let err = t.gather(|(w, v)| Ok((w, v))).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn recv_after_workers_gone_errors() {
+        let (reply_tx, reply_rx) = channel::<u64>();
+        drop(reply_tx);
+        let t = ChannelTransport::<Option<u64>, u64>::from_parts(Vec::new(), reply_rx, Vec::new());
+        assert!(t.recv().is_err());
+    }
+}

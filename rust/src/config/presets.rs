@@ -3,6 +3,25 @@
 //!
 //! Each preset is expressed as a TOML snippet so the same parsing/validation
 //! path is exercised whether a config comes from disk, CLI or a preset.
+//!
+//! # The `[comm]` section
+//!
+//! Every preset (and config file) may select its collective transport
+//! (DESIGN.md §3) without touching code:
+//!
+//! ```toml
+//! [comm]
+//! transport = "simulated"   # default: lockstep data path + α–β cost model
+//! # transport = "channel"   # bare lockstep, zero modeled cost
+//! compression = "none"      # or "qsgd" / "topk" (require transport = "channel")
+//! qsgd_levels = 15          # QSGD levels s (31 symbols → 5-bit codes at s = 15)
+//! topk_keep = 0.01          # top-k keep fraction (1% sparsification)
+//! ```
+//!
+//! Pair with `net.topology = "ps" | "allreduce"` to move the same run
+//! between a parameter server and a ring — the `compressed-qsgd` and
+//! `ring-allreduce` presets below are the canonical examples, and
+//! `benches/comm_reduction.rs` sweeps all four transports this way.
 
 use crate::error::{Error, Result};
 
@@ -96,6 +115,42 @@ warmup_steps = 60
 "#,
     },
     Preset {
+        name: "compressed-qsgd",
+        summary: "Local AdaAlter H=4 over QSGD-compressed wire (s=15), exact byte accounting",
+        toml: r#"
+[train]
+workers = 4
+sync_period = 4
+steps = 800
+steps_per_epoch = 200
+backend = "rust_math"
+[optim]
+algorithm = "local_adaalter"
+[comm]
+transport = "channel"
+compression = "qsgd"
+qsgd_levels = 15
+"#,
+    },
+    Preset {
+        name: "ring-allreduce",
+        summary: "Local AdaAlter H=4 over a simulated ring all-reduce instead of the paper's PS",
+        toml: r#"
+[train]
+workers = 8
+sync_period = 4
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+[optim]
+algorithm = "local_adaalter"
+[net]
+topology = "allreduce"
+[comm]
+transport = "simulated"
+"#,
+    },
+    Preset {
         name: "noniid-stress",
         summary: "Fully non-IID shards (D_i disjoint), local AdaAlter H=8",
         toml: r#"
@@ -168,5 +223,17 @@ mod tests {
     fn noniid_preset_is_fully_disjoint() {
         let c = load_preset("noniid-stress").unwrap();
         assert_eq!(c.data.noniid, 1.0);
+    }
+
+    #[test]
+    fn comm_presets_select_transports() {
+        let c = load_preset("compressed-qsgd").unwrap();
+        assert_eq!(c.comm.transport, "channel");
+        assert_eq!(c.comm.compression, "qsgd");
+        assert_eq!(c.comm.qsgd_levels, 15);
+        let r = load_preset("ring-allreduce").unwrap();
+        assert_eq!(r.net.topology, "allreduce");
+        assert_eq!(r.comm.transport, "simulated");
+        assert_eq!(r.comm.compression, "none");
     }
 }

@@ -270,6 +270,91 @@ impl Default for NetConfig {
     }
 }
 
+/// Collective-communication transport selection (DESIGN.md §3).
+///
+/// * `transport = "simulated"` (default) routes the lockstep channel ops
+///   through the α–β cost model: virtual time and traffic are charged per
+///   collective op exactly as the paper's parameter-server / ring
+///   all-reduce would cost them.
+/// * `transport = "channel"` is the bare in-process lockstep: identical
+///   data path, zero modeled cost (for equivalence tests and wire-exact
+///   compressed accounting).
+/// * `compression = "qsgd" | "topk"` decorates the channel transport with
+///   QSGD stochastic quantization / top-k sparsification with error
+///   feedback; recorded bytes are then the *exact* encoded wire sizes.
+#[derive(Clone, Debug)]
+pub struct CommConfig {
+    /// "simulated" (α–β-charged, default) or "channel" (bare lockstep).
+    pub transport: String,
+    /// "none" (default), "qsgd" or "topk".
+    pub compression: String,
+    /// QSGD quantization levels s (1..=127). Default 15 → 2s+1 = 31
+    /// symbols → 5-bit codes per coordinate on the wire.
+    pub qsgd_levels: u8,
+    /// Fraction of coordinates top-k keeps per message (0, 1].
+    pub topk_keep: f64,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        CommConfig {
+            transport: "simulated".into(),
+            compression: "none".into(),
+            qsgd_levels: 15,
+            topk_keep: 0.01,
+        }
+    }
+}
+
+impl CommConfig {
+    /// The `[comm]` consistency rules — the single copy shared by
+    /// [`ExperimentConfig::validate`] and
+    /// [`crate::comm::collective::build_collective`] (which guards
+    /// programmatically-built configs that never pass through TOML
+    /// validation).
+    pub fn validate(&self) -> Result<()> {
+        match self.transport.as_str() {
+            "simulated" | "channel" => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "comm.transport must be \"simulated\" or \"channel\", got {other:?}"
+                )))
+            }
+        }
+        match self.compression.as_str() {
+            "none" => {}
+            "qsgd" | "topk" => {
+                if self.transport != "channel" {
+                    return Err(Error::Config(
+                        "compressed transports measure exact wire bytes; \
+                         set comm.transport = \"channel\" (the simulated α–β \
+                         charge assumes dense vectors)"
+                            .into(),
+                    ));
+                }
+            }
+            other => {
+                return Err(Error::Config(format!(
+                    "comm.compression must be \"none\", \"qsgd\" or \"topk\", got {other:?}"
+                )))
+            }
+        }
+        if !(1..=127).contains(&self.qsgd_levels) {
+            return Err(Error::Config(format!(
+                "comm.qsgd_levels must be in 1..=127, got {}",
+                self.qsgd_levels
+            )));
+        }
+        if !(self.topk_keep > 0.0 && self.topk_keep <= 1.0) {
+            return Err(Error::Config(format!(
+                "comm.topk_keep must be in (0, 1], got {}",
+                self.topk_keep
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -277,6 +362,7 @@ pub struct ExperimentConfig {
     pub optim: OptimConfig,
     pub data: DataConfig,
     pub net: NetConfig,
+    pub comm: CommConfig,
     /// Directory for CSV/JSONL outputs.
     pub out_dir: String,
     /// Artifact directory (PJRT backend).
@@ -290,6 +376,7 @@ impl Default for ExperimentConfig {
             optim: OptimConfig::default(),
             data: DataConfig::default(),
             net: NetConfig::default(),
+            comm: CommConfig::default(),
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
         }
@@ -327,6 +414,10 @@ pub const KNOWN_KEYS: &[&str] = &[
     "net.bandwidth_gbps",
     "net.server_bandwidth_gbps",
     "net.dataloader_samples_per_s",
+    "comm.transport",
+    "comm.compression",
+    "comm.qsgd_levels",
+    "comm.topk_keep",
 ];
 
 impl ExperimentConfig {
@@ -382,6 +473,17 @@ impl ExperimentConfig {
             doc.float_or("net.server_bandwidth_gbps", c.net.server_bandwidth_gbps)?;
         c.net.dataloader_samples_per_s =
             doc.float_or("net.dataloader_samples_per_s", c.net.dataloader_samples_per_s)?;
+
+        c.comm.transport = doc.str_or("comm.transport", &c.comm.transport)?;
+        c.comm.compression = doc.str_or("comm.compression", &c.comm.compression)?;
+        let levels = doc.int_or("comm.qsgd_levels", c.comm.qsgd_levels as i64)?;
+        if !(1..=127).contains(&levels) {
+            return Err(Error::Config(format!(
+                "comm.qsgd_levels must be in 1..=127, got {levels}"
+            )));
+        }
+        c.comm.qsgd_levels = levels as u8;
+        c.comm.topk_keep = doc.float_or("comm.topk_keep", c.comm.topk_keep)?;
 
         c.validate()?;
         Ok(c)
@@ -462,6 +564,7 @@ impl ExperimentConfig {
         if self.net.latency_us < 0.0 || self.net.bandwidth_gbps <= 0.0 {
             return Err(Error::Config("net latency/bandwidth out of range".into()));
         }
+        self.comm.validate()?;
         Ok(())
     }
 
@@ -564,6 +667,39 @@ mod tests {
         assert!(Algorithm::LocalSgd.is_local());
         assert!(!Algorithm::LocalSgd.syncs_denominator());
         assert!(!Algorithm::AdaGrad.is_local());
+    }
+
+    #[test]
+    fn comm_section_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[comm]\ntransport = \"channel\"\ncompression = \"qsgd\"\nqsgd_levels = 7\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.comm.transport, "channel");
+        assert_eq!(c.comm.compression, "qsgd");
+        assert_eq!(c.comm.qsgd_levels, 7);
+
+        // Defaults: simulated transport, no compression.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.comm.transport, "simulated");
+        assert_eq!(d.comm.compression, "none");
+        d.validate().unwrap();
+
+        // Compression over the simulated transport is ambiguous accounting.
+        let doc = TomlDoc::parse("[comm]\ncompression = \"topk\"\n").unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+        assert!(err.to_string().contains("channel"), "{err}");
+
+        // Bounds.
+        let doc = TomlDoc::parse("[comm]\nqsgd_levels = 200\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        let mut c = ExperimentConfig::default();
+        c.comm.topk_keep = 0.0;
+        assert!(c.validate().is_err());
+        c.comm.topk_keep = 0.5;
+        c.comm.transport = "carrier-pigeon".into();
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! Aggregation — the leader-side averaging of gradients (sync algorithms,
-//! Alg. 1/3 line 5) and of parameters + accumulated denominators (local
-//! algorithms, Alg. 4 lines 11–12).
+//! Alg. 1/3 line 5). The wire-crossing parameter/denominator averaging of
+//! Alg. 4 lines 11–12 runs inside the configured
+//! [`crate::comm::Collective`] (same [`crate::util::math::mean_into`]
+//! kernel); [`average_into`] remains for observer-side consolidation that
+//! ships no bytes (final/eval model materialization).
 //!
 //! Hot path: n ≤ 8 vectors of d up to 1e8; every routine is a streaming
 //! pass with reused scratch buffers (no per-sync allocation — see

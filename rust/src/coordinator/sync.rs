@@ -72,6 +72,13 @@ impl SyncScheduler {
             SyncPeriod::Infinite => 0.0,
         }
     }
+
+    /// Total vectors shipped per worker over iterations `1..=t` — the
+    /// quantity the trainer's recorded traffic must be proportional to
+    /// (integration tests pin recorded bytes against this).
+    pub fn vectors_up_to(&self, t: u64, denominator_synced: bool) -> u64 {
+        self.syncs_up_to(t) * Self::vectors_per_sync(denominator_synced)
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +126,16 @@ mod tests {
         }
         assert_eq!(s.syncs_up_to(100), 0);
         assert_eq!(s.comm_fraction(true), 0.0);
+    }
+
+    #[test]
+    fn vectors_up_to_counts_rounds_times_width() {
+        let s = SyncScheduler::new(SyncPeriod::Every(4));
+        assert_eq!(s.vectors_up_to(16, true), 8); // 4 rounds × 2 vectors
+        assert_eq!(s.vectors_up_to(16, false), 4);
+        assert_eq!(s.vectors_up_to(3, true), 0);
+        let inf = SyncScheduler::new(SyncPeriod::Infinite);
+        assert_eq!(inf.vectors_up_to(1000, true), 0);
     }
 
     #[test]

@@ -12,15 +12,26 @@
 //!   `(y_{i,t}, A²_{i,t})`, averages both (Alg. 4 lines 11–12), and
 //!   broadcasts the averages back.
 //!
+//! Communication is layered (DESIGN.md §3): the control plane (commands,
+//! replies, barriers) runs over a [`ChannelTransport`], and every
+//! data-plane exchange — gradient gather, model broadcast, the paired
+//! parameter/denominator averaging round — goes through a pluggable
+//! [`Collective`] selected by the `[comm]` config section. The collective
+//! owns the cost model: each op returns a [`CommReport`] that the leader
+//! books against the virtual clock and the traffic recorder, so swapping
+//! "lockstep channels" for "α–β-charged parameter server" or "QSGD over a
+//! ring" is a config choice, not a trainer change.
+//!
 //! Time: the virtual clock charges the paper-calibrated per-iteration
-//! compute/dataload cost plus the α–β sync cost on communication rounds
-//! (DESIGN.md §3 — wall-clock on this box is meaningless for the figures;
-//! real wall time is still recorded for host-throughput reporting).
+//! compute/dataload cost plus the collective-reported sync cost on
+//! communication rounds (wall-clock on this box is meaningless for the
+//! figures; real wall time is still recorded for host-throughput
+//! reporting).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 
-use crate::comm::NetModel;
+use crate::comm::{build_collective, ChannelTransport, Collective, CommReport};
 use crate::config::{Algorithm, ExperimentConfig, SyncPeriod};
 use crate::coordinator::aggregate::{average_into, Aggregator};
 use crate::coordinator::backend::{BackendFactory, EvalMetrics};
@@ -43,12 +54,6 @@ pub struct RunResult {
     pub clock: VirtualClock,
     /// Final held-out evaluation.
     pub final_eval: Option<EvalMetrics>,
-}
-
-/// Handle to one spawned worker.
-struct WorkerHandle {
-    tx: Sender<Cmd>,
-    join: std::thread::JoinHandle<()>,
 }
 
 /// The leader/trainer.
@@ -81,13 +86,22 @@ impl Trainer {
         let cfg = &self.cfg;
         let n = cfg.train.workers;
         let algo = cfg.optim.algorithm;
+        if self.resume.is_some() && cfg.comm.compression != "none" {
+            // The delta-compression bases and error-feedback residuals are
+            // not part of the checkpoint format; resuming would silently
+            // quantize the full parameter vector on the first sync round.
+            return Err(Error::Config(
+                "resume is not supported over compressed transports \
+                 (compressor state is not checkpointed)"
+                    .into(),
+            ));
+        }
         let scheduler = SyncScheduler::new(if algo.is_local() {
             cfg.train.sync_period
         } else {
             SyncPeriod::Every(1)
         });
         let warmup = WarmupSchedule::new(cfg.optim.eta, cfg.optim.warmup_steps);
-        let net = NetModel::from_config(&cfg.net);
 
         // --- Spawn workers -------------------------------------------------
         // One probe backend determines d and initial params; workers build
@@ -131,8 +145,13 @@ impl Trainer {
             return Err(Error::Protocol(format!("init len {} != d {d}", init.len())));
         }
 
+        let coll = build_collective(cfg, &self.calibration, d)?;
+        let mut recorder = TrainRecorder::new(cfg.train.steps_per_epoch);
+        recorder.set_transport(coll.label());
+
         let (reply_tx, reply_rx) = channel::<Reply>();
-        let mut workers: Vec<WorkerHandle> = Vec::with_capacity(n);
+        let mut txs = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
         for w in 0..n {
             let (cmd_tx, cmd_rx) = channel::<Cmd>();
             let spec = WorkerSpec {
@@ -149,21 +168,22 @@ impl Trainer {
                 .name(format!("adaalter-worker-{w}"))
                 .spawn(move || worker_loop(spec, factory, cmd_rx, rtx))
                 .map_err(Error::Io)?;
-            workers.push(WorkerHandle { tx: cmd_tx, join });
+            txs.push(cmd_tx);
+            joins.push(join);
         }
         drop(reply_tx);
+        let transport = ChannelTransport::from_parts(txs, reply_rx, joins);
 
         let mut run = LeaderLoop {
             cfg,
             d,
             scheduler,
             warmup,
-            net,
+            coll,
             calib: &self.calibration,
-            workers,
-            reply_rx,
+            transport,
             agg: Aggregator::new(d),
-            recorder: TrainRecorder::new(cfg.train.steps_per_epoch),
+            recorder,
             clock: VirtualClock::new(),
             x: init.as_ref().clone(),
             opt: if algo.is_local() {
@@ -190,16 +210,23 @@ impl Trainer {
     }
 }
 
+/// A worker-reported failure — the one interception point for
+/// `Reply::Err` across every gather/recv site.
+fn worker_err(worker: usize, msg: String) -> Error {
+    Error::Protocol(format!("worker {worker}: {msg}"))
+}
+
 /// Internal driver state (separated so shutdown can run after errors).
 struct LeaderLoop<'a> {
     cfg: &'a ExperimentConfig,
     d: usize,
     scheduler: SyncScheduler,
     warmup: WarmupSchedule,
-    net: NetModel,
+    /// The data-plane collective (config-selected).
+    coll: Box<dyn Collective>,
     calib: &'a Calibration,
-    workers: Vec<WorkerHandle>,
-    reply_rx: Receiver<Reply>,
+    /// The control-plane message transport.
+    transport: ChannelTransport<Cmd, Reply>,
     agg: Aggregator,
     recorder: TrainRecorder,
     clock: VirtualClock,
@@ -214,49 +241,17 @@ struct LeaderLoop<'a> {
 
 impl<'a> LeaderLoop<'a> {
     fn n(&self) -> usize {
-        self.workers.len()
-    }
-
-    fn broadcast(&self, make: impl Fn(usize) -> Cmd) -> Result<()> {
-        for (w, h) in self.workers.iter().enumerate() {
-            h.tx.send(make(w)).map_err(|_| {
-                Error::Protocol(format!("worker {w} channel closed"))
-            })?;
-        }
-        Ok(())
-    }
-
-    /// Gather exactly one reply per worker; `sel` extracts/validates.
-    fn gather<T>(&self, mut sel: impl FnMut(Reply) -> Result<(usize, T)>) -> Result<Vec<T>>
-    where
-        T: Default,
-    {
-        let n = self.n();
-        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        let mut got = 0;
-        while got < n {
-            let reply = self
-                .reply_rx
-                .recv()
-                .map_err(|_| Error::Protocol("all workers disconnected".into()))?;
-            if let Reply::Err { worker, msg } = reply {
-                return Err(Error::Protocol(format!("worker {worker}: {msg}")));
-            }
-            let (w, v) = sel(reply)?;
-            if out[w].replace(v).is_some() {
-                return Err(Error::Protocol(format!("duplicate reply from worker {w}")));
-            }
-            got += 1;
-        }
-        Ok(out.into_iter().map(|v| v.unwrap()).collect())
+        self.transport.n()
     }
 
     fn wait_ready(&self) -> Result<()> {
-        self.gather(|r| match r {
-            Reply::Ready { worker } => Ok((worker, ())),
-            _ => Err(Error::Protocol("expected Ready".into())),
-        })
-        .map(|_| ())
+        self.transport
+            .gather(|r| match r {
+                Reply::Ready { worker } => Ok((worker, ())),
+                Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
+                _ => Err(Error::Protocol("expected Ready".into())),
+            })
+            .map(|_| ())
     }
 
     /// Charge one iteration's compute+dataload to the virtual clock.
@@ -276,21 +271,19 @@ impl<'a> LeaderLoop<'a> {
         }
     }
 
-    /// Charge and account one sync round of `vectors` vectors.
-    /// `periodic` selects the bulk-sync overlap discount (local algorithms)
-    /// vs the per-iteration gradient-sync discount — see sim::calib.
-    fn charge_sync(&mut self, vectors: u64, periodic: bool) {
-        // Virtual time is modeled at the PAPER's scale (0.83B-param Big
-        // LSTM payload) so PPL-vs-time curves reproduce Fig. 3a's gaps even
-        // though our substitute model is small; traffic accounting uses the
-        // real bytes this run actually shipped.
-        let model_bytes = self.calib.vector_bytes();
-        let overlap = if periodic { self.calib.periodic_overlap } else { self.calib.overlap };
-        let t = (1.0 - overlap) * self.net.sync_time(self.n(), model_bytes, vectors);
-        self.clock.advance(Charge::Communication, t);
-        let real_bytes = 4 * self.d as u64;
-        self.recorder
-            .sync(self.net.sync_traffic_bytes(self.n(), real_bytes, vectors));
+    /// Book a collective op's cost: virtual time to the clock, exact
+    /// traffic and the full round count to the recorder (all bytes are
+    /// booked on the first round's entry; extra rounds, should a future
+    /// collective report them, count as zero-byte syncs so the recorder's
+    /// sync counter always equals Σ rounds).
+    fn apply_comm(&mut self, r: CommReport) {
+        self.clock.advance(Charge::Communication, r.time_s);
+        if r.rounds > 0 {
+            self.recorder.sync(r.bytes);
+            for _ in 1..r.rounds {
+                self.recorder.sync(0);
+            }
+        }
     }
 
     /// The main loop; returns (final params, final eval).
@@ -301,14 +294,13 @@ impl<'a> LeaderLoop<'a> {
         if self.start_step > 0 && algo.is_local() {
             let x = Arc::new(self.x.clone());
             let acc = self.resume_acc.clone();
-            self.broadcast(|_| Cmd::InstallState { x: Arc::clone(&x), acc: acc.clone() })?;
+            self.transport
+                .broadcast(|_| Cmd::InstallState { x: Arc::clone(&x), acc: acc.clone() })?;
             self.wait_ready()?;
         }
         let steps = self.cfg.train.steps;
         let log_every = self.cfg.train.log_every.max(1);
         let eval_every = self.cfg.train.eval_every;
-        let samples = 0u64; // synthetic backend has no notion of samples; PJRT sets batch below
-        let _ = samples;
 
         for t in (self.start_step + 1)..=steps {
             let lr = self.warmup.lr(t);
@@ -343,14 +335,22 @@ impl<'a> LeaderLoop<'a> {
     /// One fully-synchronous iteration: broadcast x, gather grads, update.
     fn sync_iteration(&mut self, t: u64, lr: f32) -> Result<f64> {
         let x_arc = Arc::new(self.x.clone());
-        self.broadcast(|_| Cmd::SyncStep { t, x: Arc::clone(&x_arc) })?;
-        let grads = self.gather(|r| match r {
+        let rep_b = self.coll.broadcast(&x_arc)?;
+        self.transport
+            .broadcast(|_| Cmd::SyncStep { t, x: Arc::clone(&x_arc) })?;
+        let replies = self.transport.gather(|r| match r {
             Reply::Grad { worker, loss, grad } => Ok((worker, (loss, grad))),
+            Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
             _ => Err(Error::Protocol("expected Grad".into())),
         })?;
         let mean_loss =
-            grads.iter().map(|(l, _)| *l as f64).sum::<f64>() / grads.len() as f64;
-        let grad_refs: Vec<&[f32]> = grads.iter().map(|(_, g)| g.as_slice()).collect();
+            replies.iter().map(|(l, _)| *l as f64).sum::<f64>() / replies.len() as f64;
+        let mut grads: Vec<Vec<f32>> = replies.into_iter().map(|(_, g)| g).collect();
+        // Gradient push/pull round: the collective transforms the payloads
+        // (identity for lossless transports) and reports the round's cost.
+        let rep_g = self.coll.gather_grads(&mut grads)?;
+        self.apply_comm(rep_b.merge(rep_g));
+        let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
 
         let opt = self.opt.as_mut().expect("sync iteration without optimizer");
         match opt.algorithm() {
@@ -366,17 +366,15 @@ impl<'a> LeaderLoop<'a> {
             }
         }
         opt.step(&mut self.x, &self.agg.avg_g, &self.agg.avg_gsq, lr);
-        // Gradient push/pull every iteration: 1 vector (the PS server
-        // computes the squared average from the pushed gradients for free).
-        self.charge_sync(1, false);
         Ok(mean_loss)
     }
 
     /// One local iteration; runs the sync round when the scheduler says so.
     fn local_iteration(&mut self, t: u64, lr: f32) -> Result<f64> {
-        self.broadcast(|_| Cmd::LocalStep { t, lr })?;
-        let losses = self.gather(|r| match r {
+        self.transport.broadcast(|_| Cmd::LocalStep { t, lr })?;
+        let losses = self.transport.gather(|r| match r {
             Reply::StepDone { worker, loss } => Ok((worker, loss)),
+            Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
             _ => Err(Error::Protocol("expected StepDone".into())),
         })?;
         let mean_loss = losses.iter().map(|&l| l as f64).sum::<f64>() / losses.len() as f64;
@@ -387,20 +385,25 @@ impl<'a> LeaderLoop<'a> {
         Ok(mean_loss)
     }
 
-    /// Alg. 4 lines 11–12: gather (y, A²), average, broadcast back.
+    /// Gather worker states, with or without accumulators.
+    fn collect_states(&self) -> Result<Vec<(Vec<f32>, Option<Vec<f32>>)>> {
+        self.transport.broadcast(|_| Cmd::CollectState)?;
+        self.transport.gather(|r| match r {
+            Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
+            Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
+            _ => Err(Error::Protocol("expected State".into())),
+        })
+    }
+
+    /// Alg. 4 lines 11–12: the paired averaging round, executed by the
+    /// configured collective (which may compress the exchange), then the
+    /// averaged state is installed on every replica.
     fn sync_round(&mut self) -> Result<()> {
         let wants_acc = self.cfg.optim.algorithm.syncs_denominator();
-        self.broadcast(|_| Cmd::CollectState)?;
-        let states = self.gather(|r| match r {
-            Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
-            _ => Err(Error::Protocol("expected State".into())),
-        })?;
-
+        let states = self.collect_states()?;
         let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
-        average_into(&xs, &mut self.x);
-        let avg_x = Arc::new(self.x.clone());
 
-        let avg_acc = if wants_acc {
+        let (report, avg_acc) = if wants_acc {
             let accs: Vec<&[f32]> = states
                 .iter()
                 .map(|(_, a)| {
@@ -409,18 +412,22 @@ impl<'a> LeaderLoop<'a> {
                 })
                 .collect::<Result<_>>()?;
             let mut acc = vec![0.0f32; self.d];
-            average_into(&accs, &mut acc);
-            Some(Arc::new(acc))
+            let rep =
+                self.coll
+                    .sync_round(&xs, Some(&accs), &mut self.x, Some(&mut acc))?;
+            (rep, Some(Arc::new(acc)))
         } else {
-            None
+            let rep = self.coll.sync_round(&xs, None, &mut self.x, None)?;
+            (rep, None)
         };
 
-        self.broadcast(|_| Cmd::InstallState {
+        let avg_x = Arc::new(self.x.clone());
+        self.transport.broadcast(|_| Cmd::InstallState {
             x: Arc::clone(&avg_x),
             acc: avg_acc.clone(),
         })?;
         self.wait_ready()?;
-        self.charge_sync(if wants_acc { 2 } else { 1 }, true);
+        self.apply_comm(report);
         Ok(())
     }
 
@@ -439,11 +446,7 @@ impl<'a> LeaderLoop<'a> {
     fn save_checkpoint(&mut self, t: u64) -> Result<()> {
         let algo = self.cfg.optim.algorithm;
         let vectors = if algo.is_local() {
-            self.broadcast(|_| Cmd::CollectState)?;
-            let states = self.gather(|r| match r {
-                Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
-                _ => Err(Error::Protocol("expected State".into())),
-            })?;
+            let states = self.collect_states()?;
             let (x0, acc0) = &states[0];
             match algo {
                 Algorithm::LocalAdaAlter => {
@@ -465,15 +468,13 @@ impl<'a> LeaderLoop<'a> {
 
     /// Current consolidated model: leader's x for sync algorithms; the
     /// across-worker average x̄_t (the Theorem 2 sequence) for local ones.
+    /// Observer-only — no wire traffic is booked (matches the paper, whose
+    /// evaluation runs out-of-band).
     fn consolidated_x(&mut self) -> Result<Vec<f32>> {
         if !self.cfg.optim.algorithm.is_local() {
             return Ok(self.x.clone());
         }
-        self.broadcast(|_| Cmd::CollectState)?;
-        let states = self.gather(|r| match r {
-            Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
-            _ => Err(Error::Protocol("expected State".into())),
-        })?;
+        let states = self.collect_states()?;
         let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
         let mut out = vec![0.0f32; self.d];
         average_into(&xs, &mut out);
@@ -488,32 +489,16 @@ impl<'a> LeaderLoop<'a> {
 
     fn eval_at(&mut self, x: &[f32]) -> Result<EvalMetrics> {
         let x = Arc::new(x.to_vec());
-        self.workers[0]
-            .tx
-            .send(Cmd::Eval { x: Some(x) })
-            .map_err(|_| Error::Protocol("worker 0 channel closed".into()))?;
-        loop {
-            match self
-                .reply_rx
-                .recv()
-                .map_err(|_| Error::Protocol("workers disconnected during eval".into()))?
-            {
-                Reply::Eval { metrics, .. } => return Ok(metrics),
-                Reply::Err { worker, msg } => {
-                    return Err(Error::Protocol(format!("worker {worker}: {msg}")))
-                }
-                _ => return Err(Error::Protocol("unexpected reply during eval".into())),
-            }
+        self.transport.send_to(0, Cmd::Eval { x: Some(x) })?;
+        match self.transport.recv()? {
+            Reply::Eval { metrics, .. } => Ok(metrics),
+            Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
+            _ => Err(Error::Protocol("unexpected reply during eval".into())),
         }
     }
 
     fn shutdown(&mut self) {
-        for h in &self.workers {
-            let _ = h.tx.send(Cmd::Stop);
-        }
-        for h in self.workers.drain(..) {
-            let _ = h.join.join();
-        }
+        self.transport.shutdown(|_| Cmd::Stop);
     }
 }
 
@@ -622,6 +607,12 @@ mod tests {
         assert_eq!(r.clock.total(Charge::DataLoad), 0.0);
         // comm < compute for H=4 (the whole point of the paper)
         assert!(r.clock.total(Charge::Communication) < r.clock.total(Charge::Compute));
+    }
+
+    #[test]
+    fn transport_label_recorded() {
+        let r = run(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 10);
+        assert_eq!(r.recorder.transport(), "simulated(ps)");
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //!
 //! The protocol is a strict request/reply lockstep per iteration — the
 //! synchronous-training barrier of the paper (§2: "synchronous training …
-//! blocks the global update until all the workers respond"). Determinism:
+//! blocks the global update until all the workers respond"). The leader
+//! side of the channel plumbing lives in
+//! [`crate::comm::transport::ChannelTransport`]; this module owns the
+//! command/reply vocabulary and the worker thread body. Determinism:
 //! every gradient is keyed by `(worker, step)`, so thread scheduling cannot
 //! change results.
 

@@ -1,8 +1,9 @@
 //! Crate-wide error type.
 //!
-//! Library modules return [`Result`]; binaries convert to `anyhow` at the
-//! edge. Variants are grouped by subsystem so callers can match on the
-//! failing layer (config vs artifact vs runtime vs protocol).
+//! Library modules return [`Result`]; binaries convert to
+//! `Box<dyn std::error::Error>` at the edge (the image is dependency-free,
+//! so no `anyhow`). Variants are grouped by subsystem so callers can match
+//! on the failing layer (config vs artifact vs runtime vs protocol).
 
 use std::fmt;
 

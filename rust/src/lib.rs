@@ -6,10 +6,12 @@
 //!
 //! * **L3 (this crate)** — the distributed-training coordinator: worker
 //!   threads, the H-period synchronization scheduler with the paper's
-//!   `t'·ε²` placeholder denominator, parameter/denominator averaging,
-//!   parameter-server and ring-allreduce communication simulators with an
-//!   α–β network cost model, warm-up learning-rate schedule, data pipeline,
-//!   metrics, CLI.
+//!   `t'·ε²` placeholder denominator, parameter/denominator averaging, a
+//!   pluggable collective-communication layer ([`comm::Collective`]:
+//!   in-process lockstep, α–β-charged parameter-server / ring-allreduce
+//!   simulation, QSGD / top-k compressed transports with exact wire-byte
+//!   accounting), warm-up learning-rate schedule, data pipeline, metrics,
+//!   CLI.
 //! * **L2 (python/compile, build time only)** — a JAX transformer language
 //!   model lowered once to HLO-text artifacts (`make artifacts`).
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the fused

@@ -42,6 +42,10 @@ pub struct TrainRecorder {
     samples_processed: u64,
     comm_bytes: u64,
     syncs: u64,
+    /// Label of the collective transport that shipped the traffic
+    /// (e.g. "simulated(ps)", "qsgd(s=15)") — set by the trainer so bench
+    /// tables can attribute bytes to the transport that produced them.
+    transport: String,
 }
 
 impl TrainRecorder {
@@ -58,7 +62,18 @@ impl TrainRecorder {
             samples_processed: 0,
             comm_bytes: 0,
             syncs: 0,
+            transport: String::new(),
         }
+    }
+
+    /// Record which collective transport this run communicates through.
+    pub fn set_transport(&mut self, label: String) {
+        self.transport = label;
+    }
+
+    /// The collective transport label ("" if never set).
+    pub fn transport(&self) -> &str {
+        &self.transport
     }
 
     /// Epoch coordinate of a step.
@@ -196,6 +211,14 @@ mod tests {
         r.sync(1024);
         r.sync(1024);
         assert_eq!(r.comm(), (2, 2048));
+    }
+
+    #[test]
+    fn transport_label_roundtrip() {
+        let mut r = TrainRecorder::new(10);
+        assert_eq!(r.transport(), "");
+        r.set_transport("qsgd(s=15)".into());
+        assert_eq!(r.transport(), "qsgd(s=15)");
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! Integration: the pluggable collective layer, through the full threaded
+//! trainer on the synthetic backend.
+//!
+//! * The data plane is transport-invariant: the bare `channel` collective
+//!   and the default α–β-charged `simulated` collective produce bitwise
+//!   identical parameters and loss traces (the seed trainer's data path,
+//!   preserved — its averaging ran the same `math::mean_into` these
+//!   collectives run).
+//! * The recorded traffic matches `SyncScheduler::comm_fraction` — the
+//!   paper's `2/H` claim — exactly, for H ∈ {1, 4, 16}.
+//! * Compressed transports (QSGD / top-k) run end-to-end, report *exact*
+//!   wire bytes, and are selected purely via `ExperimentConfig`.
+
+use std::sync::Arc;
+
+use adaalter::comm::{NetModel, QsgdQuantizer};
+use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::{BackendFactory, Checkpoint, SyncScheduler, Trainer};
+use adaalter::sim::SyntheticProblem;
+
+fn cfg(algo: Algorithm, h: SyncPeriod, workers: usize, steps: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.train.workers = workers;
+    c.train.steps = steps;
+    c.train.sync_period = if algo.is_local() { h } else { SyncPeriod::Every(1) };
+    c.train.backend = Backend::RustMath;
+    c.train.rust_math_dim = 64;
+    c.train.log_every = 1;
+    c.optim.algorithm = algo;
+    c.optim.warmup_steps = 10;
+    c
+}
+
+fn factory(c: &ExperimentConfig) -> BackendFactory {
+    let p = SyntheticProblem::new(c.train.rust_math_dim, c.train.workers, c.train.seed);
+    Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>))
+}
+
+fn run(c: ExperimentConfig) -> adaalter::coordinator::RunResult {
+    let f = factory(&c);
+    Trainer::new(c, f).run().expect("training failed")
+}
+
+/// The ISSUE's equivalence criterion: the in-process ChannelCollective
+/// reproduces the (simulated-default) trainer bitwise — same final x and
+/// same loss trace — for fully-sync AdaGrad at H=1 and local AdaAlter at
+/// H=4. The two transports differ only in cost accounting.
+#[test]
+fn channel_collective_is_bitwise_identical_to_simulated() {
+    for (algo, h) in [
+        (Algorithm::AdaGrad, SyncPeriod::Every(1)),
+        (Algorithm::LocalAdaAlter, SyncPeriod::Every(4)),
+    ] {
+        let sim_cfg = cfg(algo, h, 4, 40);
+        let mut chan_cfg = sim_cfg.clone();
+        chan_cfg.comm.transport = "channel".into();
+        let a = run(sim_cfg);
+        let b = run(chan_cfg);
+        assert_eq!(a.final_x, b.final_x, "{algo}: final x diverged across transports");
+        assert_eq!(
+            a.recorder.steps.len(),
+            b.recorder.steps.len(),
+            "{algo}: trace lengths differ"
+        );
+        for (pa, pb) in a.recorder.steps.iter().zip(&b.recorder.steps) {
+            assert_eq!(pa.step, pb.step);
+            assert_eq!(
+                pa.train_loss.to_bits(),
+                pb.train_loss.to_bits(),
+                "{algo}: loss trace diverged at step {}",
+                pa.step
+            );
+        }
+        assert_eq!(
+            a.final_eval.unwrap().loss.to_bits(),
+            b.final_eval.unwrap().loss.to_bits()
+        );
+        // What differs is the accounting: channel models zero cost.
+        assert!(a.recorder.comm().1 > 0);
+        assert_eq!(b.recorder.comm().1, 0);
+        assert_eq!(a.recorder.comm().0, b.recorder.comm().0, "round counts must agree");
+    }
+}
+
+/// Recorded sync bytes must equal rounds × per-round traffic, and the
+/// byte ratio against fully-synchronous AdaGrad must be exactly the
+/// scheduler's comm_fraction — the paper's 2/H — for H ∈ {1, 4, 16}.
+#[test]
+fn recorded_bytes_match_comm_fraction() {
+    let n = 4usize;
+    let steps = 48u64;
+    let base = cfg(Algorithm::AdaGrad, SyncPeriod::Every(1), n, steps);
+    let net = NetModel::from_config(&base.net);
+    let d_bytes = 4 * base.train.rust_math_dim as u64;
+
+    let sync_run = run(base);
+    let (sync_rounds, sync_bytes) = sync_run.recorder.comm();
+    assert_eq!(sync_rounds, steps);
+    assert_eq!(sync_bytes, steps * net.sync_traffic_bytes(n, d_bytes, 1));
+
+    for h in [1u64, 4, 16] {
+        let c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), n, steps);
+        let r = run(c);
+        let (rounds, bytes) = r.recorder.comm();
+        let sched = SyncScheduler::new(SyncPeriod::Every(h));
+        assert_eq!(rounds, sched.syncs_up_to(steps), "H={h}");
+        // Exact per-round accounting: 2 vectors (params + denominators),
+        // pinned both per-round and through the scheduler's total-vector
+        // count (traffic is linear in vectors).
+        assert_eq!(
+            bytes,
+            sched.syncs_up_to(steps) * net.sync_traffic_bytes(n, d_bytes, 2),
+            "H={h}"
+        );
+        assert_eq!(
+            bytes,
+            sched.vectors_up_to(steps, true) * net.sync_traffic_bytes(n, d_bytes, 1),
+            "H={h}"
+        );
+        // And therefore exactly the paper's 2/H of fully-sync traffic.
+        let frac = bytes as f64 / sync_bytes as f64;
+        let want = sched.comm_fraction(true);
+        assert!(
+            (frac - want).abs() < 1e-12,
+            "H={h}: measured fraction {frac} vs comm_fraction {want}"
+        );
+    }
+}
+
+/// QSGD-compressed local AdaAlter: selected purely by config, exact wire
+/// bytes (4 compressed messages per worker per round: Δx up, ΔA² up, and
+/// the two quantized average deltas down), finite training.
+#[test]
+fn qsgd_sync_rounds_report_exact_bytes() {
+    let (n, steps, h) = (4usize, 24u64, 4u64);
+    let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), n, steps);
+    c.train.rust_math_dim = 256;
+    c.comm.transport = "channel".into();
+    c.comm.compression = "qsgd".into();
+    c.comm.qsgd_levels = 15;
+    let r = run(c);
+    assert!(r.final_x.iter().all(|v| v.is_finite()));
+    let (rounds, bytes) = r.recorder.comm();
+    assert_eq!(rounds, steps / h);
+    let per_msg = QsgdQuantizer::new(15).wire_bytes(256);
+    let per_round = 4 * n as u64 * per_msg;
+    assert_eq!(bytes, rounds * per_round);
+    assert_eq!(r.recorder.transport(), "qsgd(s=15)");
+}
+
+/// Top-k with 1% keep: constant k per message, so bytes are exactly
+/// rounds × 4n × 8k; error-feedback residuals persist across rounds
+/// without breaking training.
+#[test]
+fn topk_sync_rounds_report_exact_bytes() {
+    let (n, steps, h, d) = (4usize, 24u64, 4u64, 256usize);
+    let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), n, steps);
+    c.train.rust_math_dim = d;
+    c.comm.transport = "channel".into();
+    c.comm.compression = "topk".into();
+    c.comm.topk_keep = 0.01;
+    let r = run(c);
+    assert!(r.final_x.iter().all(|v| v.is_finite()));
+    let (rounds, bytes) = r.recorder.comm();
+    assert_eq!(rounds, steps / h);
+    let k = ((d as f64) * 0.01).ceil() as u64; // 3 coordinates
+    assert_eq!(bytes, rounds * 4 * n as u64 * 8 * k);
+    assert!(r.recorder.transport().starts_with("topk"));
+}
+
+/// Compression also covers the fully-synchronous gradient-gather path:
+/// per iteration, n compressed gradients up + the dense model pull down.
+#[test]
+fn qsgd_gradient_gather_reports_exact_bytes() {
+    let (n, steps, d) = (4usize, 10u64, 128usize);
+    let mut c = cfg(Algorithm::AdaGrad, SyncPeriod::Every(1), n, steps);
+    c.train.rust_math_dim = d;
+    c.comm.transport = "channel".into();
+    c.comm.compression = "qsgd".into();
+    c.comm.qsgd_levels = 15;
+    let r = run(c);
+    assert!(r.final_x.iter().all(|v| v.is_finite()));
+    let (rounds, bytes) = r.recorder.comm();
+    assert_eq!(rounds, steps);
+    let per_iter = n as u64 * QsgdQuantizer::new(15).wire_bytes(d) + n as u64 * 4 * d as u64;
+    assert_eq!(bytes, steps * per_iter);
+}
+
+/// Ring all-reduce is one config key away and changes the traffic model:
+/// 2(n−1)·payload per round instead of the PS's 2n·payload.
+#[test]
+fn ring_allreduce_traffic_selected_by_config() {
+    let (n, steps, h) = (4usize, 16u64, 4u64);
+    let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), n, steps);
+    c.net.topology = "allreduce".into();
+    let net = NetModel::from_config(&c.net);
+    let d_bytes = 4 * c.train.rust_math_dim as u64;
+    let r = run(c);
+    let (rounds, bytes) = r.recorder.comm();
+    assert_eq!(rounds, steps / h);
+    assert_eq!(bytes, rounds * net.sync_traffic_bytes(n, d_bytes, 2));
+    assert_eq!(bytes, rounds * 2 * (n as u64 - 1) * d_bytes * 2);
+    assert_eq!(r.recorder.transport(), "simulated(allreduce)");
+}
+
+/// Resuming over a compressed transport is rejected up front: the
+/// delta-compression bases and error-feedback residuals are not part of
+/// the checkpoint format, so a resumed run could not be exact.
+#[test]
+fn resume_rejected_over_compressed_transport() {
+    let d = 64;
+    let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 2, 8);
+    c.comm.transport = "channel".into();
+    c.comm.compression = "qsgd".into();
+    let f = factory(&c);
+    let mut t = Trainer::new(c, f);
+    t.resume = Some(Checkpoint {
+        step: 4,
+        algorithm: Algorithm::LocalAdaAlter,
+        vectors: vec![vec![0.0; d], vec![1.0; d], vec![1.0; d]],
+    });
+    let err = t.run().err().expect("must fail");
+    assert!(err.to_string().contains("compressed"), "{err}");
+}
+
+/// Compressed local AdaAlter still optimizes: with moderate compression
+/// the final loss must come down substantially from the start.
+#[test]
+fn compressed_local_adaalter_still_learns() {
+    let n = 4usize;
+    let problem = SyntheticProblem::new(64, n, 42);
+    use adaalter::coordinator::WorkerBackend as _;
+    let opt_loss = problem.global_loss(&problem.optimum());
+    let init_sub =
+        problem.global_loss(&problem.backend(0).init_params().unwrap()) - opt_loss;
+    let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), n, 300);
+    c.comm.transport = "channel".into();
+    c.comm.compression = "qsgd".into();
+    c.comm.qsgd_levels = 15;
+    let r = run(c);
+    let final_loss = r.final_eval.unwrap().loss;
+    assert!(final_loss.is_finite());
+    let final_sub = final_loss - opt_loss;
+    assert!(
+        final_sub < init_sub * 0.2,
+        "compressed run failed to learn: suboptimality {final_sub} vs initial {init_sub}"
+    );
+}
