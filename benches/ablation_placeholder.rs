@@ -21,7 +21,8 @@
 //!
 //! Run: `cargo bench --bench ablation_placeholder`
 
-use adaalter::coordinator::WorkerBackend;
+use adaalter::config::SyncPeriod;
+use adaalter::coordinator::{SyncScheduler, WorkerBackend};
 use adaalter::sim::SyntheticProblem;
 use adaalter::util::math;
 
@@ -53,10 +54,13 @@ fn run(variant: &str, problem: &SyntheticProblem) -> (f64, f64) {
     let mut spread_sum = 0.0f64;
     let mut spreads = 0u64;
     let warmup = 50u64;
+    // The library's scheduler owns the sync-period arithmetic (t', the
+    // sync predicate) so this bench cannot drift from the trainer.
+    let sched = SyncScheduler::new(SyncPeriod::Every(H));
 
     for t in 1..=STEPS {
         let lr = ETA * (t as f32 / warmup as f32).min(1.0);
-        let t_prime = (t - 1) % H + 1;
+        let t_prime = sched.t_prime(t);
         for (w, b) in ws.iter_mut().zip(backends.iter_mut()) {
             b.loss_and_grad(&w.x, t, &mut g).unwrap();
             match variant {
@@ -78,7 +82,7 @@ fn run(variant: &str, problem: &SyntheticProblem) -> (f64, f64) {
                 _ => unreachable!(),
             }
         }
-        if t % H == 0 {
+        if sched.is_sync_step(t) {
             // Denominator disagreement right before averaging: the quantity
             // Local AdaAlter keeps at 0 between syncs (b2_sync identical),
             // and naive local AdaGrad lets drift (per-worker acc used).

@@ -1,0 +1,179 @@
+//! Bench: fixed vs. **adaptive** synchronization scheduling (DESIGN.md §4)
+//! over the fig-3 convergence setup on the synthetic non-IID testbed.
+//!
+//! The paper fixes H ahead of time; its own cost model makes H the knob
+//! trading communication (`2/H`) against convergence. This bench runs the
+//! same training budget under every `[sync]` policy and reports the
+//! realized rounds/bytes/virtual-time and the final suboptimality — the
+//! claim under test being that an adaptive policy reaches
+//! fig-3-comparable final loss with *fewer* communication rounds than
+//! the paper's fixed H = 4.
+//!
+//! Run: `cargo bench --bench adaptive_sync`
+//! Knobs: ADAALTER_BENCH_STEPS (default 800), ADAALTER_BENCH_WORKERS (8),
+//!        ADAALTER_BENCH_DIM (512), ADAALTER_DRIFT_THRESHOLD (2.0).
+
+use std::sync::Arc;
+
+use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::{BackendFactory, Trainer, WorkerBackend};
+use adaalter::sim::{Charge, SyntheticProblem};
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Row {
+    label: &'static str,
+    adaptive: bool,
+    rounds: u64,
+    mib: f64,
+    comm_s: f64,
+    total_s: f64,
+    subopt: f64,
+    mean_h: f64,
+    events_ok: bool,
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let steps: u64 = env_or("ADAALTER_BENCH_STEPS", 800);
+    let workers: usize = env_or("ADAALTER_BENCH_WORKERS", 8);
+    let dim: usize = env_or("ADAALTER_BENCH_DIM", 512);
+    let theta: f64 = env_or("ADAALTER_DRIFT_THRESHOLD", 2.0);
+    let seed = 42u64;
+
+    let problem = SyntheticProblem::new(dim, workers, seed);
+    let opt_loss = problem.global_loss(&problem.optimum());
+    let init_loss = problem.global_loss(&problem.backend(0).init_params()?);
+
+    let base = |h: u64| {
+        let mut c = ExperimentConfig::default();
+        c.train.workers = workers;
+        c.train.steps = steps;
+        c.train.sync_period = SyncPeriod::Every(h);
+        c.train.backend = Backend::RustMath;
+        c.train.rust_math_dim = dim;
+        c.train.seed = seed;
+        c.train.log_every = steps;
+        c.optim.algorithm = Algorithm::LocalAdaAlter;
+        c.optim.warmup_steps = 50;
+        c
+    };
+
+    let variants: Vec<(&'static str, bool, ExperimentConfig)> = vec![
+        ("fixed H=1", false, base(1)),
+        ("fixed H=4", false, base(4)),
+        ("fixed H=16", false, base(16)),
+        ("growing 4→16", true, {
+            let mut c = base(4);
+            c.sync.policy = "growing".into();
+            c.sync.grow_every = 2;
+            c.sync.h_max = 16;
+            c
+        }),
+        ("drift-triggered", true, {
+            let mut c = base(4);
+            c.sync.policy = "drift".into();
+            c.sync.drift_threshold = theta;
+            c.sync.h_max = 16;
+            c
+        }),
+        ("time-budget 2%", true, {
+            let mut c = base(4);
+            c.sync.policy = "time_budget".into();
+            c.sync.target_comm_fraction = 0.02;
+            c.sync.h_max = 64;
+            c
+        }),
+    ];
+
+    println!("=== Adaptive synchronization scheduling (fig-3 setup, synthetic testbed) ===");
+    println!(
+        "(n={workers}, d={dim}, {steps} steps; init global loss {init_loss:.2}, \
+         irreducible optimum {opt_loss:.2}; virtual time = paper-scale cluster)\n"
+    );
+    println!(
+        "{:<16} {:>7} {:>9} {:>9} {:>9} {:>10} {:>7}",
+        "policy", "rounds", "MiB", "comm-s", "total-s", "subopt", "mean-H"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (label, adaptive, cfg) in variants {
+        let p = problem.clone();
+        let factory: BackendFactory = Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>));
+        let r = Trainer::new(cfg, factory).run()?;
+        let (rounds, bytes) = r.recorder.comm();
+        let gaps = r.recorder.realized_h();
+        let mean_h = if gaps.is_empty() {
+            f64::NAN
+        } else {
+            gaps.iter().sum::<u64>() as f64 / gaps.len() as f64
+        };
+        let row = Row {
+            label,
+            adaptive,
+            rounds,
+            mib: bytes as f64 / (1 << 20) as f64,
+            comm_s: r.clock.total(Charge::Communication),
+            total_s: r.clock.now_s(),
+            subopt: r.final_eval.unwrap().loss - opt_loss,
+            mean_h,
+            events_ok: r.recorder.sync_events.len() as u64 == rounds,
+        };
+        println!(
+            "{:<16} {:>7} {:>9.1} {:>9.2} {:>9.1} {:>10.4} {:>7.1}",
+            row.label, row.rounds, row.mib, row.comm_s, row.total_s, row.subopt, row.mean_h
+        );
+        rows.push(row);
+    }
+
+    println!("\n=== checks ===");
+    let h4 = rows.iter().find(|r| r.label == "fixed H=4").unwrap();
+    println!(
+        "fixed H=4 (the paper's setting) converges: subopt {:.3} < 1 {}",
+        h4.subopt,
+        ok(h4.subopt < 1.0)
+    );
+    // The acceptance claim: some adaptive policy matches the fig-3-level
+    // final loss with fewer communication rounds than fixed H=4.
+    let loss_bar = (2.0 * h4.subopt).max(1.0);
+    let winners: Vec<&Row> = rows
+        .iter()
+        .filter(|r| r.adaptive && r.rounds < h4.rounds && r.subopt <= loss_bar)
+        .collect();
+    println!(
+        "an adaptive policy beats fixed H=4 on rounds at comparable loss \
+         (≤ max(1, 2× fixed)): {} {}",
+        winners
+            .iter()
+            .map(|r| format!("{} ({} vs {} rounds, subopt {:.3})", r.label, r.rounds, h4.rounds, r.subopt))
+            .collect::<Vec<_>>()
+            .join("; "),
+        ok(!winners.is_empty())
+    );
+    println!(
+        "…and finishes no later on the virtual clock {}",
+        ok(winners.iter().any(|r| r.total_s <= h4.total_s))
+    );
+    println!(
+        "every policy's recorded sync events equal its comm rounds {}",
+        ok(rows.iter().all(|r| r.events_ok))
+    );
+    let growing = rows.iter().find(|r| r.label == "growing 4→16").unwrap();
+    println!(
+        "growing policy communicates less than any fixed H ≤ its cap \
+         ({} rounds vs H=4's {}) {}",
+        growing.rounds,
+        h4.rounds,
+        ok(growing.rounds < h4.rounds)
+    );
+    Ok(())
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "[OK]"
+    } else {
+        "[MISMATCH]"
+    }
+}

@@ -34,7 +34,13 @@ use crate::sim::Calibration;
 use crate::util::math;
 use crate::util::rng::Rng;
 
-/// What one collective op cost.
+/// What one collective op cost — and what it observed while running.
+///
+/// The observation fields (`drift_sq`, `straggler_s`) feed the adaptive
+/// synchronization policies of [`crate::coordinator::sync`] (DESIGN.md
+/// §4): the collective is the one place that already holds every worker's
+/// vectors and the round's modeled timing, so it reports them alongside
+/// the cost.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CommReport {
     /// Exact bytes shipped cluster-wide (0 for in-process transports).
@@ -44,6 +50,13 @@ pub struct CommReport {
     /// Synchronization rounds this op completed (drives the recorder's
     /// sync counter; broadcasts fold into their round and report 0).
     pub rounds: u64,
+    /// Mean squared L2 distance of the averaged inputs from their mean —
+    /// the realized replica drift at a sync round (0 for ops that average
+    /// nothing, e.g. gradient gathers).
+    pub drift_sq: f64,
+    /// Modeled first-to-last-worker completion spread of the round
+    /// ([`NetModel::straggler_spread_s`]; 0 for in-process transports).
+    pub straggler_s: f64,
 }
 
 impl CommReport {
@@ -52,14 +65,33 @@ impl CommReport {
         CommReport::default()
     }
 
-    /// Combine two reports of the same protocol round.
+    /// Combine two reports of the same protocol round. Costs add;
+    /// observations keep the worst (largest) value seen.
     pub fn merge(self, other: CommReport) -> CommReport {
         CommReport {
             bytes: self.bytes + other.bytes,
             time_s: self.time_s + other.time_s,
             rounds: self.rounds + other.rounds,
+            drift_sq: self.drift_sq.max(other.drift_sq),
+            straggler_s: self.straggler_s.max(other.straggler_s),
         }
     }
+}
+
+/// Mean over workers of the squared L2 distance `‖x_i − mean‖²` — the
+/// replica-drift observation sync rounds report.
+fn mean_sq_dist(xs: &[&[f32]], mean: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0f64;
+    for x in xs {
+        for (&a, &m) in x.iter().zip(mean) {
+            let d = (a - m) as f64;
+            total += d * d;
+        }
+    }
+    total / xs.len() as f64
 }
 
 /// The collective ops the training protocol is written against.
@@ -155,12 +187,16 @@ impl Collective for ChannelCollective {
                 )));
             }
         }
-        Ok(CommReport { bytes: 0, time_s: 0.0, rounds: 1 })
+        Ok(CommReport { rounds: 1, ..CommReport::zero() })
     }
 
     fn allreduce_mean(&mut self, inputs: &[&[f32]], out: &mut [f32]) -> Result<CommReport> {
         math::mean_into(inputs, out);
-        Ok(CommReport { bytes: 0, time_s: 0.0, rounds: 1 })
+        Ok(CommReport {
+            rounds: 1,
+            drift_sq: mean_sq_dist(inputs, out),
+            ..CommReport::zero()
+        })
     }
 
     fn sync_round(
@@ -175,7 +211,11 @@ impl Collective for ChannelCollective {
         if let (Some(accs), Some(avg_acc)) = (accs, avg_acc) {
             math::mean_into(accs, avg_acc);
         }
-        Ok(CommReport { bytes: 0, time_s: 0.0, rounds: 1 })
+        Ok(CommReport {
+            rounds: 1,
+            drift_sq: mean_sq_dist(xs, avg_x),
+            ..CommReport::zero()
+        })
     }
 }
 
@@ -190,6 +230,7 @@ impl Collective for ChannelCollective {
 /// real `4·d` bytes this run shipped.
 #[derive(Clone, Debug)]
 pub struct SimCost {
+    /// The α–β network model charging each round.
     pub net: NetModel,
     /// Bytes of one synchronized vector at the modeled scale.
     pub model_bytes: u64,
@@ -220,20 +261,24 @@ pub struct SimulatedCollective {
 }
 
 impl SimulatedCollective {
+    /// Wrap the lockstep data ops with the given per-round cost model.
     pub fn new(inner: ChannelCollective, cost: SimCost) -> Self {
         SimulatedCollective { inner, cost }
     }
 
     /// One sync round of `vectors` model-sized vectors; `periodic` selects
     /// the bulk-sync overlap discount (local algorithms) vs the
-    /// per-iteration gradient-sync discount.
+    /// per-iteration gradient-sync discount. The straggler observation is
+    /// the raw (non-discounted) incast spread at the modeled payload —
+    /// overlap hides time from the critical path, not the worker skew.
     fn charge(&self, vectors: u64, periodic: bool) -> CommReport {
         let n = self.inner.n();
         let gamma = if periodic { self.cost.periodic_overlap } else { self.cost.overlap };
         let time_s = (1.0 - gamma) * self.cost.net.sync_time(n, self.cost.model_bytes, vectors);
         let real_bytes = 4 * self.inner.d() as u64;
         let bytes = self.cost.net.sync_traffic_bytes(n, real_bytes, vectors);
-        CommReport { bytes, time_s, rounds: 1 }
+        let straggler_s = self.cost.net.straggler_spread_s(n, self.cost.model_bytes * vectors);
+        CommReport { bytes, time_s, rounds: 1, drift_sq: 0.0, straggler_s }
     }
 
     fn topology_name(&self) -> &'static str {
@@ -259,8 +304,10 @@ impl Collective for SimulatedCollective {
     }
 
     fn allreduce_mean(&mut self, inputs: &[&[f32]], out: &mut [f32]) -> Result<CommReport> {
-        self.inner.allreduce_mean(inputs, out)?;
-        Ok(self.charge(1, true))
+        let inner = self.inner.allreduce_mean(inputs, out)?;
+        let mut rep = self.charge(1, true);
+        rep.drift_sq = inner.drift_sq;
+        Ok(rep)
     }
 
     fn sync_round(
@@ -271,8 +318,10 @@ impl Collective for SimulatedCollective {
         avg_acc: Option<&mut [f32]>,
     ) -> Result<CommReport> {
         let vectors = 1 + accs.is_some() as u64;
-        self.inner.sync_round(xs, accs, avg_x, avg_acc)?;
-        Ok(self.charge(vectors, true))
+        let inner = self.inner.sync_round(xs, accs, avg_x, avg_acc)?;
+        let mut rep = self.charge(vectors, true);
+        rep.drift_sq = inner.drift_sq;
+        Ok(rep)
     }
 }
 
@@ -496,7 +545,13 @@ impl Collective for CompressedCollective {
         self.inner.gather_grads(grads)?;
         // Dense model pull back to every worker.
         bytes += n as u64 * 4 * self.inner.d() as u64;
-        Ok(CommReport { bytes, time_s: self.net.bytes_time(n, bytes), rounds: 1 })
+        Ok(CommReport {
+            bytes,
+            time_s: self.net.bytes_time(n, bytes),
+            rounds: 1,
+            drift_sq: 0.0,
+            straggler_s: self.net.straggler_spread_s(n, bytes / (2 * n as u64)),
+        })
     }
 
     fn allreduce_mean(&mut self, inputs: &[&[f32]], out: &mut [f32]) -> Result<CommReport> {
@@ -505,7 +560,13 @@ impl Collective for CompressedCollective {
             return self.inner.allreduce_mean(inputs, out);
         }
         let bytes = self.compressed_average(inputs, StreamFamily::Raw, out)?;
-        Ok(CommReport { bytes, time_s: self.net.bytes_time(n, bytes), rounds: 1 })
+        Ok(CommReport {
+            bytes,
+            time_s: self.net.bytes_time(n, bytes),
+            rounds: 1,
+            drift_sq: mean_sq_dist(inputs, out),
+            straggler_s: self.net.straggler_spread_s(n, bytes / (2 * n as u64)),
+        })
     }
 
     fn sync_round(
@@ -521,10 +582,20 @@ impl Collective for CompressedCollective {
             return self.inner.sync_round(xs, accs, avg_x, avg_acc);
         }
         let mut bytes = self.compressed_average(xs, StreamFamily::SyncX, avg_x)?;
+        // The realized replica drift, against the (decoded) installed
+        // average — what an adaptive policy actually wants to bound.
+        let drift_sq = mean_sq_dist(xs, avg_x);
         if let (Some(accs), Some(avg_acc)) = (accs, avg_acc) {
             bytes += self.compressed_average(accs, StreamFamily::SyncAcc, avg_acc)?;
         }
-        Ok(CommReport { bytes, time_s: self.net.bytes_time(n, bytes), rounds: 1 })
+        Ok(CommReport {
+            bytes,
+            time_s: self.net.bytes_time(n, bytes),
+            rounds: 1,
+            drift_sq,
+            // First-order per-worker payload: total split over up+down legs.
+            straggler_s: self.net.straggler_spread_s(n, bytes / (2 * n as u64)),
+        })
     }
 }
 
@@ -634,6 +705,45 @@ mod tests {
         let want_t =
             (1.0 - calib.periodic_overlap) * net.sync_time(n, calib.vector_bytes(), 2);
         assert!((rep.time_s - want_t).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sync_round_reports_drift_and_straggler_observations() {
+        // Channel: drift is the exact mean squared distance from the mean.
+        let mut c = ChannelCollective::new(2, 2);
+        let xs = vec![vec![0.0f32, 0.0], vec![2.0, 0.0]];
+        let mut avg = vec![0.0f32; 2];
+        let rep = c.sync_round(&refs(&xs), None, &mut avg, None).unwrap();
+        // mean = [1, 0]; each worker at squared distance 1 → mean 1.
+        assert!((rep.drift_sq - 1.0).abs() < 1e-12, "{}", rep.drift_sq);
+        assert_eq!(rep.straggler_s, 0.0);
+
+        // Identical replicas drift zero.
+        let same = vec![vec![3.0f32, 4.0], vec![3.0, 4.0]];
+        let rep = c.sync_round(&refs(&same), None, &mut avg, None).unwrap();
+        assert_eq!(rep.drift_sq, 0.0);
+
+        // Simulated: inner drift propagates, PS straggler spread is the
+        // netmodel's (n−1)·B/β at the modeled payload.
+        let cfg = ExperimentConfig::default();
+        let calib = Calibration::paper_v100();
+        let n = cfg.train.workers;
+        let cost = SimCost::from_config(&cfg, &calib);
+        let net = cost.net.clone();
+        let model_bytes = cost.model_bytes;
+        let mut sim = SimulatedCollective::new(ChannelCollective::new(n, 2), cost);
+        let xs: Vec<Vec<f32>> = (0..n).map(|w| vec![w as f32, 0.0]).collect();
+        let mut avg = vec![0.0f32; 2];
+        let rep = sim.sync_round(&refs(&xs), None, &mut avg, None).unwrap();
+        assert!(rep.drift_sq > 0.0);
+        let want = net.straggler_spread_s(n, model_bytes);
+        assert!((rep.straggler_s - want).abs() < 1e-15);
+
+        // merge keeps the worst observation and sums the costs.
+        let a = CommReport { drift_sq: 1.0, straggler_s: 0.25, ..CommReport::zero() };
+        let b = CommReport { drift_sq: 4.0, straggler_s: 0.125, ..CommReport::zero() };
+        let m = a.merge(b);
+        assert_eq!((m.drift_sq, m.straggler_s), (4.0, 0.25));
     }
 
     #[test]

@@ -18,9 +18,11 @@ use crate::util::rng::Rng;
 /// An encoded QSGD gradient: norm + per-coordinate (sign, level).
 #[derive(Clone, Debug)]
 pub struct QsgdEncoded {
+    /// L2 norm of the encoded vector (the shared scale factor).
     pub norm: f32,
     /// Quantization levels in `[-s, s]`, one per coordinate.
     pub levels: Vec<i8>,
+    /// Quantization level count s the message was encoded with.
     pub s: u8,
 }
 
@@ -110,8 +112,11 @@ pub struct TopKSparsifier {
 /// A sparse (index, value) gradient message.
 #[derive(Clone, Debug)]
 pub struct SparseGrad {
+    /// Dense dimension the message reconstructs into.
     pub d: usize,
+    /// Kept coordinate indices.
     pub idx: Vec<u32>,
+    /// Kept coordinate values (parallel to `idx`).
     pub val: Vec<f32>,
 }
 

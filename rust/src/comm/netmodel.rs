@@ -40,6 +40,7 @@ impl Topology {
 /// The calibrated cost model.
 #[derive(Clone, Debug)]
 pub struct NetModel {
+    /// Collective topology the costs are computed for.
     pub topology: Topology,
     /// Per-message latency α, seconds.
     pub alpha_s: f64,
@@ -107,6 +108,28 @@ impl NetModel {
                 2.0 * (n as f64 - 1.0) * self.alpha_s
                     + total_bytes as f64 / self.beta_bytes_per_s
             }
+        }
+    }
+
+    /// Modeled spread between the first and the last worker completing the
+    /// push phase of a round whose per-worker payload is `bytes` — the
+    /// straggler signal [`crate::coordinator::sync::SyncObservation`]
+    /// carries to adaptive sync policies (DESIGN.md §4).
+    ///
+    /// Under PS incast the n concurrent pushes serialise on the server
+    /// link: the first finishes after `B/β_server`, the last after
+    /// `n·B/β_server`, so the spread is `(n−1)·B/β_server`. A ring
+    /// all-reduce is bulk-synchronous (every worker advances in lockstep
+    /// through the 2(n−1) pipeline steps), so its spread is 0.
+    pub fn straggler_spread_s(&self, n: usize, bytes: u64) -> f64 {
+        if n <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        match self.topology {
+            Topology::ParameterServer => {
+                (n as f64 - 1.0) * bytes as f64 / self.server_beta_bytes_per_s
+            }
+            Topology::RingAllReduce => 0.0,
         }
     }
 
@@ -207,6 +230,18 @@ mod tests {
         let r = model("allreduce");
         let t = r.bytes_time(4, 132_000_000_000);
         assert!((t - (6.0 * 50e-6 + 1.0)).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn straggler_spread_shapes() {
+        let m = model("ps");
+        // (n−1)·B/β_server: 8 workers, 132 MB payload → 7 ms exactly.
+        let s = m.straggler_spread_s(8, 132_000_000);
+        assert!((s - 7e-3).abs() < 1e-12, "{s}");
+        assert_eq!(m.straggler_spread_s(1, 1 << 20), 0.0);
+        assert_eq!(m.straggler_spread_s(8, 0), 0.0);
+        // Ring is bulk-synchronous: no modeled spread.
+        assert_eq!(model("allreduce").straggler_spread_s(8, 1 << 20), 0.0);
     }
 
     #[test]

@@ -22,6 +22,29 @@
 //! between a parameter server and a ring — the `compressed-qsgd` and
 //! `ring-allreduce` presets below are the canonical examples, and
 //! `benches/comm_reduction.rs` sweeps all four transports this way.
+//!
+//! # The `[sync]` section
+//!
+//! Every preset (and config file) may also select its synchronization
+//! policy (DESIGN.md §4) — *when* local algorithms communicate, with
+//! `train.sync_period` as the (initial) H:
+//!
+//! ```toml
+//! [sync]
+//! policy = "fixed"            # default: the paper's mod(t, H) schedule
+//! # policy = "growing"        # H ×= grow_factor every grow_every rounds
+//! # policy = "drift"          # sync when accumulated Σ‖Δx‖² ≥ threshold
+//! # policy = "time_budget"    # pick H for a target comm-time fraction
+//! h_max = 64                  # hard cap on H for adaptive policies
+//! grow_factor = 2.0           # growing: growth multiplier (> 1)
+//! grow_every = 1              # growing: rounds between growth steps
+//! drift_threshold = 1.0       # drift: accumulated ‖Δx‖² trigger
+//! target_comm_fraction = 0.05 # time_budget: comm share of wall-clock
+//! ```
+//!
+//! The `adaptive-drift` and `time-budget` presets below are the canonical
+//! examples; `benches/adaptive_sync.rs` sweeps fixed vs. adaptive
+//! policies over the fig-3 convergence setup.
 
 use crate::error::{Error, Result};
 
@@ -30,8 +53,11 @@ use super::toml::TomlDoc;
 
 /// A named, documented experiment preset.
 pub struct Preset {
+    /// CLI spelling (`--experiment <name>`).
     pub name: &'static str,
+    /// One-line description shown by `adaalter presets`.
     pub summary: &'static str,
+    /// The preset as a TOML snippet (parsed through the normal path).
     pub toml: &'static str,
 }
 
@@ -151,6 +177,42 @@ transport = "simulated"
 "#,
     },
     Preset {
+        name: "adaptive-drift",
+        summary: "Local AdaAlter with CADA-style drift-triggered syncs (θ=4, H≤32)",
+        toml: r#"
+[train]
+workers = 8
+sync_period = 4
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+[optim]
+algorithm = "local_adaalter"
+[sync]
+policy = "drift"
+drift_threshold = 4.0
+h_max = 32
+"#,
+    },
+    Preset {
+        name: "time-budget",
+        summary: "Local AdaAlter with H re-derived each round to hold comm at 5% of wall-clock",
+        toml: r#"
+[train]
+workers = 8
+sync_period = 4
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+[optim]
+algorithm = "local_adaalter"
+[sync]
+policy = "time_budget"
+target_comm_fraction = 0.05
+h_max = 64
+"#,
+    },
+    Preset {
         name: "noniid-stress",
         summary: "Fully non-IID shards (D_i disjoint), local AdaAlter H=8",
         toml: r#"
@@ -223,6 +285,20 @@ mod tests {
     fn noniid_preset_is_fully_disjoint() {
         let c = load_preset("noniid-stress").unwrap();
         assert_eq!(c.data.noniid, 1.0);
+    }
+
+    #[test]
+    fn sync_presets_select_policies() {
+        let c = load_preset("adaptive-drift").unwrap();
+        assert_eq!(c.sync.policy, "drift");
+        assert_eq!(c.sync.drift_threshold, 4.0);
+        assert_eq!(c.sync.h_max, 32);
+        let t = load_preset("time-budget").unwrap();
+        assert_eq!(t.sync.policy, "time_budget");
+        assert_eq!(t.sync.target_comm_fraction, 0.05);
+        // All other presets keep the bitwise-identical fixed schedule.
+        let d = load_preset("paper-default").unwrap();
+        assert!(d.sync.is_fixed());
     }
 
     #[test]

@@ -79,7 +79,9 @@ impl fmt::Display for Algorithm {
 /// "Local AdaAlter, H = +∞" baseline (communication removed entirely).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SyncPeriod {
+    /// Synchronize every H-th iteration (H ≥ 1).
     Every(u64),
+    /// Never synchronize (the paper's communication-free baseline).
     Infinite,
 }
 
@@ -141,6 +143,7 @@ impl Backend {
 /// Optimizer hyperparameters (paper §6.2–6.3 defaults).
 #[derive(Clone, Debug)]
 pub struct OptimConfig {
+    /// Which of the paper's algorithms (Alg. 1–4, plus plain SGD) to run.
     pub algorithm: Algorithm,
     /// Base learning rate η (paper: 0.5 for 8×256).
     pub eta: f32,
@@ -217,7 +220,7 @@ impl Default for TrainConfig {
     }
 }
 
-/// Data-pipeline parameters (synthetic corpus; DESIGN.md S11).
+/// Data-pipeline parameters (synthetic corpus; DESIGN.md §7).
 #[derive(Clone, Debug)]
 pub struct DataConfig {
     /// Zipf exponent of the unigram distribution.
@@ -237,7 +240,7 @@ impl Default for DataConfig {
     }
 }
 
-/// Network-simulation parameters (DESIGN.md S6; calibrated in sim::calib).
+/// Network-simulation parameters (DESIGN.md §3; calibrated in sim::calib).
 ///
 /// Defaults match the paper-fitted V100/NVLink parameter-server constants
 /// (132 GB/s ≈ 1056 Gbit/s aggregate, 50 µs latency) so `train` runs charge
@@ -355,14 +358,113 @@ impl CommConfig {
     }
 }
 
+/// Synchronization-policy selection (DESIGN.md §4).
+///
+/// The `[sync]` section picks *when* local algorithms communicate —
+/// `[train].sync_period` stays the (initial) H:
+///
+/// * `policy = "fixed"` (default) — the paper's `mod(t, H)` schedule,
+///   bitwise-identical to the pre-policy trainer.
+/// * `policy = "growing"` — H multiplies by `grow_factor` after every
+///   `grow_every` sync rounds, capped at `h_max` (Stich-style).
+/// * `policy = "drift"` — CADA-style: sync when the accumulated
+///   local-update drift proxy crosses `drift_threshold`, hard-capped at
+///   `h_max` local steps.
+/// * `policy = "time_budget"` — re-derive H after every round so modeled
+///   communication stays at `target_comm_fraction` of virtual wall-clock.
+#[derive(Clone, Debug)]
+pub struct SyncConfig {
+    /// "fixed" (default), "growing", "drift" or "time_budget".
+    pub policy: String,
+    /// Hard cap on the local-update period for adaptive policies.
+    pub h_max: u64,
+    /// Growing policy: multiply H by this per growth step (> 1).
+    pub grow_factor: f64,
+    /// Growing policy: grow after this many sync rounds (≥ 1).
+    pub grow_every: u64,
+    /// Drift policy: accumulated `Σ‖Δx‖²` that triggers a round (> 0).
+    pub drift_threshold: f64,
+    /// Time-budget policy: target comm share of wall-clock, in (0, 1).
+    pub target_comm_fraction: f64,
+}
+
+impl Default for SyncConfig {
+    fn default() -> Self {
+        SyncConfig {
+            policy: "fixed".into(),
+            h_max: 64,
+            grow_factor: 2.0,
+            grow_every: 1,
+            drift_threshold: 1.0,
+            target_comm_fraction: 0.05,
+        }
+    }
+}
+
+impl SyncConfig {
+    /// The `[sync]` self-contained bounds — shared by
+    /// [`ExperimentConfig::validate`] and
+    /// [`crate::coordinator::sync::build_policy`] (which guards
+    /// programmatically-built configs that never pass through TOML
+    /// validation), mirroring the [`CommConfig::validate`] pattern.
+    pub fn validate(&self) -> Result<()> {
+        match self.policy.as_str() {
+            "fixed" | "growing" | "drift" | "time_budget" => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "sync.policy must be \"fixed\", \"growing\", \"drift\" or \
+                     \"time_budget\", got {other:?}"
+                )))
+            }
+        }
+        if self.h_max < 1 {
+            return Err(Error::Config("sync.h_max must be >= 1".into()));
+        }
+        if !(self.grow_factor > 1.0 && self.grow_factor.is_finite()) {
+            return Err(Error::Config(format!(
+                "sync.grow_factor must be a finite value > 1, got {}",
+                self.grow_factor
+            )));
+        }
+        if self.grow_every < 1 {
+            return Err(Error::Config("sync.grow_every must be >= 1".into()));
+        }
+        if !(self.drift_threshold > 0.0 && self.drift_threshold.is_finite()) {
+            return Err(Error::Config(format!(
+                "sync.drift_threshold must be a finite value > 0, got {}",
+                self.drift_threshold
+            )));
+        }
+        if !(self.target_comm_fraction > 0.0 && self.target_comm_fraction < 1.0) {
+            return Err(Error::Config(format!(
+                "sync.target_comm_fraction must be in (0, 1), got {}",
+                self.target_comm_fraction
+            )));
+        }
+        Ok(())
+    }
+
+    /// Is this the (default) fixed-period schedule?
+    pub fn is_fixed(&self) -> bool {
+        self.policy == "fixed"
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// Cluster shape / schedule (`[train]`).
     pub train: TrainConfig,
+    /// Optimizer hyperparameters (`[optim]`).
     pub optim: OptimConfig,
+    /// Synthetic data pipeline (`[data]`).
     pub data: DataConfig,
+    /// Network cost model (`[net]`).
     pub net: NetConfig,
+    /// Collective-transport selection (`[comm]`).
     pub comm: CommConfig,
+    /// Synchronization-policy selection (`[sync]`).
+    pub sync: SyncConfig,
     /// Directory for CSV/JSONL outputs.
     pub out_dir: String,
     /// Artifact directory (PJRT backend).
@@ -377,6 +479,7 @@ impl Default for ExperimentConfig {
             data: DataConfig::default(),
             net: NetConfig::default(),
             comm: CommConfig::default(),
+            sync: SyncConfig::default(),
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
         }
@@ -418,6 +521,12 @@ pub const KNOWN_KEYS: &[&str] = &[
     "comm.compression",
     "comm.qsgd_levels",
     "comm.topk_keep",
+    "sync.policy",
+    "sync.h_max",
+    "sync.grow_factor",
+    "sync.grow_every",
+    "sync.drift_threshold",
+    "sync.target_comm_fraction",
 ];
 
 impl ExperimentConfig {
@@ -484,6 +593,15 @@ impl ExperimentConfig {
         }
         c.comm.qsgd_levels = levels as u8;
         c.comm.topk_keep = doc.float_or("comm.topk_keep", c.comm.topk_keep)?;
+
+        c.sync.policy = doc.str_or("sync.policy", &c.sync.policy)?;
+        c.sync.h_max = doc.int_or("sync.h_max", c.sync.h_max as i64)? as u64;
+        c.sync.grow_factor = doc.float_or("sync.grow_factor", c.sync.grow_factor)?;
+        c.sync.grow_every = doc.int_or("sync.grow_every", c.sync.grow_every as i64)? as u64;
+        c.sync.drift_threshold =
+            doc.float_or("sync.drift_threshold", c.sync.drift_threshold)?;
+        c.sync.target_comm_fraction =
+            doc.float_or("sync.target_comm_fraction", c.sync.target_comm_fraction)?;
 
         c.validate()?;
         Ok(c)
@@ -565,6 +683,41 @@ impl ExperimentConfig {
             return Err(Error::Config("net latency/bandwidth out of range".into()));
         }
         self.comm.validate()?;
+        self.sync.validate()?;
+        if !self.sync.is_fixed() {
+            if !self.optim.algorithm.is_local() {
+                return Err(Error::Config(format!(
+                    "sync.policy = {:?} requires a local algorithm \
+                     (fully-synchronous algorithms communicate every step)",
+                    self.sync.policy
+                )));
+            }
+            let h0 = match self.train.sync_period {
+                SyncPeriod::Every(h) => h,
+                SyncPeriod::Infinite => {
+                    return Err(Error::Config(format!(
+                        "sync.policy = {:?} needs a finite train.sync_period \
+                         as its initial H (got inf)",
+                        self.sync.policy
+                    )))
+                }
+            };
+            if h0 > self.sync.h_max {
+                return Err(Error::Config(format!(
+                    "train.sync_period ({h0}) exceeds sync.h_max ({})",
+                    self.sync.h_max
+                )));
+            }
+            if self.train.checkpoint_every > 0 {
+                // Snapshots happen at sync boundaries, which adaptive
+                // policies only know at runtime.
+                return Err(Error::Config(format!(
+                    "checkpointing requires sync.policy = \"fixed\" \
+                     (adaptive policy {:?} decides boundaries at runtime)",
+                    self.sync.policy
+                )));
+            }
+        }
         Ok(())
     }
 
@@ -699,6 +852,75 @@ mod tests {
         assert!(c.validate().is_err());
         c.comm.topk_keep = 0.5;
         c.comm.transport = "carrier-pigeon".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sync_section_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[sync]\npolicy = \"drift\"\ndrift_threshold = 2.5\nh_max = 32\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.sync.policy, "drift");
+        assert_eq!(c.sync.drift_threshold, 2.5);
+        assert_eq!(c.sync.h_max, 32);
+        assert!(!c.sync.is_fixed());
+
+        // Defaults: fixed policy, bitwise-compatible with the seed.
+        let d = ExperimentConfig::default();
+        assert!(d.sync.is_fixed());
+        assert_eq!(d.sync.h_max, 64);
+        d.validate().unwrap();
+
+        // Unknown policy name.
+        let doc = TomlDoc::parse("[sync]\npolicy = \"oracle\"\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+
+        // Adaptive policies require a local algorithm…
+        let doc = TomlDoc::parse(
+            "[train]\nsync_period = 1\n[optim]\nalgorithm = \"adagrad\"\n\
+             [sync]\npolicy = \"growing\"\n",
+        )
+        .unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+        assert!(err.to_string().contains("local"), "{err}");
+
+        // …a finite initial H…
+        let doc = TomlDoc::parse("[train]\nsync_period = inf\n[sync]\npolicy = \"growing\"\n")
+            .unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+
+        // …an initial H within the cap…
+        let doc =
+            TomlDoc::parse("[train]\nsync_period = 128\n[sync]\npolicy = \"growing\"\n")
+                .unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+        assert!(err.to_string().contains("h_max"), "{err}");
+
+        // …and no checkpointing (boundaries are only known at runtime).
+        let doc = TomlDoc::parse(
+            "[train]\ncheckpoint_every = 8\n[sync]\npolicy = \"drift\"\n",
+        )
+        .unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+        assert!(err.to_string().contains("fixed"), "{err}");
+
+        // Bounds.
+        let mut c = ExperimentConfig::default();
+        c.sync.grow_factor = 1.0;
+        assert!(c.validate().is_err());
+        c.sync.grow_factor = 2.0;
+        c.sync.drift_threshold = 0.0;
+        assert!(c.validate().is_err());
+        c.sync.drift_threshold = 1.0;
+        c.sync.target_comm_fraction = 1.0;
+        assert!(c.validate().is_err());
+        c.sync.target_comm_fraction = 0.05;
+        c.sync.h_max = 0;
+        assert!(c.validate().is_err());
+        c.sync.h_max = 64;
+        c.sync.grow_every = 0;
         assert!(c.validate().is_err());
     }
 

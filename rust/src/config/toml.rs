@@ -13,10 +13,15 @@ use crate::error::{Error, Result};
 /// A parsed TOML value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// Quoted string.
     Str(String),
+    /// Integer literal.
     Int(i64),
+    /// Float literal (`inf` maps here as `f64::INFINITY`).
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Homogeneous inline array.
     Array(Vec<TomlValue>),
 }
 

@@ -30,6 +30,7 @@ const MAGIC: &[u8; 8] = b"ADACKPT1";
 pub struct Checkpoint {
     /// Global iteration the snapshot was taken after.
     pub step: u64,
+    /// Algorithm the snapshot belongs to (resume must match).
     pub algorithm: Algorithm,
     /// State vectors, algorithm-dependent (see module docs). All length d.
     pub vectors: Vec<Vec<f32>>,

@@ -1,6 +1,8 @@
 //! The Layer-3 coordinator — the paper's system contribution.
 //!
-//! * [`sync`] — the H-period synchronization scheduler (Alg. 4 lines 4/8).
+//! * [`sync`] — the synchronization subsystem: the fixed-H scheduler
+//!   arithmetic (Alg. 4 lines 4/8) plus the pluggable [`SyncPolicy`]
+//!   family deciding *when* to synchronize (DESIGN.md §4).
 //! * [`schedule`] — warm-up learning rates (§6.2.1) and batch scaling.
 //! * [`aggregate`] — gradient / parameter / denominator averaging.
 //! * [`backend`] — the gradient-backend abstraction workers run on.
@@ -19,5 +21,8 @@ pub mod worker;
 pub use checkpoint::Checkpoint;
 pub use backend::{BackendFactory, EvalMetrics, WorkerBackend};
 pub use schedule::{scale_lr, ScalingRule, WarmupSchedule};
-pub use sync::SyncScheduler;
+pub use sync::{
+    build_policy, DriftTriggered, FixedPeriod, GrowingPeriod, StepObservation, SyncObservation,
+    SyncPolicy, SyncReason, SyncScheduler, TimeBudget,
+};
 pub use trainer::{RunResult, Trainer};

@@ -1,12 +1,50 @@
-//! Synchronization scheduler — decides, per global iteration, whether the
-//! cluster communicates (Alg. 4 line 8: `mod(t, H) == 0`) and tracks the
-//! local-step index `t' = mod(t−1, H) + 1` (line 4) that scales the
-//! placeholder denominator.
+//! Synchronization scheduling — when does the cluster communicate?
 //!
-//! Also accounts communication rounds/bytes so benches can report the
-//! paper's `2/H` reduction factor directly.
+//! Two layers (DESIGN.md §4):
+//!
+//! * [`SyncScheduler`] — the pure fixed-H arithmetic of the paper
+//!   (Alg. 4 line 8: `mod(t, H) == 0`, the local-step index
+//!   `t' = mod(t−1, H) + 1` of line 4, and the `2/H` traffic accounting
+//!   the benches report).
+//! * [`SyncPolicy`] — the pluggable per-iteration *decision*: the trainer
+//!   asks the policy whether iteration `t` ends with a synchronization
+//!   ([`SyncPolicy::decide`]) and, after every executed round, feeds back a
+//!   [`SyncObservation`] (modeled round time, straggler spread, measured
+//!   replica drift, virtual-clock state) assembled from the collective
+//!   layer's [`crate::comm::CommReport`]. Policies:
+//!
+//!   | config name   | type                | schedule                                  |
+//!   |---------------|---------------------|-------------------------------------------|
+//!   | `fixed`       | [`FixedPeriod`]     | the paper's `mod(t, H)` — default          |
+//!   | `growing`     | [`GrowingPeriod`]   | H grows by a factor on a round schedule    |
+//!   | `drift`       | [`DriftTriggered`]  | sync when accumulated drift ≥ threshold    |
+//!   | `time_budget` | [`TimeBudget`]      | pick H to hit a target comm-time fraction  |
+//!
+//! [`FixedPeriod`] delegates to [`SyncScheduler`], so `policy = "fixed"`
+//! is bitwise-identical to the pre-policy trainer (pinned by
+//! `rust/tests/integration_sync_policy.rs`).
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't get the xla rpath link flags on
+//! # // this image (libstdc++ from /opt/xla_extension), so compile-only.
+//! use adaalter::config::SyncPeriod;
+//! use adaalter::coordinator::sync::{FixedPeriod, StepObservation, SyncPolicy, SyncScheduler};
+//!
+//! // The fixed policy reproduces the paper's mod(t, H) == 0 schedule.
+//! let mut policy = FixedPeriod::new(SyncPeriod::Every(4));
+//! let sched = SyncScheduler::new(SyncPeriod::Every(4));
+//! for t in 1..=12 {
+//!     let step = StepObservation { t, update_sq: 0.0 };
+//!     assert_eq!(policy.decide(&step).is_some(), sched.is_sync_step(t));
+//! }
+//! // H = 4 ships 2 vectors every 4th step: the paper's 2/H = 50% traffic.
+//! assert_eq!(sched.comm_fraction(true), 0.5);
+//! ```
 
-use crate::config::SyncPeriod;
+use std::fmt;
+
+use crate::config::{ExperimentConfig, SyncPeriod};
+use crate::error::{Error, Result};
 
 /// Pure-function scheduler over 1-based global iterations `t ∈ [1, T]`.
 #[derive(Clone, Copy, Debug)]
@@ -78,6 +116,360 @@ impl SyncScheduler {
     /// (integration tests pin recorded bytes against this).
     pub fn vectors_up_to(&self, t: u64, denominator_synced: bool) -> u64 {
         self.syncs_up_to(t) * Self::vectors_per_sync(denominator_synced)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The policy subsystem: per-iteration sync decisions from observations.
+// ---------------------------------------------------------------------------
+
+/// Why a policy triggered a synchronization round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncReason {
+    /// The scheduled period elapsed (fixed / growing / time-budget H).
+    Period,
+    /// Accumulated local-update drift crossed the configured threshold.
+    Drift,
+    /// The hard `sync.h_max` cap forced a round before any trigger fired.
+    HMax,
+    /// A time-budget recomputation chose this round boundary.
+    Budget,
+}
+
+impl SyncReason {
+    /// Stable spelling used in metrics CSVs and bench tables.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SyncReason::Period => "period",
+            SyncReason::Drift => "drift",
+            SyncReason::HMax => "h_max",
+            SyncReason::Budget => "budget",
+        }
+    }
+}
+
+impl fmt::Display for SyncReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// What a policy sees *every* iteration, before deciding whether to sync.
+#[derive(Clone, Copy, Debug)]
+pub struct StepObservation {
+    /// The 1-based global iteration that just computed its local step.
+    pub t: u64,
+    /// Mean over workers of the squared L2 norm of this iteration's local
+    /// parameter update `‖Δx‖²` — the per-step drift proxy (the sum of
+    /// these over a period upper-bounds replica divergence, the quantity
+    /// CADA-style triggers threshold). 0 when unavailable: on the fused
+    /// device path, and on the local-SGD path unless the policy requested
+    /// it — policies declare [`SyncPolicy::needs_update_norms`], which
+    /// disables fusion and enables collection.
+    pub update_sq: f64,
+}
+
+/// What a policy sees *after each executed synchronization round* —
+/// assembled by the trainer from the collective layer's
+/// [`crate::comm::CommReport`] and the virtual clock.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncObservation {
+    /// Iteration at which the round ran.
+    pub t: u64,
+    /// Why the policy triggered it.
+    pub reason: SyncReason,
+    /// Total sync rounds so far, including this one.
+    pub rounds: u64,
+    /// Exact bytes this round shipped cluster-wide.
+    pub round_bytes: u64,
+    /// Modeled wall time of this round, seconds.
+    pub round_time_s: f64,
+    /// Modeled spread between the first and last worker finishing the
+    /// round (PS incast serialisation; 0 for ring all-reduce).
+    pub straggler_s: f64,
+    /// Measured mean squared L2 distance of worker replicas from their
+    /// average at this round — the *realized* drift the paper's Theorem 2
+    /// bounds.
+    pub drift_sq: f64,
+    /// Virtual-clock time after booking the round, seconds.
+    pub virtual_now_s: f64,
+    /// Cumulative virtual time attributed to communication, seconds.
+    pub total_comm_s: f64,
+}
+
+/// A synchronization policy: decides, once per global iteration (called
+/// in order, `t = start+1, start+2, …`), whether the iteration ends with
+/// a sync round, and learns from each executed round's observation.
+///
+/// Contract: the trainer calls [`SyncPolicy::decide`] exactly once per
+/// iteration; whenever it returns `Some(reason)`, a sync round runs and
+/// [`SyncPolicy::observe`] is called with that round's observation before
+/// the next `decide`.
+pub trait SyncPolicy: Send {
+    /// Human-readable label for metrics and bench tables,
+    /// e.g. `"fixed(H=4)"` or `"drift(θ=2, H≤32)"`.
+    fn label(&self) -> String;
+
+    /// Does iteration `step.t` end with a synchronization round?
+    fn decide(&mut self, step: &StepObservation) -> Option<SyncReason>;
+
+    /// Feed back what the round the last `decide` triggered cost/observed.
+    fn observe(&mut self, _obs: &SyncObservation) {}
+
+    /// The policy's current effective period, when it has one (drift
+    /// triggering has none — only the `h_max` cap).
+    fn period_hint(&self) -> Option<u64> {
+        None
+    }
+
+    /// Does the policy consume [`StepObservation::update_sq`]? When true
+    /// the trainer disables the fused device step so the per-step update
+    /// norm is measurable.
+    fn needs_update_norms(&self) -> bool {
+        false
+    }
+}
+
+/// The paper's schedule: sync iff `mod(t, H) == 0`. Delegates to
+/// [`SyncScheduler`], so it is bitwise-identical to the pre-policy
+/// trainer. The default.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedPeriod {
+    sched: SyncScheduler,
+}
+
+impl FixedPeriod {
+    /// Fixed period H (or ∞ = never synchronize).
+    pub fn new(period: SyncPeriod) -> Self {
+        FixedPeriod { sched: SyncScheduler::new(period) }
+    }
+
+    /// The underlying pure scheduler (benches share its accounting).
+    pub fn scheduler(&self) -> SyncScheduler {
+        self.sched
+    }
+}
+
+impl SyncPolicy for FixedPeriod {
+    fn label(&self) -> String {
+        format!("fixed(H={})", self.sched.period())
+    }
+
+    fn decide(&mut self, step: &StepObservation) -> Option<SyncReason> {
+        if self.sched.is_sync_step(step.t) {
+            Some(SyncReason::Period)
+        } else {
+            None
+        }
+    }
+
+    fn period_hint(&self) -> Option<u64> {
+        self.sched.period().period()
+    }
+}
+
+/// Stich-style growing period: start at H₀ and multiply H by
+/// `sync.grow_factor` after every `sync.grow_every` sync rounds, capped
+/// at `sync.h_max`. Motivated by Local SGD analyses: early training needs
+/// tight coupling, stabilized training tolerates long local phases.
+#[derive(Clone, Copy, Debug)]
+pub struct GrowingPeriod {
+    h0: u64,
+    h: u64,
+    factor: f64,
+    every: u64,
+    h_max: u64,
+    since_sync: u64,
+    rounds_at_h: u64,
+}
+
+impl GrowingPeriod {
+    /// Start at `h0`, multiply by `factor` every `every` rounds, cap at
+    /// `h_max`. Callers must guarantee `h0 ≥ 1`, `factor > 1`,
+    /// `every ≥ 1`, `h_max ≥ h0` (config validation does).
+    pub fn new(h0: u64, factor: f64, every: u64, h_max: u64) -> Self {
+        GrowingPeriod { h0, h: h0, factor, every, h_max, since_sync: 0, rounds_at_h: 0 }
+    }
+}
+
+impl SyncPolicy for GrowingPeriod {
+    fn label(&self) -> String {
+        format!(
+            "growing(H₀={}, ×{} / {} rounds, H≤{})",
+            self.h0, self.factor, self.every, self.h_max
+        )
+    }
+
+    fn decide(&mut self, _step: &StepObservation) -> Option<SyncReason> {
+        self.since_sync += 1;
+        if self.since_sync >= self.h {
+            Some(SyncReason::Period)
+        } else {
+            None
+        }
+    }
+
+    fn observe(&mut self, _obs: &SyncObservation) {
+        self.since_sync = 0;
+        self.rounds_at_h += 1;
+        if self.rounds_at_h >= self.every {
+            self.rounds_at_h = 0;
+            let grown = (self.h as f64 * self.factor).round() as u64;
+            self.h = grown.max(self.h + 1);
+            if self.h > self.h_max {
+                self.h = self.h_max;
+            }
+        }
+    }
+
+    fn period_hint(&self) -> Option<u64> {
+        Some(self.h)
+    }
+}
+
+/// CADA-style drift trigger: accumulate the per-step update-norm proxy
+/// `Σ ‖Δx‖²` and synchronize when it crosses `sync.drift_threshold` —
+/// with a hard `sync.h_max` cap so a vanishing-gradient phase cannot
+/// starve communication forever.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftTriggered {
+    threshold: f64,
+    h_max: u64,
+    since_sync: u64,
+    accumulated: f64,
+}
+
+impl DriftTriggered {
+    /// Trigger at accumulated proxy ≥ `threshold`, force a round after
+    /// `h_max` local steps regardless.
+    pub fn new(threshold: f64, h_max: u64) -> Self {
+        DriftTriggered { threshold, h_max, since_sync: 0, accumulated: 0.0 }
+    }
+
+    /// Accumulated drift proxy since the last round (for diagnostics).
+    pub fn accumulated(&self) -> f64 {
+        self.accumulated
+    }
+}
+
+impl SyncPolicy for DriftTriggered {
+    fn label(&self) -> String {
+        format!("drift(θ={}, H≤{})", self.threshold, self.h_max)
+    }
+
+    fn decide(&mut self, step: &StepObservation) -> Option<SyncReason> {
+        self.since_sync += 1;
+        self.accumulated += step.update_sq;
+        if self.accumulated >= self.threshold {
+            Some(SyncReason::Drift)
+        } else if self.since_sync >= self.h_max {
+            Some(SyncReason::HMax)
+        } else {
+            None
+        }
+    }
+
+    fn observe(&mut self, _obs: &SyncObservation) {
+        self.since_sync = 0;
+        self.accumulated = 0.0;
+    }
+
+    fn needs_update_norms(&self) -> bool {
+        true
+    }
+}
+
+/// Pick H to hit a target communication fraction of modeled wall-clock:
+/// with per-round comm time `t_round` and per-iteration compute time
+/// `t_iter`, the comm share is `f = t_round / (t_round + H·t_iter)`, so
+/// the policy sets `H = t_round·(1−f) / (f·t_iter)` after every round,
+/// estimating `t_iter` from the virtual clock's non-communication charge.
+/// Starts at H₀ until the first round is observed; clamped to
+/// `[1, sync.h_max]`.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeBudget {
+    h: u64,
+    target: f64,
+    h_max: u64,
+    since_sync: u64,
+}
+
+impl TimeBudget {
+    /// Target comm fraction `target ∈ (0, 1)`; `h0` until first
+    /// observation; cap `h_max`.
+    pub fn new(h0: u64, target: f64, h_max: u64) -> Self {
+        TimeBudget { h: h0, target, h_max, since_sync: 0 }
+    }
+}
+
+impl SyncPolicy for TimeBudget {
+    fn label(&self) -> String {
+        format!("time_budget(f={}, H≤{})", self.target, self.h_max)
+    }
+
+    fn decide(&mut self, _step: &StepObservation) -> Option<SyncReason> {
+        self.since_sync += 1;
+        if self.since_sync >= self.h {
+            Some(SyncReason::Budget)
+        } else {
+            None
+        }
+    }
+
+    fn observe(&mut self, obs: &SyncObservation) {
+        self.since_sync = 0;
+        // Compute/dataload time per iteration, from the clock's
+        // non-communication charge over the iterations completed so far
+        // (the current iteration's compute is charged after the round, so
+        // divide by t − 1; at t = 1 there is nothing to estimate from).
+        let iters = obs.t.saturating_sub(1);
+        let non_comm_s = obs.virtual_now_s - obs.total_comm_s;
+        if iters == 0 || non_comm_s <= 0.0 || obs.round_time_s <= 0.0 {
+            return;
+        }
+        let t_iter = non_comm_s / iters as f64;
+        let want = obs.round_time_s * (1.0 - self.target) / (self.target * t_iter);
+        self.h = (want.ceil() as u64).clamp(1, self.h_max);
+    }
+
+    fn period_hint(&self) -> Option<u64> {
+        Some(self.h)
+    }
+}
+
+/// Build the policy the `[sync]` config section asks for (re-validating,
+/// so programmatically-built configs hit the same rules TOML loads do).
+/// Fully-synchronous algorithms always get `FixedPeriod(1)` — they
+/// communicate every iteration by definition.
+pub fn build_policy(cfg: &ExperimentConfig) -> Result<Box<dyn SyncPolicy>> {
+    cfg.sync.validate()?;
+    if !cfg.optim.algorithm.is_local() {
+        return Ok(Box::new(FixedPeriod::new(SyncPeriod::Every(1))));
+    }
+    let s = &cfg.sync;
+    let h0 = || -> Result<u64> {
+        let h = cfg.train.sync_period.period().ok_or_else(|| {
+            Error::Config(format!(
+                "sync.policy = {:?} needs a finite train.sync_period as its initial H",
+                s.policy
+            ))
+        })?;
+        if h > s.h_max {
+            return Err(Error::Config(format!(
+                "train.sync_period ({h}) exceeds sync.h_max ({})",
+                s.h_max
+            )));
+        }
+        Ok(h)
+    };
+    match s.policy.as_str() {
+        "fixed" => Ok(Box::new(FixedPeriod::new(cfg.train.sync_period))),
+        "growing" => Ok(Box::new(GrowingPeriod::new(h0()?, s.grow_factor, s.grow_every, s.h_max))),
+        "drift" => Ok(Box::new(DriftTriggered::new(s.drift_threshold, s.h_max))),
+        "time_budget" => Ok(Box::new(TimeBudget::new(h0()?, s.target_comm_fraction, s.h_max))),
+        other => Err(Error::Config(format!(
+            "unknown sync.policy {other:?} (expected fixed, growing, drift or time_budget)"
+        ))),
     }
 }
 
@@ -174,5 +566,242 @@ mod tests {
     #[should_panic(expected = "1-based")]
     fn zero_iteration_rejected() {
         SyncScheduler::new(SyncPeriod::Every(4)).t_prime(0);
+    }
+
+    // -- policy subsystem ---------------------------------------------------
+
+    /// Dummy observation for driving policies outside the trainer.
+    fn obs(t: u64, reason: SyncReason, rounds: u64) -> SyncObservation {
+        SyncObservation {
+            t,
+            reason,
+            rounds,
+            round_bytes: 0,
+            round_time_s: 0.0,
+            straggler_s: 0.0,
+            drift_sq: 0.0,
+            virtual_now_s: 0.0,
+            total_comm_s: 0.0,
+        }
+    }
+
+    /// Drive a policy for `steps` iterations with a constant per-step
+    /// update proxy; return the gaps between consecutive sync rounds.
+    fn gaps(policy: &mut dyn SyncPolicy, steps: u64, update_sq: f64) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut last = 0u64;
+        let mut rounds = 0u64;
+        for t in 1..=steps {
+            let step = StepObservation { t, update_sq };
+            if let Some(reason) = policy.decide(&step) {
+                rounds += 1;
+                out.push(t - last);
+                last = t;
+                policy.observe(&obs(t, reason, rounds));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fixed_policy_matches_mod_arithmetic() {
+        // The ISSUE's pin: FixedPeriod == the old mod(t, H) for
+        // H ∈ {1, 4, 16, ∞}.
+        for period in [
+            SyncPeriod::Every(1),
+            SyncPeriod::Every(4),
+            SyncPeriod::Every(16),
+            SyncPeriod::Infinite,
+        ] {
+            let mut p = FixedPeriod::new(period);
+            let s = SyncScheduler::new(period);
+            let mut rounds = 0u64;
+            for t in 1..=512 {
+                let got = p.decide(&StepObservation { t, update_sq: 9.9 });
+                assert_eq!(got.is_some(), s.is_sync_step(t), "{period}: t={t}");
+                if let Some(r) = got {
+                    assert_eq!(r, SyncReason::Period);
+                    rounds += 1;
+                    p.observe(&obs(t, r, rounds));
+                }
+            }
+            assert_eq!(rounds, s.syncs_up_to(512), "{period}");
+        }
+    }
+
+    #[test]
+    fn fixed_policy_matches_scheduler_for_random_h() {
+        prop::check("fixed policy == scheduler", 100, |g| {
+            let h = g.u64_in(1..64);
+            let steps = g.u64_in(1..500);
+            let mut p = FixedPeriod::new(SyncPeriod::Every(h));
+            let s = SyncScheduler::new(SyncPeriod::Every(h));
+            for t in 1..=steps {
+                let got = p.decide(&StepObservation { t, update_sq: 0.0 }).is_some();
+                prop::assert_that(
+                    got == s.is_sync_step(t),
+                    format!("H={h}: policy and scheduler disagree at t={t}"),
+                )?;
+                if got {
+                    p.observe(&obs(t, SyncReason::Period, 1));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn growing_period_doubles_on_schedule() {
+        // H₀ = 4, ×2 every 2 rounds, capped at 16:
+        // gaps 4, 4, 8, 8, 16, 16, 16, …
+        let mut p = GrowingPeriod::new(4, 2.0, 2, 16);
+        let g = gaps(&mut p, 200, 0.0);
+        assert_eq!(&g[..6], &[4, 4, 8, 8, 16, 16]);
+        assert!(g[6..].iter().all(|&x| x == 16), "cap violated: {g:?}");
+        assert_eq!(p.period_hint(), Some(16));
+    }
+
+    #[test]
+    fn growing_period_fractional_factor_still_grows() {
+        // factor 1.1 rounds H=1 to 1; the max(h+1) guard must still grow.
+        let mut p = GrowingPeriod::new(1, 1.1, 1, 8);
+        let g = gaps(&mut p, 64, 0.0);
+        assert_eq!(&g[..4], &[1, 2, 3, 4], "{g:?}");
+    }
+
+    #[test]
+    fn drift_triggers_at_threshold() {
+        // Constant proxy 1.0, threshold 4: sync every 4th step, reason
+        // Drift (threshold reached exactly at the 4th accumulation).
+        let mut p = DriftTriggered::new(4.0, 64);
+        let mut reasons = Vec::new();
+        let mut rounds = 0;
+        for t in 1..=12 {
+            if let Some(r) = p.decide(&StepObservation { t, update_sq: 1.0 }) {
+                rounds += 1;
+                reasons.push((t, r));
+                p.observe(&obs(t, r, rounds));
+            }
+        }
+        assert_eq!(
+            reasons,
+            vec![
+                (4, SyncReason::Drift),
+                (8, SyncReason::Drift),
+                (12, SyncReason::Drift)
+            ]
+        );
+        assert!(p.needs_update_norms());
+        assert_eq!(p.period_hint(), None);
+    }
+
+    #[test]
+    fn drift_respects_h_max_for_random_streams() {
+        prop::check("drift gap <= h_max", 100, |g| {
+            let h_max = g.u64_in(1..32);
+            let threshold = g.f64_in(0.1..100.0);
+            let mut p = DriftTriggered::new(threshold, h_max);
+            let mut last = 0u64;
+            let mut rounds = 0u64;
+            for t in 1..=400u64 {
+                let upd = g.f64_in(0.0..2.0);
+                if let Some(r) = p.decide(&StepObservation { t, update_sq: upd }) {
+                    rounds += 1;
+                    prop::assert_that(
+                        t - last <= h_max,
+                        format!("gap {} > h_max {h_max} at t={t}", t - last),
+                    )?;
+                    // The cap reason only fires at exactly the cap.
+                    if r == SyncReason::HMax {
+                        prop::assert_that(
+                            t - last == h_max,
+                            format!("HMax at gap {} != {h_max}", t - last),
+                        )?;
+                    }
+                    last = t;
+                    p.observe(&obs(t, r, rounds));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn drift_quiet_stream_falls_back_to_h_max() {
+        // No drift at all: every gap is exactly h_max, reason HMax.
+        let mut p = DriftTriggered::new(1.0, 8);
+        let g = gaps(&mut p, 64, 0.0);
+        assert_eq!(g, vec![8; 8]);
+    }
+
+    #[test]
+    fn time_budget_solves_for_target_fraction() {
+        // t_round = 0.07 s, t_iter = 0.2333… s, target f = 0.05:
+        // H = 0.07·0.95/(0.05·t_iter) ≈ 5.7 → ceil 6.
+        let mut p = TimeBudget::new(4, 0.05, 64);
+        assert_eq!(p.period_hint(), Some(4));
+        let mut o = obs(4, SyncReason::Budget, 1);
+        o.round_time_s = 0.07;
+        o.virtual_now_s = 0.77; // 0.7 non-comm over 3 completed iterations
+        o.total_comm_s = 0.07;
+        p.observe(&o);
+        let t_iter = (0.77 - 0.07) / 3.0;
+        let want = (0.07 * 0.95 / (0.05 * t_iter)).ceil() as u64;
+        assert_eq!(p.period_hint(), Some(want));
+        // And the next gap uses the new H.
+        let g = gaps(&mut p, want + 1, 0.0);
+        assert_eq!(g, vec![want]);
+    }
+
+    #[test]
+    fn time_budget_clamps_to_h_max_and_one() {
+        let mut p = TimeBudget::new(4, 0.5, 8);
+        // Enormous round cost → unclamped H would explode; cap at 8.
+        let mut o = obs(4, SyncReason::Budget, 1);
+        o.round_time_s = 1e6;
+        o.virtual_now_s = 1e6 + 0.3;
+        o.total_comm_s = 1e6;
+        p.observe(&o);
+        assert_eq!(p.period_hint(), Some(8));
+        // Tiny round cost → H floors at 1.
+        let mut o = obs(4, SyncReason::Budget, 2);
+        o.round_time_s = 1e-9;
+        o.virtual_now_s = 0.3;
+        o.total_comm_s = 0.0;
+        p.observe(&o);
+        assert_eq!(p.period_hint(), Some(1));
+    }
+
+    #[test]
+    fn build_policy_dispatches_on_config() {
+        use crate::config::ExperimentConfig;
+        let mut cfg = ExperimentConfig::default();
+        assert!(build_policy(&cfg).unwrap().label().starts_with("fixed(H=4"));
+        cfg.sync.policy = "growing".into();
+        assert!(build_policy(&cfg).unwrap().label().starts_with("growing"));
+        cfg.sync.policy = "drift".into();
+        let p = build_policy(&cfg).unwrap();
+        assert!(p.label().starts_with("drift"));
+        assert!(p.needs_update_norms());
+        cfg.sync.policy = "time_budget".into();
+        assert!(build_policy(&cfg).unwrap().label().starts_with("time_budget"));
+        cfg.sync.policy = "oracle".into();
+        assert!(build_policy(&cfg).is_err());
+        // Non-local algorithms always get the every-step fixed policy.
+        let mut sync_cfg = ExperimentConfig::default();
+        sync_cfg.optim.algorithm = crate::config::Algorithm::AdaGrad;
+        assert_eq!(build_policy(&sync_cfg).unwrap().label(), "fixed(H=1)");
+        // Adaptive initial H needs a finite sync_period.
+        let mut inf = ExperimentConfig::default();
+        inf.train.sync_period = SyncPeriod::Infinite;
+        inf.sync.policy = "growing".into();
+        assert!(build_policy(&inf).is_err());
+        // …within the h_max cap, even for programmatically-built configs
+        // that never pass through ExperimentConfig::validate.
+        let mut cap = ExperimentConfig::default();
+        cap.train.sync_period = SyncPeriod::Every(128); // default h_max = 64
+        cap.sync.policy = "growing".into();
+        let err = build_policy(&cap).unwrap_err();
+        assert!(err.to_string().contains("h_max"), "{err}");
     }
 }

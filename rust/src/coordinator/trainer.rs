@@ -8,9 +8,12 @@
 //!   gradients (the §2 barrier), aggregates (Alg. 1/3 line 5), and applies
 //!   the [`crate::optim::SyncOptimizer`] update.
 //! * **Local** (local SGD / local AdaAlter): workers own their replicas and
-//!   step independently; every H-th iteration the leader gathers
+//!   step independently; when the configured [`SyncPolicy`] says so (every
+//!   H-th iteration under the default fixed policy), the leader gathers
 //!   `(y_{i,t}, A²_{i,t})`, averages both (Alg. 4 lines 11–12), and
-//!   broadcasts the averages back.
+//!   broadcasts the averages back. Each executed round's observation
+//!   (modeled time, straggler spread, realized drift) feeds back into the
+//!   policy (DESIGN.md §4).
 //!
 //! Communication is layered (DESIGN.md §3): the control plane (commands,
 //! replies, barriers) runs over a [`ChannelTransport`], and every
@@ -32,12 +35,14 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use crate::comm::{build_collective, ChannelTransport, Collective, CommReport};
-use crate::config::{Algorithm, ExperimentConfig, SyncPeriod};
+use crate::config::{Algorithm, ExperimentConfig};
 use crate::coordinator::aggregate::{average_into, Aggregator};
 use crate::coordinator::backend::{BackendFactory, EvalMetrics};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::schedule::WarmupSchedule;
-use crate::coordinator::sync::SyncScheduler;
+use crate::coordinator::sync::{
+    build_policy, StepObservation, SyncObservation, SyncPolicy, SyncReason,
+};
 use crate::coordinator::worker::{worker_loop, Cmd, Reply, WorkerSpec};
 use crate::error::{Error, Result};
 use crate::metrics::TrainRecorder;
@@ -96,11 +101,33 @@ impl Trainer {
                     .into(),
             ));
         }
-        let scheduler = SyncScheduler::new(if algo.is_local() {
-            cfg.train.sync_period
-        } else {
-            SyncPeriod::Every(1)
-        });
+        if self.resume.is_some() && algo.is_local() && !cfg.sync.is_fixed() {
+            // Adaptive scheduler state (drift accumulators, grown H) is
+            // not part of the checkpoint format either.
+            return Err(Error::Config(
+                "resume requires sync.policy = \"fixed\" \
+                 (adaptive scheduler state is not checkpointed)"
+                    .into(),
+            ));
+        }
+        if cfg.train.checkpoint_every > 0 && algo.is_local() && !cfg.sync.is_fixed() {
+            // TOML-loaded configs are rejected by validate(); guard the
+            // programmatically-built ones here too — snapshots require
+            // sync boundaries known ahead of time.
+            return Err(Error::Config(
+                "checkpointing requires sync.policy = \"fixed\" \
+                 (adaptive policies decide boundaries at runtime)"
+                    .into(),
+            ));
+        }
+        // The per-iteration sync decision is the policy's (DESIGN.md §4);
+        // non-local algorithms always get FixedPeriod(1).
+        let policy = build_policy(cfg)?;
+        // Drift-triggered policies consume the per-step update norm, which
+        // the fused device path cannot observe — fall back to the split
+        // grad + rust-update path for those runs.
+        let collect_update_sq = policy.needs_update_norms();
+        let allow_fused = self.allow_fused && !collect_update_sq;
         let warmup = WarmupSchedule::new(cfg.optim.eta, cfg.optim.warmup_steps);
 
         // --- Spawn workers -------------------------------------------------
@@ -148,6 +175,7 @@ impl Trainer {
         let coll = build_collective(cfg, &self.calibration, d)?;
         let mut recorder = TrainRecorder::new(cfg.train.steps_per_epoch);
         recorder.set_transport(coll.label());
+        recorder.set_sync_policy(policy.label());
 
         let (reply_tx, reply_rx) = channel::<Reply>();
         let mut txs = Vec::with_capacity(n);
@@ -160,7 +188,8 @@ impl Trainer {
                 epsilon: cfg.optim.epsilon,
                 b0: cfg.optim.b0,
                 init: Arc::clone(&init),
-                allow_fused: self.allow_fused,
+                allow_fused,
+                collect_update_sq,
             };
             let factory = Arc::clone(&self.factory);
             let rtx = reply_tx.clone();
@@ -177,7 +206,8 @@ impl Trainer {
         let mut run = LeaderLoop {
             cfg,
             d,
-            scheduler,
+            policy,
+            last_sync_t: start_step,
             warmup,
             coll,
             calib: &self.calibration,
@@ -220,7 +250,10 @@ fn worker_err(worker: usize, msg: String) -> Error {
 struct LeaderLoop<'a> {
     cfg: &'a ExperimentConfig,
     d: usize,
-    scheduler: SyncScheduler,
+    /// The synchronization policy (config-selected; DESIGN.md §4).
+    policy: Box<dyn SyncPolicy>,
+    /// Iteration of the last executed sync round (realized-H tracking).
+    last_sync_t: u64,
     warmup: WarmupSchedule,
     /// The data-plane collective (config-selected).
     coll: Box<dyn Collective>,
@@ -369,18 +402,21 @@ impl<'a> LeaderLoop<'a> {
         Ok(mean_loss)
     }
 
-    /// One local iteration; runs the sync round when the scheduler says so.
+    /// One local iteration; runs the sync round when the policy says so.
     fn local_iteration(&mut self, t: u64, lr: f32) -> Result<f64> {
         self.transport.broadcast(|_| Cmd::LocalStep { t, lr })?;
-        let losses = self.transport.gather(|r| match r {
-            Reply::StepDone { worker, loss } => Ok((worker, loss)),
+        let replies = self.transport.gather(|r| match r {
+            Reply::StepDone { worker, loss, update_sq } => Ok((worker, (loss, update_sq))),
             Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
             _ => Err(Error::Protocol("expected StepDone".into())),
         })?;
-        let mean_loss = losses.iter().map(|&l| l as f64).sum::<f64>() / losses.len() as f64;
+        let n = replies.len() as f64;
+        let mean_loss = replies.iter().map(|&(l, _)| l as f64).sum::<f64>() / n;
+        let mean_update_sq = replies.iter().map(|&(_, u)| u).sum::<f64>() / n;
 
-        if self.scheduler.is_sync_step(t) {
-            self.sync_round()?;
+        let step = StepObservation { t, update_sq: mean_update_sq };
+        if let Some(reason) = self.policy.decide(&step) {
+            self.sync_round(t, reason)?;
         }
         Ok(mean_loss)
     }
@@ -397,8 +433,10 @@ impl<'a> LeaderLoop<'a> {
 
     /// Alg. 4 lines 11–12: the paired averaging round, executed by the
     /// configured collective (which may compress the exchange), then the
-    /// averaged state is installed on every replica.
-    fn sync_round(&mut self) -> Result<()> {
+    /// averaged state is installed on every replica. The round's
+    /// [`SyncObservation`] — assembled from the collective's report and
+    /// the virtual clock — is recorded and fed back to the policy.
+    fn sync_round(&mut self, t: u64, reason: SyncReason) -> Result<()> {
         let wants_acc = self.cfg.optim.algorithm.syncs_denominator();
         let states = self.collect_states()?;
         let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
@@ -428,6 +466,26 @@ impl<'a> LeaderLoop<'a> {
         })?;
         self.wait_ready()?;
         self.apply_comm(report);
+        let (rounds, _) = self.recorder.comm();
+        self.recorder.sync_event(
+            t,
+            t - self.last_sync_t,
+            reason.as_str(),
+            report.bytes,
+            self.clock.now_s(),
+        );
+        self.last_sync_t = t;
+        self.policy.observe(&SyncObservation {
+            t,
+            reason,
+            rounds,
+            round_bytes: report.bytes,
+            round_time_s: report.time_s,
+            straggler_s: report.straggler_s,
+            drift_sq: report.drift_sq,
+            virtual_now_s: self.clock.now_s(),
+            total_comm_s: self.clock.total(Charge::Communication),
+        });
         Ok(())
     }
 
@@ -579,6 +637,94 @@ mod tests {
         assert!(bytes > 0);
         let r_inf = run(Algorithm::LocalAdaAlter, SyncPeriod::Infinite, 63);
         assert_eq!(r_inf.recorder.comm(), (0, 0));
+    }
+
+    #[test]
+    fn sync_events_trace_fixed_policy() {
+        let r = run(Algorithm::LocalAdaAlter, SyncPeriod::Every(5), 63);
+        assert_eq!(r.recorder.sync_events.len() as u64, r.recorder.comm().0);
+        assert!(r
+            .recorder
+            .sync_events
+            .iter()
+            .all(|e| e.gap == 5 && e.reason == "period" && e.bytes > 0));
+        assert_eq!(r.recorder.sync_policy(), "fixed(H=5)");
+        // Fully-synchronous algorithms communicate every step by
+        // construction — no policy events are recorded for them.
+        let s = run(Algorithm::AdaGrad, SyncPeriod::Every(1), 10);
+        assert!(s.recorder.sync_events.is_empty());
+        assert_eq!(s.recorder.sync_policy(), "fixed(H=1)");
+    }
+
+    #[test]
+    fn growing_policy_cuts_rounds_and_still_converges() {
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 400);
+        cfg.sync.policy = "growing".into();
+        cfg.sync.h_max = 16;
+        let f = synthetic_factory(&cfg);
+        let r = Trainer::new(cfg, f).run().unwrap();
+        let (rounds, _) = r.recorder.comm();
+        assert!(rounds < 400 / 4, "growing kept all {rounds} rounds");
+        assert_eq!(r.recorder.sync_events.len() as u64, rounds);
+        let gaps = r.recorder.realized_h();
+        assert!(gaps.windows(2).all(|w| w[1] >= w[0]), "non-monotone: {gaps:?}");
+        assert!(gaps.iter().all(|&g| g <= 16), "cap violated: {gaps:?}");
+        assert!(r.final_eval.unwrap().loss.is_finite());
+    }
+
+    #[test]
+    fn drift_policy_respects_h_max_through_the_trainer() {
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 200);
+        cfg.sync.policy = "drift".into();
+        cfg.sync.drift_threshold = 0.5;
+        cfg.sync.h_max = 8;
+        let f = synthetic_factory(&cfg);
+        let r = Trainer::new(cfg, f).run().unwrap();
+        let events = &r.recorder.sync_events;
+        assert!(!events.is_empty());
+        assert!(events.iter().all(|e| e.gap >= 1 && e.gap <= 8));
+        assert!(events
+            .iter()
+            .all(|e| e.reason == "drift" || e.reason == "h_max"));
+        assert_eq!(events.len() as u64, r.recorder.comm().0);
+        assert!(r.final_eval.unwrap().loss.is_finite());
+    }
+
+    #[test]
+    fn time_budget_policy_holds_comm_fraction() {
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 200);
+        cfg.sync.policy = "time_budget".into();
+        cfg.sync.target_comm_fraction = 0.02;
+        let f = synthetic_factory(&cfg);
+        let r = Trainer::new(cfg, f).run().unwrap();
+        let events = &r.recorder.sync_events;
+        assert!(events.len() >= 2);
+        // After the first observed round the policy re-derives H from the
+        // cost model; at 4 workers / 2% target it grows past the H₀ = 4.
+        assert!(
+            events.last().unwrap().gap > events.first().unwrap().gap,
+            "H did not adapt: {:?}",
+            r.recorder.realized_h()
+        );
+        let frac = r.clock.total(Charge::Communication) / r.clock.now_s();
+        assert!(frac < 0.05, "comm fraction {frac} over budget");
+        assert!(r.final_eval.unwrap().loss.is_finite());
+    }
+
+    #[test]
+    fn adaptive_resume_rejected() {
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 8);
+        cfg.sync.policy = "growing".into();
+        let f = synthetic_factory(&cfg);
+        let d = cfg.train.rust_math_dim;
+        let mut t = Trainer::new(cfg, f);
+        t.resume = Some(crate::coordinator::Checkpoint {
+            step: 4,
+            algorithm: Algorithm::LocalAdaAlter,
+            vectors: vec![vec![0.0; d], vec![1.0; d], vec![1.0; d]],
+        });
+        let err = t.run().err().expect("must fail");
+        assert!(err.to_string().contains("fixed"), "{err}");
     }
 
     #[test]

@@ -40,8 +40,13 @@ pub enum Cmd {
 pub enum Reply {
     /// Gradient for a `SyncStep` (loss is the local mini-batch loss).
     Grad { worker: usize, loss: f32, grad: Vec<f32> },
-    /// A `LocalStep` finished.
-    StepDone { worker: usize, loss: f32 },
+    /// A `LocalStep` finished. `update_sq` is the squared L2 norm of this
+    /// step's local parameter update `‖Δx‖²` — the drift proxy adaptive
+    /// sync policies consume (DESIGN.md §4); 0 when the fused device path
+    /// applied the update (the norm is not observable without an extra
+    /// device read, so the trainer disables fusion for policies that need
+    /// it).
+    StepDone { worker: usize, loss: f32, update_sq: f64 },
     /// Local state snapshot for averaging.
     State { worker: usize, x: Vec<f32>, acc: Option<Vec<f32>> },
     /// Evaluation result.
@@ -54,7 +59,9 @@ pub enum Reply {
 
 /// Everything a worker thread needs at spawn time.
 pub struct WorkerSpec {
+    /// This worker's 0-based id.
     pub worker: usize,
+    /// The algorithm the cluster runs (decides the local state held).
     pub algorithm: Algorithm,
     /// ε for local AdaAlter.
     pub epsilon: f32,
@@ -64,6 +71,11 @@ pub struct WorkerSpec {
     pub init: Arc<Vec<f32>>,
     /// Use the backend's fused local-step path when available.
     pub allow_fused: bool,
+    /// Measure the per-step `‖Δx‖²` drift proxy (set when the sync policy
+    /// consumes it). Gates the local-SGD path's extra pass over the
+    /// gradient; the AdaAlter path folds the norm into its existing fused
+    /// update loop, so it always reports it.
+    pub collect_update_sq: bool,
 }
 
 /// Local-algorithm replica state.
@@ -121,11 +133,25 @@ pub fn worker_loop(
                 }
             }
             Cmd::LocalStep { t, lr } => {
-                let loss = match &mut local {
+                let (loss, update_sq) = match &mut local {
                     LocalState::Sgd { x } => match backend.loss_and_grad(x, t, &mut grad_buf) {
                         Ok(loss) => {
+                            // Δx = −lr·g, so ‖Δx‖² is computable before the
+                            // update without touching its arithmetic. Only
+                            // paid when a policy consumes it.
+                            let update_sq: f64 = if spec.collect_update_sq {
+                                grad_buf
+                                    .iter()
+                                    .map(|&gv| {
+                                        let u = (lr * gv) as f64;
+                                        u * u
+                                    })
+                                    .sum()
+                            } else {
+                                0.0
+                            };
                             Sgd::apply(x, &grad_buf, lr);
-                            loss
+                            (loss, update_sq)
                         }
                         Err(e) => return fail(&tx, format!("grad at t={t}: {e}")),
                     },
@@ -139,11 +165,12 @@ pub fn worker_loop(
                             Ok(None)
                         };
                         match fused {
-                            Ok(Some(loss)) => loss,
+                            // Fused path: update norm not observable.
+                            Ok(Some(loss)) => (loss, 0.0),
                             Ok(None) => match backend.loss_and_grad(w.x(), t, &mut grad_buf) {
                                 Ok(loss) => {
-                                    w.local_step(&grad_buf, lr);
-                                    loss
+                                    let update_sq = w.local_step(&grad_buf, lr);
+                                    (loss, update_sq)
                                 }
                                 Err(e) => return fail(&tx, format!("grad at t={t}: {e}")),
                             },
@@ -154,7 +181,7 @@ pub fn worker_loop(
                         return fail(&tx, "LocalStep sent to a sync-algorithm worker".into())
                     }
                 };
-                let _ = tx.send(Reply::StepDone { worker, loss });
+                let _ = tx.send(Reply::StepDone { worker, loss, update_sq });
             }
             Cmd::CollectState => match &local {
                 LocalState::Sgd { x } => {

@@ -5,13 +5,15 @@
 //! 2019), built as the Layer-3 coordinator of a three-layer stack:
 //!
 //! * **L3 (this crate)** — the distributed-training coordinator: worker
-//!   threads, the H-period synchronization scheduler with the paper's
-//!   `t'·ε²` placeholder denominator, parameter/denominator averaging, a
-//!   pluggable collective-communication layer ([`comm::Collective`]:
-//!   in-process lockstep, α–β-charged parameter-server / ring-allreduce
-//!   simulation, QSGD / top-k compressed transports with exact wire-byte
-//!   accounting), warm-up learning-rate schedule, data pipeline, metrics,
-//!   CLI.
+//!   threads, the synchronization subsystem with the paper's `t'·ε²`
+//!   placeholder denominator (a pluggable [`coordinator::SyncPolicy`]
+//!   family — fixed H, growing H, drift-triggered, time-budget — fed
+//!   per-round observations from the collective layer),
+//!   parameter/denominator averaging, a pluggable
+//!   collective-communication layer ([`comm::Collective`]: in-process
+//!   lockstep, α–β-charged parameter-server / ring-allreduce simulation,
+//!   QSGD / top-k compressed transports with exact wire-byte accounting),
+//!   warm-up learning-rate schedule, data pipeline, metrics, CLI.
 //! * **L2 (python/compile, build time only)** — a JAX transformer language
 //!   model lowered once to HLO-text artifacts (`make artifacts`).
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the fused
@@ -22,6 +24,7 @@
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every figure/table of the paper to a bench target.
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod comm;

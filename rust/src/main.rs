@@ -159,6 +159,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     if !quiet {
         println!("wrote {steps_csv} and {evals_csv}");
     }
+    // Local runs: the realized-H trajectory (one row per sync round).
+    if !result.recorder.sync_events.is_empty() {
+        let sync_csv = format!("{}/sync_{tag}.csv", cfg.out_dir);
+        result.recorder.write_sync_csv(&sync_csv)?;
+        if !quiet {
+            println!(
+                "wrote {sync_csv} ({} rounds, policy {})",
+                result.recorder.sync_events.len(),
+                result.recorder.sync_policy()
+            );
+        }
+    }
     Ok(())
 }
 

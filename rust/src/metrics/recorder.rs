@@ -1,8 +1,9 @@
 //! Metric recording for a training run.
 //!
-//! The recorder owns the loss/PPL curves (the Fig. 3 series) and the
-//! throughput counters (Fig. 2), on both axes the paper uses: epochs and
-//! (virtual) wall-clock time.
+//! The recorder owns the loss/PPL curves (the Fig. 3 series), the
+//! throughput counters (Fig. 2), and the synchronization-event log (the
+//! realized-H trajectory of adaptive sync policies, DESIGN.md §4), on
+//! both axes the paper uses: epochs and (virtual) wall-clock time.
 
 use std::time::Instant;
 
@@ -12,23 +13,53 @@ use crate::util::csv::CsvWriter;
 /// One logged training step (averaged over workers).
 #[derive(Clone, Copy, Debug)]
 pub struct StepPoint {
+    /// Global iteration t (1-based).
     pub step: u64,
+    /// Epoch coordinate `t / steps_per_epoch`.
     pub epoch: f64,
+    /// Mean worker training loss at this step.
     pub train_loss: f64,
+    /// Learning rate in effect.
     pub lr: f32,
+    /// Virtual-clock time, seconds.
     pub virtual_s: f64,
+    /// Real wall-clock since the recorder started, seconds.
     pub wall_s: f64,
 }
 
 /// One held-out evaluation.
 #[derive(Clone, Copy, Debug)]
 pub struct EvalPoint {
+    /// Global iteration t the evaluation ran at.
     pub step: u64,
+    /// Epoch coordinate `t / steps_per_epoch`.
     pub epoch: f64,
+    /// Held-out loss.
     pub loss: f64,
+    /// Held-out perplexity (None for non-LM workloads).
     pub ppl: Option<f64>,
+    /// Virtual-clock time, seconds.
     pub virtual_s: f64,
+    /// Real wall-clock since the recorder started, seconds.
     pub wall_s: f64,
+}
+
+/// One executed synchronization round — together these trace the
+/// *realized* H trajectory (and trigger reasons) of the sync policy that
+/// drove the run.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncEvent {
+    /// Global iteration the round ran at.
+    pub step: u64,
+    /// Local steps since the previous round — the realized H.
+    pub gap: u64,
+    /// Why the policy triggered it
+    /// ([`crate::coordinator::sync::SyncReason::as_str`]).
+    pub reason: &'static str,
+    /// Bytes this round shipped cluster-wide.
+    pub bytes: u64,
+    /// Virtual-clock time after the round, seconds.
+    pub virtual_s: f64,
 }
 
 /// Accumulates metrics over a run.
@@ -37,8 +68,12 @@ pub struct TrainRecorder {
     started: Instant,
     ema_loss: Option<f64>,
     ema_beta: f64,
+    /// Logged step curve (the Fig. 3 training-loss series).
     pub steps: Vec<StepPoint>,
+    /// Held-out evaluation curve (the Fig. 3 PPL series).
     pub evals: Vec<EvalPoint>,
+    /// Executed sync rounds: the realized-H trajectory + trigger reasons.
+    pub sync_events: Vec<SyncEvent>,
     samples_processed: u64,
     comm_bytes: u64,
     syncs: u64,
@@ -46,6 +81,9 @@ pub struct TrainRecorder {
     /// (e.g. "simulated(ps)", "qsgd(s=15)") — set by the trainer so bench
     /// tables can attribute bytes to the transport that produced them.
     transport: String,
+    /// Label of the sync policy that scheduled the rounds
+    /// (e.g. "fixed(H=4)", "drift(θ=1, H≤64)").
+    sync_policy: String,
 }
 
 impl TrainRecorder {
@@ -59,10 +97,12 @@ impl TrainRecorder {
             ema_beta: 0.98,
             steps: Vec::new(),
             evals: Vec::new(),
+            sync_events: Vec::new(),
             samples_processed: 0,
             comm_bytes: 0,
             syncs: 0,
             transport: String::new(),
+            sync_policy: String::new(),
         }
     }
 
@@ -74,6 +114,16 @@ impl TrainRecorder {
     /// The collective transport label ("" if never set).
     pub fn transport(&self) -> &str {
         &self.transport
+    }
+
+    /// Record which sync policy schedules this run's rounds.
+    pub fn set_sync_policy(&mut self, label: String) {
+        self.sync_policy = label;
+    }
+
+    /// The sync-policy label ("" if never set).
+    pub fn sync_policy(&self) -> &str {
+        &self.sync_policy
     }
 
     /// Epoch coordinate of a step.
@@ -106,6 +156,28 @@ impl TrainRecorder {
     pub fn sync(&mut self, bytes: u64) {
         self.syncs += 1;
         self.comm_bytes += bytes;
+    }
+
+    /// Record one executed synchronization *event* — the realized gap
+    /// (local steps since the previous round) and the policy's trigger
+    /// reason. Kept separate from [`TrainRecorder::sync`]: `sync` counts
+    /// accounting rounds (driven by the collective's `CommReport`), events
+    /// trace the scheduler's decisions.
+    pub fn sync_event(
+        &mut self,
+        step: u64,
+        gap: u64,
+        reason: &'static str,
+        bytes: u64,
+        virtual_s: f64,
+    ) {
+        self.sync_events.push(SyncEvent { step, gap, reason, bytes, virtual_s });
+    }
+
+    /// The realized local-update periods, in order — one gap per executed
+    /// round (all equal to H under the fixed policy).
+    pub fn realized_h(&self) -> Vec<u64> {
+        self.sync_events.iter().map(|e| e.gap).collect()
     }
 
     /// Record a held-out evaluation.
@@ -159,6 +231,24 @@ impl TrainRecorder {
                 format!("{:.6}", p.lr),
                 format!("{:.3}", p.virtual_s),
                 format!("{:.3}", p.wall_s),
+            ])?;
+        }
+        w.flush()
+    }
+
+    /// Write the sync-event log (the realized-H trajectory) as CSV.
+    pub fn write_sync_csv(&self, path: &str) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["step", "gap", "reason", "bytes", "virtual_s"],
+        )?;
+        for e in &self.sync_events {
+            w.row(&[
+                e.step.to_string(),
+                e.gap.to_string(),
+                e.reason.to_string(),
+                e.bytes.to_string(),
+                format!("{:.3}", e.virtual_s),
             ])?;
         }
         w.flush()
@@ -219,6 +309,37 @@ mod tests {
         assert_eq!(r.transport(), "");
         r.set_transport("qsgd(s=15)".into());
         assert_eq!(r.transport(), "qsgd(s=15)");
+        assert_eq!(r.sync_policy(), "");
+        r.set_sync_policy("fixed(H=4)".into());
+        assert_eq!(r.sync_policy(), "fixed(H=4)");
+    }
+
+    #[test]
+    fn sync_events_trace_realized_h() {
+        let mut r = TrainRecorder::new(10);
+        r.sync_event(4, 4, "period", 1024, 1.0);
+        r.sync_event(8, 4, "period", 1024, 2.0);
+        r.sync_event(11, 3, "drift", 1024, 3.0);
+        assert_eq!(r.realized_h(), vec![4, 4, 3]);
+        assert_eq!(r.sync_events.len(), 3);
+        assert_eq!(r.sync_events[2].reason, "drift");
+        // Events don't touch the traffic accounting.
+        assert_eq!(r.comm(), (0, 0));
+    }
+
+    #[test]
+    fn sync_csv_roundtrip() {
+        let dir = std::env::temp_dir().join("adaalter_sync_csv_test");
+        let p = dir.join("sync.csv");
+        let mut r = TrainRecorder::new(10);
+        r.sync_event(4, 4, "period", 2048, 1.5);
+        r.sync_event(12, 8, "h_max", 2048, 3.0);
+        r.write_sync_csv(p.to_str().unwrap()).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.lines().next().unwrap().contains("gap"));
+        assert!(s.contains("h_max") && s.contains("2048"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -16,6 +16,24 @@
 //! At a synchronization round both the parameters `y_{i,t}` and the
 //! accumulators `A²_{i,t}` are averaged (lines 11–12) — communication is
 //! `2/H` of fully-synchronous AdaGrad per step on average.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't get the xla rpath link flags on
+//! # // this image (libstdc++ from /opt/xla_extension), so compile-only.
+//! use adaalter::optim::LocalAdaAlterWorker;
+//!
+//! // d = 1, b₀ = 1, ε = 1: the first local step divides by √(b₀² + 1·ε²).
+//! let mut w = LocalAdaAlterWorker::new(vec![0.0], 1.0, 1.0);
+//! let update_sq = w.local_step(&[2.0], 0.5); // x ← 0 − 0.5·2/√2
+//! assert!((w.x()[0] + 1.0 / 2.0f32.sqrt()).abs() < 1e-6);
+//! assert!((update_sq - 0.5).abs() < 1e-6); // ‖Δx‖² = (1/√2)²
+//! assert_eq!(w.acc(), &[5.0]);             // b₀² + g² = 1 + 4
+//! assert_eq!(w.t_prime(), 1);
+//!
+//! // A sync round installs the cluster averages and resets t'.
+//! w.apply_sync(&[0.25], &[3.0]);
+//! assert_eq!((w.x(), w.b2_sync(), w.t_prime()), (&[0.25][..], &[3.0][..], 0));
+//! ```
 
 use crate::util::math;
 
@@ -55,7 +73,12 @@ impl LocalAdaAlterWorker {
     ///
     /// t' ← t'+1;
     /// `x ← x − η · g / sqrt(b2_sync + t'·ε²)`;  `acc ← acc + g∘g`.
-    pub fn local_step(&mut self, g: &[f32], lr: f32) {
+    ///
+    /// Returns `‖Δx‖²`, the squared L2 norm of the applied update — the
+    /// per-step drift proxy adaptive sync policies accumulate
+    /// (DESIGN.md §4). The update arithmetic is unchanged: the same
+    /// quotient is computed once and both applied and squared.
+    pub fn local_step(&mut self, g: &[f32], lr: f32) -> f64 {
         let d = self.x.len();
         assert_eq!(g.len(), d, "LocalAdaAlterWorker: g dim");
         self.t_prime += 1;
@@ -65,12 +88,16 @@ impl LocalAdaAlterWorker {
         let b2 = &self.b2_sync[..d];
         let acc = &mut self.acc[..d];
         let g = &g[..d];
+        let mut update_sq = 0.0f64;
         // Fused single pass over the three streams.
         for i in 0..d {
             let gi = g[i];
-            x[i] -= lr * gi / (b2[i] + add).sqrt();
+            let du = lr * gi / (b2[i] + add).sqrt();
+            x[i] -= du;
             acc[i] += gi * gi;
+            update_sq += du as f64 * du as f64;
         }
+        update_sq
     }
 
     /// Apply a synchronization result (Alg. 4 lines 11–12): install the
@@ -175,6 +202,18 @@ mod tests {
         // Next step uses b2_sync + 2*eps² = 3, not acc.
         w.local_step(&[1.0], 1.0);
         assert!((w.x()[0] + 1.0 / 3.0f32.sqrt()).abs() < 1e-6, "x={}", w.x()[0]);
+    }
+
+    #[test]
+    fn local_step_reports_update_norm() {
+        // d=2, b0=1, eps=1, lr=0.5, g=(2, -2): each coordinate moves by
+        // 0.5·2/√2 = 1/√2, so ‖Δx‖² = 2·(1/2) = 1.
+        let mut w = LocalAdaAlterWorker::new(vec![0.0, 0.0], 1.0, 1.0);
+        let upd = w.local_step(&[2.0, -2.0], 0.5);
+        assert!((upd - 1.0).abs() < 1e-6, "upd={upd}");
+        // lr = 0 moves nothing.
+        let upd = w.local_step(&[100.0, 100.0], 0.0);
+        assert_eq!(upd, 0.0);
     }
 
     #[test]

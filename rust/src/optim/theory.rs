@@ -31,8 +31,9 @@ pub struct BoundParams {
     pub n: usize,
     /// Learning rate η (must be ≤ 1/L for the theorems).
     pub eta: f64,
-    /// ε and b₀ (paper defaults: 1, 1).
+    /// ε — the placeholder constant (paper default: 1).
     pub epsilon: f64,
+    /// b₀ — the accumulator initialisation (paper default: 1).
     pub b0: f64,
 }
 

@@ -17,7 +17,9 @@ use crate::util::json::Json;
 /// Element type of an artifact tensor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float ("float32").
     F32,
+    /// 32-bit signed integer ("int32").
     I32,
 }
 
@@ -34,7 +36,9 @@ impl Dtype {
 /// Shape + dtype of one graph input/output.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: Dtype,
 }
 
@@ -59,8 +63,11 @@ impl TensorSpec {
 /// One lowered graph.
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
+    /// HLO-text file name, relative to the manifest directory.
     pub file: String,
+    /// Declared graph inputs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Declared graph outputs, in tuple order.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -80,24 +87,36 @@ impl ArtifactEntry {
 /// One named parameter tensor inside the flat vector.
 #[derive(Clone, Debug)]
 pub struct ParamEntry {
+    /// Parameter name (JAX pytree path).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Start offset inside the flat parameter vector.
     pub offset: usize,
+    /// Element count.
     pub size: usize,
 }
 
 /// A preset's full manifest subtree.
 #[derive(Clone, Debug)]
 pub struct PresetManifest {
+    /// Preset name ("tiny", "small", …).
     pub name: String,
     /// Flat model dimension.
     pub d: usize,
+    /// Training batch size per worker.
     pub batch: usize,
+    /// Evaluation batch size.
     pub eval_batch: usize,
+    /// Sequence length.
     pub seq: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// File holding the warm-start flat parameter vector.
     pub init_params_file: String,
+    /// Lowered graphs by logical name ("train_step", "eval_step", …).
     pub artifacts: BTreeMap<String, ArtifactEntry>,
+    /// Layout of the flat parameter vector.
     pub param_spec: Vec<ParamEntry>,
 }
 
@@ -148,7 +167,9 @@ impl PresetManifest {
 /// The whole manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Manifest schema version.
     pub version: usize,
+    /// Presets by name.
     pub presets: BTreeMap<String, PresetManifest>,
     /// Directory the manifest was loaded from (artifact files live here).
     pub dir: PathBuf,

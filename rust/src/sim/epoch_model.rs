@@ -2,7 +2,7 @@
 //! and Fig. 2 reproductions.
 //!
 //! For a calibrated cluster ([`super::calib::Calibration`]) and an
-//! algorithm, the per-iteration time decomposes (DESIGN.md §5) as
+//! algorithm, the per-iteration time decomposes (DESIGN.md §6) as
 //!
 //! ```text
 //!   t_iter = max(t_compute, t_dataload(n))  +  t_sync_visible(n, v) / H
@@ -68,6 +68,7 @@ impl IterCost {
 
 /// The analytic model.
 pub struct EpochModel {
+    /// The calibrated cluster constants the model evaluates.
     pub calib: Calibration,
     /// Samples processed per epoch (paper: 20,000 × 8 × 256).
     pub samples_per_epoch: u64,

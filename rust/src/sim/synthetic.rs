@@ -26,7 +26,9 @@ use crate::util::rng::Rng;
 /// Configuration of the synthetic problem.
 #[derive(Clone, Debug)]
 pub struct SyntheticProblem {
+    /// Problem dimension d.
     pub dim: usize,
+    /// Number of workers n (each gets its own local objective).
     pub workers: usize,
     /// Gradient noise σ.
     pub noise: f32,

@@ -11,11 +11,15 @@ use std::time::Instant;
 /// Result of one timed benchmark.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchStats {
+    /// Iterations per timed batch.
     pub iters_per_batch: u64,
+    /// Number of timed batches.
     pub batches: usize,
-    /// Nanoseconds per iteration.
+    /// Nanoseconds per iteration, median over batches.
     pub median_ns: f64,
+    /// Nanoseconds per iteration, mean over batches.
     pub mean_ns: f64,
+    /// Nanoseconds per iteration, fastest batch.
     pub min_ns: f64,
 }
 

@@ -1,0 +1,182 @@
+//! Integration: the synchronization-policy subsystem (DESIGN.md §4)
+//! through the full threaded trainer on the synthetic backend.
+//!
+//! * `policy = "fixed"` is pinned **bitwise** against the pre-policy
+//!   trainer: the virtual clock and the recorded bytes must equal the
+//!   closed-form accumulation the seed trainer produced (same charges in
+//!   the same order), and a drift policy configured to degenerate to the
+//!   fixed schedule must reproduce the fixed run's parameters exactly —
+//!   the policy layer only decides *when*, never *what*.
+//! * Every policy's recorded comm rounds equal the trainer's actual sync
+//!   count (the sync-event log), and adaptive runs stay deterministic.
+
+use std::sync::Arc;
+
+use adaalter::comm::NetModel;
+use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::{BackendFactory, SyncScheduler, Trainer};
+use adaalter::sim::{Calibration, Charge, SyntheticProblem};
+
+fn cfg(h: u64, workers: usize, steps: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.train.workers = workers;
+    c.train.steps = steps;
+    c.train.sync_period = SyncPeriod::Every(h);
+    c.train.backend = Backend::RustMath;
+    c.train.rust_math_dim = 64;
+    c.train.log_every = 1;
+    c.optim.algorithm = Algorithm::LocalAdaAlter;
+    c.optim.warmup_steps = 10;
+    c
+}
+
+fn factory(c: &ExperimentConfig) -> BackendFactory {
+    let p = SyntheticProblem::new(c.train.rust_math_dim, c.train.workers, c.train.seed);
+    Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>))
+}
+
+fn run(c: ExperimentConfig) -> adaalter::coordinator::RunResult {
+    let f = factory(&c);
+    Trainer::new(c, f).run().expect("training failed")
+}
+
+/// The acceptance pin: with `[sync] policy = "fixed"` (the default), the
+/// virtual clock and the recorded bytes are bitwise-identical to the
+/// pre-policy trainer — reproduced here as the exact closed-form charge
+/// sequence (same f64 additions in the same order the leader loop makes
+/// them: per sync round a communication charge, then per iteration a
+/// compute charge).
+#[test]
+fn fixed_policy_pins_pre_policy_clock_and_bytes() {
+    let (h, n, steps) = (4u64, 4usize, 40u64);
+    let c = cfg(h, n, steps);
+    assert!(c.sync.is_fixed(), "default policy must be fixed");
+    let calib = Calibration::paper_v100();
+    let net = NetModel::from_config(&c.net);
+    let d_bytes = 4 * c.train.rust_math_dim as u64;
+
+    let r = run(c);
+
+    // Replicate the leader loop's charge sequence exactly.
+    let per_round =
+        (1.0 - calib.periodic_overlap) * net.sync_time(n, calib.vector_bytes(), 2);
+    let mut compute = calib.t_compute_s;
+    compute *= 1.0 + calib.adaalter_compute_overhead; // local AdaAlter
+    let extra = (calib.dataload_s(n) - compute).max(0.0);
+    let (mut now, mut comm_total, mut compute_total) = (0.0f64, 0.0f64, 0.0f64);
+    for t in 1..=steps {
+        if t % h == 0 {
+            now += per_round;
+            comm_total += per_round;
+        }
+        now += compute;
+        compute_total += compute;
+        if extra > 0.0 {
+            now += extra;
+        }
+    }
+    assert_eq!(extra, 0.0, "4 workers must not be dataloader-bound");
+    assert_eq!(r.clock.now_s().to_bits(), now.to_bits(), "virtual clock drifted");
+    assert_eq!(
+        r.clock.total(Charge::Communication).to_bits(),
+        comm_total.to_bits()
+    );
+    assert_eq!(r.clock.total(Charge::Compute).to_bits(), compute_total.to_bits());
+
+    // Bytes: exactly syncs × one 2-vector round — the scheduler's 2/H.
+    let sched = SyncScheduler::new(SyncPeriod::Every(h));
+    let (rounds, bytes) = r.recorder.comm();
+    assert_eq!(rounds, sched.syncs_up_to(steps));
+    assert_eq!(bytes, sched.syncs_up_to(steps) * net.sync_traffic_bytes(n, d_bytes, 2));
+}
+
+/// A drift policy that can never trigger (θ = ∞-ish) with `h_max = H`
+/// produces the *same schedule* as the fixed policy — and therefore the
+/// bitwise-identical model. The policy layer decides when, never what.
+#[test]
+fn degenerate_drift_schedule_matches_fixed_bitwise() {
+    let fixed = run(cfg(4, 4, 48));
+    let mut c = cfg(4, 4, 48);
+    c.sync.policy = "drift".into();
+    c.sync.drift_threshold = 1e30;
+    c.sync.h_max = 4;
+    let drift = run(c);
+
+    assert_eq!(fixed.final_x, drift.final_x, "schedules agree but models diverged");
+    assert_eq!(
+        fixed.final_eval.unwrap().loss.to_bits(),
+        drift.final_eval.unwrap().loss.to_bits()
+    );
+    assert_eq!(fixed.recorder.comm(), drift.recorder.comm());
+    // Same gaps, different bookkeeping of why.
+    assert_eq!(fixed.recorder.realized_h(), drift.recorder.realized_h());
+    assert!(fixed.recorder.sync_events.iter().all(|e| e.reason == "period"));
+    assert!(drift.recorder.sync_events.iter().all(|e| e.reason == "h_max"));
+}
+
+/// Every policy's recorded comm rounds equal the trainer's actual sync
+/// count (one event per executed round), and the event gaps sum to at
+/// most the step budget.
+#[test]
+fn rounds_equal_sync_events_for_every_policy() {
+    let setups: Vec<(&str, ExperimentConfig)> = vec![
+        ("fixed", cfg(4, 4, 60)),
+        ("growing", {
+            let mut c = cfg(4, 4, 60);
+            c.sync.policy = "growing".into();
+            c.sync.h_max = 16;
+            c
+        }),
+        ("drift", {
+            let mut c = cfg(4, 4, 60);
+            c.sync.policy = "drift".into();
+            c.sync.drift_threshold = 0.25;
+            c.sync.h_max = 8;
+            c
+        }),
+        ("time_budget", {
+            let mut c = cfg(4, 4, 60);
+            c.sync.policy = "time_budget".into();
+            c.sync.target_comm_fraction = 0.02;
+            c
+        }),
+    ];
+    for (name, c) in setups {
+        let h_max = c.sync.h_max;
+        let adaptive = !c.sync.is_fixed();
+        let r = run(c);
+        let (rounds, bytes) = r.recorder.comm();
+        assert_eq!(
+            r.recorder.sync_events.len() as u64,
+            rounds,
+            "{name}: events != recorded rounds"
+        );
+        assert!(rounds > 0, "{name}: no rounds at all");
+        assert!(bytes > 0, "{name}");
+        let gaps = r.recorder.realized_h();
+        assert!(gaps.iter().sum::<u64>() <= 60, "{name}: gaps overrun the budget");
+        assert!(gaps.iter().all(|&g| g >= 1), "{name}");
+        if adaptive {
+            assert!(gaps.iter().all(|&g| g <= h_max), "{name}: h_max violated: {gaps:?}");
+        }
+        assert!(r.final_x.iter().all(|v| v.is_finite()), "{name}");
+    }
+}
+
+/// Adaptive scheduling must not break run-to-run determinism: the
+/// decisions are pure functions of deterministic observations.
+#[test]
+fn adaptive_runs_are_deterministic() {
+    let make = || {
+        let mut c = cfg(4, 4, 80);
+        c.sync.policy = "drift".into();
+        c.sync.drift_threshold = 0.5;
+        c.sync.h_max = 12;
+        c
+    };
+    let a = run(make());
+    let b = run(make());
+    assert_eq!(a.final_x, b.final_x);
+    assert_eq!(a.recorder.realized_h(), b.recorder.realized_h());
+    assert_eq!(a.recorder.comm(), b.recorder.comm());
+}
