@@ -22,9 +22,13 @@
 //!   [`TopKSparsifier`] and reports *exact* wire bytes, plus the α–β time
 //!   of those bytes. This is the §1 quantization/sparsification baseline
 //!   family, runnable through the full trainer.
+//! * [`PartialCollective`] — a decorator adding partial-participation
+//!   semantics (quorum / backup-worker rounds under a `[faults]` scenario,
+//!   DESIGN.md §5) to any of the above.
 //!
-//! Selection is pure configuration: `[comm]` in the experiment TOML
-//! ([`crate::config::CommConfig`]) → [`build_collective`].
+//! Selection is pure configuration: `[comm]` + `[faults]` in the
+//! experiment TOML ([`crate::config::CommConfig`],
+//! [`crate::config::FaultsConfig`]) → [`build_collective`].
 
 use crate::comm::compress::{QsgdQuantizer, TopKSparsifier};
 use crate::comm::netmodel::{NetModel, Topology};
@@ -133,6 +137,229 @@ pub trait Collective: Send {
         avg_x: &mut [f32],
         avg_acc: Option<&mut [f32]>,
     ) -> Result<CommReport>;
+
+    /// The sync round with per-worker barrier arrival times and (possibly)
+    /// partial participation (DESIGN.md §5). `arrivals[i]` is worker `i`'s
+    /// virtual arrival at the barrier, measured from the phase start. The
+    /// default implementation is the full barrier: every offered worker
+    /// participates and the round closes when the slowest arrives —
+    /// [`PartialCollective`] overrides this with quorum / backup-worker
+    /// selection.
+    fn sync_round_partial(
+        &mut self,
+        xs: &[&[f32]],
+        accs: Option<&[&[f32]]>,
+        arrivals: &[f64],
+        avg_x: &mut [f32],
+        avg_acc: Option<&mut [f32]>,
+    ) -> Result<PartialRound> {
+        if arrivals.len() != xs.len() {
+            return Err(Error::Protocol(format!(
+                "sync_round_partial: {} arrivals for {} workers",
+                arrivals.len(),
+                xs.len()
+            )));
+        }
+        let report = self.sync_round(xs, accs, avg_x, avg_acc)?;
+        let close_s = arrivals.iter().fold(0.0f64, |a, &b| a.max(b));
+        Ok(PartialRound {
+            participants: (0..xs.len()).collect(),
+            dropped: Vec::new(),
+            close_s,
+            report,
+        })
+    }
+}
+
+/// Outcome of one (possibly partial) synchronization round
+/// ([`Collective::sync_round_partial`]; DESIGN.md §5).
+#[derive(Clone, Debug)]
+pub struct PartialRound {
+    /// Indices (into the offered `xs`) whose states made the average,
+    /// ascending — so the averaging order is deterministic.
+    pub participants: Vec<usize>,
+    /// Indices dropped as stragglers (they still receive the installed
+    /// average — catch-up — but contribute nothing to it).
+    pub dropped: Vec<usize>,
+    /// Virtual time at which the barrier closed, on the same axis as the
+    /// offered arrival times.
+    pub close_s: f64,
+    /// Cost/observation report of the executed averaging round.
+    pub report: CommReport,
+}
+
+/// Participation policy for partial sync rounds (the `[faults]` config
+/// section's `quorum` / `timeout_s` / `drop_slowest` keys; DESIGN.md §5).
+#[derive(Clone, Copy, Debug)]
+pub struct Participation {
+    /// Minimum arrivals that close a round (0 behaves as "all offered").
+    pub quorum: usize,
+    /// Extra virtual wait after the quorum arrives before dropping the rest.
+    pub timeout_s: f64,
+    /// Backup-worker policy: always drop the k slowest arrivals (0 = off).
+    pub drop_slowest: usize,
+}
+
+impl Participation {
+    /// The policy the `[faults]` section selects, if any.
+    pub fn from_config(f: &crate::config::FaultsConfig) -> Option<Participation> {
+        if f.partial() {
+            Some(Participation {
+                quorum: f.quorum,
+                timeout_s: f.timeout_s,
+                drop_slowest: f.drop_slowest,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Human-readable policy label (transport labels, bench tables).
+    pub fn label(&self) -> String {
+        if self.drop_slowest > 0 {
+            format!("drop{}", self.drop_slowest)
+        } else {
+            format!("q{}+{}s", self.quorum, self.timeout_s)
+        }
+    }
+
+    /// Select the round's participants from per-worker arrival times.
+    /// Deterministic: ties break by worker index. Returns
+    /// `(participants, dropped, close_s)`, both index lists ascending.
+    ///
+    /// * **Backup-worker** (`drop_slowest` > 0): the k slowest arrivals are
+    ///   always dropped (at least one worker is kept); the barrier closes
+    ///   when the slowest *kept* worker arrives.
+    /// * **Quorum**: with `t_q` the quorum-th fastest arrival, every worker
+    ///   arriving by `t_q + timeout_s` participates; the barrier closes at
+    ///   the last participant arrival, or at the full `t_q + timeout_s`
+    ///   when someone was dropped (the leader waited the timeout out).
+    pub fn select(&self, arrivals: &[f64]) -> Result<(Vec<usize>, Vec<usize>, f64)> {
+        let m = arrivals.len();
+        if m == 0 {
+            return Err(Error::Protocol("partial round with no live workers".into()));
+        }
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            arrivals[a]
+                .partial_cmp(&arrivals[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        if self.drop_slowest > 0 {
+            let keep = m.saturating_sub(self.drop_slowest).max(1);
+            let mut participants = order[..keep].to_vec();
+            let mut dropped = order[keep..].to_vec();
+            let close_s = participants.iter().map(|&i| arrivals[i]).fold(0.0, f64::max);
+            participants.sort_unstable();
+            dropped.sort_unstable();
+            return Ok((participants, dropped, close_s));
+        }
+        // quorum = 0 is the documented full barrier: everyone is required.
+        let q = if self.quorum == 0 { m } else { self.quorum };
+        if q > m {
+            return Err(Error::Protocol(format!(
+                "faults.quorum ({q}) unreachable: only {m} workers alive"
+            )));
+        }
+        let t_q = arrivals[order[q - 1]];
+        let cutoff = t_q + self.timeout_s;
+        let participants: Vec<usize> = (0..m).filter(|&i| arrivals[i] <= cutoff).collect();
+        let dropped: Vec<usize> = (0..m).filter(|&i| arrivals[i] > cutoff).collect();
+        let close_s = if dropped.is_empty() {
+            participants.iter().map(|&i| arrivals[i]).fold(0.0, f64::max)
+        } else {
+            cutoff
+        };
+        Ok((participants, dropped, close_s))
+    }
+}
+
+/// Decorator adding partial-participation semantics to any [`Collective`]:
+/// [`Collective::sync_round_partial`] selects the round's participants per
+/// the configured [`Participation`] policy, averages *only their* states
+/// through the inner collective (so the round cost is billed at the
+/// participant count), and reports who was dropped. Every other op — and
+/// `sync_round` itself, the full-barrier entry — forwards unchanged.
+pub struct PartialCollective {
+    inner: Box<dyn Collective>,
+    policy: Participation,
+}
+
+impl PartialCollective {
+    /// Wrap `inner` with the participation policy.
+    pub fn new(inner: Box<dyn Collective>, policy: Participation) -> Self {
+        PartialCollective { inner, policy }
+    }
+
+    /// The configured participation policy.
+    pub fn policy(&self) -> Participation {
+        self.policy
+    }
+}
+
+impl Collective for PartialCollective {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn label(&self) -> String {
+        format!("partial({}, {})", self.policy.label(), self.inner.label())
+    }
+
+    fn broadcast(&mut self, x: &[f32]) -> Result<CommReport> {
+        self.inner.broadcast(x)
+    }
+
+    fn gather_grads(&mut self, grads: &mut [Vec<f32>]) -> Result<CommReport> {
+        self.inner.gather_grads(grads)
+    }
+
+    fn allreduce_mean(&mut self, inputs: &[&[f32]], out: &mut [f32]) -> Result<CommReport> {
+        self.inner.allreduce_mean(inputs, out)
+    }
+
+    fn sync_round(
+        &mut self,
+        xs: &[&[f32]],
+        accs: Option<&[&[f32]]>,
+        avg_x: &mut [f32],
+        avg_acc: Option<&mut [f32]>,
+    ) -> Result<CommReport> {
+        self.inner.sync_round(xs, accs, avg_x, avg_acc)
+    }
+
+    fn sync_round_partial(
+        &mut self,
+        xs: &[&[f32]],
+        accs: Option<&[&[f32]]>,
+        arrivals: &[f64],
+        avg_x: &mut [f32],
+        avg_acc: Option<&mut [f32]>,
+    ) -> Result<PartialRound> {
+        if arrivals.len() != xs.len() {
+            return Err(Error::Protocol(format!(
+                "sync_round_partial: {} arrivals for {} workers",
+                arrivals.len(),
+                xs.len()
+            )));
+        }
+        if let Some(accs) = accs {
+            if accs.len() != xs.len() {
+                return Err(Error::Protocol(format!(
+                    "sync_round_partial: {} accumulators for {} workers",
+                    accs.len(),
+                    xs.len()
+                )));
+            }
+        }
+        let (participants, dropped, close_s) = self.policy.select(arrivals)?;
+        let xs_p: Vec<&[f32]> = participants.iter().map(|&i| xs[i]).collect();
+        let accs_p: Option<Vec<&[f32]>> =
+            accs.map(|a| participants.iter().map(|&i| a[i]).collect());
+        let report = self.inner.sync_round(&xs_p, accs_p.as_deref(), avg_x, avg_acc)?;
+        Ok(PartialRound { participants, dropped, close_s, report })
+    }
 }
 
 fn check_acc_pairing(accs_some: bool, avg_some: bool) -> Result<()> {
@@ -266,13 +493,14 @@ impl SimulatedCollective {
         SimulatedCollective { inner, cost }
     }
 
-    /// One sync round of `vectors` model-sized vectors; `periodic` selects
-    /// the bulk-sync overlap discount (local algorithms) vs the
-    /// per-iteration gradient-sync discount. The straggler observation is
-    /// the raw (non-discounted) incast spread at the modeled payload —
-    /// overlap hides time from the critical path, not the worker skew.
-    fn charge(&self, vectors: u64, periodic: bool) -> CommReport {
-        let n = self.inner.n();
+    /// One sync round of `vectors` model-sized vectors among `n` round
+    /// participants (== the cluster size except under partial-participation
+    /// rounds or after crashes); `periodic` selects the bulk-sync overlap
+    /// discount (local algorithms) vs the per-iteration gradient-sync
+    /// discount. The straggler observation is the raw (non-discounted)
+    /// incast spread at the modeled payload — overlap hides time from the
+    /// critical path, not the worker skew.
+    fn charge(&self, n: usize, vectors: u64, periodic: bool) -> CommReport {
         let gamma = if periodic { self.cost.periodic_overlap } else { self.cost.overlap };
         let time_s = (1.0 - gamma) * self.cost.net.sync_time(n, self.cost.model_bytes, vectors);
         let real_bytes = 4 * self.inner.d() as u64;
@@ -299,13 +527,14 @@ impl Collective for SimulatedCollective {
     }
 
     fn gather_grads(&mut self, grads: &mut [Vec<f32>]) -> Result<CommReport> {
+        let n = grads.len();
         self.inner.gather_grads(grads)?;
-        Ok(self.charge(1, false))
+        Ok(self.charge(n, 1, false))
     }
 
     fn allreduce_mean(&mut self, inputs: &[&[f32]], out: &mut [f32]) -> Result<CommReport> {
         let inner = self.inner.allreduce_mean(inputs, out)?;
-        let mut rep = self.charge(1, true);
+        let mut rep = self.charge(inputs.len(), 1, true);
         rep.drift_sq = inner.drift_sq;
         Ok(rep)
     }
@@ -319,7 +548,7 @@ impl Collective for SimulatedCollective {
     ) -> Result<CommReport> {
         let vectors = 1 + accs.is_some() as u64;
         let inner = self.inner.sync_round(xs, accs, avg_x, avg_acc)?;
-        let mut rep = self.charge(vectors, true);
+        let mut rep = self.charge(xs.len(), vectors, true);
         rep.drift_sq = inner.drift_sq;
         Ok(rep)
     }
@@ -617,26 +846,32 @@ pub fn build_collective(
     cfg.comm.validate()?;
     let n = cfg.train.workers;
     let base = ChannelCollective::new(n, d);
-    match cfg.comm.compression.as_str() {
+    let coll: Box<dyn Collective> = match cfg.comm.compression.as_str() {
         "none" => match cfg.comm.transport.as_str() {
-            "channel" => Ok(Box::new(base)),
-            _ => Ok(Box::new(SimulatedCollective::new(
+            "channel" => Box::new(base),
+            _ => Box::new(SimulatedCollective::new(
                 base,
                 SimCost::from_config(cfg, calib),
-            ))),
+            )),
         },
-        "qsgd" => Ok(Box::new(CompressedCollective::qsgd(
+        "qsgd" => Box::new(CompressedCollective::qsgd(
             base,
             NetModel::from_config(&cfg.net),
             cfg.comm.qsgd_levels,
             cfg.train.seed,
-        ))),
-        "topk" => Ok(Box::new(CompressedCollective::topk(
+        )),
+        "topk" => Box::new(CompressedCollective::topk(
             base,
             NetModel::from_config(&cfg.net),
             cfg.comm.topk_keep,
-        ))),
+        )),
         other => unreachable!("CommConfig::validate rejects compression {other:?}"),
+    };
+    // A `[faults]` participation policy decorates whatever transport was
+    // selected — quorum rounds are a config choice, not a rewrite.
+    match Participation::from_config(&cfg.faults) {
+        Some(policy) => Ok(Box::new(PartialCollective::new(coll, policy))),
+        None => Ok(coll),
     }
 }
 
@@ -828,6 +1063,125 @@ mod tests {
         let rep = c.gather_grads(&mut grads).unwrap();
         assert_eq!(rep.bytes, 0);
         assert_eq!(grads[0], vec![1.0f32; 8]);
+    }
+
+    #[test]
+    fn default_sync_round_partial_is_the_full_barrier() {
+        let mut c = ChannelCollective::new(3, 2);
+        let xs = vec![vec![0.0f32, 3.0], vec![3.0, 0.0], vec![3.0, 3.0]];
+        let mut avg = vec![0.0f32; 2];
+        let out = c
+            .sync_round_partial(&refs(&xs), None, &[0.5, 0.25, 2.0], &mut avg, None)
+            .unwrap();
+        assert_eq!(out.participants, vec![0, 1, 2]);
+        assert!(out.dropped.is_empty());
+        assert_eq!(out.close_s, 2.0);
+        assert_eq!(avg, vec![2.0, 2.0]);
+        // Ragged arrivals are a protocol error.
+        assert!(c.sync_round_partial(&refs(&xs), None, &[0.1], &mut avg, None).is_err());
+    }
+
+    #[test]
+    fn participation_quorum_selection_and_close_time() {
+        let p = Participation { quorum: 2, timeout_s: 0.0, drop_slowest: 0 };
+        // Worker 2 is 4× slow: quorum of 2 closes without it.
+        let (parts, dropped, close) = p.select(&[1.0, 1.0, 4.0]).unwrap();
+        assert_eq!(parts, vec![0, 1]);
+        assert_eq!(dropped, vec![2]);
+        assert_eq!(close, 1.0); // t_q + timeout (someone was dropped)
+        // A timeout large enough lets the straggler participate; the round
+        // then closes at its (max) arrival, not at the full timeout.
+        let p = Participation { quorum: 2, timeout_s: 5.0, drop_slowest: 0 };
+        let (parts, dropped, close) = p.select(&[1.0, 1.0, 4.0]).unwrap();
+        assert_eq!(parts, vec![0, 1, 2]);
+        assert!(dropped.is_empty());
+        assert_eq!(close, 4.0);
+        // Equal arrivals: ties are inclusive — nobody is dropped.
+        let p = Participation { quorum: 1, timeout_s: 0.0, drop_slowest: 0 };
+        let (parts, dropped, close) = p.select(&[1.5, 1.5, 1.5]).unwrap();
+        assert_eq!(parts, vec![0, 1, 2]);
+        assert!(dropped.is_empty());
+        assert_eq!(close, 1.5);
+        // quorum = 0 is the documented full barrier: everyone participates
+        // and the round closes at the slowest arrival.
+        let p = Participation { quorum: 0, timeout_s: 0.0, drop_slowest: 0 };
+        let (parts, dropped, close) = p.select(&[2.0, 1.0, 3.0]).unwrap();
+        assert_eq!(parts, vec![0, 1, 2]);
+        assert!(dropped.is_empty());
+        assert_eq!(close, 3.0);
+        // Quorum unreachable ⇒ a clean protocol error.
+        let p = Participation { quorum: 4, timeout_s: 0.0, drop_slowest: 0 };
+        let err = p.select(&[1.0, 1.0]).unwrap_err();
+        assert!(err.to_string().contains("unreachable"), "{err}");
+    }
+
+    #[test]
+    fn participation_backup_worker_drops_the_slowest_k() {
+        let p = Participation { quorum: 0, timeout_s: 0.0, drop_slowest: 1 };
+        let (parts, dropped, close) = p.select(&[2.0, 1.0, 3.0, 1.5]).unwrap();
+        assert_eq!(parts, vec![0, 1, 3]);
+        assert_eq!(dropped, vec![2]);
+        assert_eq!(close, 2.0);
+        // Equal arrivals: deterministic tie-break by index (highest dropped).
+        let (parts, dropped, _) = p.select(&[1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(parts, vec![0, 1]);
+        assert_eq!(dropped, vec![2]);
+        // Never drops everyone.
+        let p = Participation { quorum: 0, timeout_s: 0.0, drop_slowest: 9 };
+        let (parts, dropped, _) = p.select(&[5.0, 1.0]).unwrap();
+        assert_eq!(parts, vec![1]);
+        assert_eq!(dropped, vec![0]);
+    }
+
+    #[test]
+    fn partial_collective_averages_exactly_the_survivors() {
+        // The quorum average must conserve the survivors' mean exactly —
+        // bitwise the same arithmetic as a full round over just them.
+        let (n, d) = (4usize, 16usize);
+        let policy = Participation { quorum: 3, timeout_s: 0.0, drop_slowest: 0 };
+        let mut pc =
+            PartialCollective::new(Box::new(ChannelCollective::new(n, d)), policy);
+        assert_eq!(pc.n(), n);
+        assert!(pc.label().starts_with("partial(q3"));
+        let xs: Vec<Vec<f32>> =
+            (0..n).map(|w| (0..d).map(|i| (w * d + i) as f32 * 0.1).collect()).collect();
+        let accs: Vec<Vec<f32>> = (0..n).map(|w| vec![1.0 + w as f32; d]).collect();
+        let arrivals = [1.0, 1.0, 1.0, 9.0]; // worker 3 straggles
+        let mut avg_x = vec![0.0f32; d];
+        let mut avg_acc = vec![0.0f32; d];
+        let out = pc
+            .sync_round_partial(
+                &refs(&xs),
+                Some(&refs(&accs)),
+                &arrivals,
+                &mut avg_x,
+                Some(&mut avg_acc),
+            )
+            .unwrap();
+        assert_eq!(out.participants, vec![0, 1, 2]);
+        assert_eq!(out.dropped, vec![3]);
+        assert_eq!(out.close_s, 1.0);
+        let survivors = refs(&xs[..3]);
+        let mut want = vec![0.0f32; d];
+        math::mean_into(&survivors, &mut want);
+        assert_eq!(avg_x, want, "survivor mean not conserved bitwise");
+        let acc_survivors = refs(&accs[..3]);
+        math::mean_into(&acc_survivors, &mut want);
+        assert_eq!(avg_acc, want);
+    }
+
+    #[test]
+    fn build_collective_wraps_partial_from_faults_config() {
+        let calib = Calibration::paper_v100();
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.fused = false;
+        cfg.faults.quorum = 7;
+        let c = build_collective(&cfg, &calib, 16).unwrap();
+        assert!(c.label().starts_with("partial(q7"), "{}", c.label());
+        cfg.faults.quorum = 0;
+        cfg.faults.drop_slowest = 1;
+        let c = build_collective(&cfg, &calib, 16).unwrap();
+        assert_eq!(c.label(), "partial(drop1, simulated(ps))");
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod transport;
 
 pub use collective::{
     build_collective, ChannelCollective, Collective, CommReport, CompressedCollective,
-    SimCost, SimulatedCollective,
+    Participation, PartialCollective, PartialRound, SimCost, SimulatedCollective,
 };
 pub use compress::{QsgdQuantizer, SparseGrad, TopKSparsifier};
 pub use netmodel::{NetModel, Topology};

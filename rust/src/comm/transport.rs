@@ -43,6 +43,15 @@ impl<C, R> ChannelTransport<C, R> {
         Ok(())
     }
 
+    /// Send `make(w)` to each worker in `targets` — the fault-aware subset
+    /// broadcast (crashed workers are simply never addressed; DESIGN.md §5).
+    pub fn broadcast_to(&self, targets: &[usize], make: impl Fn(usize) -> C) -> Result<()> {
+        for &w in targets {
+            self.send_to(w, make(w))?;
+        }
+        Ok(())
+    }
+
     /// Send one command to a single worker.
     pub fn send_to(&self, w: usize, cmd: C) -> Result<()> {
         self.txs
@@ -72,6 +81,39 @@ impl<C, R> ChannelTransport<C, R> {
                 .get_mut(w)
                 .ok_or_else(|| Error::Protocol(format!("reply from unknown worker {w}")))?;
             if slot.replace(v).is_some() {
+                return Err(Error::Protocol(format!("duplicate reply from worker {w}")));
+            }
+            got += 1;
+        }
+        Ok(out.into_iter().map(|v| v.unwrap()).collect())
+    }
+
+    /// Gather exactly one reply from each worker in `targets`, returned in
+    /// target order. Replies from workers outside the set, duplicates, and
+    /// unknown worker ids are protocol violations — the subset analogue of
+    /// [`ChannelTransport::gather`] for partial-participation rounds.
+    pub fn gather_from<T>(
+        &self,
+        targets: &[usize],
+        mut sel: impl FnMut(R) -> Result<(usize, T)>,
+    ) -> Result<Vec<T>> {
+        let mut slot_of: Vec<Option<usize>> = vec![None; self.n()];
+        for (i, &w) in targets.iter().enumerate() {
+            let slot = slot_of
+                .get_mut(w)
+                .ok_or_else(|| Error::Protocol(format!("no worker {w}")))?;
+            if slot.replace(i).is_some() {
+                return Err(Error::Protocol(format!("duplicate gather target {w}")));
+            }
+        }
+        let mut out: Vec<Option<T>> = (0..targets.len()).map(|_| None).collect();
+        let mut got = 0;
+        while got < targets.len() {
+            let (w, v) = sel(self.recv()?)?;
+            let slot = slot_of.get(w).copied().flatten().ok_or_else(|| {
+                Error::Protocol(format!("unexpected reply from worker {w}"))
+            })?;
+            if out[slot].replace(v).is_some() {
                 return Err(Error::Protocol(format!("duplicate reply from worker {w}")));
             }
             got += 1;
@@ -149,6 +191,33 @@ mod tests {
         let t = ChannelTransport::from_parts(vec![tx0, tx1], reply_rx, Vec::new());
         let err = t.gather(|(w, v)| Ok((w, v))).unwrap_err();
         assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn subset_broadcast_and_gather_skip_unaddressed_workers() {
+        let mut t = echo_transport(4);
+        // Address only workers 0 and 2; 1 and 3 never see a command and
+        // therefore never reply — the gather must not wait on them.
+        t.broadcast_to(&[0, 2], |w| Some(w as u64 + 10)).unwrap();
+        let replies = t.gather_from(&[0, 2], |(w, v)| Ok((w, v))).unwrap();
+        assert_eq!(replies, vec![20, 24]);
+        // Unknown target ids are rejected up front.
+        assert!(t.broadcast_to(&[7], |_| Some(0)).is_err());
+        assert!(t.gather_from(&[7], |(w, v): (usize, u64)| Ok((w, v))).is_err());
+        t.shutdown(|_| None);
+    }
+
+    #[test]
+    fn gather_from_rejects_replies_outside_the_target_set() {
+        // Reply queue carries worker 1's answer while only worker 0 is
+        // targeted — a protocol violation, not a hang.
+        let (tx0, _rx0) = channel::<Option<u64>>();
+        let (tx1, _rx1) = channel::<Option<u64>>();
+        let (reply_tx, reply_rx) = channel();
+        reply_tx.send((1usize, 5u64)).unwrap();
+        let t = ChannelTransport::from_parts(vec![tx0, tx1], reply_rx, Vec::new());
+        let err = t.gather_from(&[0], |(w, v)| Ok((w, v))).unwrap_err();
+        assert!(err.to_string().contains("unexpected"), "{err}");
     }
 
     #[test]

@@ -45,6 +45,30 @@
 //! The `adaptive-drift` and `time-budget` presets below are the canonical
 //! examples; `benches/adaptive_sync.rs` sweeps fixed vs. adaptive
 //! policies over the fig-3 convergence setup.
+//!
+//! # The `[faults]` section
+//!
+//! Every preset (and config file) may also run a deterministic fault
+//! scenario with partial-participation sync rounds (DESIGN.md §5):
+//!
+//! ```toml
+//! [train]
+//! fused = false        # required by quorum / drop_slowest rounds
+//! [faults]
+//! slow_workers = 1     # the 1 highest worker id runs 4× slower…
+//! slow_factor = 4.0
+//! stall_prob = 0.0     # per-(worker, step) transient-stall probability
+//! stall_s = 0.05       # virtual seconds per stall
+//! crash_worker = -1    # worker id to kill permanently (-1 = none)
+//! crash_step = 0       # 1-based iteration it dies at
+//! quorum = 7           # close each sync round with 7 of 8 workers…
+//! timeout_s = 0.0      # …waiting this long past the quorum before dropping
+//! drop_slowest = 0     # or: always drop the k slowest (backup workers)
+//! ```
+//!
+//! The `straggler-quorum` preset below is the canonical example;
+//! `benches/straggler_recovery.rs` sweeps full-barrier vs. quorum vs.
+//! backup-worker sync under one slow worker of eight.
 
 use crate::error::{Error, Result};
 
@@ -213,6 +237,25 @@ h_max = 64
 "#,
     },
     Preset {
+        name: "straggler-quorum",
+        summary: "1 of 8 workers 4× slow; quorum-7 sync rounds drop it instead of waiting",
+        toml: r#"
+[train]
+workers = 8
+sync_period = 4
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+fused = false
+[optim]
+algorithm = "local_adaalter"
+[faults]
+slow_workers = 1
+slow_factor = 4.0
+quorum = 7
+"#,
+    },
+    Preset {
         name: "noniid-stress",
         summary: "Fully non-IID shards (D_i disjoint), local AdaAlter H=8",
         toml: r#"
@@ -299,6 +342,20 @@ mod tests {
         // All other presets keep the bitwise-identical fixed schedule.
         let d = load_preset("paper-default").unwrap();
         assert!(d.sync.is_fixed());
+    }
+
+    #[test]
+    fn faults_preset_selects_quorum_scenario() {
+        let c = load_preset("straggler-quorum").unwrap();
+        assert_eq!(c.faults.slow_workers, 1);
+        assert_eq!(c.faults.slow_factor, 4.0);
+        assert_eq!(c.faults.quorum, 7);
+        assert!(!c.train.fused);
+        assert!(c.faults.is_active() && c.faults.partial());
+        // Every other preset keeps the fault-free (bitwise-seed) trainer.
+        for p in PRESETS.iter().filter(|p| p.name != "straggler-quorum") {
+            assert!(!load_preset(p.name).unwrap().faults.is_active(), "{}", p.name);
+        }
     }
 
     #[test]

@@ -199,6 +199,11 @@ pub struct TrainConfig {
     pub checkpoint_every: u64,
     /// Checkpoint file path ("" = `<out_dir>/checkpoint.bin`).
     pub checkpoint_path: String,
+    /// Use the backend's fused local-step device path when available
+    /// (the trainer may still disable it at runtime for sync policies
+    /// that need per-step observations). Partial-participation rounds
+    /// (`faults.quorum` / `faults.drop_slowest`) require `false`.
+    pub fused: bool,
 }
 
 impl Default for TrainConfig {
@@ -216,11 +221,12 @@ impl Default for TrainConfig {
             rust_math_dim: 4096,
             checkpoint_every: 0,
             checkpoint_path: String::new(),
+            fused: true,
         }
     }
 }
 
-/// Data-pipeline parameters (synthetic corpus; DESIGN.md §7).
+/// Data-pipeline parameters (synthetic corpus; DESIGN.md §8).
 #[derive(Clone, Debug)]
 pub struct DataConfig {
     /// Zipf exponent of the unigram distribution.
@@ -450,6 +456,139 @@ impl SyncConfig {
     }
 }
 
+/// Deterministic fault/straggler scenario + partial-participation policy
+/// (DESIGN.md §5). With the section absent (all defaults) every fault
+/// code path is disabled and the trainer is bitwise-identical to the
+/// fault-free leader loop.
+///
+/// Scenario (compiled into a seeded [`crate::sim::FaultPlan`]):
+///
+/// * `slow_workers` / `slow_factor` — the N *highest* worker ids run
+///   their compute `slow_factor`× slower, permanently.
+/// * `stall_prob` / `stall_s` — per `(worker, step)`, with probability
+///   `stall_prob`, a transient stall of `stall_s` virtual seconds
+///   (seeded by `train.seed`, keyed like the gradient streams).
+/// * `crash_worker` / `crash_step` — worker `crash_worker` (−1 = none)
+///   dies permanently at iteration `crash_step`.
+///
+/// Participation policy for synchronization rounds (local algorithms):
+///
+/// * `quorum` — close a round once this many live workers arrived, then
+///   wait at most `timeout_s` more (virtual) before dropping the rest;
+///   stragglers skip the average but still receive the installed state
+///   (catch-up). 0 = full barrier.
+/// * `drop_slowest` — backup-worker policy: always drop the k slowest
+///   arrivals of each round. Mutually exclusive with `quorum`.
+#[derive(Clone, Debug)]
+pub struct FaultsConfig {
+    /// How many of the highest worker ids are permanently slowed (0 = none).
+    pub slow_workers: usize,
+    /// Compute-time multiplier for slowed workers (≥ 1).
+    pub slow_factor: f64,
+    /// Per-(worker, step) transient-stall probability, in [0, 1).
+    pub stall_prob: f64,
+    /// Virtual seconds one transient stall costs (> 0 when `stall_prob` > 0).
+    pub stall_s: f64,
+    /// Worker id to crash permanently (−1 = none).
+    pub crash_worker: i64,
+    /// Iteration (1-based) at which `crash_worker` dies.
+    pub crash_step: u64,
+    /// Minimum live workers that close a sync round (0 = full barrier).
+    pub quorum: usize,
+    /// Extra virtual seconds to wait after the quorum arrives before
+    /// dropping stragglers from the round.
+    pub timeout_s: f64,
+    /// Backup-worker policy: drop the k slowest arrivals each round (0 = off).
+    pub drop_slowest: usize,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            slow_workers: 0,
+            slow_factor: 4.0,
+            stall_prob: 0.0,
+            stall_s: 0.05,
+            crash_worker: -1,
+            crash_step: 0,
+            quorum: 0,
+            timeout_s: 0.0,
+            drop_slowest: 0,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// Does the section schedule any fault or engage partial participation?
+    pub fn is_active(&self) -> bool {
+        self.slow_workers > 0
+            || self.stall_prob > 0.0
+            || self.crash_worker >= 0
+            || self.partial()
+    }
+
+    /// Is a partial-participation policy (quorum / backup-worker) selected?
+    pub fn partial(&self) -> bool {
+        self.quorum > 0 || self.drop_slowest > 0
+    }
+
+    /// The `[faults]` self-contained bounds — shared by
+    /// [`ExperimentConfig::validate`] and the trainer's programmatic-config
+    /// guard, mirroring the [`CommConfig::validate`] pattern. Cross-field
+    /// rules (worker counts, algorithm family, fused path, checkpointing)
+    /// live in [`ExperimentConfig::validate_faults`].
+    pub fn validate(&self) -> Result<()> {
+        if !(self.slow_factor >= 1.0 && self.slow_factor.is_finite()) {
+            return Err(Error::Config(format!(
+                "faults.slow_factor must be a finite value >= 1, got {}",
+                self.slow_factor
+            )));
+        }
+        if !(0.0..1.0).contains(&self.stall_prob) {
+            return Err(Error::Config(format!(
+                "faults.stall_prob must be in [0, 1), got {}",
+                self.stall_prob
+            )));
+        }
+        if !(self.stall_s >= 0.0 && self.stall_s.is_finite()) {
+            return Err(Error::Config(format!(
+                "faults.stall_s must be a finite value >= 0, got {}",
+                self.stall_s
+            )));
+        }
+        if self.stall_prob > 0.0 && self.stall_s <= 0.0 {
+            return Err(Error::Config(
+                "faults.stall_s must be > 0 when faults.stall_prob > 0".into(),
+            ));
+        }
+        if self.crash_worker < -1 {
+            return Err(Error::Config(format!(
+                "faults.crash_worker must be -1 (none) or a worker id, got {}",
+                self.crash_worker
+            )));
+        }
+        if self.crash_worker >= 0 && self.crash_step < 1 {
+            return Err(Error::Config(
+                "faults.crash_step must be >= 1 when faults.crash_worker is set".into(),
+            ));
+        }
+        if !(self.timeout_s >= 0.0 && self.timeout_s.is_finite()) {
+            return Err(Error::Config(format!(
+                "faults.timeout_s must be a finite value >= 0, got {}",
+                self.timeout_s
+            )));
+        }
+        if self.quorum > 0 && self.drop_slowest > 0 {
+            return Err(Error::Config(
+                "faults.quorum and faults.drop_slowest are mutually exclusive \
+                 participation policies (set one of them to 0)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -465,6 +604,8 @@ pub struct ExperimentConfig {
     pub comm: CommConfig,
     /// Synchronization-policy selection (`[sync]`).
     pub sync: SyncConfig,
+    /// Fault scenario + partial-participation policy (`[faults]`).
+    pub faults: FaultsConfig,
     /// Directory for CSV/JSONL outputs.
     pub out_dir: String,
     /// Artifact directory (PJRT backend).
@@ -480,6 +621,7 @@ impl Default for ExperimentConfig {
             net: NetConfig::default(),
             comm: CommConfig::default(),
             sync: SyncConfig::default(),
+            faults: FaultsConfig::default(),
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
         }
@@ -502,6 +644,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "train.rust_math_dim",
     "train.checkpoint_every",
     "train.checkpoint_path",
+    "train.fused",
     "optim.algorithm",
     "optim.eta",
     "optim.epsilon",
@@ -527,6 +670,15 @@ pub const KNOWN_KEYS: &[&str] = &[
     "sync.grow_every",
     "sync.drift_threshold",
     "sync.target_comm_fraction",
+    "faults.slow_workers",
+    "faults.slow_factor",
+    "faults.stall_prob",
+    "faults.stall_s",
+    "faults.crash_worker",
+    "faults.crash_step",
+    "faults.quorum",
+    "faults.timeout_s",
+    "faults.drop_slowest",
 ];
 
 impl ExperimentConfig {
@@ -558,6 +710,7 @@ impl ExperimentConfig {
             doc.int_or("train.checkpoint_every", c.train.checkpoint_every as i64)? as u64;
         c.train.checkpoint_path =
             doc.str_or("train.checkpoint_path", &c.train.checkpoint_path)?;
+        c.train.fused = doc.bool_or("train.fused", c.train.fused)?;
 
         if let Some(v) = doc.get("optim.algorithm") {
             c.optim.algorithm = Algorithm::parse(v.str()?)?;
@@ -602,6 +755,26 @@ impl ExperimentConfig {
             doc.float_or("sync.drift_threshold", c.sync.drift_threshold)?;
         c.sync.target_comm_fraction =
             doc.float_or("sync.target_comm_fraction", c.sync.target_comm_fraction)?;
+
+        c.faults.slow_workers =
+            doc.int_or("faults.slow_workers", c.faults.slow_workers as i64)? as usize;
+        c.faults.slow_factor = doc.float_or("faults.slow_factor", c.faults.slow_factor)?;
+        c.faults.stall_prob = doc.float_or("faults.stall_prob", c.faults.stall_prob)?;
+        c.faults.stall_s = doc.float_or("faults.stall_s", c.faults.stall_s)?;
+        c.faults.crash_worker = doc.int_or("faults.crash_worker", c.faults.crash_worker)?;
+        let crash_step = doc.int_or("faults.crash_step", c.faults.crash_step as i64)?;
+        if crash_step < 0 {
+            // Don't let a negative wrap into a huge u64 that silently
+            // schedules the crash past the end of the run.
+            return Err(Error::Config(format!(
+                "faults.crash_step must be >= 0, got {crash_step}"
+            )));
+        }
+        c.faults.crash_step = crash_step as u64;
+        c.faults.quorum = doc.int_or("faults.quorum", c.faults.quorum as i64)? as usize;
+        c.faults.timeout_s = doc.float_or("faults.timeout_s", c.faults.timeout_s)?;
+        c.faults.drop_slowest =
+            doc.int_or("faults.drop_slowest", c.faults.drop_slowest as i64)? as usize;
 
         c.validate()?;
         Ok(c)
@@ -717,6 +890,100 @@ impl ExperimentConfig {
                     self.sync.policy
                 )));
             }
+        }
+        self.validate_faults()?;
+        Ok(())
+    }
+
+    /// The `[faults]` rules, self-contained bounds plus the cross-field
+    /// consistency checks — one copy shared by [`ExperimentConfig::validate`]
+    /// and the trainer (which re-runs it for programmatically-built configs
+    /// whenever a fault scenario is active).
+    pub fn validate_faults(&self) -> Result<()> {
+        self.faults.validate()?;
+        let f = &self.faults;
+        let workers = self.train.workers;
+        if f.slow_workers > workers {
+            return Err(Error::Config(format!(
+                "faults.slow_workers ({}) exceeds train.workers ({workers})",
+                f.slow_workers
+            )));
+        }
+        if f.crash_worker >= 0 {
+            if f.crash_worker as usize >= workers {
+                return Err(Error::Config(format!(
+                    "faults.crash_worker ({}) out of range (train.workers = {workers})",
+                    f.crash_worker
+                )));
+            }
+            if workers == 1 {
+                return Err(Error::Config(
+                    "faults.crash_worker would crash the only worker (train.workers = 1)"
+                        .into(),
+                ));
+            }
+        }
+        if f.quorum > workers {
+            return Err(Error::Config(format!(
+                "faults.quorum ({}) exceeds train.workers ({workers})",
+                f.quorum
+            )));
+        }
+        if f.crash_worker >= 0 && f.quorum > workers.saturating_sub(1) {
+            return Err(Error::Config(format!(
+                "faults.quorum ({}) is unreachable once faults.crash_worker dies \
+                 (at most {} workers stay alive)",
+                f.quorum,
+                workers - 1
+            )));
+        }
+        if f.drop_slowest > 0 && f.drop_slowest >= workers {
+            return Err(Error::Config(format!(
+                "faults.drop_slowest ({}) must leave at least one participant \
+                 (train.workers = {workers})",
+                f.drop_slowest
+            )));
+        }
+        if f.crash_worker >= 0 && self.comm.compression != "none" {
+            // A crash shrinks the gather, and the compressor's per-worker
+            // error-feedback/delta streams are keyed by gather position —
+            // survivors would silently inherit the dead worker's residuals.
+            return Err(Error::Config(
+                "faults.crash_worker requires comm.compression = \"none\" \
+                 (compressor error-feedback streams are keyed by gather \
+                 position, which a crash would shift)"
+                    .into(),
+            ));
+        }
+        if f.partial() {
+            if !self.optim.algorithm.is_local() {
+                return Err(Error::Config(format!(
+                    "faults.quorum/drop_slowest require a local algorithm \
+                     ({} barriers on every worker each step by definition)",
+                    self.optim.algorithm
+                )));
+            }
+            if self.comm.compression != "none" {
+                return Err(Error::Config(
+                    "faults.quorum/drop_slowest require comm.compression = \"none\" \
+                     (delta-compression bases assume full participation)"
+                        .into(),
+                ));
+            }
+            if self.train.fused {
+                return Err(Error::Config(
+                    "faults.quorum/drop_slowest require train.fused = false \
+                     (partial rounds use the split grad + rust-update path)"
+                        .into(),
+                ));
+            }
+        }
+        if f.is_active() && self.train.checkpoint_every > 0 {
+            return Err(Error::Config(
+                "train.checkpoint_every requires an empty [faults] section \
+                 (fault-plan progress is not checkpointed)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -922,6 +1189,106 @@ mod tests {
         c.sync.h_max = 64;
         c.sync.grow_every = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn faults_section_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[train]\nfused = false\n[faults]\nslow_workers = 1\nslow_factor = 4.0\n\
+             quorum = 7\ntimeout_s = 0.25\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.faults.slow_workers, 1);
+        assert_eq!(c.faults.slow_factor, 4.0);
+        assert_eq!(c.faults.quorum, 7);
+        assert_eq!(c.faults.timeout_s, 0.25);
+        assert!(!c.train.fused);
+        assert!(c.faults.is_active() && c.faults.partial());
+
+        // Defaults: inactive section, fused path on, full barrier.
+        let d = ExperimentConfig::default();
+        assert!(!d.faults.is_active());
+        assert!(!d.faults.partial());
+        assert!(d.train.fused);
+        d.validate().unwrap();
+
+        // An explicitly-zeroed section is still inactive.
+        let doc = TomlDoc::parse("[faults]\nslow_workers = 0\nquorum = 0\n").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(!c.faults.is_active());
+    }
+
+    #[test]
+    fn faults_negative_paths_name_the_field() {
+        // Every invalid combination must come back as Err with a message
+        // naming the offending field — never a panic mid-run.
+        let cases: &[(&str, &str)] = &[
+            // quorum larger than the cluster
+            ("[train]\nfused = false\n[faults]\nquorum = 9\n", "faults.quorum"),
+            // quorum with the fused device path
+            ("[faults]\nquorum = 4\n", "train.fused"),
+            // quorum needs a local algorithm
+            (
+                "[train]\nsync_period = 1\nfused = false\n\
+                 [optim]\nalgorithm = \"adagrad\"\n[faults]\nquorum = 2\n",
+                "local",
+            ),
+            // quorum over a compressed transport
+            (
+                "[train]\nfused = false\n[comm]\ntransport = \"channel\"\n\
+                 compression = \"qsgd\"\n[faults]\nquorum = 4\n",
+                "comm.compression",
+            ),
+            // crash with checkpointing enabled
+            (
+                "[faults]\ncrash_worker = 1\ncrash_step = 8\n\
+                 [train]\ncheckpoint_every = 4\n",
+                "checkpoint_every",
+            ),
+            // crash without a crash step
+            ("[faults]\ncrash_worker = 1\n", "faults.crash_step"),
+            // negative crash step must not wrap into "never"
+            ("[faults]\ncrash_worker = 1\ncrash_step = -3\n", "faults.crash_step"),
+            // crash worker out of range
+            ("[train]\nworkers = 2\n[faults]\ncrash_worker = 5\ncrash_step = 2\n",
+             "faults.crash_worker"),
+            // crash makes the quorum unreachable
+            (
+                "[train]\nworkers = 4\nfused = false\n\
+                 [faults]\nquorum = 4\ncrash_worker = 0\ncrash_step = 2\n",
+                "unreachable",
+            ),
+            // crash over a compressed transport (position-keyed residuals)
+            (
+                "[comm]\ntransport = \"channel\"\ncompression = \"topk\"\n\
+                 [faults]\ncrash_worker = 1\ncrash_step = 2\n",
+                "comm.compression",
+            ),
+            // slowdown below 1 is a speed-up, not a fault
+            ("[faults]\nslow_workers = 1\nslow_factor = 0.5\n", "faults.slow_factor"),
+            // stall probability out of range
+            ("[faults]\nstall_prob = 1.5\n", "faults.stall_prob"),
+            // stalls that cost nothing
+            ("[faults]\nstall_prob = 0.1\nstall_s = 0.0\n", "faults.stall_s"),
+            // both participation policies at once
+            ("[train]\nfused = false\n[faults]\nquorum = 2\ndrop_slowest = 1\n",
+             "mutually exclusive"),
+            // backup policy dropping everyone
+            ("[train]\nworkers = 4\nfused = false\n[faults]\ndrop_slowest = 4\n",
+             "faults.drop_slowest"),
+            // negative timeout
+            ("[train]\nfused = false\n[faults]\nquorum = 2\ntimeout_s = -1.0\n",
+             "faults.timeout_s"),
+        ];
+        for (toml, needle) in cases {
+            let doc = TomlDoc::parse(toml).unwrap_or_else(|e| panic!("{toml}: {e}"));
+            let err = ExperimentConfig::from_doc(&doc)
+                .err()
+                .unwrap_or_else(|| panic!("expected Err for:\n{toml}"))
+                .to_string();
+            assert!(err.contains(needle), "{toml}\nerror {err:?} lacks {needle:?}");
+        }
     }
 
     #[test]

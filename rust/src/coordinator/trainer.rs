@@ -47,7 +47,7 @@ use crate::coordinator::worker::{worker_loop, Cmd, Reply, WorkerSpec};
 use crate::error::{Error, Result};
 use crate::metrics::TrainRecorder;
 use crate::optim;
-use crate::sim::{Calibration, Charge, VirtualClock};
+use crate::sim::{Calibration, Charge, FaultPlan, VirtualClock};
 
 /// Result of a training run.
 pub struct RunResult {
@@ -71,6 +71,9 @@ pub struct Trainer {
     pub calibration: Calibration,
     /// Resume from a checkpoint (algorithm + dimensions must match).
     pub resume: Option<Checkpoint>,
+    /// Override the fault scenario (default: compiled from the `[faults]`
+    /// config section and `train.seed`; DESIGN.md §5).
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl Trainer {
@@ -83,6 +86,7 @@ impl Trainer {
             allow_fused: true,
             calibration: Calibration::paper_v100(),
             resume: None,
+            fault_plan: None,
         }
     }
 
@@ -120,14 +124,55 @@ impl Trainer {
                     .into(),
             ));
         }
+        // The fault scenario (DESIGN.md §5): compiled from `[faults]` +
+        // seed unless a programmatic plan was injected. An empty plan with
+        // no participation policy keeps every fault code path disabled.
+        let plan = match &self.fault_plan {
+            Some(p) => {
+                if p.n() != n {
+                    return Err(Error::Config(format!(
+                        "fault plan covers {} workers, config has {n}",
+                        p.n()
+                    )));
+                }
+                p.clone()
+            }
+            None => FaultPlan::from_config(cfg),
+        };
+        let faults_on = !plan.is_empty() || cfg.faults.partial();
+        if faults_on || cfg.faults.is_active() {
+            // TOML-loaded configs already passed these rules; re-run them
+            // for programmatically-built configs (field-named errors, not
+            // mid-run panics). Checked whenever the *section* asks for
+            // faults, not just when a plan compiled — an out-of-range
+            // crash worker must error, not silently yield an empty plan.
+            cfg.validate_faults()?;
+        }
+        if faults_on {
+            if self.resume.is_some() {
+                return Err(Error::Config(
+                    "resume is not supported with an active [faults] scenario \
+                     (fault-plan progress is not checkpointed)"
+                        .into(),
+                ));
+            }
+            if cfg.train.checkpoint_every > 0 {
+                return Err(Error::Config(
+                    "train.checkpoint_every requires an empty [faults] section \
+                     (fault-plan progress is not checkpointed)"
+                        .into(),
+                ));
+            }
+        }
         // The per-iteration sync decision is the policy's (DESIGN.md §4);
         // non-local algorithms always get FixedPeriod(1).
         let policy = build_policy(cfg)?;
         // Drift-triggered policies consume the per-step update norm, which
         // the fused device path cannot observe — fall back to the split
-        // grad + rust-update path for those runs.
+        // grad + rust-update path for those runs. `train.fused = false`
+        // disables the device path outright (required for partial rounds).
         let collect_update_sq = policy.needs_update_norms();
-        let allow_fused = self.allow_fused && !collect_update_sq;
+        let allow_fused = self.allow_fused && cfg.train.fused && !collect_update_sq;
         let warmup = WarmupSchedule::new(cfg.optim.eta, cfg.optim.warmup_steps);
 
         // --- Spawn workers -------------------------------------------------
@@ -190,6 +235,7 @@ impl Trainer {
                 init: Arc::clone(&init),
                 allow_fused,
                 collect_update_sq,
+                crash_step: plan.crash_step(w),
             };
             let factory = Arc::clone(&self.factory);
             let rtx = reply_tx.clone();
@@ -227,6 +273,11 @@ impl Trainer {
             },
             start_step,
             resume_acc,
+            plan,
+            faults_on,
+            alive: vec![true; n],
+            phase_s: vec![0.0; n],
+            phase_nominal_s: 0.0,
         };
         let out = run.drive();
         // Always attempt shutdown, even on error.
@@ -270,6 +321,19 @@ struct LeaderLoop<'a> {
     start_step: u64,
     /// Local-AdaAlter accumulator to install on resume.
     resume_acc: Option<Arc<Vec<f32>>>,
+    /// The fault scenario (DESIGN.md §5; empty in fault-free runs).
+    plan: FaultPlan,
+    /// Gate for every fault code path: false ⇒ the leader loop is the
+    /// exact (bitwise) fault-free protocol.
+    faults_on: bool,
+    /// Per-worker liveness (false once a crash tombstone arrived).
+    alive: Vec<bool>,
+    /// Per-worker virtual arrival time within the current local phase —
+    /// the straggler signal partial rounds select on.
+    phase_s: Vec<f64>,
+    /// Lockstep-nominal virtual time of the current phase (what the
+    /// per-iteration charges already booked for it).
+    phase_nominal_s: f64,
 }
 
 impl<'a> LeaderLoop<'a> {
@@ -287,8 +351,8 @@ impl<'a> LeaderLoop<'a> {
             .map(|_| ())
     }
 
-    /// Charge one iteration's compute+dataload to the virtual clock.
-    fn charge_iteration(&mut self) {
+    /// Algorithm-adjusted per-iteration compute cost (the Compute charge).
+    fn compute_charge_s(&self) -> f64 {
         let c = self.calib;
         let mut compute = c.t_compute_s;
         if matches!(
@@ -297,8 +361,36 @@ impl<'a> LeaderLoop<'a> {
         ) {
             compute *= 1.0 + c.adaalter_compute_overhead;
         }
+        compute
+    }
+
+    /// Lockstep-nominal wall time of one iteration: compute, or the
+    /// dataloader when it binds — exactly what [`Self::charge_iteration`]
+    /// books per iteration.
+    fn nominal_iter_s(&self) -> f64 {
+        self.compute_charge_s().max(self.calib.dataload_s(self.n()))
+    }
+
+    /// Worker `w`'s modeled wall time for iteration `t` under the fault
+    /// plan (slowdowns/stalls applied to compute; the shared dataloader
+    /// still floors it). Equals [`Self::nominal_iter_s`] for un-faulted
+    /// workers.
+    fn worker_iter_s(&self, w: usize, t: u64) -> f64 {
+        self.plan
+            .step_time_s(w, t, self.compute_charge_s())
+            .max(self.calib.dataload_s(self.n()))
+    }
+
+    /// Worker ids still alive (all of them in fault-free runs).
+    fn alive_ids(&self) -> Vec<usize> {
+        (0..self.n()).filter(|&w| self.alive[w]).collect()
+    }
+
+    /// Charge one iteration's compute+dataload to the virtual clock.
+    fn charge_iteration(&mut self) {
+        let compute = self.compute_charge_s();
         self.clock.advance(Charge::Compute, compute);
-        let extra = (c.dataload_s(self.n()) - compute).max(0.0);
+        let extra = (self.calib.dataload_s(self.n()) - compute).max(0.0);
         if extra > 0.0 {
             self.clock.advance(Charge::DataLoad, extra);
         }
@@ -344,8 +436,14 @@ impl<'a> LeaderLoop<'a> {
             };
             self.charge_iteration();
             let log = t % log_every == 0 || t == steps || t == 1;
+            // Throughput accounting: crashed workers stop drawing batches.
+            let samples = if self.faults_on {
+                self.alive.iter().filter(|&&a| a).count() as u64
+            } else {
+                self.n() as u64
+            };
             self.recorder
-                .step(t, mean_loss, lr, self.clock.now_s(), self.n() as u64, log);
+                .step(t, mean_loss, lr, self.clock.now_s(), samples, log);
 
             if eval_every > 0 && (t % eval_every == 0 || t == steps) {
                 let m = self.evaluate(t)?;
@@ -367,6 +465,9 @@ impl<'a> LeaderLoop<'a> {
 
     /// One fully-synchronous iteration: broadcast x, gather grads, update.
     fn sync_iteration(&mut self, t: u64, lr: f32) -> Result<f64> {
+        if self.faults_on {
+            return self.sync_iteration_faulted(t, lr);
+        }
         let x_arc = Arc::new(self.x.clone());
         let rep_b = self.coll.broadcast(&x_arc)?;
         self.transport
@@ -404,6 +505,9 @@ impl<'a> LeaderLoop<'a> {
 
     /// One local iteration; runs the sync round when the policy says so.
     fn local_iteration(&mut self, t: u64, lr: f32) -> Result<f64> {
+        if self.faults_on {
+            return self.local_iteration_faulted(t, lr);
+        }
         self.transport.broadcast(|_| Cmd::LocalStep { t, lr })?;
         let replies = self.transport.gather(|r| match r {
             Reply::StepDone { worker, loss, update_sq } => Ok((worker, (loss, update_sq))),
@@ -413,6 +517,123 @@ impl<'a> LeaderLoop<'a> {
         let n = replies.len() as f64;
         let mean_loss = replies.iter().map(|&(l, _)| l as f64).sum::<f64>() / n;
         let mean_update_sq = replies.iter().map(|&(_, u)| u).sum::<f64>() / n;
+
+        let step = StepObservation { t, update_sq: mean_update_sq };
+        if let Some(reason) = self.policy.decide(&step) {
+            self.sync_round(t, reason)?;
+        }
+        Ok(mean_loss)
+    }
+
+    /// Fault-aware fully-synchronous iteration (DESIGN.md §5): only live
+    /// workers are addressed, crash tombstones shrink the gather, the
+    /// per-iteration barrier is charged the spread between the slowest
+    /// live worker and the lockstep-nominal cost, and the update averages
+    /// the survivors' gradients.
+    fn sync_iteration_faulted(&mut self, t: u64, lr: f32) -> Result<f64> {
+        let targets = self.alive_ids();
+        if targets.is_empty() {
+            return Err(Error::Protocol(format!("all workers crashed before step {t}")));
+        }
+        let x_arc = Arc::new(self.x.clone());
+        let rep_b = self.coll.broadcast(&x_arc)?;
+        self.transport
+            .broadcast_to(&targets, |_| Cmd::SyncStep { t, x: Arc::clone(&x_arc) })?;
+        let replies = self.transport.gather_from(&targets, |r| match r {
+            Reply::Grad { worker, loss, grad } => Ok((worker, Some((loss, grad)))),
+            Reply::Crashed { worker, .. } => Ok((worker, None)),
+            Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
+            _ => Err(Error::Protocol("expected Grad".into())),
+        })?;
+        let nominal = self.nominal_iter_s();
+        let mut close = nominal;
+        let mut losses: Vec<f64> = Vec::new();
+        let mut grads: Vec<Vec<f32>> = Vec::new();
+        for (&w, rep) in targets.iter().zip(replies) {
+            match rep {
+                Some((loss, grad)) => {
+                    close = close.max(self.worker_iter_s(w, t));
+                    losses.push(loss as f64);
+                    grads.push(grad);
+                }
+                None => self.alive[w] = false,
+            }
+        }
+        if grads.is_empty() {
+            return Err(Error::Protocol(format!("all workers crashed at step {t}")));
+        }
+        let wait = close - nominal;
+        if wait > 0.0 {
+            self.clock.advance(Charge::Straggler, wait);
+        }
+        let mean_loss = losses.iter().sum::<f64>() / losses.len() as f64;
+        let rep_g = self.coll.gather_grads(&mut grads)?;
+        self.apply_comm(rep_b.merge(rep_g));
+        // Every fully-synchronous iteration is a round: log its
+        // participation too (here `dropped` counts workers whose crash was
+        // discovered during this very round).
+        self.recorder.fault_event(
+            t,
+            targets.len() as u64,
+            grads.len() as u64,
+            (targets.len() - grads.len()) as u64,
+            wait,
+            self.clock.now_s(),
+        );
+        let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+
+        let opt = self.opt.as_mut().expect("sync iteration without optimizer");
+        match opt.algorithm() {
+            Algorithm::AdaGrad => {
+                self.agg.mean_grads(&grad_refs);
+                self.agg.square_avg_grad();
+            }
+            _ => {
+                self.agg.mean_grads_and_squares(&grad_refs);
+            }
+        }
+        opt.step(&mut self.x, &self.agg.avg_g, &self.agg.avg_gsq, lr);
+        Ok(mean_loss)
+    }
+
+    /// Fault-aware local iteration (DESIGN.md §5): live workers step and
+    /// their per-worker virtual arrival times accumulate (slowdowns and
+    /// stalls applied); crash tombstones mark workers dead; the policy's
+    /// sync decision then runs the (possibly partial) round.
+    fn local_iteration_faulted(&mut self, t: u64, lr: f32) -> Result<f64> {
+        let targets = self.alive_ids();
+        if targets.is_empty() {
+            return Err(Error::Protocol(format!("all workers crashed before step {t}")));
+        }
+        self.transport.broadcast_to(&targets, |_| Cmd::LocalStep { t, lr })?;
+        let replies = self.transport.gather_from(&targets, |r| match r {
+            Reply::StepDone { worker, loss, update_sq } => {
+                Ok((worker, Some((loss, update_sq))))
+            }
+            Reply::Crashed { worker, .. } => Ok((worker, None)),
+            Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
+            _ => Err(Error::Protocol("expected StepDone".into())),
+        })?;
+        self.phase_nominal_s += self.nominal_iter_s();
+        let mut losses: Vec<f64> = Vec::new();
+        let mut upds: Vec<f64> = Vec::new();
+        for (&w, rep) in targets.iter().zip(&replies) {
+            match rep {
+                Some((loss, update_sq)) => {
+                    let t_w = self.worker_iter_s(w, t);
+                    self.phase_s[w] += t_w;
+                    losses.push(*loss as f64);
+                    upds.push(*update_sq);
+                }
+                None => self.alive[w] = false,
+            }
+        }
+        if losses.is_empty() {
+            return Err(Error::Protocol(format!("all workers crashed at step {t}")));
+        }
+        let n = losses.len() as f64;
+        let mean_loss = losses.iter().sum::<f64>() / n;
+        let mean_update_sq = upds.iter().sum::<f64>() / n;
 
         let step = StepObservation { t, update_sq: mean_update_sq };
         if let Some(reason) = self.policy.decide(&step) {
@@ -431,12 +652,36 @@ impl<'a> LeaderLoop<'a> {
         })
     }
 
+    /// [`Self::collect_states`] over a live subset (fault runs).
+    fn collect_states_from(&self, targets: &[usize]) -> Result<Vec<(Vec<f32>, Option<Vec<f32>>)>> {
+        self.transport.broadcast_to(targets, |_| Cmd::CollectState)?;
+        self.transport.gather_from(targets, |r| match r {
+            Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
+            Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
+            _ => Err(Error::Protocol("expected State".into())),
+        })
+    }
+
+    /// [`Self::wait_ready`] over a live subset (fault runs).
+    fn wait_ready_from(&self, targets: &[usize]) -> Result<()> {
+        self.transport
+            .gather_from(targets, |r| match r {
+                Reply::Ready { worker } => Ok((worker, ())),
+                Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
+                _ => Err(Error::Protocol("expected Ready".into())),
+            })
+            .map(|_| ())
+    }
+
     /// Alg. 4 lines 11–12: the paired averaging round, executed by the
     /// configured collective (which may compress the exchange), then the
     /// averaged state is installed on every replica. The round's
     /// [`SyncObservation`] — assembled from the collective's report and
     /// the virtual clock — is recorded and fed back to the policy.
     fn sync_round(&mut self, t: u64, reason: SyncReason) -> Result<()> {
+        if self.faults_on {
+            return self.sync_round_faulted(t, reason);
+        }
         let wants_acc = self.cfg.optim.algorithm.syncs_denominator();
         let states = self.collect_states()?;
         let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
@@ -465,6 +710,23 @@ impl<'a> LeaderLoop<'a> {
             acc: avg_acc.clone(),
         })?;
         self.wait_ready()?;
+        self.record_round(t, reason, report, 0.0);
+        Ok(())
+    }
+
+    /// Shared per-round bookkeeping tail of both sync-round paths: book
+    /// the round's cost, log the sync event, and feed the policy its
+    /// [`SyncObservation`]. `straggler_floor_s` lets the fault path raise
+    /// the straggler observation to the barrier wait it actually measured
+    /// (0 in the fault-free path — `report.straggler_s` is never negative,
+    /// so the floor is then a no-op, bit for bit).
+    fn record_round(
+        &mut self,
+        t: u64,
+        reason: SyncReason,
+        report: CommReport,
+        straggler_floor_s: f64,
+    ) {
         self.apply_comm(report);
         let (rounds, _) = self.recorder.comm();
         self.recorder.sync_event(
@@ -481,11 +743,85 @@ impl<'a> LeaderLoop<'a> {
             rounds,
             round_bytes: report.bytes,
             round_time_s: report.time_s,
-            straggler_s: report.straggler_s,
+            straggler_s: report.straggler_s.max(straggler_floor_s),
             drift_sq: report.drift_sq,
             virtual_now_s: self.clock.now_s(),
             total_comm_s: self.clock.total(Charge::Communication),
         });
+    }
+
+    /// Fault-aware sync round (DESIGN.md §5): live workers offer their
+    /// states *and arrival times*; the collective's
+    /// [`Collective::sync_round_partial`] closes the barrier per the
+    /// configured participation policy (full barrier by default, quorum /
+    /// backup-worker under `[faults]`), averaging only the participants.
+    /// Every live worker — dropped stragglers included — then installs the
+    /// averaged state (`InstallState` catch-up). The barrier's wait beyond
+    /// the lockstep-nominal phase time is charged to
+    /// [`Charge::Straggler`], and the round's participation is recorded as
+    /// a [`crate::metrics::FaultEvent`].
+    fn sync_round_faulted(&mut self, t: u64, reason: SyncReason) -> Result<()> {
+        let wants_acc = self.cfg.optim.algorithm.syncs_denominator();
+        let targets = self.alive_ids();
+        if targets.is_empty() {
+            return Err(Error::Protocol(format!("all workers crashed before round at {t}")));
+        }
+        let states = self.collect_states_from(&targets)?;
+        let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
+        let arrivals: Vec<f64> = targets.iter().map(|&w| self.phase_s[w]).collect();
+
+        let (outcome, avg_acc) = if wants_acc {
+            let accs: Vec<&[f32]> = states
+                .iter()
+                .map(|(_, a)| {
+                    a.as_deref()
+                        .ok_or_else(|| Error::Protocol("worker state missing accumulator".into()))
+                })
+                .collect::<Result<_>>()?;
+            let mut acc = vec![0.0f32; self.d];
+            let oc = self.coll.sync_round_partial(
+                &xs,
+                Some(&accs),
+                &arrivals,
+                &mut self.x,
+                Some(&mut acc),
+            )?;
+            (oc, Some(Arc::new(acc)))
+        } else {
+            let oc = self
+                .coll
+                .sync_round_partial(&xs, None, &arrivals, &mut self.x, None)?;
+            (oc, None)
+        };
+
+        // Install the averaged state on every live worker — the dropped
+        // stragglers abandon their stale phase and catch up here.
+        let avg_x = Arc::new(self.x.clone());
+        self.transport.broadcast_to(&targets, |_| Cmd::InstallState {
+            x: Arc::clone(&avg_x),
+            acc: avg_acc.clone(),
+        })?;
+        self.wait_ready_from(&targets)?;
+
+        // The barrier's visible straggler penalty: how long the round's
+        // close sat beyond what the per-iteration charges already booked.
+        let wait_s = (outcome.close_s - self.phase_nominal_s).max(0.0);
+        if wait_s > 0.0 {
+            self.clock.advance(Charge::Straggler, wait_s);
+        }
+        self.record_round(t, reason, outcome.report, wait_s);
+        self.recorder.fault_event(
+            t,
+            targets.len() as u64,
+            outcome.participants.len() as u64,
+            outcome.dropped.len() as u64,
+            wait_s,
+            self.clock.now_s(),
+        );
+        for &w in &targets {
+            self.phase_s[w] = 0.0;
+        }
+        self.phase_nominal_s = 0.0;
         Ok(())
     }
 
@@ -532,7 +868,15 @@ impl<'a> LeaderLoop<'a> {
         if !self.cfg.optim.algorithm.is_local() {
             return Ok(self.x.clone());
         }
-        let states = self.collect_states()?;
+        let states = if self.faults_on {
+            let targets = self.alive_ids();
+            if targets.is_empty() {
+                return Err(Error::Protocol("all workers crashed".into()));
+            }
+            self.collect_states_from(&targets)?
+        } else {
+            self.collect_states()?
+        };
         let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
         let mut out = vec![0.0f32; self.d];
         average_into(&xs, &mut out);
@@ -547,7 +891,14 @@ impl<'a> LeaderLoop<'a> {
 
     fn eval_at(&mut self, x: &[f32]) -> Result<EvalMetrics> {
         let x = Arc::new(x.to_vec());
-        self.transport.send_to(0, Cmd::Eval { x: Some(x) })?;
+        // Evaluation runs on the lowest-id live worker (worker 0 unless a
+        // fault scenario killed it).
+        let evaluator = self
+            .alive
+            .iter()
+            .position(|&a| a)
+            .ok_or_else(|| Error::Protocol("all workers crashed".into()))?;
+        self.transport.send_to(evaluator, Cmd::Eval { x: Some(x) })?;
         match self.transport.recv()? {
             Reply::Eval { metrics, .. } => Ok(metrics),
             Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
@@ -768,5 +1119,153 @@ mod tests {
         let f = synthetic_factory(&cfg);
         let r = Trainer::new(cfg, f).run().unwrap();
         assert!(r.final_eval.unwrap().loss.is_finite());
+    }
+
+    #[test]
+    fn fault_free_runs_never_charge_straggler_time() {
+        let r = run(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 40);
+        assert_eq!(r.clock.total(Charge::Straggler), 0.0);
+        assert!(r.recorder.fault_events.is_empty());
+    }
+
+    #[test]
+    fn slow_worker_full_barrier_charges_closed_form_straggler_time() {
+        // One 4×-slow worker of 4, H = 4, 40 steps, full barrier: every
+        // round waits (f−1)·H·t_compute beyond nominal, so the total
+        // straggler charge is steps · 3 · t_compute (dataloader not
+        // binding at n = 4).
+        let (steps, h, factor) = (40u64, 4u64, 4.0f64);
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), steps);
+        cfg.faults.slow_workers = 1;
+        cfg.faults.slow_factor = factor;
+        let f = synthetic_factory(&cfg);
+        let r = Trainer::new(cfg, f).run().unwrap();
+        let calib = Calibration::paper_v100();
+        let compute = calib.t_compute_s * (1.0 + calib.adaalter_compute_overhead);
+        assert!(calib.dataload_s(4) < compute, "dataloader must not bind here");
+        let want = steps as f64 * (factor - 1.0) * compute;
+        let got = r.clock.total(Charge::Straggler);
+        assert!(
+            (got - want).abs() < 1e-9 * want,
+            "straggler charge {got} != closed form {want}"
+        );
+        // One participation event per round, nobody dropped (full barrier).
+        assert_eq!(r.recorder.fault_events.len() as u64, steps / h);
+        assert!(r
+            .recorder
+            .fault_events
+            .iter()
+            .all(|e| e.alive == 4 && e.participants == 4 && e.dropped == 0 && e.wait_s > 0.0));
+        assert!(r.final_eval.unwrap().loss.is_finite());
+    }
+
+    #[test]
+    fn quorum_drops_the_slow_worker_and_eliminates_the_wait() {
+        let (steps, h) = (40u64, 4u64);
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), steps);
+        cfg.train.fused = false;
+        cfg.faults.slow_workers = 1;
+        cfg.faults.slow_factor = 4.0;
+        cfg.faults.quorum = 3;
+        let f = synthetic_factory(&cfg);
+        let r = Trainer::new(cfg, f).run().unwrap();
+        // The three fast workers close every round at the nominal phase
+        // time; the slow worker is dropped and the barrier never waits.
+        assert_eq!(r.clock.total(Charge::Straggler), 0.0);
+        assert_eq!(r.recorder.fault_events.len() as u64, steps / h);
+        assert!(r
+            .recorder
+            .fault_events
+            .iter()
+            .all(|e| e.alive == 4 && e.participants == 3 && e.dropped == 1 && e.wait_s == 0.0));
+        assert!(r.recorder.transport().starts_with("partial(q3"));
+        assert!(r.final_eval.unwrap().loss.is_finite());
+    }
+
+    #[test]
+    fn crashed_worker_is_excluded_and_training_continues() {
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 60);
+        cfg.faults.crash_worker = 2;
+        cfg.faults.crash_step = 9;
+        let f = synthetic_factory(&cfg);
+        let r = Trainer::new(cfg, f).run().unwrap();
+        let events = &r.recorder.fault_events;
+        assert_eq!(events.len(), 60 / 4);
+        assert!(events.iter().take(2).all(|e| e.alive == 4), "pre-crash rounds");
+        assert!(events.iter().skip(2).all(|e| e.alive == 3), "post-crash rounds");
+        // Throughput accounting drops the dead worker: 8 steps × 4 live,
+        // then 52 steps × 3 live.
+        assert_eq!(r.recorder.samples(), 8 * 4 + 52 * 3);
+        assert!(r.final_x.iter().all(|v| v.is_finite()));
+        assert!(r.final_eval.unwrap().loss.is_finite());
+    }
+
+    #[test]
+    fn fully_sync_fault_runs_log_per_iteration_events() {
+        // AdaGrad barriers every step; with one 4×-slow worker of 4 each
+        // iteration waits (f−1)·t_compute (no AdaAlter overhead, dataloader
+        // not binding at n = 4), and each iteration logs one event.
+        let (steps, factor) = (25u64, 4.0f64);
+        let mut cfg = config(Algorithm::AdaGrad, SyncPeriod::Every(1), steps);
+        cfg.faults.slow_workers = 1;
+        cfg.faults.slow_factor = factor;
+        let f = synthetic_factory(&cfg);
+        let r = Trainer::new(cfg, f).run().unwrap();
+        let calib = Calibration::paper_v100();
+        let want = steps as f64 * (factor - 1.0) * calib.t_compute_s;
+        let got = r.clock.total(Charge::Straggler);
+        assert!(
+            (got - want).abs() < 1e-9 * want,
+            "straggler charge {got} != closed form {want}"
+        );
+        assert_eq!(r.recorder.fault_events.len() as u64, steps);
+        assert!(r
+            .recorder
+            .fault_events
+            .iter()
+            .all(|e| e.alive == 4 && e.participants == 4 && e.dropped == 0 && e.wait_s > 0.0));
+        assert_eq!(r.recorder.samples(), steps * 4);
+        assert!(r.final_x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn trainer_rejects_bad_fault_configs_programmatically() {
+        // quorum with the fused path on: field-named config error.
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 8);
+        cfg.faults.quorum = 2;
+        let f = synthetic_factory(&cfg);
+        let err = Trainer::new(cfg, f).run().err().expect("must fail");
+        assert!(err.to_string().contains("train.fused"), "{err}");
+
+        // resume under an active fault scenario.
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 8);
+        cfg.faults.slow_workers = 1;
+        let d = cfg.train.rust_math_dim;
+        let f = synthetic_factory(&cfg);
+        let mut t = Trainer::new(cfg, f);
+        t.resume = Some(crate::coordinator::Checkpoint {
+            step: 4,
+            algorithm: Algorithm::LocalAdaAlter,
+            vectors: vec![vec![0.0; d], vec![1.0; d], vec![1.0; d]],
+        });
+        let err = t.run().err().expect("must fail");
+        assert!(err.to_string().contains("[faults]"), "{err}");
+
+        // plan/worker-count mismatch.
+        let cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 8);
+        let f = synthetic_factory(&cfg);
+        let mut t = Trainer::new(cfg, f);
+        t.fault_plan = Some(crate::sim::FaultPlan::none(2).with_slow(0, 2.0));
+        let err = t.run().err().expect("must fail");
+        assert!(err.to_string().contains("covers 2 workers"), "{err}");
+
+        // Out-of-range crash worker in a programmatic config must error,
+        // not silently compile to an empty (fault-free) plan.
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 8);
+        cfg.faults.crash_worker = 7; // workers = 4
+        cfg.faults.crash_step = 2;
+        let f = synthetic_factory(&cfg);
+        let err = Trainer::new(cfg, f).run().err().expect("must fail");
+        assert!(err.to_string().contains("faults.crash_worker"), "{err}");
     }
 }

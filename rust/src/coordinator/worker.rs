@@ -53,6 +53,11 @@ pub enum Reply {
     Eval { worker: usize, metrics: EvalMetrics },
     /// Ready after start-up / state install.
     Ready { worker: usize },
+    /// The worker's fault schedule killed it at `step` (DESIGN.md §5).
+    /// The tombstone reply stands in for a vanished process so the
+    /// lockstep protocol observes the death instead of deadlocking; the
+    /// leader marks the worker dead and stops addressing it.
+    Crashed { worker: usize, step: u64 },
     /// Fatal worker error.
     Err { worker: usize, msg: String },
 }
@@ -76,6 +81,10 @@ pub struct WorkerSpec {
     /// gradient; the AdaAlter path folds the norm into its existing fused
     /// update loop, so it always reports it.
     pub collect_update_sq: bool,
+    /// Fault injection (DESIGN.md §5): the worker dies permanently at this
+    /// step — it executes steps `t < crash_step` and answers everything
+    /// from `crash_step` on with [`Reply::Crashed`].
+    pub crash_step: Option<u64>,
 }
 
 /// Local-algorithm replica state.
@@ -122,7 +131,32 @@ pub fn worker_loop(
         return;
     }
 
+    let crash_at = spec.crash_step;
+    let mut dead = false;
+
     while let Ok(cmd) = rx.recv() {
+        // Fault injection: the schedule kills this worker at its crash
+        // step; from then on every command except Stop is answered with
+        // the tombstone so the lockstep protocol observes the death
+        // instead of blocking on a reply that would never come.
+        if !dead {
+            let step = match &cmd {
+                Cmd::SyncStep { t, .. } | Cmd::LocalStep { t, .. } => Some(*t),
+                _ => None,
+            };
+            if let (Some(c), Some(t)) = (crash_at, step) {
+                if t >= c {
+                    dead = true;
+                }
+            }
+        }
+        if dead {
+            if matches!(cmd, Cmd::Stop) {
+                break;
+            }
+            let _ = tx.send(Reply::Crashed { worker, step: crash_at.unwrap_or(0) });
+            continue;
+        }
         match cmd {
             Cmd::SyncStep { t, x } => {
                 match backend.loss_and_grad(&x, t, &mut grad_buf) {

@@ -13,7 +13,11 @@
 //!   collective-communication layer ([`comm::Collective`]: in-process
 //!   lockstep, α–β-charged parameter-server / ring-allreduce simulation,
 //!   QSGD / top-k compressed transports with exact wire-byte accounting),
-//!   warm-up learning-rate schedule, data pipeline, metrics, CLI.
+//!   a deterministic fault & straggler scenario engine with
+//!   partial-participation sync rounds ([`sim::FaultPlan`] +
+//!   [`comm::PartialCollective`]: seeded slowdowns/stalls/crashes, quorum
+//!   and backup-worker barriers), warm-up learning-rate schedule, data
+//!   pipeline, metrics, CLI.
 //! * **L2 (python/compile, build time only)** — a JAX transformer language
 //!   model lowered once to HLO-text artifacts (`make artifacts`).
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the fused

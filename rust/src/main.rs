@@ -134,12 +134,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     }
     println!(
-        "virtual time {:.1}s (compute {:.1}s, dataload {:.1}s, comm {:.1}s); \
+        "virtual time {:.1}s (compute {:.1}s, dataload {:.1}s, comm {:.1}s, \
+         straggler {:.1}s); \
          {syncs} syncs, {:.1} MiB shipped; wall {:.1}s, {:.0} samples/s host",
         result.clock.now_s(),
         result.clock.total(Charge::Compute),
         result.clock.total(Charge::DataLoad),
         result.clock.total(Charge::Communication),
+        result.clock.total(Charge::Straggler),
         bytes as f64 / (1 << 20) as f64,
         result.recorder.steps.last().map(|p| p.wall_s).unwrap_or(0.0),
         result.recorder.wall_throughput(),
@@ -168,6 +170,20 @@ fn cmd_train(args: &Args) -> Result<()> {
                 "wrote {sync_csv} ({} rounds, policy {})",
                 result.recorder.sync_events.len(),
                 result.recorder.sync_policy()
+            );
+        }
+    }
+    // Fault runs: the per-round participation log (who made each round,
+    // who was dropped, how long the barrier waited).
+    if !result.recorder.fault_events.is_empty() {
+        let faults_csv = format!("{}/faults_{tag}.csv", cfg.out_dir);
+        result.recorder.write_faults_csv(&faults_csv)?;
+        if !quiet {
+            let waited: f64 =
+                result.recorder.fault_events.iter().map(|e| e.wait_s).sum();
+            println!(
+                "wrote {faults_csv} ({} rounds, straggler wait {waited:.2}s)",
+                result.recorder.fault_events.len()
             );
         }
     }

@@ -3,4 +3,4 @@
 
 pub mod recorder;
 
-pub use recorder::{EvalPoint, StepPoint, TrainRecorder};
+pub use recorder::{EvalPoint, FaultEvent, StepPoint, TrainRecorder};

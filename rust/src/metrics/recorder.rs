@@ -62,6 +62,31 @@ pub struct SyncEvent {
     pub virtual_s: f64,
 }
 
+/// One executed synchronization round's participation accounting under an
+/// active `[faults]` scenario (DESIGN.md §5): who was alive, who made the
+/// round, who was dropped as a straggler, and how long the barrier waited
+/// beyond the lockstep-nominal phase time. One row per round; exported as
+/// `faults_<tag>.csv` and pinned bitwise-reproducible by
+/// `rust/tests/integration_faults.rs`.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultEvent {
+    /// Global iteration the round ran at.
+    pub step: u64,
+    /// Workers still alive when the round started.
+    pub alive: u64,
+    /// Workers whose states made the average.
+    pub participants: u64,
+    /// Workers excluded from the average: straggler drops at partial
+    /// rounds; for fully-synchronous rounds, crashes discovered during
+    /// the round itself.
+    pub dropped: u64,
+    /// Barrier wait beyond the nominal phase time, virtual seconds
+    /// (charged to [`crate::sim::Charge::Straggler`]).
+    pub wait_s: f64,
+    /// Virtual-clock time after the round, seconds.
+    pub virtual_s: f64,
+}
+
 /// Accumulates metrics over a run.
 pub struct TrainRecorder {
     steps_per_epoch: u64,
@@ -74,6 +99,9 @@ pub struct TrainRecorder {
     pub evals: Vec<EvalPoint>,
     /// Executed sync rounds: the realized-H trajectory + trigger reasons.
     pub sync_events: Vec<SyncEvent>,
+    /// Per-round participation accounting (empty unless a `[faults]`
+    /// scenario is active — one entry per executed sync round then).
+    pub fault_events: Vec<FaultEvent>,
     samples_processed: u64,
     comm_bytes: u64,
     syncs: u64,
@@ -98,6 +126,7 @@ impl TrainRecorder {
             steps: Vec::new(),
             evals: Vec::new(),
             sync_events: Vec::new(),
+            fault_events: Vec::new(),
             samples_processed: 0,
             comm_bytes: 0,
             syncs: 0,
@@ -180,6 +209,27 @@ impl TrainRecorder {
         self.sync_events.iter().map(|e| e.gap).collect()
     }
 
+    /// Record one executed round's participation accounting (fault runs
+    /// only — one event per sync round, DESIGN.md §5).
+    pub fn fault_event(
+        &mut self,
+        step: u64,
+        alive: u64,
+        participants: u64,
+        dropped: u64,
+        wait_s: f64,
+        virtual_s: f64,
+    ) {
+        self.fault_events.push(FaultEvent {
+            step,
+            alive,
+            participants,
+            dropped,
+            wait_s,
+            virtual_s,
+        });
+    }
+
     /// Record a held-out evaluation.
     pub fn eval(&mut self, step: u64, loss: f64, ppl: Option<f64>, virtual_s: f64) {
         self.evals.push(EvalPoint {
@@ -248,6 +298,27 @@ impl TrainRecorder {
                 e.gap.to_string(),
                 e.reason.to_string(),
                 e.bytes.to_string(),
+                format!("{:.3}", e.virtual_s),
+            ])?;
+        }
+        w.flush()
+    }
+
+    /// Write the per-round participation log (`faults_<tag>.csv`) — the
+    /// fault scenario's observable trace. Deterministic: the same config
+    /// seed reproduces the identical file byte-for-byte.
+    pub fn write_faults_csv(&self, path: &str) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["step", "alive", "participants", "dropped", "wait_s", "virtual_s"],
+        )?;
+        for e in &self.fault_events {
+            w.row(&[
+                e.step.to_string(),
+                e.alive.to_string(),
+                e.participants.to_string(),
+                e.dropped.to_string(),
+                format!("{:.6}", e.wait_s),
                 format!("{:.3}", e.virtual_s),
             ])?;
         }
@@ -339,6 +410,26 @@ mod tests {
         assert_eq!(s.lines().count(), 3);
         assert!(s.lines().next().unwrap().contains("gap"));
         assert!(s.contains("h_max") && s.contains("2048"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_events_accumulate_and_roundtrip_csv() {
+        let dir = std::env::temp_dir().join("adaalter_faults_csv_test");
+        let p = dir.join("faults.csv");
+        let mut r = TrainRecorder::new(10);
+        assert!(r.fault_events.is_empty());
+        r.fault_event(4, 8, 7, 1, 0.551250, 1.5);
+        r.fault_event(8, 8, 8, 0, 0.0, 3.0);
+        assert_eq!(r.fault_events.len(), 2);
+        assert_eq!(r.fault_events[0].dropped, 1);
+        // Events don't touch the traffic accounting.
+        assert_eq!(r.comm(), (0, 0));
+        r.write_faults_csv(p.to_str().unwrap()).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.lines().next().unwrap().contains("participants"));
+        assert!(s.contains("0.551250"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -18,6 +18,10 @@ pub enum Charge {
     DataLoad,
     /// Synchronization (PS push/pull or all-reduce).
     Communication,
+    /// Barrier time spent waiting for slow / stalled workers beyond the
+    /// lockstep-nominal iteration cost — the fault model's visible penalty
+    /// (DESIGN.md §5; zero unless a `[faults]` scenario is active).
+    Straggler,
     /// Anything else (checkpointing, eval…).
     Other,
 }

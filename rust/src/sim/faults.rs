@@ -1,0 +1,276 @@
+//! Deterministic fault & straggler scenarios (DESIGN.md §5).
+//!
+//! The paper's §2 premise is that the synchronous barrier "blocks the
+//! global update until all the workers respond" — so the dominant
+//! production failure class is a worker that is *slow, stalled, or dead*.
+//! This module makes that class runnable: a [`FaultPlan`] is a seeded,
+//! per-worker schedule of
+//!
+//! * **permanent slowdowns** — worker `w`'s modeled compute time is
+//!   multiplied by a factor ≥ 1 on every iteration;
+//! * **transient stalls** — with probability `p` per `(worker, step)`,
+//!   worker `w` loses a fixed number of virtual seconds at step `t`;
+//! * **permanent crashes** — worker `w` executes steps `t < crash_step`
+//!   and is dead from `crash_step` on (the worker thread answers further
+//!   step commands with a tombstone reply instead of a gradient).
+//!
+//! Everything is a pure function of `(config seed, worker, step)` — the
+//! same keying discipline the gradient streams use — so a scenario
+//! replays bit-for-bit across runs and worker-thread interleavings, and
+//! the whole scenario space is property-testable. An empty plan disables
+//! every fault code path in the trainer, which then stays bitwise
+//! identical to the fault-free leader loop.
+//!
+//! Plans are normally built from the `[faults]` config section
+//! ([`FaultPlan::from_config`]); tests and benches can also compose them
+//! programmatically with the builder methods.
+
+use crate::config::ExperimentConfig;
+use crate::util::rng::Rng;
+
+/// Domain-separation tag for the stall stream (keeps fault randomness
+/// independent of the gradient/data streams derived from the same seed).
+const STALL_TAG: u64 = 0x00FA_0175;
+
+/// A deterministic per-worker fault schedule (see module docs).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Experiment seed the stall stream derives from.
+    seed: u64,
+    /// Per-worker permanent compute-time multiplier (1.0 = nominal).
+    slow: Vec<f64>,
+    /// Per-(worker, step) transient-stall probability.
+    stall_prob: f64,
+    /// Virtual seconds one stall costs.
+    stall_dur_s: f64,
+    /// Per-worker crash step (the worker executes steps `t < crash`).
+    crash: Vec<Option<u64>>,
+}
+
+impl FaultPlan {
+    /// The empty (fault-free) plan for `n` workers.
+    pub fn none(n: usize) -> Self {
+        FaultPlan {
+            seed: 0,
+            slow: vec![1.0; n],
+            stall_prob: 0.0,
+            stall_dur_s: 0.0,
+            crash: vec![None; n],
+        }
+    }
+
+    /// Build the plan the `[faults]` config section describes: the
+    /// `faults.slow_workers` *highest* worker ids are permanently slowed
+    /// by `faults.slow_factor` (worker 0 stays fast — it is also the eval
+    /// worker), stalls are seeded from `train.seed`, and
+    /// `faults.crash_worker` dies at `faults.crash_step`.
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        let n = cfg.train.workers;
+        let f = &cfg.faults;
+        let mut plan = FaultPlan::none(n);
+        plan.seed = cfg.train.seed;
+        for w in n.saturating_sub(f.slow_workers)..n {
+            plan.slow[w] = f.slow_factor;
+        }
+        if f.stall_prob > 0.0 {
+            plan.stall_prob = f.stall_prob;
+            plan.stall_dur_s = f.stall_s;
+        }
+        if f.crash_worker >= 0 && (f.crash_worker as usize) < n {
+            plan.crash[f.crash_worker as usize] = Some(f.crash_step);
+        }
+        plan
+    }
+
+    /// Number of workers the plan covers.
+    pub fn n(&self) -> usize {
+        self.slow.len()
+    }
+
+    /// True when the plan schedules no fault at all — the trainer then
+    /// takes the exact fault-free code paths.
+    pub fn is_empty(&self) -> bool {
+        self.slow.iter().all(|&f| f == 1.0)
+            && self.stall_prob == 0.0
+            && self.crash.iter().all(Option::is_none)
+    }
+
+    /// Builder: re-seed the stall stream.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Builder: permanently slow worker `w` by `factor` (≥ 1).
+    pub fn with_slow(mut self, w: usize, factor: f64) -> Self {
+        assert!(factor >= 1.0 && factor.is_finite(), "slow factor must be >= 1");
+        self.slow[w] = factor;
+        self
+    }
+
+    /// Builder: crash worker `w` at step `step` (≥ 1; the worker executes
+    /// steps `t < step`).
+    pub fn with_crash(mut self, w: usize, step: u64) -> Self {
+        assert!(step >= 1, "crash step is 1-based");
+        self.crash[w] = Some(step);
+        self
+    }
+
+    /// Builder: transient stalls of `dur_s` virtual seconds with
+    /// per-(worker, step) probability `prob`.
+    pub fn with_stalls(mut self, prob: f64, dur_s: f64) -> Self {
+        assert!((0.0..1.0).contains(&prob), "stall probability in [0, 1)");
+        assert!(dur_s >= 0.0 && dur_s.is_finite(), "stall duration >= 0");
+        self.stall_prob = prob;
+        self.stall_dur_s = dur_s;
+        self
+    }
+
+    /// Worker `w`'s permanent compute-time multiplier.
+    pub fn slow_factor(&self, w: usize) -> f64 {
+        self.slow[w]
+    }
+
+    /// Worker `w`'s crash step, if it ever crashes.
+    pub fn crash_step(&self, w: usize) -> Option<u64> {
+        self.crash[w]
+    }
+
+    /// Is worker `w` still alive at iteration `t` (1-based)?
+    pub fn alive(&self, w: usize, t: u64) -> bool {
+        self.crash[w].map_or(true, |c| t < c)
+    }
+
+    /// The stall worker `w` suffers at step `t`, in virtual seconds — a
+    /// pure function of `(seed, worker, step)`, so identical across runs
+    /// and thread interleavings.
+    pub fn stall_s(&self, w: usize, t: u64) -> f64 {
+        if self.stall_prob <= 0.0 {
+            return 0.0;
+        }
+        let mut rng = Rng::derive(self.seed, &[STALL_TAG, w as u64, t]);
+        if rng.bernoulli(self.stall_prob) {
+            self.stall_dur_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Worker `w`'s modeled wall time for iteration `t`, given the
+    /// lockstep-nominal compute cost `base_s`:
+    /// `base · slow_factor(w) + stall(w, t)`.
+    pub fn step_time_s(&self, w: usize, t: u64, base_s: f64) -> f64 {
+        base_s * self.slow[w] + self.stall_s(w, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::util::prop;
+
+    #[test]
+    fn empty_plan_is_empty_and_free() {
+        let p = FaultPlan::none(4);
+        assert!(p.is_empty());
+        assert_eq!(p.n(), 4);
+        for w in 0..4 {
+            assert_eq!(p.slow_factor(w), 1.0);
+            assert_eq!(p.crash_step(w), None);
+            for t in 1..50 {
+                assert!(p.alive(w, t));
+                assert_eq!(p.stall_s(w, t), 0.0);
+                assert_eq!(p.step_time_s(w, t, 0.25), 0.25);
+            }
+        }
+    }
+
+    #[test]
+    fn from_config_slows_highest_ids_and_crashes_the_named_worker() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.workers = 4;
+        cfg.faults.slow_workers = 2;
+        cfg.faults.slow_factor = 4.0;
+        cfg.faults.crash_worker = 1;
+        cfg.faults.crash_step = 7;
+        let p = FaultPlan::from_config(&cfg);
+        assert!(!p.is_empty());
+        assert_eq!(p.slow_factor(0), 1.0);
+        assert_eq!(p.slow_factor(1), 1.0);
+        assert_eq!(p.slow_factor(2), 4.0);
+        assert_eq!(p.slow_factor(3), 4.0);
+        assert_eq!(p.crash_step(1), Some(7));
+        assert!(p.alive(1, 6));
+        assert!(!p.alive(1, 7));
+        assert!(!p.alive(1, 700));
+        assert_eq!(p.step_time_s(3, 1, 0.2), 0.8);
+    }
+
+    #[test]
+    fn default_config_yields_empty_plan() {
+        let p = FaultPlan::from_config(&ExperimentConfig::default());
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn stalls_are_deterministic_and_roughly_calibrated() {
+        let p = FaultPlan::none(2).with_seed(42).with_stalls(0.25, 0.05);
+        let q = FaultPlan::none(2).with_seed(42).with_stalls(0.25, 0.05);
+        let mut hits = 0u64;
+        let total = 4000u64;
+        for t in 1..=total {
+            let a = p.stall_s(1, t);
+            assert_eq!(a, q.stall_s(1, t), "stall stream not deterministic at t={t}");
+            assert!(a == 0.0 || a == 0.05);
+            if a > 0.0 {
+                hits += 1;
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        assert!((frac - 0.25).abs() < 0.05, "stall fraction {frac}");
+        // Different seed ⇒ different stream (astronomically likely).
+        let r = FaultPlan::none(2).with_seed(43).with_stalls(0.25, 0.05);
+        let diverges = (1..=200u64).any(|t| r.stall_s(1, t) != p.stall_s(1, t));
+        assert!(diverges, "seed must matter");
+        // Worker id separates streams too.
+        let diverges = (1..=200u64).any(|t| p.stall_s(0, t) != p.stall_s(1, t));
+        assert!(diverges, "worker id must matter");
+    }
+
+    #[test]
+    fn properties_step_time_and_liveness() {
+        prop::check("fault plan invariants", 200, |g| {
+            let n = g.usize_in(1..8);
+            let mut plan = FaultPlan::none(n).with_seed(g.u64_in(0..1 << 20));
+            let w = g.usize_in(0..n);
+            let factor = g.f64_in(1.0..8.0);
+            plan = plan.with_slow(w, factor);
+            if g.bool() {
+                plan = plan.with_stalls(g.f64_in(0.0..0.9), g.f64_in(0.0..0.2));
+            }
+            let crash = g.u64_in(1..100);
+            plan = plan.with_crash(w, crash);
+            let base = g.f64_in(0.01..1.0);
+            for t in 1..=64u64 {
+                let tw = plan.step_time_s(w, t, base);
+                prop::assert_that(
+                    tw >= base * factor - 1e-12,
+                    format!("step time {tw} below slowed base"),
+                )?;
+                // Once dead, dead forever.
+                if !plan.alive(w, t) {
+                    prop::assert_that(!plan.alive(w, t + 1), "resurrection")?;
+                }
+            }
+            prop::assert_that(!plan.alive(w, crash), "alive at crash step")?;
+            prop::assert_that(crash == 1 || plan.alive(w, crash - 1), "dead too early")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "slow factor")]
+    fn builder_rejects_speedups() {
+        let _ = FaultPlan::none(2).with_slow(0, 0.5);
+    }
+}

@@ -1,13 +1,16 @@
 //! Cluster simulation: virtual clock, paper-calibrated V100 cost model,
-//! analytic epoch/throughput model (Fig. 1/2), and the synthetic non-IID
+//! analytic epoch/throughput model (Fig. 1/2), deterministic fault &
+//! straggler scenarios (DESIGN.md §5), and the synthetic non-IID
 //! optimization workload for the rust-native backend.
 
 pub mod calib;
 pub mod clock;
 pub mod epoch_model;
+pub mod faults;
 pub mod synthetic;
 
 pub use calib::Calibration;
 pub use clock::{Charge, VirtualClock};
 pub use epoch_model::{EpochModel, IterCost, SimAlgo};
+pub use faults::FaultPlan;
 pub use synthetic::{SyntheticBackend, SyntheticProblem};

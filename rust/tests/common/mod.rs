@@ -1,0 +1,121 @@
+//! Shared test support for the `rust/tests/integration_*.rs` suites:
+//! config builders for the synthetic and PJRT backends, factories, tiny
+//! run drivers, temp dirs, and the bitwise trace-comparison assert the
+//! transport/fault equivalence pins use.
+//!
+//! Each integration test is its own crate, so this module is included per
+//! test file via `mod common;` — unused helpers in any one test binary
+//! are expected.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::{BackendFactory, RunResult, Trainer};
+use adaalter::sim::SyntheticProblem;
+
+/// Synthetic-backend experiment config with explicit problem size:
+/// `workers` workers of `algo` for `steps` steps at sync period `h`
+/// (forced to 1 for fully-synchronous algorithms), `rust_math` problem
+/// dimension `dim`, warm-up `warmup`.
+pub fn cfg_dim(
+    algo: Algorithm,
+    h: SyncPeriod,
+    workers: usize,
+    steps: u64,
+    dim: usize,
+    warmup: u64,
+) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.train.workers = workers;
+    c.train.steps = steps;
+    c.train.sync_period = if algo.is_local() { h } else { SyncPeriod::Every(1) };
+    c.train.backend = Backend::RustMath;
+    c.train.rust_math_dim = dim;
+    c.optim.algorithm = algo;
+    c.optim.warmup_steps = warmup;
+    c
+}
+
+/// The small fast shape most integration suites use: dimension 64,
+/// warm-up 10, every step logged (so loss traces can be compared).
+pub fn cfg(algo: Algorithm, h: SyncPeriod, workers: usize, steps: u64) -> ExperimentConfig {
+    let mut c = cfg_dim(algo, h, workers, steps, 64, 10);
+    c.train.log_every = 1;
+    c
+}
+
+/// The artifact preset every PJRT integration test runs against — shared
+/// so the trainer config and directly-constructed engines cannot drift.
+pub const LM_PRESET: &str = "tiny";
+
+/// PJRT language-model config (needs `make artifacts`): preset
+/// [`LM_PRESET`], η = 0.5, warm-up 10, 2 eval batches.
+pub fn lm_cfg(algo: Algorithm, h: SyncPeriod, workers: usize, steps: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.train.preset = LM_PRESET.into();
+    c.train.backend = Backend::Pjrt;
+    c.train.workers = workers;
+    c.train.steps = steps;
+    c.train.sync_period = if algo.is_local() { h } else { SyncPeriod::Every(1) };
+    c.optim.algorithm = algo;
+    c.optim.warmup_steps = 10;
+    c.optim.eta = 0.5;
+    c.train.log_every = 10;
+    c.data.eval_batches = 2;
+    c
+}
+
+/// Per-worker synthetic backends for `c` (non-IID least-squares problem
+/// keyed by the config's dimension / worker count / seed).
+pub fn factory(c: &ExperimentConfig) -> BackendFactory {
+    let p = SyntheticProblem::new(c.train.rust_math_dim, c.train.workers, c.train.seed);
+    Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>))
+}
+
+/// Train `c` on the synthetic backend; panics on error.
+pub fn run(c: ExperimentConfig) -> RunResult {
+    try_run(c).expect("training failed")
+}
+
+/// Train `c` on the synthetic backend, surfacing the error.
+pub fn try_run(c: ExperimentConfig) -> adaalter::Result<RunResult> {
+    let f = factory(&c);
+    Trainer::new(c, f).run()
+}
+
+/// Fresh per-process temp directory for artifacts/checkpoints.
+pub fn tmpdir(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("adaalter_it_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d.to_str().unwrap().to_string()
+}
+
+/// The bitwise run-equivalence pin: identical final parameters, identical
+/// loss-trace bits step for step, identical final-eval bits.
+pub fn assert_bitwise_eq(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.final_x, b.final_x, "{what}: final x diverged");
+    assert_eq!(
+        a.recorder.steps.len(),
+        b.recorder.steps.len(),
+        "{what}: trace lengths differ"
+    );
+    for (pa, pb) in a.recorder.steps.iter().zip(&b.recorder.steps) {
+        assert_eq!(pa.step, pb.step, "{what}: step ids diverged");
+        assert_eq!(
+            pa.train_loss.to_bits(),
+            pb.train_loss.to_bits(),
+            "{what}: loss trace diverged at step {}",
+            pa.step
+        );
+    }
+    match (&a.final_eval, &b.final_eval) {
+        (Some(ea), Some(eb)) => assert_eq!(
+            ea.loss.to_bits(),
+            eb.loss.to_bits(),
+            "{what}: final eval diverged"
+        ),
+        (None, None) => {}
+        _ => panic!("{what}: final-eval presence differs"),
+    }
+}

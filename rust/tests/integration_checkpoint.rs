@@ -2,36 +2,19 @@
 //! bitwise-equal to an uninterrupted one (training is deterministic, so any
 //! divergence is a state-capture bug).
 
-use std::sync::Arc;
+mod common;
 
-use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
-use adaalter::coordinator::{BackendFactory, Checkpoint, Trainer};
-use adaalter::sim::SyntheticProblem;
+use adaalter::config::{Algorithm, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::{Checkpoint, Trainer};
+
+use common::{factory, tmpdir};
 
 fn cfg(algo: Algorithm, h: SyncPeriod, steps: u64, ckpt_every: u64, dir: &str) -> ExperimentConfig {
-    let mut c = ExperimentConfig::default();
-    c.train.workers = 4;
-    c.train.steps = steps;
-    c.train.sync_period = if algo.is_local() { h } else { SyncPeriod::Every(1) };
-    c.train.backend = Backend::RustMath;
-    c.train.rust_math_dim = 128;
+    let mut c = common::cfg_dim(algo, h, 4, steps, 128, 10);
     c.train.checkpoint_every = ckpt_every;
     c.train.checkpoint_path = format!("{dir}/ck.bin");
-    c.optim.algorithm = algo;
-    c.optim.warmup_steps = 10;
     c.out_dir = dir.to_string();
     c
-}
-
-fn factory(c: &ExperimentConfig) -> BackendFactory {
-    let p = SyntheticProblem::new(c.train.rust_math_dim, c.train.workers, c.train.seed);
-    Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>))
-}
-
-fn tmpdir(tag: &str) -> String {
-    let d = std::env::temp_dir().join(format!("adaalter_ckint_{}_{tag}", std::process::id()));
-    std::fs::create_dir_all(&d).unwrap();
-    d.to_str().unwrap().to_string()
 }
 
 fn resume_equals_straight(algo: Algorithm, h: SyncPeriod, mid: u64, total: u64) {

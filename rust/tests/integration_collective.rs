@@ -11,35 +11,14 @@
 //! * Compressed transports (QSGD / top-k) run end-to-end, report *exact*
 //!   wire bytes, and are selected purely via `ExperimentConfig`.
 
-use std::sync::Arc;
+mod common;
 
 use adaalter::comm::{NetModel, QsgdQuantizer};
-use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
-use adaalter::coordinator::{BackendFactory, Checkpoint, SyncScheduler, Trainer};
+use adaalter::config::{Algorithm, SyncPeriod};
+use adaalter::coordinator::{Checkpoint, SyncScheduler, Trainer};
 use adaalter::sim::SyntheticProblem;
 
-fn cfg(algo: Algorithm, h: SyncPeriod, workers: usize, steps: u64) -> ExperimentConfig {
-    let mut c = ExperimentConfig::default();
-    c.train.workers = workers;
-    c.train.steps = steps;
-    c.train.sync_period = if algo.is_local() { h } else { SyncPeriod::Every(1) };
-    c.train.backend = Backend::RustMath;
-    c.train.rust_math_dim = 64;
-    c.train.log_every = 1;
-    c.optim.algorithm = algo;
-    c.optim.warmup_steps = 10;
-    c
-}
-
-fn factory(c: &ExperimentConfig) -> BackendFactory {
-    let p = SyntheticProblem::new(c.train.rust_math_dim, c.train.workers, c.train.seed);
-    Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>))
-}
-
-fn run(c: ExperimentConfig) -> adaalter::coordinator::RunResult {
-    let f = factory(&c);
-    Trainer::new(c, f).run().expect("training failed")
-}
+use common::{assert_bitwise_eq, cfg, factory, run};
 
 /// The ISSUE's equivalence criterion: the in-process ChannelCollective
 /// reproduces the (simulated-default) trainer bitwise — same final x and
@@ -56,25 +35,7 @@ fn channel_collective_is_bitwise_identical_to_simulated() {
         chan_cfg.comm.transport = "channel".into();
         let a = run(sim_cfg);
         let b = run(chan_cfg);
-        assert_eq!(a.final_x, b.final_x, "{algo}: final x diverged across transports");
-        assert_eq!(
-            a.recorder.steps.len(),
-            b.recorder.steps.len(),
-            "{algo}: trace lengths differ"
-        );
-        for (pa, pb) in a.recorder.steps.iter().zip(&b.recorder.steps) {
-            assert_eq!(pa.step, pb.step);
-            assert_eq!(
-                pa.train_loss.to_bits(),
-                pb.train_loss.to_bits(),
-                "{algo}: loss trace diverged at step {}",
-                pa.step
-            );
-        }
-        assert_eq!(
-            a.final_eval.unwrap().loss.to_bits(),
-            b.final_eval.unwrap().loss.to_bits()
-        );
+        assert_bitwise_eq(&a, &b, &format!("{algo} across transports"));
         // What differs is the accounting: channel models zero cost.
         assert!(a.recorder.comm().1 > 0);
         assert_eq!(b.recorder.comm().1, 0);

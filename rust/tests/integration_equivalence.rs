@@ -2,33 +2,19 @@
 //! exercised through the full threaded trainer (leader + workers +
 //! channels), on the synthetic backend.
 
+mod common;
+
 use std::sync::Arc;
 
-use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::config::{Algorithm, ExperimentConfig, SyncPeriod};
 use adaalter::coordinator::{BackendFactory, Trainer};
 use adaalter::sim::SyntheticProblem;
 use adaalter::util::math;
 
+use common::run;
+
 fn cfg(algo: Algorithm, h: SyncPeriod, workers: usize, steps: u64) -> ExperimentConfig {
-    let mut c = ExperimentConfig::default();
-    c.train.workers = workers;
-    c.train.steps = steps;
-    c.train.sync_period = if algo.is_local() { h } else { SyncPeriod::Every(1) };
-    c.train.backend = Backend::RustMath;
-    c.train.rust_math_dim = 512;
-    c.optim.algorithm = algo;
-    c.optim.warmup_steps = 25;
-    c
-}
-
-fn factory(c: &ExperimentConfig) -> BackendFactory {
-    let p = SyntheticProblem::new(c.train.rust_math_dim, c.train.workers, c.train.seed);
-    Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>))
-}
-
-fn run(c: ExperimentConfig) -> adaalter::coordinator::RunResult {
-    let f = factory(&c);
-    Trainer::new(c, f).run().expect("training failed")
+    common::cfg_dim(algo, h, workers, steps, 512, 25)
 }
 
 /// Paper §4.3: with H=1, Algorithm 4 must coincide with Algorithm 3 —

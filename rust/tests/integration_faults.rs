@@ -1,0 +1,365 @@
+//! Integration: the deterministic fault & straggler scenario engine with
+//! partial-participation sync rounds (DESIGN.md §5), through the full
+//! threaded trainer on the synthetic backend.
+//!
+//! * With `[faults]` absent (or explicitly zeroed) the trainer takes the
+//!   exact fault-free code paths — pinned bitwise against the default run.
+//! * A quorum round with a crashed worker still converges; stragglers are
+//!   dropped deterministically; the same seed reproduces the identical
+//!   `faults_<tag>.csv` byte for byte.
+//! * Property tests: random fault plans never deadlock the lockstep
+//!   protocol (every round terminates, rounds == recorded participation
+//!   events), and quorum averaging conserves the survivors' mean exactly.
+
+mod common;
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use adaalter::comm::{ChannelCollective, Collective, Participation, PartialCollective};
+use adaalter::config::{Algorithm, ExperimentConfig, SyncPeriod, TomlDoc};
+use adaalter::coordinator::worker::{worker_loop, Cmd, Reply, WorkerSpec};
+use adaalter::coordinator::Trainer;
+use adaalter::sim::{Charge, FaultPlan, SyntheticProblem};
+use adaalter::util::{math, prop};
+
+use common::{assert_bitwise_eq, cfg, factory, run, tmpdir, try_run};
+
+/// The H=4 local-AdaAlter shape with one 4×-slow worker and quorum sync.
+fn quorum_cfg(workers: usize, steps: u64, quorum: usize) -> ExperimentConfig {
+    let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), workers, steps);
+    c.train.fused = false;
+    c.faults.slow_workers = 1;
+    c.faults.slow_factor = 4.0;
+    c.faults.quorum = quorum;
+    c
+}
+
+/// An explicitly-zeroed `[faults]` section parses to the inactive scenario
+/// and an empty plan — the config-surface half of the "absent section ≡
+/// seed trainer" guarantee.
+#[test]
+fn zeroed_faults_section_is_inactive() {
+    let doc = TomlDoc::parse(
+        "[faults]\nslow_workers = 0\nstall_prob = 0.0\ncrash_worker = -1\n\
+         quorum = 0\ndrop_slowest = 0\n",
+    )
+    .unwrap();
+    let c = ExperimentConfig::from_doc(&doc).unwrap();
+    assert!(!c.faults.is_active());
+    assert!(FaultPlan::from_config(&c).is_empty());
+}
+
+/// Engaging the partial engine with a quorum equal to the worker count is
+/// a full barrier in disguise: the training data (final x, loss trace,
+/// eval) must be bitwise identical to the default fault-free run — the
+/// participation layer decides *who*, never *what*.
+#[test]
+fn quorum_of_all_workers_is_data_identical_to_default() {
+    let base = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 4, 48);
+    let mut q = base.clone();
+    q.train.fused = false; // no-op on rust_math; required by validation
+    q.faults.quorum = 4;
+    let a = run(base);
+    let b = run(q);
+    assert_bitwise_eq(&a, &b, "quorum==workers vs default");
+    // The fault run additionally logs one participation event per round,
+    // with everyone participating and zero barrier wait.
+    assert!(a.recorder.fault_events.is_empty());
+    assert_eq!(b.recorder.fault_events.len() as u64, b.recorder.comm().0);
+    assert!(b
+        .recorder
+        .fault_events
+        .iter()
+        .all(|e| e.participants == 4 && e.dropped == 0 && e.wait_s == 0.0));
+    assert_eq!(b.clock.total(Charge::Straggler), 0.0);
+}
+
+/// Quorum rounds with one crashed worker: the cluster keeps training on
+/// the survivors and still makes real progress.
+#[test]
+fn quorum_round_with_crashed_worker_still_converges() {
+    let mut c = quorum_cfg(4, 400, 2);
+    c.faults.slow_workers = 0; // crash only
+    c.faults.crash_worker = 3;
+    c.faults.crash_step = 50;
+    let problem = SyntheticProblem::new(c.train.rust_math_dim, c.train.workers, c.train.seed);
+    use adaalter::coordinator::WorkerBackend as _;
+    let opt_loss = problem.global_loss(&problem.optimum());
+    let init_sub =
+        problem.global_loss(&problem.backend(0).init_params().unwrap()) - opt_loss;
+
+    let r = run(c);
+    let final_sub = r.final_eval.unwrap().loss - opt_loss;
+    assert!(final_sub.is_finite());
+    assert!(
+        final_sub < init_sub * 0.2,
+        "crashed-quorum run failed to learn: suboptimality {final_sub} vs initial {init_sub}"
+    );
+    let events = &r.recorder.fault_events;
+    assert_eq!(events.len() as u64, r.recorder.comm().0);
+    assert!(events.iter().take(12).all(|e| e.alive == 4), "pre-crash rounds");
+    assert!(events.iter().skip(13).all(|e| e.alive == 3), "post-crash rounds");
+    // Every round closed with at least the quorum.
+    assert!(events.iter().all(|e| e.participants >= 2));
+}
+
+/// The acceptance pin: the same seed replays the identical scenario —
+/// final parameters bitwise, realized-H trajectory, and the
+/// `faults_<tag>.csv` participation log byte for byte — and worker-thread
+/// interleavings cannot perturb it (every run spawns fresh threads).
+#[test]
+fn fault_plan_replay_is_bitwise_reproducible() {
+    let make = || {
+        let mut c = quorum_cfg(4, 80, 3);
+        c.faults.stall_prob = 0.2;
+        c.faults.stall_s = 0.05;
+        c
+    };
+    let dir = tmpdir("faults_replay");
+    let a = run(make());
+    let b = run(make());
+    assert_bitwise_eq(&a, &b, "fault replay");
+    assert_eq!(a.recorder.realized_h(), b.recorder.realized_h());
+    assert_eq!(a.recorder.fault_events.len(), b.recorder.fault_events.len());
+    let pa = format!("{dir}/faults_a.csv");
+    let pb = format!("{dir}/faults_b.csv");
+    a.recorder.write_faults_csv(&pa).unwrap();
+    b.recorder.write_faults_csv(&pb).unwrap();
+    let ca = std::fs::read(&pa).unwrap();
+    let cb = std::fs::read(&pb).unwrap();
+    assert!(!ca.is_empty());
+    assert_eq!(ca, cb, "faults CSV not byte-identical across replays");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Backup-worker (drop-slowest-k) rounds: the permanently slow worker is
+/// the dropped one every round, and the barrier never waits for it.
+#[test]
+fn backup_worker_policy_drops_the_slow_worker() {
+    let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 4, 60);
+    c.train.fused = false;
+    c.faults.slow_workers = 1;
+    c.faults.slow_factor = 4.0;
+    c.faults.drop_slowest = 1;
+    let r = run(c);
+    assert_eq!(r.clock.total(Charge::Straggler), 0.0);
+    let events = &r.recorder.fault_events;
+    assert_eq!(events.len() as u64, r.recorder.comm().0);
+    assert!(events.iter().all(|e| e.participants == 3 && e.dropped == 1));
+    assert!(r.recorder.transport().starts_with("partial(drop1"));
+    assert!(r.final_eval.unwrap().loss.is_finite());
+}
+
+/// Worker-side fault injection, exercised directly against the worker
+/// loop: the thread executes steps before its crash step, then answers
+/// every further command with the tombstone instead of blocking.
+#[test]
+fn worker_loop_injects_the_crash_tombstone() {
+    let d = 16;
+    let p = SyntheticProblem::new(d, 1, 7);
+    use adaalter::coordinator::WorkerBackend as _;
+    let init = Arc::new(p.backend(0).init_params().unwrap());
+    let spec = WorkerSpec {
+        worker: 0,
+        algorithm: Algorithm::LocalAdaAlter,
+        epsilon: 1.0,
+        b0: 1.0,
+        init,
+        allow_fused: false,
+        collect_update_sq: false,
+        crash_step: Some(3),
+    };
+    let factory: adaalter::coordinator::BackendFactory =
+        Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>));
+    let (cmd_tx, cmd_rx) = channel::<Cmd>();
+    let (reply_tx, reply_rx) = channel::<Reply>();
+    let join = std::thread::spawn(move || worker_loop(spec, factory, cmd_rx, reply_tx));
+
+    assert!(matches!(reply_rx.recv().unwrap(), Reply::Ready { worker: 0 }));
+    for t in 1..=2u64 {
+        cmd_tx.send(Cmd::LocalStep { t, lr: 0.1 }).unwrap();
+        match reply_rx.recv().unwrap() {
+            Reply::StepDone { worker: 0, loss, .. } => assert!(loss.is_finite()),
+            other => panic!("expected StepDone at t={t}, got {}", reply_kind(&other)),
+        }
+    }
+    // t = 3: the schedule kills the worker; it must reply Crashed, and
+    // keep replying Crashed to later commands rather than deadlocking.
+    cmd_tx.send(Cmd::LocalStep { t: 3, lr: 0.1 }).unwrap();
+    assert!(matches!(reply_rx.recv().unwrap(), Reply::Crashed { worker: 0, step: 3 }));
+    cmd_tx.send(Cmd::CollectState).unwrap();
+    assert!(matches!(reply_rx.recv().unwrap(), Reply::Crashed { worker: 0, .. }));
+    cmd_tx.send(Cmd::Stop).unwrap();
+    join.join().unwrap();
+}
+
+fn reply_kind(r: &Reply) -> &'static str {
+    match r {
+        Reply::Grad { .. } => "Grad",
+        Reply::StepDone { .. } => "StepDone",
+        Reply::State { .. } => "State",
+        Reply::Eval { .. } => "Eval",
+        Reply::Ready { .. } => "Ready",
+        Reply::Crashed { .. } => "Crashed",
+        Reply::Err { .. } => "Err",
+    }
+}
+
+/// Random fault plans never deadlock the lockstep protocol: every run
+/// terminates (cleanly or with a typed error), every executed round is
+/// recorded as exactly one participation event, and parameters stay
+/// finite.
+#[test]
+fn random_fault_plans_never_deadlock() {
+    prop::check("fault plans terminate", 20, |g| {
+        let workers = g.usize_in(2..5);
+        let steps = g.u64_in(16..48);
+        let h = *g.choose(&[1u64, 2, 4]);
+        let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), workers, steps);
+        c.train.seed = g.u64_in(0..1 << 16);
+        c.train.fused = false;
+        if g.bool() {
+            c.faults.slow_workers = g.usize_in(1..workers + 1);
+            c.faults.slow_factor = g.f64_in(1.0..6.0);
+        }
+        if g.bool() {
+            c.faults.stall_prob = g.f64_in(0.0..0.5);
+            c.faults.stall_s = g.f64_in(0.001..0.1);
+        }
+        if g.bool() {
+            c.faults.crash_worker = g.usize_in(0..workers) as i64;
+            c.faults.crash_step = g.u64_in(1..steps + 1);
+        }
+        // Participation policy: full barrier, quorum, or backup worker —
+        // quorum chosen to stay reachable even after the crash.
+        match g.usize_in(0..3) {
+            1 => c.faults.quorum = g.usize_in(1..workers),
+            2 => c.faults.drop_slowest = 1.min(workers - 1),
+            _ => {}
+        }
+        if !c.faults.is_active() {
+            c.faults.slow_workers = 1; // keep the fault engine engaged
+        }
+        let r = try_run(c).map_err(|e| format!("run failed: {e}"))?;
+        prop::assert_that(
+            r.recorder.fault_events.len() as u64 == r.recorder.comm().0,
+            format!(
+                "{} participation events for {} rounds",
+                r.recorder.fault_events.len(),
+                r.recorder.comm().0
+            ),
+        )?;
+        prop::assert_that(
+            r.final_x.iter().all(|v| v.is_finite()),
+            "non-finite parameters",
+        )?;
+        prop::assert_that(
+            r.recorder.fault_events.iter().all(|e| e.participants + e.dropped == e.alive),
+            "participants + dropped != alive",
+        )
+    });
+}
+
+/// Quorum averaging over the k surviving workers conserves their mean
+/// exactly: the partial round's output is bit-identical to running the
+/// plain lockstep mean over just the participants.
+#[test]
+fn quorum_averaging_conserves_the_survivor_mean_exactly() {
+    prop::check("quorum mean conservation", 100, |g| {
+        let n = g.usize_in(2..7);
+        let d = g.usize_in(1..33);
+        let policy = if g.bool() {
+            Participation {
+                quorum: g.usize_in(1..n + 1),
+                timeout_s: g.f64_in(0.0..2.0),
+                drop_slowest: 0,
+            }
+        } else {
+            Participation { quorum: 0, timeout_s: 0.0, drop_slowest: g.usize_in(1..n) }
+        };
+        let mut pc =
+            PartialCollective::new(Box::new(ChannelCollective::new(n, d)), policy);
+        let xs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(d..d + 1, -8.0..8.0)).collect();
+        let arrivals: Vec<f64> = (0..n).map(|_| g.f64_in(0.0..10.0)).collect();
+        let xr: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut avg = vec![0.0f32; d];
+        let out = pc
+            .sync_round_partial(&xr, None, &arrivals, &mut avg, None)
+            .map_err(|e| format!("partial round failed: {e}"))?;
+        prop::assert_that(!out.participants.is_empty(), "no participants")?;
+        prop::assert_that(
+            out.participants.len() + out.dropped.len() == n,
+            "selection does not partition the workers",
+        )?;
+        let survivors: Vec<&[f32]> =
+            out.participants.iter().map(|&i| xs[i].as_slice()).collect();
+        let mut want = vec![0.0f32; d];
+        math::mean_into(&survivors, &mut want);
+        prop::assert_that(avg == want, "survivor mean not conserved bitwise")?;
+        // Selection is deterministic: replay the same arrivals.
+        let (p2, d2, close2) = policy.select(&arrivals).map_err(|e| e.to_string())?;
+        prop::assert_that(
+            p2 == out.participants && d2 == out.dropped && close2 == out.close_s,
+            "selection not deterministic",
+        )
+    });
+}
+
+/// Negative paths through the TOML surface: invalid `[faults]`/`[sync]`/
+/// `[comm]` combinations come back as field-named config errors before
+/// any thread spawns.
+#[test]
+fn invalid_fault_configs_error_before_running() {
+    // quorum exceeding the cluster, via TOML.
+    let doc = TomlDoc::parse(
+        "[train]\nworkers = 4\nfused = false\n[faults]\nquorum = 5\n",
+    )
+    .unwrap();
+    let err = ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
+    assert!(err.contains("faults.quorum"), "{err}");
+
+    // crash + checkpointing (the "crash with checkpoint resume" class).
+    let doc = TomlDoc::parse(
+        "[train]\ncheckpoint_every = 4\n[faults]\ncrash_worker = 1\ncrash_step = 3\n",
+    )
+    .unwrap();
+    let err = ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
+    assert!(err.contains("checkpoint_every"), "{err}");
+
+    // quorum over the fused device path.
+    let doc = TomlDoc::parse("[faults]\nquorum = 2\n").unwrap();
+    let err = ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
+    assert!(err.contains("train.fused"), "{err}");
+
+    // And the programmatic mirror: a Trainer fed a resume checkpoint
+    // under an active scenario refuses up front.
+    let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 2, 8);
+    c.faults.slow_workers = 1;
+    let d = c.train.rust_math_dim;
+    let f = factory(&c);
+    let mut t = Trainer::new(c, f);
+    t.resume = Some(adaalter::coordinator::Checkpoint {
+        step: 4,
+        algorithm: Algorithm::LocalAdaAlter,
+        vectors: vec![vec![0.0; d], vec![1.0; d], vec![1.0; d]],
+    });
+    let err = t.run().err().expect("must fail").to_string();
+    assert!(err.contains("[faults]"), "{err}");
+}
+
+/// A quorum made unreachable by a crash (programmatic plan, so config
+/// validation cannot catch it) fails with a typed protocol error — not a
+/// deadlock, not a panic.
+#[test]
+fn unreachable_quorum_errors_cleanly() {
+    let mut c = quorum_cfg(3, 40, 3);
+    c.faults.slow_workers = 0;
+    let f = factory(&c);
+    let mut t = Trainer::new(c, f);
+    // The config (quorum == workers) validates; the injected plan then
+    // kills a worker, leaving only 2 alive for a quorum of 3.
+    t.fault_plan = Some(FaultPlan::none(3).with_crash(1, 5));
+    let err = t.run().err().expect("must fail").to_string();
+    assert!(err.contains("unreachable"), "{err}");
+}

@@ -4,9 +4,11 @@
 //! All tests self-skip when `artifacts/` has not been built
 //! (`make artifacts`), so a fresh checkout still runs `cargo test`.
 
+mod common;
+
 use std::sync::Arc;
 
-use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::config::{Algorithm, ExperimentConfig, SyncPeriod};
 use adaalter::coordinator::factory::make_factory;
 use adaalter::coordinator::{Trainer, WorkerBackend};
 use adaalter::optim::{AdaAlter, SyncOptimizer};
@@ -15,25 +17,14 @@ use adaalter::util::math;
 use adaalter::util::rng::Rng;
 
 const ARTIFACTS: &str = "artifacts";
-const PRESET: &str = "tiny";
+const PRESET: &str = common::LM_PRESET;
 
 fn have_artifacts() -> bool {
     artifacts_available(ARTIFACTS)
 }
 
 fn lm_config(algo: Algorithm, h: SyncPeriod, workers: usize, steps: u64) -> ExperimentConfig {
-    let mut c = ExperimentConfig::default();
-    c.train.preset = PRESET.into();
-    c.train.backend = Backend::Pjrt;
-    c.train.workers = workers;
-    c.train.steps = steps;
-    c.train.sync_period = if algo.is_local() { h } else { SyncPeriod::Every(1) };
-    c.optim.algorithm = algo;
-    c.optim.warmup_steps = 10;
-    c.optim.eta = 0.5;
-    c.train.log_every = 10;
-    c.data.eval_batches = 2;
-    c
+    common::lm_cfg(algo, h, workers, steps)
 }
 
 /// The HLO optimizer kernel (Pallas adaalter lowered through XLA) must

@@ -10,34 +10,17 @@
 //! * Every policy's recorded comm rounds equal the trainer's actual sync
 //!   count (the sync-event log), and adaptive runs stay deterministic.
 
-use std::sync::Arc;
+mod common;
 
 use adaalter::comm::NetModel;
-use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
-use adaalter::coordinator::{BackendFactory, SyncScheduler, Trainer};
-use adaalter::sim::{Calibration, Charge, SyntheticProblem};
+use adaalter::config::{Algorithm, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::SyncScheduler;
+use adaalter::sim::{Calibration, Charge};
+
+use common::run;
 
 fn cfg(h: u64, workers: usize, steps: u64) -> ExperimentConfig {
-    let mut c = ExperimentConfig::default();
-    c.train.workers = workers;
-    c.train.steps = steps;
-    c.train.sync_period = SyncPeriod::Every(h);
-    c.train.backend = Backend::RustMath;
-    c.train.rust_math_dim = 64;
-    c.train.log_every = 1;
-    c.optim.algorithm = Algorithm::LocalAdaAlter;
-    c.optim.warmup_steps = 10;
-    c
-}
-
-fn factory(c: &ExperimentConfig) -> BackendFactory {
-    let p = SyntheticProblem::new(c.train.rust_math_dim, c.train.workers, c.train.seed);
-    Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>))
-}
-
-fn run(c: ExperimentConfig) -> adaalter::coordinator::RunResult {
-    let f = factory(&c);
-    Trainer::new(c, f).run().expect("training failed")
+    common::cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), workers, steps)
 }
 
 /// The acceptance pin: with `[sync] policy = "fixed"` (the default), the
