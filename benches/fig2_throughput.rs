@@ -1,10 +1,12 @@
 //! Bench: regenerate **Figure 2** — throughput (samples/second) vs number
-//! of workers, plus the §6.4 scaling observation.
+//! of workers, plus the §6.4 scaling observation. Machine-readable rows
+//! land in `BENCH_fig2_throughput.json`.
 //!
 //! Run: `cargo bench --bench fig2_throughput`
 
 use adaalter::config::SyncPeriod::{Every, Infinite};
 use adaalter::sim::{EpochModel, SimAlgo};
+use adaalter::util::timing::BenchSink;
 
 fn main() {
     let m = EpochModel::paper();
@@ -19,6 +21,7 @@ fn main() {
         SimAlgo::LocalAdaAlter(Infinite),
         SimAlgo::IdealComputeOnly,
     ];
+    let mut sink = BenchSink::new("fig2_throughput");
 
     println!("=== Figure 2: throughput (samples/s) vs #workers ===\n");
     println!("{:<34} {:>9} {:>9} {:>9} {:>9}", "algorithm", "n=1", "n=2", "n=4", "n=8");
@@ -26,6 +29,12 @@ fn main() {
         let row: Vec<String> =
             ns.iter().map(|&n| format!("{:>9.0}", m.throughput(*a, n))).collect();
         println!("{:<34} {}", a.label(), row.join(" "));
+        let metrics: Vec<(String, f64)> = ns
+            .iter()
+            .map(|&n| (format!("samples_per_s_n{n}"), m.throughput(*a, n)))
+            .collect();
+        let refs: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        sink.value(&a.label(), &refs);
     }
 
     println!("\n=== shape checks ===");
@@ -56,6 +65,9 @@ fn main() {
     }
     let r = m.throughput(SimAlgo::IdealComputeOnly, 8) / m.throughput(SimAlgo::IdealComputeOnly, 4);
     println!("{:<34} 4→8 worker speedup ×{r:.2} (=2: ideal) {}", "Ideal computation-only", ok((r - 2.0).abs() < 1e-9));
+    sink.value("scaling_4_to_8", &[("ideal_speedup", r)]);
+
+    sink.finish();
 }
 
 fn ok(b: bool) -> &'static str {

@@ -1,16 +1,21 @@
 //! Bench: L3 hot paths — the coordinator-side loops that bound throughput,
-//! plus the PJRT dispatch costs. The before/after numbers in
-//! EXPERIMENTS.md §Perf come from this harness.
+//! the shared kernels, the execution engine's worker-step scaling, and the
+//! PJRT dispatch costs. The before/after numbers in EXPERIMENTS.md §Perf
+//! come from this harness; the machine-readable trajectory lands in
+//! `BENCH_micro_hot_paths.json` (DESIGN.md §6).
 //!
 //! Run: `cargo bench --bench micro_hot_paths`
 //! Knob: ADAALTER_BENCH_DIM (default 1,048,576 — a 4 MiB vector, ~1M-param
 //! model; the paper's 0.83B-param state is 800× this, same loops).
 
+use adaalter::comm::compress::{QsgdEncoded, QsgdQuantizer, SparseGrad, TopKSparsifier};
 use adaalter::coordinator::aggregate::{average_into, Aggregator};
+use adaalter::coordinator::Executor;
 use adaalter::data::BatchLoader;
 use adaalter::optim::{AdaAlter, AdaGrad, LocalAdaAlterWorker, SyncOptimizer};
+use adaalter::util::kernels;
 use adaalter::util::rng::Rng;
-use adaalter::util::timing::{bench, black_box, report};
+use adaalter::util::timing::{bench, black_box, report, BenchSink};
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -25,6 +30,8 @@ fn randn(d: usize, seed: u64, sigma: f32) -> Vec<f32> {
 fn main() {
     let d: usize = env_or("ADAALTER_BENCH_DIM", 1 << 20);
     let n_workers = 8usize;
+    let mut sink = BenchSink::new("micro_hot_paths");
+    sink.value("config", &[("dim", d as f64), ("workers", n_workers as f64)]);
     println!("=== L3 hot paths (d = {d}, {n_workers} workers) ===\n");
 
     // --- optimizer steps -------------------------------------------------
@@ -39,7 +46,9 @@ fn main() {
             black_box(x[0]);
         });
         // streams: read g, gsq, rw b2, rw x = 6 vectors of 4d bytes
-        report("adagrad_step (fused accumulate+update)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(24 * d as u64)));
+        let bytes = 24 * d as u64;
+        report("adagrad_step (fused accumulate+update)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(bytes)));
+        sink.timed("adagrad_step", &s, &[("bytes_per_iter", bytes as f64), ("gb_per_s", s.bandwidth_gbs(bytes))]);
     }
     {
         let mut x = randn(d, 3, 1.0);
@@ -48,7 +57,9 @@ fn main() {
             opt.step(&mut x, &g, &gsq, 0.1);
             black_box(x[0]);
         });
-        report("adaalter_step (fused update+accumulate)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(24 * d as u64)));
+        let bytes = 24 * d as u64;
+        report("adaalter_step (fused update+accumulate)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(bytes)));
+        sink.timed("adaalter_step", &s, &[("bytes_per_iter", bytes as f64), ("gb_per_s", s.bandwidth_gbs(bytes))]);
     }
     {
         let mut w = LocalAdaAlterWorker::new(randn(d, 4, 1.0), 1.0, 1.0);
@@ -56,7 +67,58 @@ fn main() {
             w.local_step(&g, 0.1);
             black_box(w.x()[0]);
         });
-        report("local_adaalter_step (placeholder denom)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(20 * d as u64)));
+        let bytes = 20 * d as u64;
+        report("local_adaalter_step (placeholder denom)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(bytes)));
+        sink.timed("local_adaalter_step", &s, &[("bytes_per_iter", bytes as f64), ("gb_per_s", s.bandwidth_gbs(bytes))]);
+    }
+
+    // --- execution engine: parallel worker steps -------------------------
+    // The tentpole measurement (ISSUE 5): throughput of one cluster-wide
+    // local iteration (8 independent worker steps) under the serial
+    // engine vs scoped thread pools. Bitwise-identical by construction
+    // (pinned in rust/tests/integration_exec.rs); the only thing that may
+    // change is wall-clock.
+    {
+        println!("\n--- execution engine: {n_workers}-worker local steps ---");
+        let grads: Vec<Vec<f32>> = (0..n_workers).map(|i| randn(d, 40 + i as u64, 0.5)).collect();
+        let mut serial_ns = 0.0f64;
+        let mut threads8_ns = 0.0f64;
+        for (label, ex) in [
+            ("serial", Executor::serial()),
+            ("threads(2)", Executor::threads(2)),
+            ("threads(4)", Executor::threads(4)),
+            ("threads(8)", Executor::threads(8)),
+        ] {
+            let mut workers: Vec<LocalAdaAlterWorker> = (0..n_workers)
+                .map(|i| LocalAdaAlterWorker::new(randn(d, 50 + i as u64, 1.0), 1.0, 1.0))
+                .collect();
+            let s = bench(2, 8, || {
+                ex.for_each(&mut workers, |w, st| {
+                    st.local_step(&grads[w], 0.1);
+                    black_box(st.x()[0]);
+                });
+            });
+            let steps_s = n_workers as f64 * s.per_second();
+            if label == "serial" {
+                serial_ns = s.median_ns;
+            }
+            if label == "threads(8)" {
+                threads8_ns = s.median_ns;
+            }
+            report(
+                &format!("engine {label} ({n_workers}x local step)"),
+                &s,
+                &format!("{steps_s:.0} worker-steps/s"),
+            );
+            sink.timed(
+                &format!("engine_{label}"),
+                &s,
+                &[("worker_steps_per_s", steps_s)],
+            );
+        }
+        let speedup = serial_ns / threads8_ns;
+        println!("engine threads(8) vs serial: {speedup:.2}x worker-step throughput");
+        sink.value("engine_speedup", &[("threads8_vs_serial", speedup)]);
     }
 
     // --- aggregation -----------------------------------------------------
@@ -68,7 +130,9 @@ fn main() {
             agg.mean_grads(&refs);
             black_box(agg.avg_g[0]);
         });
-        report("mean_grads (8-way)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(4 * (n_workers + 1) as u64 * d as u64)));
+        let bytes = 4 * (n_workers + 1) as u64 * d as u64;
+        report("mean_grads (8-way)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(bytes)));
+        sink.timed("mean_grads", &s, &[("bytes_per_iter", bytes as f64), ("gb_per_s", s.bandwidth_gbs(bytes))]);
     }
     {
         let mut agg = Aggregator::new(d);
@@ -76,7 +140,9 @@ fn main() {
             agg.mean_grads_and_squares(&refs);
             black_box(agg.avg_gsq[0]);
         });
-        report("mean_grads_and_squares (8-way, 1 pass)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(4 * (n_workers + 2) as u64 * d as u64)));
+        let bytes = 4 * (n_workers + 2) as u64 * d as u64;
+        report("mean_grads_and_squares (8-way, 1 pass)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(bytes)));
+        sink.timed("mean_grads_and_squares", &s, &[("bytes_per_iter", bytes as f64), ("gb_per_s", s.bandwidth_gbs(bytes))]);
     }
     {
         let mut out = vec![0.0f32; d];
@@ -84,7 +150,49 @@ fn main() {
             average_into(&refs, &mut out);
             black_box(out[0]);
         });
-        report("average_into (sync round, 8-way)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(4 * (n_workers + 1) as u64 * d as u64)));
+        let bytes = 4 * (n_workers + 1) as u64 * d as u64;
+        report("average_into (sync round, 8-way)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(bytes)));
+        sink.timed("average_into", &s, &[("bytes_per_iter", bytes as f64), ("gb_per_s", s.bandwidth_gbs(bytes))]);
+    }
+
+    // --- compression codecs (scratch-buffer hot paths) -------------------
+    {
+        let q = QsgdQuantizer::new(15);
+        let mut rng = Rng::new(9);
+        let mut enc = QsgdEncoded { norm: 0.0, levels: Vec::new(), s: 15 };
+        let mut out = vec![0.0f32; d];
+        let s = bench(2, 10, || {
+            q.encode_to(&g, &mut rng, &mut enc);
+            q.decode(&enc, &mut out);
+            black_box(out[0]);
+        });
+        let wire = q.wire_bytes(d);
+        report("qsgd roundtrip s=15 (pooled scratch)", &s, &format!("{wire} wire B"));
+        sink.timed("qsgd_roundtrip", &s, &[("wire_bytes", wire as f64)]);
+    }
+    {
+        let mut sp = TopKSparsifier::new(d, 0.01);
+        let mut msg = SparseGrad { d, idx: Vec::new(), val: Vec::new() };
+        let s = bench(2, 10, || {
+            sp.encode_into(&g, &mut msg);
+            black_box(msg.idx.len());
+        });
+        let wire = msg.wire_bytes();
+        report("topk encode 1% (pooled scratch)", &s, &format!("{wire} wire B"));
+        sink.timed("topk_encode", &s, &[("wire_bytes", wire as f64)]);
+    }
+    {
+        let base = randn(d, 21, 1.0);
+        let mut delta = vec![0.0f32; d];
+        let mut back = vec![0.0f32; d];
+        let s = bench(4, 10, || {
+            kernels::delta_encode(&g, &base, &mut delta);
+            kernels::delta_decode(&base, &delta, &mut back);
+            black_box(back[0]);
+        });
+        let bytes = 6 * 4 * d as u64;
+        report("delta encode+decode (sync-round coding)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(bytes)));
+        sink.timed("delta_roundtrip", &s, &[("bytes_per_iter", bytes as f64), ("gb_per_s", s.bandwidth_gbs(bytes))]);
     }
 
     // --- data pipeline ---------------------------------------------------
@@ -95,7 +203,9 @@ fn main() {
             step += 1;
             black_box(loader.train_batch((step % 8) as usize, step));
         });
-        report("train_batch (4×65 tokens, zipf+markov)", &s, &format!("{:.2} Mtok/s", 260.0 * s.per_second() / 1e6));
+        let mtok = 260.0 * s.per_second() / 1e6;
+        report("train_batch (4×65 tokens, zipf+markov)", &s, &format!("{mtok:.2} Mtok/s"));
+        sink.timed("train_batch", &s, &[("mtok_per_s", mtok)]);
     }
 
     // --- PJRT dispatch ---------------------------------------------------
@@ -112,6 +222,7 @@ fn main() {
             black_box(b.loss_and_grad(&x, step, &mut grad).unwrap());
         });
         report("pjrt train_step (tiny fwd+bwd, B=4 S=32)", &s, &format!("{:.1} ms", s.median_ns / 1e6));
+        sink.timed("pjrt_train_step", &s, &[]);
 
         let mut xf = x.clone();
         let b2 = vec![1.0f32; dm];
@@ -124,7 +235,10 @@ fn main() {
             );
         });
         report("pjrt fused local step (fwd+bwd+update)", &s, &format!("{:.1} ms", s.median_ns / 1e6));
+        sink.timed("pjrt_fused_local_step", &s, &[]);
     } else {
         println!("(artifacts/ not built — skipping PJRT dispatch benches)");
     }
+
+    sink.finish();
 }

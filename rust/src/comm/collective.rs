@@ -30,13 +30,13 @@
 //! experiment TOML ([`crate::config::CommConfig`],
 //! [`crate::config::FaultsConfig`]) → [`build_collective`].
 
-use crate::comm::compress::{QsgdQuantizer, TopKSparsifier};
+use crate::comm::compress::{QsgdEncoded, QsgdQuantizer, SparseGrad, TopKSparsifier};
 use crate::comm::netmodel::{NetModel, Topology};
 use crate::config::ExperimentConfig;
 use crate::error::{Error, Result};
 use crate::sim::Calibration;
-use crate::util::math;
 use crate::util::rng::Rng;
+use crate::util::{kernels, math};
 
 /// What one collective op cost — and what it observed while running.
 ///
@@ -560,28 +560,30 @@ impl Collective for SimulatedCollective {
 
 /// Per-stream compressor. Top-k carries error-feedback residuals, which
 /// are per-(worker, vector-kind) state — every logical stream gets its own
-/// sparsifier so residual mass never leaks across streams.
+/// sparsifier so residual mass never leaks across streams. Both codecs
+/// keep a reused message scratch so steady-state roundtrips never touch
+/// the allocator (DESIGN.md §6).
 enum Codec {
-    Qsgd { q: QsgdQuantizer, rng: Rng },
-    TopK { keep: f64, streams: Vec<Option<TopKSparsifier>> },
+    Qsgd { q: QsgdQuantizer, rng: Rng, enc: QsgdEncoded },
+    TopK { keep: f64, streams: Vec<Option<TopKSparsifier>>, msg: SparseGrad },
 }
 
 impl Codec {
     /// Encode → count exact wire bytes → decode back into `v` in place.
     fn roundtrip(&mut self, stream: usize, v: &mut [f32]) -> u64 {
         match self {
-            Codec::Qsgd { q, rng } => {
-                let enc = q.encode(v, rng);
-                q.decode(&enc, v);
+            Codec::Qsgd { q, rng, enc } => {
+                q.encode_to(v, rng, enc);
+                q.decode(enc, v);
                 q.wire_bytes(v.len())
             }
-            Codec::TopK { keep, streams } => {
+            Codec::TopK { keep, streams, msg } => {
                 if stream >= streams.len() {
                     streams.resize_with(stream + 1, || None);
                 }
                 let sp = streams[stream]
                     .get_or_insert_with(|| TopKSparsifier::new(v.len(), *keep));
-                let msg = sp.encode(v);
+                sp.encode_into(v, msg);
                 v.fill(0.0);
                 for (&i, &val) in msg.idx.iter().zip(&msg.val) {
                     v[i as usize] = val;
@@ -623,6 +625,31 @@ pub struct CompressedCollective {
     base_x: Vec<f32>,
     /// Last synchronized denominators.
     base_acc: Vec<f32>,
+    /// Pooled per-worker delta/staging buffers, reused every round so the
+    /// steady-state sync round never allocates (DESIGN.md §6).
+    delta_bufs: Vec<Vec<f32>>,
+    /// Pooled mean-delta buffer for the down leg.
+    mean_buf: Vec<f32>,
+}
+
+// Stream-id layout: one error-feedback stream per (worker, purpose), so
+// residual mass never leaks between the gradient path, the two sync-round
+// vector families, and standalone allreduces. Free functions of the
+// cluster size `n` so `compressed_average` can hold disjoint field
+// borrows while computing stream ids.
+fn up_stream(n: usize, family: StreamFamily, w: usize) -> usize {
+    match family {
+        StreamFamily::SyncX => n + w,
+        StreamFamily::SyncAcc => 2 * n + w,
+        StreamFamily::Raw => 3 * n + 2 + w,
+    }
+}
+fn down_stream(n: usize, family: StreamFamily) -> usize {
+    match family {
+        StreamFamily::SyncX => 3 * n,
+        StreamFamily::SyncAcc => 3 * n + 1,
+        StreamFamily::Raw => 4 * n + 2,
+    }
 }
 
 impl CompressedCollective {
@@ -634,10 +661,13 @@ impl CompressedCollective {
             codec: Codec::Qsgd {
                 q: QsgdQuantizer::new(s),
                 rng: Rng::derive(seed, &[0xC0DE]),
+                enc: QsgdEncoded { norm: 0.0, levels: Vec::new(), s },
             },
             net,
             base_x: vec![0.0; d],
             base_acc: vec![0.0; d],
+            delta_bufs: Vec::new(),
+            mean_buf: Vec::new(),
         }
     }
 
@@ -646,50 +676,45 @@ impl CompressedCollective {
         let d = inner.d();
         CompressedCollective {
             inner,
-            codec: Codec::TopK { keep, streams: Vec::new() },
+            codec: Codec::TopK {
+                keep,
+                streams: Vec::new(),
+                msg: SparseGrad { d, idx: Vec::new(), val: Vec::new() },
+            },
             net,
             base_x: vec![0.0; d],
             base_acc: vec![0.0; d],
+            delta_bufs: Vec::new(),
+            mean_buf: Vec::new(),
         }
     }
 
-    // Stream-id layout: one error-feedback stream per (worker, purpose),
-    // so residual mass never leaks between the gradient path, the two
-    // sync-round vector families, and standalone allreduces.
+    /// The gradient path's per-worker stream id.
     fn grad_stream(&self, w: usize) -> usize {
         w
-    }
-    fn up_stream(&self, family: StreamFamily, w: usize) -> usize {
-        let n = self.inner.n();
-        match family {
-            StreamFamily::SyncX => n + w,
-            StreamFamily::SyncAcc => 2 * n + w,
-            StreamFamily::Raw => 3 * n + 2 + w,
-        }
-    }
-    fn down_stream(&self, family: StreamFamily) -> usize {
-        let n = self.inner.n();
-        match family {
-            StreamFamily::SyncX => 3 * n,
-            StreamFamily::SyncAcc => 3 * n + 1,
-            StreamFamily::Raw => 4 * n + 2,
-        }
     }
 
     /// Compress one up/down vector family: per-worker payloads (deltas
     /// against the family's base for the sync families, raw values for
-    /// `Raw`), lockstep mean, down-compressed average written into `out`;
-    /// returns the exact wire bytes billed.
+    /// `Raw`) staged in the pooled buffers, lockstep mean (the same
+    /// cache-blocked kernel the plain channel mean runs),
+    /// down-compressed average written into `out`; returns the exact wire
+    /// bytes billed. Steady state performs zero heap allocations: the
+    /// staging, mean and codec scratch buffers are all reused.
     fn compressed_average(
         &mut self,
         sources: &[&[f32]],
         family: StreamFamily,
         out: &mut [f32],
     ) -> Result<u64> {
-        let n = self.inner.n();
-        let d = self.inner.d();
+        let CompressedCollective { inner, codec, base_x, base_acc, delta_bufs, mean_buf, .. } =
+            self;
+        let n = inner.n();
+        let d = inner.d();
         let mut bytes = 0u64;
-        let mut decoded: Vec<Vec<f32>> = Vec::with_capacity(sources.len());
+        if delta_bufs.len() < sources.len() {
+            delta_bufs.resize_with(sources.len(), Vec::new);
+        }
         for (w, src) in sources.iter().enumerate() {
             if src.len() != d {
                 return Err(Error::Protocol(format!(
@@ -697,44 +722,34 @@ impl CompressedCollective {
                     src.len()
                 )));
             }
-            let mut delta: Vec<f32> = match family {
-                StreamFamily::SyncX => {
-                    src.iter().zip(&self.base_x).map(|(&v, &b)| v - b).collect()
-                }
-                StreamFamily::SyncAcc => {
-                    src.iter().zip(&self.base_acc).map(|(&v, &b)| v - b).collect()
-                }
-                StreamFamily::Raw => src.to_vec(),
-            };
-            let stream = self.up_stream(family, w);
-            bytes += self.codec.roundtrip(stream, &mut delta);
-            decoded.push(delta);
+            let buf = &mut delta_bufs[w];
+            buf.resize(d, 0.0);
+            match family {
+                StreamFamily::SyncX => kernels::delta_encode(src, base_x, buf),
+                StreamFamily::SyncAcc => kernels::delta_encode(src, base_acc, buf),
+                StreamFamily::Raw => buf.copy_from_slice(src),
+            }
+            bytes += codec.roundtrip(up_stream(n, family, w), buf);
         }
-        let refs: Vec<&[f32]> = decoded.iter().map(|v| v.as_slice()).collect();
-        let mut mean_delta = vec![0.0f32; d];
-        self.inner.allreduce_mean(&refs, &mut mean_delta)?;
-        let down = self.down_stream(family);
-        bytes += n as u64 * self.codec.roundtrip(down, &mut mean_delta);
+        mean_buf.resize(d, 0.0);
+        kernels::mean_into(&delta_bufs[..sources.len()], mean_buf);
+        bytes += n as u64 * codec.roundtrip(down_stream(n, family), mean_buf);
         match family {
             StreamFamily::SyncX => {
-                for i in 0..d {
-                    out[i] = self.base_x[i] + mean_delta[i];
-                }
-                self.base_x.copy_from_slice(out);
+                kernels::delta_decode(base_x, mean_buf, out);
+                base_x.copy_from_slice(out);
             }
             StreamFamily::SyncAcc => {
                 // Clamp: the lossy roundtrip can push a denominator
                 // coordinate below zero; project back onto the feasible
                 // cone so sqrt(b² + t'·ε²) stays real.
-                for i in 0..d {
-                    out[i] = (self.base_acc[i] + mean_delta[i]).max(0.0);
-                }
-                self.base_acc.copy_from_slice(out);
+                kernels::delta_decode_clamped(base_acc, mean_buf, out);
+                base_acc.copy_from_slice(out);
             }
             StreamFamily::Raw => {
                 // Standalone allreduce: no delta base involved — the
                 // sync-round state (bases, sync streams) is untouched.
-                out.copy_from_slice(&mean_delta);
+                out.copy_from_slice(mean_buf);
             }
         }
         Ok(bytes)

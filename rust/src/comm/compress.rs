@@ -43,13 +43,24 @@ impl QsgdQuantizer {
     /// Encode: `levels[i] = sign(g_i) · ξ(|g_i|·s/‖g‖)` where ξ rounds up
     /// with probability equal to the fractional part (unbiasedness).
     ///
+    /// Allocating convenience wrapper over [`QsgdQuantizer::encode_to`]
+    /// (which hot paths call with a reused scratch message instead).
+    pub fn encode(&self, g: &[f32], rng: &mut Rng) -> QsgdEncoded {
+        let mut enc = QsgdEncoded { norm: 0.0, levels: Vec::new(), s: self.s };
+        self.encode_to(g, rng, &mut enc);
+        enc
+    }
+
+    /// [`QsgdQuantizer::encode`] into a caller-owned message, reusing its
+    /// `levels` buffer — the zero-allocation hot path (DESIGN.md §6).
+    ///
     /// Edge cases are handled explicitly so `decode(encode(g))` is finite
     /// for every all-finite input and degrades gracefully otherwise:
     /// non-finite coordinates encode to level 0 (dropped), the norm is
     /// computed over finite coordinates only and saturates at `f32::MAX`,
     /// and levels are clamped to `s` (fp roundoff can push `|g_i|/‖g‖`
     /// past 1, and `|decoded_i| ≤ ‖g‖` only holds under the clamp).
-    pub fn encode(&self, g: &[f32], rng: &mut Rng) -> QsgdEncoded {
+    pub fn encode_to(&self, g: &[f32], rng: &mut Rng, enc: &mut QsgdEncoded) {
         let norm64 = g
             .iter()
             .filter(|v| v.is_finite())
@@ -57,10 +68,13 @@ impl QsgdQuantizer {
             .sum::<f64>()
             .sqrt();
         let norm = (norm64 as f32).min(f32::MAX);
-        let mut levels = vec![0i8; g.len()];
+        enc.s = self.s;
+        enc.norm = norm;
+        enc.levels.clear();
+        enc.levels.resize(g.len(), 0);
         if norm > 0.0 {
             let s = self.s as f32;
-            for (l, &v) in levels.iter_mut().zip(g) {
+            for (l, &v) in enc.levels.iter_mut().zip(g) {
                 if !v.is_finite() {
                     continue;
                 }
@@ -71,7 +85,6 @@ impl QsgdQuantizer {
                 *l = if v.is_sign_negative() { -level } else { level };
             }
         }
-        QsgdEncoded { norm, levels, s: self.s }
     }
 
     /// Decode back to a dense vector. The product is taken in f64 and
@@ -107,6 +120,8 @@ pub struct TopKSparsifier {
     pub keep: f64,
     /// Error-feedback residual (dropped mass carried forward).
     residual: Vec<f32>,
+    /// Reused partial-select index scratch (no per-encode allocation).
+    order: Vec<u32>,
 }
 
 /// A sparse (index, value) gradient message.
@@ -140,33 +155,47 @@ impl TopKSparsifier {
     /// Keep the top `keep` fraction (e.g. 0.01) of coordinates by |value|.
     pub fn new(d: usize, keep: f64) -> Self {
         assert!((0.0..=1.0).contains(&keep) && keep > 0.0);
-        TopKSparsifier { keep, residual: vec![0.0; d] }
+        TopKSparsifier { keep, residual: vec![0.0; d], order: Vec::new() }
     }
 
     /// Encode `g + residual`, keep top-k, stash the rest back as residual.
+    /// Allocating convenience wrapper over
+    /// [`TopKSparsifier::encode_into`].
     pub fn encode(&mut self, g: &[f32]) -> SparseGrad {
+        let mut out = SparseGrad { d: self.residual.len(), idx: Vec::new(), val: Vec::new() };
+        self.encode_into(g, &mut out);
+        out
+    }
+
+    /// [`TopKSparsifier::encode`] into a caller-owned message, reusing its
+    /// `idx`/`val` buffers and this sparsifier's select scratch — the
+    /// zero-allocation hot path (DESIGN.md §6).
+    pub fn encode_into(&mut self, g: &[f32], out: &mut SparseGrad) {
         let d = self.residual.len();
         assert_eq!(g.len(), d);
+        let k = ((d as f64 * self.keep).ceil() as usize).clamp(1, d);
+        let residual = &mut self.residual;
         // accumulate into residual: r += g
-        for (r, &v) in self.residual.iter_mut().zip(g) {
+        for (r, &v) in residual.iter_mut().zip(g) {
             *r += v;
         }
-        let k = ((d as f64 * self.keep).ceil() as usize).clamp(1, d);
         // Partial select: indices of the k largest |residual|.
-        let mut order: Vec<u32> = (0..d as u32).collect();
+        let order = &mut self.order;
+        order.clear();
+        order.extend(0..d as u32);
         order.select_nth_unstable_by(k - 1, |&a, &b| {
-            self.residual[b as usize]
-                .abs()
-                .total_cmp(&self.residual[a as usize].abs())
+            residual[b as usize].abs().total_cmp(&residual[a as usize].abs())
         });
-        let mut idx: Vec<u32> = order[..k].to_vec();
-        idx.sort_unstable();
-        let val: Vec<f32> = idx.iter().map(|&i| self.residual[i as usize]).collect();
+        out.d = d;
+        out.idx.clear();
+        out.idx.extend_from_slice(&order[..k]);
+        out.idx.sort_unstable();
+        out.val.clear();
+        out.val.extend(out.idx.iter().map(|&i| residual[i as usize]));
         // Clear transmitted coordinates from the residual.
-        for &i in &idx {
-            self.residual[i as usize] = 0.0;
+        for &i in &out.idx {
+            residual[i as usize] = 0.0;
         }
-        SparseGrad { d, idx, val }
     }
 
     /// Current residual mass (diagnostics / tests).

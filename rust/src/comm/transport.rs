@@ -8,16 +8,39 @@
 //! types, so the trainer deals in protocol *intent* and the
 //! [`super::collective`] layer deals in data-plane cost; neither touches
 //! raw `mpsc` endpoints.
+//!
+//! Workers are addressed by id regardless of how they are *hosted*: each
+//! worker either owns a dedicated channel ([`ChannelTransport::from_parts`])
+//! or shares a host thread's channel with siblings, in which case the
+//! transport tags each command with the worker id
+//! ([`ChannelTransport::from_hosts`]; the execution engine of DESIGN.md §6
+//! multiplexes several workers onto one host thread this way).
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
 
+/// How commands reach one worker: a dedicated channel, or a host thread's
+/// shared channel (commands tagged with the worker id).
+enum Route<C> {
+    Direct(Sender<C>),
+    Shared(Sender<(usize, C)>),
+}
+
+impl<C> Route<C> {
+    fn send(&self, w: usize, cmd: C) -> std::result::Result<(), ()> {
+        match self {
+            Route::Direct(tx) => tx.send(cmd).map_err(|_| ()),
+            Route::Shared(tx) => tx.send((w, cmd)).map_err(|_| ()),
+        }
+    }
+}
+
 /// A lockstep request/reply transport over in-process channels: one command
-/// sender per worker thread, one shared reply receiver.
+/// route per worker, one shared reply receiver.
 pub struct ChannelTransport<C, R> {
-    txs: Vec<Sender<C>>,
+    routes: Vec<Route<C>>,
     rx: Receiver<R>,
     joins: Vec<JoinHandle<()>>,
 }
@@ -26,18 +49,39 @@ impl<C, R> ChannelTransport<C, R> {
     /// Assemble from already-spawned worker endpoints. `txs[i]` feeds
     /// worker `i`; every worker shares the sender side of `rx`.
     pub fn from_parts(txs: Vec<Sender<C>>, rx: Receiver<R>, joins: Vec<JoinHandle<()>>) -> Self {
-        ChannelTransport { txs, rx, joins }
+        ChannelTransport {
+            routes: txs.into_iter().map(Route::Direct).collect(),
+            rx,
+            joins,
+        }
+    }
+
+    /// Assemble from host-thread endpoints: `host_txs[i]` feeds worker `i`
+    /// and may be a clone of a sibling's sender when several workers share
+    /// one host thread; commands arrive on the host channel tagged
+    /// `(worker, cmd)`. `joins` holds one handle per host thread.
+    pub fn from_hosts(
+        host_txs: Vec<Sender<(usize, C)>>,
+        rx: Receiver<R>,
+        joins: Vec<JoinHandle<()>>,
+    ) -> Self {
+        ChannelTransport {
+            routes: host_txs.into_iter().map(Route::Shared).collect(),
+            rx,
+            joins,
+        }
     }
 
     /// Number of workers.
     pub fn n(&self) -> usize {
-        self.txs.len()
+        self.routes.len()
     }
 
     /// Send `make(w)` to every worker `w` (the control-plane broadcast).
-    pub fn broadcast(&self, make: impl Fn(usize) -> C) -> Result<()> {
-        for (w, tx) in self.txs.iter().enumerate() {
-            tx.send(make(w))
+    pub fn broadcast(&self, mut make: impl FnMut(usize) -> C) -> Result<()> {
+        for (w, route) in self.routes.iter().enumerate() {
+            route
+                .send(w, make(w))
                 .map_err(|_| Error::Protocol(format!("worker {w} channel closed")))?;
         }
         Ok(())
@@ -45,7 +89,7 @@ impl<C, R> ChannelTransport<C, R> {
 
     /// Send `make(w)` to each worker in `targets` — the fault-aware subset
     /// broadcast (crashed workers are simply never addressed; DESIGN.md §5).
-    pub fn broadcast_to(&self, targets: &[usize], make: impl Fn(usize) -> C) -> Result<()> {
+    pub fn broadcast_to(&self, targets: &[usize], mut make: impl FnMut(usize) -> C) -> Result<()> {
         for &w in targets {
             self.send_to(w, make(w))?;
         }
@@ -54,10 +98,10 @@ impl<C, R> ChannelTransport<C, R> {
 
     /// Send one command to a single worker.
     pub fn send_to(&self, w: usize, cmd: C) -> Result<()> {
-        self.txs
+        self.routes
             .get(w)
             .ok_or_else(|| Error::Protocol(format!("no worker {w}")))?
-            .send(cmd)
+            .send(w, cmd)
             .map_err(|_| Error::Protocol(format!("worker {w} channel closed")))
     }
 
@@ -124,11 +168,11 @@ impl<C, R> ChannelTransport<C, R> {
     /// Best-effort shutdown: send `stop(w)` to every worker and join the
     /// threads. Errors are swallowed — shutdown runs on all exit paths,
     /// including after a protocol error already tore channels down.
-    pub fn shutdown(&mut self, stop: impl Fn(usize) -> C) {
-        for (w, tx) in self.txs.iter().enumerate() {
-            let _ = tx.send(stop(w));
+    pub fn shutdown(&mut self, mut stop: impl FnMut(usize) -> C) {
+        for (w, route) in self.routes.iter().enumerate() {
+            let _ = route.send(w, stop(w));
         }
-        self.txs.clear();
+        self.routes.clear();
         for j in self.joins.drain(..) {
             let _ = j.join();
         }
@@ -218,6 +262,54 @@ mod tests {
         let t = ChannelTransport::from_parts(vec![tx0, tx1], reply_rx, Vec::new());
         let err = t.gather_from(&[0], |(w, v)| Ok((w, v))).unwrap_err();
         assert!(err.to_string().contains("unexpected"), "{err}");
+    }
+
+    #[test]
+    fn shared_host_routes_tag_the_worker() {
+        // Two host threads each multiplex two echo workers over one shared
+        // channel; commands arrive tagged (worker, value) and replies keep
+        // the worker id, so the gather slots them correctly.
+        let (n, hosts) = (4usize, 2usize);
+        let (reply_tx, reply_rx) = channel();
+        let mut unique_txs = Vec::new();
+        let mut joins = Vec::new();
+        for _ in 0..hosts {
+            let (tx, rx) = channel::<(usize, Option<u64>)>();
+            let rtx = reply_tx.clone();
+            let per_host = n / hosts;
+            joins.push(std::thread::spawn(move || {
+                let mut stops = 0;
+                while let Ok((w, cmd)) = rx.recv() {
+                    match cmd {
+                        Some(v) => {
+                            if rtx.send((w, v * 2)).is_err() {
+                                break;
+                            }
+                        }
+                        None => {
+                            stops += 1;
+                            if stops == per_host {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }));
+            unique_txs.push(tx);
+        }
+        drop(reply_tx);
+        let host_txs: Vec<_> = (0..n).map(|w| unique_txs[w % hosts].clone()).collect();
+        drop(unique_txs);
+        let mut t = ChannelTransport::from_hosts(host_txs, reply_rx, joins);
+        assert_eq!(t.n(), n);
+        t.broadcast(|w| Some(w as u64 + 1)).unwrap();
+        let replies = t.gather(|(w, v)| Ok((w, v))).unwrap();
+        assert_eq!(replies, vec![2, 4, 6, 8]);
+        // Subset addressing still works through shared routes.
+        t.broadcast_to(&[1, 3], |w| Some(w as u64)).unwrap();
+        let replies = t.gather_from(&[1, 3], |(w, v)| Ok((w, v))).unwrap();
+        assert_eq!(replies, vec![2, 6]);
+        t.shutdown(|_| None);
     }
 
     #[test]

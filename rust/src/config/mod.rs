@@ -8,7 +8,7 @@ pub mod toml;
 
 pub use presets::{load_preset, preset_doc, PRESETS};
 pub use schema::{
-    Algorithm, Backend, CommConfig, DataConfig, ExperimentConfig, FaultsConfig, NetConfig,
-    OptimConfig, SyncPeriod, TrainConfig,
+    Algorithm, Backend, CommConfig, DataConfig, ExecConfig, ExperimentConfig, FaultsConfig,
+    NetConfig, OptimConfig, SyncPeriod, TrainConfig,
 };
 pub use toml::{TomlDoc, TomlValue};

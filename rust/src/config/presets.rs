@@ -69,6 +69,24 @@
 //! The `straggler-quorum` preset below is the canonical example;
 //! `benches/straggler_recovery.rs` sweeps full-barrier vs. quorum vs.
 //! backup-worker sync under one slow worker of eight.
+//!
+//! # The `[exec]` section
+//!
+//! Every preset (and config file) may also pick the execution engine's
+//! thread layout (DESIGN.md §6) — a pure wall-clock knob, bitwise-
+//! identical across all values:
+//!
+//! ```toml
+//! [exec]
+//! parallelism = "threads"  # default; with threads = 0 (one host per
+//!                          # worker) this is the pre-engine thread shape
+//! # parallelism = "threads(8)"  # shorthand carrying the count
+//! # parallelism = "serial"      # one host thread, worker order
+//! threads = 0              # host threads for "threads" (0 = one/worker)
+//! ```
+//!
+//! The `parallel-hosts` preset below is the canonical example;
+//! `benches/micro_hot_paths.rs` measures the worker-step scaling.
 
 use crate::error::{Error, Result};
 
@@ -256,6 +274,23 @@ quorum = 7
 "#,
     },
     Preset {
+        name: "parallel-hosts",
+        summary: "Paper default on the threaded execution engine (8 workers over 4 host threads)",
+        toml: r#"
+[train]
+workers = 8
+sync_period = 4
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+[optim]
+algorithm = "local_adaalter"
+[exec]
+parallelism = "threads"
+threads = 4
+"#,
+    },
+    Preset {
         name: "noniid-stress",
         summary: "Fully non-IID shards (D_i disjoint), local AdaAlter H=8",
         toml: r#"
@@ -328,6 +363,19 @@ mod tests {
     fn noniid_preset_is_fully_disjoint() {
         let c = load_preset("noniid-stress").unwrap();
         assert_eq!(c.data.noniid, 1.0);
+    }
+
+    #[test]
+    fn exec_preset_selects_threaded_engine() {
+        let c = load_preset("parallel-hosts").unwrap();
+        assert_eq!(c.exec.parallelism, "threads");
+        assert_eq!(c.exec.threads, 4);
+        // Every other preset keeps the default layout (one host per
+        // worker — the pre-engine thread shape).
+        for p in PRESETS.iter().filter(|p| p.name != "parallel-hosts") {
+            let e = load_preset(p.name).unwrap().exec;
+            assert_eq!((e.parallelism.as_str(), e.threads), ("threads", 0), "{}", p.name);
+        }
     }
 
     #[test]

@@ -226,7 +226,7 @@ impl Default for TrainConfig {
     }
 }
 
-/// Data-pipeline parameters (synthetic corpus; DESIGN.md §8).
+/// Data-pipeline parameters (synthetic corpus; DESIGN.md §9).
 #[derive(Clone, Debug)]
 pub struct DataConfig {
     /// Zipf exponent of the unigram distribution.
@@ -456,6 +456,46 @@ impl SyncConfig {
     }
 }
 
+/// Execution-engine selection (DESIGN.md §6): how worker computation maps
+/// onto OS threads. Purely a wall-clock knob — every layout is
+/// bitwise-identical (worker streams are pure functions of
+/// `(seed, worker, step)` and all leader-side reductions are fixed-order),
+/// which `rust/tests/integration_exec.rs` pins.
+///
+/// * `parallelism = "threads"` — workers spread round-robin across
+///   `threads` host threads. The default, with `threads = 0` (one host
+///   thread per worker): exactly the thread shape every run had before
+///   the engine existed, so configs without an `[exec]` section keep
+///   both their results (bitwise) and their parallelism.
+/// * `parallelism = "threads(k)"` — shorthand carrying the count.
+/// * `parallelism = "serial"` — all workers hosted on one engine thread,
+///   stepping in worker order (the reference layout the equivalence
+///   tests compare against).
+#[derive(Clone, Debug)]
+pub struct ExecConfig {
+    /// "threads" (default), "threads(k)" or "serial".
+    pub parallelism: String,
+    /// Host-thread count for `parallelism = "threads"` (0 = one per
+    /// worker, the default).
+    pub threads: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig { parallelism: "threads".into(), threads: 0 }
+    }
+}
+
+impl ExecConfig {
+    /// The `[exec]` consistency rule — the spelling must resolve to a
+    /// thread layout. One copy shared by [`ExperimentConfig::validate`]
+    /// and the trainer (which re-resolves for programmatically-built
+    /// configs), mirroring the [`CommConfig::validate`] pattern.
+    pub fn validate(&self) -> Result<()> {
+        crate::coordinator::executor::Parallelism::from_config(self).map(|_| ())
+    }
+}
+
 /// Deterministic fault/straggler scenario + partial-participation policy
 /// (DESIGN.md §5). With the section absent (all defaults) every fault
 /// code path is disabled and the trainer is bitwise-identical to the
@@ -606,6 +646,8 @@ pub struct ExperimentConfig {
     pub sync: SyncConfig,
     /// Fault scenario + partial-participation policy (`[faults]`).
     pub faults: FaultsConfig,
+    /// Execution-engine thread layout (`[exec]`).
+    pub exec: ExecConfig,
     /// Directory for CSV/JSONL outputs.
     pub out_dir: String,
     /// Artifact directory (PJRT backend).
@@ -622,6 +664,7 @@ impl Default for ExperimentConfig {
             comm: CommConfig::default(),
             sync: SyncConfig::default(),
             faults: FaultsConfig::default(),
+            exec: ExecConfig::default(),
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
         }
@@ -679,6 +722,8 @@ pub const KNOWN_KEYS: &[&str] = &[
     "faults.quorum",
     "faults.timeout_s",
     "faults.drop_slowest",
+    "exec.parallelism",
+    "exec.threads",
 ];
 
 impl ExperimentConfig {
@@ -775,6 +820,15 @@ impl ExperimentConfig {
         c.faults.timeout_s = doc.float_or("faults.timeout_s", c.faults.timeout_s)?;
         c.faults.drop_slowest =
             doc.int_or("faults.drop_slowest", c.faults.drop_slowest as i64)? as usize;
+
+        c.exec.parallelism = doc.str_or("exec.parallelism", &c.exec.parallelism)?;
+        let exec_threads = doc.int_or("exec.threads", c.exec.threads as i64)?;
+        if exec_threads < 0 {
+            return Err(Error::Config(format!(
+                "exec.threads must be >= 0, got {exec_threads}"
+            )));
+        }
+        c.exec.threads = exec_threads as usize;
 
         c.validate()?;
         Ok(c)
@@ -892,6 +946,7 @@ impl ExperimentConfig {
             }
         }
         self.validate_faults()?;
+        self.exec.validate()?;
         Ok(())
     }
 
@@ -1289,6 +1344,36 @@ mod tests {
                 .to_string();
             assert!(err.contains(needle), "{toml}\nerror {err:?} lacks {needle:?}");
         }
+    }
+
+    #[test]
+    fn exec_section_parses_and_validates() {
+        // Defaults: one host thread per worker — the pre-engine thread
+        // shape, so `[exec]`-less configs keep their parallelism.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.exec.parallelism, "threads");
+        assert_eq!(d.exec.threads, 0);
+        d.validate().unwrap();
+
+        let doc = TomlDoc::parse("[exec]\nparallelism = \"threads\"\nthreads = 4\n").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.exec.parallelism, "threads");
+        assert_eq!(c.exec.threads, 4);
+
+        // The shorthand spelling carries its own count.
+        let doc = TomlDoc::parse("[exec]\nparallelism = \"threads(8)\"\n").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.exec.parallelism, "threads(8)");
+
+        // Unknown spellings and negative counts are rejected.
+        let doc = TomlDoc::parse("[exec]\nparallelism = \"gpu\"\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        let doc = TomlDoc::parse("[exec]\nthreads = -2\n").unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+        assert!(err.to_string().contains("exec.threads"), "{err}");
+        let mut c = ExperimentConfig::default();
+        c.exec.parallelism = "threads(no)".into();
+        assert!(c.validate().is_err());
     }
 
     #[test]

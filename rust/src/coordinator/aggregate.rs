@@ -39,51 +39,18 @@ impl Aggregator {
     /// Simultaneously `avg_g = (1/n) Σ_i g_i` and
     /// `avg_gsq = (1/n) Σ_i g_i ∘ g_i` — one pass over the inputs, both
     /// outputs written per cache line (Alg. 3 needs both: line 5 + line 7).
+    /// Delegates to the shared cache-blocked kernel
+    /// ([`crate::util::kernels::mean_and_squares_into`]).
     pub fn mean_grads_and_squares(&mut self, grads: &[&[f32]]) -> (&[f32], &[f32]) {
-        assert!(!grads.is_empty(), "mean_grads_and_squares: no inputs");
-        let d = self.avg_g.len();
-        for g in grads {
-            assert_eq!(g.len(), d, "mean_grads_and_squares: ragged input");
-        }
-        let scale = 1.0 / grads.len() as f32;
-        let (avg_g, avg_gsq) = (&mut self.avg_g[..d], &mut self.avg_gsq[..d]);
-        // Cache-blocked like math::mean_into: both accumulator chunks stay
-        // in L1 across the n input passes (EXPERIMENTS.md §Perf).
-        const CHUNK: usize = 1024;
-        let mut start = 0;
-        while start < d {
-            let end = (start + CHUNK).min(d);
-            let (gc, qc) = (&mut avg_g[start..end], &mut avg_gsq[start..end]);
-            let first = &grads[0][start..end];
-            for i in 0..gc.len() {
-                let v = first[i];
-                gc[i] = v;
-                qc[i] = v * v;
-            }
-            for g in &grads[1..] {
-                let g = &g[start..end];
-                for i in 0..gc.len() {
-                    let v = g[i];
-                    gc[i] += v;
-                    qc[i] += v * v;
-                }
-            }
-            for i in 0..gc.len() {
-                gc[i] *= scale;
-                qc[i] *= scale;
-            }
-            start = end;
-        }
+        crate::util::kernels::mean_and_squares_into(grads, &mut self.avg_g, &mut self.avg_gsq);
         (&self.avg_g, &self.avg_gsq)
     }
 
     /// Square the already-averaged gradient into `avg_gsq` — AdaGrad's
     /// Alg. 1 line 6 accumulates `G_t ∘ G_t` of the *averaged* gradient.
     pub fn square_avg_grad(&mut self) -> &[f32] {
-        let d = self.avg_g.len();
-        for i in 0..d {
-            self.avg_gsq[i] = self.avg_g[i] * self.avg_g[i];
-        }
+        let (g, gsq) = (&self.avg_g, &mut self.avg_gsq);
+        crate::util::kernels::square_into(g, gsq);
         &self.avg_gsq
     }
 }

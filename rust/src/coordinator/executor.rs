@@ -1,0 +1,311 @@
+//! The execution engine (DESIGN.md §6): how worker computation is mapped
+//! onto OS threads, selected by the `[exec]` config section and
+//! bitwise-invariant across every layout.
+//!
+//! Two facilities:
+//!
+//! * [`spawn_worker_hosts`] — the trainer's persistent worker pool: the n
+//!   protocol workers are partitioned round-robin across `k` host threads
+//!   (`parallelism = "threads"`; the default `threads = 0` gives one host
+//!   per worker — the thread shape every run had before the engine
+//!   existed), or all placed on one host (`"serial"`, the reference
+//!   layout). Hosts live for the whole run and serve the lockstep
+//!   command protocol ([`crate::coordinator::worker`]).
+//! * [`Executor`] — a fixed-order parallel-for over per-worker state for
+//!   code that holds the state in hand (benches, the counting-allocator
+//!   test, offline sweeps): `for_each`/`map` run `f(w, &mut state[w])`
+//!   for every worker, serially in worker order or fanned out over a
+//!   scoped thread pool, with results always delivered in worker order.
+//!
+//! Determinism argument (the tentpole invariant, pinned by
+//! `rust/tests/integration_exec.rs`): every worker's gradient, RNG and
+//! fault stream is a pure function of `(seed, worker, step)`, so cells
+//! compute identical values wherever they are hosted; and every
+//! leader-side reduction (`gather` slots by worker id, the averaging
+//! kernels run in worker order) is **fixed-order**, so f32 sums are
+//! performed in the same order regardless of reply arrival order. Thread
+//! placement therefore cannot change a single bit of the training
+//! trajectory.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::comm::ChannelTransport;
+use crate::config::ExecConfig;
+use crate::coordinator::backend::BackendFactory;
+use crate::coordinator::worker::{host_loop, Cmd, Reply, WorkerSpec};
+use crate::error::{Error, Result};
+
+/// How worker computation maps onto OS threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    /// All workers execute on one host thread, in worker order — the
+    /// reference order every other layout must match bitwise.
+    Serial,
+    /// Workers are spread round-robin across this many host threads
+    /// (0 = one thread per worker; `Threads(0)` is the default layout).
+    Threads(usize),
+}
+
+impl Parallelism {
+    /// Parse the `[exec]` section (`parallelism = "serial" | "threads" |
+    /// "threads(k)"`, with the separate `threads` key supplying k for the
+    /// bare `"threads"` spelling).
+    pub fn from_config(cfg: &ExecConfig) -> Result<Parallelism> {
+        let s = cfg.parallelism.trim();
+        if s == "serial" {
+            return Ok(Parallelism::Serial);
+        }
+        if s == "threads" {
+            return Ok(Parallelism::Threads(cfg.threads));
+        }
+        if let Some(inner) = s.strip_prefix("threads(").and_then(|r| r.strip_suffix(')')) {
+            let k: usize = inner.trim().parse().map_err(|_| {
+                Error::Config(format!("exec.parallelism: bad thread count in {s:?}"))
+            })?;
+            return Ok(Parallelism::Threads(k));
+        }
+        Err(Error::Config(format!(
+            "exec.parallelism must be \"serial\", \"threads\" or \"threads(k)\", got {s:?}"
+        )))
+    }
+
+    /// Number of host threads used for `n` workers.
+    pub fn hosts(self, n: usize) -> usize {
+        match self {
+            Parallelism::Serial => 1,
+            Parallelism::Threads(0) => n.max(1),
+            Parallelism::Threads(k) => k.min(n).max(1),
+        }
+    }
+
+    /// Human-readable label (metrics / bench tables).
+    pub fn label(self) -> String {
+        match self {
+            Parallelism::Serial => "serial".into(),
+            Parallelism::Threads(0) => "threads(n)".into(),
+            Parallelism::Threads(k) => format!("threads({k})"),
+        }
+    }
+}
+
+/// Spawn the persistent worker pool for a training run: `specs[w]` becomes
+/// worker `w`, hosted on thread `w mod hosts`. Returns the lockstep
+/// transport addressing every worker by id (the leader cannot tell the
+/// layouts apart). `reply_rx` must be the receive side of `reply_tx`.
+pub fn spawn_worker_hosts(
+    par: Parallelism,
+    specs: Vec<WorkerSpec>,
+    factory: BackendFactory,
+    reply_tx: Sender<Reply>,
+    reply_rx: Receiver<Reply>,
+) -> Result<ChannelTransport<Cmd, Reply>> {
+    let n = specs.len();
+    let hosts = par.hosts(n);
+    // Partition specs round-robin by worker id.
+    let mut per_host: Vec<Vec<WorkerSpec>> = (0..hosts).map(|_| Vec::new()).collect();
+    for spec in specs {
+        per_host[spec.worker % hosts].push(spec);
+    }
+    let mut host_txs_unique: Vec<Sender<(usize, Cmd)>> = Vec::with_capacity(hosts);
+    let mut joins = Vec::with_capacity(hosts);
+    for (h, host_specs) in per_host.into_iter().enumerate() {
+        let (cmd_tx, cmd_rx) = channel::<(usize, Cmd)>();
+        let factory = std::sync::Arc::clone(&factory);
+        let rtx = reply_tx.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("adaalter-host-{h}"))
+            .spawn(move || host_loop(host_specs, factory, cmd_rx, rtx))
+            .map_err(Error::Io)?;
+        host_txs_unique.push(cmd_tx);
+        joins.push(join);
+    }
+    drop(reply_tx);
+    let host_txs: Vec<Sender<(usize, Cmd)>> =
+        (0..n).map(|w| host_txs_unique[w % hosts].clone()).collect();
+    drop(host_txs_unique);
+    Ok(ChannelTransport::from_hosts(host_txs, reply_rx, joins))
+}
+
+/// A fixed-order parallel-for over per-worker state, for callers that hold
+/// the state in hand (benches, tests, offline sweeps). The trainer's
+/// persistent pool is [`spawn_worker_hosts`]; this is the scoped fan-out
+/// primitive sharing the same determinism contract.
+#[derive(Clone, Copy, Debug)]
+pub struct Executor {
+    par: Parallelism,
+}
+
+impl Executor {
+    /// Engine with the given thread layout.
+    pub fn new(par: Parallelism) -> Self {
+        Executor { par }
+    }
+
+    /// Serial reference engine.
+    pub fn serial() -> Self {
+        Executor { par: Parallelism::Serial }
+    }
+
+    /// Scoped pool of `k` threads (0 = one per item).
+    pub fn threads(k: usize) -> Self {
+        Executor { par: Parallelism::Threads(k) }
+    }
+
+    /// The configured layout.
+    pub fn parallelism(&self) -> Parallelism {
+        self.par
+    }
+
+    /// Host threads the engine would use for `n` items (1 collapses to
+    /// the serial loop).
+    fn fan_width(&self, n: usize) -> usize {
+        match self.par {
+            Parallelism::Serial => 1,
+            Parallelism::Threads(_) => self.par.hosts(n),
+        }
+    }
+
+    /// Run `f(w, &mut states[w])` for every `w`. The serial layout runs
+    /// in worker order on the caller thread (and allocates nothing); the
+    /// threaded layout fans contiguous state chunks out over a scoped
+    /// pool. Either way `f` sees each state exactly once and results land
+    /// nowhere — use [`Executor::map`] to collect outputs.
+    pub fn for_each<S: Send>(&self, states: &mut [S], f: impl Fn(usize, &mut S) + Sync) {
+        let hosts = self.fan_width(states.len());
+        if hosts <= 1 || states.len() <= 1 {
+            for (w, s) in states.iter_mut().enumerate() {
+                f(w, s);
+            }
+            return;
+        }
+        let chunk = states.len().div_ceil(hosts);
+        std::thread::scope(|scope| {
+            for (c, block) in states.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                let _ = scope.spawn(move || {
+                    for (i, s) in block.iter_mut().enumerate() {
+                        f(c * chunk + i, s);
+                    }
+                });
+            }
+        });
+    }
+
+    /// [`Executor::for_each`] collecting `f`'s output per worker into
+    /// `out` (which must be `states.len()` long) — **fixed-order**: slot
+    /// `w` always holds worker `w`'s result, whatever thread computed it,
+    /// so downstream reductions are bitwise-stable.
+    pub fn map<S: Send, T: Send>(
+        &self,
+        states: &mut [S],
+        out: &mut [Option<T>],
+        f: impl Fn(usize, &mut S) -> T + Sync,
+    ) {
+        assert_eq!(states.len(), out.len(), "Executor::map: out length mismatch");
+        let hosts = self.fan_width(states.len());
+        if hosts <= 1 || states.len() <= 1 {
+            for (w, (s, o)) in states.iter_mut().zip(out.iter_mut()).enumerate() {
+                *o = Some(f(w, s));
+            }
+            return;
+        }
+        let chunk = states.len().div_ceil(hosts);
+        std::thread::scope(|scope| {
+            for (c, (block, oblock)) in
+                states.chunks_mut(chunk).zip(out.chunks_mut(chunk)).enumerate()
+            {
+                let f = &f;
+                let _ = scope.spawn(move || {
+                    for (i, (s, o)) in block.iter_mut().zip(oblock.iter_mut()).enumerate() {
+                        *o = Some(f(c * chunk + i, s));
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelism_parses_all_spellings() {
+        // The default: one host per worker (the pre-engine thread shape).
+        let mut e = ExecConfig::default();
+        assert_eq!(Parallelism::from_config(&e).unwrap(), Parallelism::Threads(0));
+        e.parallelism = "serial".into();
+        assert_eq!(Parallelism::from_config(&e).unwrap(), Parallelism::Serial);
+        e.parallelism = "threads".into();
+        e.threads = 4;
+        assert_eq!(Parallelism::from_config(&e).unwrap(), Parallelism::Threads(4));
+        e.parallelism = "threads(8)".into();
+        assert_eq!(Parallelism::from_config(&e).unwrap(), Parallelism::Threads(8));
+        e.parallelism = "gpu".into();
+        assert!(Parallelism::from_config(&e).is_err());
+        e.parallelism = "threads(x)".into();
+        assert!(Parallelism::from_config(&e).is_err());
+    }
+
+    #[test]
+    fn host_counts() {
+        assert_eq!(Parallelism::Serial.hosts(8), 1);
+        assert_eq!(Parallelism::Threads(0).hosts(8), 8);
+        assert_eq!(Parallelism::Threads(3).hosts(8), 3);
+        assert_eq!(Parallelism::Threads(16).hosts(8), 8);
+        assert_eq!(Parallelism::Threads(2).hosts(0), 1);
+        assert_eq!(Parallelism::Serial.label(), "serial");
+        assert_eq!(Parallelism::Threads(0).label(), "threads(n)");
+        assert_eq!(Parallelism::Threads(4).label(), "threads(4)");
+    }
+
+    #[test]
+    fn executors_agree_bitwise_and_keep_order() {
+        // Per-worker pseudo-computation whose result depends on the worker
+        // id and its mutable state; every layout must produce identical
+        // outputs in identical slots.
+        let runs: Vec<Vec<Option<f64>>> = [
+            Executor::serial(),
+            Executor::threads(2),
+            Executor::threads(3),
+            Executor::threads(0),
+            Executor::threads(64),
+        ]
+        .iter()
+        .map(|ex| {
+            let mut states: Vec<f64> = (0..7).map(|w| w as f64 * 0.25).collect();
+            let mut out: Vec<Option<f64>> = vec![None; 7];
+            for _ in 0..3 {
+                ex.map(&mut states, &mut out, |w, s| {
+                    *s = (*s + w as f64).sin();
+                    *s * 2.0
+                });
+            }
+            out
+        })
+        .collect();
+        for other in &runs[1..] {
+            assert_eq!(&runs[0], other);
+        }
+        for (w, o) in runs[0].iter().enumerate() {
+            assert!(o.is_some(), "slot {w} empty");
+        }
+    }
+
+    #[test]
+    fn for_each_touches_every_state_once() {
+        for ex in [Executor::serial(), Executor::threads(2), Executor::threads(5)] {
+            let mut counts = vec![0u32; 9];
+            ex.for_each(&mut counts, |_, c| *c += 1);
+            assert!(counts.iter().all(|&c| c == 1), "{counts:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out length mismatch")]
+    fn map_rejects_mismatched_out() {
+        let mut s = [0u8; 3];
+        let mut out: Vec<Option<u8>> = vec![None; 2];
+        Executor::serial().map(&mut s, &mut out, |_, v| *v);
+    }
+}

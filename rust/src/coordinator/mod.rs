@@ -6,12 +6,15 @@
 //! * [`schedule`] — warm-up learning rates (§6.2.1) and batch scaling.
 //! * [`aggregate`] — gradient / parameter / denominator averaging.
 //! * [`backend`] — the gradient-backend abstraction workers run on.
-//! * [`worker`] — worker-thread protocol and loop.
+//! * [`worker`] — worker-cell protocol and execution bodies.
+//! * [`executor`] — the execution engine: worker→thread layout
+//!   (`[exec]`), bitwise-invariant across layouts (DESIGN.md §6).
 //! * [`trainer`] — the leader: spawning, barriers, sync rounds, metrics.
 
 pub mod aggregate;
 pub mod backend;
 pub mod checkpoint;
+pub mod executor;
 pub mod factory;
 pub mod schedule;
 pub mod sync;
@@ -20,6 +23,7 @@ pub mod worker;
 
 pub use checkpoint::Checkpoint;
 pub use backend::{BackendFactory, EvalMetrics, WorkerBackend};
+pub use executor::{Executor, Parallelism};
 pub use schedule::{scale_lr, ScalingRule, WarmupSchedule};
 pub use sync::{
     build_policy, DriftTriggered, FixedPeriod, GrowingPeriod, StepObservation, SyncObservation,

@@ -39,15 +39,17 @@ use crate::config::{Algorithm, ExperimentConfig};
 use crate::coordinator::aggregate::{average_into, Aggregator};
 use crate::coordinator::backend::{BackendFactory, EvalMetrics};
 use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::executor::{spawn_worker_hosts, Parallelism};
 use crate::coordinator::schedule::WarmupSchedule;
 use crate::coordinator::sync::{
     build_policy, StepObservation, SyncObservation, SyncPolicy, SyncReason,
 };
-use crate::coordinator::worker::{worker_loop, Cmd, Reply, WorkerSpec};
+use crate::coordinator::worker::{Cmd, Reply, WorkerSpec};
 use crate::error::{Error, Result};
 use crate::metrics::TrainRecorder;
 use crate::optim;
 use crate::sim::{Calibration, Charge, FaultPlan, VirtualClock};
+use crate::util::pool::{ArcSlot, BufferPool};
 
 /// Result of a training run.
 pub struct RunResult {
@@ -222,12 +224,16 @@ impl Trainer {
         recorder.set_transport(coll.label());
         recorder.set_sync_policy(policy.label());
 
+        // The execution engine (DESIGN.md §6): workers are hosted on the
+        // `[exec]`-selected thread layout — one host per worker by
+        // default (the pre-engine thread shape), k round-robin hosts or
+        // one serial host on request. Every layout is bitwise-identical
+        // (worker streams are pure functions of `(seed, worker, step)`;
+        // all leader reductions are fixed-order).
+        let par = Parallelism::from_config(&cfg.exec)?;
         let (reply_tx, reply_rx) = channel::<Reply>();
-        let mut txs = Vec::with_capacity(n);
-        let mut joins = Vec::with_capacity(n);
-        for w in 0..n {
-            let (cmd_tx, cmd_rx) = channel::<Cmd>();
-            let spec = WorkerSpec {
+        let specs: Vec<WorkerSpec> = (0..n)
+            .map(|w| WorkerSpec {
                 worker: w,
                 algorithm: algo,
                 epsilon: cfg.optim.epsilon,
@@ -236,18 +242,10 @@ impl Trainer {
                 allow_fused,
                 collect_update_sq,
                 crash_step: plan.crash_step(w),
-            };
-            let factory = Arc::clone(&self.factory);
-            let rtx = reply_tx.clone();
-            let join = std::thread::Builder::new()
-                .name(format!("adaalter-worker-{w}"))
-                .spawn(move || worker_loop(spec, factory, cmd_rx, rtx))
-                .map_err(Error::Io)?;
-            txs.push(cmd_tx);
-            joins.push(join);
-        }
-        drop(reply_tx);
-        let transport = ChannelTransport::from_parts(txs, reply_rx, joins);
+            })
+            .collect();
+        let transport =
+            spawn_worker_hosts(par, specs, Arc::clone(&self.factory), reply_tx, reply_rx)?;
 
         let mut run = LeaderLoop {
             cfg,
@@ -278,6 +276,11 @@ impl Trainer {
             alive: vec![true; n],
             phase_s: vec![0.0; n],
             phase_nominal_s: 0.0,
+            pool: BufferPool::new(),
+            bcast_slot: ArcSlot::new(),
+            install_slot: ArcSlot::new(),
+            acc_slot: ArcSlot::new(),
+            acc_scratch: vec![0.0; d],
         };
         let out = run.drive();
         // Always attempt shutdown, even on error.
@@ -334,6 +337,20 @@ struct LeaderLoop<'a> {
     /// Lockstep-nominal virtual time of the current phase (what the
     /// per-iteration charges already booked for it).
     phase_nominal_s: f64,
+    /// Recycled d-sized scratch buffers (DESIGN.md §6): gradient buffers
+    /// ride `SyncStep` down and `Reply::Grad` back; state-snapshot
+    /// buffers ride `CollectState` down and `Reply::State` back — after
+    /// aggregation / averaging they are parked here, so steady-state
+    /// steps and sync rounds reuse the same allocations.
+    pool: BufferPool,
+    /// Recycled `Arc` payload for the per-iteration model broadcast.
+    bcast_slot: ArcSlot,
+    /// Recycled `Arc` payload for the sync-round state install.
+    install_slot: ArcSlot,
+    /// Recycled `Arc` payload for the averaged accumulator install.
+    acc_slot: ArcSlot,
+    /// Leader-side scratch the collective averages accumulators into.
+    acc_scratch: Vec<f32>,
 }
 
 impl<'a> LeaderLoop<'a> {
@@ -468,10 +485,17 @@ impl<'a> LeaderLoop<'a> {
         if self.faults_on {
             return self.sync_iteration_faulted(t, lr);
         }
-        let x_arc = Arc::new(self.x.clone());
+        // One shared payload per round (Arc clones, not vector clones),
+        // recycled across rounds; gradient buffers ride the command down
+        // and the reply back, so steady state allocates nothing here.
+        let x_arc = self.bcast_slot.fill(&self.x);
         let rep_b = self.coll.broadcast(&x_arc)?;
-        self.transport
-            .broadcast(|_| Cmd::SyncStep { t, x: Arc::clone(&x_arc) })?;
+        let (pool, d) = (&mut self.pool, self.d);
+        self.transport.broadcast(|_| Cmd::SyncStep {
+            t,
+            x: Arc::clone(&x_arc),
+            scratch: pool.take(d),
+        })?;
         let replies = self.transport.gather(|r| match r {
             Reply::Grad { worker, loss, grad } => Ok((worker, (loss, grad))),
             Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
@@ -500,6 +524,10 @@ impl<'a> LeaderLoop<'a> {
             }
         }
         opt.step(&mut self.x, &self.agg.avg_g, &self.agg.avg_gsq, lr);
+        // Park the gradient buffers for the next iteration's SyncStep.
+        for g in grads {
+            self.pool.put(g);
+        }
         Ok(mean_loss)
     }
 
@@ -535,10 +563,14 @@ impl<'a> LeaderLoop<'a> {
         if targets.is_empty() {
             return Err(Error::Protocol(format!("all workers crashed before step {t}")));
         }
-        let x_arc = Arc::new(self.x.clone());
+        let x_arc = self.bcast_slot.fill(&self.x);
         let rep_b = self.coll.broadcast(&x_arc)?;
-        self.transport
-            .broadcast_to(&targets, |_| Cmd::SyncStep { t, x: Arc::clone(&x_arc) })?;
+        let (pool, d) = (&mut self.pool, self.d);
+        self.transport.broadcast_to(&targets, |_| Cmd::SyncStep {
+            t,
+            x: Arc::clone(&x_arc),
+            scratch: pool.take(d),
+        })?;
         let replies = self.transport.gather_from(&targets, |r| match r {
             Reply::Grad { worker, loss, grad } => Ok((worker, Some((loss, grad)))),
             Reply::Crashed { worker, .. } => Ok((worker, None)),
@@ -593,6 +625,12 @@ impl<'a> LeaderLoop<'a> {
             }
         }
         opt.step(&mut self.x, &self.agg.avg_g, &self.agg.avg_gsq, lr);
+        // Park the survivors' gradient buffers for the next iteration
+        // (buffers sent to workers whose crash surfaced this round are
+        // gone with them — the pool tracks the live population).
+        for g in grads {
+            self.pool.put(g);
+        }
         Ok(mean_loss)
     }
 
@@ -642,9 +680,17 @@ impl<'a> LeaderLoop<'a> {
         Ok(mean_loss)
     }
 
-    /// Gather worker states, with or without accumulators.
-    fn collect_states(&self) -> Result<Vec<(Vec<f32>, Option<Vec<f32>>)>> {
-        self.transport.broadcast(|_| Cmd::CollectState)?;
+    /// Gather worker states, with or without accumulators. The snapshot
+    /// buffers come out of (and, via [`Self::recycle_states`], return to)
+    /// the leader's [`BufferPool`], so steady-state sync rounds reuse the
+    /// same allocations.
+    fn collect_states(&mut self) -> Result<Vec<(Vec<f32>, Option<Vec<f32>>)>> {
+        let wants_acc = self.cfg.optim.algorithm.syncs_denominator();
+        let (pool, d) = (&mut self.pool, self.d);
+        self.transport.broadcast(|_| Cmd::CollectState {
+            sx: pool.take(d),
+            sa: if wants_acc { pool.take(d) } else { Vec::new() },
+        })?;
         self.transport.gather(|r| match r {
             Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
             Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
@@ -653,13 +699,32 @@ impl<'a> LeaderLoop<'a> {
     }
 
     /// [`Self::collect_states`] over a live subset (fault runs).
-    fn collect_states_from(&self, targets: &[usize]) -> Result<Vec<(Vec<f32>, Option<Vec<f32>>)>> {
-        self.transport.broadcast_to(targets, |_| Cmd::CollectState)?;
+    fn collect_states_from(
+        &mut self,
+        targets: &[usize],
+    ) -> Result<Vec<(Vec<f32>, Option<Vec<f32>>)>> {
+        let wants_acc = self.cfg.optim.algorithm.syncs_denominator();
+        let (pool, d) = (&mut self.pool, self.d);
+        self.transport.broadcast_to(targets, |_| Cmd::CollectState {
+            sx: pool.take(d),
+            sa: if wants_acc { pool.take(d) } else { Vec::new() },
+        })?;
         self.transport.gather_from(targets, |r| match r {
             Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
             Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
             _ => Err(Error::Protocol("expected State".into())),
         })
+    }
+
+    /// Park consumed state snapshots for the next round's
+    /// [`Self::collect_states`].
+    fn recycle_states(&mut self, states: Vec<(Vec<f32>, Option<Vec<f32>>)>) {
+        for (x, acc) in states {
+            self.pool.put(x);
+            if let Some(a) = acc {
+                self.pool.put(a);
+            }
+        }
     }
 
     /// [`Self::wait_ready`] over a live subset (fault runs).
@@ -694,22 +759,25 @@ impl<'a> LeaderLoop<'a> {
                         .ok_or_else(|| Error::Protocol("worker state missing accumulator".into()))
                 })
                 .collect::<Result<_>>()?;
-            let mut acc = vec![0.0f32; self.d];
-            let rep =
-                self.coll
-                    .sync_round(&xs, Some(&accs), &mut self.x, Some(&mut acc))?;
-            (rep, Some(Arc::new(acc)))
+            let rep = self.coll.sync_round(
+                &xs,
+                Some(&accs),
+                &mut self.x,
+                Some(&mut self.acc_scratch),
+            )?;
+            (rep, Some(self.acc_slot.fill(&self.acc_scratch)))
         } else {
             let rep = self.coll.sync_round(&xs, None, &mut self.x, None)?;
             (rep, None)
         };
 
-        let avg_x = Arc::new(self.x.clone());
+        let avg_x = self.install_slot.fill(&self.x);
         self.transport.broadcast(|_| Cmd::InstallState {
             x: Arc::clone(&avg_x),
             acc: avg_acc.clone(),
         })?;
         self.wait_ready()?;
+        self.recycle_states(states);
         self.record_round(t, reason, report, 0.0);
         Ok(())
     }
@@ -778,15 +846,14 @@ impl<'a> LeaderLoop<'a> {
                         .ok_or_else(|| Error::Protocol("worker state missing accumulator".into()))
                 })
                 .collect::<Result<_>>()?;
-            let mut acc = vec![0.0f32; self.d];
             let oc = self.coll.sync_round_partial(
                 &xs,
                 Some(&accs),
                 &arrivals,
                 &mut self.x,
-                Some(&mut acc),
+                Some(&mut self.acc_scratch),
             )?;
-            (oc, Some(Arc::new(acc)))
+            (oc, Some(self.acc_slot.fill(&self.acc_scratch)))
         } else {
             let oc = self
                 .coll
@@ -796,12 +863,13 @@ impl<'a> LeaderLoop<'a> {
 
         // Install the averaged state on every live worker — the dropped
         // stragglers abandon their stale phase and catch up here.
-        let avg_x = Arc::new(self.x.clone());
+        let avg_x = self.install_slot.fill(&self.x);
         self.transport.broadcast_to(&targets, |_| Cmd::InstallState {
             x: Arc::clone(&avg_x),
             acc: avg_acc.clone(),
         })?;
         self.wait_ready_from(&targets)?;
+        self.recycle_states(states);
 
         // The barrier's visible straggler penalty: how long the round's
         // close sat beyond what the per-iteration charges already booked.
@@ -842,7 +910,7 @@ impl<'a> LeaderLoop<'a> {
         let vectors = if algo.is_local() {
             let states = self.collect_states()?;
             let (x0, acc0) = &states[0];
-            match algo {
+            let vectors = match algo {
                 Algorithm::LocalAdaAlter => {
                     let acc = acc0
                         .clone()
@@ -850,7 +918,9 @@ impl<'a> LeaderLoop<'a> {
                     vec![x0.clone(), acc.clone(), acc]
                 }
                 _ => vec![x0.clone()],
-            }
+            };
+            self.recycle_states(states);
+            vectors
         } else {
             let mut v = vec![self.x.clone()];
             v.extend(self.opt.as_ref().expect("sync opt").state_vectors());
@@ -880,6 +950,7 @@ impl<'a> LeaderLoop<'a> {
         let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
         let mut out = vec![0.0f32; self.d];
         average_into(&xs, &mut out);
+        self.recycle_states(states);
         Ok(out)
     }
 
@@ -1093,6 +1164,44 @@ mod tests {
             a.final_eval.unwrap().loss.to_bits(),
             b.final_eval.unwrap().loss.to_bits()
         );
+    }
+
+    #[test]
+    fn exec_layouts_are_bitwise_identical() {
+        // The tentpole invariant in miniature (the full matrix lives in
+        // rust/tests/integration_exec.rs): the default per-worker-host
+        // layout, a serial host and a 2-thread pool produce the same
+        // bits.
+        let base = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 60);
+        let default = {
+            let f = synthetic_factory(&base);
+            Trainer::new(base.clone(), f).run().unwrap()
+        };
+        let mut ser = base.clone();
+        ser.exec.parallelism = "serial".into();
+        let serial = {
+            let f = synthetic_factory(&ser);
+            Trainer::new(ser, f).run().unwrap()
+        };
+        let mut cfg = base.clone();
+        cfg.exec.parallelism = "threads".into();
+        cfg.exec.threads = 2;
+        let threaded = {
+            let f = synthetic_factory(&cfg);
+            Trainer::new(cfg, f).run().unwrap()
+        };
+        assert_eq!(default.final_x, serial.final_x);
+        assert_eq!(serial.final_x, threaded.final_x);
+        assert_eq!(
+            serial.final_eval.unwrap().loss.to_bits(),
+            threaded.final_eval.unwrap().loss.to_bits()
+        );
+        // Unknown engine spellings are config errors, not panics.
+        let mut bad = base;
+        bad.exec.parallelism = "fibers".into();
+        let f = synthetic_factory(&bad);
+        let err = Trainer::new(bad, f).run().err().expect("must fail");
+        assert!(err.to_string().contains("exec.parallelism"), "{err}");
     }
 
     #[test]

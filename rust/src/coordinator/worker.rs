@@ -1,37 +1,77 @@
-//! Worker thread: owns a gradient backend (and, for local algorithms, the
-//! local replica + AdaAlter accumulator) and executes leader commands.
+//! Worker cells: each owns a gradient backend (and, for local algorithms,
+//! the local replica + AdaAlter accumulator) and executes leader commands.
 //!
 //! The protocol is a strict request/reply lockstep per iteration — the
 //! synchronous-training barrier of the paper (§2: "synchronous training …
 //! blocks the global update until all the workers respond"). The leader
 //! side of the channel plumbing lives in
 //! [`crate::comm::transport::ChannelTransport`]; this module owns the
-//! command/reply vocabulary and the worker thread body. Determinism:
-//! every gradient is keyed by `(worker, step)`, so thread scheduling cannot
-//! change results.
+//! command/reply vocabulary and the worker execution bodies. Determinism:
+//! every gradient is keyed by `(worker, step)`, so thread scheduling and
+//! host placement cannot change results.
+//!
+//! Hosting (DESIGN.md §6): a worker cell runs either on its own thread
+//! ([`worker_loop`], commands on a dedicated channel) or multiplexed with
+//! siblings on a shared host thread ([`host_loop`], commands tagged with
+//! the worker id). The execution engine
+//! ([`crate::coordinator::executor`]) picks the layout from the `[exec]`
+//! config section; all layouts are bitwise-equivalent because each cell's
+//! state is a pure function of `(seed, worker, step)`.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use crate::config::Algorithm;
-use crate::coordinator::backend::{BackendFactory, EvalMetrics};
+use crate::coordinator::backend::{BackendFactory, EvalMetrics, WorkerBackend};
 use crate::optim::{LocalAdaAlterWorker, Sgd};
+use crate::util::kernels;
 
 /// Leader → worker commands.
 pub enum Cmd {
     /// Fully-synchronous step: compute the gradient at the broadcast `x`
     /// and return it (Alg. 1/3 line 4).
-    SyncStep { t: u64, x: Arc<Vec<f32>> },
+    SyncStep {
+        /// Iteration number (keys the gradient stream).
+        t: u64,
+        /// Shared model payload (one allocation per round, Arc-cloned).
+        x: Arc<Vec<f32>>,
+        /// Recycled gradient buffer from the leader's pool: the cell
+        /// computes into it and ships it back as [`Reply::Grad`], so the
+        /// steady-state sync step allocates nothing (empty on the first
+        /// iteration; the cell resizes it to `d` once).
+        scratch: Vec<f32>,
+    },
     /// Local step (Alg. 2 line 5 / Alg. 4 lines 5–7) on the local replica.
-    LocalStep { t: u64, lr: f32 },
+    LocalStep {
+        /// Iteration number.
+        t: u64,
+        /// Warm-up-scheduled learning rate for this iteration.
+        lr: f32,
+    },
     /// Send the local replica (and accumulator) for averaging (Alg. 4
     /// lines 11–12 push).
-    CollectState,
+    CollectState {
+        /// Recycled buffer the cell copies its parameters into (ships
+        /// back as [`Reply::State`]; empty on the first round).
+        sx: Vec<f32>,
+        /// Recycled buffer for the accumulator (the leader sends an empty
+        /// vector for algorithms that don't sync denominators; dropped
+        /// then).
+        sa: Vec<f32>,
+    },
     /// Install the averaged state (pull side of the sync round).
-    InstallState { x: Arc<Vec<f32>>, acc: Option<Arc<Vec<f32>>> },
+    InstallState {
+        /// Averaged parameters to install.
+        x: Arc<Vec<f32>>,
+        /// Averaged accumulator (local AdaAlter only).
+        acc: Option<Arc<Vec<f32>>>,
+    },
     /// Evaluate on the held-out set: at `x` if given, else at the local
     /// replica.
-    Eval { x: Option<Arc<Vec<f32>>> },
+    Eval {
+        /// Evaluation point (None = the local replica).
+        x: Option<Arc<Vec<f32>>>,
+    },
     /// Shut down.
     Stop,
 }
@@ -39,30 +79,69 @@ pub enum Cmd {
 /// Worker → leader replies.
 pub enum Reply {
     /// Gradient for a `SyncStep` (loss is the local mini-batch loss).
-    Grad { worker: usize, loss: f32, grad: Vec<f32> },
+    Grad {
+        /// Replying worker id.
+        worker: usize,
+        /// Local mini-batch loss.
+        loss: f32,
+        /// The gradient, in the leader's recycled scratch buffer.
+        grad: Vec<f32>,
+    },
     /// A `LocalStep` finished. `update_sq` is the squared L2 norm of this
     /// step's local parameter update `‖Δx‖²` — the drift proxy adaptive
     /// sync policies consume (DESIGN.md §4); 0 when the fused device path
     /// applied the update (the norm is not observable without an extra
     /// device read, so the trainer disables fusion for policies that need
     /// it).
-    StepDone { worker: usize, loss: f32, update_sq: f64 },
+    StepDone {
+        /// Replying worker id.
+        worker: usize,
+        /// Local mini-batch loss.
+        loss: f32,
+        /// `‖Δx‖²` of the applied update (0 on the fused path).
+        update_sq: f64,
+    },
     /// Local state snapshot for averaging.
-    State { worker: usize, x: Vec<f32>, acc: Option<Vec<f32>> },
+    State {
+        /// Replying worker id.
+        worker: usize,
+        /// Local replica parameters.
+        x: Vec<f32>,
+        /// Local accumulator (local AdaAlter only).
+        acc: Option<Vec<f32>>,
+    },
     /// Evaluation result.
-    Eval { worker: usize, metrics: EvalMetrics },
+    Eval {
+        /// Replying worker id.
+        worker: usize,
+        /// Held-out metrics.
+        metrics: EvalMetrics,
+    },
     /// Ready after start-up / state install.
-    Ready { worker: usize },
+    Ready {
+        /// Replying worker id.
+        worker: usize,
+    },
     /// The worker's fault schedule killed it at `step` (DESIGN.md §5).
     /// The tombstone reply stands in for a vanished process so the
     /// lockstep protocol observes the death instead of deadlocking; the
     /// leader marks the worker dead and stops addressing it.
-    Crashed { worker: usize, step: u64 },
+    Crashed {
+        /// Replying worker id.
+        worker: usize,
+        /// The 1-based iteration the schedule killed it at.
+        step: u64,
+    },
     /// Fatal worker error.
-    Err { worker: usize, msg: String },
+    Err {
+        /// Replying worker id.
+        worker: usize,
+        /// Error description.
+        msg: String,
+    },
 }
 
-/// Everything a worker thread needs at spawn time.
+/// Everything a worker cell needs at spawn time.
 pub struct WorkerSpec {
     /// This worker's 0-based id.
     pub worker: usize,
@@ -94,7 +173,252 @@ enum LocalState {
     AdaAlter(LocalAdaAlterWorker),
 }
 
-/// The worker thread body. Runs until `Stop` (or channel close / error).
+/// What a cell's command handler asks its host to do next.
+enum CellFlow {
+    /// Keep serving commands.
+    Continue,
+    /// This cell received `Stop`.
+    Stopped,
+    /// Fatal error already reported via `Reply::Err` — abandon the host.
+    Failed,
+}
+
+/// Report a fatal cell error.
+fn send_fail(tx: &Sender<Reply>, worker: usize, msg: String) -> CellFlow {
+    let _ = tx.send(Reply::Err { worker, msg });
+    CellFlow::Failed
+}
+
+/// One hosted worker: backend + replica state + fault schedule.
+struct WorkerCell {
+    worker: usize,
+    d: usize,
+    allow_fused: bool,
+    collect_update_sq: bool,
+    crash_at: Option<u64>,
+    dead: bool,
+    eps2: f32,
+    backend: Box<dyn WorkerBackend>,
+    local: LocalState,
+    /// Local-algorithm gradient scratch (empty for sync-algorithm cells,
+    /// whose gradients land in the leader's recycled `SyncStep` buffer).
+    grad_buf: Vec<f32>,
+}
+
+impl WorkerCell {
+    /// Build the cell on the current (host) thread — backends are
+    /// constructed thread-locally because PJRT clients are not `Send`.
+    fn build(spec: WorkerSpec, factory: &BackendFactory) -> Result<WorkerCell, String> {
+        let backend = (factory.as_ref())(spec.worker).map_err(|e| format!("backend init: {e}"))?;
+        let d = backend.dim();
+        if spec.init.len() != d {
+            return Err(format!("init len {} != backend dim {d}", spec.init.len()));
+        }
+        let local = match spec.algorithm {
+            Algorithm::LocalSgd => LocalState::Sgd { x: spec.init.as_ref().clone() },
+            Algorithm::LocalAdaAlter => LocalState::AdaAlter(LocalAdaAlterWorker::new(
+                spec.init.as_ref().clone(),
+                spec.b0,
+                spec.epsilon,
+            )),
+            _ => LocalState::None,
+        };
+        let grad_buf = if matches!(local, LocalState::None) {
+            Vec::new()
+        } else {
+            vec![0.0f32; d]
+        };
+        Ok(WorkerCell {
+            worker: spec.worker,
+            d,
+            allow_fused: spec.allow_fused,
+            collect_update_sq: spec.collect_update_sq,
+            crash_at: spec.crash_step,
+            dead: false,
+            eps2: spec.epsilon * spec.epsilon,
+            backend,
+            local,
+            grad_buf,
+        })
+    }
+
+    /// Execute one leader command, replying on `tx`.
+    fn handle(&mut self, cmd: Cmd, tx: &Sender<Reply>) -> CellFlow {
+        let worker = self.worker;
+        // Fault injection: the schedule kills this worker at its crash
+        // step; from then on every command except Stop is answered with
+        // the tombstone so the lockstep protocol observes the death
+        // instead of blocking on a reply that would never come.
+        if !self.dead {
+            let step = match &cmd {
+                Cmd::SyncStep { t, .. } | Cmd::LocalStep { t, .. } => Some(*t),
+                _ => None,
+            };
+            if let (Some(c), Some(t)) = (self.crash_at, step) {
+                if t >= c {
+                    self.dead = true;
+                }
+            }
+        }
+        if self.dead {
+            if matches!(cmd, Cmd::Stop) {
+                return CellFlow::Stopped;
+            }
+            // Release any payload the command carried before replying
+            // (the leader recycles broadcast Arcs once all handles drop).
+            drop(cmd);
+            let _ = tx.send(Reply::Crashed { worker, step: self.crash_at.unwrap_or(0) });
+            return CellFlow::Continue;
+        }
+        match cmd {
+            Cmd::SyncStep { t, x, mut scratch } => {
+                scratch.resize(self.d, 0.0);
+                match self.backend.loss_and_grad(&x, t, &mut scratch) {
+                    Ok(loss) => {
+                        // Release the shared payload BEFORE replying so the
+                        // leader's ArcSlot can recycle the allocation next
+                        // round.
+                        drop(x);
+                        let _ = tx.send(Reply::Grad { worker, loss, grad: scratch });
+                        CellFlow::Continue
+                    }
+                    Err(e) => send_fail(tx, worker, format!("grad at t={t}: {e}")),
+                }
+            }
+            Cmd::LocalStep { t, lr } => {
+                let collect = self.collect_update_sq;
+                let (loss, update_sq) = match &mut self.local {
+                    LocalState::Sgd { x } => {
+                        match self.backend.loss_and_grad(x, t, &mut self.grad_buf) {
+                            Ok(loss) => {
+                                // Δx = −lr·g, so ‖Δx‖² is computable before
+                                // the update without touching its
+                                // arithmetic. Only paid when a policy
+                                // consumes it.
+                                let update_sq: f64 = if collect {
+                                    kernels::sgd_update_sq(&self.grad_buf, lr)
+                                } else {
+                                    0.0
+                                };
+                                Sgd::apply(x, &self.grad_buf, lr);
+                                (loss, update_sq)
+                            }
+                            Err(e) => {
+                                return send_fail(tx, worker, format!("grad at t={t}: {e}"))
+                            }
+                        }
+                    }
+                    LocalState::AdaAlter(w) => {
+                        // Try the fused device path first (Alg. 4 lines 5–7
+                        // in one dispatch); fall back to grad + rust update.
+                        let denom_add = (w.t_prime() + 1) as f32 * self.eps2;
+                        let fused = if self.allow_fused {
+                            self.backend.fused_local_adaalter_split(w, denom_add, lr, t)
+                        } else {
+                            Ok(None)
+                        };
+                        match fused {
+                            // Fused path: update norm not observable.
+                            Ok(Some(loss)) => (loss, 0.0),
+                            Ok(None) => {
+                                match self.backend.loss_and_grad(w.x(), t, &mut self.grad_buf) {
+                                    Ok(loss) => {
+                                        let update_sq = w.local_step(&self.grad_buf, lr);
+                                        (loss, update_sq)
+                                    }
+                                    Err(e) => {
+                                        return send_fail(
+                                            tx,
+                                            worker,
+                                            format!("grad at t={t}: {e}"),
+                                        )
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                return send_fail(tx, worker, format!("fused step at t={t}: {e}"))
+                            }
+                        }
+                    }
+                    LocalState::None => {
+                        return send_fail(
+                            tx,
+                            worker,
+                            "LocalStep sent to a sync-algorithm worker".into(),
+                        )
+                    }
+                };
+                let _ = tx.send(Reply::StepDone { worker, loss, update_sq });
+                CellFlow::Continue
+            }
+            Cmd::CollectState { mut sx, mut sa } => match &self.local {
+                LocalState::Sgd { x } => {
+                    sx.resize(x.len(), 0.0);
+                    sx.copy_from_slice(x);
+                    drop(sa);
+                    let _ = tx.send(Reply::State { worker, x: sx, acc: None });
+                    CellFlow::Continue
+                }
+                LocalState::AdaAlter(w) => {
+                    sx.resize(w.x().len(), 0.0);
+                    sx.copy_from_slice(w.x());
+                    sa.resize(w.acc().len(), 0.0);
+                    sa.copy_from_slice(w.acc());
+                    let _ = tx.send(Reply::State { worker, x: sx, acc: Some(sa) });
+                    CellFlow::Continue
+                }
+                LocalState::None => {
+                    send_fail(tx, worker, "CollectState sent to a sync-algorithm worker".into())
+                }
+            },
+            Cmd::InstallState { x, acc } => {
+                match &mut self.local {
+                    LocalState::Sgd { x: lx } => lx.copy_from_slice(&x),
+                    LocalState::AdaAlter(w) => {
+                        let Some(a) = acc.as_deref() else {
+                            return send_fail(tx, worker, "InstallState without accumulator".into());
+                        };
+                        w.apply_sync(&x, a);
+                    }
+                    LocalState::None => {
+                        return send_fail(
+                            tx,
+                            worker,
+                            "InstallState sent to a sync-algorithm worker".into(),
+                        )
+                    }
+                }
+                // Release the shared payloads before replying (ArcSlot
+                // recycling, as in SyncStep).
+                drop(x);
+                drop(acc);
+                let _ = tx.send(Reply::Ready { worker });
+                CellFlow::Continue
+            }
+            Cmd::Eval { x } => {
+                let point = match (&x, &self.local) {
+                    (Some(x), _) => self.backend.eval(x),
+                    (None, LocalState::Sgd { x }) => self.backend.eval(x),
+                    (None, LocalState::AdaAlter(w)) => self.backend.eval(w.x()),
+                    (None, LocalState::None) => {
+                        return send_fail(tx, worker, "Eval{None} on a sync-algorithm worker".into())
+                    }
+                };
+                match point {
+                    Ok(metrics) => {
+                        let _ = tx.send(Reply::Eval { worker, metrics });
+                        CellFlow::Continue
+                    }
+                    Err(e) => send_fail(tx, worker, format!("eval: {e}")),
+                }
+            }
+            Cmd::Stop => CellFlow::Stopped,
+        }
+    }
+}
+
+/// The single-worker thread body: one cell on a dedicated channel. Runs
+/// until `Stop` (or channel close / error).
 pub fn worker_loop(
     spec: WorkerSpec,
     factory: BackendFactory,
@@ -102,168 +426,62 @@ pub fn worker_loop(
     tx: Sender<Reply>,
 ) {
     let worker = spec.worker;
-    let fail = |tx: &Sender<Reply>, msg: String| {
-        let _ = tx.send(Reply::Err { worker, msg });
+    let mut cell = match WorkerCell::build(spec, &factory) {
+        Ok(c) => c,
+        Err(msg) => {
+            let _ = tx.send(Reply::Err { worker, msg });
+            return;
+        }
     };
-
-    let mut backend = match factory(worker) {
-        Ok(b) => b,
-        Err(e) => return fail(&tx, format!("backend init: {e}")),
-    };
-    let d = backend.dim();
-    if spec.init.len() != d {
-        return fail(&tx, format!("init len {} != backend dim {d}", spec.init.len()));
-    }
-
-    let mut local = match spec.algorithm {
-        Algorithm::LocalSgd => LocalState::Sgd { x: spec.init.as_ref().clone() },
-        Algorithm::LocalAdaAlter => LocalState::AdaAlter(LocalAdaAlterWorker::new(
-            spec.init.as_ref().clone(),
-            spec.b0,
-            spec.epsilon,
-        )),
-        _ => LocalState::None,
-    };
-    let mut grad_buf = vec![0.0f32; d];
-    let eps2 = spec.epsilon * spec.epsilon;
-
     if tx.send(Reply::Ready { worker }).is_err() {
         return;
     }
-
-    let crash_at = spec.crash_step;
-    let mut dead = false;
-
     while let Ok(cmd) = rx.recv() {
-        // Fault injection: the schedule kills this worker at its crash
-        // step; from then on every command except Stop is answered with
-        // the tombstone so the lockstep protocol observes the death
-        // instead of blocking on a reply that would never come.
-        if !dead {
-            let step = match &cmd {
-                Cmd::SyncStep { t, .. } | Cmd::LocalStep { t, .. } => Some(*t),
-                _ => None,
-            };
-            if let (Some(c), Some(t)) = (crash_at, step) {
-                if t >= c {
-                    dead = true;
-                }
+        match cell.handle(cmd, &tx) {
+            CellFlow::Continue => {}
+            CellFlow::Stopped | CellFlow::Failed => break,
+        }
+    }
+}
+
+/// The host thread body (DESIGN.md §6): several worker cells multiplexed
+/// on one shared channel, commands tagged `(worker, cmd)`. Cells are built
+/// in the given order, each announcing `Ready`; the loop exits once every
+/// hosted cell received `Stop` (or on a fatal cell error / channel close).
+pub fn host_loop(
+    specs: Vec<WorkerSpec>,
+    factory: BackendFactory,
+    rx: Receiver<(usize, Cmd)>,
+    tx: Sender<Reply>,
+) {
+    let mut cells: Vec<WorkerCell> = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let worker = spec.worker;
+        match WorkerCell::build(spec, &factory) {
+            Ok(c) => cells.push(c),
+            Err(msg) => {
+                let _ = tx.send(Reply::Err { worker, msg });
+                return;
             }
         }
-        if dead {
-            if matches!(cmd, Cmd::Stop) {
-                break;
-            }
-            let _ = tx.send(Reply::Crashed { worker, step: crash_at.unwrap_or(0) });
-            continue;
+        if tx.send(Reply::Ready { worker }).is_err() {
+            return;
         }
-        match cmd {
-            Cmd::SyncStep { t, x } => {
-                match backend.loss_and_grad(&x, t, &mut grad_buf) {
-                    Ok(loss) => {
-                        let _ = tx.send(Reply::Grad { worker, loss, grad: grad_buf.clone() });
-                    }
-                    Err(e) => return fail(&tx, format!("grad at t={t}: {e}")),
-                }
-            }
-            Cmd::LocalStep { t, lr } => {
-                let (loss, update_sq) = match &mut local {
-                    LocalState::Sgd { x } => match backend.loss_and_grad(x, t, &mut grad_buf) {
-                        Ok(loss) => {
-                            // Δx = −lr·g, so ‖Δx‖² is computable before the
-                            // update without touching its arithmetic. Only
-                            // paid when a policy consumes it.
-                            let update_sq: f64 = if spec.collect_update_sq {
-                                grad_buf
-                                    .iter()
-                                    .map(|&gv| {
-                                        let u = (lr * gv) as f64;
-                                        u * u
-                                    })
-                                    .sum()
-                            } else {
-                                0.0
-                            };
-                            Sgd::apply(x, &grad_buf, lr);
-                            (loss, update_sq)
-                        }
-                        Err(e) => return fail(&tx, format!("grad at t={t}: {e}")),
-                    },
-                    LocalState::AdaAlter(w) => {
-                        // Try the fused device path first (Alg. 4 lines 5–7
-                        // in one dispatch); fall back to grad + rust update.
-                        let denom_add = (w.t_prime() + 1) as f32 * eps2;
-                        let fused = if spec.allow_fused {
-                            backend.fused_local_adaalter_split(w, denom_add, lr, t)
-                        } else {
-                            Ok(None)
-                        };
-                        match fused {
-                            // Fused path: update norm not observable.
-                            Ok(Some(loss)) => (loss, 0.0),
-                            Ok(None) => match backend.loss_and_grad(w.x(), t, &mut grad_buf) {
-                                Ok(loss) => {
-                                    let update_sq = w.local_step(&grad_buf, lr);
-                                    (loss, update_sq)
-                                }
-                                Err(e) => return fail(&tx, format!("grad at t={t}: {e}")),
-                            },
-                            Err(e) => return fail(&tx, format!("fused step at t={t}: {e}")),
-                        }
-                    }
-                    LocalState::None => {
-                        return fail(&tx, "LocalStep sent to a sync-algorithm worker".into())
-                    }
-                };
-                let _ = tx.send(Reply::StepDone { worker, loss, update_sq });
-            }
-            Cmd::CollectState => match &local {
-                LocalState::Sgd { x } => {
-                    let _ = tx.send(Reply::State { worker, x: x.clone(), acc: None });
-                }
-                LocalState::AdaAlter(w) => {
-                    let _ = tx.send(Reply::State {
-                        worker,
-                        x: w.x().to_vec(),
-                        acc: Some(w.acc().to_vec()),
-                    });
-                }
-                LocalState::None => {
-                    return fail(&tx, "CollectState sent to a sync-algorithm worker".into())
-                }
-            },
-            Cmd::InstallState { x, acc } => {
-                match &mut local {
-                    LocalState::Sgd { x: lx } => lx.copy_from_slice(&x),
-                    LocalState::AdaAlter(w) => {
-                        let Some(acc) = acc.as_deref() else {
-                            return fail(&tx, "InstallState without accumulator".into());
-                        };
-                        w.apply_sync(&x, acc);
-                    }
-                    LocalState::None => {
-                        return fail(&tx, "InstallState sent to a sync-algorithm worker".into())
-                    }
-                }
-                let _ = tx.send(Reply::Ready { worker });
-            }
-            Cmd::Eval { x } => {
-                let point = match (&x, &local) {
-                    (Some(x), _) => backend.eval(x),
-                    (None, LocalState::Sgd { x }) => backend.eval(x),
-                    (None, LocalState::AdaAlter(w)) => backend.eval(w.x()),
-                    (None, LocalState::None) => {
-                        return fail(&tx, "Eval{None} on a sync-algorithm worker".into())
-                    }
-                };
-                match point {
-                    Ok(metrics) => {
-                        let _ = tx.send(Reply::Eval { worker, metrics });
-                    }
-                    Err(e) => return fail(&tx, format!("eval: {e}")),
-                }
-            }
-            Cmd::Stop => break,
+    }
+    let mut live = cells.len();
+    while live > 0 {
+        let Ok((w, cmd)) = rx.recv() else { return };
+        let Some(cell) = cells.iter_mut().find(|c| c.worker == w) else {
+            let _ = tx.send(Reply::Err {
+                worker: w,
+                msg: "command routed to a host not owning this worker".into(),
+            });
+            return;
+        };
+        match cell.handle(cmd, &tx) {
+            CellFlow::Continue => {}
+            CellFlow::Stopped => live -= 1,
+            CellFlow::Failed => return,
         }
     }
 }

@@ -16,8 +16,11 @@
 //!   a deterministic fault & straggler scenario engine with
 //!   partial-participation sync rounds ([`sim::FaultPlan`] +
 //!   [`comm::PartialCollective`]: seeded slowdowns/stalls/crashes, quorum
-//!   and backup-worker barriers), warm-up learning-rate schedule, data
-//!   pipeline, metrics, CLI.
+//!   and backup-worker barriers), a bitwise-deterministic execution
+//!   engine ([`coordinator::executor`]: `[exec]`-selected worker→thread
+//!   layouts over shared hot-path kernels ([`util::kernels`]) with
+//!   zero-allocation steady state ([`util::pool`])), warm-up
+//!   learning-rate schedule, data pipeline, metrics, CLI.
 //! * **L2 (python/compile, build time only)** — a JAX transformer language
 //!   model lowered once to HLO-text artifacts (`make artifacts`).
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the fused

@@ -36,18 +36,9 @@ impl SyncOptimizer for AdaAlter {
         assert_eq!(x.len(), d, "AdaAlter: x dim");
         assert_eq!(g.len(), d, "AdaAlter: g dim");
         assert_eq!(gsq.len(), d, "AdaAlter: gsq dim");
-        let eps2 = self.eps2;
-        let b2 = &mut self.b2[..d];
-        let x = &mut x[..d];
-        let g = &g[..d];
-        let gsq = &gsq[..d];
-        // Fused single pass: update with the STALE denominator, then fold
-        // the fresh squares in.
-        for i in 0..d {
-            let stale = b2[i];
-            x[i] -= lr * g[i] / (stale + eps2).sqrt();
-            b2[i] = stale + gsq[i];
-        }
+        // Fused single pass (shared kernel): update with the STALE
+        // denominator, then fold the fresh squares in.
+        crate::util::kernels::adaalter_step(x, &mut self.b2, g, gsq, lr, self.eps2);
     }
 
     fn algorithm(&self) -> Algorithm {

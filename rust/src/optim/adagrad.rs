@@ -32,17 +32,9 @@ impl SyncOptimizer for AdaGrad {
         assert_eq!(x.len(), d, "AdaGrad: x dim");
         assert_eq!(g.len(), d, "AdaGrad: g dim");
         assert_eq!(gsq.len(), d, "AdaGrad: gsq dim");
-        let eps2 = self.eps2;
-        let b2 = &mut self.b2[..d];
-        let x = &mut x[..d];
-        let g = &g[..d];
-        let gsq = &gsq[..d];
-        // Fused single pass: accumulate, then update with the new value.
-        for i in 0..d {
-            let b2i = b2[i] + gsq[i];
-            b2[i] = b2i;
-            x[i] -= lr * g[i] / (b2i + eps2).sqrt();
-        }
+        // Fused single pass (shared kernel): accumulate, then update with
+        // the new value.
+        crate::util::kernels::adagrad_step(x, &mut self.b2, g, gsq, lr, self.eps2);
     }
 
     fn algorithm(&self) -> Algorithm {

@@ -35,7 +35,7 @@
 //! assert_eq!((w.x(), w.b2_sync(), w.t_prime()), (&[0.25][..], &[3.0][..], 0));
 //! ```
 
-use crate::util::math;
+use crate::util::{kernels, math};
 
 /// Per-worker Local AdaAlter state.
 pub struct LocalAdaAlterWorker {
@@ -79,25 +79,12 @@ impl LocalAdaAlterWorker {
     /// (DESIGN.md §4). The update arithmetic is unchanged: the same
     /// quotient is computed once and both applied and squared.
     pub fn local_step(&mut self, g: &[f32], lr: f32) -> f64 {
-        let d = self.x.len();
-        assert_eq!(g.len(), d, "LocalAdaAlterWorker: g dim");
+        assert_eq!(g.len(), self.x.len(), "LocalAdaAlterWorker: g dim");
         self.t_prime += 1;
         self.steps += 1;
         let add = self.t_prime as f32 * self.eps2;
-        let x = &mut self.x[..d];
-        let b2 = &self.b2_sync[..d];
-        let acc = &mut self.acc[..d];
-        let g = &g[..d];
-        let mut update_sq = 0.0f64;
-        // Fused single pass over the three streams.
-        for i in 0..d {
-            let gi = g[i];
-            let du = lr * gi / (b2[i] + add).sqrt();
-            x[i] -= du;
-            acc[i] += gi * gi;
-            update_sq += du as f64 * du as f64;
-        }
-        update_sq
+        // Fused single pass over the three streams (shared kernel).
+        kernels::local_adaalter_step(&mut self.x, &self.b2_sync, &mut self.acc, g, lr, add)
     }
 
     /// Apply a synchronization result (Alg. 4 lines 11–12): install the

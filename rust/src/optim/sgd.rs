@@ -13,12 +13,11 @@ impl Sgd {
         Sgd
     }
 
-    /// The local step shared by sync-SGD and local-SGD workers.
+    /// The local step shared by sync-SGD and local-SGD workers
+    /// ([`crate::util::kernels::sgd_step`]).
     pub fn apply(x: &mut [f32], g: &[f32], lr: f32) {
         assert_eq!(x.len(), g.len(), "Sgd: dim mismatch");
-        for i in 0..x.len() {
-            x[i] -= lr * g[i];
-        }
+        crate::util::kernels::sgd_step(x, g, lr);
     }
 }
 
@@ -62,15 +61,7 @@ impl SyncOptimizer for MomentumSgd {
         let d = self.m.len();
         assert_eq!(x.len(), d, "MomentumSgd: x dim");
         assert_eq!(g.len(), d, "MomentumSgd: g dim");
-        let mu = self.mu;
-        let m = &mut self.m[..d];
-        let x = &mut x[..d];
-        let g = &g[..d];
-        for i in 0..d {
-            let v = mu * m[i] + g[i];
-            m[i] = v;
-            x[i] -= lr * v;
-        }
+        crate::util::kernels::momentum_step(x, &mut self.m, g, self.mu, lr);
     }
 
     fn algorithm(&self) -> Algorithm {

@@ -1,0 +1,489 @@
+//! Shared hot-path kernels — the one home for every per-element loop the
+//! training hot paths execute (DESIGN.md §6).
+//!
+//! Before this module, each call site owned a private copy of its loop:
+//! the optimizer steps in [`crate::optim`], the leader-side averaging in
+//! [`crate::coordinator::aggregate`], and the delta coding of
+//! [`crate::comm`]'s compressed transports. Centralising them buys three
+//! things:
+//!
+//! * **One bitwise-pinned implementation.** The equivalence tests pin the
+//!   exact f32 op order; with a single copy, an optimisation (or a bug)
+//!   cannot drift one caller away from the others.
+//! * **Autovectorizer-friendly shape.** Every kernel operates on
+//!   pre-narrowed contiguous slices with bounds checks hoisted out of the
+//!   hot body, and the multi-input reductions are cache-blocked
+//!   ([`MEAN_CHUNK`]) so accumulator chunks stay in L1 across the n input
+//!   passes.
+//! * **Zero-allocation discipline.** Kernels never allocate; callers bring
+//!   every buffer (see [`crate::util::pool::BufferPool`]), which is what
+//!   the counting-allocator test leans on.
+//!
+//! Bitwise contract: each kernel performs *exactly* the arithmetic, in
+//! exactly the per-element order, of the loop it replaced. Cache blocking
+//! only regroups loop iterations; it never reassociates a single
+//! element's operations, so results are bit-identical to the unblocked
+//! form.
+
+/// Panic-with-context helper for length mismatches (protocol invariant).
+#[inline]
+fn check_len(a: usize, b: usize, what: &str) {
+    assert_eq!(a, b, "length mismatch in {what}: {a} vs {b}");
+}
+
+/// Cache-blocking chunk for multi-input reductions: 4 KiB of f32 keeps the
+/// accumulator chunk resident in L1 across the n input passes, turning the
+/// n-way mean from (n reads + n read-modify-writes of `out`) into
+/// (n reads + 1 write) of DRAM traffic. EXPERIMENTS.md §Perf.
+pub const MEAN_CHUNK: usize = 1024;
+
+/// `out[i] = mean_k inputs[k][i]` — the Alg. 4 lines 11–12 synchronization
+/// average. `inputs` must be non-empty and same-length. Generic over the
+/// row type so both `&[&[f32]]` (leader gathers) and `&[Vec<f32>]`
+/// (pooled staging buffers) average without building a borrow vector.
+pub fn mean_into<S: AsRef<[f32]>>(inputs: &[S], out: &mut [f32]) {
+    assert!(!inputs.is_empty(), "mean_into: no inputs");
+    let d = out.len();
+    for v in inputs {
+        check_len(v.as_ref().len(), d, "mean_into");
+    }
+    let scale = 1.0 / inputs.len() as f32;
+    let mut start = 0;
+    while start < d {
+        let end = (start + MEAN_CHUNK).min(d);
+        let out_c = &mut out[start..end];
+        out_c.copy_from_slice(&inputs[0].as_ref()[start..end]);
+        for v in &inputs[1..] {
+            let v = &v.as_ref()[start..end];
+            for (o, &x) in out_c.iter_mut().zip(v) {
+                *o += x;
+            }
+        }
+        for o in out_c.iter_mut() {
+            *o *= scale;
+        }
+        start = end;
+    }
+}
+
+/// Simultaneously `avg_g = (1/n) Σ_i g_i` and `avg_gsq = (1/n) Σ_i g_i∘g_i`
+/// — one pass over the inputs, both outputs written per cache line
+/// (Alg. 3 needs both: line 5 + line 7).
+pub fn mean_and_squares_into<S: AsRef<[f32]>>(
+    inputs: &[S],
+    avg_g: &mut [f32],
+    avg_gsq: &mut [f32],
+) {
+    assert!(!inputs.is_empty(), "mean_and_squares_into: no inputs");
+    let d = avg_g.len();
+    check_len(avg_gsq.len(), d, "mean_and_squares_into");
+    for g in inputs {
+        check_len(g.as_ref().len(), d, "mean_and_squares_into");
+    }
+    let scale = 1.0 / inputs.len() as f32;
+    let mut start = 0;
+    while start < d {
+        let end = (start + MEAN_CHUNK).min(d);
+        let (gc, qc) = (&mut avg_g[start..end], &mut avg_gsq[start..end]);
+        let first = &inputs[0].as_ref()[start..end];
+        for i in 0..gc.len() {
+            let v = first[i];
+            gc[i] = v;
+            qc[i] = v * v;
+        }
+        for g in &inputs[1..] {
+            let g = &g.as_ref()[start..end];
+            for i in 0..gc.len() {
+                let v = g[i];
+                gc[i] += v;
+                qc[i] += v * v;
+            }
+        }
+        for i in 0..gc.len() {
+            gc[i] *= scale;
+            qc[i] *= scale;
+        }
+        start = end;
+    }
+}
+
+/// `out[i] = x[i]²` — AdaGrad's Alg. 1 line 6 squares the *averaged*
+/// gradient.
+pub fn square_into(x: &[f32], out: &mut [f32]) {
+    check_len(x.len(), out.len(), "square_into");
+    let d = out.len();
+    let x = &x[..d];
+    for i in 0..d {
+        out[i] = x[i] * x[i];
+    }
+}
+
+/// In-place `acc += x`.
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    check_len(acc.len(), x.len(), "add_assign");
+    let d = acc.len();
+    let x = &x[..d];
+    for i in 0..d {
+        acc[i] += x[i];
+    }
+}
+
+/// In-place `acc *= s` (scaled accumulate's epilogue).
+pub fn scale_assign(acc: &mut [f32], s: f32) {
+    for v in acc.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// In-place `acc += s * x` (axpy).
+pub fn axpy(acc: &mut [f32], s: f32, x: &[f32]) {
+    check_len(acc.len(), x.len(), "axpy");
+    let d = acc.len();
+    let x = &x[..d];
+    for i in 0..d {
+        acc[i] += s * x[i];
+    }
+}
+
+/// In-place `acc += g ∘ g` (squared-gradient accumulate, Alg. 1/3 line 6/7
+/// building block).
+pub fn sq_accumulate(acc: &mut [f32], g: &[f32]) {
+    check_len(acc.len(), g.len(), "sq_accumulate");
+    let d = acc.len();
+    let g = &g[..d];
+    for i in 0..d {
+        acc[i] += g[i] * g[i];
+    }
+}
+
+/// Plain SGD update: `x ← x − lr·g`.
+pub fn sgd_step(x: &mut [f32], g: &[f32], lr: f32) {
+    check_len(x.len(), g.len(), "sgd_step");
+    let d = x.len();
+    let g = &g[..d];
+    for i in 0..d {
+        x[i] -= lr * g[i];
+    }
+}
+
+/// `‖lr·g‖²` in f64 — the SGD drift proxy, computed exactly as the local
+/// step would apply it (`Δx = −lr·g`), without touching the update.
+pub fn sgd_update_sq(g: &[f32], lr: f32) -> f64 {
+    g.iter()
+        .map(|&gv| {
+            let u = (lr * gv) as f64;
+            u * u
+        })
+        .sum()
+}
+
+/// Heavy-ball momentum update: `m ← μ·m + g; x ← x − lr·m`, fused.
+pub fn momentum_step(x: &mut [f32], m: &mut [f32], g: &[f32], mu: f32, lr: f32) {
+    let d = m.len();
+    check_len(x.len(), d, "momentum_step");
+    check_len(g.len(), d, "momentum_step");
+    let x = &mut x[..d];
+    let g = &g[..d];
+    for i in 0..d {
+        let v = mu * m[i] + g[i];
+        m[i] = v;
+        x[i] -= lr * v;
+    }
+}
+
+/// AdaGrad step (Alg. 1 lines 6–7), fused single pass: accumulate the
+/// squared averaged gradient FIRST, update with the fresh denominator.
+pub fn adagrad_step(x: &mut [f32], b2: &mut [f32], g: &[f32], gsq: &[f32], lr: f32, eps2: f32) {
+    let d = b2.len();
+    check_len(x.len(), d, "adagrad_step");
+    check_len(g.len(), d, "adagrad_step");
+    check_len(gsq.len(), d, "adagrad_step");
+    let x = &mut x[..d];
+    let g = &g[..d];
+    let gsq = &gsq[..d];
+    for i in 0..d {
+        let b2i = b2[i] + gsq[i];
+        b2[i] = b2i;
+        x[i] -= lr * g[i] / (b2i + eps2).sqrt();
+    }
+}
+
+/// AdaAlter step (Alg. 3 lines 6–7), fused single pass: update with the
+/// STALE denominator, then fold the fresh squares in.
+pub fn adaalter_step(x: &mut [f32], b2: &mut [f32], g: &[f32], gsq: &[f32], lr: f32, eps2: f32) {
+    let d = b2.len();
+    check_len(x.len(), d, "adaalter_step");
+    check_len(g.len(), d, "adaalter_step");
+    check_len(gsq.len(), d, "adaalter_step");
+    let x = &mut x[..d];
+    let g = &g[..d];
+    let gsq = &gsq[..d];
+    for i in 0..d {
+        let stale = b2[i];
+        x[i] -= lr * g[i] / (stale + eps2).sqrt();
+        b2[i] = stale + gsq[i];
+    }
+}
+
+/// Local AdaAlter step (Alg. 4 lines 5–7), fused single pass over the
+/// three streams: `x ← x − lr·g/√(b2_sync + denom_add)`, `acc += g∘g`.
+/// Returns `‖Δx‖²` (f64), the drift proxy adaptive sync policies consume.
+pub fn local_adaalter_step(
+    x: &mut [f32],
+    b2_sync: &[f32],
+    acc: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    denom_add: f32,
+) -> f64 {
+    let d = x.len();
+    check_len(b2_sync.len(), d, "local_adaalter_step");
+    check_len(acc.len(), d, "local_adaalter_step");
+    check_len(g.len(), d, "local_adaalter_step");
+    let b2 = &b2_sync[..d];
+    let acc = &mut acc[..d];
+    let g = &g[..d];
+    let mut update_sq = 0.0f64;
+    for i in 0..d {
+        let gi = g[i];
+        let du = lr * gi / (b2[i] + denom_add).sqrt();
+        x[i] -= du;
+        acc[i] += gi * gi;
+        update_sq += du as f64 * du as f64;
+    }
+    update_sq
+}
+
+/// Delta encode: `out[i] = src[i] − base[i]` (the quantity compressed
+/// local-SGD actually ships; DESIGN.md §3).
+pub fn delta_encode(src: &[f32], base: &[f32], out: &mut [f32]) {
+    let d = out.len();
+    check_len(src.len(), d, "delta_encode");
+    check_len(base.len(), d, "delta_encode");
+    let src = &src[..d];
+    let base = &base[..d];
+    for i in 0..d {
+        out[i] = src[i] - base[i];
+    }
+}
+
+/// Delta decode: `out[i] = base[i] + delta[i]`.
+pub fn delta_decode(base: &[f32], delta: &[f32], out: &mut [f32]) {
+    let d = out.len();
+    check_len(base.len(), d, "delta_decode");
+    check_len(delta.len(), d, "delta_decode");
+    let base = &base[..d];
+    let delta = &delta[..d];
+    for i in 0..d {
+        out[i] = base[i] + delta[i];
+    }
+}
+
+/// Delta decode clamped at zero: `out[i] = max(base[i] + delta[i], 0)` —
+/// the denominator install after a lossy roundtrip (the `t'·ε²`
+/// placeholder keeps the installed denominator strictly positive, so
+/// training stays finite).
+pub fn delta_decode_clamped(base: &[f32], delta: &[f32], out: &mut [f32]) {
+    let d = out.len();
+    check_len(base.len(), d, "delta_decode_clamped");
+    check_len(delta.len(), d, "delta_decode_clamped");
+    let base = &base[..d];
+    let delta = &delta[..d];
+    for i in 0..d {
+        out[i] = (base[i] + delta[i]).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn randv(seed: u64, d: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; d];
+        Rng::new(seed).fill_normal(&mut v, 1.0);
+        v
+    }
+
+    /// The bitwise contract: the chunked mean equals the naive
+    /// sum-then-scale per-element recurrence EXACTLY (same op order).
+    #[test]
+    fn mean_into_bitwise_matches_naive() {
+        prop::check("mean_into bitwise", 40, |g| {
+            let d = g.usize_in(1..3000);
+            let n = g.usize_in(1..6);
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(d..d + 1, -3.0..3.0)).collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+            let mut out = vec![0.0f32; d];
+            mean_into(&refs, &mut out);
+            // Naive: out = in0; out += in_k; out *= 1/n — element-wise.
+            let scale = 1.0 / n as f32;
+            for i in 0..d {
+                let mut acc = rows[0][i];
+                for row in &rows[1..] {
+                    acc += row[i];
+                }
+                acc *= scale;
+                prop::assert_that(
+                    out[i].to_bits() == acc.to_bits(),
+                    format!("mean_into[{i}] not bitwise: {} vs {acc}", out[i]),
+                )?;
+            }
+            // The Vec-row overload runs the same kernel.
+            let mut out2 = vec![0.0f32; d];
+            mean_into(&rows, &mut out2);
+            prop::assert_that(out == out2, "Vec-row overload diverged")
+        });
+    }
+
+    #[test]
+    fn mean_and_squares_bitwise_matches_naive() {
+        prop::check("mean_and_squares bitwise", 30, |g| {
+            let d = g.usize_in(1..2500);
+            let n = g.usize_in(1..6);
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(d..d + 1, -3.0..3.0)).collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+            let mut avg_g = vec![0.0f32; d];
+            let mut avg_gsq = vec![0.0f32; d];
+            mean_and_squares_into(&refs, &mut avg_g, &mut avg_gsq);
+            let scale = 1.0 / n as f32;
+            for i in 0..d {
+                let mut sg = rows[0][i];
+                let mut sq = rows[0][i] * rows[0][i];
+                for row in &rows[1..] {
+                    let v = row[i];
+                    sg += v;
+                    sq += v * v;
+                }
+                sg *= scale;
+                sq *= scale;
+                prop::assert_that(
+                    avg_g[i].to_bits() == sg.to_bits() && avg_gsq[i].to_bits() == sq.to_bits(),
+                    format!("joint mean[{i}] not bitwise"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn elementwise_kernels_match_hand_loops() {
+        let d = 37;
+        let g = randv(1, d);
+        let gsq: Vec<f32> = g.iter().map(|v| v * v).collect();
+
+        // adagrad_step vs the original fused loop.
+        let mut x = randv(2, d);
+        let mut b2 = vec![1.0f32; d];
+        let (mut xe, mut b2e) = (x.clone(), b2.clone());
+        adagrad_step(&mut x, &mut b2, &g, &gsq, 0.3, 1.0);
+        for i in 0..d {
+            let b2i = b2e[i] + gsq[i];
+            b2e[i] = b2i;
+            xe[i] -= 0.3 * g[i] / (b2i + 1.0).sqrt();
+        }
+        assert_eq!(x, xe);
+        assert_eq!(b2, b2e);
+
+        // adaalter_step vs the original fused loop.
+        let mut x = randv(3, d);
+        let mut b2 = vec![1.0f32; d];
+        let (mut xe, mut b2e) = (x.clone(), b2.clone());
+        adaalter_step(&mut x, &mut b2, &g, &gsq, 0.3, 1.0);
+        for i in 0..d {
+            let stale = b2e[i];
+            xe[i] -= 0.3 * g[i] / (stale + 1.0).sqrt();
+            b2e[i] = stale + gsq[i];
+        }
+        assert_eq!(x, xe);
+        assert_eq!(b2, b2e);
+
+        // local_adaalter_step vs the original three-stream loop.
+        let mut x = randv(4, d);
+        let b2s = vec![1.0f32; d];
+        let mut acc = vec![1.0f32; d];
+        let (mut xe, mut acce) = (x.clone(), acc.clone());
+        let upd = local_adaalter_step(&mut x, &b2s, &mut acc, &g, 0.5, 2.0);
+        let mut upde = 0.0f64;
+        for i in 0..d {
+            let du = 0.5 * g[i] / (b2s[i] + 2.0).sqrt();
+            xe[i] -= du;
+            acce[i] += g[i] * g[i];
+            upde += du as f64 * du as f64;
+        }
+        assert_eq!(x, xe);
+        assert_eq!(acc, acce);
+        assert_eq!(upd.to_bits(), upde.to_bits());
+
+        // sgd_step + sgd_update_sq.
+        let mut x = randv(5, d);
+        let mut xe = x.clone();
+        let upd = sgd_update_sq(&g, 0.1);
+        sgd_step(&mut x, &g, 0.1);
+        let mut upde = 0.0f64;
+        for i in 0..d {
+            let u = (0.1 * g[i]) as f64;
+            upde += u * u;
+            xe[i] -= 0.1 * g[i];
+        }
+        assert_eq!(x, xe);
+        assert_eq!(upd.to_bits(), upde.to_bits());
+    }
+
+    #[test]
+    fn delta_roundtrip_and_clamp() {
+        let base = randv(7, 64);
+        let src = randv(8, 64);
+        let mut delta = vec![0.0f32; 64];
+        let mut back = vec![0.0f32; 64];
+        delta_encode(&src, &base, &mut delta);
+        delta_decode(&base, &delta, &mut back);
+        for i in 0..64 {
+            // f32 subtract-then-add is not exact in general; exact when
+            // magnitudes are comparable — just check the identity used.
+            assert_eq!(back[i].to_bits(), (base[i] + (src[i] - base[i])).to_bits());
+        }
+        let base = [1.0f32, 0.5, 0.0];
+        let delta = [-2.0f32, 0.25, -0.5];
+        let mut out = [9.0f32; 3];
+        delta_decode_clamped(&base, &delta, &mut out);
+        assert_eq!(out, [0.0, 0.75, 0.0]);
+    }
+
+    #[test]
+    fn accumulate_kernels() {
+        let mut acc = vec![1.0f32; 4];
+        axpy(&mut acc, 2.0, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(acc, vec![3.0, 5.0, 7.0, 9.0]);
+        add_assign(&mut acc, &[1.0; 4]);
+        assert_eq!(acc, vec![4.0, 6.0, 8.0, 10.0]);
+        scale_assign(&mut acc, 0.5);
+        assert_eq!(acc, vec![2.0, 3.0, 4.0, 5.0]);
+        let mut sq = vec![1.0f32; 3];
+        sq_accumulate(&mut sq, &[2.0, -3.0, 0.0]);
+        assert_eq!(sq, vec![5.0, 10.0, 1.0]);
+        let mut out = vec![0.0f32; 2];
+        square_into(&[3.0, -2.0], &mut out);
+        assert_eq!(out, vec![9.0, 4.0]);
+    }
+
+    #[test]
+    fn momentum_kernel_matches_hand_loop() {
+        let mut x = vec![0.0f32; 2];
+        let mut m = vec![0.0f32; 2];
+        momentum_step(&mut x, &mut m, &[1.0, -1.0], 0.5, 1.0);
+        assert_eq!(m, vec![1.0, -1.0]);
+        assert_eq!(x, vec![-1.0, 1.0]);
+        momentum_step(&mut x, &mut m, &[1.0, -1.0], 0.5, 1.0);
+        assert_eq!(m, vec![1.5, -1.5]);
+        assert_eq!(x, vec![-2.5, 2.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn ragged_inputs_rejected() {
+        let mut out = vec![0.0f32; 3];
+        mean_into(&[&[1.0f32, 2.0][..]], &mut out);
+    }
+}

@@ -1,10 +1,14 @@
 //! Flat-vector math used on the coordinator hot paths.
 //!
 //! Everything operates on contiguous `&[f32]` / `&mut [f32]` so LLVM can
-//! auto-vectorise; the loops are written without bounds checks in their hot
-//! bodies (slices are pre-narrowed to a common length). The optimizer-step
-//! fused loops live in [`crate::optim`]; these are the shared aggregation /
-//! norm primitives.
+//! auto-vectorise. The per-element hot loops themselves live in
+//! [`crate::util::kernels`] (one bitwise-pinned copy shared by the
+//! optimizers, the aggregator and the compressed transports; DESIGN.md
+//! §6); this module re-exposes the aggregation entry points the rest of
+//! the crate historically imported from here, plus the norm/diff
+//! primitives that have no other home.
+
+use crate::util::kernels;
 
 /// Panic-with-context helper for length mismatches (protocol invariant).
 #[inline]
@@ -12,64 +16,26 @@ fn check_len(a: usize, b: usize, what: &str) {
     assert_eq!(a, b, "length mismatch in {what}: {a} vs {b}");
 }
 
-/// Cache-blocking chunk for multi-input reductions: 4 KiB of f32 keeps the
-/// accumulator chunk resident in L1 across the n input passes, turning the
-/// n-way mean from (n reads + n read-modify-writes of `out`) into
-/// (n reads + 1 write) of DRAM traffic. EXPERIMENTS.md §Perf.
-const MEAN_CHUNK: usize = 1024;
-
 /// `out[i] = mean_k inputs[k][i]` — the Alg. 4 lines 11–12 synchronization
-/// average. `inputs` must be non-empty and same-length.
+/// average. `inputs` must be non-empty and same-length. Delegates to the
+/// shared cache-blocked kernel ([`kernels::mean_into`]).
 pub fn mean_into(inputs: &[&[f32]], out: &mut [f32]) {
-    assert!(!inputs.is_empty(), "mean_into: no inputs");
-    let d = out.len();
-    for v in inputs {
-        check_len(v.len(), d, "mean_into");
-    }
-    let scale = 1.0 / inputs.len() as f32;
-    let mut start = 0;
-    while start < d {
-        let end = (start + MEAN_CHUNK).min(d);
-        let out_c = &mut out[start..end];
-        out_c.copy_from_slice(&inputs[0][start..end]);
-        for v in &inputs[1..] {
-            let v = &v[start..end];
-            for (o, &x) in out_c.iter_mut().zip(v) {
-                *o += x;
-            }
-        }
-        for o in out_c.iter_mut() {
-            *o *= scale;
-        }
-        start = end;
-    }
+    kernels::mean_into(inputs, out);
 }
 
-/// In-place `acc += x`.
+/// In-place `acc += x` ([`kernels::add_assign`]).
 pub fn add_assign(acc: &mut [f32], x: &[f32]) {
-    check_len(acc.len(), x.len(), "add_assign");
-    let d = acc.len();
-    let x = &x[..d];
-    for i in 0..d {
-        acc[i] += x[i];
-    }
+    kernels::add_assign(acc, x);
 }
 
-/// In-place `acc *= s`.
+/// In-place `acc *= s` ([`kernels::scale_assign`]).
 pub fn scale_assign(acc: &mut [f32], s: f32) {
-    for v in acc.iter_mut() {
-        *v *= s;
-    }
+    kernels::scale_assign(acc, s);
 }
 
-/// In-place `acc += s * x` (axpy).
+/// In-place `acc += s * x` ([`kernels::axpy`]).
 pub fn axpy(acc: &mut [f32], s: f32, x: &[f32]) {
-    check_len(acc.len(), x.len(), "axpy");
-    let d = acc.len();
-    let x = &x[..d];
-    for i in 0..d {
-        acc[i] += s * x[i];
-    }
+    kernels::axpy(acc, s, x);
 }
 
 /// Euclidean norm.

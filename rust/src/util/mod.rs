@@ -1,11 +1,14 @@
 //! Small self-contained substrates the offline build image forces us to own:
-//! PRNG (no `rand`), property-testing harness (no `proptest`), JSON reader
-//! (no `serde`), CSV writer, and the SIMD-friendly vector math the hot paths
-//! use.
+//! PRNG (no `rand`), property-testing harness (no `proptest`), JSON
+//! reader/writer (no `serde`), CSV writer, the shared hot-path kernels and
+//! buffer pool (DESIGN.md §6), and the SIMD-friendly vector math the hot
+//! paths use.
 
 pub mod csv;
 pub mod json;
+pub mod kernels;
 pub mod math;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod timing;

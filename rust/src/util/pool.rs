@@ -1,0 +1,150 @@
+//! Step-scoped buffer reuse for the training hot paths (DESIGN.md §6).
+//!
+//! Two small tools with one goal: steady-state training should not touch
+//! the allocator.
+//!
+//! * [`BufferPool`] — a free-list of `f32` scratch vectors. The leader
+//!   owns one: gradient buffers ride `Cmd::SyncStep` down to the workers
+//!   and come back inside `Reply::Grad`; state-collection buffers ride
+//!   `Cmd::CollectState` and come back inside `Reply::State` — in both
+//!   cases the leader parks the returned vectors here and hands the same
+//!   allocations out on the next round. (Codec scratch — QSGD level
+//!   buffers, top-k select indices, delta staging — is owned by the codec
+//!   and collective structs directly, since its shapes are fixed.)
+//! * [`ArcSlot`] — a recycler for `Arc<Vec<f32>>` broadcast payloads: the
+//!   leader ships one shared payload per round ([`std::sync::Arc`] clones,
+//!   not vector clones), and once every worker has dropped its handle the
+//!   same allocation is refilled for the next round instead of
+//!   reallocated.
+//!
+//! The counting-allocator test (`rust/tests/integration_alloc.rs`) pins
+//! the zero-steady-state-allocation property of the paths built on these.
+
+use std::sync::Arc;
+
+/// A free-list of reusable `f32` scratch vectors.
+///
+/// [`BufferPool::take`]`(len)` returns a vector resized to `len`
+/// (contents unspecified — callers must overwrite); [`BufferPool::put`]
+/// returns it for reuse. Taking from an empty pool allocates, so steady
+/// state is allocation-free once the pool has warmed up to the working
+/// set.
+#[derive(Default)]
+pub struct BufferPool {
+    free: Vec<Vec<f32>>,
+}
+
+impl BufferPool {
+    /// Empty pool.
+    pub fn new() -> Self {
+        BufferPool::default()
+    }
+
+    /// Take a buffer of length `len` (zero-filled only on fresh
+    /// allocation; reused buffers keep stale contents).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a buffer for reuse.
+    pub fn put(&mut self, v: Vec<f32>) {
+        self.free.push(v);
+    }
+
+    /// Buffers currently parked in the pool (diagnostics / tests).
+    pub fn parked(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Recycler for a leader-broadcast `Arc<Vec<f32>>` payload.
+///
+/// The lockstep protocol guarantees every worker drops its handle before
+/// the leader's next broadcast (workers release the payload before
+/// replying), so by the time [`ArcSlot::fill`] runs again the slot's
+/// allocation is unique and can be overwritten in place. If a handle is
+/// still live (e.g. a crashed cell that released late), `fill` falls back
+/// to a fresh allocation — correctness never depends on the recycle.
+#[derive(Default)]
+pub struct ArcSlot {
+    slot: Option<Arc<Vec<f32>>>,
+}
+
+impl ArcSlot {
+    /// Empty slot.
+    pub fn new() -> Self {
+        ArcSlot::default()
+    }
+
+    /// Return a shared payload holding a copy of `src`, reusing the
+    /// previous round's allocation when it is no longer shared.
+    pub fn fill(&mut self, src: &[f32]) -> Arc<Vec<f32>> {
+        let arc = match self.slot.take() {
+            Some(mut a) => match Arc::get_mut(&mut a) {
+                Some(buf) if buf.len() == src.len() => {
+                    buf.copy_from_slice(src);
+                    a
+                }
+                _ => Arc::new(src.to_vec()),
+            },
+            None => Arc::new(src.to_vec()),
+        };
+        self.slot = Some(Arc::clone(&arc));
+        arc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_reuses_buffers() {
+        let mut p = BufferPool::new();
+        let a = p.take(16);
+        assert_eq!(a.len(), 16);
+        let ptr = a.as_ptr();
+        p.put(a);
+        assert_eq!(p.parked(), 1);
+        // Shrinking reuse keeps the allocation — no new allocation.
+        let b = p.take(8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(b.as_ptr(), ptr);
+        assert_eq!(p.parked(), 0);
+    }
+
+    #[test]
+    fn empty_pool_allocates_fresh_zeroed() {
+        let mut p = BufferPool::new();
+        let v = p.take(4);
+        assert_eq!(v, vec![0.0f32; 4]);
+    }
+
+    #[test]
+    fn arc_slot_recycles_when_unique() {
+        let mut s = ArcSlot::new();
+        let a = s.fill(&[1.0, 2.0]);
+        assert_eq!(a.as_slice(), &[1.0, 2.0]);
+        let ptr = Arc::as_ptr(&a);
+        drop(a); // all external handles gone → next fill reuses
+        let b = s.fill(&[3.0, 4.0]);
+        assert_eq!(b.as_slice(), &[3.0, 4.0]);
+        assert_eq!(Arc::as_ptr(&b), ptr);
+    }
+
+    #[test]
+    fn arc_slot_falls_back_when_shared_or_resized() {
+        let mut s = ArcSlot::new();
+        let a = s.fill(&[1.0, 2.0]);
+        // `a` still live → the slot is shared and must not be overwritten.
+        let b = s.fill(&[5.0, 6.0]);
+        assert_eq!(a.as_slice(), &[1.0, 2.0]);
+        assert_eq!(b.as_slice(), &[5.0, 6.0]);
+        drop((a, b));
+        // Length change → fresh allocation of the right size.
+        let c = s.fill(&[7.0]);
+        assert_eq!(c.as_slice(), &[7.0]);
+    }
+}

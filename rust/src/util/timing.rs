@@ -5,8 +5,17 @@
 //! simple — the figure-level benches care about model-derived numbers, and
 //! the hot-path benches about order-of-magnitude and before/after deltas
 //! (EXPERIMENTS.md §Perf).
+//!
+//! Besides the human-readable [`report`] rows, every bench records its
+//! numbers into a [`BenchSink`] and writes a machine-readable
+//! `BENCH_<bench>.json` next to the working directory, so the perf
+//! trajectory is tracked in-repo from PR 4 onward instead of scrolling by
+//! on stdout.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// Result of one timed benchmark.
 #[derive(Clone, Copy, Debug)]
@@ -78,6 +87,94 @@ pub fn report(name: &str, stats: &BenchStats, extra: &str) {
     );
 }
 
+/// Machine-readable bench result sink: collects named rows (timed stats
+/// and/or free-form metric values) and writes them as one
+/// `BENCH_<bench>.json` document — `{"bench": ..., "rows": [...]}`, each
+/// row `{"name", "metrics": {...}}` plus `median_ns`/`mean_ns`/`min_ns`/
+/// `iters_per_batch`/`batches`/`per_second` when the row was timed.
+pub struct BenchSink {
+    bench: String,
+    rows: Vec<Json>,
+}
+
+fn metrics_obj(metrics: &[(&str, f64)]) -> Json {
+    let mut m = BTreeMap::new();
+    for &(k, v) in metrics {
+        m.insert(k.to_string(), Json::Num(v));
+    }
+    Json::Obj(m)
+}
+
+impl BenchSink {
+    /// Sink for bench target `bench` (used in the output file name).
+    pub fn new(bench: &str) -> Self {
+        BenchSink { bench: bench.to_string(), rows: Vec::new() }
+    }
+
+    /// Record one timed row with optional derived metrics
+    /// (bytes-per-iteration, GB/s, steps/s, …).
+    pub fn timed(&mut self, name: &str, stats: &BenchStats, metrics: &[(&str, f64)]) {
+        let mut row = BTreeMap::new();
+        row.insert("name".into(), Json::Str(name.to_string()));
+        row.insert("median_ns".into(), Json::Num(stats.median_ns));
+        row.insert("mean_ns".into(), Json::Num(stats.mean_ns));
+        row.insert("min_ns".into(), Json::Num(stats.min_ns));
+        row.insert("iters_per_batch".into(), Json::Num(stats.iters_per_batch as f64));
+        row.insert("batches".into(), Json::Num(stats.batches as f64));
+        row.insert("per_second".into(), Json::Num(stats.per_second()));
+        row.insert("metrics".into(), metrics_obj(metrics));
+        self.rows.push(Json::Obj(row));
+    }
+
+    /// Record one untimed row — model-derived numbers (throughputs,
+    /// speedup ratios, byte counts) that have no ns/iter reading.
+    pub fn value(&mut self, name: &str, metrics: &[(&str, f64)]) {
+        let mut row = BTreeMap::new();
+        row.insert("name".into(), Json::Str(name.to_string()));
+        row.insert("metrics".into(), metrics_obj(metrics));
+        self.rows.push(Json::Obj(row));
+    }
+
+    /// The collected document.
+    pub fn to_json(&self) -> Json {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".into(), Json::Str(self.bench.clone()));
+        doc.insert("rows".into(), Json::Arr(self.rows.clone()));
+        Json::Obj(doc)
+    }
+
+    /// Rows recorded so far.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Write `BENCH_<bench>.json` into `dir` (the repo root when invoked
+    /// via `cargo bench`); returns the path written.
+    pub fn write_in(&self, dir: &str) -> std::io::Result<String> {
+        let path = if dir.is_empty() {
+            format!("BENCH_{}.json", self.bench)
+        } else {
+            format!("{dir}/BENCH_{}.json", self.bench)
+        };
+        std::fs::write(&path, self.to_json().dump() + "\n")?;
+        Ok(path)
+    }
+
+    /// [`BenchSink::write_in`] the current directory, printing the path —
+    /// the one-line epilogue every bench target calls.
+    pub fn finish(&self) {
+        match self.write_in("") {
+            Ok(path) => println!("\nwrote {path} ({} rows)", self.rows.len()),
+            Err(e) => eprintln!("\nfailed to write BENCH_{}.json: {e}", self.bench),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +188,42 @@ mod tests {
         assert!(s.median_ns > 0.0);
         assert!(s.min_ns <= s.median_ns);
         assert!(s.per_second() > 0.0);
+    }
+
+    #[test]
+    fn sink_collects_and_serializes_rows() {
+        let mut sink = BenchSink::new("unit_test");
+        assert!(sink.is_empty());
+        let s = BenchStats {
+            iters_per_batch: 4,
+            batches: 2,
+            median_ns: 500.0,
+            mean_ns: 510.0,
+            min_ns: 490.0,
+        };
+        sink.timed("kernel_a", &s, &[("bytes_per_iter", 1024.0)]);
+        sink.value("speedup", &[("threads8_vs_serial", 3.5)]);
+        assert_eq!(sink.len(), 2);
+        let doc = sink.to_json();
+        assert_eq!(doc.req("bench").unwrap().str().unwrap(), "unit_test");
+        let rows = doc.req("rows").unwrap().arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].req("name").unwrap().str().unwrap(), "kernel_a");
+        assert_eq!(rows[0].req("median_ns").unwrap().num().unwrap(), 500.0);
+        assert_eq!(
+            rows[0].req("metrics").unwrap().req("bytes_per_iter").unwrap().num().unwrap(),
+            1024.0
+        );
+        assert!(rows[1].get("median_ns").is_none());
+        // The dump parses back to the same document.
+        let text = doc.dump();
+        assert_eq!(crate::util::json::Json::parse(&text).unwrap(), doc);
+        // And survives a disk roundtrip in a temp dir.
+        let dir = std::env::temp_dir().join(format!("adaalter_sink_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = sink.write_in(dir.to_str().unwrap()).unwrap();
+        let read = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(crate::util::json::Json::parse(read.trim()).unwrap(), doc);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Steady-state zero-allocation pins (ISSUE 5 acceptance; DESIGN.md §6):
+//! once warm, the training hot paths — per-worker optimizer steps driven
+//! through the execution engine, leader-side aggregation, the sync-round
+//! averaging kernels, and both compression codecs including the full
+//! compressed sync round — must not touch the global allocator at all.
+//!
+//! Boundary: the lockstep *message* layer is exempt by design —
+//! `std::sync::mpsc` allocates a queue node per send — so these pins
+//! drive the compute/averaging/codec paths directly, exactly as the
+//! engine executes them, rather than through the channel transport.
+//!
+//! The whole suite is one `#[test]` function: the allocation counter is
+//! process-global, and a sibling test running concurrently would pollute
+//! the steady-state windows.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use adaalter::comm::compress::{QsgdEncoded, QsgdQuantizer, SparseGrad, TopKSparsifier};
+use adaalter::comm::{ChannelCollective, Collective, CompressedCollective, NetModel};
+use adaalter::config::NetConfig;
+use adaalter::coordinator::aggregate::Aggregator;
+use adaalter::coordinator::Executor;
+use adaalter::optim::{AdaGrad, LocalAdaAlterWorker, SyncOptimizer};
+use adaalter::util::kernels;
+use adaalter::util::pool::{ArcSlot, BufferPool};
+use adaalter::util::rng::Rng;
+
+/// Counts every allocator entry (alloc, alloc_zeroed, realloc) and
+/// delegates to the system allocator.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Allocator entries observed while running `f` on this thread.
+fn allocs_during(f: impl FnOnce()) -> u64 {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    f();
+    ALLOCS.load(Ordering::Relaxed) - before
+}
+
+fn randn(d: usize, seed: u64) -> Vec<f32> {
+    let mut v = vec![0.0f32; d];
+    Rng::new(seed).fill_normal(&mut v, 1.0);
+    v
+}
+
+#[test]
+fn steady_state_hot_paths_allocate_zero() {
+    let d = 4096usize;
+    let n = 4usize;
+
+    // --- engine-driven local steps (Alg. 4 lines 5–7) -------------------
+    {
+        let ex = Executor::serial();
+        let mut workers: Vec<LocalAdaAlterWorker> =
+            (0..n).map(|w| LocalAdaAlterWorker::new(randn(d, 10 + w as u64), 1.0, 1.0)).collect();
+        let grads: Vec<Vec<f32>> = (0..n).map(|w| randn(d, 20 + w as u64)).collect();
+        let mut out: Vec<Option<f64>> = vec![None; n];
+        // Warm-up round, then the measured steady-state rounds.
+        ex.map(&mut workers, &mut out, |w, st| st.local_step(&grads[w], 0.1));
+        let got = allocs_during(|| {
+            for _ in 0..5 {
+                ex.map(&mut workers, &mut out, |w, st| st.local_step(&grads[w], 0.1));
+            }
+        });
+        assert_eq!(got, 0, "engine local steps allocated");
+    }
+
+    // --- sync-round staging + averaging (Alg. 4 lines 11–12) ------------
+    {
+        let mut workers: Vec<LocalAdaAlterWorker> =
+            (0..n).map(|w| LocalAdaAlterWorker::new(randn(d, 30 + w as u64), 1.0, 1.0)).collect();
+        let grads: Vec<Vec<f32>> = (0..n).map(|w| randn(d, 40 + w as u64)).collect();
+        let mut x_stage: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; d]).collect();
+        let mut acc_stage: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; d]).collect();
+        let mut avg_x = vec![0.0f32; d];
+        let mut avg_acc = vec![0.0f32; d];
+        let mut round = |workers: &mut Vec<LocalAdaAlterWorker>,
+                         x_stage: &mut Vec<Vec<f32>>,
+                         acc_stage: &mut Vec<Vec<f32>>,
+                         avg_x: &mut Vec<f32>,
+                         avg_acc: &mut Vec<f32>| {
+            for (w, st) in workers.iter_mut().enumerate() {
+                st.local_step(&grads[w], 0.1);
+            }
+            for (w, st) in workers.iter().enumerate() {
+                x_stage[w].copy_from_slice(st.x());
+                acc_stage[w].copy_from_slice(st.acc());
+            }
+            kernels::mean_into(&x_stage[..], avg_x);
+            kernels::mean_into(&acc_stage[..], avg_acc);
+            for st in workers.iter_mut() {
+                st.apply_sync(avg_x, avg_acc);
+            }
+        };
+        round(&mut workers, &mut x_stage, &mut acc_stage, &mut avg_x, &mut avg_acc);
+        let got = allocs_during(|| {
+            for _ in 0..3 {
+                round(&mut workers, &mut x_stage, &mut acc_stage, &mut avg_x, &mut avg_acc);
+            }
+        });
+        assert_eq!(got, 0, "sync-round staging/averaging allocated");
+    }
+
+    // --- leader-side aggregation + fully-synchronous optimizer step -----
+    {
+        let grads: Vec<Vec<f32>> = (0..n).map(|w| randn(d, 50 + w as u64)).collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let mut agg = Aggregator::new(d);
+        let mut opt = AdaGrad::new(d, 1.0, 1.0);
+        let mut x = randn(d, 60);
+        agg.mean_grads_and_squares(&refs);
+        opt.step(&mut x, &agg.avg_g, &agg.avg_gsq, 0.1);
+        let got = allocs_during(|| {
+            for _ in 0..5 {
+                agg.mean_grads_and_squares(&refs);
+                opt.step(&mut x, &agg.avg_g, &agg.avg_gsq, 0.1);
+            }
+        });
+        assert_eq!(got, 0, "aggregation + optimizer step allocated");
+    }
+
+    // --- codec scratch paths ---------------------------------------------
+    {
+        let g = randn(d, 70);
+        let q = QsgdQuantizer::new(15);
+        let mut rng = Rng::new(7);
+        let mut enc = QsgdEncoded { norm: 0.0, levels: Vec::new(), s: 15 };
+        let mut out = vec![0.0f32; d];
+        q.encode_to(&g, &mut rng, &mut enc);
+        q.decode(&enc, &mut out);
+        let got = allocs_during(|| {
+            for _ in 0..5 {
+                q.encode_to(&g, &mut rng, &mut enc);
+                q.decode(&enc, &mut out);
+            }
+        });
+        assert_eq!(got, 0, "qsgd scratch roundtrip allocated");
+
+        let mut sp = TopKSparsifier::new(d, 0.01);
+        let mut msg = SparseGrad { d, idx: Vec::new(), val: Vec::new() };
+        sp.encode_into(&g, &mut msg);
+        let got = allocs_during(|| {
+            for _ in 0..5 {
+                sp.encode_into(&g, &mut msg);
+            }
+        });
+        assert_eq!(got, 0, "top-k scratch encode allocated");
+    }
+
+    // --- full compressed sync round (delta-coded, both codecs) ----------
+    for codec in ["qsgd", "topk"] {
+        let net = NetModel::from_config(&NetConfig::default());
+        let mut c: CompressedCollective = match codec {
+            "qsgd" => CompressedCollective::qsgd(ChannelCollective::new(n, d), net, 15, 3),
+            _ => CompressedCollective::topk(ChannelCollective::new(n, d), net, 0.05),
+        };
+        let states: Vec<Vec<f32>> = (0..n).map(|w| randn(d, 80 + w as u64)).collect();
+        let accs: Vec<Vec<f32>> = (0..n).map(|w| randn(d, 90 + w as u64)).collect();
+        let xs: Vec<&[f32]> = states.iter().map(|v| v.as_slice()).collect();
+        let acc_refs: Vec<&[f32]> = accs.iter().map(|v| v.as_slice()).collect();
+        let mut avg_x = vec![0.0f32; d];
+        let mut avg_acc = vec![0.0f32; d];
+        // Two warm-up rounds populate the delta/staging/codec pools.
+        for _ in 0..2 {
+            c.sync_round(&xs, Some(&acc_refs), &mut avg_x, Some(&mut avg_acc)).unwrap();
+        }
+        let got = allocs_during(|| {
+            for _ in 0..3 {
+                c.sync_round(&xs, Some(&acc_refs), &mut avg_x, Some(&mut avg_acc)).unwrap();
+            }
+        });
+        assert_eq!(got, 0, "{codec} compressed sync round allocated");
+    }
+
+    // --- buffer pool and Arc recycling -----------------------------------
+    {
+        let mut pool = BufferPool::new();
+        let b = pool.take(d);
+        pool.put(b);
+        let got = allocs_during(|| {
+            for _ in 0..10 {
+                let b = pool.take(d);
+                pool.put(b);
+            }
+        });
+        assert_eq!(got, 0, "buffer pool cycling allocated");
+
+        let src = randn(d, 99);
+        let mut slot = ArcSlot::new();
+        drop(slot.fill(&src));
+        let got = allocs_during(|| {
+            for _ in 0..10 {
+                drop(slot.fill(&src));
+            }
+        });
+        assert_eq!(got, 0, "ArcSlot recycling allocated");
+    }
+}

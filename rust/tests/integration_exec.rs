@@ -1,0 +1,147 @@
+//! Execution-engine equivalence pins (ISSUE 5 tentpole; DESIGN.md §6):
+//! the `[exec]` thread layout must never change a bit of the training
+//! trajectory. Every scenario runs once under the serial reference
+//! engine and once per threaded layout — the default one-host-per-worker
+//! shape and pools of k ∈ {2, 4, 8} — asserting bit-identical final
+//! parameters, per-step loss traces and final evaluations, across both
+//! protocol families, compressed transports and a `[faults]` quorum
+//! scenario.
+
+mod common;
+
+use adaalter::config::{Algorithm, ExperimentConfig, SyncPeriod};
+use adaalter::sim::Charge;
+
+/// `cfg` under the k-thread engine layout.
+fn with_threads(mut c: ExperimentConfig, k: usize) -> ExperimentConfig {
+    c.exec.parallelism = "threads".into();
+    c.exec.threads = k;
+    c
+}
+
+/// `cfg` under the serial reference engine (the default is one host per
+/// worker, so the reference layout is opted into explicitly).
+fn with_serial(mut c: ExperimentConfig) -> ExperimentConfig {
+    c.exec.parallelism = "serial".into();
+    c
+}
+
+#[test]
+fn sync_adagrad_is_layout_invariant() {
+    // Fully-synchronous AdaGrad (H = 1): every iteration barriers on all
+    // 8 workers, so reply arrival order varies wildly across layouts —
+    // the fixed-order gather must absorb all of it.
+    let base = common::cfg(Algorithm::AdaGrad, SyncPeriod::Every(1), 8, 30);
+    let serial = common::run(with_serial(base.clone()));
+    // The default layout (one host per worker — the seed's thread shape)
+    // is one of the layouts under test too.
+    let default = common::run(base.clone());
+    common::assert_bitwise_eq(&serial, &default, "adagrad default layout");
+    for k in [2usize, 4, 8] {
+        let r = common::run(with_threads(base.clone(), k));
+        common::assert_bitwise_eq(&serial, &r, &format!("adagrad threads({k})"));
+    }
+}
+
+#[test]
+fn local_adaalter_is_layout_invariant() {
+    // Local AdaAlter at H ∈ {4, 16}: local phases + paired averaging
+    // rounds (Alg. 4 lines 11–12) — the survivor-mean arithmetic must be
+    // bitwise-stable regardless of which host computed which replica.
+    for h in [4u64, 16] {
+        let base = common::cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), 8, 48);
+        let serial = common::run(with_serial(base.clone()));
+        let default = common::run(base.clone());
+        common::assert_bitwise_eq(&serial, &default, &format!("local H={h} default layout"));
+        for k in [2usize, 4, 8] {
+            let r = common::run(with_threads(base.clone(), k));
+            common::assert_bitwise_eq(&serial, &r, &format!("local H={h} threads({k})"));
+        }
+    }
+}
+
+#[test]
+fn compressed_transports_are_layout_invariant() {
+    // QSGD and top-k both hold leader-side codec state (RNG streams,
+    // error-feedback residuals, delta bases) — none of it may observe the
+    // worker thread layout.
+    for compression in ["qsgd", "topk"] {
+        let mut base = common::cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 4, 32);
+        base.comm.transport = "channel".into();
+        base.comm.compression = compression.into();
+        let serial = common::run(with_serial(base.clone()));
+        assert!(serial.recorder.comm().1 > 0, "{compression}: no bytes recorded");
+        for k in [2usize, 4] {
+            let r = common::run(with_threads(base.clone(), k));
+            common::assert_bitwise_eq(&serial, &r, &format!("{compression} threads({k})"));
+            assert_eq!(
+                serial.recorder.comm(),
+                r.recorder.comm(),
+                "{compression} threads({k}): wire accounting diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn quorum_fault_scenario_is_layout_invariant() {
+    // The `[faults]` stack on top: one 4×-slow worker of 8, quorum-7
+    // rounds dropping it. Fault streams are keyed by (seed, worker, step)
+    // and the partial-round selection by arrival times — all of it must
+    // be identical whichever host serves the slow worker.
+    let mut base = common::cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 8, 40);
+    base.train.fused = false;
+    base.faults.slow_workers = 1;
+    base.faults.slow_factor = 4.0;
+    base.faults.quorum = 7;
+    let serial = common::run(with_serial(base.clone()));
+    assert!(!serial.recorder.fault_events.is_empty());
+    for k in [2usize, 4, 8] {
+        let r = common::run(with_threads(base.clone(), k));
+        common::assert_bitwise_eq(&serial, &r, &format!("quorum threads({k})"));
+        assert_eq!(
+            serial.clock.total(Charge::Straggler).to_bits(),
+            r.clock.total(Charge::Straggler).to_bits(),
+            "quorum threads({k}): straggler accounting diverged"
+        );
+        assert_eq!(
+            serial.recorder.fault_events.len(),
+            r.recorder.fault_events.len(),
+            "quorum threads({k}): fault-event traces diverged"
+        );
+    }
+}
+
+#[test]
+fn default_layout_is_one_host_per_worker_and_matches_serial() {
+    // The default — threads(0), one host per worker, exactly the thread
+    // shape every run had before the engine existed — is
+    // bitwise-identical to the serial reference, whether spelled as the
+    // default, explicitly, or oversubscribed.
+    let base = common::cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 4, 24);
+    let serial = common::run(with_serial(base.clone()));
+    let default = common::run(base.clone());
+    common::assert_bitwise_eq(&serial, &default, "default layout");
+    let mut c = base.clone();
+    c.exec.parallelism = "threads(0)".into();
+    let r = common::run(c);
+    common::assert_bitwise_eq(&serial, &r, "threads(0)");
+    // And an oversubscribed pool (more threads than workers) clamps.
+    let r = common::run(with_threads(base, 64));
+    common::assert_bitwise_eq(&serial, &r, "threads(64)");
+}
+
+#[test]
+fn exec_config_round_trips_through_toml() {
+    use adaalter::config::TomlDoc;
+    let doc = TomlDoc::parse(
+        "[train]\nworkers = 4\nsteps = 8\nbackend = \"rust_math\"\nrust_math_dim = 32\n\
+         [exec]\nparallelism = \"threads\"\nthreads = 2\n",
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+    assert_eq!(cfg.exec.parallelism, "threads");
+    assert_eq!(cfg.exec.threads, 2);
+    let r = common::run(cfg);
+    assert!(r.final_x.iter().all(|v| v.is_finite()));
+}

@@ -188,7 +188,7 @@ fn worker_loop_injects_the_crash_tombstone() {
     // keep replying Crashed to later commands rather than deadlocking.
     cmd_tx.send(Cmd::LocalStep { t: 3, lr: 0.1 }).unwrap();
     assert!(matches!(reply_rx.recv().unwrap(), Reply::Crashed { worker: 0, step: 3 }));
-    cmd_tx.send(Cmd::CollectState).unwrap();
+    cmd_tx.send(Cmd::CollectState { sx: Vec::new(), sa: Vec::new() }).unwrap();
     assert!(matches!(reply_rx.recv().unwrap(), Reply::Crashed { worker: 0, .. }));
     cmd_tx.send(Cmd::Stop).unwrap();
     join.join().unwrap();
