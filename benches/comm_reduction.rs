@@ -3,11 +3,12 @@
 //! sparsification), at equal iteration counts, **through the full trainer**.
 //!
 //! Every row is one `ExperimentConfig`: the transport (uncompressed
-//! parameter server, ring all-reduce, QSGD s=15, top-k 1%) is selected
-//! purely by the `[comm]` / `[net]` sections and the recorded traffic is
-//! whatever the configured `Collective` actually billed — model-scale
+//! parameter server, ring all-reduce, QSGD s=15, top-k 1%, and the bf16
+//! half-width wire from `[precision]`) is selected purely by the
+//! `[comm]` / `[net]` / `[precision]` sections and the recorded traffic
+//! is whatever the configured `Collective` actually billed — model-scale
 //! α–β traffic for the simulated transports, exact encoded wire bytes for
-//! the compressed ones.
+//! the compressed ones (bf16 bills exactly 2 B/element, half of dense).
 //!
 //! Run: `cargo bench --bench comm_reduction`
 
@@ -88,6 +89,13 @@ fn main() {
         c.comm.topk_keep = 0.01;
         rows.push(run_row("local AdaAlter H=4 / top-k 1%", c, &problem));
     }
+    {
+        // The PR 6 wire format: bf16 payloads (2 B/elem) composed with the
+        // same delta coding the lossy codecs use — `[precision]` only.
+        let mut c = with_comm(la(4), "channel", "none");
+        c.precision.wire = "bf16".into();
+        rows.push(run_row("local AdaAlter H=4 / bf16+delta wire", c, &problem));
+    }
 
     // The 2/H sweep against fully-synchronous AdaGrad (the paper's claim).
     rows.push(run_row(
@@ -124,6 +132,7 @@ fn main() {
     let ring = find("ring");
     let qsgd = find("QSGD");
     let topk = find("top-k");
+    let bf16 = find("bf16");
     let sync = find("sync AdaGrad");
 
     println!(
@@ -150,6 +159,27 @@ fn main() {
         "top-k 1% cuts them >20x {}",
         ok(topk.total_bytes * 20 < h4.total_bytes)
     );
+    println!(
+        "bf16 wire halves H=4 round bytes EXACTLY ({} vs {}) {}",
+        bf16.total_bytes,
+        h4.total_bytes,
+        ok(bf16.total_bytes * 2 == h4.total_bytes)
+    );
+    {
+        // Simulated PS round time at this run's payload: one H=4 sync
+        // round ships 2 vectors per worker each way — f32 vs bf16.
+        let net = adaalter::comm::NetModel::from_config(&Default::default());
+        let f32_bytes = net.sync_traffic_bytes(N, 4 * D as u64, 2);
+        let t_f32 = net.bytes_time(N, f32_bytes);
+        let t_bf16 = net.bytes_time(N, f32_bytes / 2);
+        println!(
+            "modeled PS round time: f32 {:.1} us vs bf16 {:.1} us ({:.2}x) {}",
+            t_f32 * 1e6,
+            t_bf16 * 1e6,
+            t_f32 / t_bf16,
+            ok(t_bf16 < t_f32)
+        );
+    }
     let init = problem.global_loss(&problem.backend(0).init_params().unwrap())
         - problem.global_loss(&problem.optimum());
     println!(

@@ -21,6 +21,30 @@ fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// One serial-vs-SIMD kernel pair: bench both forms (bitwise identical by
+/// construction, pinned in `util/kernels.rs`), report both rows plus the
+/// serial/simd median ratio.
+fn simd_pair(
+    sink: &mut BenchSink,
+    speedups: &mut Vec<(&'static str, f64)>,
+    name: &'static str,
+    bytes: u64,
+    serial_f: &mut dyn FnMut(),
+    simd_f: &mut dyn FnMut(),
+) {
+    let ss = bench(4, 12, serial_f);
+    let sv = bench(4, 12, simd_f);
+    let ratio = ss.median_ns / sv.median_ns;
+    report(
+        &format!("{name} serial vs simd"),
+        &sv,
+        &format!("{ratio:.2}x over serial ({:.1} GB/s)", sv.bandwidth_gbs(bytes)),
+    );
+    sink.timed(&format!("serial_{name}"), &ss, &[("bytes_per_iter", bytes as f64)]);
+    sink.timed(&format!("simd_{name}"), &sv, &[("bytes_per_iter", bytes as f64)]);
+    speedups.push((name, ratio));
+}
+
 fn randn(d: usize, seed: u64, sigma: f32) -> Vec<f32> {
     let mut v = vec![0.0f32; d];
     Rng::new(seed).fill_normal(&mut v, sigma);
@@ -193,6 +217,123 @@ fn main() {
         let bytes = 6 * 4 * d as u64;
         report("delta encode+decode (sync-round coding)", &s, &format!("{:.1} GB/s", s.bandwidth_gbs(bytes)));
         sink.timed("delta_roundtrip", &s, &[("bytes_per_iter", bytes as f64), ("gb_per_s", s.bandwidth_gbs(bytes))]);
+    }
+
+    // --- serial vs SIMD kernel forms (PR 6 tentpole) ---------------------
+    // Same kernels, both implementations called directly (bypassing the
+    // `exec.simd` dispatcher so one process measures both). Bitwise
+    // identical by construction — including the fixed-tree reductions —
+    // so the ratio is pure wall-clock. The reductions are where the lanes
+    // pay: the serial form of a sequential f64 accumulator is
+    // latency-bound; 8 independent lanes break the carried dependency.
+    {
+        use adaalter::util::kernels::serial;
+        use adaalter::util::simd;
+        println!("\n--- serial vs SIMD kernel forms (d = {d}) ---");
+        let mut speedups: Vec<(&'static str, f64)> = Vec::new();
+
+        {
+            let mut out_a = vec![0.0f32; d];
+            let mut out_b = vec![0.0f32; d];
+            simd_pair(
+                &mut sink,
+                &mut speedups,
+                "mean_grads",
+                4 * (n_workers + 1) as u64 * d as u64,
+                &mut || {
+                    serial::mean_into(&refs, &mut out_a);
+                    black_box(out_a[0]);
+                },
+                &mut || {
+                    simd::mean_into(&refs, &mut out_b);
+                    black_box(out_b[0]);
+                },
+            );
+        }
+        {
+            let (mut ga, mut qa) = (vec![0.0f32; d], vec![0.0f32; d]);
+            let (mut gb, mut qb) = (vec![0.0f32; d], vec![0.0f32; d]);
+            simd_pair(
+                &mut sink,
+                &mut speedups,
+                "mean_grads_and_squares",
+                4 * (n_workers + 2) as u64 * d as u64,
+                &mut || {
+                    serial::mean_and_squares_into(&refs, &mut ga, &mut qa);
+                    black_box(qa[0]);
+                },
+                &mut || {
+                    simd::mean_and_squares_into(&refs, &mut gb, &mut qb);
+                    black_box(qb[0]);
+                },
+            );
+        }
+        {
+            let (mut xa, mut ba) = (randn(d, 70, 1.0), vec![1.0f32; d]);
+            let (mut xb, mut bb) = (randn(d, 70, 1.0), vec![1.0f32; d]);
+            simd_pair(
+                &mut sink,
+                &mut speedups,
+                "adagrad_step",
+                24 * d as u64,
+                &mut || {
+                    serial::adagrad_step(&mut xa, &mut ba, &g, &gsq, 0.001, 1.0);
+                    black_box(xa[0]);
+                },
+                &mut || {
+                    simd::adagrad_step(&mut xb, &mut bb, &g, &gsq, 0.001, 1.0);
+                    black_box(xb[0]);
+                },
+            );
+        }
+        simd_pair(
+            &mut sink,
+            &mut speedups,
+            "sgd_update_sq",
+            4 * d as u64,
+            &mut || {
+                black_box(serial::sgd_update_sq(&g, 0.1));
+            },
+            &mut || {
+                black_box(simd::sgd_update_sq(&g, 0.1));
+            },
+        );
+        {
+            let (mut xa, ba, mut aa) = (randn(d, 71, 1.0), vec![1.0f32; d], vec![1.0f32; d]);
+            let (mut xb, bb, mut ab) = (randn(d, 71, 1.0), vec![1.0f32; d], vec![1.0f32; d]);
+            simd_pair(
+                &mut sink,
+                &mut speedups,
+                "local_adaalter_step",
+                20 * d as u64,
+                &mut || {
+                    black_box(serial::local_adaalter_step(&mut xa, &ba, &mut aa, &g, 0.001, 1.0));
+                },
+                &mut || {
+                    black_box(simd::local_adaalter_step(&mut xb, &bb, &mut ab, &g, 0.001, 1.0));
+                },
+            );
+        }
+        sink.value("simd_speedup", &speedups);
+        for (name, ratio) in &speedups {
+            println!("simd speedup {name}: {ratio:.2}x");
+        }
+    }
+
+    // --- bf16 conversions (precision.wire hot path) ----------------------
+    {
+        use adaalter::util::half;
+        let src = randn(d, 80, 1.0);
+        let mut wire: Vec<u16> = Vec::new();
+        let mut back = vec![0.0f32; d];
+        let s = bench(4, 12, || {
+            half::encode_into(&src, &mut wire);
+            half::decode_into(&wire, &mut back);
+            black_box(back[0]);
+        });
+        let bytes = half::wire_bytes(d);
+        report("bf16 encode+decode (wire roundtrip)", &s, &format!("{bytes} wire B"));
+        sink.timed("bf16_roundtrip", &s, &[("wire_bytes", bytes as f64)]);
     }
 
     // --- data pipeline ---------------------------------------------------

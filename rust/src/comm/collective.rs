@@ -560,12 +560,15 @@ impl Collective for SimulatedCollective {
 
 /// Per-stream compressor. Top-k carries error-feedback residuals, which
 /// are per-(worker, vector-kind) state — every logical stream gets its own
-/// sparsifier so residual mass never leaks across streams. Both codecs
-/// keep a reused message scratch so steady-state roundtrips never touch
-/// the allocator (DESIGN.md §6).
+/// sparsifier so residual mass never leaks across streams. Both lossy
+/// codecs keep a reused message scratch so steady-state roundtrips never
+/// touch the allocator (DESIGN.md §6). Bf16 is stateless: the payload is
+/// rounded through bf16 in place ([`crate::util::half`]) and billed at
+/// exactly 2 bytes per element.
 enum Codec {
     Qsgd { q: QsgdQuantizer, rng: Rng, enc: QsgdEncoded },
     TopK { keep: f64, streams: Vec<Option<TopKSparsifier>>, msg: SparseGrad },
+    Bf16,
 }
 
 impl Codec {
@@ -590,6 +593,20 @@ impl Codec {
                 }
                 msg.wire_bytes()
             }
+            Codec::Bf16 => {
+                crate::util::half::quantize_assign(v);
+                crate::util::half::wire_bytes(v.len())
+            }
+        }
+    }
+
+    /// Bytes per element of the dense model pull back to the workers: the
+    /// bf16 wire halves the down leg too; the sparse/quantized codecs pull
+    /// the dense f32 model (the leader owns `x`).
+    fn pull_bytes_per_elem(&self) -> u64 {
+        match self {
+            Codec::Bf16 => 2,
+            Codec::Qsgd { .. } | Codec::TopK { .. } => 4,
         }
     }
 
@@ -597,6 +614,7 @@ impl Codec {
         match self {
             Codec::Qsgd { q, .. } => format!("qsgd(s={})", q.levels()),
             Codec::TopK { keep, .. } => format!("topk({keep})"),
+            Codec::Bf16 => "bf16".into(),
         }
     }
 }
@@ -663,6 +681,26 @@ impl CompressedCollective {
                 rng: Rng::derive(seed, &[0xC0DE]),
                 enc: QsgdEncoded { norm: 0.0, levels: Vec::new(), s },
             },
+            net,
+            base_x: vec![0.0; d],
+            base_acc: vec![0.0; d],
+            delta_bufs: Vec::new(),
+            mean_buf: Vec::new(),
+        }
+    }
+
+    /// The bf16 wire format (`precision.wire = "bf16"`; DESIGN.md §7):
+    /// every payload is rounded through bf16 (round-to-nearest-even) and
+    /// billed at 2 bytes/element — exactly half the dense f32 wire, on the
+    /// up and down legs alike. Sync rounds compose with the same delta
+    /// coding the lossy codecs use (the shipped quantity is `Δ` against
+    /// the last synchronized state, where bf16's relative error does the
+    /// least damage).
+    pub fn bf16(inner: ChannelCollective, net: NetModel) -> Self {
+        let d = inner.d();
+        CompressedCollective {
+            inner,
+            codec: Codec::Bf16,
             net,
             base_x: vec![0.0; d],
             base_acc: vec![0.0; d],
@@ -787,8 +825,9 @@ impl Collective for CompressedCollective {
             bytes += self.codec.roundtrip(stream, g);
         }
         self.inner.gather_grads(grads)?;
-        // Dense model pull back to every worker.
-        bytes += n as u64 * 4 * self.inner.d() as u64;
+        // Dense model pull back to every worker (2 bytes/elem on the bf16
+        // wire, 4 otherwise).
+        bytes += n as u64 * self.codec.pull_bytes_per_elem() * self.inner.d() as u64;
         Ok(CommReport {
             bytes,
             time_s: self.net.bytes_time(n, bytes),
@@ -855,14 +894,24 @@ pub fn build_collective(
     calib: &Calibration,
     d: usize,
 ) -> Result<Box<dyn Collective>> {
-    // Re-run the `[comm]` rules here: TOML-loaded configs were already
-    // validated, but programmatically-built ones (benches, tests, library
-    // users) reach this gate directly. Single rule copy: CommConfig.
+    // Re-run the `[comm]`/`[precision]` rules here: TOML-loaded configs
+    // were already validated, but programmatically-built ones (benches,
+    // tests, library users) reach this gate directly. Single rule copy:
+    // CommConfig / PrecisionConfig.
     cfg.comm.validate()?;
+    cfg.precision.validate()?;
+    cfg.precision.validate_with_comm(&cfg.comm)?;
     let n = cfg.train.workers;
     let base = ChannelCollective::new(n, d);
     let coll: Box<dyn Collective> = match cfg.comm.compression.as_str() {
         "none" => match cfg.comm.transport.as_str() {
+            // The bf16 wire rides the compressed-collective machinery
+            // (delta coding + exact byte accounting) over the lockstep
+            // channel.
+            "channel" if cfg.precision.wire_bf16() => Box::new(CompressedCollective::bf16(
+                base,
+                NetModel::from_config(&cfg.net),
+            )),
             "channel" => Box::new(base),
             _ => Box::new(SimulatedCollective::new(
                 base,
@@ -1009,6 +1058,72 @@ mod tests {
         assert_eq!(rep.bytes, want);
         assert!(rep.time_s > 0.0);
         assert!(grads.iter().all(|g| g.iter().all(|v| v.is_finite())));
+    }
+
+    #[test]
+    fn bf16_wire_halves_bytes_exactly() {
+        // The acceptance pin: against the dense f32 accounting of the
+        // simulated transport (PS: 2·n·payload per round), the bf16 wire
+        // bills EXACTLY half — on the paired sync round and on the
+        // gradient gather alike.
+        let (n, d) = (4usize, 256usize);
+        let net = NetModel::from_config(&crate::config::NetConfig::default());
+        let dense_round = net.sync_traffic_bytes(n, 4 * d as u64, 2);
+        let dense_gather = net.sync_traffic_bytes(n, 4 * d as u64, 1);
+        let mut c = CompressedCollective::bf16(ChannelCollective::new(n, d), net);
+        assert_eq!(c.label(), "bf16");
+
+        let xs: Vec<Vec<f32>> =
+            (0..n).map(|w| (0..d).map(|i| ((i + w) as f32 * 0.1).sin()).collect()).collect();
+        let accs: Vec<Vec<f32>> = (0..n).map(|_| vec![1.5f32; d]).collect();
+        let mut avg_x = vec![0.0f32; d];
+        let mut avg_acc = vec![0.0f32; d];
+        let rep = c
+            .sync_round(&refs(&xs), Some(&refs(&accs)), &mut avg_x, Some(&mut avg_acc))
+            .unwrap();
+        assert_eq!(rep.bytes * 2, dense_round, "sync round not exactly half");
+        assert!(rep.time_s > 0.0);
+
+        let mut grads: Vec<Vec<f32>> =
+            (0..n).map(|w| (0..d).map(|i| ((i * 3 + w) as f32 * 0.07).cos()).collect()).collect();
+        let rep = c.gather_grads(&mut grads).unwrap();
+        assert_eq!(rep.bytes * 2, dense_gather, "gather not exactly half");
+        // The gathered gradients are the bf16 images of the originals.
+        for g in &grads {
+            for &v in g {
+                assert_eq!(v.to_bits(), crate::util::half::round_f32(v).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_sync_round_is_accurate_and_lands_on_grid() {
+        let (n, d) = (3usize, 64usize);
+        let net = NetModel::from_config(&crate::config::NetConfig::default());
+        let mut c = CompressedCollective::bf16(ChannelCollective::new(n, d), net);
+        let xs: Vec<Vec<f32>> =
+            (0..n).map(|w| (0..d).map(|i| (i as f32 + w as f32) * 0.01).collect()).collect();
+        let accs: Vec<Vec<f32>> = (0..n).map(|_| vec![1.5f32; d]).collect();
+        let mut avg_x = vec![0.0f32; d];
+        let mut avg_acc = vec![0.0f32; d];
+        c.sync_round(&refs(&xs), Some(&refs(&accs)), &mut avg_x, Some(&mut avg_acc))
+            .unwrap();
+        // bf16 keeps 8 mantissa bits: the installed average is within ~1%
+        // of the exact mean, never negative on the denominator side.
+        let mut want = vec![0.0f32; d];
+        math::mean_into(&refs(&xs), &mut want);
+        for i in 0..d {
+            assert!((avg_x[i] - want[i]).abs() <= 0.01 * want[i].abs().max(0.01), "i={i}");
+        }
+        assert!(avg_acc.iter().all(|&v| v >= 0.0));
+        // First round: base was 0 (a grid point), so the installed state
+        // is itself on the bf16 grid — the down leg quantized it.
+        for &v in avg_x.iter().chain(avg_acc.iter()) {
+            assert_eq!(v.to_bits(), crate::util::half::round_f32(v).to_bits());
+        }
+        // The delta bases advanced, same contract as the lossy codecs.
+        assert_eq!(c.base_x, avg_x);
+        assert_eq!(c.base_acc, avg_acc);
     }
 
     #[test]
@@ -1219,5 +1334,23 @@ mod tests {
         assert_eq!(build_collective(&cfg, &calib, 16).unwrap().label(), "topk(0.01)");
         cfg.comm.compression = "zstd".into();
         assert!(build_collective(&cfg, &calib, 16).is_err());
+    }
+
+    #[test]
+    fn build_collective_selects_bf16_wire_from_precision() {
+        let calib = Calibration::paper_v100();
+        let mut cfg = ExperimentConfig::default();
+        cfg.comm.transport = "channel".into();
+        cfg.precision.wire = "bf16".into();
+        assert_eq!(build_collective(&cfg, &calib, 16).unwrap().label(), "bf16");
+        // The builder re-runs the precision × comm cross-rule for
+        // programmatically-built configs.
+        cfg.comm.transport = "simulated".into();
+        let err = build_collective(&cfg, &calib, 16).unwrap_err();
+        assert!(err.to_string().contains("channel"), "{err}");
+        cfg.comm.transport = "channel".into();
+        cfg.comm.compression = "qsgd".into();
+        let err = build_collective(&cfg, &calib, 16).unwrap_err();
+        assert!(err.to_string().contains("compression"), "{err}");
     }
 }

@@ -12,6 +12,14 @@
 //!   which is what makes sparsified SGD converge.
 //!
 //! Both report their exact wire size so the comm accounting is honest.
+//!
+//! A third wire format lives next door: `precision.wire = "bf16"` rounds
+//! every payload through bf16 ([`crate::util::half`], round-to-nearest-
+//! even) at exactly 2 bytes/element — half the dense f32 wire, with a
+//! fixed ~0.4% relative error instead of QSGD's norm-scaled noise. It
+//! plugs into the same compressed-collective machinery (delta coding,
+//! exact byte accounting) as a stateless codec, so the three families are
+//! directly comparable in `benches/comm_reduction.rs` (DESIGN.md §7).
 
 use crate::util::rng::Rng;
 

@@ -9,6 +9,6 @@ pub mod toml;
 pub use presets::{load_preset, preset_doc, PRESETS};
 pub use schema::{
     Algorithm, Backend, CommConfig, DataConfig, ExecConfig, ExperimentConfig, FaultsConfig,
-    NetConfig, OptimConfig, SyncPeriod, TrainConfig,
+    NetConfig, OptimConfig, PrecisionConfig, SyncPeriod, TrainConfig,
 };
 pub use toml::{TomlDoc, TomlValue};

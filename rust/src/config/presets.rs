@@ -87,6 +87,27 @@
 //!
 //! The `parallel-hosts` preset below is the canonical example;
 //! `benches/micro_hot_paths.rs` measures the worker-step scaling.
+//!
+//! # The `[precision]` section and `exec.simd`
+//!
+//! Every preset (and config file) may also pick the mixed-precision
+//! surface and the SIMD kernel dispatch (DESIGN.md §7):
+//!
+//! ```toml
+//! [exec]
+//! simd = "auto"        # default; "on" / "off" force the dispatch
+//!                      # (bitwise-identical either way — wall-clock only)
+//! [precision]
+//! wire = "f32"         # or "bf16": sync payloads ship as bf16, exactly
+//!                      # halving recorded wire bytes (needs
+//!                      # comm.transport = "channel", compression = "none")
+//! state = "f32"        # or "bf16": optimizer accumulators rounded
+//!                      # through bf16 each step; weights stay f32 masters
+//! ```
+//!
+//! The `mixed-precision` preset below is the canonical example;
+//! `benches/comm_reduction.rs` compares f32 / bf16 / bf16+delta wire
+//! bytes and `benches/micro_hot_paths.rs` the serial-vs-SIMD kernels.
 
 use crate::error::{Error, Result};
 
@@ -291,6 +312,27 @@ threads = 4
 "#,
     },
     Preset {
+        name: "mixed-precision",
+        summary: "Local AdaAlter H=4 with bf16 wire + bf16 optimizer state, SIMD forced on",
+        toml: r#"
+[train]
+workers = 4
+sync_period = 4
+steps = 800
+steps_per_epoch = 200
+backend = "rust_math"
+[optim]
+algorithm = "local_adaalter"
+[comm]
+transport = "channel"
+[exec]
+simd = "on"
+[precision]
+wire = "bf16"
+state = "bf16"
+"#,
+    },
+    Preset {
         name: "noniid-stress",
         summary: "Fully non-IID shards (D_i disjoint), local AdaAlter H=8",
         toml: r#"
@@ -403,6 +445,22 @@ mod tests {
         // Every other preset keeps the fault-free (bitwise-seed) trainer.
         for p in PRESETS.iter().filter(|p| p.name != "straggler-quorum") {
             assert!(!load_preset(p.name).unwrap().faults.is_active(), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn precision_preset_selects_bf16_and_simd() {
+        let c = load_preset("mixed-precision").unwrap();
+        assert!(c.precision.wire_bf16() && c.precision.state_bf16());
+        assert_eq!(c.exec.simd, "on");
+        assert_eq!(c.comm.transport, "channel");
+        assert_eq!(c.comm.compression, "none");
+        // Every other preset stays full-f32 with auto dispatch — the
+        // bitwise-seed precision surface.
+        for p in PRESETS.iter().filter(|p| p.name != "mixed-precision") {
+            let c = load_preset(p.name).unwrap();
+            assert!(!c.precision.wire_bf16() && !c.precision.state_bf16(), "{}", p.name);
+            assert_eq!(c.exec.simd, "auto", "{}", p.name);
         }
     }
 

@@ -226,7 +226,7 @@ impl Default for TrainConfig {
     }
 }
 
-/// Data-pipeline parameters (synthetic corpus; DESIGN.md §9).
+/// Data-pipeline parameters (synthetic corpus; DESIGN.md §10).
 #[derive(Clone, Debug)]
 pub struct DataConfig {
     /// Zipf exponent of the unigram distribution.
@@ -478,21 +478,96 @@ pub struct ExecConfig {
     /// Host-thread count for `parallelism = "threads"` (0 = one per
     /// worker, the default).
     pub threads: usize,
+    /// Kernel dispatch: "auto" (default; `ADAALTER_SIMD` env decides,
+    /// on when unset), "on" or "off". Pure wall-clock knob — the SIMD
+    /// and serial kernels are bitwise-identical (DESIGN.md §7).
+    pub simd: String,
 }
 
 impl Default for ExecConfig {
     fn default() -> Self {
-        ExecConfig { parallelism: "threads".into(), threads: 0 }
+        ExecConfig { parallelism: "threads".into(), threads: 0, simd: "auto".into() }
     }
 }
 
 impl ExecConfig {
-    /// The `[exec]` consistency rule — the spelling must resolve to a
-    /// thread layout. One copy shared by [`ExperimentConfig::validate`]
-    /// and the trainer (which re-resolves for programmatically-built
-    /// configs), mirroring the [`CommConfig::validate`] pattern.
+    /// The `[exec]` consistency rules — the spellings must resolve to a
+    /// thread layout and a SIMD dispatch mode. One copy shared by
+    /// [`ExperimentConfig::validate`] and the trainer (which re-resolves
+    /// for programmatically-built configs), mirroring the
+    /// [`CommConfig::validate`] pattern.
     pub fn validate(&self) -> Result<()> {
-        crate::coordinator::executor::Parallelism::from_config(self).map(|_| ())
+        crate::coordinator::executor::Parallelism::from_config(self).map(|_| ())?;
+        crate::util::simd::SimdMode::from_config(self).map(|_| ())
+    }
+}
+
+/// Mixed-precision selection (`[precision]`, DESIGN.md §7). With the
+/// section absent both knobs default to `"f32"` and every code path is
+/// bitwise-identical to the seed.
+///
+/// * `wire = "bf16"` — sync-round / gather payloads travel as bf16
+///   (round-to-nearest-even), exactly halving recorded wire bytes;
+///   composes with the delta coding of the compressed collective.
+///   Requires `comm.transport = "channel"` with
+///   `comm.compression = "none"` — like QSGD/top-k, the bf16 codec
+///   measures exact wire bytes, and stacking two lossy codecs would
+///   double-quantize.
+/// * `state = "bf16"` — optimizer accumulator state (`b2` / `acc`) is
+///   rounded through bf16 after every update while the weights stay f32
+///   (master weights). Value-exact emulation: storage remains f32, but
+///   every stored value is exactly bf16-representable.
+#[derive(Clone, Debug)]
+pub struct PrecisionConfig {
+    /// Sync-payload wire format: "f32" (default) or "bf16".
+    pub wire: String,
+    /// Optimizer accumulator state: "f32" (default) or "bf16".
+    pub state: String,
+}
+
+impl Default for PrecisionConfig {
+    fn default() -> Self {
+        PrecisionConfig { wire: "f32".into(), state: "f32".into() }
+    }
+}
+
+impl PrecisionConfig {
+    /// Self-contained `[precision]` spellings check.
+    pub fn validate(&self) -> Result<()> {
+        for (key, v) in [("precision.wire", &self.wire), ("precision.state", &self.state)] {
+            if v != "f32" && v != "bf16" {
+                return Err(Error::Config(format!(
+                    "{key} must be \"f32\" or \"bf16\", got {v:?}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Is the bf16 wire format selected?
+    pub fn wire_bf16(&self) -> bool {
+        self.wire == "bf16"
+    }
+
+    /// Is the bf16 optimizer state selected?
+    pub fn state_bf16(&self) -> bool {
+        self.state == "bf16"
+    }
+
+    /// The `[precision]` × `[comm]` cross-rule (single copy — also re-run
+    /// by `build_collective` for programmatically-built configs): the bf16
+    /// wire, like QSGD/top-k, measures exact bytes over the bare channel;
+    /// the simulated α–β charge assumes dense f32 vectors, and stacking
+    /// bf16 under another lossy codec would double-quantize.
+    pub fn validate_with_comm(&self, comm: &CommConfig) -> Result<()> {
+        if self.wire_bf16() && (comm.transport != "channel" || comm.compression != "none") {
+            return Err(Error::Config(
+                "precision.wire = \"bf16\" measures exact wire bytes; set \
+                 comm.transport = \"channel\" with comm.compression = \"none\""
+                    .into(),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -648,6 +723,8 @@ pub struct ExperimentConfig {
     pub faults: FaultsConfig,
     /// Execution-engine thread layout (`[exec]`).
     pub exec: ExecConfig,
+    /// Mixed-precision selection (`[precision]`).
+    pub precision: PrecisionConfig,
     /// Directory for CSV/JSONL outputs.
     pub out_dir: String,
     /// Artifact directory (PJRT backend).
@@ -665,6 +742,7 @@ impl Default for ExperimentConfig {
             sync: SyncConfig::default(),
             faults: FaultsConfig::default(),
             exec: ExecConfig::default(),
+            precision: PrecisionConfig::default(),
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
         }
@@ -724,6 +802,9 @@ pub const KNOWN_KEYS: &[&str] = &[
     "faults.drop_slowest",
     "exec.parallelism",
     "exec.threads",
+    "exec.simd",
+    "precision.wire",
+    "precision.state",
 ];
 
 impl ExperimentConfig {
@@ -829,6 +910,10 @@ impl ExperimentConfig {
             )));
         }
         c.exec.threads = exec_threads as usize;
+        c.exec.simd = doc.str_or("exec.simd", &c.exec.simd)?;
+
+        c.precision.wire = doc.str_or("precision.wire", &c.precision.wire)?;
+        c.precision.state = doc.str_or("precision.state", &c.precision.state)?;
 
         c.validate()?;
         Ok(c)
@@ -947,6 +1032,8 @@ impl ExperimentConfig {
         }
         self.validate_faults()?;
         self.exec.validate()?;
+        self.precision.validate()?;
+        self.precision.validate_with_comm(&self.comm)?;
         Ok(())
     }
 
@@ -1353,6 +1440,7 @@ mod tests {
         let d = ExperimentConfig::default();
         assert_eq!(d.exec.parallelism, "threads");
         assert_eq!(d.exec.threads, 0);
+        assert_eq!(d.exec.simd, "auto");
         d.validate().unwrap();
 
         let doc = TomlDoc::parse("[exec]\nparallelism = \"threads\"\nthreads = 4\n").unwrap();
@@ -1374,6 +1462,61 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.exec.parallelism = "threads(no)".into();
         assert!(c.validate().is_err());
+
+        // The simd knob parses and rejects unknown spellings by name.
+        let doc = TomlDoc::parse("[exec]\nsimd = \"on\"\n").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.exec.simd, "on");
+        let doc = TomlDoc::parse("[exec]\nsimd = \"fast\"\n").unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+        assert!(err.to_string().contains("exec.simd"), "{err}");
+    }
+
+    #[test]
+    fn precision_section_parses_and_validates() {
+        // Defaults: full f32 everywhere — the bitwise-seed configuration.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.precision.wire, "f32");
+        assert_eq!(d.precision.state, "f32");
+        assert!(!d.precision.wire_bf16() && !d.precision.state_bf16());
+        d.validate().unwrap();
+
+        // bf16 wire needs the exact-bytes channel transport.
+        let doc = TomlDoc::parse(
+            "[comm]\ntransport = \"channel\"\n[precision]\nwire = \"bf16\"\nstate = \"bf16\"\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(c.precision.wire_bf16() && c.precision.state_bf16());
+
+        // bf16 state alone works over any transport.
+        let doc = TomlDoc::parse("[precision]\nstate = \"bf16\"\n").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(c.precision.state_bf16() && !c.precision.wire_bf16());
+
+        // bf16 wire over the simulated transport is ambiguous accounting…
+        let doc = TomlDoc::parse("[precision]\nwire = \"bf16\"\n").unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+        assert!(err.to_string().contains("channel"), "{err}");
+
+        // …and stacking it under another lossy codec double-quantizes.
+        let doc = TomlDoc::parse(
+            "[comm]\ntransport = \"channel\"\ncompression = \"qsgd\"\n\
+             [precision]\nwire = \"bf16\"\n",
+        )
+        .unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+        assert!(err.to_string().contains("compression"), "{err}");
+
+        // Unknown spellings are rejected by field name.
+        for (toml, needle) in [
+            ("[precision]\nwire = \"fp8\"\n", "precision.wire"),
+            ("[precision]\nstate = \"f16\"\n", "precision.state"),
+        ] {
+            let doc = TomlDoc::parse(toml).unwrap();
+            let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+            assert!(err.to_string().contains(needle), "{err}");
+        }
     }
 
     #[test]

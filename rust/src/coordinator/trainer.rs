@@ -97,6 +97,13 @@ impl Trainer {
         let cfg = &self.cfg;
         let n = cfg.train.workers;
         let algo = cfg.optim.algorithm;
+        // Install the `[exec]` SIMD dispatch mode process-wide. Pure
+        // wall-clock knob: every kernel is bitwise mode-independent
+        // (DESIGN.md §7), so concurrent runs with different configs
+        // cannot perturb each other's results.
+        crate::util::simd::set_mode(crate::util::simd::SimdMode::from_config(&cfg.exec)?);
+        cfg.precision.validate()?;
+        let bf16_state = cfg.precision.state_bf16();
         if self.resume.is_some() && cfg.comm.compression != "none" {
             // The delta-compression bases and error-feedback residuals are
             // not part of the checkpoint format; resuming would silently
@@ -174,7 +181,10 @@ impl Trainer {
         // grad + rust-update path for those runs. `train.fused = false`
         // disables the device path outright (required for partial rounds).
         let collect_update_sq = policy.needs_update_norms();
-        let allow_fused = self.allow_fused && cfg.train.fused && !collect_update_sq;
+        // bf16 accumulator state also disables fusion: the device graphs
+        // know nothing about the quantize-after-update hook (same
+        // fall-back precedent as collect_update_sq).
+        let allow_fused = self.allow_fused && cfg.train.fused && !collect_update_sq && !bf16_state;
         let warmup = WarmupSchedule::new(cfg.optim.eta, cfg.optim.warmup_steps);
 
         // --- Spawn workers -------------------------------------------------
@@ -241,6 +251,7 @@ impl Trainer {
                 init: Arc::clone(&init),
                 allow_fused,
                 collect_update_sq,
+                bf16_state,
                 crash_step: plan.crash_step(w),
             })
             .collect();
@@ -263,7 +274,7 @@ impl Trainer {
             opt: if algo.is_local() {
                 None
             } else {
-                let mut opt = optim::build_sync(&cfg.optim, d);
+                let mut opt = optim::build_sync_precision(&cfg.optim, bf16_state, d);
                 if !resume_opt_state.is_empty() {
                     opt.restore_state(&resume_opt_state)?;
                 }

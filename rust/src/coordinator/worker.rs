@@ -160,6 +160,10 @@ pub struct WorkerSpec {
     /// gradient; the AdaAlter path folds the norm into its existing fused
     /// update loop, so it always reports it.
     pub collect_update_sq: bool,
+    /// Keep the local accumulator state on the bf16 grid
+    /// (`precision.state = "bf16"`; DESIGN.md §7). The trainer disables
+    /// the fused device path for these runs.
+    pub bf16_state: bool,
     /// Fault injection (DESIGN.md §5): the worker dies permanently at this
     /// step — it executes steps `t < crash_step` and answers everything
     /// from `crash_step` on with [`Reply::Crashed`].
@@ -216,11 +220,10 @@ impl WorkerCell {
         }
         let local = match spec.algorithm {
             Algorithm::LocalSgd => LocalState::Sgd { x: spec.init.as_ref().clone() },
-            Algorithm::LocalAdaAlter => LocalState::AdaAlter(LocalAdaAlterWorker::new(
-                spec.init.as_ref().clone(),
-                spec.b0,
-                spec.epsilon,
-            )),
+            Algorithm::LocalAdaAlter => LocalState::AdaAlter(
+                LocalAdaAlterWorker::new(spec.init.as_ref().clone(), spec.b0, spec.epsilon)
+                    .with_bf16_state(spec.bf16_state),
+            ),
             _ => LocalState::None,
         };
         let grad_buf = if matches!(local, LocalState::None) {

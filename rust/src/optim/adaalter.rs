@@ -16,12 +16,24 @@ use super::SyncOptimizer;
 pub struct AdaAlter {
     b2: Vec<f32>,
     eps2: f32,
+    bf16_state: bool,
 }
 
 impl AdaAlter {
     /// `d`-dimensional state, `B₀² = b0²·1`.
     pub fn new(d: usize, b0: f32, epsilon: f32) -> Self {
-        AdaAlter { b2: vec![b0 * b0; d], eps2: epsilon * epsilon }
+        AdaAlter { b2: vec![b0 * b0; d], eps2: epsilon * epsilon, bf16_state: false }
+    }
+
+    /// Enable bf16 accumulator state (`precision.state = "bf16"`): `b2`
+    /// is rounded through bf16 after every update while `x` stays a full
+    /// f32 master (see [`crate::util::half`]).
+    pub fn with_bf16_state(mut self, on: bool) -> Self {
+        self.bf16_state = on;
+        if on {
+            crate::util::half::quantize_assign(&mut self.b2);
+        }
+        self
     }
 
     /// Borrow the denominator.
@@ -39,6 +51,9 @@ impl SyncOptimizer for AdaAlter {
         // Fused single pass (shared kernel): update with the STALE
         // denominator, then fold the fresh squares in.
         crate::util::kernels::adaalter_step(x, &mut self.b2, g, gsq, lr, self.eps2);
+        if self.bf16_state {
+            crate::util::half::quantize_assign(&mut self.b2);
+        }
     }
 
     fn algorithm(&self) -> Algorithm {
@@ -60,6 +75,11 @@ impl SyncOptimizer for AdaAlter {
             ));
         }
         self.b2.copy_from_slice(&vectors[0]);
+        if self.bf16_state {
+            // Idempotent for bf16-written checkpoints; quantizes
+            // f32-written ones onto the grid.
+            crate::util::half::quantize_assign(&mut self.b2);
+        }
         Ok(())
     }
 }
@@ -142,5 +162,35 @@ mod tests {
         opt.step(&mut x, &[0.0; 3], &[0.0; 3], 0.5);
         assert_eq!(x, before);
         assert_eq!(opt.b2(), &[1.0; 3]);
+    }
+
+    #[test]
+    fn bf16_state_preserves_defining_property() {
+        use crate::util::half;
+        // The stale-denominator property must survive quantized state:
+        // this step's gsq cannot leak into this step's update.
+        let mut a = AdaAlter::new(1, 1.0, 1.0).with_bf16_state(true);
+        let mut b = AdaAlter::new(1, 1.0, 1.0).with_bf16_state(true);
+        let (mut xa, mut xb) = (vec![0.0f32], vec![0.0f32]);
+        a.step(&mut xa, &[1.0], &[1.0], 0.5);
+        b.step(&mut xb, &[1.0], &[1e9], 0.5);
+        assert_eq!(xa[0], xb[0]);
+        // 1.0 is bf16-exact, so the zero-gradient fixed point holds
+        // exactly under quantized state too.
+        let mut opt = AdaAlter::new(3, 1.0, 1.0).with_bf16_state(true);
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        opt.step(&mut x, &[0.0; 3], &[0.0; 3], 0.5);
+        assert_eq!(opt.b2(), &[1.0; 3]);
+        // And every stored denominator value sits on the bf16 grid.
+        let mut opt = AdaAlter::new(4, 1.0, 0.5).with_bf16_state(true);
+        let mut x = vec![0.0f32; 4];
+        for s in 0..30 {
+            let g: Vec<f32> = (0..4).map(|i| ((i * 3 + s) as f32 * 0.7).cos()).collect();
+            let gsq: Vec<f32> = g.iter().map(|v| v * v).collect();
+            opt.step(&mut x, &g, &gsq, 0.2);
+            for &v in opt.b2() {
+                assert_eq!(v.to_bits(), half::round_f32(v).to_bits());
+            }
+        }
     }
 }

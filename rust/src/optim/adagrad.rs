@@ -12,12 +12,25 @@ use super::SyncOptimizer;
 pub struct AdaGrad {
     b2: Vec<f32>,
     eps2: f32,
+    bf16_state: bool,
 }
 
 impl AdaGrad {
     /// `d`-dimensional state, `B₀² = b0²·1`.
     pub fn new(d: usize, b0: f32, epsilon: f32) -> Self {
-        AdaGrad { b2: vec![b0 * b0; d], eps2: epsilon * epsilon }
+        AdaGrad { b2: vec![b0 * b0; d], eps2: epsilon * epsilon, bf16_state: false }
+    }
+
+    /// Enable bf16 accumulator state (`precision.state = "bf16"`): `b2`
+    /// is rounded through bf16 after every update while `x` stays a full
+    /// f32 master. Value-exact emulation — storage remains f32, but every
+    /// stored value is exactly bf16-representable.
+    pub fn with_bf16_state(mut self, on: bool) -> Self {
+        self.bf16_state = on;
+        if on {
+            crate::util::half::quantize_assign(&mut self.b2);
+        }
+        self
     }
 
     /// Borrow the denominator (tests / checkpoints).
@@ -35,6 +48,9 @@ impl SyncOptimizer for AdaGrad {
         // Fused single pass (shared kernel): accumulate, then update with
         // the new value.
         crate::util::kernels::adagrad_step(x, &mut self.b2, g, gsq, lr, self.eps2);
+        if self.bf16_state {
+            crate::util::half::quantize_assign(&mut self.b2);
+        }
     }
 
     fn algorithm(&self) -> Algorithm {
@@ -56,6 +72,11 @@ impl SyncOptimizer for AdaGrad {
             ));
         }
         self.b2.copy_from_slice(&vectors[0]);
+        if self.bf16_state {
+            // Idempotent for checkpoints written under bf16 state; makes
+            // f32-written checkpoints land on the bf16 grid.
+            crate::util::half::quantize_assign(&mut self.b2);
+        }
         Ok(())
     }
 }
@@ -108,6 +129,37 @@ mod tests {
                 assert!(n >= p);
             }
             prev = opt.b2().to_vec();
+        }
+    }
+
+    #[test]
+    fn bf16_state_stays_on_grid_and_monotone() {
+        use crate::util::half;
+        let mut opt = AdaGrad::new(8, 1.0, 0.5).with_bf16_state(true);
+        let mut x = vec![0.0f32; 8];
+        let mut prev = opt.b2().to_vec();
+        for s in 0..20 {
+            let g: Vec<f32> = (0..8).map(|i| ((i + s) as f32 * 0.3).sin()).collect();
+            let gsq: Vec<f32> = g.iter().map(|v| v * v).collect();
+            opt.step(&mut x, &g, &gsq, 0.1);
+            for (i, (&p, &n)) in prev.iter().zip(opt.b2()).enumerate() {
+                // Every stored value is exactly bf16-representable and the
+                // denominator stays monotone (RNE of v ≥ grid point p is ≥ p).
+                assert_eq!(n.to_bits(), half::round_f32(n).to_bits(), "off-grid at {i}");
+                assert!(n >= p, "not monotone at {i}: {n} < {p}");
+            }
+            prev = opt.b2().to_vec();
+        }
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn bf16_restore_quantizes_f32_checkpoints() {
+        use crate::optim::SyncOptimizer as _;
+        let mut opt = AdaGrad::new(2, 1.0, 1.0).with_bf16_state(true);
+        opt.restore_state(&[vec![1.2345678f32, 3.3333333]]).unwrap();
+        for &v in opt.b2() {
+            assert_eq!(v.to_bits(), crate::util::half::round_f32(v).to_bits());
         }
     }
 

@@ -48,6 +48,7 @@ pub struct LocalAdaAlterWorker {
     t_prime: u64,
     /// Total local steps taken (for diagnostics).
     steps: u64,
+    bf16_state: bool,
 }
 
 impl LocalAdaAlterWorker {
@@ -61,7 +62,23 @@ impl LocalAdaAlterWorker {
             eps2: epsilon * epsilon,
             t_prime: 0,
             steps: 0,
+            bf16_state: false,
         }
+    }
+
+    /// Enable bf16 accumulator state (`precision.state = "bf16"`): `acc`
+    /// and `b2_sync` are rounded through bf16 after every update while `x`
+    /// stays a full f32 master weight (see [`crate::util::half`]). The
+    /// `acc ≥ b2_sync` invariant survives exactly: `b2_sync` is itself a
+    /// bf16 grid point, and round-to-nearest-even of any `v ≥ p` for a
+    /// grid point `p` is `≥ p`.
+    pub fn with_bf16_state(mut self, on: bool) -> Self {
+        self.bf16_state = on;
+        if on {
+            crate::util::half::quantize_assign(&mut self.acc);
+            crate::util::half::quantize_assign(&mut self.b2_sync);
+        }
+        self
     }
 
     /// Dimension d.
@@ -84,7 +101,12 @@ impl LocalAdaAlterWorker {
         self.steps += 1;
         let add = self.t_prime as f32 * self.eps2;
         // Fused single pass over the three streams (shared kernel).
-        kernels::local_adaalter_step(&mut self.x, &self.b2_sync, &mut self.acc, g, lr, add)
+        let update_sq =
+            kernels::local_adaalter_step(&mut self.x, &self.b2_sync, &mut self.acc, g, lr, add);
+        if self.bf16_state {
+            crate::util::half::quantize_assign(&mut self.acc);
+        }
+        update_sq
     }
 
     /// Apply a synchronization result (Alg. 4 lines 11–12): install the
@@ -95,6 +117,12 @@ impl LocalAdaAlterWorker {
         self.x.copy_from_slice(avg_x);
         self.acc.copy_from_slice(avg_acc);
         self.b2_sync.copy_from_slice(avg_acc);
+        if self.bf16_state {
+            // Quantizing both copies of the same vector keeps them equal,
+            // so the post-sync `acc == b2_sync` identity is preserved.
+            crate::util::half::quantize_assign(&mut self.acc);
+            crate::util::half::quantize_assign(&mut self.b2_sync);
+        }
         self.t_prime = 0;
     }
 
@@ -268,6 +296,34 @@ mod tests {
             }
         }
         assert_eq!(w.steps(), 50);
+    }
+
+    #[test]
+    fn bf16_state_keeps_invariants_exact() {
+        use crate::util::half;
+        let mut w = LocalAdaAlterWorker::new(vec![0.5; 33], 1.0, 1.0).with_bf16_state(true);
+        for s in 0..50 {
+            let g: Vec<f32> = (0..33).map(|i| ((i + s) as f32 * 0.17).sin()).collect();
+            w.local_step(&g, 0.5);
+            w.check_invariants().unwrap();
+            // Quantized invariant is exact, not just within tolerance.
+            for (&a, &b) in w.acc().iter().zip(w.b2_sync()) {
+                assert!(a >= b, "acc {a} < b2_sync {b}");
+            }
+            // All accumulator state sits on the bf16 grid; x stays f32.
+            for &v in w.acc().iter().chain(w.b2_sync()) {
+                assert_eq!(v.to_bits(), half::round_f32(v).to_bits());
+            }
+            if s % 8 == 7 {
+                let avg_x = w.x().to_vec();
+                // Feed an off-grid average: apply_sync must land it on-grid
+                // for BOTH copies so acc == b2_sync holds exactly.
+                let avg_acc: Vec<f32> = w.acc().iter().map(|&a| a + 1e-3).collect();
+                w.apply_sync(&avg_x, &avg_acc);
+                assert_eq!(w.acc(), w.b2_sync());
+                w.check_invariants().unwrap();
+            }
+        }
     }
 
     #[test]

@@ -82,6 +82,18 @@ pub trait SyncOptimizer: Send {
 /// Panics if asked for a local algorithm — local state machines live on the
 /// workers ([`LocalAdaAlterWorker`]), not behind this trait.
 pub fn build_sync(cfg: &OptimConfig, d: usize) -> Box<dyn SyncOptimizer> {
+    build_sync_precision(cfg, false, d)
+}
+
+/// [`build_sync`] with an explicit accumulator precision: when `bf16_state`
+/// is set (`precision.state = "bf16"`) the adaptive optimizers keep their
+/// denominator on the bf16 grid (DESIGN.md §7). SGD and momentum-SGD carry
+/// no accumulator, so the flag is a no-op for them.
+pub fn build_sync_precision(
+    cfg: &OptimConfig,
+    bf16_state: bool,
+    d: usize,
+) -> Box<dyn SyncOptimizer> {
     match cfg.algorithm {
         Algorithm::Sgd => {
             if cfg.momentum > 0.0 {
@@ -90,8 +102,12 @@ pub fn build_sync(cfg: &OptimConfig, d: usize) -> Box<dyn SyncOptimizer> {
                 Box::new(Sgd::new())
             }
         }
-        Algorithm::AdaGrad => Box::new(AdaGrad::new(d, cfg.b0, cfg.epsilon)),
-        Algorithm::AdaAlter => Box::new(AdaAlter::new(d, cfg.b0, cfg.epsilon)),
+        Algorithm::AdaGrad => {
+            Box::new(AdaGrad::new(d, cfg.b0, cfg.epsilon).with_bf16_state(bf16_state))
+        }
+        Algorithm::AdaAlter => {
+            Box::new(AdaAlter::new(d, cfg.b0, cfg.epsilon).with_bf16_state(bf16_state))
+        }
         Algorithm::LocalSgd | Algorithm::LocalAdaAlter => {
             panic!("{} is a local algorithm; use the worker-side state machine", cfg.algorithm)
         }
@@ -113,6 +129,22 @@ mod tests {
         assert_eq!(build_sync(&cfg, 4).algorithm(), Algorithm::Sgd);
         cfg.momentum = 0.9;
         assert_eq!(build_sync(&cfg, 4).algorithm(), Algorithm::Sgd);
+    }
+
+    #[test]
+    fn build_sync_precision_lands_state_on_bf16_grid() {
+        let cfg = OptimConfig { algorithm: Algorithm::AdaGrad, ..Default::default() };
+        let mut opt = build_sync_precision(&cfg, true, 4);
+        let mut x = vec![0.0f32; 4];
+        let g = vec![0.3f32, -0.7, 0.11, 2.5];
+        let gsq: Vec<f32> = g.iter().map(|v| v * v).collect();
+        opt.step(&mut x, &g, &gsq, 0.1);
+        for &v in opt.denominator().unwrap() {
+            assert_eq!(v.to_bits(), crate::util::half::round_f32(v).to_bits());
+        }
+        // SGD has no accumulator; the flag must be accepted silently.
+        let cfg = OptimConfig { algorithm: Algorithm::Sgd, ..Default::default() };
+        assert_eq!(build_sync_precision(&cfg, true, 4).algorithm(), Algorithm::Sgd);
     }
 
     #[test]

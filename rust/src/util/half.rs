@@ -1,0 +1,312 @@
+//! bf16 (bfloat16) conversion — the mixed-precision substrate (DESIGN.md
+//! §7).
+//!
+//! bf16 is the upper 16 bits of an IEEE-754 f32: same 8-bit exponent,
+//! mantissa truncated from 23 to 7 bits. That makes conversion pure bit
+//! arithmetic (no tables, no rescaling), preserves the full f32 dynamic
+//! range (unlike IEEE f16), and keeps every conversion branch-free enough
+//! for the SIMD-batched helpers below — which is why it is the standard
+//! mixed-precision wire/state format for distributed training.
+//!
+//! Three conversion flavors:
+//!
+//! * [`bf16_from_f32`] — round-to-nearest-even (RNE), the default. NaNs
+//!   are quieted (payload truncation may otherwise produce an infinity
+//!   bit pattern); ±Inf, ±0 and subnormals fall out of the bit shift
+//!   naturally.
+//! * [`bf16_from_f32_stochastic`] — stochastic rounding: add 16 uniform
+//!   random bits before truncating. Rounds up with probability equal to
+//!   the discarded fraction, so the *expected* decoded value equals the
+//!   input (in bit space exactly; in value space up to binade-boundary
+//!   curvature) — the property that keeps long accumulations unbiased.
+//! * [`f32_from_bf16`] — exact widening (every bf16 value is an f32).
+//!
+//! Batched forms ([`encode_into`], [`decode_into`], [`quantize_assign`])
+//! process fixed 8-lane chunks plus a scalar remainder — the same shape as
+//! [`crate::util::simd`] — and allocate nothing beyond the caller's
+//! buffers. `quantize_assign` is the optimizer-state hook: bf16 optimizer
+//! state is *emulated value-exactly* by keeping f32 storage and rounding
+//! it through bf16 after every update, so accessors, checkpoints and the
+//! zero-allocation discipline are untouched while every stored value is
+//! exactly representable in 16 bits.
+
+/// Lanes per batched-conversion chunk (mirrors [`crate::util::simd::LANES`]).
+const LANES: usize = 8;
+
+/// Convert one f32 to bf16 with round-to-nearest-even.
+///
+/// NaN inputs are quieted: the truncated payload is OR-ed with the quiet
+/// bit so a signalling-NaN payload that truncates to all-zero mantissa
+/// cannot turn into an infinity.
+#[inline]
+pub fn bf16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE: add 0x7FFF plus the LSB of the kept part, then truncate —
+    // ties (discarded half exactly 0x8000) round to the even mantissa.
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// Convert one f32 to bf16 with stochastic rounding: `r` supplies 16
+/// uniform random bits; the value rounds up with probability equal to the
+/// discarded fraction. NaNs are quieted as in [`bf16_from_f32`].
+#[inline]
+pub fn bf16_from_f32_stochastic(x: f32, r: u16) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    ((bits + r as u32) >> 16) as u16
+}
+
+/// Widen one bf16 to f32 (exact — bf16 values are a subset of f32).
+#[inline]
+pub fn f32_from_bf16(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Round an f32 through bf16 and back (RNE) — the value-exact emulation
+/// primitive: the result is the f32 nearest-bf16 representation of `x`.
+#[inline]
+pub fn round_f32(x: f32) -> f32 {
+    f32_from_bf16(bf16_from_f32(x))
+}
+
+/// Batched RNE encode: `out` is resized to `src.len()` and filled with
+/// the bf16 encodings. 8-lane chunks + scalar remainder.
+pub fn encode_into(src: &[f32], out: &mut Vec<u16>) {
+    out.clear();
+    out.resize(src.len(), 0);
+    let mut s = src.chunks_exact(LANES);
+    let mut o = out.chunks_exact_mut(LANES);
+    for (sc, oc) in (&mut s).zip(&mut o) {
+        for j in 0..LANES {
+            oc[j] = bf16_from_f32(sc[j]);
+        }
+    }
+    for (ov, &sv) in o.into_remainder().iter_mut().zip(s.remainder()) {
+        *ov = bf16_from_f32(sv);
+    }
+}
+
+/// Batched decode: `out[i] = f32_from_bf16(src[i])`. Lengths must match.
+pub fn decode_into(src: &[u16], out: &mut [f32]) {
+    assert_eq!(src.len(), out.len(), "length mismatch in bf16 decode_into");
+    let mut s = src.chunks_exact(LANES);
+    let mut o = out.chunks_exact_mut(LANES);
+    for (sc, oc) in (&mut s).zip(&mut o) {
+        for j in 0..LANES {
+            oc[j] = f32_from_bf16(sc[j]);
+        }
+    }
+    for (ov, &sv) in o.into_remainder().iter_mut().zip(s.remainder()) {
+        *ov = f32_from_bf16(sv);
+    }
+}
+
+/// In-place RNE roundtrip: every element becomes its nearest
+/// bf16-representable f32. The bf16 wire codec and the bf16 optimizer
+/// state both reduce to this one kernel; zero allocations.
+pub fn quantize_assign(xs: &mut [f32]) {
+    let mut c = xs.chunks_exact_mut(LANES);
+    for chunk in &mut c {
+        for v in chunk.iter_mut() {
+            *v = round_f32(*v);
+        }
+    }
+    for v in c.into_remainder() {
+        *v = round_f32(*v);
+    }
+}
+
+/// Wire bytes of a bf16-encoded vector of dimension `d`.
+pub fn wire_bytes(d: usize) -> u64 {
+    2 * d as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// The two bf16 neighbours of a finite f32 (by sign-magnitude
+    /// truncation): the rounded result must be one of them.
+    fn neighbours(x: f32) -> (f32, f32) {
+        let bits = x.to_bits();
+        let lo = bits & 0xFFFF_0000;
+        // Next representable in magnitude (may overflow to ±Inf — that is
+        // the correct upper neighbour for values above bf16 MAX).
+        let hi = lo.wrapping_add(0x0001_0000);
+        (f32::from_bits(lo), f32::from_bits(hi))
+    }
+
+    #[test]
+    fn exact_values_roundtrip_identically() {
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1.5, -3.25, 256.0, 1.0e30, -1.0e-30] {
+            // All chosen values have ≤7 mantissa bits ⇒ bf16-exact.
+            assert_eq!(round_f32(v).to_bits(), v.to_bits(), "{v}");
+        }
+        assert_eq!(f32_from_bf16(bf16_from_f32(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f32_from_bf16(bf16_from_f32(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn rounds_to_one_of_the_two_bf16_neighbours() {
+        // "Within 1 ulp-of-bf16": the RNE result is the truncation or the
+        // next magnitude step, never further.
+        prop::check("bf16 rounds to a neighbour", 300, |g| {
+            // Mix wide-range uniform with raw bit patterns (covers
+            // subnormals and extreme exponents).
+            let x = if g.bool() {
+                g.f32_in(-1.0e20..1.0e20)
+            } else {
+                f32::from_bits(g.rng().next_u64() as u32)
+            };
+            if x.is_nan() {
+                return Ok(());
+            }
+            let r = round_f32(x);
+            let (lo, hi) = neighbours(x);
+            prop::assert_that(
+                r.to_bits() == lo.to_bits() || r.to_bits() == hi.to_bits(),
+                format!("{x} ({:#x}) rounded to {r}, neighbours {lo}/{hi}", x.to_bits()),
+            )?;
+            // And of the two, RNE picks the nearer (ties go even, which is
+            // still "not further than the other neighbour").
+            if r.is_finite() && lo.is_finite() && hi.is_finite() {
+                let (dr, dlo, dhi) =
+                    ((r - x).abs() as f64, (lo - x).abs() as f64, (hi - x).abs() as f64);
+                prop::assert_that(
+                    dr <= dlo.max(dhi) && dr <= dlo.min(dhi) + (hi - lo).abs() as f64 / 2.0,
+                    format!("{x}: |err| {dr} vs neighbours {dlo}/{dhi}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rounding_is_monotone() {
+        prop::check("bf16 rounding monotone", 200, |g| {
+            let a = g.f32_in(-1.0e10..1.0e10);
+            let b = g.f32_in(-1.0e10..1.0e10);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            prop::assert_that(
+                round_f32(lo) <= round_f32(hi),
+                format!("round({lo}) > round({hi})"),
+            )
+        });
+    }
+
+    #[test]
+    fn nan_inf_and_subnormals() {
+        // NaN stays NaN (quieted, never an infinity).
+        let q = f32_from_bf16(bf16_from_f32(f32::NAN));
+        assert!(q.is_nan());
+        // A signalling-style payload whose top bits truncate to zero must
+        // not collapse to Inf.
+        let snan = f32::from_bits(0x7F80_0001);
+        assert!(snan.is_nan());
+        assert!(f32_from_bf16(bf16_from_f32(snan)).is_nan());
+        assert!(f32_from_bf16(bf16_from_f32_stochastic(snan, 0xFFFF)).is_nan());
+        // Infinities are fixed points, f32::MAX overflows to Inf (nearest).
+        assert_eq!(round_f32(f32::MAX), f32::INFINITY);
+        assert_eq!(round_f32(-f32::MAX), f32::NEG_INFINITY);
+        // f32 subnormals round to bf16-grid subnormals or zero, exactly.
+        let sub = f32::from_bits(0x0001_2345);
+        let r = round_f32(sub);
+        assert!(r == 0.0 || r.to_bits() & 0xFFFF == 0, "{:#x}", r.to_bits());
+        // Signed zero is preserved.
+        assert_eq!(round_f32(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        // E[decode(sr(x))] ≈ x: the mean over many uniform draws lands
+        // within a small fraction of one bf16 ulp.
+        let mut rng = Rng::new(42);
+        for &x in &[1.234567f32, -0.007813, 3.9999, 1000.5, -1.0e-8] {
+            let trials = 40_000;
+            let mut mean = 0.0f64;
+            for _ in 0..trials {
+                let r = (rng.next_u64() & 0xFFFF) as u16;
+                mean += f32_from_bf16(bf16_from_f32_stochastic(x, r)) as f64 / trials as f64;
+            }
+            let (lo, hi) = neighbours(x);
+            let ulp = (hi - lo).abs() as f64;
+            assert!(
+                (mean - x as f64).abs() < 0.05 * ulp + 1e-12,
+                "x={x}: mean {mean}, ulp {ulp}"
+            );
+        }
+    }
+
+    #[test]
+    fn stochastic_extremes_match_truncation_bounds() {
+        // r = 0 truncates toward zero in magnitude; r = 0xFFFF reaches at
+        // most the next magnitude step.
+        prop::check("bf16 stochastic bounds", 200, |g| {
+            let x = g.f32_in(-1.0e10..1.0e10);
+            let (lo, hi) = neighbours(x);
+            let down = f32_from_bf16(bf16_from_f32_stochastic(x, 0));
+            let up = f32_from_bf16(bf16_from_f32_stochastic(x, 0xFFFF));
+            prop::assert_that(down.to_bits() == lo.to_bits(), format!("down {down} vs {lo}"))?;
+            prop::assert_that(
+                up.to_bits() == lo.to_bits() || up.to_bits() == hi.to_bits(),
+                format!("up {up} vs {lo}/{hi}"),
+            )
+        });
+    }
+
+    #[test]
+    fn batched_forms_match_scalar_for_all_widths() {
+        // Every width 0..40 exercises both the 8-lane chunks and each
+        // possible remainder length.
+        for d in 0..40usize {
+            let mut src = vec![0.0f32; d];
+            Rng::new(d as u64 + 1).fill_normal(&mut src, 3.0);
+            if d > 2 {
+                src[0] = f32::NAN;
+                src[1] = f32::INFINITY;
+                src[2] = f32::from_bits(0x0000_0777); // subnormal
+            }
+            let mut enc = Vec::new();
+            encode_into(&src, &mut enc);
+            assert_eq!(enc.len(), d);
+            let mut dec = vec![0.0f32; d];
+            decode_into(&enc, &mut dec);
+            let mut q = src.clone();
+            quantize_assign(&mut q);
+            for i in 0..d {
+                assert_eq!(enc[i], bf16_from_f32(src[i]), "enc[{i}] d={d}");
+                assert_eq!(dec[i].to_bits(), round_f32(src[i]).to_bits(), "dec[{i}] d={d}");
+                assert_eq!(q[i].to_bits(), round_f32(src[i]).to_bits(), "q[{i}] d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_is_idempotent() {
+        prop::check("bf16 quantize idempotent", 100, |g| {
+            let mut v = g.vec_normal(1..200, 10.0);
+            quantize_assign(&mut v);
+            let once = v.clone();
+            quantize_assign(&mut v);
+            for (i, (&a, &b)) in once.iter().zip(&v).enumerate() {
+                prop::assert_that(a.to_bits() == b.to_bits(), format!("idx {i}: {a} vs {b}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wire_bytes_is_half_of_f32() {
+        assert_eq!(wire_bytes(0), 0);
+        assert_eq!(wire_bytes(1024), 2048);
+        assert_eq!(wire_bytes(1 << 20), 4 * (1 << 20) / 2);
+    }
+}

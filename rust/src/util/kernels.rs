@@ -1,5 +1,5 @@
 //! Shared hot-path kernels — the one home for every per-element loop the
-//! training hot paths execute (DESIGN.md §6).
+//! training hot paths execute (DESIGN.md §6, §7).
 //!
 //! Before this module, each call site owned a private copy of its loop:
 //! the optimizer steps in [`crate::optim`], the leader-side averaging in
@@ -10,24 +10,37 @@
 //! * **One bitwise-pinned implementation.** The equivalence tests pin the
 //!   exact f32 op order; with a single copy, an optimisation (or a bug)
 //!   cannot drift one caller away from the others.
-//! * **Autovectorizer-friendly shape.** Every kernel operates on
-//!   pre-narrowed contiguous slices with bounds checks hoisted out of the
-//!   hot body, and the multi-input reductions are cache-blocked
-//!   ([`MEAN_CHUNK`]) so accumulator chunks stay in L1 across the n input
-//!   passes.
+//! * **Explicit SIMD with a scalar oracle.** Every public kernel here is
+//!   a thin dispatcher: [`serial`] holds the scalar reference loops, and
+//!   [`crate::util::simd`] holds lane-structured versions selected by the
+//!   `[exec] simd` knob. The two are bit-identical for every kernel —
+//!   elementwise ops run the same per-element arithmetic in the same
+//!   order, and the two reductions ([`sgd_update_sq`],
+//!   [`local_adaalter_step`]'s `‖Δx‖²`) accumulate into the same fixed
+//!   8-lane f64 tree (element `i` → lane `i mod 8`,
+//!   [`crate::util::simd::fold_tree`] fold) in both implementations — so
+//!   the dispatch decision is a pure wall-clock knob. The property pins
+//!   below assert serial ≡ simd for all widths including every remainder
+//!   length.
 //! * **Zero-allocation discipline.** Kernels never allocate; callers bring
 //!   every buffer (see [`crate::util::pool::BufferPool`]), which is what
 //!   the counting-allocator test leans on.
 //!
-//! Bitwise contract: each kernel performs *exactly* the arithmetic, in
-//! exactly the per-element order, of the loop it replaced. Cache blocking
-//! only regroups loop iterations; it never reassociates a single
-//! element's operations, so results are bit-identical to the unblocked
-//! form.
+//! Bitwise contract: each elementwise kernel performs *exactly* the
+//! arithmetic, in exactly the per-element order, of the loop it replaced.
+//! Cache blocking ([`MEAN_CHUNK`]) and lane chunking only regroup loop
+//! iterations; they never reassociate a single element's operations. The
+//! f64 drift reductions use the fixed lane tree in *both* modes (the one
+//! deliberate reassociation, chosen so serial ≡ simd bitwise; the scalar
+//! value differs from a left-to-right sum only by f64 rounding, and no
+//! consumer pins that sum — drift policies and reports are pinned
+//! run-vs-run).
+
+use crate::util::simd;
 
 /// Panic-with-context helper for length mismatches (protocol invariant).
 #[inline]
-fn check_len(a: usize, b: usize, what: &str) {
+pub(crate) fn check_len(a: usize, b: usize, what: &str) {
     assert_eq!(a, b, "length mismatch in {what}: {a} vs {b}");
 }
 
@@ -37,32 +50,279 @@ fn check_len(a: usize, b: usize, what: &str) {
 /// (n reads + 1 write) of DRAM traffic. EXPERIMENTS.md §Perf.
 pub const MEAN_CHUNK: usize = 1024;
 
+/// Scalar reference kernels — the bitwise oracle the SIMD forms in
+/// [`crate::util::simd`] are pinned against.
+///
+/// These are the seed's original loops, unchanged except that the two f64
+/// drift reductions accumulate into the shared fixed 8-lane tree (see the
+/// module doc). Call sites use the dispatching wrappers in the parent
+/// module; benches and property tests call these directly to compare the
+/// implementations without touching the process-global mode.
+pub mod serial {
+    use super::{check_len, MEAN_CHUNK};
+    use crate::util::simd::{fold_tree, LANES};
+
+    /// Scalar reference for [`super::mean_into`]: chunked copy / add /
+    /// scale passes.
+    pub fn mean_into<S: AsRef<[f32]>>(inputs: &[S], out: &mut [f32]) {
+        assert!(!inputs.is_empty(), "mean_into: no inputs");
+        let d = out.len();
+        for v in inputs {
+            check_len(v.as_ref().len(), d, "mean_into");
+        }
+        let scale = 1.0 / inputs.len() as f32;
+        let mut start = 0;
+        while start < d {
+            let end = (start + MEAN_CHUNK).min(d);
+            let out_c = &mut out[start..end];
+            out_c.copy_from_slice(&inputs[0].as_ref()[start..end]);
+            for v in &inputs[1..] {
+                let v = &v.as_ref()[start..end];
+                for (o, &x) in out_c.iter_mut().zip(v) {
+                    *o += x;
+                }
+            }
+            for o in out_c.iter_mut() {
+                *o *= scale;
+            }
+            start = end;
+        }
+    }
+
+    /// Scalar reference for [`super::mean_and_squares_into`].
+    pub fn mean_and_squares_into<S: AsRef<[f32]>>(
+        inputs: &[S],
+        avg_g: &mut [f32],
+        avg_gsq: &mut [f32],
+    ) {
+        assert!(!inputs.is_empty(), "mean_and_squares_into: no inputs");
+        let d = avg_g.len();
+        check_len(avg_gsq.len(), d, "mean_and_squares_into");
+        for g in inputs {
+            check_len(g.as_ref().len(), d, "mean_and_squares_into");
+        }
+        let scale = 1.0 / inputs.len() as f32;
+        let mut start = 0;
+        while start < d {
+            let end = (start + MEAN_CHUNK).min(d);
+            let (gc, qc) = (&mut avg_g[start..end], &mut avg_gsq[start..end]);
+            let first = &inputs[0].as_ref()[start..end];
+            for i in 0..gc.len() {
+                let v = first[i];
+                gc[i] = v;
+                qc[i] = v * v;
+            }
+            for g in &inputs[1..] {
+                let g = &g.as_ref()[start..end];
+                for i in 0..gc.len() {
+                    let v = g[i];
+                    gc[i] += v;
+                    qc[i] += v * v;
+                }
+            }
+            for i in 0..gc.len() {
+                gc[i] *= scale;
+                qc[i] *= scale;
+            }
+            start = end;
+        }
+    }
+
+    /// Scalar reference for [`super::square_into`].
+    pub fn square_into(x: &[f32], out: &mut [f32]) {
+        check_len(x.len(), out.len(), "square_into");
+        let d = out.len();
+        let x = &x[..d];
+        for i in 0..d {
+            out[i] = x[i] * x[i];
+        }
+    }
+
+    /// Scalar reference for [`super::add_assign`].
+    pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+        check_len(acc.len(), x.len(), "add_assign");
+        let d = acc.len();
+        let x = &x[..d];
+        for i in 0..d {
+            acc[i] += x[i];
+        }
+    }
+
+    /// Scalar reference for [`super::scale_assign`].
+    pub fn scale_assign(acc: &mut [f32], s: f32) {
+        for v in acc.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Scalar reference for [`super::axpy`].
+    pub fn axpy(acc: &mut [f32], s: f32, x: &[f32]) {
+        check_len(acc.len(), x.len(), "axpy");
+        let d = acc.len();
+        let x = &x[..d];
+        for i in 0..d {
+            acc[i] += s * x[i];
+        }
+    }
+
+    /// Scalar reference for [`super::sq_accumulate`].
+    pub fn sq_accumulate(acc: &mut [f32], g: &[f32]) {
+        check_len(acc.len(), g.len(), "sq_accumulate");
+        let d = acc.len();
+        let g = &g[..d];
+        for i in 0..d {
+            acc[i] += g[i] * g[i];
+        }
+    }
+
+    /// Scalar reference for [`super::sgd_step`].
+    pub fn sgd_step(x: &mut [f32], g: &[f32], lr: f32) {
+        check_len(x.len(), g.len(), "sgd_step");
+        let d = x.len();
+        let g = &g[..d];
+        for i in 0..d {
+            x[i] -= lr * g[i];
+        }
+    }
+
+    /// Scalar reference for [`super::sgd_update_sq`] — the scalar form of
+    /// the fixed 8-lane tree (element `i` feeds lane `i mod 8`).
+    pub fn sgd_update_sq(g: &[f32], lr: f32) -> f64 {
+        let mut lanes = [0.0f64; LANES];
+        for (i, &gv) in g.iter().enumerate() {
+            let u = (lr * gv) as f64;
+            lanes[i % LANES] += u * u;
+        }
+        fold_tree(&lanes)
+    }
+
+    /// Scalar reference for [`super::momentum_step`].
+    pub fn momentum_step(x: &mut [f32], m: &mut [f32], g: &[f32], mu: f32, lr: f32) {
+        let d = m.len();
+        check_len(x.len(), d, "momentum_step");
+        check_len(g.len(), d, "momentum_step");
+        let x = &mut x[..d];
+        let g = &g[..d];
+        for i in 0..d {
+            let v = mu * m[i] + g[i];
+            m[i] = v;
+            x[i] -= lr * v;
+        }
+    }
+
+    /// Scalar reference for [`super::adagrad_step`].
+    pub fn adagrad_step(x: &mut [f32], b2: &mut [f32], g: &[f32], gsq: &[f32], lr: f32, eps2: f32) {
+        let d = b2.len();
+        check_len(x.len(), d, "adagrad_step");
+        check_len(g.len(), d, "adagrad_step");
+        check_len(gsq.len(), d, "adagrad_step");
+        let x = &mut x[..d];
+        let g = &g[..d];
+        let gsq = &gsq[..d];
+        for i in 0..d {
+            let b2i = b2[i] + gsq[i];
+            b2[i] = b2i;
+            x[i] -= lr * g[i] / (b2i + eps2).sqrt();
+        }
+    }
+
+    /// Scalar reference for [`super::adaalter_step`].
+    pub fn adaalter_step(
+        x: &mut [f32],
+        b2: &mut [f32],
+        g: &[f32],
+        gsq: &[f32],
+        lr: f32,
+        eps2: f32,
+    ) {
+        let d = b2.len();
+        check_len(x.len(), d, "adaalter_step");
+        check_len(g.len(), d, "adaalter_step");
+        check_len(gsq.len(), d, "adaalter_step");
+        let x = &mut x[..d];
+        let g = &g[..d];
+        let gsq = &gsq[..d];
+        for i in 0..d {
+            let stale = b2[i];
+            x[i] -= lr * g[i] / (stale + eps2).sqrt();
+            b2[i] = stale + gsq[i];
+        }
+    }
+
+    /// Scalar reference for [`super::local_adaalter_step`] — elementwise
+    /// streams as in the seed; `‖Δx‖²` via the scalar fixed 8-lane tree.
+    pub fn local_adaalter_step(
+        x: &mut [f32],
+        b2_sync: &[f32],
+        acc: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        denom_add: f32,
+    ) -> f64 {
+        let d = x.len();
+        check_len(b2_sync.len(), d, "local_adaalter_step");
+        check_len(acc.len(), d, "local_adaalter_step");
+        check_len(g.len(), d, "local_adaalter_step");
+        let b2 = &b2_sync[..d];
+        let acc = &mut acc[..d];
+        let g = &g[..d];
+        let mut lanes = [0.0f64; LANES];
+        for i in 0..d {
+            let gi = g[i];
+            let du = lr * gi / (b2[i] + denom_add).sqrt();
+            x[i] -= du;
+            acc[i] += gi * gi;
+            lanes[i % LANES] += du as f64 * du as f64;
+        }
+        fold_tree(&lanes)
+    }
+
+    /// Scalar reference for [`super::delta_encode`].
+    pub fn delta_encode(src: &[f32], base: &[f32], out: &mut [f32]) {
+        let d = out.len();
+        check_len(src.len(), d, "delta_encode");
+        check_len(base.len(), d, "delta_encode");
+        let src = &src[..d];
+        let base = &base[..d];
+        for i in 0..d {
+            out[i] = src[i] - base[i];
+        }
+    }
+
+    /// Scalar reference for [`super::delta_decode`].
+    pub fn delta_decode(base: &[f32], delta: &[f32], out: &mut [f32]) {
+        let d = out.len();
+        check_len(base.len(), d, "delta_decode");
+        check_len(delta.len(), d, "delta_decode");
+        let base = &base[..d];
+        let delta = &delta[..d];
+        for i in 0..d {
+            out[i] = base[i] + delta[i];
+        }
+    }
+
+    /// Scalar reference for [`super::delta_decode_clamped`].
+    pub fn delta_decode_clamped(base: &[f32], delta: &[f32], out: &mut [f32]) {
+        let d = out.len();
+        check_len(base.len(), d, "delta_decode_clamped");
+        check_len(delta.len(), d, "delta_decode_clamped");
+        let base = &base[..d];
+        let delta = &delta[..d];
+        for i in 0..d {
+            out[i] = (base[i] + delta[i]).max(0.0);
+        }
+    }
+}
+
 /// `out[i] = mean_k inputs[k][i]` — the Alg. 4 lines 11–12 synchronization
 /// average. `inputs` must be non-empty and same-length. Generic over the
 /// row type so both `&[&[f32]]` (leader gathers) and `&[Vec<f32>]`
 /// (pooled staging buffers) average without building a borrow vector.
 pub fn mean_into<S: AsRef<[f32]>>(inputs: &[S], out: &mut [f32]) {
-    assert!(!inputs.is_empty(), "mean_into: no inputs");
-    let d = out.len();
-    for v in inputs {
-        check_len(v.as_ref().len(), d, "mean_into");
-    }
-    let scale = 1.0 / inputs.len() as f32;
-    let mut start = 0;
-    while start < d {
-        let end = (start + MEAN_CHUNK).min(d);
-        let out_c = &mut out[start..end];
-        out_c.copy_from_slice(&inputs[0].as_ref()[start..end]);
-        for v in &inputs[1..] {
-            let v = &v.as_ref()[start..end];
-            for (o, &x) in out_c.iter_mut().zip(v) {
-                *o += x;
-            }
-        }
-        for o in out_c.iter_mut() {
-            *o *= scale;
-        }
-        start = end;
+    if simd::enabled() {
+        simd::mean_into(inputs, out)
+    } else {
+        serial::mean_into(inputs, out)
     }
 }
 
@@ -74,160 +334,113 @@ pub fn mean_and_squares_into<S: AsRef<[f32]>>(
     avg_g: &mut [f32],
     avg_gsq: &mut [f32],
 ) {
-    assert!(!inputs.is_empty(), "mean_and_squares_into: no inputs");
-    let d = avg_g.len();
-    check_len(avg_gsq.len(), d, "mean_and_squares_into");
-    for g in inputs {
-        check_len(g.as_ref().len(), d, "mean_and_squares_into");
-    }
-    let scale = 1.0 / inputs.len() as f32;
-    let mut start = 0;
-    while start < d {
-        let end = (start + MEAN_CHUNK).min(d);
-        let (gc, qc) = (&mut avg_g[start..end], &mut avg_gsq[start..end]);
-        let first = &inputs[0].as_ref()[start..end];
-        for i in 0..gc.len() {
-            let v = first[i];
-            gc[i] = v;
-            qc[i] = v * v;
-        }
-        for g in &inputs[1..] {
-            let g = &g.as_ref()[start..end];
-            for i in 0..gc.len() {
-                let v = g[i];
-                gc[i] += v;
-                qc[i] += v * v;
-            }
-        }
-        for i in 0..gc.len() {
-            gc[i] *= scale;
-            qc[i] *= scale;
-        }
-        start = end;
+    if simd::enabled() {
+        simd::mean_and_squares_into(inputs, avg_g, avg_gsq)
+    } else {
+        serial::mean_and_squares_into(inputs, avg_g, avg_gsq)
     }
 }
 
 /// `out[i] = x[i]²` — AdaGrad's Alg. 1 line 6 squares the *averaged*
 /// gradient.
 pub fn square_into(x: &[f32], out: &mut [f32]) {
-    check_len(x.len(), out.len(), "square_into");
-    let d = out.len();
-    let x = &x[..d];
-    for i in 0..d {
-        out[i] = x[i] * x[i];
+    if simd::enabled() {
+        simd::square_into(x, out)
+    } else {
+        serial::square_into(x, out)
     }
 }
 
 /// In-place `acc += x`.
 pub fn add_assign(acc: &mut [f32], x: &[f32]) {
-    check_len(acc.len(), x.len(), "add_assign");
-    let d = acc.len();
-    let x = &x[..d];
-    for i in 0..d {
-        acc[i] += x[i];
+    if simd::enabled() {
+        simd::add_assign(acc, x)
+    } else {
+        serial::add_assign(acc, x)
     }
 }
 
 /// In-place `acc *= s` (scaled accumulate's epilogue).
 pub fn scale_assign(acc: &mut [f32], s: f32) {
-    for v in acc.iter_mut() {
-        *v *= s;
+    if simd::enabled() {
+        simd::scale_assign(acc, s)
+    } else {
+        serial::scale_assign(acc, s)
     }
 }
 
 /// In-place `acc += s * x` (axpy).
 pub fn axpy(acc: &mut [f32], s: f32, x: &[f32]) {
-    check_len(acc.len(), x.len(), "axpy");
-    let d = acc.len();
-    let x = &x[..d];
-    for i in 0..d {
-        acc[i] += s * x[i];
+    if simd::enabled() {
+        simd::axpy(acc, s, x)
+    } else {
+        serial::axpy(acc, s, x)
     }
 }
 
 /// In-place `acc += g ∘ g` (squared-gradient accumulate, Alg. 1/3 line 6/7
 /// building block).
 pub fn sq_accumulate(acc: &mut [f32], g: &[f32]) {
-    check_len(acc.len(), g.len(), "sq_accumulate");
-    let d = acc.len();
-    let g = &g[..d];
-    for i in 0..d {
-        acc[i] += g[i] * g[i];
+    if simd::enabled() {
+        simd::sq_accumulate(acc, g)
+    } else {
+        serial::sq_accumulate(acc, g)
     }
 }
 
 /// Plain SGD update: `x ← x − lr·g`.
 pub fn sgd_step(x: &mut [f32], g: &[f32], lr: f32) {
-    check_len(x.len(), g.len(), "sgd_step");
-    let d = x.len();
-    let g = &g[..d];
-    for i in 0..d {
-        x[i] -= lr * g[i];
+    if simd::enabled() {
+        simd::sgd_step(x, g, lr)
+    } else {
+        serial::sgd_step(x, g, lr)
     }
 }
 
 /// `‖lr·g‖²` in f64 — the SGD drift proxy, computed exactly as the local
 /// step would apply it (`Δx = −lr·g`), without touching the update.
+/// Accumulated via the fixed 8-lane tree (mode-independent bits).
 pub fn sgd_update_sq(g: &[f32], lr: f32) -> f64 {
-    g.iter()
-        .map(|&gv| {
-            let u = (lr * gv) as f64;
-            u * u
-        })
-        .sum()
+    if simd::enabled() {
+        simd::sgd_update_sq(g, lr)
+    } else {
+        serial::sgd_update_sq(g, lr)
+    }
 }
 
 /// Heavy-ball momentum update: `m ← μ·m + g; x ← x − lr·m`, fused.
 pub fn momentum_step(x: &mut [f32], m: &mut [f32], g: &[f32], mu: f32, lr: f32) {
-    let d = m.len();
-    check_len(x.len(), d, "momentum_step");
-    check_len(g.len(), d, "momentum_step");
-    let x = &mut x[..d];
-    let g = &g[..d];
-    for i in 0..d {
-        let v = mu * m[i] + g[i];
-        m[i] = v;
-        x[i] -= lr * v;
+    if simd::enabled() {
+        simd::momentum_step(x, m, g, mu, lr)
+    } else {
+        serial::momentum_step(x, m, g, mu, lr)
     }
 }
 
 /// AdaGrad step (Alg. 1 lines 6–7), fused single pass: accumulate the
 /// squared averaged gradient FIRST, update with the fresh denominator.
 pub fn adagrad_step(x: &mut [f32], b2: &mut [f32], g: &[f32], gsq: &[f32], lr: f32, eps2: f32) {
-    let d = b2.len();
-    check_len(x.len(), d, "adagrad_step");
-    check_len(g.len(), d, "adagrad_step");
-    check_len(gsq.len(), d, "adagrad_step");
-    let x = &mut x[..d];
-    let g = &g[..d];
-    let gsq = &gsq[..d];
-    for i in 0..d {
-        let b2i = b2[i] + gsq[i];
-        b2[i] = b2i;
-        x[i] -= lr * g[i] / (b2i + eps2).sqrt();
+    if simd::enabled() {
+        simd::adagrad_step(x, b2, g, gsq, lr, eps2)
+    } else {
+        serial::adagrad_step(x, b2, g, gsq, lr, eps2)
     }
 }
 
 /// AdaAlter step (Alg. 3 lines 6–7), fused single pass: update with the
 /// STALE denominator, then fold the fresh squares in.
 pub fn adaalter_step(x: &mut [f32], b2: &mut [f32], g: &[f32], gsq: &[f32], lr: f32, eps2: f32) {
-    let d = b2.len();
-    check_len(x.len(), d, "adaalter_step");
-    check_len(g.len(), d, "adaalter_step");
-    check_len(gsq.len(), d, "adaalter_step");
-    let x = &mut x[..d];
-    let g = &g[..d];
-    let gsq = &gsq[..d];
-    for i in 0..d {
-        let stale = b2[i];
-        x[i] -= lr * g[i] / (stale + eps2).sqrt();
-        b2[i] = stale + gsq[i];
+    if simd::enabled() {
+        simd::adaalter_step(x, b2, g, gsq, lr, eps2)
+    } else {
+        serial::adaalter_step(x, b2, g, gsq, lr, eps2)
     }
 }
 
 /// Local AdaAlter step (Alg. 4 lines 5–7), fused single pass over the
 /// three streams: `x ← x − lr·g/√(b2_sync + denom_add)`, `acc += g∘g`.
-/// Returns `‖Δx‖²` (f64), the drift proxy adaptive sync policies consume.
+/// Returns `‖Δx‖²` (f64), the drift proxy adaptive sync policies consume,
+/// accumulated via the fixed 8-lane tree (mode-independent bits).
 pub fn local_adaalter_step(
     x: &mut [f32],
     b2_sync: &[f32],
@@ -236,46 +449,29 @@ pub fn local_adaalter_step(
     lr: f32,
     denom_add: f32,
 ) -> f64 {
-    let d = x.len();
-    check_len(b2_sync.len(), d, "local_adaalter_step");
-    check_len(acc.len(), d, "local_adaalter_step");
-    check_len(g.len(), d, "local_adaalter_step");
-    let b2 = &b2_sync[..d];
-    let acc = &mut acc[..d];
-    let g = &g[..d];
-    let mut update_sq = 0.0f64;
-    for i in 0..d {
-        let gi = g[i];
-        let du = lr * gi / (b2[i] + denom_add).sqrt();
-        x[i] -= du;
-        acc[i] += gi * gi;
-        update_sq += du as f64 * du as f64;
+    if simd::enabled() {
+        simd::local_adaalter_step(x, b2_sync, acc, g, lr, denom_add)
+    } else {
+        serial::local_adaalter_step(x, b2_sync, acc, g, lr, denom_add)
     }
-    update_sq
 }
 
 /// Delta encode: `out[i] = src[i] − base[i]` (the quantity compressed
 /// local-SGD actually ships; DESIGN.md §3).
 pub fn delta_encode(src: &[f32], base: &[f32], out: &mut [f32]) {
-    let d = out.len();
-    check_len(src.len(), d, "delta_encode");
-    check_len(base.len(), d, "delta_encode");
-    let src = &src[..d];
-    let base = &base[..d];
-    for i in 0..d {
-        out[i] = src[i] - base[i];
+    if simd::enabled() {
+        simd::delta_encode(src, base, out)
+    } else {
+        serial::delta_encode(src, base, out)
     }
 }
 
 /// Delta decode: `out[i] = base[i] + delta[i]`.
 pub fn delta_decode(base: &[f32], delta: &[f32], out: &mut [f32]) {
-    let d = out.len();
-    check_len(base.len(), d, "delta_decode");
-    check_len(delta.len(), d, "delta_decode");
-    let base = &base[..d];
-    let delta = &delta[..d];
-    for i in 0..d {
-        out[i] = base[i] + delta[i];
+    if simd::enabled() {
+        simd::delta_decode(base, delta, out)
+    } else {
+        serial::delta_decode(base, delta, out)
     }
 }
 
@@ -284,13 +480,10 @@ pub fn delta_decode(base: &[f32], delta: &[f32], out: &mut [f32]) {
 /// placeholder keeps the installed denominator strictly positive, so
 /// training stays finite).
 pub fn delta_decode_clamped(base: &[f32], delta: &[f32], out: &mut [f32]) {
-    let d = out.len();
-    check_len(base.len(), d, "delta_decode_clamped");
-    check_len(delta.len(), d, "delta_decode_clamped");
-    let base = &base[..d];
-    let delta = &delta[..d];
-    for i in 0..d {
-        out[i] = (base[i] + delta[i]).max(0.0);
+    if simd::enabled() {
+        simd::delta_decode_clamped(base, delta, out)
+    } else {
+        serial::delta_decode_clamped(base, delta, out)
     }
 }
 
@@ -299,6 +492,7 @@ mod tests {
     use super::*;
     use crate::util::prop;
     use crate::util::rng::Rng;
+    use crate::util::simd::{fold_tree, LANES};
 
     fn randv(seed: u64, d: usize) -> Vec<f32> {
         let mut v = vec![0.0f32; d];
@@ -367,6 +561,16 @@ mod tests {
         });
     }
 
+    /// The fixed-tree reference for the drift reductions, written as an
+    /// independent loop (the hand oracle both implementations must hit).
+    fn tree_sum(terms: impl Iterator<Item = f64>) -> f64 {
+        let mut lanes = [0.0f64; LANES];
+        for (i, t) in terms.enumerate() {
+            lanes[i % LANES] += t;
+        }
+        fold_tree(&lanes)
+    }
+
     #[test]
     fn elementwise_kernels_match_hand_loops() {
         let d = 37;
@@ -399,36 +603,187 @@ mod tests {
         assert_eq!(x, xe);
         assert_eq!(b2, b2e);
 
-        // local_adaalter_step vs the original three-stream loop.
+        // local_adaalter_step vs the original three-stream loop; the f64
+        // drift reduction vs the fixed-tree hand oracle.
         let mut x = randv(4, d);
         let b2s = vec![1.0f32; d];
         let mut acc = vec![1.0f32; d];
         let (mut xe, mut acce) = (x.clone(), acc.clone());
         let upd = local_adaalter_step(&mut x, &b2s, &mut acc, &g, 0.5, 2.0);
-        let mut upde = 0.0f64;
         for i in 0..d {
             let du = 0.5 * g[i] / (b2s[i] + 2.0).sqrt();
             xe[i] -= du;
             acce[i] += g[i] * g[i];
-            upde += du as f64 * du as f64;
         }
+        let upde = tree_sum((0..d).map(|i| {
+            let du = 0.5 * g[i] / (b2s[i] + 2.0).sqrt();
+            du as f64 * du as f64
+        }));
         assert_eq!(x, xe);
         assert_eq!(acc, acce);
         assert_eq!(upd.to_bits(), upde.to_bits());
 
-        // sgd_step + sgd_update_sq.
+        // sgd_step + sgd_update_sq (same tree oracle).
         let mut x = randv(5, d);
         let mut xe = x.clone();
         let upd = sgd_update_sq(&g, 0.1);
         sgd_step(&mut x, &g, 0.1);
-        let mut upde = 0.0f64;
         for i in 0..d {
-            let u = (0.1 * g[i]) as f64;
-            upde += u * u;
             xe[i] -= 0.1 * g[i];
         }
+        let upde = tree_sum(g.iter().map(|&gv| {
+            let u = (0.1 * gv) as f64;
+            u * u
+        }));
         assert_eq!(x, xe);
         assert_eq!(upd.to_bits(), upde.to_bits());
+    }
+
+    /// The tentpole pin: serial and SIMD implementations are bit-identical
+    /// for EVERY kernel at every width — each remainder length 0..LANES,
+    /// the lane boundary itself, and widths straddling the MEAN_CHUNK
+    /// cache-block edge.
+    #[test]
+    fn serial_and_simd_agree_bitwise_for_all_widths() {
+        let mut widths: Vec<usize> = (0..2 * LANES + 1).collect();
+        widths.extend([
+            61,
+            64,
+            500,
+            MEAN_CHUNK - 1,
+            MEAN_CHUNK,
+            MEAN_CHUNK + 1,
+            MEAN_CHUNK + 7,
+            2 * MEAN_CHUNK + 3,
+        ]);
+        for &d in &widths {
+            let g = randv(d as u64 + 11, d);
+            let base = randv(d as u64 + 12, d);
+            let src = randv(d as u64 + 13, d);
+            let gsq: Vec<f32> = g.iter().map(|v| v * v).collect();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+            // mean_into / mean_and_squares_into over 3 rows.
+            if d > 0 {
+                let rows = [g.clone(), base.clone(), src.clone()];
+                let (mut a, mut b) = (vec![0.0f32; d], vec![0.0f32; d]);
+                serial::mean_into(&rows, &mut a);
+                crate::util::simd::mean_into(&rows, &mut b);
+                assert_eq!(bits(&a), bits(&b), "mean_into d={d}");
+                let (mut ag, mut aq) = (vec![0.0f32; d], vec![0.0f32; d]);
+                let (mut bg, mut bq) = (vec![0.0f32; d], vec![0.0f32; d]);
+                serial::mean_and_squares_into(&rows, &mut ag, &mut aq);
+                crate::util::simd::mean_and_squares_into(&rows, &mut bg, &mut bq);
+                assert_eq!(bits(&ag), bits(&bg), "mean_and_squares g d={d}");
+                assert_eq!(bits(&aq), bits(&bq), "mean_and_squares gsq d={d}");
+            }
+
+            // Unary / binary elementwise.
+            let (mut a, mut b) = (vec![0.0f32; d], vec![0.0f32; d]);
+            serial::square_into(&g, &mut a);
+            crate::util::simd::square_into(&g, &mut b);
+            assert_eq!(bits(&a), bits(&b), "square_into d={d}");
+
+            let (mut a, mut b) = (base.clone(), base.clone());
+            serial::add_assign(&mut a, &g);
+            crate::util::simd::add_assign(&mut b, &g);
+            assert_eq!(bits(&a), bits(&b), "add_assign d={d}");
+            serial::scale_assign(&mut a, 0.37);
+            crate::util::simd::scale_assign(&mut b, 0.37);
+            assert_eq!(bits(&a), bits(&b), "scale_assign d={d}");
+            serial::axpy(&mut a, -1.25, &g);
+            crate::util::simd::axpy(&mut b, -1.25, &g);
+            assert_eq!(bits(&a), bits(&b), "axpy d={d}");
+            serial::sq_accumulate(&mut a, &g);
+            crate::util::simd::sq_accumulate(&mut b, &g);
+            assert_eq!(bits(&a), bits(&b), "sq_accumulate d={d}");
+            serial::sgd_step(&mut a, &g, 0.15);
+            crate::util::simd::sgd_step(&mut b, &g, 0.15);
+            assert_eq!(bits(&a), bits(&b), "sgd_step d={d}");
+
+            // Reductions: identical bits including the lane tree.
+            assert_eq!(
+                serial::sgd_update_sq(&g, 0.15).to_bits(),
+                crate::util::simd::sgd_update_sq(&g, 0.15).to_bits(),
+                "sgd_update_sq d={d}"
+            );
+
+            // Optimizer steps.
+            let (mut xa, mut xb) = (src.clone(), src.clone());
+            let (mut ma, mut mb) = (base.clone(), base.clone());
+            serial::momentum_step(&mut xa, &mut ma, &g, 0.9, 0.2);
+            crate::util::simd::momentum_step(&mut xb, &mut mb, &g, 0.9, 0.2);
+            assert_eq!(bits(&xa), bits(&xb), "momentum x d={d}");
+            assert_eq!(bits(&ma), bits(&mb), "momentum m d={d}");
+
+            let (mut xa, mut xb) = (src.clone(), src.clone());
+            let (mut ba, mut bb) = (vec![1.0f32; d], vec![1.0f32; d]);
+            serial::adagrad_step(&mut xa, &mut ba, &g, &gsq, 0.3, 1.0);
+            crate::util::simd::adagrad_step(&mut xb, &mut bb, &g, &gsq, 0.3, 1.0);
+            assert_eq!(bits(&xa), bits(&xb), "adagrad x d={d}");
+            assert_eq!(bits(&ba), bits(&bb), "adagrad b2 d={d}");
+
+            let (mut xa, mut xb) = (src.clone(), src.clone());
+            let (mut ba, mut bb) = (vec![1.0f32; d], vec![1.0f32; d]);
+            serial::adaalter_step(&mut xa, &mut ba, &g, &gsq, 0.3, 1.0);
+            crate::util::simd::adaalter_step(&mut xb, &mut bb, &g, &gsq, 0.3, 1.0);
+            assert_eq!(bits(&xa), bits(&xb), "adaalter x d={d}");
+            assert_eq!(bits(&ba), bits(&bb), "adaalter b2 d={d}");
+
+            let (mut xa, mut xb) = (src.clone(), src.clone());
+            let b2s = vec![1.0f32; d];
+            let (mut aa, mut ab) = (vec![1.0f32; d], vec![1.0f32; d]);
+            let ua = serial::local_adaalter_step(&mut xa, &b2s, &mut aa, &g, 0.5, 2.0);
+            let ub = crate::util::simd::local_adaalter_step(&mut xb, &b2s, &mut ab, &g, 0.5, 2.0);
+            assert_eq!(bits(&xa), bits(&xb), "local_adaalter x d={d}");
+            assert_eq!(bits(&aa), bits(&ab), "local_adaalter acc d={d}");
+            assert_eq!(ua.to_bits(), ub.to_bits(), "local_adaalter upd d={d}");
+
+            // Delta coding.
+            let (mut a, mut b) = (vec![0.0f32; d], vec![0.0f32; d]);
+            serial::delta_encode(&src, &base, &mut a);
+            crate::util::simd::delta_encode(&src, &base, &mut b);
+            assert_eq!(bits(&a), bits(&b), "delta_encode d={d}");
+            serial::delta_decode(&base, &g, &mut a);
+            crate::util::simd::delta_decode(&base, &g, &mut b);
+            assert_eq!(bits(&a), bits(&b), "delta_decode d={d}");
+            serial::delta_decode_clamped(&base, &g, &mut a);
+            crate::util::simd::delta_decode_clamped(&base, &g, &mut b);
+            assert_eq!(bits(&a), bits(&b), "delta_decode_clamped d={d}");
+        }
+    }
+
+    /// Random-shape property pin over the same serial ≡ simd contract
+    /// (widths and values the fixed list above doesn't enumerate).
+    #[test]
+    fn serial_and_simd_agree_bitwise_random_shapes() {
+        prop::check("serial ≡ simd bitwise", 60, |gen| {
+            let d = gen.usize_in(1..4100);
+            let g = gen.vec_f32(d..d + 1, -4.0..4.0);
+            let lr = gen.f32_in(0.001..1.5);
+            let ua = serial::sgd_update_sq(&g, lr);
+            let ub = crate::util::simd::sgd_update_sq(&g, lr);
+            prop::assert_that(
+                ua.to_bits() == ub.to_bits(),
+                format!("sgd_update_sq d={d}: {ua} vs {ub}"),
+            )?;
+            let b2s = gen.vec_f32(d..d + 1, 0.1..5.0);
+            let (mut xa, mut xb) = (g.clone(), g.clone());
+            let (mut aa, mut ab) = (b2s.clone(), b2s.clone());
+            let ua = serial::local_adaalter_step(&mut xa, &b2s, &mut aa, &g, lr, 0.5);
+            let ub = crate::util::simd::local_adaalter_step(&mut xb, &b2s, &mut ab, &g, lr, 0.5);
+            prop::assert_that(
+                ua.to_bits() == ub.to_bits(),
+                format!("local_adaalter upd d={d}"),
+            )?;
+            for i in 0..d {
+                prop::assert_that(
+                    xa[i].to_bits() == xb[i].to_bits() && aa[i].to_bits() == ab[i].to_bits(),
+                    format!("local_adaalter streams d={d} i={i}"),
+                )?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,16 +1,18 @@
 //! Small self-contained substrates the offline build image forces us to own:
 //! PRNG (no `rand`), property-testing harness (no `proptest`), JSON
 //! reader/writer (no `serde`), CSV writer, the shared hot-path kernels and
-//! buffer pool (DESIGN.md §6), and the SIMD-friendly vector math the hot
-//! paths use.
+//! buffer pool (DESIGN.md §6), the explicit SIMD kernel forms and dispatch
+//! knob, and the bf16 mixed-precision conversions (DESIGN.md §7).
 
 pub mod csv;
+pub mod half;
 pub mod json;
 pub mod kernels;
 pub mod math;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod timing;
 
 pub use rng::Rng;

@@ -1,0 +1,567 @@
+//! Explicit SIMD hot-path kernels + the `[exec] simd` dispatch knob
+//! (DESIGN.md §7).
+//!
+//! Every kernel in [`crate::util::kernels`] has two implementations: the
+//! scalar reference in `kernels::serial` (the bitwise oracle) and the
+//! lane-structured version here. The public `kernels::*` entry points
+//! dispatch between them via [`enabled`]. The vector forms process fixed
+//! [`LANES`]-wide chunks (`chunks_exact` — the shape every autovectorizer
+//! turns into packed vector instructions without `unsafe` or
+//! target-feature gates) plus a scalar remainder loop.
+//!
+//! **Bitwise contract.** Elementwise kernels perform the identical
+//! per-element arithmetic in the identical per-element order, so chunking
+//! only regroups loop iterations: serial ≡ simd bit-for-bit. Reductions
+//! (`sgd_update_sq`, `local_adaalter_step`'s `‖Δx‖²`) accumulate into a
+//! fixed 8-lane f64 tree — element `i` feeds lane `i mod 8`, the
+//! remainder tail continues the same mapping, and the lanes fold in one
+//! fixed bracketing ([`fold_tree`]). The serial oracle computes the *same
+//! scalar tree*, so reductions are also bit-identical across modes, and
+//! every kernel output is independent of the dispatch decision. The
+//! kernel property pins assert serial ≡ simd for all widths including
+//! every remainder length.
+//!
+//! Why the vector forms are faster even with identical arithmetic: the
+//! reduction oracle in the seed carried one sequential f64 accumulator —
+//! a loop-carried dependence that bounds throughput at one element per
+//! add latency. Eight independent lanes break the chain (8-way ILP /
+//! one vector accumulator), and the fixed-width inner loops give the
+//! compiler exact trip counts to unroll. See
+//! `benches/micro_hot_paths.rs` serial-vs-simd rows.
+//!
+//! **Dispatch mode** is process-global: `[exec] simd = "auto" | "on" |
+//! "off"`, installed by the trainer at run start ([`set_mode`] —
+//! last-trainer-wins, like thread-pool sizing). `auto` resolves once per
+//! process from the `ADAALTER_SIMD` environment variable (`off`/`0`/
+//! `false` disable; anything else, including unset, enables — CI uses
+//! this to force both modes). Because serial ≡ simd bitwise, the mode is
+//! a pure wall-clock knob: flipping it can never change a result.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::config::ExecConfig;
+use crate::error::{Error, Result};
+use crate::util::kernels::{check_len, MEAN_CHUNK};
+
+/// Lanes per vector chunk: 8 × f32 = 256 bits (one AVX2 register; two
+/// NEON registers), and 8 × f64 accumulator lanes for the reductions.
+pub const LANES: usize = 8;
+
+/// The `[exec] simd` dispatch mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Resolve from the `ADAALTER_SIMD` environment variable (default on).
+    Auto,
+    /// Always take the lane-structured kernels.
+    On,
+    /// Always take the scalar serial kernels.
+    Off,
+}
+
+impl SimdMode {
+    /// Parse the config-file spelling.
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s {
+            "auto" => Some(SimdMode::Auto),
+            "on" => Some(SimdMode::On),
+            "off" => Some(SimdMode::Off),
+            _ => None,
+        }
+    }
+
+    /// Resolve from an `[exec]` section, with the config-error wording
+    /// shared by [`ExecConfig::validate`] and the trainer.
+    pub fn from_config(cfg: &ExecConfig) -> Result<SimdMode> {
+        SimdMode::parse(&cfg.simd).ok_or_else(|| {
+            Error::Config(format!(
+                "exec.simd must be one of \"auto\", \"on\", \"off\", got {:?}",
+                cfg.simd
+            ))
+        })
+    }
+
+    /// Config-file spelling.
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::On => "on",
+            SimdMode::Off => "off",
+        }
+    }
+}
+
+const MODE_AUTO: u8 = 0;
+const MODE_ON: u8 = 1;
+const MODE_OFF: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_AUTO);
+static AUTO_DEFAULT: OnceLock<bool> = OnceLock::new();
+
+fn auto_enabled() -> bool {
+    *AUTO_DEFAULT.get_or_init(|| {
+        !matches!(
+            std::env::var("ADAALTER_SIMD").as_deref(),
+            Ok("off") | Ok("0") | Ok("false")
+        )
+    })
+}
+
+/// Install the process-global dispatch mode (trainer start; last wins).
+pub fn set_mode(mode: SimdMode) {
+    let v = match mode {
+        SimdMode::Auto => MODE_AUTO,
+        SimdMode::On => MODE_ON,
+        SimdMode::Off => MODE_OFF,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+/// The currently-installed dispatch mode.
+pub fn mode() -> SimdMode {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_ON => SimdMode::On,
+        MODE_OFF => SimdMode::Off,
+        _ => SimdMode::Auto,
+    }
+}
+
+/// Should [`crate::util::kernels`] dispatch to the lane kernels?
+#[inline]
+pub fn enabled() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_ON => true,
+        MODE_OFF => false,
+        _ => auto_enabled(),
+    }
+}
+
+/// The fixed reduction fold: lanes pair across the half-stride first
+/// (`0+4`, `2+6`, `1+5`, `3+7`), then brackets combine — one immutable
+/// bracketing shared by the serial oracle and the lane kernels.
+#[inline]
+pub fn fold_tree(l: &[f64; LANES]) -> f64 {
+    ((l[0] + l[4]) + (l[2] + l[6])) + ((l[1] + l[5]) + (l[3] + l[7]))
+}
+
+// ---------------------------------------------------------------------------
+// Lane-structured kernels. Signatures and per-element arithmetic mirror
+// `kernels::serial` exactly; see the module doc for the bitwise contract.
+// ---------------------------------------------------------------------------
+
+/// Lane form of [`crate::util::kernels::serial::mean_into`].
+pub fn mean_into<S: AsRef<[f32]>>(inputs: &[S], out: &mut [f32]) {
+    assert!(!inputs.is_empty(), "mean_into: no inputs");
+    let d = out.len();
+    for v in inputs {
+        check_len(v.as_ref().len(), d, "mean_into");
+    }
+    let scale = 1.0 / inputs.len() as f32;
+    let mut start = 0;
+    while start < d {
+        let end = (start + MEAN_CHUNK).min(d);
+        let out_c = &mut out[start..end];
+        out_c.copy_from_slice(&inputs[0].as_ref()[start..end]);
+        for v in &inputs[1..] {
+            add_assign(out_c, &v.as_ref()[start..end]);
+        }
+        scale_assign(out_c, scale);
+        start = end;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::mean_and_squares_into`].
+pub fn mean_and_squares_into<S: AsRef<[f32]>>(
+    inputs: &[S],
+    avg_g: &mut [f32],
+    avg_gsq: &mut [f32],
+) {
+    assert!(!inputs.is_empty(), "mean_and_squares_into: no inputs");
+    let d = avg_g.len();
+    check_len(avg_gsq.len(), d, "mean_and_squares_into");
+    for g in inputs {
+        check_len(g.as_ref().len(), d, "mean_and_squares_into");
+    }
+    let scale = 1.0 / inputs.len() as f32;
+    let mut start = 0;
+    while start < d {
+        let end = (start + MEAN_CHUNK).min(d);
+        let (gc, qc) = (&mut avg_g[start..end], &mut avg_gsq[start..end]);
+        let first = &inputs[0].as_ref()[start..end];
+        {
+            let mut gi = gc.chunks_exact_mut(LANES);
+            let mut qi = qc.chunks_exact_mut(LANES);
+            let mut fi = first.chunks_exact(LANES);
+            for ((gv, qv), fv) in (&mut gi).zip(&mut qi).zip(&mut fi) {
+                for j in 0..LANES {
+                    let v = fv[j];
+                    gv[j] = v;
+                    qv[j] = v * v;
+                }
+            }
+            for ((gv, qv), &v) in
+                gi.into_remainder().iter_mut().zip(qi.into_remainder()).zip(fi.remainder())
+            {
+                *gv = v;
+                *qv = v * v;
+            }
+        }
+        for g in &inputs[1..] {
+            let g = &g.as_ref()[start..end];
+            let mut gi = gc.chunks_exact_mut(LANES);
+            let mut qi = qc.chunks_exact_mut(LANES);
+            let mut vi = g.chunks_exact(LANES);
+            for ((gv, qv), vv) in (&mut gi).zip(&mut qi).zip(&mut vi) {
+                for j in 0..LANES {
+                    let v = vv[j];
+                    gv[j] += v;
+                    qv[j] += v * v;
+                }
+            }
+            for ((gv, qv), &v) in
+                gi.into_remainder().iter_mut().zip(qi.into_remainder()).zip(vi.remainder())
+            {
+                *gv += v;
+                *qv += v * v;
+            }
+        }
+        scale_assign(gc, scale);
+        scale_assign(qc, scale);
+        start = end;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::square_into`].
+pub fn square_into(x: &[f32], out: &mut [f32]) {
+    check_len(x.len(), out.len(), "square_into");
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (o, xv) in (&mut oc).zip(&mut xc) {
+        for j in 0..LANES {
+            o[j] = xv[j] * xv[j];
+        }
+    }
+    for (o, &xv) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o = xv * xv;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::add_assign`].
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    check_len(acc.len(), x.len(), "add_assign");
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (a, xv) in (&mut ac).zip(&mut xc) {
+        for j in 0..LANES {
+            a[j] += xv[j];
+        }
+    }
+    for (a, &xv) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a += xv;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::scale_assign`].
+pub fn scale_assign(acc: &mut [f32], s: f32) {
+    let mut ac = acc.chunks_exact_mut(LANES);
+    for a in &mut ac {
+        for v in a.iter_mut() {
+            *v *= s;
+        }
+    }
+    for a in ac.into_remainder() {
+        *a *= s;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::axpy`].
+pub fn axpy(acc: &mut [f32], s: f32, x: &[f32]) {
+    check_len(acc.len(), x.len(), "axpy");
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (a, xv) in (&mut ac).zip(&mut xc) {
+        for j in 0..LANES {
+            a[j] += s * xv[j];
+        }
+    }
+    for (a, &xv) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a += s * xv;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::sq_accumulate`].
+pub fn sq_accumulate(acc: &mut [f32], g: &[f32]) {
+    check_len(acc.len(), g.len(), "sq_accumulate");
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut gc = g.chunks_exact(LANES);
+    for (a, gv) in (&mut ac).zip(&mut gc) {
+        for j in 0..LANES {
+            a[j] += gv[j] * gv[j];
+        }
+    }
+    for (a, &gv) in ac.into_remainder().iter_mut().zip(gc.remainder()) {
+        *a += gv * gv;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::sgd_step`].
+pub fn sgd_step(x: &mut [f32], g: &[f32], lr: f32) {
+    check_len(x.len(), g.len(), "sgd_step");
+    let mut xc = x.chunks_exact_mut(LANES);
+    let mut gc = g.chunks_exact(LANES);
+    for (xv, gv) in (&mut xc).zip(&mut gc) {
+        for j in 0..LANES {
+            xv[j] -= lr * gv[j];
+        }
+    }
+    for (xv, &gv) in xc.into_remainder().iter_mut().zip(gc.remainder()) {
+        *xv -= lr * gv;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::sgd_update_sq`]: eight
+/// independent f64 accumulator lanes (element `i` → lane `i mod 8`),
+/// folded by [`fold_tree`]. Bit-identical to the serial scalar tree.
+pub fn sgd_update_sq(g: &[f32], lr: f32) -> f64 {
+    let mut lanes = [0.0f64; LANES];
+    let mut gc = g.chunks_exact(LANES);
+    for gv in &mut gc {
+        for j in 0..LANES {
+            let u = (lr * gv[j]) as f64;
+            lanes[j] += u * u;
+        }
+    }
+    for (j, &gv) in gc.remainder().iter().enumerate() {
+        let u = (lr * gv) as f64;
+        lanes[j] += u * u;
+    }
+    fold_tree(&lanes)
+}
+
+/// Lane form of [`crate::util::kernels::serial::momentum_step`].
+pub fn momentum_step(x: &mut [f32], m: &mut [f32], g: &[f32], mu: f32, lr: f32) {
+    let d = m.len();
+    check_len(x.len(), d, "momentum_step");
+    check_len(g.len(), d, "momentum_step");
+    let mut xc = x[..d].chunks_exact_mut(LANES);
+    let mut mc = m.chunks_exact_mut(LANES);
+    let mut gc = g[..d].chunks_exact(LANES);
+    for ((xv, mv), gv) in (&mut xc).zip(&mut mc).zip(&mut gc) {
+        for j in 0..LANES {
+            let v = mu * mv[j] + gv[j];
+            mv[j] = v;
+            xv[j] -= lr * v;
+        }
+    }
+    for ((xv, mv), &gv) in
+        xc.into_remainder().iter_mut().zip(mc.into_remainder()).zip(gc.remainder())
+    {
+        let v = mu * *mv + gv;
+        *mv = v;
+        *xv -= lr * v;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::adagrad_step`].
+pub fn adagrad_step(x: &mut [f32], b2: &mut [f32], g: &[f32], gsq: &[f32], lr: f32, eps2: f32) {
+    let d = b2.len();
+    check_len(x.len(), d, "adagrad_step");
+    check_len(g.len(), d, "adagrad_step");
+    check_len(gsq.len(), d, "adagrad_step");
+    let mut xc = x[..d].chunks_exact_mut(LANES);
+    let mut bc = b2.chunks_exact_mut(LANES);
+    let mut gc = g[..d].chunks_exact(LANES);
+    let mut qc = gsq[..d].chunks_exact(LANES);
+    for (((xv, bv), gv), qv) in (&mut xc).zip(&mut bc).zip(&mut gc).zip(&mut qc) {
+        for j in 0..LANES {
+            let b2i = bv[j] + qv[j];
+            bv[j] = b2i;
+            xv[j] -= lr * gv[j] / (b2i + eps2).sqrt();
+        }
+    }
+    for (((xv, bv), &gv), &qv) in xc
+        .into_remainder()
+        .iter_mut()
+        .zip(bc.into_remainder())
+        .zip(gc.remainder())
+        .zip(qc.remainder())
+    {
+        let b2i = *bv + qv;
+        *bv = b2i;
+        *xv -= lr * gv / (b2i + eps2).sqrt();
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::adaalter_step`].
+pub fn adaalter_step(x: &mut [f32], b2: &mut [f32], g: &[f32], gsq: &[f32], lr: f32, eps2: f32) {
+    let d = b2.len();
+    check_len(x.len(), d, "adaalter_step");
+    check_len(g.len(), d, "adaalter_step");
+    check_len(gsq.len(), d, "adaalter_step");
+    let mut xc = x[..d].chunks_exact_mut(LANES);
+    let mut bc = b2.chunks_exact_mut(LANES);
+    let mut gc = g[..d].chunks_exact(LANES);
+    let mut qc = gsq[..d].chunks_exact(LANES);
+    for (((xv, bv), gv), qv) in (&mut xc).zip(&mut bc).zip(&mut gc).zip(&mut qc) {
+        for j in 0..LANES {
+            let stale = bv[j];
+            xv[j] -= lr * gv[j] / (stale + eps2).sqrt();
+            bv[j] = stale + qv[j];
+        }
+    }
+    for (((xv, bv), &gv), &qv) in xc
+        .into_remainder()
+        .iter_mut()
+        .zip(bc.into_remainder())
+        .zip(gc.remainder())
+        .zip(qc.remainder())
+    {
+        let stale = *bv;
+        *xv -= lr * gv / (stale + eps2).sqrt();
+        *bv = stale + qv;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::local_adaalter_step`]:
+/// elementwise streams identical; `‖Δx‖²` accumulates into the fixed
+/// 8-lane f64 tree (element `i` → lane `i mod 8`, [`fold_tree`] fold).
+pub fn local_adaalter_step(
+    x: &mut [f32],
+    b2_sync: &[f32],
+    acc: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    denom_add: f32,
+) -> f64 {
+    let d = x.len();
+    check_len(b2_sync.len(), d, "local_adaalter_step");
+    check_len(acc.len(), d, "local_adaalter_step");
+    check_len(g.len(), d, "local_adaalter_step");
+    let mut lanes = [0.0f64; LANES];
+    let mut xc = x.chunks_exact_mut(LANES);
+    let mut bc = b2_sync[..d].chunks_exact(LANES);
+    let mut ac = acc[..d].chunks_exact_mut(LANES);
+    let mut gc = g[..d].chunks_exact(LANES);
+    for (((xv, bv), av), gv) in (&mut xc).zip(&mut bc).zip(&mut ac).zip(&mut gc) {
+        for j in 0..LANES {
+            let gi = gv[j];
+            let du = lr * gi / (bv[j] + denom_add).sqrt();
+            xv[j] -= du;
+            av[j] += gi * gi;
+            lanes[j] += du as f64 * du as f64;
+        }
+    }
+    let (xr, br, ar, gr) =
+        (xc.into_remainder(), bc.remainder(), ac.into_remainder(), gc.remainder());
+    for j in 0..gr.len() {
+        let gi = gr[j];
+        let du = lr * gi / (br[j] + denom_add).sqrt();
+        xr[j] -= du;
+        ar[j] += gi * gi;
+        lanes[j] += du as f64 * du as f64;
+    }
+    fold_tree(&lanes)
+}
+
+/// Lane form of [`crate::util::kernels::serial::delta_encode`].
+pub fn delta_encode(src: &[f32], base: &[f32], out: &mut [f32]) {
+    let d = out.len();
+    check_len(src.len(), d, "delta_encode");
+    check_len(base.len(), d, "delta_encode");
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut sc = src[..d].chunks_exact(LANES);
+    let mut bc = base[..d].chunks_exact(LANES);
+    for ((o, sv), bv) in (&mut oc).zip(&mut sc).zip(&mut bc) {
+        for j in 0..LANES {
+            o[j] = sv[j] - bv[j];
+        }
+    }
+    for ((o, &sv), &bv) in oc.into_remainder().iter_mut().zip(sc.remainder()).zip(bc.remainder()) {
+        *o = sv - bv;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::delta_decode`].
+pub fn delta_decode(base: &[f32], delta: &[f32], out: &mut [f32]) {
+    let d = out.len();
+    check_len(base.len(), d, "delta_decode");
+    check_len(delta.len(), d, "delta_decode");
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut bc = base[..d].chunks_exact(LANES);
+    let mut dc = delta[..d].chunks_exact(LANES);
+    for ((o, bv), dv) in (&mut oc).zip(&mut bc).zip(&mut dc) {
+        for j in 0..LANES {
+            o[j] = bv[j] + dv[j];
+        }
+    }
+    for ((o, &bv), &dv) in oc.into_remainder().iter_mut().zip(bc.remainder()).zip(dc.remainder()) {
+        *o = bv + dv;
+    }
+}
+
+/// Lane form of [`crate::util::kernels::serial::delta_decode_clamped`].
+pub fn delta_decode_clamped(base: &[f32], delta: &[f32], out: &mut [f32]) {
+    let d = out.len();
+    check_len(base.len(), d, "delta_decode_clamped");
+    check_len(delta.len(), d, "delta_decode_clamped");
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut bc = base[..d].chunks_exact(LANES);
+    let mut dc = delta[..d].chunks_exact(LANES);
+    for ((o, bv), dv) in (&mut oc).zip(&mut bc).zip(&mut dc) {
+        for j in 0..LANES {
+            o[j] = (bv[j] + dv[j]).max(0.0);
+        }
+    }
+    for ((o, &bv), &dv) in oc.into_remainder().iter_mut().zip(bc.remainder()).zip(dc.remainder()) {
+        *o = (bv + dv).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing_and_labels() {
+        assert_eq!(SimdMode::parse("auto"), Some(SimdMode::Auto));
+        assert_eq!(SimdMode::parse("on"), Some(SimdMode::On));
+        assert_eq!(SimdMode::parse("off"), Some(SimdMode::Off));
+        assert_eq!(SimdMode::parse("ON"), None);
+        assert_eq!(SimdMode::parse(""), None);
+        for m in [SimdMode::Auto, SimdMode::On, SimdMode::Off] {
+            assert_eq!(SimdMode::parse(m.label()), Some(m));
+        }
+    }
+
+    #[test]
+    fn from_config_rejects_unknown_spelling() {
+        let mut cfg = ExecConfig::default();
+        assert_eq!(SimdMode::from_config(&cfg).unwrap(), SimdMode::Auto);
+        cfg.simd = "fast".into();
+        let err = SimdMode::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("exec.simd"), "{err}");
+    }
+
+    #[test]
+    fn mode_global_roundtrip() {
+        // Safe to toggle even under the parallel test harness: every
+        // kernel is bitwise mode-independent, so concurrent dispatch
+        // reads cannot change any other test's results.
+        let before = mode();
+        set_mode(SimdMode::On);
+        assert!(enabled());
+        assert_eq!(mode(), SimdMode::On);
+        set_mode(SimdMode::Off);
+        assert!(!enabled());
+        set_mode(SimdMode::Auto);
+        assert_eq!(mode(), SimdMode::Auto);
+        set_mode(before);
+    }
+
+    #[test]
+    fn fold_tree_is_fixed_bracketing() {
+        let l = [1e16, 1.0, -1e16, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let expect = ((l[0] + l[4]) + (l[2] + l[6])) + ((l[1] + l[5]) + (l[3] + l[7]));
+        assert_eq!(fold_tree(&l).to_bits(), expect.to_bits());
+    }
+}

@@ -184,6 +184,38 @@ fn resume_rejected_over_compressed_transport() {
     assert!(err.to_string().contains("compressed"), "{err}");
 }
 
+/// The bf16 wire (`precision.wire = "bf16"`) through the full trainer:
+/// selected purely by config, reports EXACTLY half the dense f32 traffic
+/// of the simulated transport, and still optimizes — bf16 keeps 8
+/// mantissa bits, far gentler than QSGD's norm-scaled noise.
+#[test]
+fn bf16_wire_halves_sync_bytes_end_to_end() {
+    let (n, steps, h, d) = (4usize, 300u64, 4u64, 64usize);
+    let problem = SyntheticProblem::new(d, n, 42);
+    use adaalter::coordinator::WorkerBackend as _;
+    let opt_loss = problem.global_loss(&problem.optimum());
+    let init_sub = problem.global_loss(&problem.backend(0).init_params().unwrap()) - opt_loss;
+
+    let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), n, steps);
+    c.comm.transport = "channel".into();
+    c.precision.wire = "bf16".into();
+    c.precision.state = "bf16".into();
+    let net = NetModel::from_config(&c.net);
+    let d_bytes = 4 * c.train.rust_math_dim as u64;
+    let r = run(c);
+    assert_eq!(r.recorder.transport(), "bf16");
+    assert!(r.final_x.iter().all(|v| v.is_finite()));
+    let (rounds, bytes) = r.recorder.comm();
+    assert_eq!(rounds, steps / h);
+    // Exactly half of what the dense f32 accounting charges per round.
+    assert_eq!(bytes * 2, rounds * net.sync_traffic_bytes(n, d_bytes, 2));
+    let final_sub = r.final_eval.unwrap().loss - opt_loss;
+    assert!(
+        final_sub < init_sub * 0.2,
+        "bf16 run failed to learn: suboptimality {final_sub} vs initial {init_sub}"
+    );
+}
+
 /// Compressed local AdaAlter still optimizes: with moderate compression
 /// the final loss must come down substantially from the start.
 #[test]

@@ -145,3 +145,50 @@ fn exec_config_round_trips_through_toml() {
     let r = common::run(cfg);
     assert!(r.final_x.iter().all(|v| v.is_finite()));
 }
+
+#[test]
+fn simd_dispatch_is_bitwise_invariant_end_to_end() {
+    // The PR 6 tentpole contract (DESIGN.md §7): `exec.simd` is a pure
+    // wall-clock knob — every kernel, including the fixed-tree
+    // reductions, returns identical bits under either implementation, so
+    // whole training runs agree bitwise across dispatch modes (and the
+    // knob composes with every thread layout).
+    for (algo, h) in [
+        (Algorithm::AdaGrad, SyncPeriod::Every(1)),
+        (Algorithm::LocalAdaAlter, SyncPeriod::Every(4)),
+    ] {
+        let base = common::cfg(algo, h, 4, 32);
+        let mut off = base.clone();
+        off.exec.simd = "off".into();
+        let mut on = base.clone();
+        on.exec.simd = "on".into();
+        let r_off = common::run(off);
+        let r_on = common::run(on);
+        common::assert_bitwise_eq(&r_off, &r_on, &format!("{algo} simd on vs off"));
+        let mut on_threads = with_threads(base, 2);
+        on_threads.exec.simd = "on".into();
+        let r = common::run(on_threads);
+        common::assert_bitwise_eq(&r_off, &r, &format!("{algo} simd on + threads(2)"));
+    }
+    // Unknown spellings are a config error surfaced by the trainer.
+    let mut bad = common::cfg(Algorithm::AdaGrad, SyncPeriod::Every(1), 2, 4);
+    bad.exec.simd = "fast".into();
+    let err = common::try_run(bad).unwrap_err();
+    assert!(err.to_string().contains("exec.simd"), "{err}");
+}
+
+#[test]
+fn bf16_state_runs_under_every_layout_and_stays_on_grid() {
+    // `precision.state = "bf16"` composes with the execution engine: the
+    // quantized-accumulator run is itself layout-invariant (quantization
+    // happens inside the worker state machine, keyed by nothing but the
+    // update stream).
+    let mut base = common::cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 4, 32);
+    base.precision.state = "bf16".into();
+    let serial = common::run(with_serial(base.clone()));
+    assert!(serial.final_x.iter().all(|v| v.is_finite()));
+    for k in [2usize, 4] {
+        let r = common::run(with_threads(base.clone(), k));
+        common::assert_bitwise_eq(&serial, &r, &format!("bf16 state threads({k})"));
+    }
+}

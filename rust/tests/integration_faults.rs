@@ -168,6 +168,7 @@ fn worker_loop_injects_the_crash_tombstone() {
         init,
         allow_fused: false,
         collect_update_sq: false,
+        bf16_state: false,
         crash_step: Some(3),
     };
     let factory: adaalter::coordinator::BackendFactory =

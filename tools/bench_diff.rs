@@ -1,0 +1,246 @@
+//! `bench_diff`: the bench-ratchet checker for the machine-readable
+//! `BENCH_*.json` documents written by [`adaalter::util::timing::BenchSink`].
+//!
+//! Compares a committed baseline against a fresh run, row by `name`:
+//!
+//! * **Timings** (`median_ns`): FAIL when the current run is more than
+//!   `threshold`× slower than the baseline (default 1.15 — the CI
+//!   bench-smoke ratchet). Faster is always fine: baselines are
+//!   deliberately conservative.
+//! * **Byte counts** (any metric key containing `bytes`): FAIL unless
+//!   exactly equal — wire accounting is deterministic, so a single byte
+//!   of drift is a bug, not noise.
+//! * **Rates** (`per_s` / `speedup` metrics): WARN when the current run
+//!   falls below baseline ÷ threshold. Parallel/SIMD gains depend on the
+//!   host, so these never fail CI on shared runners.
+//! * Rows present only in the baseline WARN (a renamed or deleted bench
+//!   row silently drops ratchet coverage); rows only in the current run
+//!   are noted.
+//!
+//! Usage: `bench_diff <baseline.json> <current.json> [threshold]`
+//! Exits non-zero iff any FAIL was recorded.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use adaalter::util::json::Json;
+
+const DEFAULT_THRESHOLD: f64 = 1.15;
+
+/// Everything one comparison produced, separated by severity.
+#[derive(Debug, Default)]
+struct Report {
+    failures: Vec<String>,
+    warnings: Vec<String>,
+    notes: Vec<String>,
+}
+
+/// Index a `BenchSink` document's rows by their `name` field.
+fn rows_by_name(doc: &Json) -> Result<BTreeMap<&str, &Json>, String> {
+    let rows = doc
+        .get("rows")
+        .ok_or("document has no \"rows\" field")?
+        .arr()
+        .map_err(|e| e.to_string())?;
+    let mut out = BTreeMap::new();
+    for row in rows {
+        let name = row
+            .get("name")
+            .ok_or("row has no \"name\" field")?
+            .str()
+            .map_err(|e| e.to_string())?;
+        out.insert(name, row);
+    }
+    Ok(out)
+}
+
+fn num_field(row: &Json, key: &str) -> Option<f64> {
+    match row.get(key) {
+        Some(Json::Num(n)) => Some(*n),
+        _ => None,
+    }
+}
+
+/// Compare one (baseline, current) row pair into `rep`.
+fn diff_row(name: &str, base: &Json, cur: &Json, threshold: f64, rep: &mut Report) {
+    if let (Some(b), Some(c)) = (num_field(base, "median_ns"), num_field(cur, "median_ns")) {
+        let ratio = c / b;
+        if c > b * threshold {
+            rep.failures.push(format!(
+                "{name}: median {c:.0} ns vs baseline {b:.0} ns ({ratio:.2}x > {threshold}x)"
+            ));
+        } else {
+            rep.notes.push(format!("{name}: median {c:.0} ns ({ratio:.2}x of baseline)"));
+        }
+    }
+    let empty = BTreeMap::new();
+    let base_metrics = base.get("metrics").and_then(|m| m.obj().ok()).unwrap_or(&empty);
+    let cur_metrics = cur.get("metrics").and_then(|m| m.obj().ok()).unwrap_or(&empty);
+    for (key, bval) in base_metrics {
+        let b = match bval {
+            Json::Num(n) => *n,
+            _ => continue,
+        };
+        let c = match cur_metrics.get(key) {
+            Some(Json::Num(n)) => *n,
+            _ => {
+                rep.warnings.push(format!("{name}: metric {key} missing from current run"));
+                continue;
+            }
+        };
+        if key.contains("bytes") {
+            // Wire/byte accounting is exact by construction; compare bits.
+            if c.to_bits() != b.to_bits() {
+                rep.failures.push(format!("{name}: {key} = {c} vs baseline {b} (must be exact)"));
+            }
+        } else if (key.contains("per_s") || key.contains("speedup")) && c < b / threshold {
+            rep.warnings
+                .push(format!("{name}: {key} = {c:.3} below baseline {b:.3} / {threshold}"));
+        }
+    }
+}
+
+/// Compare two parsed `BENCH_*.json` documents.
+fn diff(baseline: &Json, current: &Json, threshold: f64) -> Result<Report, String> {
+    let base_rows = rows_by_name(baseline)?;
+    let cur_rows = rows_by_name(current)?;
+    let mut rep = Report::default();
+    for (name, base) in &base_rows {
+        match cur_rows.get(name) {
+            Some(cur) => diff_row(name, base, cur, threshold, &mut rep),
+            None => rep
+                .warnings
+                .push(format!("{name}: row in baseline but not in current run")),
+        }
+    }
+    for name in cur_rows.keys() {
+        if !base_rows.contains_key(name) {
+            rep.notes.push(format!("{name}: new row (no baseline yet)"));
+        }
+    }
+    Ok(rep)
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("cannot parse {path}: {e}"))
+}
+
+fn run(args: &[String]) -> Result<Report, String> {
+    let (baseline, current) = match args {
+        [b, c] | [b, c, _] => (load(b)?, load(c)?),
+        _ => return Err("usage: bench_diff <baseline.json> <current.json> [threshold]".into()),
+    };
+    let threshold = match args.get(2) {
+        Some(t) => t.parse::<f64>().map_err(|e| format!("bad threshold {t:?}: {e}"))?,
+        None => DEFAULT_THRESHOLD,
+    };
+    diff(&baseline, &current, threshold)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(rep) => {
+            for n in &rep.notes {
+                println!("  ok  {n}");
+            }
+            for w in &rep.warnings {
+                println!("WARN  {w}");
+            }
+            for f in &rep.failures {
+                println!("FAIL  {f}");
+            }
+            println!(
+                "\nbench_diff: {} failures, {} warnings, {} rows ok",
+                rep.failures.len(),
+                rep.warnings.len(),
+                rep.notes.len()
+            );
+            if rep.failures.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("bench_diff: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(rows: &str) -> Json {
+        Json::parse(&format!("{{\"bench\":\"t\",\"rows\":[{rows}]}}")).unwrap()
+    }
+
+    #[test]
+    fn within_threshold_passes() {
+        let b = doc(r#"{"name":"k","median_ns":100.0,"metrics":{}}"#);
+        let c = doc(r#"{"name":"k","median_ns":110.0,"metrics":{}}"#);
+        let rep = diff(&b, &c, 1.15).unwrap();
+        assert!(rep.failures.is_empty(), "{rep:?}");
+        assert_eq!(rep.notes.len(), 1);
+    }
+
+    #[test]
+    fn slow_regression_fails() {
+        let b = doc(r#"{"name":"k","median_ns":100.0,"metrics":{}}"#);
+        let c = doc(r#"{"name":"k","median_ns":120.0,"metrics":{}}"#);
+        let rep = diff(&b, &c, 1.15).unwrap();
+        assert_eq!(rep.failures.len(), 1);
+        assert!(rep.failures[0].contains("median"), "{rep:?}");
+    }
+
+    #[test]
+    fn much_faster_is_fine() {
+        let b = doc(r#"{"name":"k","median_ns":1000.0,"metrics":{}}"#);
+        let c = doc(r#"{"name":"k","median_ns":10.0,"metrics":{}}"#);
+        assert!(diff(&b, &c, 1.15).unwrap().failures.is_empty());
+    }
+
+    #[test]
+    fn byte_metrics_must_match_exactly() {
+        let b = doc(r#"{"name":"k","metrics":{"wire_bytes":2048}}"#);
+        let ok = doc(r#"{"name":"k","metrics":{"wire_bytes":2048}}"#);
+        let off = doc(r#"{"name":"k","metrics":{"wire_bytes":2049}}"#);
+        assert!(diff(&b, &ok, 1.15).unwrap().failures.is_empty());
+        let rep = diff(&b, &off, 1.15).unwrap();
+        assert_eq!(rep.failures.len(), 1);
+        assert!(rep.failures[0].contains("wire_bytes"));
+    }
+
+    #[test]
+    fn rate_drops_warn_but_do_not_fail() {
+        let b = doc(r#"{"name":"s","metrics":{"simd_speedup":2.0}}"#);
+        let c = doc(r#"{"name":"s","metrics":{"simd_speedup":1.2}}"#);
+        let rep = diff(&b, &c, 1.15).unwrap();
+        assert!(rep.failures.is_empty());
+        assert_eq!(rep.warnings.len(), 1);
+    }
+
+    #[test]
+    fn missing_rows_warn_new_rows_note() {
+        let b = doc(r#"{"name":"gone","median_ns":1.0,"metrics":{}}"#);
+        let c = doc(r#"{"name":"fresh","median_ns":1.0,"metrics":{}}"#);
+        let rep = diff(&b, &c, 1.15).unwrap();
+        assert!(rep.failures.is_empty());
+        assert_eq!(rep.warnings.len(), 1);
+        assert!(rep.warnings[0].contains("gone"));
+        assert!(rep.notes.iter().any(|n| n.contains("fresh")));
+    }
+
+    #[test]
+    fn malformed_documents_are_rejected() {
+        let good = doc(r#"{"name":"k","metrics":{}}"#);
+        let no_rows = Json::parse(r#"{"bench":"t"}"#).unwrap();
+        assert!(diff(&no_rows, &good, 1.15).is_err());
+        let unnamed = Json::parse(r#"{"rows":[{"median_ns":1}]}"#).unwrap();
+        assert!(diff(&unnamed, &good, 1.15).is_err());
+    }
+}
