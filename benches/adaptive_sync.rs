@@ -1,4 +1,4 @@
-//! Bench: fixed vs. **adaptive** synchronization scheduling (DESIGN.md §4)
+//! Bench: fixed vs. **adaptive** synchronization scheduling (DESIGN.md §5)
 //! over the fig-3 convergence setup on the synthetic non-IID testbed.
 //!
 //! The paper fixes H ahead of time; its own cost model makes H the knob

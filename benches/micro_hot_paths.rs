@@ -2,7 +2,7 @@
 //! the shared kernels, the execution engine's worker-step scaling, and the
 //! PJRT dispatch costs. The before/after numbers in EXPERIMENTS.md §Perf
 //! come from this harness; the machine-readable trajectory lands in
-//! `BENCH_micro_hot_paths.json` (DESIGN.md §6).
+//! `BENCH_micro_hot_paths.json` (DESIGN.md §7).
 //!
 //! Run: `cargo bench --bench micro_hot_paths`
 //! Knob: ADAALTER_BENCH_DIM (default 1,048,576 — a 4 MiB vector, ~1M-param

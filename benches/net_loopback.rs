@@ -1,0 +1,138 @@
+//! Loopback-deployment smoke bench (DESIGN.md §4): spawns a real
+//! leader + 2 worker OS processes of the `adaalter` binary over TCP on
+//! 127.0.0.1, runs a short Local AdaAlter experiment per wire codec, and
+//! records the leader's socket byte counters from `net_report.json`.
+//!
+//! The ratcheted metric is `accounted_minus_booked_bytes` — the real
+//! codec payload bytes that crossed the sockets minus the simulated α–β
+//! accounting — which must be exactly 0 for every codec (the same pin
+//! `integration_net` asserts per-cell). Wall-clock throughput is
+//! reported as a `steps_per_s` rate, which only warns: loopback latency
+//! depends on the host.
+
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use adaalter::util::json::Json;
+use adaalter::util::timing::BenchSink;
+
+/// The compiled `adaalter` CLI binary under test.
+const BIN: &str = env!("CARGO_BIN_EXE_adaalter");
+
+/// Kill-on-drop child, so one failed role never strands the fleet.
+struct Guard(Child);
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Wait for a clean exit with a hard deadline (a deadlock must fail the
+/// bench, not hang CI).
+fn wait(g: &mut Guard, label: &str) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if let Some(st) = g.0.try_wait().expect("try_wait failed") {
+            assert!(st.success(), "{label} failed: {st}");
+            return;
+        }
+        assert!(Instant::now() < deadline, "{label} did not exit within 120s");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Run one loopback deployment and return its `net_report.json` plus the
+/// end-to-end wall time (spawn through last exit) in seconds.
+fn deploy(tag: &str, comm: &str, workers: usize, steps: u64) -> (Json, f64) {
+    let dir = std::env::temp_dir().join(format!("adaalter_bench_net_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let dir = dir.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(format!("{dir}/leader.addr"));
+    let _ = std::fs::remove_file(format!("{dir}/net_report.json"));
+    let toml = format!(
+        "[train]\n\
+         workers = {workers}\n\
+         sync_period = 4\n\
+         steps = {steps}\n\
+         log_every = 8\n\
+         backend = \"rust_math\"\n\
+         rust_math_dim = 64\n\
+         [optim]\n\
+         algorithm = \"local_adaalter\"\n\
+         warmup_steps = 10\n\
+         {comm}\
+         [net]\n\
+         listen = \"127.0.0.1:0\"\n\
+         connect_timeout_s = 60.0\n"
+    );
+    let cfg = format!("{dir}/cfg.toml");
+    std::fs::write(&cfg, toml).expect("write config");
+
+    let t0 = Instant::now();
+    let mut leader = Guard(
+        Command::new(BIN)
+            .args(["train", "--config", &cfg, "--role", "leader"])
+            .args(["--port-file", &format!("{dir}/leader.addr")])
+            .args(["--out-dir", &dir, "--quiet"])
+            .stdout(Stdio::null())
+            .spawn()
+            .expect("spawn leader"),
+    );
+    let mut kids: Vec<Guard> = (0..workers)
+        .map(|w| {
+            Guard(
+                Command::new(BIN)
+                    .args(["train", "--config", &cfg, "--role", "worker"])
+                    .args(["--worker-id", &w.to_string()])
+                    .args(["--port-file", &format!("{dir}/leader.addr")])
+                    .arg("--quiet")
+                    .stdout(Stdio::null())
+                    .spawn()
+                    .expect("spawn worker"),
+            )
+        })
+        .collect();
+    for (w, g) in kids.iter_mut().enumerate() {
+        wait(g, &format!("worker {w}"));
+    }
+    wait(&mut leader, "leader");
+    let wall = t0.elapsed().as_secs_f64();
+
+    let path = format!("{dir}/net_report.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+    (Json::parse(&text).expect("net_report.json parses"), wall)
+}
+
+fn main() {
+    let mut sink = BenchSink::new("net_loopback");
+    let steps = 24u64;
+    for (tag, comm) in [
+        ("tcp_f32_laa_h4_w2", "[comm]\ntransport = \"tcp\"\n"),
+        (
+            "tcp_qsgd_laa_h4_w2",
+            "[comm]\ntransport = \"tcp\"\ncompression = \"qsgd\"\nqsgd_levels = 15\n",
+        ),
+    ] {
+        let (rep, wall) = deploy(tag, comm, 2, steps);
+        let num = |k: &str| rep.req(k).unwrap().num().unwrap();
+        let (booked, accounted, total) =
+            (num("booked_bytes"), num("accounted_bytes"), num("total_bytes"));
+        println!(
+            "{tag:<24} booked {booked:>9.0} B  accounted {accounted:>9.0} B  \
+             total {total:>9.0} B  wall {wall:.2}s"
+        );
+        sink.value(
+            tag,
+            &[
+                ("accounted_minus_booked_bytes", accounted - booked),
+                ("booked_bytes", booked),
+                ("accounted_bytes", accounted),
+                ("total_bytes", total),
+                ("steps_per_s", steps as f64 / wall),
+            ],
+        );
+    }
+    sink.finish();
+}

@@ -1,5 +1,5 @@
 //! Bench: the fig-1 "epoch time" story under **realistic conditions** —
-//! one slow worker of eight (DESIGN.md §5).
+//! one slow worker of eight (DESIGN.md §6).
 //!
 //! The paper's premise is that the synchronous barrier ("blocks the global
 //! update until all the workers respond", §2) is the bottleneck; its fix —
@@ -98,7 +98,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }),
     ];
 
-    println!("=== Straggler recovery: partial-participation sync under 1 slow worker (DESIGN.md §5) ===");
+    println!("=== Straggler recovery: partial-participation sync under 1 slow worker (DESIGN.md §6) ===");
     println!(
         "(n={workers}, d={dim}, {steps} steps, worker {} runs {slow_factor}× slow; \
          init subopt {init_sub:.1}, irreducible optimum {opt_loss:.2}; \

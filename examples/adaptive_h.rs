@@ -1,7 +1,7 @@
 //! Adaptive synchronization periods in action: run the same Local
 //! AdaAlter workload under each `[sync]` policy and print the realized-H
 //! trajectory — the per-round gaps and trigger reasons the recorder logs
-//! (DESIGN.md §4).
+//! (DESIGN.md §5).
 //!
 //! ```bash
 //! cargo run --release --example adaptive_h

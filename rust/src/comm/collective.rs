@@ -24,7 +24,7 @@
 //!   family, runnable through the full trainer.
 //! * [`PartialCollective`] — a decorator adding partial-participation
 //!   semantics (quorum / backup-worker rounds under a `[faults]` scenario,
-//!   DESIGN.md §5) to any of the above.
+//!   DESIGN.md §6) to any of the above.
 //!
 //! Selection is pure configuration: `[comm]` + `[faults]` in the
 //! experiment TOML ([`crate::config::CommConfig`],
@@ -35,7 +35,6 @@ use crate::comm::netmodel::{NetModel, Topology};
 use crate::config::ExperimentConfig;
 use crate::error::{Error, Result};
 use crate::sim::Calibration;
-use crate::util::rng::Rng;
 use crate::util::{kernels, math};
 
 /// What one collective op cost — and what it observed while running.
@@ -83,8 +82,9 @@ impl CommReport {
 }
 
 /// Mean over workers of the squared L2 distance `‖x_i − mean‖²` — the
-/// replica-drift observation sync rounds report.
-fn mean_sq_dist(xs: &[&[f32]], mean: &[f32]) -> f64 {
+/// replica-drift observation sync rounds report. `pub(crate)`: the
+/// networked collective (`comm::net`) reports the same observation.
+pub(crate) fn mean_sq_dist(xs: &[&[f32]], mean: &[f32]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
@@ -112,10 +112,14 @@ pub trait Collective: Send {
     /// Human-readable transport label (metrics / bench tables).
     fn label(&self) -> String;
 
-    /// Leader → workers model broadcast. The pull side of a round is
-    /// accounted by the round op that triggered it (matching the paper's
-    /// push+pull parameter-server accounting), so this defaults to free.
-    fn broadcast(&mut self, _x: &[f32]) -> Result<CommReport> {
+    /// Leader → workers model broadcast. The payload is mutable because a
+    /// lossy wire transforms what the workers receive (the bf16 wire
+    /// rounds it onto the bf16 grid in place — exactly the bytes a real
+    /// wire would carry); lossless transports leave it untouched. The pull
+    /// side of a round is accounted by the round op that triggered it
+    /// (matching the paper's push+pull parameter-server accounting), so
+    /// this defaults to free.
+    fn broadcast(&mut self, _x: &mut [f32]) -> Result<CommReport> {
         Ok(CommReport::zero())
     }
 
@@ -139,7 +143,7 @@ pub trait Collective: Send {
     ) -> Result<CommReport>;
 
     /// The sync round with per-worker barrier arrival times and (possibly)
-    /// partial participation (DESIGN.md §5). `arrivals[i]` is worker `i`'s
+    /// partial participation (DESIGN.md §6). `arrivals[i]` is worker `i`'s
     /// virtual arrival at the barrier, measured from the phase start. The
     /// default implementation is the full barrier: every offered worker
     /// participates and the round closes when the slowest arrives —
@@ -172,7 +176,7 @@ pub trait Collective: Send {
 }
 
 /// Outcome of one (possibly partial) synchronization round
-/// ([`Collective::sync_round_partial`]; DESIGN.md §5).
+/// ([`Collective::sync_round_partial`]; DESIGN.md §6).
 #[derive(Clone, Debug)]
 pub struct PartialRound {
     /// Indices (into the offered `xs`) whose states made the average,
@@ -189,7 +193,7 @@ pub struct PartialRound {
 }
 
 /// Participation policy for partial sync rounds (the `[faults]` config
-/// section's `quorum` / `timeout_s` / `drop_slowest` keys; DESIGN.md §5).
+/// section's `quorum` / `timeout_s` / `drop_slowest` keys; DESIGN.md §6).
 #[derive(Clone, Copy, Debug)]
 pub struct Participation {
     /// Minimum arrivals that close a round (0 behaves as "all offered").
@@ -307,7 +311,7 @@ impl Collective for PartialCollective {
         format!("partial({}, {})", self.policy.label(), self.inner.label())
     }
 
-    fn broadcast(&mut self, x: &[f32]) -> Result<CommReport> {
+    fn broadcast(&mut self, x: &mut [f32]) -> Result<CommReport> {
         self.inner.broadcast(x)
     }
 
@@ -562,11 +566,11 @@ impl Collective for SimulatedCollective {
 /// are per-(worker, vector-kind) state — every logical stream gets its own
 /// sparsifier so residual mass never leaks across streams. Both lossy
 /// codecs keep a reused message scratch so steady-state roundtrips never
-/// touch the allocator (DESIGN.md §6). Bf16 is stateless: the payload is
+/// touch the allocator (DESIGN.md §7). Bf16 is stateless: the payload is
 /// rounded through bf16 in place ([`crate::util::half`]) and billed at
 /// exactly 2 bytes per element.
 enum Codec {
-    Qsgd { q: QsgdQuantizer, rng: Rng, enc: QsgdEncoded },
+    Qsgd { q: QsgdQuantizer, seed: u64, uses: Vec<u64>, enc: QsgdEncoded },
     TopK { keep: f64, streams: Vec<Option<TopKSparsifier>>, msg: SparseGrad },
     Bf16,
 }
@@ -575,8 +579,19 @@ impl Codec {
     /// Encode → count exact wire bytes → decode back into `v` in place.
     fn roundtrip(&mut self, stream: usize, v: &mut [f32]) -> u64 {
         match self {
-            Codec::Qsgd { q, rng, enc } => {
-                q.encode_to(v, rng, enc);
+            Codec::Qsgd { q, seed, uses, enc } => {
+                // Fresh RNG per (stream, use), derived — not sequential —
+                // so a worker process encoding the same stream derives the
+                // identical draws without shared state (the wire codec,
+                // [`crate::comm::wire::qsgd_stream_rng`], is keyed the
+                // same way; DESIGN.md §4).
+                if uses.len() <= stream {
+                    uses.resize(stream + 1, 0);
+                }
+                let mut rng =
+                    crate::comm::wire::qsgd_stream_rng(*seed, stream as u64, uses[stream]);
+                uses[stream] += 1;
+                q.encode_to(v, &mut rng, enc);
                 q.decode(enc, v);
                 q.wire_bytes(v.len())
             }
@@ -644,7 +659,7 @@ pub struct CompressedCollective {
     /// Last synchronized denominators.
     base_acc: Vec<f32>,
     /// Pooled per-worker delta/staging buffers, reused every round so the
-    /// steady-state sync round never allocates (DESIGN.md §6).
+    /// steady-state sync round never allocates (DESIGN.md §7).
     delta_bufs: Vec<Vec<f32>>,
     /// Pooled mean-delta buffer for the down leg.
     mean_buf: Vec<f32>,
@@ -654,20 +669,26 @@ pub struct CompressedCollective {
 // residual mass never leaks between the gradient path, the two sync-round
 // vector families, and standalone allreduces. Free functions of the
 // cluster size `n` so `compressed_average` can hold disjoint field
-// borrows while computing stream ids.
-fn up_stream(n: usize, family: StreamFamily, w: usize) -> usize {
+// borrows while computing stream ids. `pub(crate)`: the networked
+// transport (`comm::net`) encodes the same logical streams on the real
+// wire and must key its per-stream RNGs identically (DESIGN.md §4).
+pub(crate) fn up_stream(n: usize, family: StreamFamily, w: usize) -> usize {
     match family {
         StreamFamily::SyncX => n + w,
         StreamFamily::SyncAcc => 2 * n + w,
         StreamFamily::Raw => 3 * n + 2 + w,
     }
 }
-fn down_stream(n: usize, family: StreamFamily) -> usize {
+pub(crate) fn down_stream(n: usize, family: StreamFamily) -> usize {
     match family {
         StreamFamily::SyncX => 3 * n,
         StreamFamily::SyncAcc => 3 * n + 1,
         StreamFamily::Raw => 4 * n + 2,
     }
+}
+/// The gradient path's per-worker stream id (shared with `comm::net`).
+pub(crate) fn grad_stream(w: usize) -> usize {
+    w
 }
 
 impl CompressedCollective {
@@ -678,7 +699,8 @@ impl CompressedCollective {
             inner,
             codec: Codec::Qsgd {
                 q: QsgdQuantizer::new(s),
-                rng: Rng::derive(seed, &[0xC0DE]),
+                seed,
+                uses: Vec::new(),
                 enc: QsgdEncoded { norm: 0.0, levels: Vec::new(), s },
             },
             net,
@@ -689,7 +711,7 @@ impl CompressedCollective {
         }
     }
 
-    /// The bf16 wire format (`precision.wire = "bf16"`; DESIGN.md §7):
+    /// The bf16 wire format (`precision.wire = "bf16"`; DESIGN.md §8):
     /// every payload is rounded through bf16 (round-to-nearest-even) and
     /// billed at 2 bytes/element — exactly half the dense f32 wire, on the
     /// up and down legs alike. Sync rounds compose with the same delta
@@ -725,11 +747,6 @@ impl CompressedCollective {
             delta_bufs: Vec::new(),
             mean_buf: Vec::new(),
         }
-    }
-
-    /// The gradient path's per-worker stream id.
-    fn grad_stream(&self, w: usize) -> usize {
-        w
     }
 
     /// Compress one up/down vector family: per-worker payloads (deltas
@@ -797,10 +814,13 @@ impl CompressedCollective {
 /// Which compression stream family a vector exchange belongs to. The sync
 /// families delta-code against (and advance) the last synchronized state;
 /// `Raw` is for standalone allreduces and must never touch that state.
-#[derive(Clone, Copy)]
-enum StreamFamily {
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub(crate) enum StreamFamily {
+    /// Parameter vectors of a sync round.
     SyncX,
+    /// Accumulated denominators of a sync round.
     SyncAcc,
+    /// Standalone allreduce payloads (no delta base).
     Raw,
 }
 
@@ -813,6 +833,20 @@ impl Collective for CompressedCollective {
         self.codec.label()
     }
 
+    fn broadcast(&mut self, x: &mut [f32]) -> Result<CommReport> {
+        // The bf16 wire rounds the broadcast model onto the bf16 grid —
+        // the workers receive exactly what bf16 wire bytes can carry, the
+        // same image a networked bf16 worker decodes (DESIGN.md §4). Still
+        // billed free here: the pull leg is accounted at 2 bytes/elem by
+        // the round op, as for every transport. The lossy codecs leave the
+        // broadcast dense (the leader owns `x`; its pull is billed at
+        // 4 bytes/elem).
+        if matches!(self.codec, Codec::Bf16) && self.inner.n() > 1 {
+            crate::util::half::quantize_assign(x);
+        }
+        Ok(CommReport::zero())
+    }
+
     fn gather_grads(&mut self, grads: &mut [Vec<f32>]) -> Result<CommReport> {
         let n = self.inner.n();
         if n <= 1 {
@@ -821,8 +855,7 @@ impl Collective for CompressedCollective {
         }
         let mut bytes = 0u64;
         for (w, g) in grads.iter_mut().enumerate() {
-            let stream = self.grad_stream(w);
-            bytes += self.codec.roundtrip(stream, g);
+            bytes += self.codec.roundtrip(grad_stream(w), g);
         }
         self.inner.gather_grads(grads)?;
         // Dense model pull back to every worker (2 bytes/elem on the bf16
@@ -901,6 +934,16 @@ pub fn build_collective(
     cfg.comm.validate()?;
     cfg.precision.validate()?;
     cfg.precision.validate_with_comm(&cfg.comm)?;
+    if cfg.comm.networked() && (cfg.comm.compression != "none" || cfg.precision.wire_bf16()) {
+        // Over real sockets the lossy codecs live in the leader's
+        // [`crate::comm::net::WireCollective`] (the payloads *are* the
+        // socket frames); the trainer builds it directly.
+        return Err(Error::Config(format!(
+            "comm.transport = {:?} with a lossy wire codec is driven by the \
+             trainer's networked path, not build_collective",
+            cfg.comm.transport
+        )));
+    }
     let n = cfg.train.workers;
     let base = ChannelCollective::new(n, d);
     let coll: Box<dyn Collective> = match cfg.comm.compression.as_str() {
@@ -1352,5 +1395,53 @@ mod tests {
         cfg.comm.compression = "qsgd".into();
         let err = build_collective(&cfg, &calib, 16).unwrap_err();
         assert!(err.to_string().contains("compression"), "{err}");
+    }
+
+    #[test]
+    fn codec_roundtrip_matches_wire_payload_codec_bitwise() {
+        // The equivalence the networked transport rests on: in-process
+        // `Codec::roundtrip` on any stream produces exactly the vector a
+        // remote peer gets by decoding the wire bytes of
+        // `wire::PayloadCodec` on that stream — including the per-(stream,
+        // use) QSGD draws.
+        use crate::comm::wire::PayloadCodec;
+        let (s, seed, d) = (15u8, 77u64, 193usize);
+        let mut codec = Codec::Qsgd {
+            q: QsgdQuantizer::new(s),
+            seed,
+            uses: Vec::new(),
+            enc: QsgdEncoded { norm: 0.0, levels: Vec::new(), s },
+        };
+        let mut wire_codec = PayloadCodec::qsgd(s, seed);
+        for stream in [0usize, 3, 11, 3, 0] {
+            let src: Vec<f32> =
+                (0..d).map(|i| ((i * (stream + 2)) as f32 * 0.013).sin()).collect();
+            let mut inproc = src.clone();
+            let billed = codec.roundtrip(stream, &mut inproc);
+            let mut bytes = Vec::new();
+            wire_codec.encode_vec(stream, &src, &mut bytes);
+            assert_eq!(bytes.len() as u64, billed, "billed bytes != wire bytes");
+            let mut remote = vec![0.0f32; d];
+            wire_codec.decode_vec(&bytes, &mut remote).unwrap();
+            for i in 0..d {
+                assert_eq!(
+                    inproc[i].to_bits(),
+                    remote[i].to_bits(),
+                    "stream {stream} elem {i}"
+                );
+            }
+        }
+        // bf16: same identity, stateless.
+        let mut codec = Codec::Bf16;
+        let mut wire_codec = PayloadCodec::Bf16;
+        let src: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).cos()).collect();
+        let mut inproc = src.clone();
+        let billed = codec.roundtrip(0, &mut inproc);
+        let mut bytes = Vec::new();
+        wire_codec.encode_vec(0, &src, &mut bytes);
+        assert_eq!(bytes.len() as u64, billed);
+        let mut remote = vec![0.0f32; d];
+        wire_codec.decode_vec(&bytes, &mut remote).unwrap();
+        assert!(inproc.iter().zip(&remote).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 }

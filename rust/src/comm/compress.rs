@@ -19,7 +19,7 @@
 //! fixed ~0.4% relative error instead of QSGD's norm-scaled noise. It
 //! plugs into the same compressed-collective machinery (delta coding,
 //! exact byte accounting) as a stateless codec, so the three families are
-//! directly comparable in `benches/comm_reduction.rs` (DESIGN.md §7).
+//! directly comparable in `benches/comm_reduction.rs` (DESIGN.md §8).
 
 use crate::util::rng::Rng;
 
@@ -60,7 +60,7 @@ impl QsgdQuantizer {
     }
 
     /// [`QsgdQuantizer::encode`] into a caller-owned message, reusing its
-    /// `levels` buffer — the zero-allocation hot path (DESIGN.md §6).
+    /// `levels` buffer — the zero-allocation hot path (DESIGN.md §7).
     ///
     /// Edge cases are handled explicitly so `decode(encode(g))` is finite
     /// for every all-finite input and degrades gracefully otherwise:
@@ -177,7 +177,7 @@ impl TopKSparsifier {
 
     /// [`TopKSparsifier::encode`] into a caller-owned message, reusing its
     /// `idx`/`val` buffers and this sparsifier's select scratch — the
-    /// zero-allocation hot path (DESIGN.md §6).
+    /// zero-allocation hot path (DESIGN.md §7).
     pub fn encode_into(&mut self, g: &[f32], out: &mut SparseGrad) {
         let d = self.residual.len();
         assert_eq!(g.len(), d);

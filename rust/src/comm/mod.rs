@@ -1,17 +1,22 @@
-//! Communication substrate (DESIGN.md §3): the pluggable collective layer
-//! the trainer runs its protocol through, the leader↔worker message
-//! transport, the α–β cost model for the paper's parameter-server setting
-//! and ring all-reduce, and the gradient-compression codecs.
+//! Communication substrate (DESIGN.md §3–§4): the pluggable collective
+//! layer the trainer runs its protocol through, the leader↔worker message
+//! transport (in-process channels or real TCP/Unix sockets), the binary
+//! wire format, the α–β cost model for the paper's parameter-server
+//! setting and ring all-reduce, and the gradient-compression codecs.
 
 pub mod collective;
 pub mod compress;
+pub mod net;
 pub mod netmodel;
 pub mod transport;
+pub mod wire;
 
 pub use collective::{
     build_collective, ChannelCollective, Collective, CommReport, CompressedCollective,
     Participation, PartialCollective, PartialRound, SimCost, SimulatedCollective,
 };
 pub use compress::{QsgdQuantizer, SparseGrad, TopKSparsifier};
+pub use net::{run_worker, LeaderLink, NetCounters, TcpTransport};
 pub use netmodel::{NetModel, Topology};
 pub use transport::ChannelTransport;
+pub use wire::{config_fingerprint, Frame, FrameKind, PayloadCodec};

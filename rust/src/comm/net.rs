@@ -1,0 +1,1739 @@
+//! Real networked transport: the lockstep leader↔worker protocol over
+//! TCP or Unix-domain sockets (DESIGN.md §4).
+//!
+//! The in-process [`ChannelTransport`](super::ChannelTransport) stays the
+//! bitwise oracle; this module moves the *same* protocol across OS
+//! processes:
+//!
+//! * [`TcpTransport`] — the leader side. One socket per worker, a reader
+//!   thread per peer forwarding decoded [`Frame`]s onto one event queue,
+//!   a writer thread per peer draining a bounded queue, and `Crashed`
+//!   tombstone synthesis when a peer's socket dies mid-round — so a
+//!   killed worker process surfaces exactly like the fault engine's
+//!   scheduled crashes instead of deadlocking the barrier.
+//! * [`run_worker`] — the worker process body: connect (with retry /
+//!   backoff), handshake (protocol version, worker id, config
+//!   fingerprint), then shim frames onto the unchanged
+//!   [`worker_loop`] cell.
+//! * [`WireCollective`] — the leader's [`Collective`] for lossy codecs
+//!   (bf16 wire, QSGD) over the real wire: the payloads are the *actual
+//!   socket bytes*, so billed traffic is real traffic by construction.
+//! * [`LeaderLink`] — the enum the trainer drives, dispatching to the
+//!   in-process channels or the sockets with identical semantics and
+//!   error wording.
+//!
+//! Bitwise equivalence (the tentpole pin): the wire reuses the existing
+//! codec bytes verbatim ([`wire::PayloadCodec`]), QSGD draws are keyed by
+//! `(seed, stream, use)` ([`wire::qsgd_stream_rng`]) so leader and worker
+//! processes derive identical stochastic rounding without shared state,
+//! and sync rounds delta-code against mirrored bases that advance in
+//! lockstep on both ends. A networked run therefore reproduces the
+//! in-process reference bit for bit — model state, loss trace, and the
+//! byte accounting, which is pinned `accounted == booked` for every
+//! codec. The one intentional difference: the reported `drift_sq`
+//! observation is computed from the leader's post-roundtrip state
+//! reconstructions (the exact worker states never cross the wire), so it
+//! can differ from the in-process value under a *lossy* codec; it only
+//! feeds adaptive sync policies, which the networked equivalence matrix
+//! runs with fixed H.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::comm::collective::{
+    down_stream, grad_stream, mean_sq_dist, up_stream, Collective, CommReport, StreamFamily,
+};
+use crate::comm::netmodel::NetModel;
+use crate::comm::transport::ChannelTransport;
+use crate::comm::wire::{
+    self, Frame, FrameKind, PayloadCodec, CODEC_RAW, FLAG_RAW, PROTOCOL_VERSION,
+};
+use crate::config::ExperimentConfig;
+use crate::coordinator::backend::EvalMetrics;
+use crate::coordinator::factory::make_factory;
+use crate::coordinator::worker::{worker_loop, Cmd, Reply, WorkerSpec};
+use crate::error::{Error, Result};
+use crate::util::kernels;
+
+/// Env var for the failure-path tests: a worker process that reads a
+/// `SyncStep`/`LocalStep` command for this (1-based) step exits with code
+/// 3 *before* replying — a mid-round process death the leader must absorb
+/// as a `Crashed` tombstone.
+pub const EXIT_AT_STEP_ENV: &str = "ADAALTER_EXIT_AT_STEP";
+
+/// Writer-queue depth per peer: deep enough that the strict lockstep
+/// protocol (≤ a few in-flight frames per worker) never blocks the
+/// leader, bounded so a dead peer cannot buffer unbounded memory.
+const WRITER_QUEUE: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Byte counters.
+// ---------------------------------------------------------------------------
+
+/// Real traffic counters for one networked run, shared by the transport's
+/// encode/decode sites and its reader/writer threads.
+#[derive(Debug, Default)]
+pub struct NetCounters {
+    accounted: AtomicU64,
+    total: AtomicU64,
+}
+
+impl NetCounters {
+    /// Fresh zeroed counters.
+    pub fn new() -> Arc<NetCounters> {
+        Arc::new(NetCounters::default())
+    }
+
+    /// Billed codec payload bytes — the frames (and frame sections) that
+    /// correspond to the simulated accounting: `SyncStep` model pushes,
+    /// `Grad` payloads (minus the piggybacked loss scalar), non-raw
+    /// `State` collects and `InstallState` pulls. Pinned equal to the
+    /// recorder's booked bytes for every codec.
+    pub fn accounted(&self) -> u64 {
+        self.accounted.load(Ordering::Relaxed)
+    }
+
+    /// Every byte through the leader's sockets, both directions, frame
+    /// headers and handshake included — the ground-truth wire volume.
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    fn add_accounted(&self, b: u64) {
+        self.accounted.fetch_add(b, Ordering::Relaxed);
+    }
+
+    fn add_total(&self, b: u64) {
+        self.total.fetch_add(b, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Socket plumbing: TCP / Unix-domain behind one face.
+// ---------------------------------------------------------------------------
+
+/// Which socket family the `[comm]` section selected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SocketKind {
+    /// `comm.transport = "tcp"` — TCP over loopback or a real network.
+    Tcp,
+    /// `comm.transport = "uds"` — Unix-domain sockets (same frames).
+    Uds,
+}
+
+impl SocketKind {
+    /// Map a `comm.transport` spelling to a socket family.
+    pub fn from_transport(t: &str) -> Option<SocketKind> {
+        match t {
+            "tcp" => Some(SocketKind::Tcp),
+            "uds" => Some(SocketKind::Uds),
+            _ => None,
+        }
+    }
+}
+
+/// One connected peer stream (TCP or Unix-domain), `Read + Write`.
+enum NetStream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl NetStream {
+    fn connect(kind: SocketKind, addr: &str) -> std::io::Result<NetStream> {
+        match kind {
+            SocketKind::Tcp => TcpStream::connect(addr).map(NetStream::Tcp),
+            SocketKind::Uds => UnixStream::connect(addr).map(NetStream::Uds),
+        }
+    }
+
+    fn try_clone(&self) -> std::io::Result<NetStream> {
+        match self {
+            NetStream::Tcp(s) => s.try_clone().map(NetStream::Tcp),
+            NetStream::Uds(s) => s.try_clone().map(NetStream::Uds),
+        }
+    }
+
+    fn set_nodelay(&self, on: bool) {
+        if let NetStream::Tcp(s) = self {
+            let _ = s.set_nodelay(on);
+        }
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) {
+        let _ = match self {
+            NetStream::Tcp(s) => s.set_read_timeout(t),
+            NetStream::Uds(s) => s.set_read_timeout(t),
+        };
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.read(buf),
+            NetStream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write(buf),
+            NetStream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.flush(),
+            NetStream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+enum NetListener {
+    Tcp(TcpListener),
+    Uds(UnixListener),
+}
+
+impl NetListener {
+    fn bind(kind: SocketKind, addr: &str) -> Result<(NetListener, String)> {
+        match kind {
+            SocketKind::Tcp => {
+                let l = TcpListener::bind(addr).map_err(|e| {
+                    Error::Config(format!("net.listen: cannot bind {addr:?}: {e}"))
+                })?;
+                let local = l
+                    .local_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| addr.to_string());
+                Ok((NetListener::Tcp(l), local))
+            }
+            SocketKind::Uds => {
+                // A stale socket file from a previous run blocks the bind.
+                let _ = std::fs::remove_file(addr);
+                let l = UnixListener::bind(addr).map_err(|e| {
+                    Error::Config(format!("net.listen: cannot bind {addr:?}: {e}"))
+                })?;
+                Ok((NetListener::Uds(l), addr.to_string()))
+            }
+        }
+    }
+
+    fn set_nonblocking(&self, on: bool) -> std::io::Result<()> {
+        match self {
+            NetListener::Tcp(l) => l.set_nonblocking(on),
+            NetListener::Uds(l) => l.set_nonblocking(on),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<NetStream> {
+        match self {
+            NetListener::Tcp(l) => l.accept().map(|(s, _)| NetStream::Tcp(s)),
+            NetListener::Uds(l) => l.accept().map(|(s, _)| NetStream::Uds(s)),
+        }
+    }
+}
+
+/// Atomically publish the leader's bound address for workers started with
+/// `--port-file` (write to a temp file, then rename — a reader never sees
+/// a partial address).
+pub fn write_port_file(path: &str, addr: &str) -> Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, format!("{addr}\n"))?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Poll `path` until it holds a non-empty address line (the leader binds
+/// port 0 and publishes the chosen port here), up to `timeout`.
+pub fn read_port_file(path: &str, timeout: Duration) -> Result<String> {
+    let start = Instant::now();
+    loop {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            let line = s.trim();
+            if !line.is_empty() {
+                return Ok(line.to_string());
+            }
+        }
+        if start.elapsed() > timeout {
+            return Err(Error::Config(format!(
+                "net.connect: port file {path:?} never appeared within \
+                 net.connect_timeout_s"
+            )));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared wire state: codec + delta bases + pending round data.
+// ---------------------------------------------------------------------------
+
+/// The leader's codec-side state, shared between the [`TcpTransport`]
+/// (which encodes commands / decodes replies) and the [`WireCollective`]
+/// (which averages the decoded deltas and stages the down-leg payload).
+/// Both run on the leader thread; the mutex is uncontended.
+pub struct WireState {
+    codec: PayloadCodec,
+    n: usize,
+    d: usize,
+    /// Last synchronized parameters (delta base; zeros before round 1) —
+    /// mirrored exactly by every worker process.
+    base_x: Vec<f32>,
+    /// Last synchronized denominators (same mirroring).
+    base_acc: Vec<f32>,
+    /// Decoded (post-roundtrip) up-leg parameter deltas of the round in
+    /// flight, per worker.
+    pending_x: Vec<Option<Vec<f32>>>,
+    /// Decoded up-leg accumulator deltas.
+    pending_acc: Vec<Option<Vec<f32>>>,
+    /// Encoded down-leg payload staged by the last sync round, consumed by
+    /// the next `remaining` `InstallState` frames.
+    install: Option<InstallStash>,
+}
+
+struct InstallStash {
+    payload: Vec<u8>,
+    remaining: usize,
+}
+
+impl WireState {
+    /// Fresh state for an `n`-worker, dimension-`d` cluster using `codec`
+    /// for data payloads.
+    pub fn new(codec: PayloadCodec, n: usize, d: usize) -> Arc<Mutex<WireState>> {
+        Arc::new(Mutex::new(WireState {
+            codec,
+            n,
+            d,
+            base_x: vec![0.0; d],
+            base_acc: vec![0.0; d],
+            pending_x: vec![None; n],
+            pending_acc: vec![None; n],
+            install: None,
+        }))
+    }
+
+    /// The data-payload codec the `[comm]`/`[precision]` sections select —
+    /// the same choice on the leader and in every worker process.
+    pub fn codec_for(cfg: &ExperimentConfig) -> PayloadCodec {
+        if cfg.comm.compression == "qsgd" {
+            PayloadCodec::qsgd(cfg.comm.qsgd_levels, cfg.train.seed)
+        } else if cfg.precision.wire_bf16() {
+            PayloadCodec::Bf16
+        } else {
+            PayloadCodec::F32
+        }
+    }
+}
+
+fn lock(state: &Arc<Mutex<WireState>>) -> std::sync::MutexGuard<'_, WireState> {
+    state.lock().expect("wire state lock poisoned")
+}
+
+// ---------------------------------------------------------------------------
+// Payload helpers.
+// ---------------------------------------------------------------------------
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    out.reserve(4 * v.len());
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_f32s(bytes: &[u8], d: usize) -> Result<Vec<f32>> {
+    if bytes.len() != 4 * d {
+        return Err(Error::Protocol(format!(
+            "raw f32 payload length {} != {} for a {d}-element vector",
+            bytes.len(),
+            4 * d
+        )));
+    }
+    Ok((0..d)
+        .map(|i| f32::from_le_bytes(bytes[4 * i..4 * i + 4].try_into().expect("sized")))
+        .collect())
+}
+
+/// Split a raw-f32 state payload into `x` and an optional `acc` section —
+/// the payload is `4d` (x only) or `8d` (x then acc) bytes.
+fn split_raw_state(bytes: &[u8], d: usize) -> Result<(Vec<f32>, Option<Vec<f32>>)> {
+    if bytes.len() == 4 * d {
+        Ok((get_f32s(bytes, d)?, None))
+    } else if bytes.len() == 8 * d {
+        Ok((get_f32s(&bytes[..4 * d], d)?, Some(get_f32s(&bytes[4 * d..], d)?)))
+    } else {
+        Err(Error::Protocol(format!(
+            "raw state payload length {} is neither {} nor {} (d = {d})",
+            bytes.len(),
+            4 * d,
+            8 * d
+        )))
+    }
+}
+
+/// Split an encoded state payload into its per-family sections — one or
+/// two sections of exactly `enc_len` bytes each (x, then acc).
+fn split_enc_state(bytes: &[u8], enc_len: usize) -> Result<(&[u8], Option<&[u8]>)> {
+    if bytes.len() == enc_len {
+        Ok((bytes, None))
+    } else if bytes.len() == 2 * enc_len {
+        Ok((&bytes[..enc_len], Some(&bytes[enc_len..])))
+    } else {
+        Err(Error::Protocol(format!(
+            "encoded state payload length {} is neither {enc_len} nor {}",
+            bytes.len(),
+            2 * enc_len
+        )))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Handshake.
+// ---------------------------------------------------------------------------
+
+/// `HelloAck` payload: cluster shape + the per-worker spec fields the
+/// worker process cannot derive from its own config, + the shared init.
+fn encode_hello_ack(n: usize, spec: &WorkerSpec) -> Vec<u8> {
+    let mut p = Vec::with_capacity(16 + 4 * spec.init.len());
+    p.extend_from_slice(&(n as u32).to_le_bytes());
+    p.push(spec.allow_fused as u8);
+    p.push(spec.collect_update_sq as u8);
+    p.push(spec.bf16_state as u8);
+    p.push(0);
+    p.extend_from_slice(&spec.crash_step.map_or(0u64, |s| s + 1).to_le_bytes());
+    put_f32s(&mut p, &spec.init);
+    p
+}
+
+/// The decoded `HelloAck` a worker process builds its cell spec from.
+struct HelloAck {
+    n: usize,
+    allow_fused: bool,
+    collect_update_sq: bool,
+    bf16_state: bool,
+    crash_step: Option<u64>,
+    init: Vec<f32>,
+}
+
+fn decode_hello_ack(p: &[u8]) -> Result<HelloAck> {
+    if p.len() < 16 || (p.len() - 16) % 4 != 0 {
+        return Err(Error::Protocol(format!("malformed HelloAck payload ({} bytes)", p.len())));
+    }
+    let n = u32::from_le_bytes(p[0..4].try_into().expect("sized")) as usize;
+    let crash = u64::from_le_bytes(p[8..16].try_into().expect("sized"));
+    let d = (p.len() - 16) / 4;
+    Ok(HelloAck {
+        n,
+        allow_fused: p[4] != 0,
+        collect_update_sq: p[5] != 0,
+        bf16_state: p[6] != 0,
+        crash_step: crash.checked_sub(1),
+        init: get_f32s(&p[16..], d)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// TcpTransport — the leader side.
+// ---------------------------------------------------------------------------
+
+/// A bound-but-not-yet-connected leader endpoint: lets the caller publish
+/// the chosen address (port-0 binds) *before* blocking in the handshake.
+pub struct Bound {
+    listener: NetListener,
+    addr: String,
+    timeout: Duration,
+}
+
+impl Bound {
+    /// The actual bound address ("127.0.0.1:41234" for TCP port-0 binds;
+    /// the socket path for Unix-domain).
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Accept and handshake all `specs.len()` workers: each must present
+    /// the protocol version, a fresh in-range worker id and the matching
+    /// config fingerprint; violators get an `ErrMsg` frame and are
+    /// dropped while the leader keeps listening. Returns the running
+    /// transport (reader/writer threads spawned per peer).
+    pub fn handshake(
+        self,
+        specs: &[WorkerSpec],
+        fingerprint: u64,
+        nodelay: bool,
+        state: Arc<Mutex<WireState>>,
+        counters: Arc<NetCounters>,
+    ) -> Result<TcpTransport> {
+        let n = specs.len();
+        let deadline = Instant::now() + self.timeout;
+        self.listener.set_nonblocking(true)?;
+        let mut conns: Vec<Option<NetStream>> = (0..n).map(|_| None).collect();
+        let mut connected = 0usize;
+        while connected < n {
+            if Instant::now() > deadline {
+                return Err(Error::Config(format!(
+                    "net.listen: {} of {n} workers never connected within \
+                     net.connect_timeout_s = {}s",
+                    n - connected,
+                    self.timeout.as_secs_f64()
+                )));
+            }
+            let mut stream = match self.listener.accept() {
+                Ok(s) => s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            stream.set_read_timeout(Some(Duration::from_secs(5)));
+            let hello = match Frame::read_from(&mut stream) {
+                Ok(Some(f)) if f.kind == FrameKind::Hello && f.payload.len() == 8 => f,
+                // Not a valid hello (wrong version / kind / garbage):
+                // drop the connection and keep listening.
+                _ => continue,
+            };
+            counters.add_total(hello.wire_len() as u64);
+            let w = hello.worker as usize;
+            let peer_fp = u64::from_le_bytes(hello.payload[..8].try_into().expect("sized"));
+            let reject = if w >= n {
+                Some(format!("worker id {w} out of range (cluster size {n})"))
+            } else if conns[w].is_some() {
+                Some(format!("duplicate worker id {w}"))
+            } else if peer_fp != fingerprint {
+                Some(format!(
+                    "config mismatch: worker fingerprint {peer_fp:#018x} != leader \
+                     {fingerprint:#018x} — leader and workers must run the identical \
+                     experiment config"
+                ))
+            } else {
+                None
+            };
+            if let Some(msg) = reject {
+                let f = Frame {
+                    kind: FrameKind::ErrMsg,
+                    codec: CODEC_RAW,
+                    flags: 0,
+                    worker: hello.worker,
+                    step: 0,
+                    payload: msg.into_bytes(),
+                };
+                counters.add_total(f.wire_len() as u64);
+                let _ = f.write_to(&mut stream);
+                continue;
+            }
+            let ack = Frame {
+                kind: FrameKind::HelloAck,
+                codec: CODEC_RAW,
+                flags: 0,
+                worker: hello.worker,
+                step: 0,
+                payload: encode_hello_ack(n, &specs[w]),
+            };
+            counters.add_total(ack.wire_len() as u64);
+            ack.write_to(&mut stream)?;
+            stream.set_read_timeout(None);
+            stream.set_nodelay(nodelay);
+            conns[w] = Some(stream);
+            connected += 1;
+        }
+        TcpTransport::start(
+            conns.into_iter().map(|c| c.expect("all connected")).collect(),
+            state,
+            counters,
+        )
+    }
+}
+
+struct Peer {
+    tx: Option<SyncSender<Frame>>,
+    writer: Option<JoinHandle<()>>,
+    reader: Option<JoinHandle<()>>,
+}
+
+/// The leader side of the networked transport: the exact request/reply
+/// surface of [`ChannelTransport`] (`broadcast`/`broadcast_to`/`gather`/
+/// `gather_from`/`shutdown`, same error wording) over one socket per
+/// worker, with per-peer reader/writer threads and bounded write queues.
+///
+/// Peer death (EOF or socket error on the reader) synthesizes the same
+/// [`Reply::Crashed`] tombstone the in-process fault engine produces: one
+/// tombstone for the command in flight, and one per subsequent command
+/// addressed to the dead worker — so quorum policies keep the run alive
+/// and full-barrier runs fail with a clean protocol error, never a hang.
+pub struct TcpTransport {
+    peers: Vec<Peer>,
+    events: Receiver<(usize, Option<Frame>)>,
+    state: Arc<Mutex<WireState>>,
+    counters: Arc<NetCounters>,
+    /// Synthesized tombstones queued ahead of socket events.
+    synth: VecDeque<Reply>,
+    dead: Vec<bool>,
+    /// Commands in flight per worker (≤ 1 in the lockstep protocol).
+    outstanding: Vec<usize>,
+}
+
+impl TcpTransport {
+    /// Bind the leader's listening socket. `timeout` bounds both the
+    /// handshake accept loop and is reused by workers polling the port
+    /// file.
+    pub fn listen(kind: SocketKind, addr: &str, timeout: Duration) -> Result<Bound> {
+        if addr.is_empty() {
+            return Err(Error::Config(
+                "net.listen: no listen address (set [net] listen or --listen)".into(),
+            ));
+        }
+        let (listener, local) = NetListener::bind(kind, addr)?;
+        Ok(Bound { listener, addr: local, timeout })
+    }
+
+    fn start(
+        streams: Vec<NetStream>,
+        state: Arc<Mutex<WireState>>,
+        counters: Arc<NetCounters>,
+    ) -> Result<TcpTransport> {
+        let n = streams.len();
+        let (ev_tx, ev_rx) = std::sync::mpsc::channel::<(usize, Option<Frame>)>();
+        let mut peers = Vec::with_capacity(n);
+        for (w, stream) in streams.into_iter().enumerate() {
+            let mut rd = stream.try_clone()?;
+            let mut wr = stream;
+            let (tx, rx) = std::sync::mpsc::sync_channel::<Frame>(WRITER_QUEUE);
+            let rc = Arc::clone(&counters);
+            let etx = ev_tx.clone();
+            let reader = std::thread::spawn(move || loop {
+                match Frame::read_from(&mut rd) {
+                    Ok(Some(f)) => {
+                        rc.add_total(f.wire_len() as u64);
+                        if etx.send((w, Some(f))).is_err() {
+                            break;
+                        }
+                    }
+                    // Clean EOF and read errors alike mean the peer is
+                    // gone mid-protocol; the leader turns this into a
+                    // Crashed tombstone.
+                    Ok(None) | Err(_) => {
+                        let _ = etx.send((w, None));
+                        break;
+                    }
+                }
+            });
+            let wc = Arc::clone(&counters);
+            let writer = std::thread::spawn(move || {
+                while let Ok(f) = rx.recv() {
+                    if f.write_to(&mut wr).is_err() {
+                        break;
+                    }
+                    wc.add_total(f.wire_len() as u64);
+                    let _ = wr.flush();
+                }
+            });
+            peers.push(Peer { tx: Some(tx), writer: Some(writer), reader: Some(reader) });
+        }
+        drop(ev_tx);
+        Ok(TcpTransport {
+            peers,
+            events: ev_rx,
+            state,
+            counters,
+            synth: VecDeque::new(),
+            dead: vec![false; n],
+            outstanding: vec![0; n],
+        })
+    }
+
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.peers.len()
+    }
+
+    /// The shared traffic counters (for end-of-run reporting).
+    pub fn counters(&self) -> Arc<NetCounters> {
+        Arc::clone(&self.counters)
+    }
+
+    /// Send `make(w)` to every worker.
+    pub fn broadcast(&mut self, mut make: impl FnMut(usize) -> Cmd) -> Result<()> {
+        for w in 0..self.n() {
+            self.send_to(w, make(w))?;
+        }
+        Ok(())
+    }
+
+    /// Send `make(w)` to each worker in `targets`.
+    pub fn broadcast_to(
+        &mut self,
+        targets: &[usize],
+        mut make: impl FnMut(usize) -> Cmd,
+    ) -> Result<()> {
+        for &w in targets {
+            self.send_to(w, make(w))?;
+        }
+        Ok(())
+    }
+
+    /// Send one command to worker `w`. Addressing a dead peer synthesizes
+    /// an immediate `Crashed` tombstone instead of erroring — the same
+    /// contract as the in-process fault engine's dead cells.
+    pub fn send_to(&mut self, w: usize, cmd: Cmd) -> Result<()> {
+        if w >= self.n() {
+            return Err(Error::Protocol(format!("no worker {w}")));
+        }
+        if self.dead[w] {
+            self.synth.push_back(Reply::Crashed { worker: w, step: 0 });
+            return Ok(());
+        }
+        let frame = self.cmd_to_frame(w, cmd)?;
+        self.outstanding[w] += 1;
+        let sent = self.peers[w].tx.as_ref().map(|tx| tx.send(frame).is_ok()).unwrap_or(false);
+        if !sent {
+            self.dead[w] = true;
+            self.outstanding[w] = 0;
+            self.synth.push_back(Reply::Crashed { worker: w, step: 0 });
+        }
+        Ok(())
+    }
+
+    /// Receive the next reply from any worker (or a synthesized
+    /// tombstone).
+    pub fn recv(&mut self) -> Result<Reply> {
+        if let Some(r) = self.synth.pop_front() {
+            return Ok(r);
+        }
+        loop {
+            match self.events.recv() {
+                Ok((w, Some(frame))) => {
+                    self.outstanding[w] = self.outstanding[w].saturating_sub(1);
+                    return self.frame_to_reply(w, frame);
+                }
+                Ok((w, None)) => {
+                    if !self.dead[w] {
+                        self.dead[w] = true;
+                        if self.outstanding[w] > 0 {
+                            self.outstanding[w] = 0;
+                            return Ok(Reply::Crashed { worker: w, step: 0 });
+                        }
+                    }
+                    // No command in flight: remember the death, keep
+                    // waiting for the workers that are.
+                }
+                Err(_) => return Err(Error::Protocol("all workers disconnected".into())),
+            }
+        }
+    }
+
+    /// Best-effort shutdown: `stop(w)` to every live peer, then join the
+    /// per-peer threads (workers close their sockets on `Stop`, which
+    /// unblocks the readers).
+    pub fn shutdown(&mut self, mut stop: impl FnMut(usize) -> Cmd) {
+        for w in 0..self.peers.len() {
+            if !self.dead[w] {
+                if let Ok(frame) = self.cmd_to_frame(w, stop(w)) {
+                    if let Some(tx) = self.peers[w].tx.as_ref() {
+                        let _ = tx.send(frame);
+                    }
+                }
+            }
+        }
+        for p in &mut self.peers {
+            p.tx = None; // close the write queues; writers drain and exit
+            if let Some(j) = p.writer.take() {
+                let _ = j.join();
+            }
+            if let Some(j) = p.reader.take() {
+                let _ = j.join();
+            }
+        }
+    }
+
+    /// Encode a leader command into its wire frame, billing the payload
+    /// per the accounting rules (DESIGN.md §4): `SyncStep` pushes and
+    /// `InstallState` pulls are billed; control frames, `Eval` payloads
+    /// and raw collects are free.
+    fn cmd_to_frame(&mut self, w: usize, cmd: Cmd) -> Result<Frame> {
+        let worker = w as u32;
+        Ok(match cmd {
+            Cmd::SyncStep { t, x, scratch: _ } => {
+                let mut wd = lock(&self.state);
+                let mut payload = Vec::new();
+                // bf16 wire: ship the bf16 image (x is already on the
+                // grid after the collective's broadcast). QSGD ships the
+                // dense f32 model — the leader owns x, and the pull is
+                // billed at 4 bytes/element, exactly as in-process.
+                let codec_tag = if matches!(wd.codec, PayloadCodec::Bf16) {
+                    wd.codec.encode_vec(0, &x, &mut payload);
+                    wd.codec.tag()
+                } else {
+                    put_f32s(&mut payload, &x);
+                    CODEC_RAW
+                };
+                drop(wd);
+                self.counters.add_accounted(payload.len() as u64);
+                Frame {
+                    kind: FrameKind::SyncStep,
+                    codec: codec_tag,
+                    flags: 0,
+                    worker,
+                    step: t,
+                    payload,
+                }
+            }
+            Cmd::LocalStep { t, lr } => Frame {
+                kind: FrameKind::LocalStep,
+                codec: CODEC_RAW,
+                flags: 0,
+                worker,
+                step: t,
+                payload: lr.to_le_bytes().to_vec(),
+            },
+            Cmd::CollectState { raw, .. } => Frame {
+                kind: FrameKind::CollectState,
+                codec: CODEC_RAW,
+                flags: if raw { FLAG_RAW } else { 0 },
+                worker,
+                step: 0,
+                payload: Vec::new(),
+            },
+            Cmd::InstallState { x, acc } => {
+                let mut wd = lock(&self.state);
+                let (payload, tag) = if wd.codec.is_f32() {
+                    let mut p = Vec::new();
+                    put_f32s(&mut p, &x);
+                    if let Some(a) = acc.as_deref() {
+                        put_f32s(&mut p, a);
+                    }
+                    (p, CODEC_RAW)
+                } else {
+                    // Lossy codecs install the encoded down-leg deltas the
+                    // sync round staged — the exact bytes the collective
+                    // billed.
+                    let tag = wd.codec.tag();
+                    let stash = wd.install.as_mut().ok_or_else(|| {
+                        Error::Protocol(
+                            "InstallState without a staged sync round over the networked \
+                             transport"
+                                .into(),
+                        )
+                    })?;
+                    let p = stash.payload.clone();
+                    stash.remaining = stash.remaining.saturating_sub(1);
+                    if stash.remaining == 0 {
+                        wd.install = None;
+                    }
+                    (p, tag)
+                };
+                drop(wd);
+                self.counters.add_accounted(payload.len() as u64);
+                Frame {
+                    kind: FrameKind::InstallState,
+                    codec: tag,
+                    flags: 0,
+                    worker,
+                    step: 0,
+                    payload,
+                }
+            }
+            Cmd::Eval { x } => {
+                let mut payload = Vec::new();
+                match x.as_deref() {
+                    Some(v) => {
+                        payload.push(1);
+                        put_f32s(&mut payload, v);
+                    }
+                    None => payload.push(0),
+                }
+                // Observer-only: exact f32, unbilled (matches the
+                // in-process accounting, which books nothing for evals).
+                Frame {
+                    kind: FrameKind::Eval,
+                    codec: CODEC_RAW,
+                    flags: FLAG_RAW,
+                    worker,
+                    step: 0,
+                    payload,
+                }
+            }
+            Cmd::Stop => Frame::control(FrameKind::Stop, worker, 0),
+        })
+    }
+
+    /// Decode a worker frame into the protocol reply, billing per the
+    /// same rules: `Grad` payloads (minus the loss scalar) and non-raw
+    /// `State` collects are billed.
+    fn frame_to_reply(&mut self, w: usize, f: Frame) -> Result<Reply> {
+        if f.worker as usize != w {
+            return Err(Error::Protocol(format!(
+                "frame from peer {w} claims worker id {}",
+                f.worker
+            )));
+        }
+        Ok(match f.kind {
+            FrameKind::Grad => {
+                if f.payload.len() < 4 {
+                    return Err(Error::Protocol("Grad frame too short".into()));
+                }
+                let loss = f32::from_le_bytes(f.payload[..4].try_into().expect("sized"));
+                let enc = &f.payload[4..];
+                self.counters.add_accounted(enc.len() as u64);
+                let mut wd = lock(&self.state);
+                let mut grad = vec![0.0f32; wd.d];
+                wd.codec.decode_vec(enc, &mut grad)?;
+                Reply::Grad { worker: w, loss, grad }
+            }
+            FrameKind::StepDone => {
+                if f.payload.len() != 12 {
+                    return Err(Error::Protocol("StepDone frame malformed".into()));
+                }
+                let loss = f32::from_le_bytes(f.payload[..4].try_into().expect("sized"));
+                let update_sq = f64::from_le_bytes(f.payload[4..12].try_into().expect("sized"));
+                Reply::StepDone { worker: w, loss, update_sq }
+            }
+            FrameKind::State => {
+                let mut wd = lock(&self.state);
+                let d = wd.d;
+                if f.flags & FLAG_RAW != 0 {
+                    // Observer collect: exact f32, unbilled.
+                    let (x, acc) = split_raw_state(&f.payload, d)?;
+                    Reply::State { worker: w, x, acc }
+                } else if wd.codec.is_f32() {
+                    self.counters.add_accounted(f.payload.len() as u64);
+                    let (x, acc) = split_raw_state(&f.payload, d)?;
+                    Reply::State { worker: w, x, acc }
+                } else {
+                    self.counters.add_accounted(f.payload.len() as u64);
+                    let enc_len = wd.codec.enc_len(d);
+                    let (ex, ea) = split_enc_state(&f.payload, enc_len)?;
+                    let mut dx = vec![0.0f32; d];
+                    wd.codec.decode_vec(ex, &mut dx)?;
+                    let mut x = vec![0.0f32; d];
+                    kernels::delta_decode(&wd.base_x, &dx, &mut x);
+                    wd.pending_x[w] = Some(dx);
+                    let acc = match ea {
+                        Some(ea) => {
+                            let mut da = vec![0.0f32; d];
+                            wd.codec.decode_vec(ea, &mut da)?;
+                            let mut a = vec![0.0f32; d];
+                            kernels::delta_decode(&wd.base_acc, &da, &mut a);
+                            wd.pending_acc[w] = Some(da);
+                            Some(a)
+                        }
+                        None => None,
+                    };
+                    Reply::State { worker: w, x, acc }
+                }
+            }
+            FrameKind::EvalDone => {
+                if f.payload.len() != 17 {
+                    return Err(Error::Protocol("EvalDone frame malformed".into()));
+                }
+                let loss = f64::from_le_bytes(f.payload[..8].try_into().expect("sized"));
+                let ppl = (f.payload[8] != 0)
+                    .then(|| f64::from_le_bytes(f.payload[9..17].try_into().expect("sized")));
+                Reply::Eval { worker: w, metrics: EvalMetrics { loss, ppl } }
+            }
+            FrameKind::Ready => Reply::Ready { worker: w },
+            FrameKind::Crashed => Reply::Crashed { worker: w, step: f.step },
+            FrameKind::ErrMsg => Reply::Err {
+                worker: w,
+                msg: String::from_utf8_lossy(&f.payload).into_owned(),
+            },
+            other => {
+                return Err(Error::Protocol(format!(
+                    "unexpected {other:?} frame from worker {w}"
+                )))
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LeaderLink — one trainer-facing surface over both transports.
+// ---------------------------------------------------------------------------
+
+/// The transport the trainer drives: in-process channels or real sockets,
+/// same methods, same error wording. The gather algorithms are written
+/// once here against [`LeaderLink::recv`], mirroring
+/// [`ChannelTransport::gather`]/[`gather_from`](ChannelTransport::gather_from)
+/// exactly.
+pub enum LeaderLink {
+    /// In-process mpsc channels ([`ChannelTransport`]) — the oracle.
+    Chan(ChannelTransport<Cmd, Reply>),
+    /// Real TCP / Unix-domain sockets.
+    Net(Box<TcpTransport>),
+}
+
+impl LeaderLink {
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        match self {
+            LeaderLink::Chan(t) => t.n(),
+            LeaderLink::Net(t) => t.n(),
+        }
+    }
+
+    /// Send `make(w)` to every worker.
+    pub fn broadcast(&mut self, make: impl FnMut(usize) -> Cmd) -> Result<()> {
+        match self {
+            LeaderLink::Chan(t) => t.broadcast(make),
+            LeaderLink::Net(t) => t.broadcast(make),
+        }
+    }
+
+    /// Send `make(w)` to each worker in `targets`.
+    pub fn broadcast_to(
+        &mut self,
+        targets: &[usize],
+        make: impl FnMut(usize) -> Cmd,
+    ) -> Result<()> {
+        match self {
+            LeaderLink::Chan(t) => t.broadcast_to(targets, make),
+            LeaderLink::Net(t) => t.broadcast_to(targets, make),
+        }
+    }
+
+    /// Send one command to a single worker.
+    pub fn send_to(&mut self, w: usize, cmd: Cmd) -> Result<()> {
+        match self {
+            LeaderLink::Chan(t) => t.send_to(w, cmd),
+            LeaderLink::Net(t) => t.send_to(w, cmd),
+        }
+    }
+
+    /// Receive the next reply from any worker.
+    pub fn recv(&mut self) -> Result<Reply> {
+        match self {
+            LeaderLink::Chan(t) => t.recv(),
+            LeaderLink::Net(t) => t.recv(),
+        }
+    }
+
+    /// Gather exactly one reply per worker ([`ChannelTransport::gather`]).
+    pub fn gather<T>(
+        &mut self,
+        mut sel: impl FnMut(Reply) -> Result<(usize, T)>,
+    ) -> Result<Vec<T>> {
+        let n = self.n();
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut got = 0;
+        while got < n {
+            let (w, v) = sel(self.recv()?)?;
+            let slot = out
+                .get_mut(w)
+                .ok_or_else(|| Error::Protocol(format!("reply from unknown worker {w}")))?;
+            if slot.replace(v).is_some() {
+                return Err(Error::Protocol(format!("duplicate reply from worker {w}")));
+            }
+            got += 1;
+        }
+        Ok(out.into_iter().map(|v| v.expect("filled")).collect())
+    }
+
+    /// Gather one reply from each worker in `targets`, in target order
+    /// ([`ChannelTransport::gather_from`]).
+    pub fn gather_from<T>(
+        &mut self,
+        targets: &[usize],
+        mut sel: impl FnMut(Reply) -> Result<(usize, T)>,
+    ) -> Result<Vec<T>> {
+        let mut slot_of: Vec<Option<usize>> = vec![None; self.n()];
+        for (i, &w) in targets.iter().enumerate() {
+            let slot = slot_of
+                .get_mut(w)
+                .ok_or_else(|| Error::Protocol(format!("no worker {w}")))?;
+            if slot.replace(i).is_some() {
+                return Err(Error::Protocol(format!("duplicate gather target {w}")));
+            }
+        }
+        let mut out: Vec<Option<T>> = (0..targets.len()).map(|_| None).collect();
+        let mut got = 0;
+        while got < targets.len() {
+            let (w, v) = sel(self.recv()?)?;
+            let slot = slot_of
+                .get(w)
+                .copied()
+                .flatten()
+                .ok_or_else(|| Error::Protocol(format!("unexpected reply from worker {w}")))?;
+            if out[slot].replace(v).is_some() {
+                return Err(Error::Protocol(format!("duplicate reply from worker {w}")));
+            }
+            got += 1;
+        }
+        Ok(out.into_iter().map(|v| v.expect("filled")).collect())
+    }
+
+    /// Best-effort shutdown (both transports swallow errors).
+    pub fn shutdown(&mut self, stop: impl FnMut(usize) -> Cmd) {
+        match self {
+            LeaderLink::Chan(t) => t.shutdown(stop),
+            LeaderLink::Net(t) => t.shutdown(stop),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WireCollective — lossy codecs over the real wire.
+// ---------------------------------------------------------------------------
+
+/// The leader's [`Collective`] for bf16/QSGD payloads over the networked
+/// transport. The up-leg deltas were decoded off the actual socket frames
+/// (staged in [`WireState`] by the transport); this op averages them,
+/// encodes the down leg once per vector family (burning the same
+/// `(seed, stream, use)` RNG the in-process codec would), stages the
+/// encoded bytes for the `InstallState` frames, and bills exactly what
+/// the in-process [`CompressedCollective`](super::CompressedCollective)
+/// bills — which is also exactly what crosses the socket.
+pub struct WireCollective {
+    state: Arc<Mutex<WireState>>,
+    net: NetModel,
+    inner_label: String,
+    is_bf16: bool,
+    mean_buf: Vec<f32>,
+    hat_buf: Vec<f32>,
+    enc_buf: Vec<u8>,
+}
+
+impl WireCollective {
+    /// Wrap the shared wire state with the α–β model used for virtual
+    /// time; `inner_label` names the codec ("bf16", "qsgd(s=15)").
+    pub fn new(state: Arc<Mutex<WireState>>, net: NetModel, inner_label: String) -> Self {
+        let is_bf16 = matches!(lock(&state).codec, PayloadCodec::Bf16);
+        WireCollective {
+            state,
+            net,
+            inner_label,
+            is_bf16,
+            mean_buf: Vec::new(),
+            hat_buf: Vec::new(),
+            enc_buf: Vec::new(),
+        }
+    }
+}
+
+/// Average one vector family's pending deltas, encode/decode the down
+/// leg, advance the base, and return the billed bytes (up + down legs).
+fn family_round(
+    wd: &mut WireState,
+    family: StreamFamily,
+    out: &mut [f32],
+    payload: &mut Vec<u8>,
+    mean: &mut Vec<f32>,
+    hat: &mut Vec<f32>,
+) -> Result<u64> {
+    let (n, d) = (wd.n, wd.d);
+    {
+        let pend = match family {
+            StreamFamily::SyncX => &mut wd.pending_x,
+            StreamFamily::SyncAcc => &mut wd.pending_acc,
+            StreamFamily::Raw => unreachable!("no Raw family over the wire"),
+        };
+        let mut deltas: Vec<&[f32]> = Vec::with_capacity(n);
+        for (w, p) in pend.iter().enumerate() {
+            deltas.push(p.as_deref().ok_or_else(|| {
+                Error::Protocol(format!(
+                    "sync round without worker {w}'s state over the networked transport"
+                ))
+            })?);
+        }
+        mean.resize(d, 0.0);
+        kernels::mean_into(&deltas, mean);
+        for p in pend.iter_mut() {
+            *p = None;
+        }
+    }
+    // Up leg: the per-worker encoded deltas already shipped (billed here,
+    // counted on the socket by the transport — sizes are deterministic).
+    let mut bytes = n as u64 * wd.codec.enc_len(d) as u64;
+    let start = payload.len();
+    wd.codec.encode_vec(down_stream(n, family), mean, payload);
+    let enc = payload.len() - start;
+    bytes += n as u64 * enc as u64;
+    hat.resize(d, 0.0);
+    wd.codec.decode_vec(&payload[start..], hat)?;
+    match family {
+        StreamFamily::SyncX => {
+            kernels::delta_decode(&wd.base_x, hat, out);
+            wd.base_x.copy_from_slice(out);
+        }
+        StreamFamily::SyncAcc => {
+            kernels::delta_decode_clamped(&wd.base_acc, hat, out);
+            wd.base_acc.copy_from_slice(out);
+        }
+        StreamFamily::Raw => unreachable!(),
+    }
+    Ok(bytes)
+}
+
+impl Collective for WireCollective {
+    fn n(&self) -> usize {
+        lock(&self.state).n
+    }
+
+    fn label(&self) -> String {
+        format!("net({})", self.inner_label)
+    }
+
+    fn broadcast(&mut self, x: &mut [f32]) -> Result<CommReport> {
+        // Same contract as the in-process bf16 wire: the broadcast model
+        // is rounded onto the bf16 grid (that is what the frames carry);
+        // billed free, the pull leg is accounted by the round op.
+        if self.is_bf16 {
+            crate::util::half::quantize_assign(x);
+        }
+        Ok(CommReport::zero())
+    }
+
+    fn gather_grads(&mut self, grads: &mut [Vec<f32>]) -> Result<CommReport> {
+        let wd = lock(&self.state);
+        let (n, d) = (wd.n, wd.d);
+        if grads.len() != n {
+            return Err(Error::Protocol(format!(
+                "gather_grads: {} gradients for {n} workers",
+                grads.len()
+            )));
+        }
+        for (w, g) in grads.iter().enumerate() {
+            if g.len() != d {
+                return Err(Error::Protocol(format!(
+                    "gather_grads: worker {w} gradient len {} != d {d}",
+                    g.len()
+                )));
+            }
+        }
+        // The gradients were decoded off the wire — already the
+        // decode(encode(·)) images the in-process codec produces. Bill
+        // the identical round: Σ enc(g_i) up, dense model pull down.
+        let pull = if self.is_bf16 { 2u64 } else { 4u64 };
+        let bytes = n as u64 * wd.codec.enc_len(d) as u64 + n as u64 * pull * d as u64;
+        drop(wd);
+        Ok(CommReport {
+            bytes,
+            time_s: self.net.bytes_time(n, bytes),
+            rounds: 1,
+            drift_sq: 0.0,
+            straggler_s: self.net.straggler_spread_s(n, bytes / (2 * n as u64)),
+        })
+    }
+
+    fn allreduce_mean(&mut self, _inputs: &[&[f32]], _out: &mut [f32]) -> Result<CommReport> {
+        Err(Error::Protocol(
+            "allreduce_mean is not supported over the networked transport".into(),
+        ))
+    }
+
+    fn sync_round(
+        &mut self,
+        xs: &[&[f32]],
+        accs: Option<&[&[f32]]>,
+        avg_x: &mut [f32],
+        avg_acc: Option<&mut [f32]>,
+    ) -> Result<CommReport> {
+        if accs.is_some() != avg_acc.is_some() {
+            return Err(Error::Protocol(
+                "sync_round: accs and avg_acc must both be present or both absent".into(),
+            ));
+        }
+        let mut wd = lock(&self.state);
+        let n = wd.n;
+        if xs.len() != n {
+            return Err(Error::Protocol(format!(
+                "sync_round: {} states for {n} workers (partial rounds require the \
+                 dense f32 wire over tcp/uds)",
+                xs.len()
+            )));
+        }
+        self.enc_buf.clear();
+        let mut bytes = family_round(
+            &mut wd,
+            StreamFamily::SyncX,
+            avg_x,
+            &mut self.enc_buf,
+            &mut self.mean_buf,
+            &mut self.hat_buf,
+        )?;
+        // Drift against the installed average, from the leader's
+        // post-roundtrip reconstructions (see the module docs).
+        let drift_sq = mean_sq_dist(xs, avg_x);
+        if let (Some(_), Some(avg_acc)) = (accs, avg_acc) {
+            bytes += family_round(
+                &mut wd,
+                StreamFamily::SyncAcc,
+                avg_acc,
+                &mut self.enc_buf,
+                &mut self.mean_buf,
+                &mut self.hat_buf,
+            )?;
+        }
+        wd.install = Some(InstallStash { payload: self.enc_buf.clone(), remaining: n });
+        drop(wd);
+        Ok(CommReport {
+            bytes,
+            time_s: self.net.bytes_time(n, bytes),
+            rounds: 1,
+            drift_sq,
+            straggler_s: self.net.straggler_spread_s(n, bytes / (2 * n as u64)),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// run_worker — the worker process body.
+// ---------------------------------------------------------------------------
+
+/// The worker-process shim state: mirrored delta bases and the codec with
+/// its per-stream use counters — exactly the sequence of encodes the
+/// in-process codec performs for this worker's streams.
+struct WorkerShim {
+    codec: PayloadCodec,
+    n: usize,
+    w: usize,
+    d: usize,
+    base_x: Vec<f32>,
+    base_acc: Vec<f32>,
+    /// Raw-collect flag of the `CollectState` in flight (the matching
+    /// `State` reply ships raw f32 when set).
+    collect_raw: bool,
+    /// Step of the command in flight (stamped on reply frames).
+    step: u64,
+    scratch: Vec<f32>,
+}
+
+impl WorkerShim {
+    fn frame_to_cmd(&mut self, f: &Frame, exit_at: Option<u64>) -> Result<Cmd> {
+        let d = self.d;
+        self.step = f.step;
+        Ok(match f.kind {
+            FrameKind::SyncStep => {
+                if exit_at == Some(f.step) {
+                    std::process::exit(3);
+                }
+                let x = match f.codec {
+                    wire::CODEC_BF16 => {
+                        let mut v = vec![0.0f32; d];
+                        PayloadCodec::Bf16.decode_vec(&f.payload, &mut v)?;
+                        v
+                    }
+                    _ => get_f32s(&f.payload, d)?,
+                };
+                Cmd::SyncStep { t: f.step, x: Arc::new(x), scratch: Vec::new() }
+            }
+            FrameKind::LocalStep => {
+                if exit_at == Some(f.step) {
+                    std::process::exit(3);
+                }
+                if f.payload.len() != 4 {
+                    return Err(Error::Protocol("LocalStep frame malformed".into()));
+                }
+                let lr = f32::from_le_bytes(f.payload[..4].try_into().expect("sized"));
+                Cmd::LocalStep { t: f.step, lr }
+            }
+            FrameKind::CollectState => {
+                self.collect_raw = f.flags & FLAG_RAW != 0;
+                Cmd::CollectState { sx: Vec::new(), sa: Vec::new(), raw: self.collect_raw }
+            }
+            FrameKind::InstallState => {
+                let (x, acc) = if self.codec.is_f32() {
+                    split_raw_state(&f.payload, d)?
+                } else {
+                    // Encoded down-leg deltas: reconstruct against the
+                    // mirrored bases, then advance them — the same values
+                    // the leader installed in its own avg buffers.
+                    let enc_len = self.codec.enc_len(d);
+                    let (ex, ea) = split_enc_state(&f.payload, enc_len)?;
+                    self.scratch.resize(d, 0.0);
+                    self.codec.decode_vec(ex, &mut self.scratch)?;
+                    let mut x = vec![0.0f32; d];
+                    kernels::delta_decode(&self.base_x, &self.scratch, &mut x);
+                    self.base_x.copy_from_slice(&x);
+                    let acc = match ea {
+                        Some(ea) => {
+                            self.codec.decode_vec(ea, &mut self.scratch)?;
+                            let mut a = vec![0.0f32; d];
+                            kernels::delta_decode_clamped(&self.base_acc, &self.scratch, &mut a);
+                            self.base_acc.copy_from_slice(&a);
+                            Some(a)
+                        }
+                        None => None,
+                    };
+                    (x, acc)
+                };
+                Cmd::InstallState { x: Arc::new(x), acc: acc.map(Arc::new) }
+            }
+            FrameKind::Eval => {
+                if f.payload.is_empty() {
+                    return Err(Error::Protocol("Eval frame malformed".into()));
+                }
+                let x = match f.payload[0] {
+                    0 => None,
+                    _ => Some(Arc::new(get_f32s(&f.payload[1..], d)?)),
+                };
+                Cmd::Eval { x }
+            }
+            FrameKind::Stop => Cmd::Stop,
+            other => {
+                return Err(Error::Protocol(format!(
+                    "unexpected {other:?} frame from the leader"
+                )))
+            }
+        })
+    }
+
+    fn reply_to_frame(&mut self, reply: Reply) -> Frame {
+        let worker = self.w as u32;
+        let step = self.step;
+        match reply {
+            Reply::Ready { .. } => Frame::control(FrameKind::Ready, worker, step),
+            Reply::Crashed { step: s, .. } => Frame::control(FrameKind::Crashed, worker, s),
+            Reply::Err { msg, .. } => Frame {
+                kind: FrameKind::ErrMsg,
+                codec: CODEC_RAW,
+                flags: 0,
+                worker,
+                step,
+                payload: msg.into_bytes(),
+            },
+            Reply::Grad { loss, grad, .. } => {
+                let mut payload = Vec::with_capacity(4 + self.codec.enc_len(grad.len()));
+                payload.extend_from_slice(&loss.to_le_bytes());
+                match &mut self.codec {
+                    PayloadCodec::F32 => put_f32s(&mut payload, &grad),
+                    codec => codec.encode_vec(grad_stream(self.w), &grad, &mut payload),
+                }
+                Frame {
+                    kind: FrameKind::Grad,
+                    codec: self.codec.tag(),
+                    flags: 0,
+                    worker,
+                    step,
+                    payload,
+                }
+            }
+            Reply::StepDone { loss, update_sq, .. } => {
+                let mut payload = Vec::with_capacity(12);
+                payload.extend_from_slice(&loss.to_le_bytes());
+                payload.extend_from_slice(&update_sq.to_le_bytes());
+                Frame {
+                    kind: FrameKind::StepDone,
+                    codec: CODEC_RAW,
+                    flags: 0,
+                    worker,
+                    step,
+                    payload,
+                }
+            }
+            Reply::State { x, acc, .. } => {
+                let mut payload = Vec::new();
+                let (tag, flags) = if self.collect_raw || self.codec.is_f32() {
+                    put_f32s(&mut payload, &x);
+                    if let Some(a) = &acc {
+                        put_f32s(&mut payload, a);
+                    }
+                    (CODEC_RAW, if self.collect_raw { FLAG_RAW } else { 0 })
+                } else {
+                    // Sync-round collect: ship encoded deltas against the
+                    // mirrored bases, burning this worker's up-stream RNG
+                    // uses exactly as the in-process codec does.
+                    self.scratch.resize(self.d, 0.0);
+                    kernels::delta_encode(&x, &self.base_x, &mut self.scratch);
+                    let stream = up_stream(self.n, StreamFamily::SyncX, self.w);
+                    let scratch = std::mem::take(&mut self.scratch);
+                    self.codec.encode_vec(stream, &scratch, &mut payload);
+                    self.scratch = scratch;
+                    if let Some(a) = &acc {
+                        kernels::delta_encode(a, &self.base_acc, &mut self.scratch);
+                        let stream = up_stream(self.n, StreamFamily::SyncAcc, self.w);
+                        let scratch = std::mem::take(&mut self.scratch);
+                        self.codec.encode_vec(stream, &scratch, &mut payload);
+                        self.scratch = scratch;
+                    }
+                    (self.codec.tag(), 0)
+                };
+                Frame { kind: FrameKind::State, codec: tag, flags, worker, step, payload }
+            }
+            Reply::Eval { metrics, .. } => {
+                let mut payload = Vec::with_capacity(17);
+                payload.extend_from_slice(&metrics.loss.to_le_bytes());
+                payload.push(metrics.ppl.is_some() as u8);
+                payload.extend_from_slice(&metrics.ppl.unwrap_or(0.0).to_le_bytes());
+                Frame {
+                    kind: FrameKind::EvalDone,
+                    codec: CODEC_RAW,
+                    flags: 0,
+                    worker,
+                    step,
+                    payload,
+                }
+            }
+        }
+    }
+}
+
+/// Resolve the leader address a worker process should dial: the port
+/// file (polled — the leader publishes its port-0 bind there) wins, then
+/// `--connect`, then `[net] connect`.
+pub fn resolve_connect_addr(
+    cfg: &ExperimentConfig,
+    connect_flag: &str,
+    port_file: Option<&str>,
+) -> Result<String> {
+    let timeout = Duration::from_secs_f64(cfg.net.connect_timeout_s);
+    if let Some(pf) = port_file {
+        return read_port_file(pf, timeout);
+    }
+    let addr = if connect_flag.is_empty() { cfg.net.connect.as_str() } else { connect_flag };
+    if addr.is_empty() {
+        return Err(Error::Config(
+            "net.connect: no leader address (set [net] connect, --connect or --port-file)"
+                .into(),
+        ));
+    }
+    Ok(addr.to_string())
+}
+
+fn connect_with_retry(cfg: &ExperimentConfig, kind: SocketKind, addr: &str) -> Result<NetStream> {
+    let retries = cfg.net.connect_retries;
+    let backoff = Duration::from_secs_f64(cfg.net.retry_backoff_s.max(0.0));
+    let mut attempt = 0u32;
+    loop {
+        match NetStream::connect(kind, addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                attempt += 1;
+                if attempt > retries {
+                    return Err(Error::Config(format!(
+                        "net.connect: could not reach the leader at {addr:?} after \
+                         {attempt} attempts (net.connect_retries = {retries}, \
+                         net.retry_backoff_s = {}): {e}",
+                        cfg.net.retry_backoff_s
+                    )));
+                }
+                std::thread::sleep(backoff * attempt);
+            }
+        }
+    }
+}
+
+/// The `--role worker` process body: connect to the leader (retrying per
+/// the `[net]` budget), handshake, spawn the unchanged [`worker_loop`]
+/// cell, and shim frames ⇄ commands until `Stop`.
+///
+/// The cell, backends, kernels and codec draws are byte-for-byte the
+/// in-process ones — the only new code on this path is (de)framing.
+pub fn run_worker(
+    cfg: &ExperimentConfig,
+    worker: usize,
+    connect_flag: &str,
+    port_file: Option<&str>,
+) -> Result<()> {
+    crate::util::simd::set_mode(crate::util::simd::SimdMode::from_config(&cfg.exec)?);
+    let kind = SocketKind::from_transport(&cfg.comm.transport).ok_or_else(|| {
+        Error::Config(format!(
+            "comm.transport must be \"tcp\" or \"uds\" for --role worker, got {:?}",
+            cfg.comm.transport
+        ))
+    })?;
+    let addr = resolve_connect_addr(cfg, connect_flag, port_file)?;
+    let mut stream = connect_with_retry(cfg, kind, &addr)?;
+    stream.set_nodelay(cfg.net.nodelay);
+
+    // Handshake.
+    let fp = wire::config_fingerprint(cfg);
+    Frame {
+        kind: FrameKind::Hello,
+        codec: CODEC_RAW,
+        flags: 0,
+        worker: worker as u32,
+        step: PROTOCOL_VERSION as u64,
+        payload: fp.to_le_bytes().to_vec(),
+    }
+    .write_to(&mut stream)?;
+    stream.set_read_timeout(Some(Duration::from_secs_f64(cfg.net.connect_timeout_s)));
+    let ack = match Frame::read_from(&mut stream)? {
+        Some(f) if f.kind == FrameKind::HelloAck => decode_hello_ack(&f.payload)?,
+        Some(f) if f.kind == FrameKind::ErrMsg => {
+            return Err(Error::Config(format!(
+                "handshake rejected: {}",
+                String::from_utf8_lossy(&f.payload)
+            )))
+        }
+        Some(f) => {
+            return Err(Error::Protocol(format!(
+                "expected HelloAck, got {:?}",
+                f.kind
+            )))
+        }
+        None => return Err(Error::Protocol("leader closed the connection during handshake".into())),
+    };
+    stream.set_read_timeout(None);
+    let d = ack.init.len();
+
+    // The worker cell — the exact in-process body on a thread.
+    let spec = WorkerSpec {
+        worker,
+        algorithm: cfg.optim.algorithm,
+        epsilon: cfg.optim.epsilon,
+        b0: cfg.optim.b0,
+        init: Arc::new(ack.init),
+        allow_fused: ack.allow_fused,
+        collect_update_sq: ack.collect_update_sq,
+        bf16_state: ack.bf16_state,
+        crash_step: ack.crash_step,
+    };
+    let factory = make_factory(cfg)?;
+    let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<Cmd>();
+    let (reply_tx, reply_rx) = std::sync::mpsc::channel::<Reply>();
+    let cell = std::thread::spawn(move || worker_loop(spec, factory, cmd_rx, reply_tx));
+
+    let exit_at: Option<u64> =
+        std::env::var(EXIT_AT_STEP_ENV).ok().and_then(|v| v.parse().ok());
+    let mut shim = WorkerShim {
+        codec: WireState::codec_for(cfg),
+        n: ack.n,
+        w: worker,
+        d,
+        base_x: vec![0.0; d],
+        base_acc: vec![0.0; d],
+        collect_raw: false,
+        step: 0,
+        scratch: Vec::new(),
+    };
+
+    // Forward the cell's start-up Ready (or build-failure Err).
+    let first = reply_rx
+        .recv()
+        .map_err(|_| Error::Protocol("worker cell exited before Ready".into()))?;
+    let fatal = matches!(first, Reply::Err { .. });
+    shim.reply_to_frame(first).write_to(&mut stream)?;
+    if fatal {
+        return Err(Error::Protocol("worker cell failed to start".into()));
+    }
+
+    let run = shim_loop(&mut stream, &mut shim, &cmd_tx, &reply_rx, exit_at);
+    drop(cmd_tx);
+    let _ = cell.join();
+    run
+}
+
+fn shim_loop(
+    stream: &mut NetStream,
+    shim: &mut WorkerShim,
+    cmd_tx: &Sender<Cmd>,
+    reply_rx: &Receiver<Reply>,
+    exit_at: Option<u64>,
+) -> Result<()> {
+    loop {
+        let frame = match Frame::read_from(stream)? {
+            Some(f) => f,
+            None => {
+                return Err(Error::Protocol(
+                    "leader closed the connection without Stop".into(),
+                ))
+            }
+        };
+        let is_stop = frame.kind == FrameKind::Stop;
+        let cmd = shim.frame_to_cmd(&frame, exit_at)?;
+        if cmd_tx.send(cmd).is_err() {
+            return Err(Error::Protocol("worker cell terminated unexpectedly".into()));
+        }
+        if is_stop {
+            return Ok(());
+        }
+        let reply = reply_rx
+            .recv()
+            .map_err(|_| Error::Protocol("worker cell terminated unexpectedly".into()))?;
+        let fatal = matches!(reply, Reply::Err { .. });
+        shim.reply_to_frame(reply).write_to(stream)?;
+        if fatal {
+            return Err(Error::Protocol("worker cell failed".into()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_ack_roundtrip() {
+        let spec = WorkerSpec {
+            worker: 2,
+            algorithm: crate::config::Algorithm::LocalAdaAlter,
+            epsilon: 1.0,
+            b0: 1.0,
+            init: Arc::new(vec![0.5, -1.25, 3.0]),
+            allow_fused: true,
+            collect_update_sq: false,
+            bf16_state: true,
+            crash_step: Some(7),
+        };
+        let ack = decode_hello_ack(&encode_hello_ack(4, &spec)).unwrap();
+        assert_eq!(ack.n, 4);
+        assert!(ack.allow_fused);
+        assert!(!ack.collect_update_sq);
+        assert!(ack.bf16_state);
+        assert_eq!(ack.crash_step, Some(7));
+        assert_eq!(ack.init, vec![0.5, -1.25, 3.0]);
+        // No crash step encodes as 0.
+        let spec2 = WorkerSpec { crash_step: None, ..spec };
+        assert_eq!(decode_hello_ack(&encode_hello_ack(4, &spec2)).unwrap().crash_step, None);
+        // Truncated payloads are clean errors.
+        assert!(decode_hello_ack(&[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn state_payload_splits() {
+        let d = 3;
+        let mut p = Vec::new();
+        put_f32s(&mut p, &[1.0, 2.0, 3.0]);
+        let (x, acc) = split_raw_state(&p, d).unwrap();
+        assert_eq!(x, vec![1.0, 2.0, 3.0]);
+        assert!(acc.is_none());
+        put_f32s(&mut p, &[4.0, 5.0, 6.0]);
+        let (_, acc) = split_raw_state(&p, d).unwrap();
+        assert_eq!(acc.unwrap(), vec![4.0, 5.0, 6.0]);
+        assert!(split_raw_state(&p[..5], d).is_err());
+        let enc = vec![0u8; 10];
+        assert!(split_enc_state(&enc, 10).unwrap().1.is_none());
+        let enc2 = vec![0u8; 20];
+        assert!(split_enc_state(&enc2, 10).unwrap().1.is_some());
+        assert!(split_enc_state(&enc2[..15], 10).is_err());
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let c = NetCounters::new();
+        c.add_accounted(10);
+        c.add_total(38);
+        c.add_accounted(5);
+        assert_eq!(c.accounted(), 15);
+        assert_eq!(c.total(), 38);
+    }
+
+    #[test]
+    fn socket_kind_parses_transports() {
+        assert_eq!(SocketKind::from_transport("tcp"), Some(SocketKind::Tcp));
+        assert_eq!(SocketKind::from_transport("uds"), Some(SocketKind::Uds));
+        assert_eq!(SocketKind::from_transport("channel"), None);
+    }
+
+    #[test]
+    fn port_file_roundtrip_and_timeout() {
+        let dir = std::env::temp_dir().join(format!("adaalter_portfile_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("port").to_string_lossy().into_owned();
+        write_port_file(&path, "127.0.0.1:4321").unwrap();
+        assert_eq!(read_port_file(&path, Duration::from_secs(1)).unwrap(), "127.0.0.1:4321");
+        let missing = dir.join("absent").to_string_lossy().into_owned();
+        let err = read_port_file(&missing, Duration::from_millis(30)).unwrap_err();
+        assert!(err.to_string().contains("net.connect"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

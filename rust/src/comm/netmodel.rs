@@ -114,7 +114,7 @@ impl NetModel {
     /// Modeled spread between the first and the last worker completing the
     /// push phase of a round whose per-worker payload is `bytes` — the
     /// straggler signal [`crate::coordinator::sync::SyncObservation`]
-    /// carries to adaptive sync policies (DESIGN.md §4).
+    /// carries to adaptive sync policies (DESIGN.md §5).
     ///
     /// Under PS incast the n concurrent pushes serialise on the server
     /// link: the first finishes after `B/β_server`, the last after

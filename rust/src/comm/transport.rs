@@ -13,7 +13,7 @@
 //! worker either owns a dedicated channel ([`ChannelTransport::from_parts`])
 //! or shares a host thread's channel with siblings, in which case the
 //! transport tags each command with the worker id
-//! ([`ChannelTransport::from_hosts`]; the execution engine of DESIGN.md §6
+//! ([`ChannelTransport::from_hosts`]; the execution engine of DESIGN.md §7
 //! multiplexes several workers onto one host thread this way).
 
 use std::sync::mpsc::{Receiver, Sender};
@@ -88,7 +88,7 @@ impl<C, R> ChannelTransport<C, R> {
     }
 
     /// Send `make(w)` to each worker in `targets` — the fault-aware subset
-    /// broadcast (crashed workers are simply never addressed; DESIGN.md §5).
+    /// broadcast (crashed workers are simply never addressed; DESIGN.md §6).
     pub fn broadcast_to(&self, targets: &[usize], mut make: impl FnMut(usize) -> C) -> Result<()> {
         for &w in targets {
             self.send_to(w, make(w))?;

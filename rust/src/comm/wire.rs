@@ -1,0 +1,780 @@
+//! Binary wire format for the networked transport (DESIGN.md §4).
+//!
+//! Every message between a leader and a worker process is one
+//! length-prefixed **frame**:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        0x41444157 ("ADAW", little-endian on the wire)
+//!      4     1  version      protocol version (1)
+//!      5     1  kind         FrameKind discriminant
+//!      6     1  codec        payload-codec tag (CODEC_RAW / _BF16 / _QSGD)
+//!      7     1  flags        bit 0 = raw/observer payload (unbilled)
+//!      8     4  worker       sender/addressee worker id
+//!     12     8  step         iteration the frame belongs to
+//!     20     4  payload_len  bytes that follow the header
+//!     24     4  crc32        IEEE CRC-32 of the payload bytes
+//!     28     …  payload
+//! ```
+//!
+//! Payloads reuse the **existing codec bytes verbatim** as the wire
+//! encoding: dense f32 little-endian, bf16 (`util::half`, 2 bytes/elem),
+//! or QSGD (`comm::compress`: f32 norm + bit-packed signed levels) — so
+//! the bytes a frame carries are exactly the bytes the in-process
+//! compressed collective bills. Decoding is strict: bad magic/version,
+//! unknown kinds, truncated or oversized frames and CRC mismatches all
+//! come back as clean [`Error::Protocol`]s, never panics (property- and
+//! fuzz-tested below).
+
+use std::io::{Read, Write};
+
+use crate::config::ExperimentConfig;
+use crate::error::{Error, Result};
+use crate::util::half;
+use crate::util::rng::Rng;
+
+use super::compress::{QsgdEncoded, QsgdQuantizer};
+
+/// Frame magic ("ADAW" as a little-endian u32).
+pub const MAGIC: u32 = 0x5741_4441;
+/// Wire-protocol version; bumped on any incompatible frame change.
+pub const PROTOCOL_VERSION: u8 = 1;
+/// Frame header size in bytes.
+pub const HEADER_LEN: usize = 28;
+/// Hard cap on a single frame payload (64 MiB) — oversized lengths are
+/// rejected before any allocation.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// Payload-codec tag: dense little-endian f32.
+pub const CODEC_RAW: u8 = 0;
+/// Payload-codec tag: bf16 (2 bytes/element).
+pub const CODEC_BF16: u8 = 1;
+/// Payload-codec tag: QSGD (f32 norm + bit-packed levels).
+pub const CODEC_QSGD: u8 = 2;
+
+/// Frame flag bit 0: raw/observer payload — exact f32, excluded from the
+/// billed traffic accounting (checkpoint/eval/final-state collects).
+pub const FLAG_RAW: u8 = 1;
+
+/// The frame vocabulary — every `Cmd`/`Reply` of the lockstep protocol
+/// plus the connection handshake.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Worker → leader: handshake (protocol version, id, config hash).
+    Hello = 1,
+    /// Leader → worker: handshake accept (cluster shape + worker spec).
+    HelloAck = 2,
+    /// Leader → worker: `Cmd::SyncStep` (payload: x, codec-encoded).
+    SyncStep = 3,
+    /// Leader → worker: `Cmd::LocalStep` (payload: f32 lr).
+    LocalStep = 4,
+    /// Leader → worker: `Cmd::CollectState` (flags bit 0 = raw collect).
+    CollectState = 5,
+    /// Leader → worker: `Cmd::InstallState` (payload: x [+ acc] sections).
+    InstallState = 6,
+    /// Leader → worker: `Cmd::Eval` (payload: optional raw f32 x).
+    Eval = 7,
+    /// Leader → worker: `Cmd::Stop` (empty payload).
+    Stop = 8,
+    /// Worker → leader: `Reply::Grad` (payload: f32 loss + encoded grad).
+    Grad = 9,
+    /// Worker → leader: `Reply::StepDone` (payload: f32 loss + f64 ‖Δx‖²).
+    StepDone = 10,
+    /// Worker → leader: `Reply::State` (payload: x [+ acc] sections).
+    State = 11,
+    /// Worker → leader: `Reply::Eval` (payload: eval metrics).
+    EvalDone = 12,
+    /// Worker → leader: `Reply::Ready` (empty payload).
+    Ready = 13,
+    /// Worker → leader: `Reply::Crashed` tombstone (step = crash step).
+    Crashed = 14,
+    /// Either direction: a fatal error message (payload: UTF-8).
+    ErrMsg = 15,
+}
+
+impl FrameKind {
+    /// Decode a kind discriminant; unknown values are a clean error.
+    pub fn from_u8(v: u8) -> Result<FrameKind> {
+        use FrameKind::*;
+        Ok(match v {
+            1 => Hello,
+            2 => HelloAck,
+            3 => SyncStep,
+            4 => LocalStep,
+            5 => CollectState,
+            6 => InstallState,
+            7 => Eval,
+            8 => Stop,
+            9 => Grad,
+            10 => StepDone,
+            11 => State,
+            12 => EvalDone,
+            13 => Ready,
+            14 => Crashed,
+            15 => ErrMsg,
+            other => {
+                return Err(Error::Protocol(format!("unknown frame kind {other}")))
+            }
+        })
+    }
+
+    /// All kinds — the property tests sweep every one.
+    pub const ALL: [FrameKind; 15] = [
+        FrameKind::Hello,
+        FrameKind::HelloAck,
+        FrameKind::SyncStep,
+        FrameKind::LocalStep,
+        FrameKind::CollectState,
+        FrameKind::InstallState,
+        FrameKind::Eval,
+        FrameKind::Stop,
+        FrameKind::Grad,
+        FrameKind::StepDone,
+        FrameKind::State,
+        FrameKind::EvalDone,
+        FrameKind::Ready,
+        FrameKind::Crashed,
+        FrameKind::ErrMsg,
+    ];
+}
+
+/// One wire frame (header fields + owned payload bytes).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    /// What the frame carries.
+    pub kind: FrameKind,
+    /// Payload-codec tag ([`CODEC_RAW`] / [`CODEC_BF16`] / [`CODEC_QSGD`]).
+    pub codec: u8,
+    /// Frame flags ([`FLAG_RAW`]).
+    pub flags: u8,
+    /// Sender (worker→leader) or addressee (leader→worker) worker id.
+    pub worker: u32,
+    /// Iteration the frame belongs to (0 where not meaningful).
+    pub step: u64,
+    /// Codec-encoded payload bytes.
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A payload-less frame of `kind` for `worker`.
+    pub fn control(kind: FrameKind, worker: u32, step: u64) -> Frame {
+        Frame { kind, codec: CODEC_RAW, flags: 0, worker, step, payload: Vec::new() }
+    }
+
+    /// Total encoded size (header + payload).
+    pub fn wire_len(&self) -> usize {
+        HEADER_LEN + self.payload.len()
+    }
+
+    /// Serialize to bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.push(PROTOCOL_VERSION);
+        out.push(self.kind as u8);
+        out.push(self.codec);
+        out.push(self.flags);
+        out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&self.payload).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Decode one frame from the front of `buf`. Returns the frame and the
+    /// number of bytes consumed. All malformed inputs are clean errors.
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize)> {
+        if buf.len() < HEADER_LEN {
+            return Err(Error::Protocol(format!(
+                "truncated frame header ({} of {HEADER_LEN} bytes)",
+                buf.len()
+            )));
+        }
+        let header: [u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().expect("sized");
+        let (kind, codec, flags, worker, step, len, crc) = parse_header(&header)?;
+        let total = HEADER_LEN + len as usize;
+        if buf.len() < total {
+            return Err(Error::Protocol(format!(
+                "truncated frame payload ({} of {len} bytes)",
+                buf.len() - HEADER_LEN
+            )));
+        }
+        let payload = buf[HEADER_LEN..total].to_vec();
+        check_crc(&payload, crc)?;
+        Ok((Frame { kind, codec, flags, worker, step, payload }, total))
+    }
+
+    /// Write the frame to a stream.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&self.encode())?;
+        Ok(())
+    }
+
+    /// Read one frame from a stream. `Ok(None)` on clean EOF at a frame
+    /// boundary; mid-frame EOF and malformed headers are errors.
+    pub fn read_from(r: &mut impl Read) -> Result<Option<Frame>> {
+        let mut header = [0u8; HEADER_LEN];
+        let mut got = 0;
+        while got < HEADER_LEN {
+            let n = r.read(&mut header[got..])?;
+            if n == 0 {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(Error::Protocol(format!(
+                    "connection closed mid-header ({got} of {HEADER_LEN} bytes)"
+                )));
+            }
+            got += n;
+        }
+        let (kind, codec, flags, worker, step, len, crc) = parse_header(&header)?;
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload).map_err(|e| {
+            Error::Protocol(format!("connection closed mid-payload ({len} bytes expected): {e}"))
+        })?;
+        check_crc(&payload, crc)?;
+        Ok(Some(Frame { kind, codec, flags, worker, step, payload }))
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(FrameKind, u8, u8, u32, u64, u32, u32)> {
+    let magic = u32::from_le_bytes(h[0..4].try_into().expect("sized"));
+    if magic != MAGIC {
+        return Err(Error::Protocol(format!("bad frame magic {magic:#010x}")));
+    }
+    if h[4] != PROTOCOL_VERSION {
+        return Err(Error::Protocol(format!(
+            "wire protocol version mismatch: peer speaks v{}, this build v{PROTOCOL_VERSION}",
+            h[4]
+        )));
+    }
+    let kind = FrameKind::from_u8(h[5])?;
+    let len = u32::from_le_bytes(h[20..24].try_into().expect("sized"));
+    if len > MAX_PAYLOAD {
+        return Err(Error::Protocol(format!(
+            "frame payload length {len} exceeds the {MAX_PAYLOAD}-byte cap"
+        )));
+    }
+    let worker = u32::from_le_bytes(h[8..12].try_into().expect("sized"));
+    let step = u64::from_le_bytes(h[12..20].try_into().expect("sized"));
+    let crc = u32::from_le_bytes(h[24..28].try_into().expect("sized"));
+    Ok((kind, h[6], h[7], worker, step, len, crc))
+}
+
+fn check_crc(payload: &[u8], expect: u32) -> Result<()> {
+    let got = crc32(payload);
+    if got != expect {
+        return Err(Error::Protocol(format!(
+            "frame CRC mismatch (computed {got:#010x}, header says {expect:#010x})"
+        )));
+    }
+    Ok(())
+}
+
+/// IEEE CRC-32 lookup table (polynomial 0xEDB88320), built at compile time
+/// — the image carries no crc crate.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC-32 of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// The per-encode RNG of the QSGD wire codec: derived fresh from
+/// `(seed, stream, use-index)` so a worker process and the leader derive
+/// **identical** stochastic-rounding draws for any stream without sharing
+/// RNG state — the keying discipline of DESIGN.md §2, extended to codec
+/// streams. The in-process compressed collective uses the same derivation,
+/// which is exactly what makes the cross-process runs bitwise-identical.
+pub fn qsgd_stream_rng(seed: u64, stream: u64, use_idx: u64) -> Rng {
+    Rng::derive(seed, &[0xC0DE, stream, use_idx])
+}
+
+/// A payload codec: turns f32 vectors into the wire bytes of one of the
+/// existing codecs and back. Stateful only for QSGD (per-stream use
+/// counters + scratch).
+pub enum PayloadCodec {
+    /// Dense little-endian f32 (4 bytes/element).
+    F32,
+    /// bf16 (2 bytes/element, round-to-nearest-even).
+    Bf16,
+    /// QSGD stochastic quantization (f32 norm + bit-packed levels).
+    Qsgd {
+        /// The quantizer (levels s).
+        q: QsgdQuantizer,
+        /// Experiment seed the per-encode RNGs derive from.
+        seed: u64,
+        /// Per-stream encode counters (the RNG use index).
+        uses: Vec<u64>,
+        /// Encode scratch.
+        enc: QsgdEncoded,
+    },
+}
+
+impl PayloadCodec {
+    /// QSGD codec with `s` levels keyed by the experiment seed.
+    pub fn qsgd(s: u8, seed: u64) -> PayloadCodec {
+        PayloadCodec::Qsgd {
+            q: QsgdQuantizer::new(s),
+            seed,
+            uses: Vec::new(),
+            enc: QsgdEncoded { norm: 0.0, levels: Vec::new(), s },
+        }
+    }
+
+    /// The frame codec tag for this payload codec.
+    pub fn tag(&self) -> u8 {
+        match self {
+            PayloadCodec::F32 => CODEC_RAW,
+            PayloadCodec::Bf16 => CODEC_BF16,
+            PayloadCodec::Qsgd { .. } => CODEC_QSGD,
+        }
+    }
+
+    /// Is this the identity (dense f32) codec?
+    pub fn is_f32(&self) -> bool {
+        matches!(self, PayloadCodec::F32)
+    }
+
+    /// Exact encoded size of a d-element vector — deterministic, so both
+    /// ends can bill traffic without materialising the bytes.
+    pub fn enc_len(&self, d: usize) -> usize {
+        match self {
+            PayloadCodec::F32 => 4 * d,
+            PayloadCodec::Bf16 => half::wire_bytes(d) as usize,
+            PayloadCodec::Qsgd { q, .. } => q.wire_bytes(d) as usize,
+        }
+    }
+
+    /// Encode `v` on codec stream `stream`, appending the wire bytes to
+    /// `out`. QSGD burns one `(stream, use)` RNG per call.
+    pub fn encode_vec(&mut self, stream: usize, v: &[f32], out: &mut Vec<u8>) {
+        match self {
+            PayloadCodec::F32 => {
+                out.reserve(4 * v.len());
+                for &x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            PayloadCodec::Bf16 => {
+                out.reserve(2 * v.len());
+                for &x in v {
+                    out.extend_from_slice(&half::bf16_from_f32(x).to_le_bytes());
+                }
+            }
+            PayloadCodec::Qsgd { q, seed, uses, enc } => {
+                if uses.len() <= stream {
+                    uses.resize(stream + 1, 0);
+                }
+                let mut rng = qsgd_stream_rng(*seed, stream as u64, uses[stream]);
+                uses[stream] += 1;
+                q.encode_to(v, &mut rng, enc);
+                out.extend_from_slice(&enc.norm.to_le_bytes());
+                pack_levels(&enc.levels, enc.s, out);
+            }
+        }
+    }
+
+    /// Decode `bytes` (an [`encode_vec`](Self::encode_vec) payload of a
+    /// d = `out.len()` vector) into `out`. Length mismatches are clean
+    /// errors. Decoding is deterministic — no RNG — so either end can
+    /// decode any stream.
+    pub fn decode_vec(&mut self, bytes: &[u8], out: &mut [f32]) -> Result<()> {
+        let d = out.len();
+        let want = self.enc_len(d);
+        if bytes.len() != want {
+            return Err(Error::Protocol(format!(
+                "payload length {} != {want} expected for a {d}-element {} vector",
+                bytes.len(),
+                match self.tag() {
+                    CODEC_RAW => "f32",
+                    CODEC_BF16 => "bf16",
+                    _ => "qsgd",
+                }
+            )));
+        }
+        match self {
+            PayloadCodec::F32 => {
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = f32::from_le_bytes(bytes[4 * i..4 * i + 4].try_into().expect("sized"));
+                }
+            }
+            PayloadCodec::Bf16 => {
+                for (i, o) in out.iter_mut().enumerate() {
+                    let bits =
+                        u16::from_le_bytes(bytes[2 * i..2 * i + 2].try_into().expect("sized"));
+                    *o = half::f32_from_bf16(bits);
+                }
+            }
+            PayloadCodec::Qsgd { q, enc, .. } => {
+                enc.norm = f32::from_le_bytes(bytes[0..4].try_into().expect("sized"));
+                unpack_levels(&bytes[4..], enc.s, d, &mut enc.levels)?;
+                q.decode(enc, out);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Bits per packed QSGD level for `s` quantization levels (2s+1 symbols).
+fn level_bits(s: u8) -> u32 {
+    64 - (2 * s as u64).leading_zeros()
+}
+
+/// Bit-pack signed levels in `[-s, s]` as unsigned `level + s`, LSB-first.
+fn pack_levels(levels: &[i8], s: u8, out: &mut Vec<u8>) {
+    let bits = level_bits(s);
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    for &l in levels {
+        let u = (l as i16 + s as i16) as u64;
+        acc |= u << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xFF) as u8);
+    }
+}
+
+/// Inverse of [`pack_levels`]; out-of-range symbols are clean errors.
+fn unpack_levels(bytes: &[u8], s: u8, d: usize, out: &mut Vec<i8>) -> Result<()> {
+    let bits = level_bits(s);
+    out.clear();
+    out.reserve(d);
+    let mask: u64 = (1u64 << bits) - 1;
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mut it = bytes.iter();
+    for _ in 0..d {
+        while nbits < bits {
+            let b = it.next().ok_or_else(|| {
+                Error::Protocol("qsgd payload too short for its level count".into())
+            })?;
+            acc |= (*b as u64) << nbits;
+            nbits += 8;
+        }
+        let u = acc & mask;
+        acc >>= bits;
+        nbits -= bits;
+        if u > 2 * s as u64 {
+            return Err(Error::Protocol(format!(
+                "qsgd level symbol {u} out of range for s = {s}"
+            )));
+        }
+        out.push((u as i16 - s as i16) as i8);
+    }
+    Ok(())
+}
+
+/// FNV-1a hash of the semantically-relevant config surface — the
+/// handshake's config-hash check. Covers everything that shapes the
+/// training trajectory ([train]/[optim]/[data]/[comm]/[sync]/[faults]/
+/// [precision]); excludes output paths, `[net]` addressing and `[exec]`
+/// (pure wall-clock knobs), so leader and workers may differ in those.
+pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
+    let t = &cfg.train;
+    let o = &cfg.optim;
+    let canon = format!(
+        "train:{preset}|{w}|{h}|{steps}|{spe}|{ee}|{le}|{seed}|{be:?}|{dim}|{ce}|{fused};\
+         optim:{algo}|{eta}|{eps}|{b0}|{wu}|{mom};\
+         data:{zs}|{mk}|{ni}|{eb};\
+         comm:{tr}|{cmp}|{ql}|{tk};\
+         sync:{sp}|{hm}|{gf}|{ge}|{dt}|{tcf};\
+         faults:{sw}|{sf}|{stp}|{sts}|{cw}|{cs}|{q}|{to}|{ds};\
+         precision:{pw}|{ps}",
+        preset = t.preset,
+        w = t.workers,
+        h = t.sync_period,
+        steps = t.steps,
+        spe = t.steps_per_epoch,
+        ee = t.eval_every,
+        le = t.log_every,
+        seed = t.seed,
+        be = t.backend,
+        dim = t.rust_math_dim,
+        ce = t.checkpoint_every,
+        fused = t.fused,
+        algo = o.algorithm,
+        eta = o.eta,
+        eps = o.epsilon,
+        b0 = o.b0,
+        wu = o.warmup_steps,
+        mom = o.momentum,
+        zs = cfg.data.zipf_s,
+        mk = cfg.data.markov,
+        ni = cfg.data.noniid,
+        eb = cfg.data.eval_batches,
+        tr = cfg.comm.transport,
+        cmp = cfg.comm.compression,
+        ql = cfg.comm.qsgd_levels,
+        tk = cfg.comm.topk_keep,
+        sp = cfg.sync.policy,
+        hm = cfg.sync.h_max,
+        gf = cfg.sync.grow_factor,
+        ge = cfg.sync.grow_every,
+        dt = cfg.sync.drift_threshold,
+        tcf = cfg.sync.target_comm_fraction,
+        sw = cfg.faults.slow_workers,
+        sf = cfg.faults.slow_factor,
+        stp = cfg.faults.stall_prob,
+        sts = cfg.faults.stall_s,
+        cw = cfg.faults.crash_worker,
+        cs = cfg.faults.crash_step,
+        q = cfg.faults.quorum,
+        to = cfg.faults.timeout_s,
+        ds = cfg.faults.drop_slowest,
+        pw = cfg.precision.wire,
+        ps = cfg.precision.state,
+    );
+    canon.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x0100_0000_01b3)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self};
+
+    fn arb_frame(g: &mut crate::util::prop::Gen, max_payload: usize) -> Frame {
+        let kind = *g.choose(&FrameKind::ALL);
+        let len = g.usize_in(0..max_payload + 1);
+        let payload: Vec<u8> = (0..len).map(|_| (g.rng().next_u64() & 0xFF) as u8).collect();
+        Frame {
+            kind,
+            codec: *g.choose(&[CODEC_RAW, CODEC_BF16, CODEC_QSGD]),
+            flags: *g.choose(&[0u8, FLAG_RAW]),
+            worker: g.u64_in(0..u32::MAX as u64) as u32,
+            step: g.u64_in(0..u64::MAX - 1),
+            payload,
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_every_kind_and_size() {
+        prop::check("frame encode∘decode identity", 300, |g| {
+            let f = arb_frame(g, 4096);
+            let bytes = f.encode();
+            let (back, used) = Frame::decode(&bytes).map_err(|e| e.to_string())?;
+            prop::assert_that(used == bytes.len(), "consumed length")?;
+            prop::assert_that(back == f, "frame mismatch after roundtrip")
+        });
+    }
+
+    #[test]
+    fn frame_roundtrip_zero_and_max_payload() {
+        for len in [0usize, MAX_PAYLOAD as usize / 1024] {
+            let f = Frame {
+                kind: FrameKind::State,
+                codec: CODEC_QSGD,
+                flags: FLAG_RAW,
+                worker: 7,
+                step: 42,
+                payload: vec![0xAB; len],
+            };
+            let (back, used) = Frame::decode(&f.encode()).unwrap();
+            assert_eq!(used, HEADER_LEN + len);
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn crc_rejects_single_bit_flips() {
+        prop::check("crc catches 1-bit payload flips", 200, |g| {
+            let mut f = arb_frame(g, 512);
+            if f.payload.is_empty() {
+                f.payload.push(0x55);
+            }
+            let mut bytes = f.encode();
+            let bit = g.usize_in(0..f.payload.len() * 8);
+            bytes[HEADER_LEN + bit / 8] ^= 1 << (bit % 8);
+            match Frame::decode(&bytes) {
+                Err(e) => prop::assert_that(
+                    e.to_string().contains("CRC"),
+                    format!("wrong error for flipped bit: {e}"),
+                ),
+                Ok(_) => Err("bit flip went undetected".into()),
+            }
+        });
+    }
+
+    #[test]
+    fn malformed_frames_are_clean_errors() {
+        let good = Frame::control(FrameKind::Ready, 3, 9).encode();
+        // Truncations at every prefix length: error, never panic.
+        for cut in 0..good.len() {
+            assert!(Frame::decode(&good[..cut]).is_err(), "cut {cut}");
+        }
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        let err = Frame::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        // Bad version.
+        let mut bad = good.clone();
+        bad[4] = PROTOCOL_VERSION + 9;
+        let err = Frame::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        // Unknown kind.
+        let mut bad = good.clone();
+        bad[5] = 0xEE;
+        let err = Frame::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("kind"), "{err}");
+        // Oversized payload length: rejected before allocation.
+        let mut bad = good;
+        bad[20..24].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        let err = Frame::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn decoder_never_panics_on_random_bytes() {
+        // Seeded corpus-style fuzz loop: random byte strings, plus mutated
+        // valid frames (the interesting corpus), must never panic.
+        prop::check("decoder total on arbitrary bytes", 500, |g| {
+            let bytes: Vec<u8> = if g.bool() {
+                let n = g.usize_in(0..256);
+                (0..n).map(|_| (g.rng().next_u64() & 0xFF) as u8).collect()
+            } else {
+                let mut b = arb_frame(g, 128).encode();
+                for _ in 0..g.usize_in(1..8) {
+                    let i = g.usize_in(0..b.len());
+                    b[i] = (g.rng().next_u64() & 0xFF) as u8;
+                }
+                b
+            };
+            let _ = Frame::decode(&bytes); // any Result is fine; panics fail
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn payload_codecs_roundtrip() {
+        prop::check("f32/bf16 payload codec identity", 100, |g| {
+            let v = g.vec_normal(1..200, 2.0);
+            for mut codec in [PayloadCodec::F32, PayloadCodec::Bf16] {
+                let mut bytes = Vec::new();
+                codec.encode_vec(0, &v, &mut bytes);
+                prop::assert_that(bytes.len() == codec.enc_len(v.len()), "enc_len")?;
+                let mut out = vec![0.0f32; v.len()];
+                codec.decode_vec(&bytes, &mut out).map_err(|e| e.to_string())?;
+                let want: Vec<f32> = if codec.is_f32() {
+                    v.clone()
+                } else {
+                    v.iter().map(|&x| half::round_f32(x)).collect()
+                };
+                prop::assert_that(
+                    out.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "codec roundtrip not bitwise",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qsgd_codec_matches_quantizer_bitwise() {
+        // The wire bytes must reproduce QsgdQuantizer's encode→decode
+        // exactly, including the (stream, use)-derived stochastic draws.
+        prop::check("qsgd wire == quantizer roundtrip", 60, |g| {
+            let s = *g.choose(&[1u8, 3, 15, 127]);
+            let seed = g.u64_in(0..u64::MAX - 1);
+            let v = g.vec_normal(1..150, 3.0);
+            let stream = g.usize_in(0..17);
+            let mut codec = PayloadCodec::qsgd(s, seed);
+            let mut bytes = Vec::new();
+            codec.encode_vec(stream, &v, &mut bytes);
+            prop::assert_that(bytes.len() == codec.enc_len(v.len()), "enc_len")?;
+            let mut out = vec![0.0f32; v.len()];
+            codec.decode_vec(&bytes, &mut out).map_err(|e| e.to_string())?;
+            // Reference: the quantizer with the same derived RNG (use 0).
+            let q = QsgdQuantizer::new(s);
+            let mut rng = qsgd_stream_rng(seed, stream as u64, 0);
+            let enc = q.encode(&v, &mut rng);
+            let mut want = vec![0.0f32; v.len()];
+            q.decode(&enc, &mut want);
+            prop::assert_that(
+                out.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "qsgd wire roundtrip not bitwise",
+            )?;
+            // A second encode on the same stream uses the next RNG.
+            let mut bytes2 = Vec::new();
+            codec.encode_vec(stream, &v, &mut bytes2);
+            let mut rng1 = qsgd_stream_rng(seed, stream as u64, 1);
+            let enc1 = q.encode(&v, &mut rng1);
+            let mut want1 = vec![0.0f32; v.len()];
+            q.decode(&enc1, &mut want1);
+            let mut out1 = vec![0.0f32; v.len()];
+            PayloadCodec::qsgd(s, seed) // fresh decoder: stateless decode
+                .decode_vec(&bytes2, &mut out1)
+                .map_err(|e| e.to_string())?;
+            prop::assert_that(
+                out1.iter().zip(&want1).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "qsgd use-counter keying diverged",
+            )
+        });
+    }
+
+    #[test]
+    fn qsgd_payload_length_errors_are_clean() {
+        let mut codec = PayloadCodec::qsgd(15, 7);
+        let v = vec![1.0f32; 33];
+        let mut bytes = Vec::new();
+        codec.encode_vec(0, &v, &mut bytes);
+        let mut out = vec![0.0f32; 33];
+        // Wrong length for d.
+        assert!(codec.decode_vec(&bytes[..bytes.len() - 1], &mut out).is_err());
+        // Out-of-range symbol: force every packed bit on.
+        let mut evil = bytes.clone();
+        for b in evil.iter_mut().skip(4) {
+            *b = 0xFF;
+        }
+        let err = codec.decode_vec(&evil, &mut out).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The IEEE check value: CRC32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn fingerprint_tracks_semantic_fields_only() {
+        let a = ExperimentConfig::default();
+        let mut b = ExperimentConfig::default();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        b.out_dir = "elsewhere".into();
+        b.exec.threads = 3;
+        b.net.latency_us = 1.0;
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b), "non-semantic");
+        b.train.seed += 1;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b), "semantic");
+    }
+}

@@ -26,7 +26,7 @@
 //! # The `[sync]` section
 //!
 //! Every preset (and config file) may also select its synchronization
-//! policy (DESIGN.md §4) — *when* local algorithms communicate, with
+//! policy (DESIGN.md §5) — *when* local algorithms communicate, with
 //! `train.sync_period` as the (initial) H:
 //!
 //! ```toml
@@ -49,7 +49,7 @@
 //! # The `[faults]` section
 //!
 //! Every preset (and config file) may also run a deterministic fault
-//! scenario with partial-participation sync rounds (DESIGN.md §5):
+//! scenario with partial-participation sync rounds (DESIGN.md §6):
 //!
 //! ```toml
 //! [train]
@@ -73,7 +73,7 @@
 //! # The `[exec]` section
 //!
 //! Every preset (and config file) may also pick the execution engine's
-//! thread layout (DESIGN.md §6) — a pure wall-clock knob, bitwise-
+//! thread layout (DESIGN.md §7) — a pure wall-clock knob, bitwise-
 //! identical across all values:
 //!
 //! ```toml
@@ -91,7 +91,7 @@
 //! # The `[precision]` section and `exec.simd`
 //!
 //! Every preset (and config file) may also pick the mixed-precision
-//! surface and the SIMD kernel dispatch (DESIGN.md §7):
+//! surface and the SIMD kernel dispatch (DESIGN.md §8):
 //!
 //! ```toml
 //! [exec]
@@ -108,6 +108,30 @@
 //! The `mixed-precision` preset below is the canonical example;
 //! `benches/comm_reduction.rs` compares f32 / bf16 / bf16+delta wire
 //! bytes and `benches/micro_hot_paths.rs` the serial-vs-SIMD kernels.
+//!
+//! # The networked transport (`[net]` sockets)
+//!
+//! `comm.transport = "tcp"` (or `"uds"`) moves the same lockstep protocol
+//! onto real sockets: one leader process, one OS process per worker
+//! (DESIGN.md §4):
+//!
+//! ```toml
+//! [comm]
+//! transport = "tcp"    # or "uds" (Unix-domain socket path)
+//! [net]
+//! listen = "127.0.0.1:0"   # leader bind; ":0" picks a free port, which
+//!                          # --port-file publishes for the workers
+//! connect = ""             # worker side: leader address (or --connect)
+//! connect_timeout_s = 30.0
+//! connect_retries = 10     # linear backoff between dial attempts
+//! retry_backoff_s = 0.05
+//! nodelay = true
+//! ```
+//!
+//! The `tcp-loopback` preset below is the canonical example;
+//! `tests/integration_net.rs` pins multi-process runs bitwise against the
+//! in-process reference and `benches/net_loopback.rs` records the real
+//! frame traffic.
 
 use crate::error::{Error, Result};
 
@@ -333,6 +357,24 @@ state = "bf16"
 "#,
     },
     Preset {
+        name: "tcp-loopback",
+        summary: "Local AdaAlter H=4 over real loopback TCP: leader + 4 worker processes",
+        toml: r#"
+[train]
+workers = 4
+sync_period = 4
+steps = 200
+steps_per_epoch = 50
+backend = "rust_math"
+[optim]
+algorithm = "local_adaalter"
+[comm]
+transport = "tcp"
+[net]
+listen = "127.0.0.1:0"
+"#,
+    },
+    Preset {
         name: "noniid-stress",
         summary: "Fully non-IID shards (D_i disjoint), local AdaAlter H=8",
         toml: r#"
@@ -461,6 +503,19 @@ mod tests {
             let c = load_preset(p.name).unwrap();
             assert!(!c.precision.wire_bf16() && !c.precision.state_bf16(), "{}", p.name);
             assert_eq!(c.exec.simd, "auto", "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn tcp_loopback_preset_selects_the_networked_transport() {
+        let c = load_preset("tcp-loopback").unwrap();
+        assert!(c.comm.networked());
+        assert_eq!(c.comm.transport, "tcp");
+        assert_eq!(c.net.listen, "127.0.0.1:0");
+        assert_eq!(c.net.topology, "ps");
+        // Every other preset stays in-process.
+        for p in PRESETS.iter().filter(|p| p.name != "tcp-loopback") {
+            assert!(!load_preset(p.name).unwrap().comm.networked(), "{}", p.name);
         }
     }
 

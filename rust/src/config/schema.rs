@@ -226,7 +226,7 @@ impl Default for TrainConfig {
     }
 }
 
-/// Data-pipeline parameters (synthetic corpus; DESIGN.md §10).
+/// Data-pipeline parameters (synthetic corpus; DESIGN.md §11).
 #[derive(Clone, Debug)]
 pub struct DataConfig {
     /// Zipf exponent of the unigram distribution.
@@ -265,6 +265,24 @@ pub struct NetConfig {
     /// Data-loading capacity of the host, samples/s (paper §6.4 bottleneck);
     /// 0 disables the dataloader model.
     pub dataloader_samples_per_s: f64,
+    /// Networked transport (DESIGN.md §4), leader side: the address to
+    /// bind — "host:port" for `comm.transport = "tcp"` ("…:0" picks a free
+    /// port, published via `--port-file`), a socket path for "uds".
+    pub listen: String,
+    /// Networked transport, worker side: the leader address to dial
+    /// (same forms as `listen`; `--connect` / `--port-file` override).
+    pub connect: String,
+    /// Budget for a worker reaching the leader (connect retries plus
+    /// port-file polling) and for the leader's accept loop, seconds.
+    pub connect_timeout_s: f64,
+    /// Connection attempts a worker makes before giving up.
+    pub connect_retries: u32,
+    /// Linear backoff between connection attempts, seconds (attempt k
+    /// waits k × this).
+    pub retry_backoff_s: f64,
+    /// Set TCP_NODELAY on connections (no-op for "uds"). The lockstep
+    /// protocol is latency-bound, so this defaults on.
+    pub nodelay: bool,
 }
 
 impl Default for NetConfig {
@@ -275,6 +293,12 @@ impl Default for NetConfig {
             bandwidth_gbps: 1056.0,
             server_bandwidth_gbps: 1056.0,
             dataloader_samples_per_s: 8830.0,
+            listen: String::new(),
+            connect: String::new(),
+            connect_timeout_s: 30.0,
+            connect_retries: 10,
+            retry_backoff_s: 0.05,
+            nodelay: true,
         }
     }
 }
@@ -288,9 +312,14 @@ impl Default for NetConfig {
 /// * `transport = "channel"` is the bare in-process lockstep: identical
 ///   data path, zero modeled cost (for equivalence tests and wire-exact
 ///   compressed accounting).
-/// * `compression = "qsgd" | "topk"` decorates the channel transport with
-///   QSGD stochastic quantization / top-k sparsification with error
-///   feedback; recorded bytes are then the *exact* encoded wire sizes.
+/// * `transport = "tcp" | "uds"` runs the same lockstep protocol over
+///   real sockets between OS processes (DESIGN.md §4) — the leader is
+///   started with `--role leader`, workers with `--role worker`, and the
+///   `[net]` addresses wire them together. Bitwise-identical to the
+///   in-process run; billed bytes are the actual socket payloads.
+/// * `compression = "qsgd" | "topk"` decorates the transport with QSGD
+///   stochastic quantization / top-k sparsification with error feedback;
+///   recorded bytes are then the *exact* encoded wire sizes.
 #[derive(Clone, Debug)]
 pub struct CommConfig {
     /// "simulated" (α–β-charged, default) or "channel" (bare lockstep).
@@ -323,21 +352,33 @@ impl CommConfig {
     /// validation).
     pub fn validate(&self) -> Result<()> {
         match self.transport.as_str() {
-            "simulated" | "channel" => {}
+            "simulated" | "channel" | "tcp" | "uds" => {}
             other => {
                 return Err(Error::Config(format!(
-                    "comm.transport must be \"simulated\" or \"channel\", got {other:?}"
+                    "comm.transport must be \"simulated\", \"channel\", \"tcp\" or \"uds\", \
+                     got {other:?}"
                 )))
             }
         }
         match self.compression.as_str() {
             "none" => {}
-            "qsgd" | "topk" => {
-                if self.transport != "channel" {
+            "qsgd" => {
+                if self.transport == "simulated" {
                     return Err(Error::Config(
                         "compressed transports measure exact wire bytes; \
-                         set comm.transport = \"channel\" (the simulated α–β \
-                         charge assumes dense vectors)"
+                         set comm.transport = \"channel\" (or \"tcp\"/\"uds\" — the \
+                         simulated α–β charge assumes dense vectors)"
+                            .into(),
+                    ));
+                }
+            }
+            "topk" => {
+                if self.transport != "channel" {
+                    return Err(Error::Config(
+                        "comm.compression = \"topk\" measures exact wire bytes over \
+                         the in-process lockstep; set comm.transport = \"channel\" \
+                         (the sparse index sets are not delta-coded for the \
+                         networked wire)"
                             .into(),
                     ));
                 }
@@ -362,9 +403,14 @@ impl CommConfig {
         }
         Ok(())
     }
+
+    /// Is a real multi-process socket transport selected (DESIGN.md §4)?
+    pub fn networked(&self) -> bool {
+        matches!(self.transport.as_str(), "tcp" | "uds")
+    }
 }
 
-/// Synchronization-policy selection (DESIGN.md §4).
+/// Synchronization-policy selection (DESIGN.md §5).
 ///
 /// The `[sync]` section picks *when* local algorithms communicate —
 /// `[train].sync_period` stays the (initial) H:
@@ -456,7 +502,7 @@ impl SyncConfig {
     }
 }
 
-/// Execution-engine selection (DESIGN.md §6): how worker computation maps
+/// Execution-engine selection (DESIGN.md §7): how worker computation maps
 /// onto OS threads. Purely a wall-clock knob — every layout is
 /// bitwise-identical (worker streams are pure functions of
 /// `(seed, worker, step)` and all leader-side reductions are fixed-order),
@@ -480,7 +526,7 @@ pub struct ExecConfig {
     pub threads: usize,
     /// Kernel dispatch: "auto" (default; `ADAALTER_SIMD` env decides,
     /// on when unset), "on" or "off". Pure wall-clock knob — the SIMD
-    /// and serial kernels are bitwise-identical (DESIGN.md §7).
+    /// and serial kernels are bitwise-identical (DESIGN.md §8).
     pub simd: String,
 }
 
@@ -502,17 +548,17 @@ impl ExecConfig {
     }
 }
 
-/// Mixed-precision selection (`[precision]`, DESIGN.md §7). With the
+/// Mixed-precision selection (`[precision]`, DESIGN.md §8). With the
 /// section absent both knobs default to `"f32"` and every code path is
 /// bitwise-identical to the seed.
 ///
 /// * `wire = "bf16"` — sync-round / gather payloads travel as bf16
 ///   (round-to-nearest-even), exactly halving recorded wire bytes;
 ///   composes with the delta coding of the compressed collective.
-///   Requires `comm.transport = "channel"` with
-///   `comm.compression = "none"` — like QSGD/top-k, the bf16 codec
-///   measures exact wire bytes, and stacking two lossy codecs would
-///   double-quantize.
+///   Requires `comm.transport = "channel"` (or the networked `"tcp"` /
+///   `"uds"`) with `comm.compression = "none"` — like QSGD/top-k, the
+///   bf16 codec measures exact wire bytes, and stacking two lossy codecs
+///   would double-quantize.
 /// * `state = "bf16"` — optimizer accumulator state (`b2` / `acc`) is
 ///   rounded through bf16 after every update while the weights stay f32
 ///   (master weights). Value-exact emulation: storage remains f32, but
@@ -560,10 +606,14 @@ impl PrecisionConfig {
     /// the simulated α–β charge assumes dense f32 vectors, and stacking
     /// bf16 under another lossy codec would double-quantize.
     pub fn validate_with_comm(&self, comm: &CommConfig) -> Result<()> {
-        if self.wire_bf16() && (comm.transport != "channel" || comm.compression != "none") {
+        if self.wire_bf16()
+            && ((comm.transport != "channel" && !comm.networked())
+                || comm.compression != "none")
+        {
             return Err(Error::Config(
                 "precision.wire = \"bf16\" measures exact wire bytes; set \
-                 comm.transport = \"channel\" with comm.compression = \"none\""
+                 comm.transport = \"channel\" (or \"tcp\"/\"uds\") with \
+                 comm.compression = \"none\""
                     .into(),
             ));
         }
@@ -572,7 +622,7 @@ impl PrecisionConfig {
 }
 
 /// Deterministic fault/straggler scenario + partial-participation policy
-/// (DESIGN.md §5). With the section absent (all defaults) every fault
+/// (DESIGN.md §6). With the section absent (all defaults) every fault
 /// code path is disabled and the trainer is bitwise-identical to the
 /// fault-free leader loop.
 ///
@@ -781,6 +831,12 @@ pub const KNOWN_KEYS: &[&str] = &[
     "net.bandwidth_gbps",
     "net.server_bandwidth_gbps",
     "net.dataloader_samples_per_s",
+    "net.listen",
+    "net.connect",
+    "net.connect_timeout_s",
+    "net.connect_retries",
+    "net.retry_backoff_s",
+    "net.nodelay",
     "comm.transport",
     "comm.compression",
     "comm.qsgd_levels",
@@ -861,6 +917,19 @@ impl ExperimentConfig {
             doc.float_or("net.server_bandwidth_gbps", c.net.server_bandwidth_gbps)?;
         c.net.dataloader_samples_per_s =
             doc.float_or("net.dataloader_samples_per_s", c.net.dataloader_samples_per_s)?;
+        c.net.listen = doc.str_or("net.listen", &c.net.listen)?;
+        c.net.connect = doc.str_or("net.connect", &c.net.connect)?;
+        c.net.connect_timeout_s =
+            doc.float_or("net.connect_timeout_s", c.net.connect_timeout_s)?;
+        let retries = doc.int_or("net.connect_retries", c.net.connect_retries as i64)?;
+        if !(0..=u32::MAX as i64).contains(&retries) {
+            return Err(Error::Config(format!(
+                "net.connect_retries must be >= 0, got {retries}"
+            )));
+        }
+        c.net.connect_retries = retries as u32;
+        c.net.retry_backoff_s = doc.float_or("net.retry_backoff_s", c.net.retry_backoff_s)?;
+        c.net.nodelay = doc.bool_or("net.nodelay", c.net.nodelay)?;
 
         c.comm.transport = doc.str_or("comm.transport", &c.comm.transport)?;
         c.comm.compression = doc.str_or("comm.compression", &c.comm.compression)?;
@@ -994,7 +1063,50 @@ impl ExperimentConfig {
         if self.net.latency_us < 0.0 || self.net.bandwidth_gbps <= 0.0 {
             return Err(Error::Config("net latency/bandwidth out of range".into()));
         }
+        if !(self.net.connect_timeout_s > 0.0 && self.net.connect_timeout_s.is_finite()) {
+            return Err(Error::Config(format!(
+                "net.connect_timeout_s must be a finite value > 0, got {}",
+                self.net.connect_timeout_s
+            )));
+        }
+        if !(self.net.retry_backoff_s >= 0.0 && self.net.retry_backoff_s.is_finite()) {
+            return Err(Error::Config(format!(
+                "net.retry_backoff_s must be a finite value >= 0, got {}",
+                self.net.retry_backoff_s
+            )));
+        }
         self.comm.validate()?;
+        if self.comm.networked() {
+            // The networked deployment (DESIGN.md §4) is the paper's
+            // parameter-server shape: one leader process, ≥ 2 workers.
+            if self.net.topology != "ps" {
+                return Err(Error::Config(format!(
+                    "comm.transport = {:?} runs the leader↔worker protocol; \
+                     net.topology must be \"ps\", got {:?}",
+                    self.comm.transport, self.net.topology
+                )));
+            }
+            if t.workers < 2 {
+                return Err(Error::Config(format!(
+                    "comm.transport = {:?} needs train.workers >= 2 (the in-process \
+                     codecs bill single-worker clusters as free, which a real socket \
+                     cannot reproduce)",
+                    self.comm.transport
+                )));
+            }
+            if self.faults.is_active()
+                && (self.comm.compression != "none" || self.precision.wire_bf16())
+            {
+                // The lossy codecs key their streams by participant count;
+                // a mid-round process death would desynchronize the
+                // leader's and workers' RNG use counters.
+                return Err(Error::Config(format!(
+                    "[faults] over comm.transport = {:?} requires the dense f32 wire \
+                     (comm.compression = \"none\", precision.wire = \"f32\")",
+                    self.comm.transport
+                )));
+            }
+        }
         self.sync.validate()?;
         if !self.sync.is_fixed() {
             if !self.optim.algorithm.is_local() {

@@ -1,4 +1,4 @@
-//! The execution engine (DESIGN.md §6): how worker computation is mapped
+//! The execution engine (DESIGN.md §7): how worker computation is mapped
 //! onto OS threads, selected by the `[exec]` config section and
 //! bitwise-invariant across every layout.
 //!

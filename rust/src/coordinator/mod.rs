@@ -2,13 +2,13 @@
 //!
 //! * [`sync`] — the synchronization subsystem: the fixed-H scheduler
 //!   arithmetic (Alg. 4 lines 4/8) plus the pluggable [`SyncPolicy`]
-//!   family deciding *when* to synchronize (DESIGN.md §4).
+//!   family deciding *when* to synchronize (DESIGN.md §5).
 //! * [`schedule`] — warm-up learning rates (§6.2.1) and batch scaling.
 //! * [`aggregate`] — gradient / parameter / denominator averaging.
 //! * [`backend`] — the gradient-backend abstraction workers run on.
 //! * [`worker`] — worker-cell protocol and execution bodies.
 //! * [`executor`] — the execution engine: worker→thread layout
-//!   (`[exec]`), bitwise-invariant across layouts (DESIGN.md §6).
+//!   (`[exec]`), bitwise-invariant across layouts (DESIGN.md §7).
 //! * [`trainer`] — the leader: spawning, barriers, sync rounds, metrics.
 
 pub mod aggregate;

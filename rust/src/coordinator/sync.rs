@@ -1,6 +1,6 @@
 //! Synchronization scheduling — when does the cluster communicate?
 //!
-//! Two layers (DESIGN.md §4):
+//! Two layers (DESIGN.md §5):
 //!
 //! * [`SyncScheduler`] — the pure fixed-H arithmetic of the paper
 //!   (Alg. 4 line 8: `mod(t, H) == 0`, the local-step index

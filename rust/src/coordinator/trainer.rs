@@ -13,10 +13,13 @@
 //!   `(y_{i,t}, A²_{i,t})`, averages both (Alg. 4 lines 11–12), and
 //!   broadcasts the averages back. Each executed round's observation
 //!   (modeled time, straggler spread, realized drift) feeds back into the
-//!   policy (DESIGN.md §4).
+//!   policy (DESIGN.md §5).
 //!
 //! Communication is layered (DESIGN.md §3): the control plane (commands,
-//! replies, barriers) runs over a [`ChannelTransport`], and every
+//! replies, barriers) runs over a [`LeaderLink`] — in-process
+//! [`crate::comm::ChannelTransport`] channels, or real TCP/Unix sockets
+//! when `comm.transport` selects the networked deployment (DESIGN.md
+//! §4) — and every
 //! data-plane exchange — gradient gather, model broadcast, the paired
 //! parameter/denominator averaging round — goes through a pluggable
 //! [`Collective`] selected by the `[comm]` config section. The collective
@@ -33,8 +36,13 @@
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
+use std::time::Duration;
 
-use crate::comm::{build_collective, ChannelTransport, Collective, CommReport};
+use crate::comm::net::{write_port_file, SocketKind, WireCollective, WireState};
+use crate::comm::{
+    build_collective, config_fingerprint, Collective, CommReport, LeaderLink, NetCounters,
+    NetModel, TcpTransport,
+};
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::coordinator::aggregate::{average_into, Aggregator};
 use crate::coordinator::backend::{BackendFactory, EvalMetrics};
@@ -61,6 +69,12 @@ pub struct RunResult {
     pub clock: VirtualClock,
     /// Final held-out evaluation.
     pub final_eval: Option<EvalMetrics>,
+    /// Real socket traffic `(accounted, total)` of a networked run
+    /// (DESIGN.md §4): `accounted` is the billed codec payload bytes —
+    /// pinned equal to the recorder's booked bytes for every codec —
+    /// and `total` is every byte through the leader's sockets (headers
+    /// and handshake included). `None` for in-process transports.
+    pub net_bytes: Option<(u64, u64)>,
 }
 
 /// The leader/trainer.
@@ -74,8 +88,12 @@ pub struct Trainer {
     /// Resume from a checkpoint (algorithm + dimensions must match).
     pub resume: Option<Checkpoint>,
     /// Override the fault scenario (default: compiled from the `[faults]`
-    /// config section and `train.seed`; DESIGN.md §5).
+    /// config section and `train.seed`; DESIGN.md §6).
     pub fault_plan: Option<FaultPlan>,
+    /// Networked leader (DESIGN.md §4): publish the bound listen address
+    /// to this file once the socket is up — how workers started with
+    /// `--port-file` find a port-0 leader.
+    pub port_file: Option<String>,
 }
 
 impl Trainer {
@@ -89,6 +107,7 @@ impl Trainer {
             calibration: Calibration::paper_v100(),
             resume: None,
             fault_plan: None,
+            port_file: None,
         }
     }
 
@@ -99,7 +118,7 @@ impl Trainer {
         let algo = cfg.optim.algorithm;
         // Install the `[exec]` SIMD dispatch mode process-wide. Pure
         // wall-clock knob: every kernel is bitwise mode-independent
-        // (DESIGN.md §7), so concurrent runs with different configs
+        // (DESIGN.md §8), so concurrent runs with different configs
         // cannot perturb each other's results.
         crate::util::simd::set_mode(crate::util::simd::SimdMode::from_config(&cfg.exec)?);
         cfg.precision.validate()?;
@@ -133,7 +152,7 @@ impl Trainer {
                     .into(),
             ));
         }
-        // The fault scenario (DESIGN.md §5): compiled from `[faults]` +
+        // The fault scenario (DESIGN.md §6): compiled from `[faults]` +
         // seed unless a programmatic plan was injected. An empty plan with
         // no participation policy keeps every fault code path disabled.
         let plan = match &self.fault_plan {
@@ -173,7 +192,7 @@ impl Trainer {
                 ));
             }
         }
-        // The per-iteration sync decision is the policy's (DESIGN.md §4);
+        // The per-iteration sync decision is the policy's (DESIGN.md §5);
         // non-local algorithms always get FixedPeriod(1).
         let policy = build_policy(cfg)?;
         // Drift-triggered policies consume the per-step update norm, which
@@ -229,19 +248,13 @@ impl Trainer {
             return Err(Error::Protocol(format!("init len {} != d {d}", init.len())));
         }
 
-        let coll = build_collective(cfg, &self.calibration, d)?;
-        let mut recorder = TrainRecorder::new(cfg.train.steps_per_epoch);
-        recorder.set_transport(coll.label());
-        recorder.set_sync_policy(policy.label());
-
-        // The execution engine (DESIGN.md §6): workers are hosted on the
+        // The execution engine (DESIGN.md §7): workers are hosted on the
         // `[exec]`-selected thread layout — one host per worker by
         // default (the pre-engine thread shape), k round-robin hosts or
         // one serial host on request. Every layout is bitwise-identical
         // (worker streams are pure functions of `(seed, worker, step)`;
         // all leader reductions are fixed-order).
         let par = Parallelism::from_config(&cfg.exec)?;
-        let (reply_tx, reply_rx) = channel::<Reply>();
         let specs: Vec<WorkerSpec> = (0..n)
             .map(|w| WorkerSpec {
                 worker: w,
@@ -255,8 +268,66 @@ impl Trainer {
                 crash_step: plan.crash_step(w),
             })
             .collect();
-        let transport =
-            spawn_worker_hosts(par, specs, Arc::clone(&self.factory), reply_tx, reply_rx)?;
+
+        // The transport: in-process worker hosts, or real sockets when
+        // `comm.transport` is "tcp"/"uds" (DESIGN.md §4). Lossy wires
+        // over real sockets encode on the worker side, so their round
+        // arithmetic runs in WireCollective against the leader's decoded
+        // mirrors; the dense f32 wire ships exact bytes and keeps the
+        // usual simulated α–β accounting.
+        let (transport, coll, net_counters) = if cfg.comm.networked() {
+            if self.resume.is_some() {
+                return Err(Error::Config(
+                    "resume is not supported over the networked transport \
+                     (restart the run from step 0 instead)"
+                        .into(),
+                ));
+            }
+            let kind = SocketKind::from_transport(&cfg.comm.transport)
+                .expect("networked() implies a tcp/uds transport");
+            let bound = TcpTransport::listen(
+                kind,
+                &cfg.net.listen,
+                Duration::from_secs_f64(cfg.net.connect_timeout_s),
+            )?;
+            if let Some(pf) = &self.port_file {
+                write_port_file(pf, bound.local_addr())?;
+            }
+            let state = WireState::new(WireState::codec_for(cfg), n, d);
+            let counters = NetCounters::new();
+            let transport = bound.handshake(
+                &specs,
+                config_fingerprint(cfg),
+                cfg.net.nodelay,
+                Arc::clone(&state),
+                Arc::clone(&counters),
+            )?;
+            let coll: Box<dyn Collective> = if cfg.comm.compression == "qsgd" {
+                Box::new(WireCollective::new(
+                    state,
+                    NetModel::from_config(&cfg.net),
+                    format!("qsgd(s={})", cfg.comm.qsgd_levels),
+                ))
+            } else if cfg.precision.wire_bf16() {
+                Box::new(WireCollective::new(
+                    state,
+                    NetModel::from_config(&cfg.net),
+                    "bf16".into(),
+                ))
+            } else {
+                build_collective(cfg, &self.calibration, d)?
+            };
+            (LeaderLink::Net(Box::new(transport)), coll, Some(counters))
+        } else {
+            let (reply_tx, reply_rx) = channel::<Reply>();
+            let transport =
+                spawn_worker_hosts(par, specs, Arc::clone(&self.factory), reply_tx, reply_rx)?;
+            let coll = build_collective(cfg, &self.calibration, d)?;
+            (LeaderLink::Chan(transport), coll, None)
+        };
+        let mut recorder = TrainRecorder::new(cfg.train.steps_per_epoch);
+        recorder.set_transport(coll.label());
+        recorder.set_sync_policy(policy.label());
 
         let mut run = LeaderLoop {
             cfg,
@@ -288,19 +359,23 @@ impl Trainer {
             phase_s: vec![0.0; n],
             phase_nominal_s: 0.0,
             pool: BufferPool::new(),
+            bcast_buf: vec![0.0; d],
             bcast_slot: ArcSlot::new(),
             install_slot: ArcSlot::new(),
             acc_slot: ArcSlot::new(),
             acc_scratch: vec![0.0; d],
         };
         let out = run.drive();
-        // Always attempt shutdown, even on error.
+        // Always attempt shutdown, even on error. For the networked
+        // transport this also joins the socket threads, so the traffic
+        // counters read below are final.
         run.shutdown();
         out.map(|(final_x, final_eval)| RunResult {
             final_x,
             recorder: run.recorder,
             clock: run.clock,
             final_eval,
+            net_bytes: net_counters.map(|c| (c.accounted(), c.total())),
         })
     }
 }
@@ -315,7 +390,7 @@ fn worker_err(worker: usize, msg: String) -> Error {
 struct LeaderLoop<'a> {
     cfg: &'a ExperimentConfig,
     d: usize,
-    /// The synchronization policy (config-selected; DESIGN.md §4).
+    /// The synchronization policy (config-selected; DESIGN.md §5).
     policy: Box<dyn SyncPolicy>,
     /// Iteration of the last executed sync round (realized-H tracking).
     last_sync_t: u64,
@@ -323,8 +398,9 @@ struct LeaderLoop<'a> {
     /// The data-plane collective (config-selected).
     coll: Box<dyn Collective>,
     calib: &'a Calibration,
-    /// The control-plane message transport.
-    transport: ChannelTransport<Cmd, Reply>,
+    /// The control-plane message transport: in-process channels, or the
+    /// networked leader endpoint (DESIGN.md §4).
+    transport: LeaderLink,
     agg: Aggregator,
     recorder: TrainRecorder,
     clock: VirtualClock,
@@ -335,7 +411,7 @@ struct LeaderLoop<'a> {
     start_step: u64,
     /// Local-AdaAlter accumulator to install on resume.
     resume_acc: Option<Arc<Vec<f32>>>,
-    /// The fault scenario (DESIGN.md §5; empty in fault-free runs).
+    /// The fault scenario (DESIGN.md §6; empty in fault-free runs).
     plan: FaultPlan,
     /// Gate for every fault code path: false ⇒ the leader loop is the
     /// exact (bitwise) fault-free protocol.
@@ -348,12 +424,16 @@ struct LeaderLoop<'a> {
     /// Lockstep-nominal virtual time of the current phase (what the
     /// per-iteration charges already booked for it).
     phase_nominal_s: f64,
-    /// Recycled d-sized scratch buffers (DESIGN.md §6): gradient buffers
+    /// Recycled d-sized scratch buffers (DESIGN.md §7): gradient buffers
     /// ride `SyncStep` down and `Reply::Grad` back; state-snapshot
     /// buffers ride `CollectState` down and `Reply::State` back — after
     /// aggregation / averaging they are parked here, so steady-state
     /// steps and sync rounds reuse the same allocations.
     pool: BufferPool,
+    /// Scratch the per-iteration broadcast payload is staged in so a
+    /// lossy wire can transform it (bf16 rounding) before it is frozen
+    /// into the broadcast `Arc`.
+    bcast_buf: Vec<f32>,
     /// Recycled `Arc` payload for the per-iteration model broadcast.
     bcast_slot: ArcSlot,
     /// Recycled `Arc` payload for the sync-round state install.
@@ -369,7 +449,7 @@ impl<'a> LeaderLoop<'a> {
         self.transport.n()
     }
 
-    fn wait_ready(&self) -> Result<()> {
+    fn wait_ready(&mut self) -> Result<()> {
         self.transport
             .gather(|r| match r {
                 Reply::Ready { worker } => Ok((worker, ())),
@@ -498,9 +578,12 @@ impl<'a> LeaderLoop<'a> {
         }
         // One shared payload per round (Arc clones, not vector clones),
         // recycled across rounds; gradient buffers ride the command down
-        // and the reply back, so steady state allocates nothing here.
-        let x_arc = self.bcast_slot.fill(&self.x);
-        let rep_b = self.coll.broadcast(&x_arc)?;
+        // and the reply back, so steady state allocates nothing here. The
+        // broadcast runs on a scratch copy so a lossy wire can transform
+        // the payload the workers actually receive.
+        self.bcast_buf.copy_from_slice(&self.x);
+        let rep_b = self.coll.broadcast(&mut self.bcast_buf)?;
+        let x_arc = self.bcast_slot.fill(&self.bcast_buf);
         let (pool, d) = (&mut self.pool, self.d);
         self.transport.broadcast(|_| Cmd::SyncStep {
             t,
@@ -564,7 +647,7 @@ impl<'a> LeaderLoop<'a> {
         Ok(mean_loss)
     }
 
-    /// Fault-aware fully-synchronous iteration (DESIGN.md §5): only live
+    /// Fault-aware fully-synchronous iteration (DESIGN.md §6): only live
     /// workers are addressed, crash tombstones shrink the gather, the
     /// per-iteration barrier is charged the spread between the slowest
     /// live worker and the lockstep-nominal cost, and the update averages
@@ -574,8 +657,9 @@ impl<'a> LeaderLoop<'a> {
         if targets.is_empty() {
             return Err(Error::Protocol(format!("all workers crashed before step {t}")));
         }
-        let x_arc = self.bcast_slot.fill(&self.x);
-        let rep_b = self.coll.broadcast(&x_arc)?;
+        self.bcast_buf.copy_from_slice(&self.x);
+        let rep_b = self.coll.broadcast(&mut self.bcast_buf)?;
+        let x_arc = self.bcast_slot.fill(&self.bcast_buf);
         let (pool, d) = (&mut self.pool, self.d);
         self.transport.broadcast_to(&targets, |_| Cmd::SyncStep {
             t,
@@ -645,7 +729,7 @@ impl<'a> LeaderLoop<'a> {
         Ok(mean_loss)
     }
 
-    /// Fault-aware local iteration (DESIGN.md §5): live workers step and
+    /// Fault-aware local iteration (DESIGN.md §6): live workers step and
     /// their per-worker virtual arrival times accumulate (slowdowns and
     /// stalls applied); crash tombstones mark workers dead; the policy's
     /// sync decision then runs the (possibly partial) round.
@@ -695,12 +779,13 @@ impl<'a> LeaderLoop<'a> {
     /// buffers come out of (and, via [`Self::recycle_states`], return to)
     /// the leader's [`BufferPool`], so steady-state sync rounds reuse the
     /// same allocations.
-    fn collect_states(&mut self) -> Result<Vec<(Vec<f32>, Option<Vec<f32>>)>> {
+    fn collect_states(&mut self, raw: bool) -> Result<Vec<(Vec<f32>, Option<Vec<f32>>)>> {
         let wants_acc = self.cfg.optim.algorithm.syncs_denominator();
         let (pool, d) = (&mut self.pool, self.d);
         self.transport.broadcast(|_| Cmd::CollectState {
             sx: pool.take(d),
             sa: if wants_acc { pool.take(d) } else { Vec::new() },
+            raw,
         })?;
         self.transport.gather(|r| match r {
             Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
@@ -713,12 +798,14 @@ impl<'a> LeaderLoop<'a> {
     fn collect_states_from(
         &mut self,
         targets: &[usize],
+        raw: bool,
     ) -> Result<Vec<(Vec<f32>, Option<Vec<f32>>)>> {
         let wants_acc = self.cfg.optim.algorithm.syncs_denominator();
         let (pool, d) = (&mut self.pool, self.d);
         self.transport.broadcast_to(targets, |_| Cmd::CollectState {
             sx: pool.take(d),
             sa: if wants_acc { pool.take(d) } else { Vec::new() },
+            raw,
         })?;
         self.transport.gather_from(targets, |r| match r {
             Reply::State { worker, x, acc } => Ok((worker, (x, acc))),
@@ -739,7 +826,7 @@ impl<'a> LeaderLoop<'a> {
     }
 
     /// [`Self::wait_ready`] over a live subset (fault runs).
-    fn wait_ready_from(&self, targets: &[usize]) -> Result<()> {
+    fn wait_ready_from(&mut self, targets: &[usize]) -> Result<()> {
         self.transport
             .gather_from(targets, |r| match r {
                 Reply::Ready { worker } => Ok((worker, ())),
@@ -759,7 +846,7 @@ impl<'a> LeaderLoop<'a> {
             return self.sync_round_faulted(t, reason);
         }
         let wants_acc = self.cfg.optim.algorithm.syncs_denominator();
-        let states = self.collect_states()?;
+        let states = self.collect_states(false)?;
         let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
 
         let (report, avg_acc) = if wants_acc {
@@ -829,7 +916,7 @@ impl<'a> LeaderLoop<'a> {
         });
     }
 
-    /// Fault-aware sync round (DESIGN.md §5): live workers offer their
+    /// Fault-aware sync round (DESIGN.md §6): live workers offer their
     /// states *and arrival times*; the collective's
     /// [`Collective::sync_round_partial`] closes the barrier per the
     /// configured participation policy (full barrier by default, quorum /
@@ -845,7 +932,7 @@ impl<'a> LeaderLoop<'a> {
         if targets.is_empty() {
             return Err(Error::Protocol(format!("all workers crashed before round at {t}")));
         }
-        let states = self.collect_states_from(&targets)?;
+        let states = self.collect_states_from(&targets, false)?;
         let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
         let arrivals: Vec<f64> = targets.iter().map(|&w| self.phase_s[w]).collect();
 
@@ -919,7 +1006,9 @@ impl<'a> LeaderLoop<'a> {
     fn save_checkpoint(&mut self, t: u64) -> Result<()> {
         let algo = self.cfg.optim.algorithm;
         let vectors = if algo.is_local() {
-            let states = self.collect_states()?;
+            // Raw snapshot: checkpoints are observer reads, not rounds —
+            // they must carry exact f32 state even over a lossy wire.
+            let states = self.collect_states(true)?;
             let (x0, acc0) = &states[0];
             let vectors = match algo {
                 Algorithm::LocalAdaAlter => {
@@ -954,9 +1043,9 @@ impl<'a> LeaderLoop<'a> {
             if targets.is_empty() {
                 return Err(Error::Protocol("all workers crashed".into()));
             }
-            self.collect_states_from(&targets)?
+            self.collect_states_from(&targets, true)?
         } else {
-            self.collect_states()?
+            self.collect_states(true)?
         };
         let xs: Vec<&[f32]> = states.iter().map(|(x, _)| x.as_slice()).collect();
         let mut out = vec![0.0f32; self.d];

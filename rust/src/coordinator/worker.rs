@@ -10,7 +10,7 @@
 //! every gradient is keyed by `(worker, step)`, so thread scheduling and
 //! host placement cannot change results.
 //!
-//! Hosting (DESIGN.md §6): a worker cell runs either on its own thread
+//! Hosting (DESIGN.md §7): a worker cell runs either on its own thread
 //! ([`worker_loop`], commands on a dedicated channel) or multiplexed with
 //! siblings on a shared host thread ([`host_loop`], commands tagged with
 //! the worker id). The execution engine
@@ -58,6 +58,11 @@ pub enum Cmd {
         /// vector for algorithms that don't sync denominators; dropped
         /// then).
         sa: Vec<f32>,
+        /// Observer collect: the snapshot is for checkpointing/eval, not a
+        /// billed sync round. In-process cells ignore it; the networked
+        /// transport ships raw (exact, unbilled) payloads for these
+        /// (DESIGN.md §4).
+        raw: bool,
     },
     /// Install the averaged state (pull side of the sync round).
     InstallState {
@@ -89,7 +94,7 @@ pub enum Reply {
     },
     /// A `LocalStep` finished. `update_sq` is the squared L2 norm of this
     /// step's local parameter update `‖Δx‖²` — the drift proxy adaptive
-    /// sync policies consume (DESIGN.md §4); 0 when the fused device path
+    /// sync policies consume (DESIGN.md §5); 0 when the fused device path
     /// applied the update (the norm is not observable without an extra
     /// device read, so the trainer disables fusion for policies that need
     /// it).
@@ -122,7 +127,7 @@ pub enum Reply {
         /// Replying worker id.
         worker: usize,
     },
-    /// The worker's fault schedule killed it at `step` (DESIGN.md §5).
+    /// The worker's fault schedule killed it at `step` (DESIGN.md §6).
     /// The tombstone reply stands in for a vanished process so the
     /// lockstep protocol observes the death instead of deadlocking; the
     /// leader marks the worker dead and stops addressing it.
@@ -161,10 +166,10 @@ pub struct WorkerSpec {
     /// update loop, so it always reports it.
     pub collect_update_sq: bool,
     /// Keep the local accumulator state on the bf16 grid
-    /// (`precision.state = "bf16"`; DESIGN.md §7). The trainer disables
+    /// (`precision.state = "bf16"`; DESIGN.md §8). The trainer disables
     /// the fused device path for these runs.
     pub bf16_state: bool,
-    /// Fault injection (DESIGN.md §5): the worker dies permanently at this
+    /// Fault injection (DESIGN.md §6): the worker dies permanently at this
     /// step — it executes steps `t < crash_step` and answers everything
     /// from `crash_step` on with [`Reply::Crashed`].
     pub crash_step: Option<u64>,
@@ -354,7 +359,7 @@ impl WorkerCell {
                 let _ = tx.send(Reply::StepDone { worker, loss, update_sq });
                 CellFlow::Continue
             }
-            Cmd::CollectState { mut sx, mut sa } => match &self.local {
+            Cmd::CollectState { mut sx, mut sa, raw: _ } => match &self.local {
                 LocalState::Sgd { x } => {
                     sx.resize(x.len(), 0.0);
                     sx.copy_from_slice(x);
@@ -447,7 +452,7 @@ pub fn worker_loop(
     }
 }
 
-/// The host thread body (DESIGN.md §6): several worker cells multiplexed
+/// The host thread body (DESIGN.md §7): several worker cells multiplexed
 /// on one shared channel, commands tagged `(worker, cmd)`. Cells are built
 /// in the given order, each announcing `Ready`; the loop exits once every
 /// hosted cell received `Stop` (or on a fatal cell error / channel close).

@@ -2,11 +2,18 @@
 //!
 //! ```text
 //! adaalter train      --experiment <preset> | --config <file> [--set k=v]…
+//!                     [--role leader --listen addr | --role worker
+//!                      --worker-id i --connect addr] [--port-file path]
 //! adaalter presets                       list experiment presets
 //! adaalter inspect    [--artifacts dir]  summarise the AOT artifacts
 //! adaalter epoch-model [--workers n]     print the Fig. 1/2 analytic rows
 //! adaalter version
 //! ```
+//!
+//! With `comm.transport = "tcp"` / `"uds"` the same binary is both halves
+//! of the networked deployment (DESIGN.md §4): the leader binds
+//! `--listen` (or `net.listen`), each worker process dials `--connect`
+//! (or polls `--port-file` for a port-0 leader's published address).
 
 use std::sync::Arc;
 
@@ -29,7 +36,10 @@ fn main() {
 fn dispatch(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &["experiment", "config", "set", "artifacts", "workers", "out-dir", "resume"],
+        &[
+            "experiment", "config", "set", "artifacts", "workers", "out-dir", "resume",
+            "role", "listen", "connect", "worker-id", "port-file",
+        ],
         &["no-fused", "quiet", "help"],
     )?;
     match args.command.as_str() {
@@ -59,6 +69,8 @@ USAGE:
   adaalter train --experiment <name> [--set key=value]... [--no-fused]
   adaalter train --config <file.toml> [--set key=value]...
   adaalter train ... --resume <checkpoint.bin>
+  adaalter train ... --role leader --listen 127.0.0.1:0 --port-file <p>
+  adaalter train ... --role worker --worker-id <i> --connect <addr>
   adaalter presets
   adaalter inspect [--artifacts <dir>]
   adaalter epoch-model
@@ -93,8 +105,42 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
     let quiet = args.has("quiet");
+    match args.get_or("role", "leader") {
+        "leader" => {
+            if let Some(listen) = args.get("listen") {
+                cfg.net.listen = listen.to_string();
+            }
+        }
+        // A worker process of the networked deployment (DESIGN.md §4):
+        // dial the leader, handshake, serve the lockstep protocol until
+        // Stop. No leader-side reporting happens here.
+        "worker" => {
+            let w: usize = args
+                .get("worker-id")
+                .ok_or_else(|| {
+                    adaalter::Error::Config("--role worker requires --worker-id".into())
+                })?
+                .parse()
+                .map_err(|_| {
+                    adaalter::Error::Config(
+                        "--worker-id must be a non-negative integer".into(),
+                    )
+                })?;
+            return adaalter::comm::run_worker(
+                &cfg,
+                w,
+                args.get_or("connect", ""),
+                args.get("port-file"),
+            );
+        }
+        other => {
+            return Err(adaalter::Error::Config(format!(
+                "--role must be \"leader\" or \"worker\", got {other:?}"
+            )))
+        }
+    }
     if !quiet {
         println!(
             "training: algo={} workers={} H={} steps={} backend={:?} preset={}",
@@ -109,6 +155,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let factory = make_factory(&cfg)?;
     let mut trainer = Trainer::new(cfg.clone(), factory);
     trainer.allow_fused = !args.has("no-fused");
+    trainer.port_file = args.get("port-file").map(String::from);
     if let Some(path) = args.get("resume") {
         let ck = adaalter::coordinator::Checkpoint::load(path)?;
         if !quiet {
@@ -170,6 +217,55 @@ fn cmd_train(args: &Args) -> Result<()> {
                 "wrote {sync_csv} ({} rounds, policy {})",
                 result.recorder.sync_events.len(),
                 result.recorder.sync_policy()
+            );
+        }
+    }
+    // Networked runs: a machine-readable report of everything the
+    // equivalence tests pin bitwise against the in-process reference —
+    // final params and per-step losses as exact bit patterns, the booked
+    // traffic, and the real socket byte counters (DESIGN.md §4).
+    if let Some((accounted, total)) = result.net_bytes {
+        use adaalter::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+        doc.insert(
+            "final_x_bits".into(),
+            Json::Arr(result.final_x.iter().map(|v| Json::Num(v.to_bits() as f64)).collect()),
+        );
+        doc.insert(
+            "steps".into(),
+            Json::Arr(
+                result
+                    .recorder
+                    .steps
+                    .iter()
+                    .map(|p| {
+                        Json::Arr(vec![
+                            Json::Num(p.step as f64),
+                            Json::Str(format!("{:016x}", p.train_loss.to_bits())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        doc.insert(
+            "final_eval_loss_bits".into(),
+            match &result.final_eval {
+                Some(ev) => Json::Str(format!("{:016x}", ev.loss.to_bits())),
+                None => Json::Null,
+            },
+        );
+        doc.insert("syncs".into(), Json::Num(syncs as f64));
+        doc.insert("booked_bytes".into(), Json::Num(bytes as f64));
+        doc.insert("accounted_bytes".into(), Json::Num(accounted as f64));
+        doc.insert("total_bytes".into(), Json::Num(total as f64));
+        let path = format!("{}/net_report.json", cfg.out_dir);
+        std::fs::write(&path, Json::Obj(doc).dump())?;
+        if !quiet {
+            println!(
+                "wrote {path} (accounted {accounted} B == booked {bytes} B? {}; \
+                 total on the wire {total} B)",
+                accounted == bytes
             );
         }
     }

@@ -2,7 +2,7 @@
 //!
 //! The recorder owns the loss/PPL curves (the Fig. 3 series), the
 //! throughput counters (Fig. 2), and the synchronization-event log (the
-//! realized-H trajectory of adaptive sync policies, DESIGN.md §4), on
+//! realized-H trajectory of adaptive sync policies, DESIGN.md §5), on
 //! both axes the paper uses: epochs and (virtual) wall-clock time.
 
 use std::time::Instant;
@@ -63,7 +63,7 @@ pub struct SyncEvent {
 }
 
 /// One executed synchronization round's participation accounting under an
-/// active `[faults]` scenario (DESIGN.md §5): who was alive, who made the
+/// active `[faults]` scenario (DESIGN.md §6): who was alive, who made the
 /// round, who was dropped as a straggler, and how long the barrier waited
 /// beyond the lockstep-nominal phase time. One row per round; exported as
 /// `faults_<tag>.csv` and pinned bitwise-reproducible by
@@ -210,7 +210,7 @@ impl TrainRecorder {
     }
 
     /// Record one executed round's participation accounting (fault runs
-    /// only — one event per sync round, DESIGN.md §5).
+    /// only — one event per sync round, DESIGN.md §6).
     pub fn fault_event(
         &mut self,
         step: u64,

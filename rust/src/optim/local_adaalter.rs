@@ -93,7 +93,7 @@ impl LocalAdaAlterWorker {
     ///
     /// Returns `‖Δx‖²`, the squared L2 norm of the applied update — the
     /// per-step drift proxy adaptive sync policies accumulate
-    /// (DESIGN.md §4). The update arithmetic is unchanged: the same
+    /// (DESIGN.md §5). The update arithmetic is unchanged: the same
     /// quotient is computed once and both applied and squared.
     pub fn local_step(&mut self, g: &[f32], lr: f32) -> f64 {
         assert_eq!(g.len(), self.x.len(), "LocalAdaAlterWorker: g dim");

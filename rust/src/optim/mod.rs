@@ -87,7 +87,7 @@ pub fn build_sync(cfg: &OptimConfig, d: usize) -> Box<dyn SyncOptimizer> {
 
 /// [`build_sync`] with an explicit accumulator precision: when `bf16_state`
 /// is set (`precision.state = "bf16"`) the adaptive optimizers keep their
-/// denominator on the bf16 grid (DESIGN.md §7). SGD and momentum-SGD carry
+/// denominator on the bf16 grid (DESIGN.md §8). SGD and momentum-SGD carry
 /// no accumulator, so the flag is a no-op for them.
 pub fn build_sync_precision(
     cfg: &OptimConfig,

@@ -20,7 +20,7 @@ pub enum Charge {
     Communication,
     /// Barrier time spent waiting for slow / stalled workers beyond the
     /// lockstep-nominal iteration cost — the fault model's visible penalty
-    /// (DESIGN.md §5; zero unless a `[faults]` scenario is active).
+    /// (DESIGN.md §6; zero unless a `[faults]` scenario is active).
     Straggler,
     /// Anything else (checkpointing, eval…).
     Other,

@@ -1,4 +1,4 @@
-//! Deterministic fault & straggler scenarios (DESIGN.md §5).
+//! Deterministic fault & straggler scenarios (DESIGN.md §6).
 //!
 //! The paper's §2 premise is that the synchronous barrier "blocks the
 //! global update until all the workers respond" — so the dominant

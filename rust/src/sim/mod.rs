@@ -1,6 +1,6 @@
 //! Cluster simulation: virtual clock, paper-calibrated V100 cost model,
 //! analytic epoch/throughput model (Fig. 1/2), deterministic fault &
-//! straggler scenarios (DESIGN.md §5), and the synthetic non-IID
+//! straggler scenarios (DESIGN.md §6), and the synthetic non-IID
 //! optimization workload for the rust-native backend.
 
 pub mod calib;

@@ -1,5 +1,5 @@
 //! Shared hot-path kernels — the one home for every per-element loop the
-//! training hot paths execute (DESIGN.md §6, §7).
+//! training hot paths execute (DESIGN.md §7, §8).
 //!
 //! Before this module, each call site owned a private copy of its loop:
 //! the optimizer steps in [`crate::optim`], the leader-side averaging in

@@ -1,8 +1,8 @@
 //! Small self-contained substrates the offline build image forces us to own:
 //! PRNG (no `rand`), property-testing harness (no `proptest`), JSON
 //! reader/writer (no `serde`), CSV writer, the shared hot-path kernels and
-//! buffer pool (DESIGN.md §6), the explicit SIMD kernel forms and dispatch
-//! knob, and the bf16 mixed-precision conversions (DESIGN.md §7).
+//! buffer pool (DESIGN.md §7), the explicit SIMD kernel forms and dispatch
+//! knob, and the bf16 mixed-precision conversions (DESIGN.md §8).
 
 pub mod csv;
 pub mod half;

@@ -1,4 +1,4 @@
-//! Step-scoped buffer reuse for the training hot paths (DESIGN.md §6).
+//! Step-scoped buffer reuse for the training hot paths (DESIGN.md §7).
 //!
 //! Two small tools with one goal: steady-state training should not touch
 //! the allocator.

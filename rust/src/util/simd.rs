@@ -1,5 +1,5 @@
 //! Explicit SIMD hot-path kernels + the `[exec] simd` dispatch knob
-//! (DESIGN.md §7).
+//! (DESIGN.md §8).
 //!
 //! Every kernel in [`crate::util::kernels`] has two implementations: the
 //! scalar reference in `kernels::serial` (the bitwise oracle) and the

@@ -91,6 +91,148 @@ pub fn tmpdir(tag: &str) -> String {
     d.to_str().unwrap().to_string()
 }
 
+// ---------------------------------------------------------------------------
+// Multi-process support (integration_net): spawn real leader/worker OS
+// processes of the compiled `adaalter` binary over loopback sockets.
+// ---------------------------------------------------------------------------
+
+/// The compiled `adaalter` CLI binary under test.
+pub fn adaalter_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_adaalter")
+}
+
+/// A spawned deployment process, killed on drop so a failed assertion
+/// never leaves leader or worker processes running.
+pub struct ChildGuard {
+    /// Role tag for panic messages ("leader", "worker 2", …).
+    pub label: String,
+    /// The OS process.
+    pub child: std::process::Child,
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl ChildGuard {
+    /// Wait for exit, polling with a hard deadline so a protocol deadlock
+    /// fails the test instead of hanging CI; kills the process on timeout.
+    pub fn wait_within(&mut self, timeout: std::time::Duration) -> std::process::ExitStatus {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(status) = self.child.try_wait().expect("try_wait failed") {
+                return status;
+            }
+            if std::time::Instant::now() > deadline {
+                let _ = self.child.kill();
+                let _ = self.child.wait();
+                panic!("{} did not exit within {timeout:?}", self.label);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+    }
+}
+
+/// Write `toml` under `dir` and return its path.
+pub fn write_cfg(dir: &str, toml: &str) -> String {
+    let path = format!("{dir}/cfg.toml");
+    std::fs::write(&path, toml).expect("write config");
+    path
+}
+
+/// Spawn the leader role: binds loopback with port 0 and publishes the
+/// picked address to `<dir>/leader.addr` for [`spawn_worker`].
+pub fn spawn_leader(cfg_path: &str, dir: &str) -> ChildGuard {
+    // Stale discovery/report files from a previous run on this machine
+    // would short-circuit the port-file polling (or the report assert).
+    let _ = std::fs::remove_file(format!("{dir}/leader.addr"));
+    let _ = std::fs::remove_file(format!("{dir}/net_report.json"));
+    let child = std::process::Command::new(adaalter_bin())
+        .args(["train", "--config", cfg_path, "--role", "leader"])
+        .args(["--port-file", &format!("{dir}/leader.addr")])
+        .args(["--out-dir", dir, "--quiet"])
+        .stdout(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn leader");
+    ChildGuard { label: "leader".into(), child }
+}
+
+/// Spawn worker `w` against [`spawn_leader`]'s port file, with extra
+/// environment variables (fault injection) applied.
+pub fn spawn_worker(cfg_path: &str, dir: &str, w: usize, env: &[(String, String)]) -> ChildGuard {
+    let mut cmd = std::process::Command::new(adaalter_bin());
+    cmd.args(["train", "--config", cfg_path, "--role", "worker"])
+        .args(["--worker-id", &w.to_string()])
+        .args(["--port-file", &format!("{dir}/leader.addr")])
+        .arg("--quiet")
+        .stdout(std::process::Stdio::null());
+    for (k, v) in env {
+        cmd.env(k, v);
+    }
+    ChildGuard { label: format!("worker {w}"), child: cmd.spawn().expect("spawn worker") }
+}
+
+/// Everything one deployment run produced.
+pub struct NetRun {
+    /// Leader exit status.
+    pub leader: std::process::ExitStatus,
+    /// Worker exit statuses, by worker id.
+    pub workers: Vec<std::process::ExitStatus>,
+    /// The leader's output directory (`net_report.json` lives here).
+    pub out_dir: String,
+}
+
+/// Run a full loopback deployment of `toml` with `workers` worker
+/// processes; `worker_env` carries per-worker extra environment
+/// (`(worker, key, value)`).
+pub fn run_net(
+    toml: &str,
+    workers: usize,
+    tag: &str,
+    worker_env: &[(usize, String, String)],
+) -> NetRun {
+    let dir = tmpdir(tag);
+    run_net_in(&dir, toml, workers, worker_env)
+}
+
+/// [`run_net`] in a caller-chosen directory (the Unix-socket scenario
+/// needs the listen path inside the TOML to point there).
+pub fn run_net_in(
+    dir: &str,
+    toml: &str,
+    workers: usize,
+    worker_env: &[(usize, String, String)],
+) -> NetRun {
+    let dir = dir.to_string();
+    let cfg_path = write_cfg(&dir, toml);
+    let mut leader = spawn_leader(&cfg_path, &dir);
+    let mut kids: Vec<ChildGuard> = (0..workers)
+        .map(|w| {
+            let env: Vec<(String, String)> = worker_env
+                .iter()
+                .filter(|(i, _, _)| *i == w)
+                .map(|(_, k, v)| (k.clone(), v.clone()))
+                .collect();
+            spawn_worker(&cfg_path, &dir, w, &env)
+        })
+        .collect();
+    let limit = std::time::Duration::from_secs(120);
+    let workers: Vec<std::process::ExitStatus> =
+        kids.iter_mut().map(|g| g.wait_within(limit)).collect();
+    let leader = leader.wait_within(limit);
+    NetRun { leader, workers, out_dir: dir }
+}
+
+/// Parse the leader's `net_report.json` (written for networked runs).
+pub fn net_report(out_dir: &str) -> adaalter::util::json::Json {
+    let path = format!("{out_dir}/net_report.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+    adaalter::util::json::Json::parse(&text).expect("net_report.json parses")
+}
+
 /// The bitwise run-equivalence pin: identical final parameters, identical
 /// loss-trace bits step for step, identical final-eval bits.
 pub fn assert_bitwise_eq(a: &RunResult, b: &RunResult, what: &str) {

@@ -1,4 +1,4 @@
-//! Steady-state zero-allocation pins (ISSUE 5 acceptance; DESIGN.md §6):
+//! Steady-state zero-allocation pins (ISSUE 5 acceptance; DESIGN.md §7):
 //! once warm, the training hot paths — per-worker optimizer steps driven
 //! through the execution engine, leader-side aggregation, the sync-round
 //! averaging kernels, and both compression codecs including the full

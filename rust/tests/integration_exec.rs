@@ -1,4 +1,4 @@
-//! Execution-engine equivalence pins (ISSUE 5 tentpole; DESIGN.md §6):
+//! Execution-engine equivalence pins (ISSUE 5 tentpole; DESIGN.md §7):
 //! the `[exec]` thread layout must never change a bit of the training
 //! trajectory. Every scenario runs once under the serial reference
 //! engine and once per threaded layout — the default one-host-per-worker
@@ -148,7 +148,7 @@ fn exec_config_round_trips_through_toml() {
 
 #[test]
 fn simd_dispatch_is_bitwise_invariant_end_to_end() {
-    // The PR 6 tentpole contract (DESIGN.md §7): `exec.simd` is a pure
+    // The PR 6 tentpole contract (DESIGN.md §8): `exec.simd` is a pure
     // wall-clock knob — every kernel, including the fixed-tree
     // reductions, returns identical bits under either implementation, so
     // whole training runs agree bitwise across dispatch modes (and the

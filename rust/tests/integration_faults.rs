@@ -1,5 +1,5 @@
 //! Integration: the deterministic fault & straggler scenario engine with
-//! partial-participation sync rounds (DESIGN.md §5), through the full
+//! partial-participation sync rounds (DESIGN.md §6), through the full
 //! threaded trainer on the synthetic backend.
 //!
 //! * With `[faults]` absent (or explicitly zeroed) the trainer takes the
@@ -189,7 +189,7 @@ fn worker_loop_injects_the_crash_tombstone() {
     // keep replying Crashed to later commands rather than deadlocking.
     cmd_tx.send(Cmd::LocalStep { t: 3, lr: 0.1 }).unwrap();
     assert!(matches!(reply_rx.recv().unwrap(), Reply::Crashed { worker: 0, step: 3 }));
-    cmd_tx.send(Cmd::CollectState { sx: Vec::new(), sa: Vec::new() }).unwrap();
+    cmd_tx.send(Cmd::CollectState { sx: Vec::new(), sa: Vec::new(), raw: false }).unwrap();
     assert!(matches!(reply_rx.recv().unwrap(), Reply::Crashed { worker: 0, .. }));
     cmd_tx.send(Cmd::Stop).unwrap();
     join.join().unwrap();

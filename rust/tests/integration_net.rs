@@ -1,0 +1,287 @@
+//! Multi-process networked-transport pins (DESIGN.md §4): real leader and
+//! worker OS processes of the compiled `adaalter` binary over loopback
+//! TCP / Unix-domain sockets, pinned **bit for bit** against the
+//! in-process reference transports — identical final parameters, loss
+//! traces and final-eval bits — with the real socket byte counters pinned
+//! exactly equal to the booked (simulated α–β) accounting for every wire
+//! codec. Failure paths: a worker process killed mid-run surfaces as a
+//! crash tombstone (quorum runs continue, policy-free runs error cleanly,
+//! nothing deadlocks), unreachable leaders produce the field-named
+//! connect error, and a mismatched config fingerprint is rejected at
+//! handshake without poisoning the run.
+//!
+//! CI runs this suite serialized (`--test-threads=1`) in release.
+
+mod common;
+
+use adaalter::config::{ExperimentConfig, TomlDoc};
+use adaalter::coordinator::RunResult;
+use adaalter::util::json::Json;
+
+/// One deployment's experiment TOML: synthetic backend at d = 64, every
+/// step logged (so the loss trace pins cover every iteration), generous
+/// accept window for slow CI hosts.
+fn net_toml(algo: &str, h: u64, workers: usize, steps: u64, codec: &str, listen: &str) -> String {
+    let comm = match codec {
+        "f32" => "[comm]\ntransport = \"tcp\"\n".to_string(),
+        "bf16" => "[comm]\ntransport = \"tcp\"\n[precision]\nwire = \"bf16\"\n".to_string(),
+        "qsgd" => {
+            "[comm]\ntransport = \"tcp\"\ncompression = \"qsgd\"\nqsgd_levels = 15\n".to_string()
+        }
+        other => panic!("unknown codec {other}"),
+    };
+    format!(
+        "[train]\n\
+         workers = {workers}\n\
+         sync_period = {h}\n\
+         steps = {steps}\n\
+         steps_per_epoch = 50\n\
+         log_every = 1\n\
+         backend = \"rust_math\"\n\
+         rust_math_dim = 64\n\
+         [optim]\n\
+         algorithm = \"{algo}\"\n\
+         warmup_steps = 10\n\
+         {comm}\
+         [net]\n\
+         listen = \"{listen}\"\n\
+         connect_timeout_s = 60.0\n"
+    )
+}
+
+/// The in-process reference for a networked TOML: the identical
+/// experiment over the equivalent in-process transport — `simulated` for
+/// the dense f32 wire (same SimulatedCollective the networked leader
+/// bills through), `channel` for the lossy codecs (CompressedCollective,
+/// whose byte arithmetic WireCollective mirrors).
+fn reference_run(toml: &str, codec: &str) -> RunResult {
+    let swap = match codec {
+        "f32" => "transport = \"simulated\"",
+        _ => "transport = \"channel\"",
+    };
+    let ref_toml = toml.replace("transport = \"tcp\"", swap);
+    let cfg = ExperimentConfig::from_doc(&TomlDoc::parse(&ref_toml).unwrap()).unwrap();
+    common::run(cfg)
+}
+
+fn u64_field(rep: &Json, key: &str) -> u64 {
+    rep.req(key).unwrap().num().unwrap() as u64
+}
+
+/// The tentpole pin: the deployment's `net_report.json` carries the same
+/// bits as the in-process reference run, and the leader's real accounted
+/// socket payload bytes equal the booked traffic exactly.
+fn assert_report_matches(rep: &Json, r: &RunResult, what: &str) {
+    let got: Vec<u32> = rep
+        .req("final_x_bits")
+        .unwrap()
+        .arr()
+        .unwrap()
+        .iter()
+        .map(|j| j.num().unwrap() as u32)
+        .collect();
+    let want: Vec<u32> = r.final_x.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got, want, "{what}: final x diverged");
+
+    let steps = rep.req("steps").unwrap().arr().unwrap();
+    assert_eq!(steps.len(), r.recorder.steps.len(), "{what}: trace lengths differ");
+    for (row, p) in steps.iter().zip(&r.recorder.steps) {
+        let row = row.arr().unwrap();
+        assert_eq!(row[0].num().unwrap() as u64, p.step, "{what}: step ids diverged");
+        assert_eq!(
+            row[1].str().unwrap(),
+            format!("{:016x}", p.train_loss.to_bits()),
+            "{what}: loss trace diverged at step {}",
+            p.step
+        );
+    }
+
+    let eval = r.final_eval.as_ref().expect("reference has a final eval");
+    assert_eq!(
+        rep.req("final_eval_loss_bits").unwrap().str().unwrap(),
+        format!("{:016x}", eval.loss.to_bits()),
+        "{what}: final eval diverged"
+    );
+
+    let (syncs, booked) = r.recorder.comm();
+    assert_eq!(u64_field(rep, "syncs"), syncs, "{what}: sync counts differ");
+    assert_eq!(u64_field(rep, "booked_bytes"), booked, "{what}: booked bytes differ");
+    // The real wire pin: the leader counted the actual codec payload
+    // bytes that crossed its sockets — they must equal the simulated
+    // accounting byte for byte, and the all-in frame traffic (headers,
+    // handshake, control frames) is strictly larger.
+    assert_eq!(
+        u64_field(rep, "accounted_bytes"),
+        booked,
+        "{what}: real socket bytes != booked accounting"
+    );
+    assert!(
+        u64_field(rep, "total_bytes") > u64_field(rep, "accounted_bytes"),
+        "{what}: total wire traffic must exceed the accounted payloads"
+    );
+}
+
+/// Run one deployment fault-free and pin it against the reference.
+fn pin(algo: &str, h: u64, workers: usize, codec: &str, tag: &str) {
+    let steps = 36;
+    let toml = net_toml(algo, h, workers, steps, codec, "127.0.0.1:0");
+    let run = common::run_net(&toml, workers, tag, &[]);
+    for (w, st) in run.workers.iter().enumerate() {
+        assert!(st.success(), "{tag}: worker {w} failed: {st}");
+    }
+    assert!(run.leader.success(), "{tag}: leader failed: {}", run.leader);
+    let rep = common::net_report(&run.out_dir);
+    let reference = reference_run(&toml, codec);
+    assert_report_matches(&rep, &reference, tag);
+}
+
+// --- The equivalence matrix: algorithms × codecs × worker counts ----------
+
+#[test]
+fn tcp_f32_pins_bitwise_against_in_process() {
+    pin("adagrad", 1, 2, "f32", "f32_adagrad_w2");
+    pin("adagrad", 1, 4, "f32", "f32_adagrad_w4");
+    pin("local_adaalter", 4, 2, "f32", "f32_laa_h4_w2");
+    pin("local_adaalter", 4, 4, "f32", "f32_laa_h4_w4");
+    pin("local_adaalter", 16, 4, "f32", "f32_laa_h16_w4");
+}
+
+#[test]
+fn tcp_bf16_pins_bitwise_against_in_process() {
+    pin("adagrad", 1, 2, "bf16", "bf16_adagrad_w2");
+    pin("adagrad", 1, 4, "bf16", "bf16_adagrad_w4");
+    pin("local_adaalter", 4, 2, "bf16", "bf16_laa_h4_w2");
+    pin("local_adaalter", 4, 4, "bf16", "bf16_laa_h4_w4");
+    pin("local_adaalter", 16, 4, "bf16", "bf16_laa_h16_w4");
+}
+
+#[test]
+fn tcp_qsgd_pins_bitwise_against_in_process() {
+    pin("adagrad", 1, 2, "qsgd", "qsgd_adagrad_w2");
+    pin("adagrad", 1, 4, "qsgd", "qsgd_adagrad_w4");
+    pin("local_adaalter", 4, 2, "qsgd", "qsgd_laa_h4_w2");
+    pin("local_adaalter", 4, 4, "qsgd", "qsgd_laa_h4_w4");
+    pin("local_adaalter", 16, 4, "qsgd", "qsgd_laa_h16_w4");
+}
+
+/// Unix-domain sockets run the identical protocol through the same
+/// framing — one scenario pins the `uds` socket kind end to end.
+#[test]
+fn uds_f32_pins_bitwise_against_in_process() {
+    let dir = common::tmpdir("uds_laa_h4");
+    let toml = net_toml("local_adaalter", 4, 2, 36, "f32", &format!("{dir}/leader.sock"))
+        .replace("transport = \"tcp\"", "transport = \"uds\"");
+    let run = common::run_net_in(&dir, &toml, 2, &[]);
+    for (w, st) in run.workers.iter().enumerate() {
+        assert!(st.success(), "uds: worker {w} failed: {st}");
+    }
+    assert!(run.leader.success(), "uds: leader failed: {}", run.leader);
+    let rep = common::net_report(&run.out_dir);
+    let reference =
+        reference_run(&toml.replace("transport = \"uds\"", "transport = \"tcp\""), "f32");
+    assert_report_matches(&rep, &reference, "uds_laa_h4");
+}
+
+// --- Failure paths --------------------------------------------------------
+
+/// A worker process killed mid-run (process exit, not a cooperative
+/// tombstone): under a quorum participation policy the leader absorbs the
+/// EOF as a crash tombstone and finishes on the survivors.
+#[test]
+fn killed_worker_process_tombstones_under_quorum() {
+    let mut toml = net_toml("local_adaalter", 4, 4, 36, "f32", "127.0.0.1:0");
+    toml.push_str("[faults]\nquorum = 2\n");
+    toml = toml.replace("[optim]", "fused = false\n[optim]");
+    let env = vec![(3usize, adaalter::comm::net::EXIT_AT_STEP_ENV.to_string(), "7".to_string())];
+    let run = common::run_net(&toml, 4, "kill_quorum", &env);
+    assert_eq!(
+        run.workers[3].code(),
+        Some(3),
+        "killed worker must exit through the kill hook: {}",
+        run.workers[3]
+    );
+    for (w, st) in run.workers.iter().take(3).enumerate() {
+        assert!(st.success(), "survivor {w} failed: {st}");
+    }
+    assert!(run.leader.success(), "leader must finish on the survivors: {}", run.leader);
+    let rep = common::net_report(&run.out_dir);
+    // Crash rounds ship frames the survivor accounting no longer books
+    // (the dead worker's last SyncStep), so the exact-equality pin is a
+    // fault-free property; here the counters just have to be sane.
+    assert!(u64_field(&rep, "total_bytes") > u64_field(&rep, "accounted_bytes"));
+    assert!(u64_field(&rep, "syncs") > 0);
+}
+
+/// The same kill without any participation policy: the leader reports a
+/// clean typed protocol error (no deadlock, no corrupted state) and the
+/// surviving workers exit via the shutdown Stop.
+#[test]
+fn killed_worker_process_fails_cleanly_without_quorum() {
+    let toml = net_toml("local_adaalter", 4, 2, 36, "f32", "127.0.0.1:0");
+    let env = vec![(1usize, adaalter::comm::net::EXIT_AT_STEP_ENV.to_string(), "7".to_string())];
+    let run = common::run_net(&toml, 2, "kill_noquorum", &env);
+    assert_eq!(run.workers[1].code(), Some(3), "killed worker: {}", run.workers[1]);
+    assert!(
+        !run.leader.success(),
+        "leader must fail cleanly when a worker dies with no participation policy"
+    );
+    assert!(run.workers[0].success(), "survivor must exit via Stop: {}", run.workers[0]);
+}
+
+/// No leader anywhere: the worker's connect loop exhausts its retries and
+/// reports the `net.connect`-field-named config error.
+#[test]
+fn unreachable_leader_yields_field_named_connect_error() {
+    let dir = common::tmpdir("connect_err");
+    let mut toml = net_toml("local_adaalter", 4, 2, 8, "f32", "");
+    toml.push_str("connect_retries = 2\nretry_backoff_s = 0.01\n");
+    let cfg_path = common::write_cfg(&dir, &toml);
+    let out = std::process::Command::new(common::adaalter_bin())
+        .args(["train", "--config", &cfg_path, "--role", "worker"])
+        .args(["--worker-id", "0", "--connect", "127.0.0.1:9", "--quiet"])
+        .output()
+        .expect("spawn worker");
+    assert!(!out.status.success(), "worker must fail with no leader listening");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("net.connect"), "error must name the config field: {err}");
+    assert!(err.contains("net.connect_retries = 2"), "error must show the retry budget: {err}");
+}
+
+/// A worker started with a *different* experiment config is rejected at
+/// handshake (config-fingerprint mismatch) — and the leader keeps
+/// listening, so a correctly-configured fleet still completes bitwise.
+#[test]
+fn config_fingerprint_mismatch_rejected_at_handshake() {
+    let dir = common::tmpdir("fp_mismatch");
+    let toml = net_toml("local_adaalter", 4, 2, 36, "f32", "127.0.0.1:0");
+    let cfg_path = common::write_cfg(&dir, &toml);
+    let bad_toml = net_toml("local_adaalter", 8, 2, 36, "f32", "127.0.0.1:0");
+    let bad_path = format!("{dir}/bad.toml");
+    std::fs::write(&bad_path, &bad_toml).unwrap();
+
+    let mut leader = common::spawn_leader(&cfg_path, &dir);
+    let out = std::process::Command::new(common::adaalter_bin())
+        .args(["train", "--config", &bad_path, "--role", "worker"])
+        .args(["--worker-id", "0", "--port-file", &format!("{dir}/leader.addr")])
+        .arg("--quiet")
+        .output()
+        .expect("spawn mismatched worker");
+    assert!(!out.status.success(), "mismatched worker must be rejected");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("config mismatch"), "rejection must say why: {err}");
+
+    // The leader is still accepting: the correct fleet completes, and the
+    // run stays bitwise-identical to the in-process reference.
+    let mut kids: Vec<common::ChildGuard> =
+        (0..2).map(|w| common::spawn_worker(&cfg_path, &dir, w, &[])).collect();
+    let limit = std::time::Duration::from_secs(120);
+    for g in &mut kids {
+        let st = g.wait_within(limit);
+        assert!(st.success(), "{}: {st}", g.label);
+    }
+    let st = leader.wait_within(limit);
+    assert!(st.success(), "leader: {st}");
+    let rep = common::net_report(&dir);
+    let reference = reference_run(&toml, "f32");
+    assert_report_matches(&rep, &reference, "fp_mismatch");
+}

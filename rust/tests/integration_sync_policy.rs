@@ -1,4 +1,4 @@
-//! Integration: the synchronization-policy subsystem (DESIGN.md §4)
+//! Integration: the synchronization-policy subsystem (DESIGN.md §5)
 //! through the full threaded trainer on the synthetic backend.
 //!
 //! * `policy = "fixed"` is pinned **bitwise** against the pre-policy

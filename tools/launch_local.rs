@@ -1,0 +1,166 @@
+//! `launch_local`: spawn a complete networked deployment on this machine —
+//! one `adaalter` leader process plus one worker process per configured
+//! worker, wired over loopback TCP (or a Unix socket) with port-0
+//! port-file discovery (DESIGN.md §4).
+//!
+//! ```text
+//! launch_local --experiment tcp-loopback [--set k=v]... [--out-dir d]
+//! launch_local --config file.toml [--uds]
+//! ```
+//!
+//! The tool resolves the config exactly like `adaalter train` (preset or
+//! file, then `--set` overrides) to learn the worker count, then execs the
+//! sibling `adaalter` binary for every role. Worker stdout/stderr are
+//! inherited; the leader's exit code is the tool's exit code, and every
+//! child is killed if any other child fails first.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, ExitCode};
+
+use adaalter::cli::Args;
+use adaalter::config::{self, ExperimentConfig, TomlDoc};
+use adaalter::error::{Error, Result};
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("launch_local: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// A child process killed on drop, so one failed role never leaves the
+/// rest of the deployment running.
+struct Guard {
+    label: String,
+    child: Child,
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// The `adaalter` binary next to this one.
+fn adaalter_bin() -> Result<PathBuf> {
+    let me = std::env::current_exe()?;
+    let bin = me
+        .parent()
+        .ok_or_else(|| Error::Config("cannot locate the adaalter binary".into()))?
+        .join("adaalter");
+    if !bin.exists() {
+        return Err(Error::Config(format!(
+            "adaalter binary not found at {} (build the full workspace first)",
+            bin.display()
+        )));
+    }
+    Ok(bin)
+}
+
+fn run(argv: &[String]) -> Result<ExitCode> {
+    let args = Args::parse(
+        argv,
+        &["experiment", "config", "set", "out-dir"],
+        &["uds", "quiet", "help"],
+    )?;
+    if args.has("help") || args.command == "help" {
+        println!(
+            "launch_local — run an adaalter leader + worker fleet over loopback sockets
+USAGE:
+  launch_local --experiment <preset> [--set k=v]... [--out-dir d] [--uds] [--quiet]
+  launch_local --config <file.toml>  [--set k=v]... [--out-dir d] [--uds] [--quiet]"
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    // Resolve the config the same way `adaalter train` does, so the
+    // worker count (and validation errors) match what the leader will see.
+    let mut doc = if let Some(path) = args.get("config") {
+        TomlDoc::load(path)?
+    } else {
+        config::preset_doc(args.get_or("experiment", "tcp-loopback"))?
+    };
+    let mut sets: Vec<String> = args.get_all("set").to_vec();
+    if args.has("uds") {
+        sets.push("comm.transport=uds".to_string());
+    }
+    for spec in &sets {
+        ExperimentConfig::override_from_doc(&mut doc, spec)?;
+    }
+    let cfg = ExperimentConfig::from_doc(&doc)?;
+    if !cfg.comm.networked() {
+        return Err(Error::Config(format!(
+            "launch_local needs comm.transport = \"tcp\" or \"uds\", got {:?} \
+             (try --experiment tcp-loopback)",
+            cfg.comm.transport
+        )));
+    }
+
+    let out_dir = args.get_or("out-dir", &cfg.out_dir).to_string();
+    std::fs::create_dir_all(&out_dir)?;
+    let port_file = format!("{out_dir}/leader.addr");
+    let _ = std::fs::remove_file(&port_file);
+    let listen = if args.has("uds") {
+        format!("{out_dir}/leader.sock")
+    } else {
+        "127.0.0.1:0".to_string()
+    };
+    let bin = adaalter_bin()?;
+
+    let common_args = |cmd: &mut Command| {
+        cmd.arg("train");
+        if let Some(path) = args.get("config") {
+            cmd.args(["--config", path]);
+        } else {
+            cmd.args(["--experiment", args.get_or("experiment", "tcp-loopback")]);
+        }
+        for spec in &sets {
+            cmd.args(["--set", spec]);
+        }
+        if args.has("quiet") {
+            cmd.arg("--quiet");
+        }
+    };
+
+    let mut leader = Command::new(&bin);
+    common_args(&mut leader);
+    leader.args(["--role", "leader", "--listen", &listen]);
+    leader.args(["--port-file", &port_file, "--out-dir", &out_dir]);
+    let mut leader = Guard { label: "leader".into(), child: leader.spawn()? };
+
+    let mut workers: Vec<Guard> = Vec::new();
+    for w in 0..cfg.train.workers {
+        let mut c = Command::new(&bin);
+        common_args(&mut c);
+        c.args(["--role", "worker", "--worker-id", &w.to_string()]);
+        c.args(["--port-file", &port_file]);
+        workers.push(Guard { label: format!("worker {w}"), child: c.spawn()? });
+    }
+
+    // The leader finishes last in a clean run (it sends Stop on the way
+    // out); wait for the workers first so their failures surface before a
+    // leader timeout does.
+    let mut failed: Option<String> = None;
+    for g in &mut workers {
+        let status = g.child.wait()?;
+        if !status.success() && failed.is_none() {
+            failed = Some(format!("{} exited with {status}", g.label));
+        }
+    }
+    let status = leader.child.wait()?;
+    if !status.success() && failed.is_none() {
+        failed = Some(format!("leader exited with {status}"));
+    }
+    match failed {
+        Some(msg) => {
+            eprintln!("launch_local: {msg}");
+            Ok(ExitCode::FAILURE)
+        }
+        None => Ok(ExitCode::SUCCESS),
+    }
+}
