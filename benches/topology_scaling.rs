@@ -1,0 +1,95 @@
+//! Bench: topology / shard-count scaling of one synchronization round
+//! under the α–β cost model (DESIGN.md §3) — the ROADMAP item-2 claim
+//! that the single-leader PS incast is the scaling bottleneck, and that
+//! both the k-shard parameter server (`comm.shards = k`) and the fan-out
+//! tree reduction (`net.topology = "tree"`) remove it.
+//!
+//! Pure model math (no wall clock): every number replicates the
+//! `NetModel` f64 arithmetic exactly, so the `traffic_bytes` metrics are
+//! ratcheted bit-exact by `tools/bench_diff.rs` and the `speedup`
+//! metrics are conservative warn-only floors.
+//!
+//! Run: `cargo bench --bench topology_scaling`
+
+use adaalter::comm::{tree_depth, NetModel};
+use adaalter::config::NetConfig;
+use adaalter::util::timing::BenchSink;
+
+/// A cost model for one (topology, fan-out, shards) cell, at the default
+/// calibration (α = 50 µs, β = β_server = 132 GB/s).
+fn model(topology: &str, fanout: usize, shards: usize) -> NetModel {
+    let cfg = NetConfig { topology: topology.into(), tree_fanout: fanout, ..Default::default() };
+    NetModel::from_config(&cfg).with_shards(shards)
+}
+
+fn main() {
+    // Paper-scale payload: a 33M-parameter f32 vector, shipped twice per
+    // round (params + AdaGrad denominators — Alg. 4 lines 11–12).
+    let d = 33_000_000u64;
+    let payload = 4 * d;
+    let vectors = 2u64;
+    let ns = [8usize, 32, 64];
+    let configs: [(&str, &str, usize, usize); 5] = [
+        ("ps_k1", "ps", 2, 1),
+        ("ps_k4", "ps", 2, 4),
+        ("ps_k8", "ps", 2, 8),
+        ("tree_f2", "tree", 2, 1),
+        ("tree_f4", "tree", 4, 1),
+    ];
+    let base = model("ps", 2, 1);
+    let mut sink = BenchSink::new("topology_scaling");
+
+    println!("=== sync-round time (s) vs n — α–β model, {d} f32 params × {vectors} vectors ===\n");
+    println!("{:<10} {:>12} {:>12} {:>12}", "config", "n=8", "n=32", "n=64");
+    for (name, topo, fanout, shards) in configs {
+        let m = model(topo, fanout, shards);
+        let mut metrics: Vec<(String, f64)> = Vec::new();
+        let mut row = String::new();
+        for &n in &ns {
+            let t = m.sync_time(n, payload, vectors);
+            row.push_str(&format!(" {t:>12.5}"));
+            metrics.push((format!("traffic_bytes_n{n}"), m.sync_traffic_bytes(n, payload, vectors) as f64));
+            metrics.push((format!("round_time_s_n{n}"), t));
+            metrics.push((
+                format!("speedup_vs_single_leader_n{n}"),
+                base.sync_time(n, payload, vectors) / t,
+            ));
+        }
+        println!("{name:<10}{row}");
+        let refs: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        sink.value(name, &refs);
+    }
+
+    // The tentpole shape claim: by n = 32 the single-leader incast loses
+    // to every alternative (tree_f4 may still trail at n = 8 — two deep
+    // levels of 4-way serialisation against a mild 8-way incast).
+    println!("\n=== shape checks ===");
+    for &n in &[32usize, 64] {
+        let ps = base.sync_time(n, payload, vectors);
+        for (name, topo, fanout, shards) in
+            [("ps_k4", "ps", 2, 4), ("ps_k8", "ps", 2, 8), ("tree_f2", "tree", 2, 1), ("tree_f4", "tree", 4, 1)]
+        {
+            let t = model(topo, fanout, shards).sync_time(n, payload, vectors);
+            println!(
+                "n={n:<3} {name:<8} {t:>9.5}s vs single-leader {ps:>9.5}s — ×{:.2} {}",
+                ps / t,
+                ok(t < ps)
+            );
+            assert!(t < ps, "{name} must beat the single-leader incast at n={n}");
+        }
+    }
+    println!(
+        "\ntree depth at n=64: ⌈log₂⌉ = {} levels, ⌈log₄⌉ = {} levels",
+        tree_depth(64, 2),
+        tree_depth(64, 4)
+    );
+    sink.finish();
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "[OK]"
+    } else {
+        "[MISMATCH]"
+    }
+}

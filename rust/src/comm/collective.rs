@@ -32,6 +32,7 @@
 
 use crate::comm::compress::{QsgdEncoded, QsgdQuantizer, SparseGrad, TopKSparsifier};
 use crate::comm::netmodel::{NetModel, Topology};
+use crate::comm::shard::{mean_into_sharded, ShardPlan};
 use crate::config::ExperimentConfig;
 use crate::error::{Error, Result};
 use crate::sim::Calibration;
@@ -382,20 +383,38 @@ fn check_acc_pairing(accs_some: bool, avg_some: bool) -> Result<()> {
 /// The current in-process mpsc lockstep: exact f32 means in the leader's
 /// address space, zero modeled cost. Bitwise-identical to the seed trainer
 /// (it runs the same [`math::mean_into`] the trainer inlined before).
+///
+/// With `comm.shards = k` the averaging runs per shard range
+/// ([`ShardPlan`]) — the dataflow the k shard servers execute in
+/// parallel — which is bitwise-identical to the dense mean (per-coordinate
+/// kernels; pinned in `comm::shard`).
 pub struct ChannelCollective {
     n: usize,
     d: usize,
+    plan: ShardPlan,
 }
 
 impl ChannelCollective {
-    /// `n` workers, model dimension `d`.
+    /// `n` workers, model dimension `d`, single leader (the unsharded,
+    /// seed-bitwise transport).
     pub fn new(n: usize, d: usize) -> Self {
-        ChannelCollective { n, d }
+        ChannelCollective::sharded(n, d, 1)
+    }
+
+    /// `n` workers, model dimension `d`, `shards` leader shards
+    /// (`comm.shards`; range partition of `[0, d)`).
+    pub fn sharded(n: usize, d: usize, shards: usize) -> Self {
+        ChannelCollective { n, d, plan: ShardPlan::new(d, shards) }
     }
 
     /// Model dimension.
     pub fn d(&self) -> usize {
         self.d
+    }
+
+    /// The leader-shard range partition.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
     }
 }
 
@@ -405,7 +424,11 @@ impl Collective for ChannelCollective {
     }
 
     fn label(&self) -> String {
-        "channel".into()
+        if self.plan.is_dense() {
+            "channel".into()
+        } else {
+            format!("channel(shards={})", self.plan.shards())
+        }
     }
 
     fn gather_grads(&mut self, grads: &mut [Vec<f32>]) -> Result<CommReport> {
@@ -422,7 +445,7 @@ impl Collective for ChannelCollective {
     }
 
     fn allreduce_mean(&mut self, inputs: &[&[f32]], out: &mut [f32]) -> Result<CommReport> {
-        math::mean_into(inputs, out);
+        mean_into_sharded(&self.plan, inputs, out);
         Ok(CommReport {
             rounds: 1,
             drift_sq: mean_sq_dist(inputs, out),
@@ -438,9 +461,9 @@ impl Collective for ChannelCollective {
         avg_acc: Option<&mut [f32]>,
     ) -> Result<CommReport> {
         check_acc_pairing(accs.is_some(), avg_acc.is_some())?;
-        math::mean_into(xs, avg_x);
+        mean_into_sharded(&self.plan, xs, avg_x);
         if let (Some(accs), Some(avg_acc)) = (accs, avg_acc) {
-            math::mean_into(accs, avg_acc);
+            mean_into_sharded(&self.plan, accs, avg_acc);
         }
         Ok(CommReport {
             rounds: 1,
@@ -476,7 +499,7 @@ impl SimCost {
     /// calibration (DESIGN.md §3).
     pub fn from_config(cfg: &ExperimentConfig, calib: &Calibration) -> Self {
         SimCost {
-            net: NetModel::from_config(&cfg.net),
+            net: NetModel::from_config(&cfg.net).with_shards(cfg.comm.shards),
             model_bytes: calib.vector_bytes(),
             overlap: calib.overlap,
             periodic_overlap: calib.periodic_overlap,
@@ -506,9 +529,19 @@ impl SimulatedCollective {
     /// critical path, not the worker skew.
     fn charge(&self, n: usize, vectors: u64, periodic: bool) -> CommReport {
         let gamma = if periodic { self.cost.periodic_overlap } else { self.cost.overlap };
+        // The time model divides the incast by `shards` internally; the
+        // straggler observation is likewise the per-shard-server spread.
         let time_s = (1.0 - gamma) * self.cost.net.sync_time(n, self.cost.model_bytes, vectors);
-        let real_bytes = 4 * self.inner.d() as u64;
-        let bytes = self.cost.net.sync_traffic_bytes(n, real_bytes, vectors);
+        // Per-shard byte accounting: each shard server books the traffic
+        // of its own index range. The traffic formulas are linear in the
+        // payload, so the sum over the range partition equals the dense
+        // total exactly (u64 arithmetic, no rounding).
+        let bytes = self
+            .inner
+            .plan()
+            .ranges()
+            .map(|r| self.cost.net.sync_traffic_bytes(n, 4 * r.len() as u64, vectors))
+            .sum();
         let straggler_s = self.cost.net.straggler_spread_s(n, self.cost.model_bytes * vectors);
         CommReport { bytes, time_s, rounds: 1, drift_sq: 0.0, straggler_s }
     }
@@ -517,6 +550,7 @@ impl SimulatedCollective {
         match self.cost.net.topology {
             Topology::ParameterServer => "ps",
             Topology::RingAllReduce => "allreduce",
+            Topology::TreeAllReduce => "tree",
         }
     }
 }
@@ -527,7 +561,15 @@ impl Collective for SimulatedCollective {
     }
 
     fn label(&self) -> String {
-        format!("simulated({})", self.topology_name())
+        if self.inner.plan().is_dense() {
+            format!("simulated({})", self.topology_name())
+        } else {
+            format!(
+                "simulated({}, shards={})",
+                self.topology_name(),
+                self.inner.plan().shards()
+            )
+        }
     }
 
     fn gather_grads(&mut self, grads: &mut [Vec<f32>]) -> Result<CommReport> {
@@ -694,6 +736,9 @@ pub(crate) fn grad_stream(w: usize) -> usize {
 impl CompressedCollective {
     /// QSGD stochastic quantization with `s` levels.
     pub fn qsgd(inner: ChannelCollective, net: NetModel, s: u8, seed: u64) -> Self {
+        // Whole-vector norms don't commute with a range partition
+        // (CommConfig::validate rejects the combination from config).
+        debug_assert!(inner.plan().is_dense(), "qsgd does not compose with comm.shards > 1");
         let d = inner.d();
         CompressedCollective {
             inner,
@@ -733,6 +778,9 @@ impl CompressedCollective {
 
     /// Magnitude top-k with error feedback, keeping fraction `keep`.
     pub fn topk(inner: ChannelCollective, net: NetModel, keep: f64) -> Self {
+        // Global magnitude selection doesn't commute with a range
+        // partition (CommConfig::validate rejects the combination).
+        debug_assert!(inner.plan().is_dense(), "topk does not compose with comm.shards > 1");
         let d = inner.d();
         CompressedCollective {
             inner,
@@ -784,11 +832,32 @@ impl CompressedCollective {
                 StreamFamily::SyncAcc => kernels::delta_encode(src, base_acc, buf),
                 StreamFamily::Raw => buf.copy_from_slice(src),
             }
-            bytes += codec.roundtrip(up_stream(n, family, w), buf);
+            // With leader shards, the up leg is one message per shard
+            // server: the elementwise codecs (f32/bf16) encode each range
+            // exactly as they would the dense vector, and the per-range
+            // byte bills sum to the dense total exactly (enc_len is
+            // linear). The lossy codecs only ever see the dense plan.
+            let plan = inner.plan();
+            if plan.is_dense() {
+                bytes += codec.roundtrip(up_stream(n, family, w), buf);
+            } else {
+                for r in plan.ranges().filter(|r| !r.is_empty()) {
+                    bytes += codec.roundtrip(up_stream(n, family, w), &mut buf[r]);
+                }
+            }
         }
         mean_buf.resize(d, 0.0);
         kernels::mean_into(&delta_bufs[..sources.len()], mean_buf);
-        bytes += n as u64 * codec.roundtrip(down_stream(n, family), mean_buf);
+        // Down leg: each shard server broadcasts its averaged range to all
+        // n workers (again summing to exactly the dense bill).
+        let plan = inner.plan();
+        if plan.is_dense() {
+            bytes += n as u64 * codec.roundtrip(down_stream(n, family), mean_buf);
+        } else {
+            for r in plan.ranges().filter(|r| !r.is_empty()) {
+                bytes += n as u64 * codec.roundtrip(down_stream(n, family), &mut mean_buf[r]);
+            }
+        }
         match family {
             StreamFamily::SyncX => {
                 kernels::delta_decode(base_x, mean_buf, out);
@@ -830,7 +899,11 @@ impl Collective for CompressedCollective {
     }
 
     fn label(&self) -> String {
-        self.codec.label()
+        if self.inner.plan().is_dense() {
+            self.codec.label()
+        } else {
+            format!("{}(shards={})", self.codec.label(), self.inner.plan().shards())
+        }
     }
 
     fn broadcast(&mut self, x: &mut [f32]) -> Result<CommReport> {
@@ -854,8 +927,15 @@ impl Collective for CompressedCollective {
             return self.inner.gather_grads(grads);
         }
         let mut bytes = 0u64;
+        let plan = self.inner.plan().clone();
         for (w, g) in grads.iter_mut().enumerate() {
-            bytes += self.codec.roundtrip(grad_stream(w), g);
+            if plan.is_dense() {
+                bytes += self.codec.roundtrip(grad_stream(w), g);
+            } else {
+                for r in plan.ranges().filter(|r| !r.is_empty()) {
+                    bytes += self.codec.roundtrip(grad_stream(w), &mut g[r]);
+                }
+            }
         }
         self.inner.gather_grads(grads)?;
         // Dense model pull back to every worker (2 bytes/elem on the bf16
@@ -944,8 +1024,17 @@ pub fn build_collective(
             cfg.comm.transport
         )));
     }
+    if cfg.comm.shards > 1 && cfg.net.topology != "ps" {
+        // Cross-section rule, re-run here for programmatically-built
+        // configs (ExperimentConfig::validate owns the TOML path).
+        return Err(Error::Config(format!(
+            "comm.shards > 1 shards the parameter server; net.topology must \
+             be \"ps\", got {:?}",
+            cfg.net.topology
+        )));
+    }
     let n = cfg.train.workers;
-    let base = ChannelCollective::new(n, d);
+    let base = ChannelCollective::sharded(n, d, cfg.comm.shards);
     let coll: Box<dyn Collective> = match cfg.comm.compression.as_str() {
         "none" => match cfg.comm.transport.as_str() {
             // The bf16 wire rides the compressed-collective machinery
@@ -953,7 +1042,7 @@ pub fn build_collective(
             // channel.
             "channel" if cfg.precision.wire_bf16() => Box::new(CompressedCollective::bf16(
                 base,
-                NetModel::from_config(&cfg.net),
+                NetModel::from_config(&cfg.net).with_shards(cfg.comm.shards),
             )),
             "channel" => Box::new(base),
             _ => Box::new(SimulatedCollective::new(
@@ -1377,6 +1466,133 @@ mod tests {
         assert_eq!(build_collective(&cfg, &calib, 16).unwrap().label(), "topk(0.01)");
         cfg.comm.compression = "zstd".into();
         assert!(build_collective(&cfg, &calib, 16).is_err());
+    }
+
+    #[test]
+    fn sharded_channel_sync_is_bitwise_dense() {
+        // The tentpole equivalence pin at the collective layer: `shards = k`
+        // averages per range, and every installed bit matches `shards = 1`.
+        // d deliberately not divisible by k (uneven tail ranges).
+        let (n, d, k) = (3usize, 131usize, 4usize);
+        let xs: Vec<Vec<f32>> =
+            (0..n).map(|w| (0..d).map(|i| ((i * 7 + w) as f32 * 0.013).sin()).collect()).collect();
+        let accs: Vec<Vec<f32>> =
+            (0..n).map(|w| (0..d).map(|i| ((i + w * 3) as f32 * 0.029).cos().abs()).collect()).collect();
+        let mut dense = ChannelCollective::new(n, d);
+        let mut sharded = ChannelCollective::sharded(n, d, k);
+        assert_eq!(dense.label(), "channel");
+        assert_eq!(sharded.label(), "channel(shards=4)");
+        let (mut dx, mut da) = (vec![0.0f32; d], vec![0.0f32; d]);
+        let (mut sx, mut sa) = (vec![0.0f32; d], vec![0.0f32; d]);
+        dense.sync_round(&refs(&xs), Some(&refs(&accs)), &mut dx, Some(&mut da)).unwrap();
+        sharded.sync_round(&refs(&xs), Some(&refs(&accs)), &mut sx, Some(&mut sa)).unwrap();
+        assert!(dx.iter().zip(&sx).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(da.iter().zip(&sa).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn sharded_simulated_books_dense_bytes_and_divided_incast() {
+        let calib = Calibration::paper_v100();
+        let (d, k) = (131usize, 4usize);
+        let mut cfg = ExperimentConfig::default();
+        let n = cfg.train.workers;
+        let dense_cost = SimCost::from_config(&cfg, &calib);
+        cfg.comm.shards = k;
+        let cost = SimCost::from_config(&cfg, &calib);
+        let net = cost.net.clone();
+        assert_eq!(net.shards, k);
+        let mut sim =
+            SimulatedCollective::new(ChannelCollective::sharded(n, d, k), cost);
+        assert_eq!(sim.label(), "simulated(ps, shards=4)");
+
+        let xs: Vec<Vec<f32>> = (0..n).map(|_| vec![2.0f32; d]).collect();
+        let mut avg = vec![0.0f32; d];
+        let rep = sim.sync_round(&refs(&xs), None, &mut avg, None).unwrap();
+        // Traffic is shard-invariant: the per-range bills sum to the exact
+        // dense total (linearity, u64 — no rounding even with uneven
+        // ranges).
+        assert_eq!(rep.bytes, dense_cost.net.sync_traffic_bytes(n, 4 * d as u64, 1));
+        // Time: the k shard servers split the incast; strictly faster than
+        // the single-leader round, and exactly what the sharded model says.
+        let want_t = (1.0 - calib.periodic_overlap) * net.sync_time(n, calib.vector_bytes(), 1);
+        assert!((rep.time_s - want_t).abs() < 1e-12);
+        let dense_t = (1.0 - calib.periodic_overlap)
+            * dense_cost.net.sync_time(n, calib.vector_bytes(), 1);
+        assert!(rep.time_s < dense_t, "{} !< {}", rep.time_s, dense_t);
+    }
+
+    #[test]
+    fn sharded_bf16_bills_dense_bytes_and_matches_dense_bitwise() {
+        // bf16 is elementwise, so per-shard roundtrips are bitwise the
+        // dense roundtrip and the per-range byte bills sum exactly.
+        let (n, d, k) = (4usize, 131usize, 4usize);
+        let net = NetModel::from_config(&crate::config::NetConfig::default());
+        let mut dense = CompressedCollective::bf16(ChannelCollective::new(n, d), net.clone());
+        let mut sharded = CompressedCollective::bf16(
+            ChannelCollective::sharded(n, d, k),
+            net.with_shards(k),
+        );
+        assert_eq!(sharded.label(), "bf16(shards=4)");
+        let xs: Vec<Vec<f32>> =
+            (0..n).map(|w| (0..d).map(|i| ((i + w) as f32 * 0.1).sin()).collect()).collect();
+        let accs: Vec<Vec<f32>> = (0..n).map(|_| vec![1.5f32; d]).collect();
+        let (mut dx, mut da) = (vec![0.0f32; d], vec![0.0f32; d]);
+        let (mut sx, mut sa) = (vec![0.0f32; d], vec![0.0f32; d]);
+        let drep = dense
+            .sync_round(&refs(&xs), Some(&refs(&accs)), &mut dx, Some(&mut da))
+            .unwrap();
+        let srep = sharded
+            .sync_round(&refs(&xs), Some(&refs(&accs)), &mut sx, Some(&mut sa))
+            .unwrap();
+        assert_eq!(srep.bytes, drep.bytes, "per-shard byte bills must sum to dense");
+        assert!(dx.iter().zip(&sx).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(da.iter().zip(&sa).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        // Gradient gather too.
+        let grads: Vec<Vec<f32>> =
+            (0..n).map(|w| (0..d).map(|i| ((i * 3 + w) as f32 * 0.07).cos()).collect()).collect();
+        let mut dg = grads.clone();
+        let mut sg = grads.clone();
+        let drep = dense.gather_grads(&mut dg).unwrap();
+        let srep = sharded.gather_grads(&mut sg).unwrap();
+        assert_eq!(srep.bytes, drep.bytes);
+        for (a, b) in dg.iter().flatten().zip(sg.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn build_collective_dispatches_sharded_transports() {
+        let calib = Calibration::paper_v100();
+        let mut cfg = ExperimentConfig::default();
+        cfg.comm.shards = 4;
+        assert_eq!(
+            build_collective(&cfg, &calib, 16).unwrap().label(),
+            "simulated(ps, shards=4)"
+        );
+        cfg.comm.transport = "channel".into();
+        assert_eq!(
+            build_collective(&cfg, &calib, 16).unwrap().label(),
+            "channel(shards=4)"
+        );
+        cfg.precision.wire = "bf16".into();
+        assert_eq!(
+            build_collective(&cfg, &calib, 16).unwrap().label(),
+            "bf16(shards=4)"
+        );
+        // Sharding shards the parameter server — ring topology is rejected
+        // by the builder's re-run of the cross-section rule.
+        cfg.precision.wire = "f32".into();
+        cfg.comm.transport = "simulated".into();
+        cfg.net.topology = "allreduce".into();
+        let err = build_collective(&cfg, &calib, 16).unwrap_err();
+        assert!(err.to_string().contains("comm.shards"), "{err}");
+        // And the lossy codecs don't compose with a range partition.
+        cfg.net.topology = "ps".into();
+        cfg.comm.transport = "channel".into();
+        cfg.comm.compression = "qsgd".into();
+        let err = build_collective(&cfg, &calib, 16).unwrap_err();
+        assert!(err.to_string().contains("comm.shards"), "{err}");
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod collective;
 pub mod compress;
 pub mod net;
 pub mod netmodel;
+pub mod shard;
 pub mod transport;
 pub mod wire;
 
@@ -17,6 +18,7 @@ pub use collective::{
 };
 pub use compress::{QsgdQuantizer, SparseGrad, TopKSparsifier};
 pub use net::{run_worker, LeaderLink, NetCounters, TcpTransport};
-pub use netmodel::{NetModel, Topology};
+pub use netmodel::{tree_depth, NetModel, Topology};
+pub use shard::ShardPlan;
 pub use transport::ChannelTransport;
 pub use wire::{config_fingerprint, Frame, FrameKind, PayloadCodec};

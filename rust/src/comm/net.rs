@@ -51,9 +51,11 @@ use crate::comm::collective::{
     down_stream, grad_stream, mean_sq_dist, up_stream, Collective, CommReport, StreamFamily,
 };
 use crate::comm::netmodel::NetModel;
+use crate::comm::shard::ShardPlan;
 use crate::comm::transport::ChannelTransport;
 use crate::comm::wire::{
-    self, Frame, FrameKind, PayloadCodec, CODEC_RAW, FLAG_RAW, PROTOCOL_VERSION,
+    self, flags_shard, shard_flags, Frame, FrameKind, PayloadCodec, CODEC_RAW, FLAG_RAW,
+    PROTOCOL_VERSION,
 };
 use crate::config::ExperimentConfig;
 use crate::coordinator::backend::EvalMetrics;
@@ -267,7 +269,9 @@ pub fn read_port_file(path: &str, timeout: Duration) -> Result<String> {
         if start.elapsed() > timeout {
             return Err(Error::Config(format!(
                 "net.connect: port file {path:?} never appeared within \
-                 net.connect_timeout_s"
+                 net.connect_timeout_s = {}s — the leader likely died before \
+                 publishing its address",
+                timeout.as_secs_f64()
             )));
         }
         std::thread::sleep(Duration::from_millis(10));
@@ -286,6 +290,11 @@ pub struct WireState {
     codec: PayloadCodec,
     n: usize,
     d: usize,
+    /// Leader-shard range partition (`comm.shards`; dense when k = 1).
+    /// Sync-round `State`/`InstallState` payloads are split into one
+    /// shard-tagged frame per range — the addressing a k-shard-server
+    /// deployment uses — and reassembled in arrival (FIFO) order.
+    plan: ShardPlan,
     /// Last synchronized parameters (delta base; zeros before round 1) —
     /// mirrored exactly by every worker process.
     base_x: Vec<f32>,
@@ -308,12 +317,25 @@ struct InstallStash {
 
 impl WireState {
     /// Fresh state for an `n`-worker, dimension-`d` cluster using `codec`
-    /// for data payloads.
+    /// for data payloads (single leader shard).
     pub fn new(codec: PayloadCodec, n: usize, d: usize) -> Arc<Mutex<WireState>> {
+        WireState::sharded(codec, n, d, 1)
+    }
+
+    /// Fresh state with `shards` leader shards (`comm.shards`): sync-round
+    /// data frames are split/reassembled per [`ShardPlan`] range. `k = 1`
+    /// is byte-identical to the pre-sharding wire.
+    pub fn sharded(
+        codec: PayloadCodec,
+        n: usize,
+        d: usize,
+        shards: usize,
+    ) -> Arc<Mutex<WireState>> {
         Arc::new(Mutex::new(WireState {
             codec,
             n,
             d,
+            plan: ShardPlan::new(d, shards),
             base_x: vec![0.0; d],
             base_acc: vec![0.0; d],
             pending_x: vec![None; n],
@@ -393,6 +415,102 @@ fn split_enc_state(bytes: &[u8], enc_len: usize) -> Result<(&[u8], Option<&[u8]>
             bytes.len(),
             2 * enc_len
         )))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard-addressed framing (comm.shards > 1; DESIGN.md §3).
+// ---------------------------------------------------------------------------
+
+/// Split a dense sync-round state payload into one payload per leader
+/// shard. The dense payload is 1 or 2 equal elementwise-encoded sections
+/// (x, then acc) of `elem`·d bytes each; shard `s` carries the byte
+/// range of its index range from every section, sections concatenated in
+/// order. Purely a byte repartition: reassembling the shard payloads
+/// reproduces the dense bytes exactly, so decoded values and billing
+/// sums are bit-identical to the unsharded wire.
+fn split_state_payload(payload: &[u8], elem: usize, plan: &ShardPlan) -> Result<Vec<Vec<u8>>> {
+    let d = plan.dim();
+    let sec = elem * d;
+    let sections = if sec == 0 { 0 } else { payload.len() / sec };
+    if sec == 0 || payload.len() != sections * sec || !(1..=2).contains(&sections) {
+        return Err(Error::Protocol(format!(
+            "state payload length {} is not 1–2 sections of {sec} bytes (d = {d})",
+            payload.len()
+        )));
+    }
+    Ok(plan
+        .ranges()
+        .map(|r| {
+            let mut p = Vec::with_capacity(sections * elem * r.len());
+            for s in 0..sections {
+                p.extend_from_slice(&payload[s * sec + elem * r.start..s * sec + elem * r.end]);
+            }
+            p
+        })
+        .collect())
+}
+
+/// In-order reassembly of shard-tagged state frames back into the dense
+/// payload. Each shard frame interleaves its x and acc slices, so the
+/// sections are accumulated separately and concatenated at the end. TCP
+/// (and the Unix-domain stream) delivers per-connection FIFO, so shards
+/// arrive in index order; anything else is a protocol error. Reusable:
+/// completing an assembly resets it for the next round.
+#[derive(Default)]
+struct ShardAssembly {
+    next: usize,
+    sections: Vec<Vec<u8>>,
+}
+
+impl ShardAssembly {
+    /// Fold in shard `shard`'s payload. Returns the assembled dense
+    /// payload once the last shard arrived, `None` while partial.
+    fn push(
+        &mut self,
+        plan: &ShardPlan,
+        elem: usize,
+        shard: usize,
+        payload: &[u8],
+    ) -> Result<Option<Vec<u8>>> {
+        if shard != self.next || shard >= plan.shards() {
+            return Err(Error::Protocol(format!(
+                "shard frame {shard} arrived out of order (expected shard {} of {})",
+                self.next,
+                plan.shards()
+            )));
+        }
+        let r = plan.range(shard);
+        if self.sections.is_empty() {
+            // Section count is inferred from shard 0, which is never
+            // empty (the plan front-loads the remainder).
+            let sec = elem * r.len();
+            let sections = if sec == 0 { 0 } else { payload.len() / sec };
+            if sec == 0 || payload.len() != sections * sec || !(1..=2).contains(&sections) {
+                return Err(Error::Protocol(format!(
+                    "shard 0 payload length {} is not 1–2 sections of {sec} bytes",
+                    payload.len()
+                )));
+            }
+            self.sections = vec![Vec::new(); sections];
+        }
+        let sec = elem * r.len();
+        if payload.len() != self.sections.len() * sec {
+            return Err(Error::Protocol(format!(
+                "shard {shard} payload length {} != {} sections × {sec} bytes",
+                payload.len(),
+                self.sections.len()
+            )));
+        }
+        for (i, out) in self.sections.iter_mut().enumerate() {
+            out.extend_from_slice(&payload[i * sec..(i + 1) * sec]);
+        }
+        self.next += 1;
+        if self.next < plan.shards() {
+            return Ok(None);
+        }
+        self.next = 0;
+        Ok(Some(std::mem::take(&mut self.sections).concat()))
     }
 }
 
@@ -580,6 +698,9 @@ pub struct TcpTransport {
     dead: Vec<bool>,
     /// Commands in flight per worker (≤ 1 in the lockstep protocol).
     outstanding: Vec<usize>,
+    /// Per-worker reassembly of shard-tagged `State` frames
+    /// (`comm.shards > 1`; idle on the dense plan).
+    assembly: Vec<ShardAssembly>,
 }
 
 impl TcpTransport {
@@ -648,6 +769,7 @@ impl TcpTransport {
             synth: VecDeque::new(),
             dead: vec![false; n],
             outstanding: vec![0; n],
+            assembly: (0..n).map(|_| ShardAssembly::default()).collect(),
         })
     }
 
@@ -693,8 +815,12 @@ impl TcpTransport {
             return Ok(());
         }
         let frame = self.cmd_to_frame(w, cmd)?;
+        let frames = self.shard_install_frames(frame)?;
         self.outstanding[w] += 1;
-        let sent = self.peers[w].tx.as_ref().map(|tx| tx.send(frame).is_ok()).unwrap_or(false);
+        let sent = match self.peers[w].tx.as_ref() {
+            Some(tx) => frames.into_iter().all(|f| tx.send(f).is_ok()),
+            None => false,
+        };
         if !sent {
             self.dead[w] = true;
             self.outstanding[w] = 0;
@@ -712,8 +838,12 @@ impl TcpTransport {
         loop {
             match self.events.recv() {
                 Ok((w, Some(frame))) => {
-                    self.outstanding[w] = self.outstanding[w].saturating_sub(1);
-                    return self.frame_to_reply(w, frame);
+                    if let Some(reply) = self.frame_to_reply(w, frame)? {
+                        self.outstanding[w] = self.outstanding[w].saturating_sub(1);
+                        return Ok(reply);
+                    }
+                    // Partial shard frame of a sync collect in flight —
+                    // keep reading until its last shard lands.
                 }
                 Ok((w, None)) => {
                     if !self.dead[w] {
@@ -866,10 +996,70 @@ impl TcpTransport {
         })
     }
 
-    /// Decode a worker frame into the protocol reply, billing per the
-    /// same rules: `Grad` payloads (minus the loss scalar) and non-raw
-    /// `State` collects are billed.
-    fn frame_to_reply(&mut self, w: usize, f: Frame) -> Result<Reply> {
+    /// Expand a leader command frame into its wire frames: sync-round
+    /// `InstallState` payloads are split into one shard-tagged frame per
+    /// leader shard (`comm.shards`; each shard server broadcasts its own
+    /// averaged range); every other frame — and every frame on the dense
+    /// plan — ships as-is, byte-identical to the pre-sharding wire.
+    fn shard_install_frames(&self, frame: Frame) -> Result<Vec<Frame>> {
+        if frame.kind != FrameKind::InstallState {
+            return Ok(vec![frame]);
+        }
+        let (plan, elem) = {
+            let wd = lock(&self.state);
+            (wd.plan.clone(), wd.codec.enc_len(1))
+        };
+        if plan.is_dense() {
+            return Ok(vec![frame]);
+        }
+        let payloads = split_state_payload(&frame.payload, elem, &plan)?;
+        Ok(payloads
+            .into_iter()
+            .enumerate()
+            .map(|(s, payload)| Frame {
+                kind: frame.kind,
+                codec: frame.codec,
+                flags: frame.flags | shard_flags(s),
+                worker: frame.worker,
+                step: frame.step,
+                payload,
+            })
+            .collect())
+    }
+
+    /// Decode a worker frame into the protocol reply. Shard-tagged
+    /// `State` frames are folded into the per-worker reassembly and
+    /// return `None` until their last shard lands (TCP FIFO keeps them
+    /// in shard order); everything else decodes immediately.
+    fn frame_to_reply(&mut self, w: usize, mut f: Frame) -> Result<Option<Reply>> {
+        if f.kind == FrameKind::State && f.flags & FLAG_RAW == 0 {
+            let (plan, elem) = {
+                let wd = lock(&self.state);
+                (wd.plan.clone(), wd.codec.enc_len(1))
+            };
+            if !plan.is_dense() {
+                if f.worker as usize != w {
+                    return Err(Error::Protocol(format!(
+                        "frame from peer {w} claims worker id {}",
+                        f.worker
+                    )));
+                }
+                match self.assembly[w].push(&plan, elem, flags_shard(f.flags), &f.payload)? {
+                    Some(dense) => {
+                        f.payload = dense;
+                        f.flags &= FLAG_RAW; // drop the shard tag
+                    }
+                    None => return Ok(None),
+                }
+            }
+        }
+        self.frame_to_reply_dense(w, f).map(Some)
+    }
+
+    /// Decode a (dense or reassembled) worker frame into the protocol
+    /// reply, billing per the accounting rules: `Grad` payloads (minus
+    /// the loss scalar) and non-raw `State` collects are billed.
+    fn frame_to_reply_dense(&mut self, w: usize, f: Frame) -> Result<Reply> {
         if f.worker as usize != w {
             return Err(Error::Protocol(format!(
                 "frame from peer {w} claims worker id {}",
@@ -1178,7 +1368,12 @@ impl Collective for WireCollective {
     }
 
     fn label(&self) -> String {
-        format!("net({})", self.inner_label)
+        let wd = lock(&self.state);
+        if wd.plan.is_dense() {
+            format!("net({})", self.inner_label)
+        } else {
+            format!("net({}, shards={})", self.inner_label, wd.plan.shards())
+        }
     }
 
     fn broadcast(&mut self, x: &mut [f32]) -> Result<CommReport> {
@@ -1296,6 +1491,11 @@ struct WorkerShim {
     n: usize,
     w: usize,
     d: usize,
+    /// Leader-shard range partition — computed from `(d, comm.shards)`
+    /// independently of the leader (the fingerprint pins the shard count).
+    plan: ShardPlan,
+    /// Reassembly of shard-tagged `InstallState` frames.
+    install: ShardAssembly,
     base_x: Vec<f32>,
     base_acc: Vec<f32>,
     /// Raw-collect flag of the `CollectState` in flight (the matching
@@ -1307,10 +1507,13 @@ struct WorkerShim {
 }
 
 impl WorkerShim {
-    fn frame_to_cmd(&mut self, f: &Frame, exit_at: Option<u64>) -> Result<Cmd> {
+    /// Decode a leader frame into the cell command. Shard-tagged
+    /// `InstallState` frames fold into the reassembly and return `None`
+    /// until the last shard lands; everything else decodes immediately.
+    fn frame_to_cmd(&mut self, f: &Frame, exit_at: Option<u64>) -> Result<Option<Cmd>> {
         let d = self.d;
         self.step = f.step;
-        Ok(match f.kind {
+        Ok(Some(match f.kind {
             FrameKind::SyncStep => {
                 if exit_at == Some(f.step) {
                     std::process::exit(3);
@@ -1340,14 +1543,34 @@ impl WorkerShim {
                 Cmd::CollectState { sx: Vec::new(), sa: Vec::new(), raw: self.collect_raw }
             }
             FrameKind::InstallState => {
+                let assembled;
+                let payload: &[u8] = if self.plan.is_dense() {
+                    &f.payload
+                } else {
+                    // Shard-tagged install: each frame carries one shard
+                    // server's averaged range; reassemble to the dense
+                    // payload (byte-identical to the unsharded wire).
+                    match self.install.push(
+                        &self.plan,
+                        self.codec.enc_len(1),
+                        flags_shard(f.flags),
+                        &f.payload,
+                    )? {
+                        Some(p) => {
+                            assembled = p;
+                            &assembled
+                        }
+                        None => return Ok(None),
+                    }
+                };
                 let (x, acc) = if self.codec.is_f32() {
-                    split_raw_state(&f.payload, d)?
+                    split_raw_state(payload, d)?
                 } else {
                     // Encoded down-leg deltas: reconstruct against the
                     // mirrored bases, then advance them — the same values
                     // the leader installed in its own avg buffers.
                     let enc_len = self.codec.enc_len(d);
-                    let (ex, ea) = split_enc_state(&f.payload, enc_len)?;
+                    let (ex, ea) = split_enc_state(payload, enc_len)?;
                     self.scratch.resize(d, 0.0);
                     self.codec.decode_vec(ex, &mut self.scratch)?;
                     let mut x = vec![0.0f32; d];
@@ -1383,7 +1606,36 @@ impl WorkerShim {
                     "unexpected {other:?} frame from the leader"
                 )))
             }
-        })
+        }))
+    }
+
+    /// Encode a cell reply into its wire frames: sync-round `State`
+    /// collects are split into one shard-tagged frame per leader shard
+    /// (the worker pushes each range to its shard server); everything
+    /// else — and everything on the dense plan — is a single frame,
+    /// byte-identical to the pre-sharding wire.
+    fn reply_to_frames(&mut self, reply: Reply) -> Result<Vec<Frame>> {
+        let frame = self.reply_to_frame(reply);
+        if frame.kind == FrameKind::State
+            && frame.flags & FLAG_RAW == 0
+            && !self.plan.is_dense()
+        {
+            let payloads =
+                split_state_payload(&frame.payload, self.codec.enc_len(1), &self.plan)?;
+            return Ok(payloads
+                .into_iter()
+                .enumerate()
+                .map(|(s, payload)| Frame {
+                    kind: frame.kind,
+                    codec: frame.codec,
+                    flags: frame.flags | shard_flags(s),
+                    worker: frame.worker,
+                    step: frame.step,
+                    payload,
+                })
+                .collect());
+        }
+        Ok(vec![frame])
     }
 
     fn reply_to_frame(&mut self, reply: Reply) -> Frame {
@@ -1498,6 +1750,17 @@ pub fn resolve_connect_addr(
     Ok(addr.to_string())
 }
 
+/// Cap on a single connect-retry sleep. Also the saturation value when
+/// `base × attempt` would overflow a `Duration` (`Duration * u32` panics
+/// on overflow — a huge `net.retry_backoff_s` must not crash the worker).
+const MAX_RETRY_BACKOFF: Duration = Duration::from_secs(30);
+
+/// Linear backoff for connect attempt `attempt` (1-based), overflow-safe
+/// and capped at [`MAX_RETRY_BACKOFF`].
+fn retry_backoff(base: Duration, attempt: u32) -> Duration {
+    base.checked_mul(attempt).unwrap_or(MAX_RETRY_BACKOFF).min(MAX_RETRY_BACKOFF)
+}
+
 fn connect_with_retry(cfg: &ExperimentConfig, kind: SocketKind, addr: &str) -> Result<NetStream> {
     let retries = cfg.net.connect_retries;
     let backoff = Duration::from_secs_f64(cfg.net.retry_backoff_s.max(0.0));
@@ -1508,6 +1771,9 @@ fn connect_with_retry(cfg: &ExperimentConfig, kind: SocketKind, addr: &str) -> R
             Err(e) => {
                 attempt += 1;
                 if attempt > retries {
+                    // Returns before any further sleep: the final failed
+                    // attempt reports immediately instead of serving one
+                    // last pointless backoff.
                     return Err(Error::Config(format!(
                         "net.connect: could not reach the leader at {addr:?} after \
                          {attempt} attempts (net.connect_retries = {retries}, \
@@ -1515,7 +1781,7 @@ fn connect_with_retry(cfg: &ExperimentConfig, kind: SocketKind, addr: &str) -> R
                         cfg.net.retry_backoff_s
                     )));
                 }
-                std::thread::sleep(backoff * attempt);
+                std::thread::sleep(retry_backoff(backoff, attempt));
             }
         }
     }
@@ -1599,6 +1865,8 @@ pub fn run_worker(
         n: ack.n,
         w: worker,
         d,
+        plan: ShardPlan::new(d, cfg.comm.shards),
+        install: ShardAssembly::default(),
         base_x: vec![0.0; d],
         base_acc: vec![0.0; d],
         collect_raw: false,
@@ -1611,7 +1879,9 @@ pub fn run_worker(
         .recv()
         .map_err(|_| Error::Protocol("worker cell exited before Ready".into()))?;
     let fatal = matches!(first, Reply::Err { .. });
-    shim.reply_to_frame(first).write_to(&mut stream)?;
+    for f in shim.reply_to_frames(first)? {
+        f.write_to(&mut stream)?;
+    }
     if fatal {
         return Err(Error::Protocol("worker cell failed to start".into()));
     }
@@ -1639,7 +1909,11 @@ fn shim_loop(
             }
         };
         let is_stop = frame.kind == FrameKind::Stop;
-        let cmd = shim.frame_to_cmd(&frame, exit_at)?;
+        let cmd = match shim.frame_to_cmd(&frame, exit_at)? {
+            Some(c) => c,
+            // Partial shard install — await its remaining shard frames.
+            None => continue,
+        };
         if cmd_tx.send(cmd).is_err() {
             return Err(Error::Protocol("worker cell terminated unexpectedly".into()));
         }
@@ -1650,7 +1924,9 @@ fn shim_loop(
             .recv()
             .map_err(|_| Error::Protocol("worker cell terminated unexpectedly".into()))?;
         let fatal = matches!(reply, Reply::Err { .. });
-        shim.reply_to_frame(reply).write_to(stream)?;
+        for f in shim.reply_to_frames(reply)? {
+            f.write_to(stream)?;
+        }
         if fatal {
             return Err(Error::Protocol("worker cell failed".into()));
         }
@@ -1734,6 +2010,110 @@ mod tests {
         let missing = dir.join("absent").to_string_lossy().into_owned();
         let err = read_port_file(&missing, Duration::from_millis(30)).unwrap_err();
         assert!(err.to_string().contains("net.connect"), "{err}");
+        // The error names the bounding field AND its configured value —
+        // the operator sees which knob to turn without reading source.
+        assert!(err.to_string().contains("net.connect_timeout_s = 0.03"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retry_backoff_is_capped_and_overflow_safe() {
+        let base = Duration::from_millis(100);
+        // Linear below the cap.
+        assert_eq!(retry_backoff(base, 1), Duration::from_millis(100));
+        assert_eq!(retry_backoff(base, 3), Duration::from_millis(300));
+        // Capped once base × attempt crosses MAX_RETRY_BACKOFF.
+        assert_eq!(retry_backoff(base, 1_000_000), MAX_RETRY_BACKOFF);
+        // `Duration * u32` panics on overflow; the helper must not —
+        // this exact pair overflows a u64 nanosecond product.
+        assert_eq!(retry_backoff(Duration::from_secs(1u64 << 40), u32::MAX), MAX_RETRY_BACKOFF);
+        // Zero base stays zero (no accidental cap promotion).
+        assert_eq!(retry_backoff(Duration::ZERO, u32::MAX), Duration::ZERO);
+    }
+
+    #[test]
+    fn connect_failure_reports_without_a_final_backoff_sleep() {
+        // retries = 0 with a huge backoff: a post-final-attempt sleep
+        // would stall this test for 10 s; the error must come back at
+        // connection-refused speed.
+        let mut cfg = ExperimentConfig::default();
+        cfg.net.connect_retries = 0;
+        cfg.net.retry_backoff_s = 10.0;
+        let start = Instant::now();
+        // Port 1 on loopback: reserved, nothing listens — immediate
+        // ECONNREFUSED.
+        let err = connect_with_retry(&cfg, SocketKind::Tcp, "127.0.0.1:1").unwrap_err();
+        assert!(start.elapsed() < Duration::from_secs(5), "slept after the final attempt");
+        let msg = err.to_string();
+        assert!(msg.contains("net.connect_retries = 0"), "{msg}");
+        assert!(msg.contains("after 1 attempts"), "{msg}");
+    }
+
+    #[test]
+    fn shard_split_reassembles_to_the_dense_payload() {
+        // Two 4-byte/elem sections over an uneven partition: the shard
+        // payloads must cover the dense bytes exactly and reassemble to
+        // them byte-for-byte, with the section interleave undone.
+        let d = 10usize;
+        let plan = ShardPlan::new(d, 4); // ranges 3 | 3 | 2 | 2
+        let mut dense = Vec::new();
+        for i in 0..2 * d {
+            dense.extend_from_slice(&(i as u32).to_le_bytes());
+        }
+        let parts = split_state_payload(&dense, 4, &plan).unwrap();
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts.iter().map(Vec::len).sum::<usize>(), dense.len());
+        // Shard 0 carries x[0..3] then acc[0..3].
+        assert_eq!(parts[0].len(), 2 * 4 * 3);
+        assert_eq!(&parts[0][..4], &0u32.to_le_bytes());
+        assert_eq!(&parts[0][12..16], &(d as u32).to_le_bytes());
+        let mut asm = ShardAssembly::default();
+        for (s, p) in parts.iter().enumerate() {
+            let out = asm.push(&plan, 4, s, p).unwrap();
+            if s + 1 < parts.len() {
+                assert!(out.is_none(), "completed early at shard {s}");
+            } else {
+                assert_eq!(out.unwrap(), dense, "reassembly not byte-identical");
+            }
+        }
+        // The assembly reset itself: a second round works.
+        for (s, p) in parts.iter().enumerate() {
+            let out = asm.push(&plan, 4, s, p).unwrap();
+            assert_eq!(out.is_some(), s + 1 == parts.len());
+        }
+        // Out-of-order shards are a protocol error (TCP FIFO makes them
+        // impossible in a healthy run).
+        let err = asm.push(&plan, 4, 1, &parts[1]).unwrap_err();
+        assert!(err.to_string().contains("out of order"), "{err}");
+
+        // Single-section payloads split too (x-only sync rounds).
+        let parts = split_state_payload(&dense[..4 * d], 4, &plan).unwrap();
+        assert_eq!(parts.iter().map(Vec::len).sum::<usize>(), 4 * d);
+        // Junk lengths are clean errors.
+        assert!(split_state_payload(&dense[..4 * d - 1], 4, &plan).is_err());
+        assert!(split_state_payload(&[], 4, &plan).is_err());
+    }
+
+    #[test]
+    fn shard_split_handles_more_shards_than_elements() {
+        // k > d: tail shards are empty ranges — zero-length payload
+        // frames that must still reassemble cleanly.
+        let d = 3usize;
+        let plan = ShardPlan::new(d, 5);
+        let mut dense = Vec::new();
+        for i in 0..d {
+            dense.extend_from_slice(&(i as u32).to_le_bytes());
+        }
+        let parts = split_state_payload(&dense, 4, &plan).unwrap();
+        assert_eq!(parts.len(), 5);
+        assert_eq!(parts[3].len(), 0);
+        assert_eq!(parts[4].len(), 0);
+        let mut asm = ShardAssembly::default();
+        let mut got = None;
+        for (s, p) in parts.iter().enumerate() {
+            got = asm.push(&plan, 4, s, p).unwrap();
+            assert_eq!(got.is_some(), s + 1 == parts.len());
+        }
+        assert_eq!(got.unwrap(), dense);
     }
 }

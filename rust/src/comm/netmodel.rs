@@ -7,13 +7,25 @@
 //! * **Parameter server** (the paper's architecture, §2): every worker
 //!   pushes to and pulls from the server. The server's ingress/egress link
 //!   is shared, so an incast of n concurrent senders serialises:
-//!   `t = 2·(α + n·bytes / β_server)` per vector (push + pull).
+//!   `t = 2·(α + n·bytes / β_server)` per vector (push + pull). With
+//!   `k` leader shards (range partition of the vector, `comm.shards`),
+//!   the k shard servers absorb the incast in parallel and the critical
+//!   path carries `bytes/k`: `t = 2·(α + n·(bytes/k) / β_server)`.
 //! * **Ring all-reduce** (the common alternative): `2(n−1)` pipelined steps
 //!   moving `bytes/n` chunks: `t = 2(n−1)·α + 2·(n−1)/n · bytes / β`.
+//! * **Tree all-reduce** (hierarchical reduce + broadcast over a fan-out-f
+//!   tree, `net.tree_fanout`): `L = ⌈log_f n⌉` levels; at each level a
+//!   parent absorbs f children serially on its link, once up (reduce) and
+//!   once down (broadcast): `t = 2L·(α + f·bytes / β)`.
 //!
 //! α (latency) and β (bandwidth) are per-link constants from
 //! [`crate::sim::calib`]. All times are seconds, bytes are payload only
 //! (framing overhead folds into α).
+//!
+//! Every topology keeps `bytes_time` (the charge for transports that
+//! report exact wire bytes) consistent with `sync_time`: feeding a round's
+//! own `sync_traffic_bytes` back into `bytes_time` reproduces the
+//! `sync_time` bandwidth term exactly — pinned by a property test below.
 
 use crate::config::NetConfig;
 
@@ -24,17 +36,33 @@ pub enum Topology {
     ParameterServer,
     /// Ring all-reduce (MPI/NCCL style).
     RingAllReduce,
+    /// Hierarchical reduce + broadcast over a fan-out-f tree.
+    TreeAllReduce,
 }
 
 impl Topology {
-    /// Parse config spelling ("ps" / "allreduce").
+    /// Parse config spelling ("ps" / "allreduce" / "tree").
     pub fn parse(s: &str) -> Option<Topology> {
         match s {
             "ps" => Some(Topology::ParameterServer),
             "allreduce" => Some(Topology::RingAllReduce),
+            "tree" => Some(Topology::TreeAllReduce),
             _ => None,
         }
     }
+}
+
+/// Tree depth `⌈log_f n⌉`: levels needed for a fan-out-`f` tree to span
+/// `n` nodes (0 for n ≤ 1). Computed by integer doubling — no float logs.
+pub fn tree_depth(n: usize, fanout: usize) -> u32 {
+    let f = fanout.max(2);
+    let mut levels = 0u32;
+    let mut reach = 1usize;
+    while reach < n {
+        reach = reach.saturating_mul(f);
+        levels += 1;
+    }
+    levels
 }
 
 /// The calibrated cost model.
@@ -48,10 +76,16 @@ pub struct NetModel {
     pub beta_bytes_per_s: f64,
     /// Server ingress/egress bandwidth (PS incast), bytes/second.
     pub server_beta_bytes_per_s: f64,
+    /// Leader shards k (PS only): the incast serialises over `bytes/k`
+    /// per shard server. 1 = single leader (the pre-sharding model).
+    pub shards: usize,
+    /// Tree topology fan-out f (children per node, ≥ 2).
+    pub tree_fanout: usize,
 }
 
 impl NetModel {
-    /// From the experiment config (validates topology).
+    /// From the experiment config (validates topology). Shards default
+    /// to 1 — thread `comm.shards` in via [`NetModel::with_shards`].
     pub fn from_config(cfg: &NetConfig) -> Self {
         let topology = Topology::parse(&cfg.topology)
             .expect("config validation guarantees topology");
@@ -60,7 +94,16 @@ impl NetModel {
             alpha_s: cfg.latency_us * 1e-6,
             beta_bytes_per_s: cfg.bandwidth_gbps * 1e9 / 8.0,
             server_beta_bytes_per_s: cfg.server_bandwidth_gbps * 1e9 / 8.0,
+            shards: 1,
+            tree_fanout: cfg.tree_fanout.max(2),
         }
+    }
+
+    /// Set the leader shard count (`comm.shards`); k = 1 leaves every
+    /// cost bitwise-identical to the unsharded model.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
     }
 
     /// Time for one point-to-point transfer of `bytes`.
@@ -79,14 +122,25 @@ impl NetModel {
         let payload = (bytes_per_vector * vectors) as f64;
         match self.topology {
             Topology::ParameterServer => {
-                // Push: n workers into the shared server link, serialised.
-                // Pull: server broadcasts back over the same shared link.
-                2.0 * (self.alpha_s + n as f64 * payload / self.server_beta_bytes_per_s)
+                // Push: n workers into each shard server's link, serialised;
+                // the k shards run in parallel so the critical path carries
+                // the per-shard slice. Pull: same link back down.
+                let shard_payload = payload / self.shards as f64;
+                2.0 * (self.alpha_s
+                    + n as f64 * shard_payload / self.server_beta_bytes_per_s)
             }
             Topology::RingAllReduce => {
                 let n = n as f64;
                 2.0 * (n - 1.0) * self.alpha_s
                     + 2.0 * (n - 1.0) / n * payload / self.beta_bytes_per_s
+            }
+            Topology::TreeAllReduce => {
+                // L levels up (reduce) + L levels down (broadcast); at each
+                // level a parent's link serialises its f children.
+                let l = tree_depth(n, self.tree_fanout) as f64;
+                2.0 * l
+                    * (self.alpha_s
+                        + self.tree_fanout as f64 * payload / self.beta_bytes_per_s)
             }
         }
     }
@@ -96,17 +150,37 @@ impl NetModel {
     /// α–β cost used by transports whose payload is not a fixed number of
     /// dense vectors (compressed collectives report exact wire bytes and
     /// charge them here; DESIGN.md §3).
+    ///
+    /// Consistent with [`NetModel::sync_time`] by construction:
+    /// `bytes_time(n, sync_traffic_bytes(n, b, v))` has exactly the
+    /// `sync_time(n, b, v)` bandwidth term under every topology.
     pub fn bytes_time(&self, n: usize, total_bytes: u64) -> f64 {
         if n <= 1 || total_bytes == 0 {
             return 0.0;
         }
         match self.topology {
             Topology::ParameterServer => {
-                2.0 * self.alpha_s + total_bytes as f64 / self.server_beta_bytes_per_s
+                // total = 2n·B; per shard server the critical path is
+                // total/k, matching the sharded sync_time incast.
+                2.0 * self.alpha_s
+                    + (total_bytes as f64 / self.shards as f64)
+                        / self.server_beta_bytes_per_s
             }
             Topology::RingAllReduce => {
+                // total = 2(n−1)·B and the pipelined bandwidth term is
+                // 2(n−1)/n·B/β = total/(n·β) — the same pipelining factor
+                // sync_time charges (dense and compressed payloads must
+                // cost the same per byte).
                 2.0 * (n as f64 - 1.0) * self.alpha_s
-                    + total_bytes as f64 / self.beta_bytes_per_s
+                    + total_bytes as f64 / (n as f64 * self.beta_bytes_per_s)
+            }
+            Topology::TreeAllReduce => {
+                // total = 2(n−1)·B; the per-level serialised term is
+                // f·B/β per direction, so L·f·total/((n−1)·β) overall.
+                let l = tree_depth(n, self.tree_fanout) as f64;
+                2.0 * l * self.alpha_s
+                    + l * self.tree_fanout as f64 * total_bytes as f64
+                        / ((n as f64 - 1.0) * self.beta_bytes_per_s)
             }
         }
     }
@@ -116,25 +190,36 @@ impl NetModel {
     /// straggler signal [`crate::coordinator::sync::SyncObservation`]
     /// carries to adaptive sync policies (DESIGN.md §5).
     ///
-    /// Under PS incast the n concurrent pushes serialise on the server
-    /// link: the first finishes after `B/β_server`, the last after
-    /// `n·B/β_server`, so the spread is `(n−1)·B/β_server`. A ring
-    /// all-reduce is bulk-synchronous (every worker advances in lockstep
-    /// through the 2(n−1) pipeline steps), so its spread is 0.
+    /// Under PS incast the n concurrent pushes serialise on the (per-shard)
+    /// server link: the first finishes after `(B/k)/β_server`, the last
+    /// after `n·(B/k)/β_server`, so the spread is `(n−1)·(B/k)/β_server`.
+    /// A ring all-reduce is bulk-synchronous (every worker advances in
+    /// lockstep through the 2(n−1) pipeline steps), so its spread is 0.
+    /// In a tree each parent drains f children serially per level:
+    /// spread `(f−1)·B/β` per level, `L·(f−1)·B/β` end to end.
     pub fn straggler_spread_s(&self, n: usize, bytes: u64) -> f64 {
         if n <= 1 || bytes == 0 {
             return 0.0;
         }
         match self.topology {
             Topology::ParameterServer => {
-                (n as f64 - 1.0) * bytes as f64 / self.server_beta_bytes_per_s
+                (n as f64 - 1.0) * (bytes as f64 / self.shards as f64)
+                    / self.server_beta_bytes_per_s
             }
             Topology::RingAllReduce => 0.0,
+            Topology::TreeAllReduce => {
+                let l = tree_depth(n, self.tree_fanout) as f64;
+                l * (self.tree_fanout as f64 - 1.0) * bytes as f64
+                    / self.beta_bytes_per_s
+            }
         }
     }
 
     /// Total bytes moved cluster-wide in one sync round (for accounting
     /// the paper's 2/H traffic-reduction claim, independent of timing).
+    ///
+    /// Shard-invariant: a range partition moves the same bytes, just over
+    /// k links — per-shard accounting sums back to exactly these totals.
     pub fn sync_traffic_bytes(&self, n: usize, bytes_per_vector: u64, vectors: u64) -> u64 {
         if n <= 1 {
             return 0;
@@ -144,9 +229,10 @@ impl NetModel {
             // push n·B up + pull n·B down
             Topology::ParameterServer => 2 * n as u64 * payload,
             // 2(n-1) chunks of B/n per worker, n workers
-            Topology::RingAllReduce => {
-                (2 * (n as u64 - 1)) * payload
-            }
+            Topology::RingAllReduce => (2 * (n as u64 - 1)) * payload,
+            // n−1 tree edges, each carrying B up (reduce) + B down
+            // (broadcast) — same total as the ring, spent in L levels.
+            Topology::TreeAllReduce => (2 * (n as u64 - 1)) * payload,
         }
     }
 }
@@ -172,7 +258,7 @@ mod tests {
 
     #[test]
     fn single_worker_syncs_free() {
-        for topo in ["ps", "allreduce"] {
+        for topo in ["ps", "allreduce", "tree"] {
             assert_eq!(model(topo).sync_time(1, 1 << 20, 2), 0.0);
             assert_eq!(model(topo).sync_traffic_bytes(1, 1 << 20, 2), 0);
         }
@@ -190,6 +276,35 @@ mod tests {
     }
 
     #[test]
+    fn sharded_ps_divides_the_incast() {
+        let m = model("ps");
+        let k4 = model("ps").with_shards(4);
+        let b = 132_000_000u64;
+        let c = 2.0 * m.alpha_s;
+        let t1 = m.sync_time(32, b, 1) - c;
+        let t4 = k4.sync_time(32, b, 1) - c;
+        // k shard servers absorb the incast in parallel: exactly k× faster
+        // past the latency constant.
+        assert!((t1 / t4 - 4.0).abs() < 1e-9, "{t1} {t4}");
+        // Same division in the first-order byte charge and the straggler
+        // spread; traffic totals are shard-invariant.
+        let total = m.sync_traffic_bytes(32, b, 1);
+        assert_eq!(total, k4.sync_traffic_bytes(32, b, 1));
+        let bt1 = m.bytes_time(32, total) - c;
+        let bt4 = k4.bytes_time(32, total) - c;
+        assert!((bt1 / bt4 - 4.0).abs() < 1e-9);
+        assert!((m.straggler_spread_s(32, b) / k4.straggler_spread_s(32, b) - 4.0).abs() < 1e-9);
+        // with_shards(1) is the identity — bitwise.
+        let id = model("ps").with_shards(1);
+        assert_eq!(id.sync_time(32, b, 1).to_bits(), m.sync_time(32, b, 1).to_bits());
+        assert_eq!(id.bytes_time(32, total).to_bits(), m.bytes_time(32, total).to_bits());
+        assert_eq!(
+            id.straggler_spread_s(32, b).to_bits(),
+            m.straggler_spread_s(32, b).to_bits()
+        );
+    }
+
+    #[test]
     fn allreduce_bandwidth_term_saturates() {
         // (n-1)/n → 1: doubling n beyond a few workers barely changes the
         // bandwidth term — the scalability argument for all-reduce.
@@ -199,6 +314,34 @@ mod tests {
         let t8 = m.sync_time(8, b, 1) - 2.0 * 7.0 * m.alpha_s;
         let ratio = t8 / t4;
         assert!(ratio < 1.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn tree_depth_is_ceil_log() {
+        assert_eq!(tree_depth(1, 2), 0);
+        assert_eq!(tree_depth(2, 2), 1);
+        assert_eq!(tree_depth(3, 2), 2);
+        assert_eq!(tree_depth(8, 2), 3);
+        assert_eq!(tree_depth(9, 2), 4);
+        assert_eq!(tree_depth(64, 4), 3);
+        assert_eq!(tree_depth(65, 4), 4);
+        assert_eq!(tree_depth(1000, 10), 3);
+    }
+
+    #[test]
+    fn tree_costs_grow_logarithmically() {
+        let m = model("tree");
+        let b = 132_000_000u64;
+        // sync_time = 2L(α + f·B/β): n = 8 → L = 3, n = 64 → L = 6 at
+        // f = 2 — doubling depth, not 8× incast.
+        let t8 = m.sync_time(8, b, 1);
+        let t64 = m.sync_time(64, b, 1);
+        assert!((t64 / t8 - 2.0).abs() < 1e-9, "{t8} {t64}");
+        // Closed form at n = 8, f = 2: 6(α + 2·0.001) = 6α + 0.012.
+        assert!((t8 - (6.0 * m.alpha_s + 0.012)).abs() < 1e-12, "{t8}");
+        // Straggler spread: L(f−1)B/β = 3·0.001 at n = 8.
+        let s = m.straggler_spread_s(8, b);
+        assert!((s - 3e-3).abs() < 1e-12, "{s}");
     }
 
     #[test]
@@ -218,6 +361,9 @@ mod tests {
         assert_eq!(m.sync_traffic_bytes(8, 1 << 20, 2), 32 << 20);
         let r = model("allreduce");
         assert_eq!(r.sync_traffic_bytes(8, 1 << 20, 2), 14 << 21);
+        // Tree moves the ring's total (n−1 edges × up + down), in L levels.
+        let t = model("tree");
+        assert_eq!(t.sync_traffic_bytes(8, 1 << 20, 2), 14 << 21);
     }
 
     #[test]
@@ -227,9 +373,16 @@ mod tests {
         assert_eq!(m.bytes_time(8, 0), 0.0);
         let t = m.bytes_time(8, 132_000_000_000);
         assert!((t - (2.0 * 50e-6 + 1.0)).abs() < 1e-9, "{t}");
+        // Ring: the bandwidth term carries the same 2(n−1)/n pipelining
+        // factor as sync_time — total/(n·β), NOT total/β. 132 GB over
+        // n = 4 → 0.25 s.
         let r = model("allreduce");
         let t = r.bytes_time(4, 132_000_000_000);
-        assert!((t - (6.0 * 50e-6 + 1.0)).abs() < 1e-9, "{t}");
+        assert!((t - (6.0 * 50e-6 + 0.25)).abs() < 1e-9, "{t}");
+        // Tree at n = 4, f = 2 → L = 2: 4α + 2·2·total/(3β) = 4α + 4/3 s.
+        let tr = model("tree");
+        let t = tr.bytes_time(4, 132_000_000_000);
+        assert!((t - (4.0 * 50e-6 + 4.0 / 3.0)).abs() < 1e-9, "{t}");
     }
 
     #[test]
@@ -246,8 +399,12 @@ mod tests {
 
     #[test]
     fn properties_monotonicity() {
-        prop::check("netmodel monotone in n, bytes, vectors", 200, |g| {
-            let m = if g.bool() { model("ps") } else { model("allreduce") };
+        prop::check("netmodel monotone in n, bytes, vectors", 300, |g| {
+            let m = match g.usize_in(0..3) {
+                0 => model("ps"),
+                1 => model("allreduce"),
+                _ => model("tree"),
+            };
             let n = g.usize_in(2..16);
             let b = g.u64_in(1..1 << 24);
             let v = g.u64_in(1..3);
@@ -263,5 +420,85 @@ mod tests {
             )?;
             prop::assert_that(m.sync_time(n, b, v + 1) >= t, "monotone in vectors")
         });
+    }
+
+    #[test]
+    fn properties_bytes_time_consistent_with_sync_time() {
+        // Feeding a round's own traffic total back through the first-order
+        // byte charge must reproduce the sync_time bandwidth term for every
+        // topology and shard count — the satellite-1 consistency pin
+        // (compressed and dense payloads cost the same per byte).
+        prop::check("bytes_time ≡ sync_time on a round's own traffic", 300, |g| {
+            let m = match g.usize_in(0..4) {
+                0 => model("ps"),
+                1 => model("ps").with_shards(1 << g.usize_in(0..4)),
+                2 => model("allreduce"),
+                _ => model("tree"),
+            };
+            let n = g.usize_in(2..64);
+            let b = g.u64_in(1..1 << 22);
+            let v = g.u64_in(1..3);
+            // Latency terms are structurally identical on both sides
+            // (2α / 2(n−1)α / 2Lα), so compare full times directly.
+            let from_sync = m.sync_time(n, b, v);
+            let from_bytes = m.bytes_time(n, m.sync_traffic_bytes(n, b, v));
+            let rel = (from_sync - from_bytes).abs() / from_sync.max(1e-30);
+            prop::assert_that(rel < 1e-9, "bandwidth terms agree")
+        });
+    }
+
+    #[test]
+    fn properties_tree_shape() {
+        prop::check("tree: depth/traffic/fan-out laws", 300, |g| {
+            let n = g.usize_in(2..128);
+            let b = g.u64_in(1..1 << 22);
+            let f = 2 + g.usize_in(0..7);
+            let cfg = NetConfig {
+                topology: "tree".into(),
+                tree_fanout: f,
+                ..Default::default()
+            };
+            let m = NetModel::from_config(&cfg);
+            // Depth is ⌈log_f n⌉: f^L ≥ n > f^(L−1).
+            let l = tree_depth(n, f);
+            prop::assert_that(f.pow(l) >= n, "f^L covers n")?;
+            prop::assert_that(l == 0 || f.pow(l - 1) < n, "L is minimal")?;
+            // Fan-out trades depth for per-level serialisation; depth
+            // itself is monotone non-increasing in f…
+            prop::assert_that(tree_depth(n, f + 1) <= l, "depth non-increasing in f")?;
+            // …while the traffic total is fan-out-invariant and equals the
+            // ring total (conservation: n−1 edges, payload up + down).
+            let ring = model("allreduce");
+            let wider = NetConfig {
+                topology: "tree".into(),
+                tree_fanout: f + 3,
+                ..Default::default()
+            };
+            let t = m.sync_traffic_bytes(n, b, 2);
+            prop::assert_that(
+                t == NetModel::from_config(&wider).sync_traffic_bytes(n, b, 2),
+                "traffic invariant in fan-out",
+            )?;
+            prop::assert_that(t == ring.sync_traffic_bytes(n, b, 2), "ring-equal traffic")?;
+            // PS moves more: 2n·B vs 2(n−1)·B.
+            prop::assert_that(
+                model("ps").sync_traffic_bytes(n, b, 2) > t,
+                "ps traffic strictly larger",
+            )
+        });
+    }
+
+    #[test]
+    fn tree_and_sharded_ps_beat_single_leader_incast() {
+        // The ROADMAP item-2 claim, at the model level: by n = 32 the
+        // single-leader incast loses to both alternatives.
+        let b = 132_000_000u64; // one 33M-param f32 vector
+        for n in [32usize, 64, 128] {
+            let ps = model("ps").sync_time(n, b, 1);
+            let ps4 = model("ps").with_shards(4).sync_time(n, b, 1);
+            let tree = model("tree").sync_time(n, b, 1);
+            assert!(ps4 < ps, "n={n}: sharded {ps4} !< single {ps}");
+            assert!(tree < ps, "n={n}: tree {tree} !< single {ps}");
+        }
     }
 }

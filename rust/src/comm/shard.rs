@@ -1,0 +1,188 @@
+//! Range partition of the parameter vector across `k` leader shards
+//! (DESIGN.md §3).
+//!
+//! `comm.shards = k` splits `[0, d)` into `k` contiguous index ranges —
+//! the first `d mod k` ranges get `⌈d/k⌉` coordinates, the rest `⌊d/k⌋` —
+//! so every coordinate belongs to exactly one shard and the partition is
+//! a pure function of `(d, k)` that leader and workers compute
+//! independently (no shard map on the wire; frames carry only the shard
+//! index in the free flag bits, DESIGN.md §4).
+//!
+//! Because every aggregation kernel in [`crate::util::kernels`] is
+//! per-coordinate with a fixed operation order, averaging each range
+//! separately is **bitwise-identical** to averaging the dense vector —
+//! the foundation of the `shards = k ≡ shards = 1` equivalence pin.
+
+use std::ops::Range;
+
+/// The range partition for a `d`-dimensional vector over `k` shards.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    d: usize,
+    k: usize,
+}
+
+impl ShardPlan {
+    /// Partition `[0, d)` into `k` contiguous ranges (k clamped to ≥ 1;
+    /// shards beyond `d` come out empty).
+    pub fn new(d: usize, k: usize) -> ShardPlan {
+        ShardPlan { d, k: k.max(1) }
+    }
+
+    /// A single shard covering the whole vector — the unsharded plan.
+    pub fn dense(d: usize) -> ShardPlan {
+        ShardPlan::new(d, 1)
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.k
+    }
+
+    /// Vector dimension the plan partitions.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Is this the trivial single-shard plan?
+    pub fn is_dense(&self) -> bool {
+        self.k == 1
+    }
+
+    /// The index range owned by shard `s` (first `d mod k` shards carry
+    /// the extra coordinate).
+    pub fn range(&self, s: usize) -> Range<usize> {
+        debug_assert!(s < self.k);
+        let base = self.d / self.k;
+        let extra = self.d % self.k;
+        let start = s * base + s.min(extra);
+        let len = base + usize::from(s < extra);
+        start..start + len
+    }
+
+    /// All shard ranges in index order (adjacent, disjoint, covering
+    /// `[0, d)`).
+    pub fn ranges(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.k).map(|s| self.range(s))
+    }
+
+    /// The shard owning coordinate `i`.
+    pub fn shard_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.d);
+        let base = self.d / self.k;
+        let extra = self.d % self.k;
+        let split = extra * (base + 1);
+        if i < split {
+            i / (base + 1)
+        } else {
+            extra + (i - split) / base.max(1)
+        }
+    }
+}
+
+/// Shard-partitioned mean: average each shard's range independently —
+/// the dataflow the k shard servers execute in parallel. Bitwise-identical
+/// to the dense [`crate::util::math::mean_into`] (per-coordinate kernels,
+/// fixed operation order; pinned by a property test below), so
+/// `shards = k` runs reproduce `shards = 1` exactly.
+pub fn mean_into_sharded(plan: &ShardPlan, inputs: &[&[f32]], out: &mut [f32]) {
+    if plan.is_dense() {
+        // Keep the unsharded path literally the pre-sharding call (and
+        // allocation-free, DESIGN.md §7).
+        crate::util::math::mean_into(inputs, out);
+        return;
+    }
+    let mut subs: Vec<&[f32]> = Vec::with_capacity(inputs.len());
+    for r in plan.ranges() {
+        if r.is_empty() {
+            continue;
+        }
+        subs.clear();
+        subs.extend(inputs.iter().map(|v| &v[r.clone()]));
+        crate::util::math::mean_into(&subs, &mut out[r]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn dense_plan_is_identity() {
+        let p = ShardPlan::dense(10);
+        assert!(p.is_dense());
+        assert_eq!(p.range(0), 0..10);
+        assert_eq!(p.ranges().count(), 1);
+    }
+
+    #[test]
+    fn uneven_split_front_loads_the_remainder() {
+        // d = 10, k = 4 → 3 | 3 | 2 | 2.
+        let p = ShardPlan::new(10, 4);
+        let r: Vec<_> = p.ranges().collect();
+        assert_eq!(r, vec![0..3, 3..6, 6..8, 8..10]);
+    }
+
+    #[test]
+    fn more_shards_than_coordinates_leaves_empty_tails() {
+        let p = ShardPlan::new(3, 5);
+        let lens: Vec<_> = p.ranges().map(|r| r.len()).collect();
+        assert_eq!(lens, vec![1, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn properties_partition_laws() {
+        prop::check("shard ranges partition [0, d)", 300, |g| {
+            // Exercise d not divisible by k heavily (the boundary case the
+            // sharded collectives must get right).
+            let d = g.usize_in(0..4096);
+            let k = 1 + g.usize_in(0..64);
+            let p = ShardPlan::new(d, k);
+            let mut expected_start = 0usize;
+            let mut max_len = 0usize;
+            let mut min_len = usize::MAX;
+            for r in p.ranges() {
+                prop::assert_that(r.start == expected_start, "adjacent and ordered")?;
+                expected_start = r.end;
+                max_len = max_len.max(r.len());
+                min_len = min_len.min(r.len());
+            }
+            prop::assert_that(expected_start == d, "covers [0, d)")?;
+            prop::assert_that(max_len - min_len <= 1, "balanced within one")?;
+            prop::assert_that(
+                max_len == d.div_ceil(k) && (d == 0 || min_len == d / k),
+                "sizes are ⌈d/k⌉ / ⌊d/k⌋",
+            )?;
+            // shard_of inverts the ranges.
+            if d > 0 {
+                let i = g.usize_in(0..d);
+                let s = p.shard_of(i);
+                prop::assert_that(p.range(s).contains(&i), "shard_of lands in its range")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn properties_sharded_mean_is_bitwise_dense() {
+        use crate::util::kernels;
+        prop::check("per-shard mean ≡ dense mean, bitwise", 100, |g| {
+            let d = 1 + g.usize_in(0..300);
+            let k = 1 + g.usize_in(0..8);
+            let n = 1 + g.usize_in(0..5);
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| g.f32_in(-4.0..4.0)).collect())
+                .collect();
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let mut dense = vec![0.0f32; d];
+            kernels::mean_into(&refs, &mut dense);
+            let mut sharded = vec![0.0f32; d];
+            mean_into_sharded(&ShardPlan::new(d, k), &refs, &mut sharded);
+            prop::assert_that(
+                dense.iter().zip(&sharded).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "bitwise equal",
+            )
+        });
+    }
+}

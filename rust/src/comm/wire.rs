@@ -56,6 +56,24 @@ pub const CODEC_QSGD: u8 = 2;
 /// billed traffic accounting (checkpoint/eval/final-state collects).
 pub const FLAG_RAW: u8 = 1;
 
+/// Frame flag bits 1..7 carry the shard index of a shard-addressed
+/// sync-round frame (`State` collects and `InstallState` installs when
+/// `comm.shards > 1`; DESIGN.md §3). Shard 0 encodes as 0, so
+/// single-shard frames are byte-identical to the pre-sharding wire
+/// format.
+pub const SHARD_FLAG_SHIFT: u32 = 1;
+
+/// Encode a shard index into the frame's shard flag bits.
+pub fn shard_flags(shard: usize) -> u8 {
+    debug_assert!(shard < 128, "shard index does not fit the 7 shard flag bits");
+    (shard as u8) << SHARD_FLAG_SHIFT
+}
+
+/// The shard index a frame's flags carry (0 for unsharded frames).
+pub fn flags_shard(flags: u8) -> usize {
+    (flags >> SHARD_FLAG_SHIFT) as usize
+}
+
 /// The frame vocabulary — every `Cmd`/`Reply` of the lockstep protocol
 /// plus the connection handshake.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -504,7 +522,7 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
         "train:{preset}|{w}|{h}|{steps}|{spe}|{ee}|{le}|{seed}|{be:?}|{dim}|{ce}|{fused};\
          optim:{algo}|{eta}|{eps}|{b0}|{wu}|{mom};\
          data:{zs}|{mk}|{ni}|{eb};\
-         comm:{tr}|{cmp}|{ql}|{tk};\
+         comm:{tr}|{cmp}|{ql}|{tk}|{shards};\
          sync:{sp}|{hm}|{gf}|{ge}|{dt}|{tcf};\
          faults:{sw}|{sf}|{stp}|{sts}|{cw}|{cs}|{q}|{to}|{ds};\
          precision:{pw}|{ps}",
@@ -534,6 +552,7 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
         cmp = cfg.comm.compression,
         ql = cfg.comm.qsgd_levels,
         tk = cfg.comm.topk_keep,
+        shards = cfg.comm.shards,
         sp = cfg.sync.policy,
         hm = cfg.sync.h_max,
         gf = cfg.sync.grow_factor,
@@ -776,5 +795,24 @@ mod tests {
         assert_eq!(config_fingerprint(&a), config_fingerprint(&b), "non-semantic");
         b.train.seed += 1;
         assert_ne!(config_fingerprint(&a), config_fingerprint(&b), "semantic");
+        // The shard count shapes the data plane: leader and workers must
+        // agree on it, so it is part of the handshake fingerprint.
+        let mut c = ExperimentConfig::default();
+        c.comm.shards = 4;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c), "shards");
+    }
+
+    #[test]
+    fn shard_flags_roundtrip_and_preserve_raw_bit() {
+        // Shard 0 encodes as no flags at all — the k = 1 wire format is
+        // byte-identical to the pre-sharding one.
+        assert_eq!(shard_flags(0), 0);
+        for s in [0usize, 1, 3, 63] {
+            let f = shard_flags(s);
+            assert_eq!(flags_shard(f), s);
+            // The raw bit composes orthogonally.
+            assert_eq!(flags_shard(f | FLAG_RAW), s);
+            assert_eq!((f | FLAG_RAW) & FLAG_RAW, FLAG_RAW);
+        }
     }
 }

@@ -16,12 +16,17 @@
 //! compression = "none"      # or "qsgd" / "topk" (require transport = "channel")
 //! qsgd_levels = 15          # QSGD levels s (31 symbols → 5-bit codes at s = 15)
 //! topk_keep = 0.01          # top-k keep fraction (1% sparsification)
+//! shards = 1                # k > 1 range-partitions the PS across k shard
+//!                           # servers (requires compression = "none",
+//!                           # topology = "ps"; bitwise ≡ shards = 1)
 //! ```
 //!
-//! Pair with `net.topology = "ps" | "allreduce"` to move the same run
-//! between a parameter server and a ring — the `compressed-qsgd` and
-//! `ring-allreduce` presets below are the canonical examples, and
-//! `benches/comm_reduction.rs` sweeps all four transports this way.
+//! Pair with `net.topology = "ps" | "allreduce" | "tree"` (tree takes
+//! `net.tree_fanout`) to move the same run between a parameter server, a
+//! ring and a reduction tree — the `compressed-qsgd`, `ring-allreduce`,
+//! `sharded-ps` and `tree-allreduce` presets below are the canonical
+//! examples, and `benches/comm_reduction.rs` sweeps the transports while
+//! `benches/topology_scaling.rs` sweeps topologies and shard counts.
 //!
 //! # The `[sync]` section
 //!
@@ -259,6 +264,42 @@ backend = "rust_math"
 algorithm = "local_adaalter"
 [net]
 topology = "allreduce"
+[comm]
+transport = "simulated"
+"#,
+    },
+    Preset {
+        name: "sharded-ps",
+        summary: "Local AdaAlter H=4 over a 4-shard parameter server (incast split 4 ways)",
+        toml: r#"
+[train]
+workers = 8
+sync_period = 4
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+[optim]
+algorithm = "local_adaalter"
+[comm]
+transport = "simulated"
+shards = 4
+"#,
+    },
+    Preset {
+        name: "tree-allreduce",
+        summary: "Local AdaAlter H=4 over a fan-out-4 tree reduction (depth ⌈log₄ n⌉)",
+        toml: r#"
+[train]
+workers = 8
+sync_period = 4
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+[optim]
+algorithm = "local_adaalter"
+[net]
+topology = "tree"
+tree_fanout = 4
 [comm]
 transport = "simulated"
 "#,
@@ -516,6 +557,23 @@ mod tests {
         // Every other preset stays in-process.
         for p in PRESETS.iter().filter(|p| p.name != "tcp-loopback") {
             assert!(!load_preset(p.name).unwrap().comm.networked(), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn topology_presets_select_shards_and_tree() {
+        let s = load_preset("sharded-ps").unwrap();
+        assert_eq!(s.comm.shards, 4);
+        assert_eq!(s.comm.transport, "simulated");
+        assert_eq!(s.net.topology, "ps");
+        let t = load_preset("tree-allreduce").unwrap();
+        assert_eq!(t.net.topology, "tree");
+        assert_eq!(t.net.tree_fanout, 4);
+        assert_eq!(t.comm.shards, 1);
+        // Every other preset keeps the unsharded single-leader PS (or its
+        // explicitly chosen ring) — the bitwise-seed comm shape.
+        for p in PRESETS.iter().filter(|p| p.name != "sharded-ps") {
+            assert_eq!(load_preset(p.name).unwrap().comm.shards, 1, "{}", p.name);
         }
     }
 

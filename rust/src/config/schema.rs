@@ -254,8 +254,12 @@ impl Default for DataConfig {
 /// commodity-network studies (e.g. `net.bandwidth_gbps = 10`).
 #[derive(Clone, Debug)]
 pub struct NetConfig {
-    /// Topology: "ps" (paper's parameter-server) or "allreduce".
+    /// Topology: "ps" (paper's parameter-server), "allreduce" (ring) or
+    /// "tree" (hierarchical reduce+broadcast over a fan-out-f tree).
     pub topology: String,
+    /// Tree topology: children per node (fan-out f ≥ 2); depth is
+    /// ⌈log_f n⌉. Ignored by "ps" / "allreduce".
+    pub tree_fanout: usize,
     /// Per-message latency α (microseconds).
     pub latency_us: f64,
     /// Per-link bandwidth β (Gbit/s).
@@ -289,6 +293,7 @@ impl Default for NetConfig {
     fn default() -> Self {
         NetConfig {
             topology: "ps".into(),
+            tree_fanout: 2,
             latency_us: 50.0,
             bandwidth_gbps: 1056.0,
             server_bandwidth_gbps: 1056.0,
@@ -326,6 +331,12 @@ pub struct CommConfig {
     pub transport: String,
     /// "none" (default), "qsgd" or "topk".
     pub compression: String,
+    /// Leader shards k (range partition of the parameter vector across k
+    /// parallel shard servers, DESIGN.md §3). 1 (default) is the single
+    /// leader, bitwise-identical to the pre-sharding runs; k > 1 requires
+    /// `net.topology = "ps"` and an elementwise codec
+    /// (`comm.compression = "none"`; f32/bf16 wire both compose).
+    pub shards: usize,
     /// QSGD quantization levels s (1..=127). Default 15 → 2s+1 = 31
     /// symbols → 5-bit codes per coordinate on the wire.
     pub qsgd_levels: u8,
@@ -338,6 +349,7 @@ impl Default for CommConfig {
         CommConfig {
             transport: "simulated".into(),
             compression: "none".into(),
+            shards: 1,
             qsgd_levels: 15,
             topk_keep: 0.01,
         }
@@ -388,6 +400,25 @@ impl CommConfig {
                     "comm.compression must be \"none\", \"qsgd\" or \"topk\", got {other:?}"
                 )))
             }
+        }
+        if !(1..=64).contains(&self.shards) {
+            // The wire tags shard indices in the 7 free frame-flag bits;
+            // 64 leaves headroom and is far past the useful range.
+            return Err(Error::Config(format!(
+                "comm.shards must be in 1..=64, got {}",
+                self.shards
+            )));
+        }
+        if self.shards > 1 && self.compression != "none" {
+            // QSGD normalizes by the whole-vector norm and top-k selects
+            // globally: neither commutes with a range partition, so the
+            // sharded result would not be bitwise-equal to the dense run.
+            return Err(Error::Config(format!(
+                "comm.shards > 1 requires comm.compression = \"none\" \
+                 (got {:?}; qsgd/topk quantize against whole-vector state \
+                 and do not commute with a range partition)",
+                self.compression
+            )));
         }
         if !(1..=127).contains(&self.qsgd_levels) {
             return Err(Error::Config(format!(
@@ -827,6 +858,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "data.noniid",
     "data.eval_batches",
     "net.topology",
+    "net.tree_fanout",
     "net.latency_us",
     "net.bandwidth_gbps",
     "net.server_bandwidth_gbps",
@@ -839,6 +871,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "net.nodelay",
     "comm.transport",
     "comm.compression",
+    "comm.shards",
     "comm.qsgd_levels",
     "comm.topk_keep",
     "sync.policy",
@@ -911,6 +944,13 @@ impl ExperimentConfig {
             doc.int_or("data.eval_batches", c.data.eval_batches as i64)? as usize;
 
         c.net.topology = doc.str_or("net.topology", &c.net.topology)?;
+        let fanout = doc.int_or("net.tree_fanout", c.net.tree_fanout as i64)?;
+        if fanout < 2 {
+            return Err(Error::Config(format!(
+                "net.tree_fanout must be >= 2, got {fanout}"
+            )));
+        }
+        c.net.tree_fanout = fanout as usize;
         c.net.latency_us = doc.float_or("net.latency_us", c.net.latency_us)?;
         c.net.bandwidth_gbps = doc.float_or("net.bandwidth_gbps", c.net.bandwidth_gbps)?;
         c.net.server_bandwidth_gbps =
@@ -933,6 +973,13 @@ impl ExperimentConfig {
 
         c.comm.transport = doc.str_or("comm.transport", &c.comm.transport)?;
         c.comm.compression = doc.str_or("comm.compression", &c.comm.compression)?;
+        let shards = doc.int_or("comm.shards", c.comm.shards as i64)?;
+        if !(1..=64).contains(&shards) {
+            return Err(Error::Config(format!(
+                "comm.shards must be in 1..=64, got {shards}"
+            )));
+        }
+        c.comm.shards = shards as usize;
         let levels = doc.int_or("comm.qsgd_levels", c.comm.qsgd_levels as i64)?;
         if !(1..=127).contains(&levels) {
             return Err(Error::Config(format!(
@@ -1053,12 +1100,28 @@ impl ExperimentConfig {
             }
         }
         match self.net.topology.as_str() {
-            "ps" | "allreduce" => {}
+            "ps" | "allreduce" | "tree" => {}
             other => {
                 return Err(Error::Config(format!(
-                    "net.topology must be \"ps\" or \"allreduce\", got {other:?}"
+                    "net.topology must be \"ps\", \"allreduce\" or \"tree\", got {other:?}"
                 )))
             }
+        }
+        if self.net.tree_fanout < 2 {
+            return Err(Error::Config(format!(
+                "net.tree_fanout must be >= 2, got {}",
+                self.net.tree_fanout
+            )));
+        }
+        if self.comm.shards > 1 && self.net.topology != "ps" {
+            // Sharding splits the *server*: only the parameter-server
+            // topology has one. Ring/tree reductions have no incast to
+            // shard away.
+            return Err(Error::Config(format!(
+                "comm.shards > 1 shards the parameter server; net.topology \
+                 must be \"ps\", got {:?}",
+                self.net.topology
+            )));
         }
         if self.net.latency_us < 0.0 || self.net.bandwidth_gbps <= 0.0 {
             return Err(Error::Config("net latency/bandwidth out of range".into()));
@@ -1374,6 +1437,41 @@ mod tests {
         c.comm.topk_keep = 0.5;
         c.comm.transport = "carrier-pigeon".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn shards_and_tree_topology_parse_and_validate() {
+        let doc = TomlDoc::parse("[comm]\nshards = 4\n[net]\ntopology = \"ps\"\n").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.comm.shards, 4);
+
+        let doc = TomlDoc::parse("[net]\ntopology = \"tree\"\ntree_fanout = 4\n").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.net.topology, "tree");
+        assert_eq!(c.net.tree_fanout, 4);
+
+        // Bounds.
+        for bad in ["shards = 0", "shards = 65"] {
+            let doc = TomlDoc::parse(&format!("[comm]\n{bad}\n")).unwrap();
+            assert!(ExperimentConfig::from_doc(&doc).is_err(), "{bad}");
+        }
+        let doc = TomlDoc::parse("[net]\ntree_fanout = 1\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+
+        // Sharding splits the PS; other topologies have no server.
+        let mut c = ExperimentConfig::default();
+        c.comm.shards = 2;
+        c.net.topology = "allreduce".into();
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("comm.shards"), "{err}");
+
+        // Lossy codecs don't commute with a range partition.
+        let mut c = ExperimentConfig::default();
+        c.comm.transport = "channel".into();
+        c.comm.compression = "qsgd".into();
+        c.comm.shards = 2;
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("comm.shards"), "{err}");
     }
 
     #[test]

@@ -293,7 +293,7 @@ impl Trainer {
             if let Some(pf) = &self.port_file {
                 write_port_file(pf, bound.local_addr())?;
             }
-            let state = WireState::new(WireState::codec_for(cfg), n, d);
+            let state = WireState::sharded(WireState::codec_for(cfg), n, d, cfg.comm.shards);
             let counters = NetCounters::new();
             let transport = bound.handshake(
                 &specs,
@@ -305,13 +305,13 @@ impl Trainer {
             let coll: Box<dyn Collective> = if cfg.comm.compression == "qsgd" {
                 Box::new(WireCollective::new(
                     state,
-                    NetModel::from_config(&cfg.net),
+                    NetModel::from_config(&cfg.net).with_shards(cfg.comm.shards),
                     format!("qsgd(s={})", cfg.comm.qsgd_levels),
                 ))
             } else if cfg.precision.wire_bf16() {
                 Box::new(WireCollective::new(
                     state,
-                    NetModel::from_config(&cfg.net),
+                    NetModel::from_config(&cfg.net).with_shards(cfg.comm.shards),
                     "bf16".into(),
                 ))
             } else {

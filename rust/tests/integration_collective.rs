@@ -10,6 +10,9 @@
 //!   paper's `2/H` claim — exactly, for H ∈ {1, 4, 16}.
 //! * Compressed transports (QSGD / top-k) run end-to-end, report *exact*
 //!   wire bytes, and are selected purely via `ExperimentConfig`.
+//! * Sharding the parameter server (`comm.shards = k`) and switching to
+//!   the tree reduction (`net.topology = "tree"`) change only the cost
+//!   accounting — the data plane stays bitwise-identical.
 
 mod common;
 
@@ -162,6 +165,53 @@ fn ring_allreduce_traffic_selected_by_config() {
     assert_eq!(bytes, rounds * net.sync_traffic_bytes(n, d_bytes, 2));
     assert_eq!(bytes, rounds * 2 * (n as u64 - 1) * d_bytes * 2);
     assert_eq!(r.recorder.transport(), "simulated(allreduce)");
+}
+
+/// The ISSUE's sharding equivalence criterion: `comm.shards = k` range-
+/// partitions the parameter server across k shard servers, yet the final
+/// parameters, loss trace and final eval are bitwise-identical to the
+/// single-leader run — for fully-sync AdaGrad at H=1 and local AdaAlter
+/// at H=4 — and the recorded bytes are identical too (the per-shard byte
+/// sums equal the dense totals exactly).
+#[test]
+fn sharded_ps_is_bitwise_identical_to_single_leader() {
+    for (algo, h) in [
+        (Algorithm::AdaGrad, SyncPeriod::Every(1)),
+        (Algorithm::LocalAdaAlter, SyncPeriod::Every(4)),
+    ] {
+        // Dim 64 with k=5 exercises the uneven split (64 = 5·12 + 4).
+        let dense_cfg = cfg(algo, h, 4, 40);
+        let mut shard_cfg = dense_cfg.clone();
+        shard_cfg.comm.shards = 5;
+        let a = run(dense_cfg);
+        let b = run(shard_cfg);
+        assert_bitwise_eq(&a, &b, &format!("{algo} sharded vs single-leader PS"));
+        assert_eq!(a.recorder.comm(), b.recorder.comm(), "{algo}: byte accounting drifted");
+        assert_eq!(a.recorder.transport(), "simulated(ps)");
+        assert_eq!(b.recorder.transport(), "simulated(ps, shards=5)");
+    }
+}
+
+/// The tree reduction is one config key away, keeps the data plane
+/// bitwise-identical (cost model only), and charges the all-reduce
+/// traffic total 2(n−1)·payload instead of the PS's 2n·payload.
+#[test]
+fn tree_topology_traffic_selected_by_config() {
+    let (n, steps, h) = (4usize, 16u64, 4u64);
+    let base = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(h), n, steps);
+    let mut c = base.clone();
+    c.net.topology = "tree".into();
+    c.net.tree_fanout = 2;
+    let net = NetModel::from_config(&c.net);
+    let d_bytes = 4 * c.train.rust_math_dim as u64;
+    let a = run(base);
+    let r = run(c);
+    assert_bitwise_eq(&a, &r, "tree vs ps data plane");
+    let (rounds, bytes) = r.recorder.comm();
+    assert_eq!(rounds, steps / h);
+    assert_eq!(bytes, rounds * net.sync_traffic_bytes(n, d_bytes, 2));
+    assert_eq!(bytes, rounds * 2 * (n as u64 - 1) * d_bytes * 2);
+    assert_eq!(r.recorder.transport(), "simulated(tree)");
 }
 
 /// Resuming over a compressed transport is rejected up front: the

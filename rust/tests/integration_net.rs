@@ -182,7 +182,56 @@ fn uds_f32_pins_bitwise_against_in_process() {
     assert_report_matches(&rep, &reference, "uds_laa_h4");
 }
 
+/// Sharded parameter server over the real wire: `comm.shards = 4` splits
+/// every sync-round State/InstallState into shard-tagged frames, yet the
+/// run pins bitwise against the in-process sharded reference and the
+/// accounted socket payload bytes still equal the booked accounting
+/// exactly (per-shard payload sums equal the dense totals).
+#[test]
+fn tcp_sharded_ps_pins_bitwise_against_in_process() {
+    for (codec, tag) in [("f32", "shards_f32_laa_h4_w3"), ("bf16", "shards_bf16_laa_h4_w3")] {
+        let toml = net_toml("local_adaalter", 4, 3, 36, codec, "127.0.0.1:0")
+            .replace("transport = \"tcp\"\n", "transport = \"tcp\"\nshards = 4\n");
+        let run = common::run_net(&toml, 3, tag, &[]);
+        for (w, st) in run.workers.iter().enumerate() {
+            assert!(st.success(), "{tag}: worker {w} failed: {st}");
+        }
+        assert!(run.leader.success(), "{tag}: leader failed: {}", run.leader);
+        let rep = common::net_report(&run.out_dir);
+        let reference = reference_run(&toml, codec);
+        assert_report_matches(&rep, &reference, tag);
+    }
+}
+
 // --- Failure paths --------------------------------------------------------
+
+/// A leader that dies before publishing its address: the worker's
+/// port-file poll is bounded by `net.connect_timeout_s` and reports the
+/// field-named error (with the configured value) instead of hanging.
+#[test]
+fn missing_port_file_times_out_with_field_named_error() {
+    let dir = common::tmpdir("portfile_timeout");
+    let toml = net_toml("local_adaalter", 4, 2, 8, "f32", "127.0.0.1:0")
+        .replace("connect_timeout_s = 60.0", "connect_timeout_s = 1.0");
+    let cfg_path = common::write_cfg(&dir, &toml);
+    let started = std::time::Instant::now();
+    // No leader is ever spawned, so the port file never appears.
+    let out = std::process::Command::new(common::adaalter_bin())
+        .args(["train", "--config", &cfg_path, "--role", "worker"])
+        .args(["--worker-id", "0", "--port-file", &format!("{dir}/never.addr")])
+        .arg("--quiet")
+        .output()
+        .expect("spawn worker");
+    let elapsed = started.elapsed();
+    assert!(!out.status.success(), "worker must fail when the port file never appears");
+    assert!(
+        elapsed < std::time::Duration::from_secs(30),
+        "port-file poll must respect net.connect_timeout_s, took {elapsed:?}"
+    );
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("net.connect_timeout_s = 1"), "error must show the timeout: {err}");
+    assert!(err.contains("never appeared"), "error must say what happened: {err}");
+}
 
 /// A worker process killed mid-run (process exit, not a cooperative
 /// tombstone): under a quorum participation policy the leader absorbs the
