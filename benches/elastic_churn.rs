@@ -1,0 +1,229 @@
+//! Elastic-membership recovery bench (DESIGN.md §10): how fast a churned
+//! fleet returns to parity with an undisturbed one.
+//!
+//! Three in-process recovery scenarios on the synthetic backend, all
+//! driven by seeded `[faults]` plans (pure functions of
+//! `(seed, worker, step)`, so every number here is deterministic):
+//!
+//! * `rejoin_recovery` — a worker crashes and rejoins; recovery-time-to-
+//!   parity is the number of steps after re-admission until the churned
+//!   run's loss trajectory stays within 0.1% of the uninterrupted run's.
+//! * `scaleup_recovery` — the fleet grows from 3 to 4 workers mid-run
+//!   (`spawn_workers`); parity is measured against a 4-worker-from-start
+//!   run from the admission boundary.
+//! * `spot_churn` — spot-instance-style churn: a crash + rejoin *and* a
+//!   late spawn in one run; parity is measured after the last admission.
+//!
+//! The ratcheted metrics are the exact byte counts: the churn-free
+//! invariant (`final_x_mismatch_bytes` / `loss_trace_mismatch_bytes`
+//! between an autoscale-armed-but-quiet run and the default trainer) and
+//! churn replay determinism (`replay_mismatch_bytes` between two runs of
+//! the same plan) must all be exactly 0. The `parity_steps` /
+//! `parity_rounds` readings are informational, and `steps_per_s` rates
+//! only warn — wall clock depends on the host.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use adaalter::config::{Algorithm, Backend, ExperimentConfig, SyncPeriod};
+use adaalter::coordinator::{BackendFactory, RunResult, Trainer};
+use adaalter::sim::SyntheticProblem;
+use adaalter::util::timing::BenchSink;
+
+/// Problem dimension: big enough that a sync round moves real vectors,
+/// small enough that six runs finish in seconds.
+const DIM: usize = 2048;
+const H: u64 = 4;
+
+/// The H=4 local-AdaAlter shape every scenario uses, every step logged
+/// (parity is read off the loss trace).
+fn cfg(workers: usize, steps: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.train.workers = workers;
+    c.train.steps = steps;
+    c.train.sync_period = SyncPeriod::Every(H);
+    c.train.backend = Backend::RustMath;
+    c.train.rust_math_dim = DIM;
+    c.train.log_every = 1;
+    c.train.fused = false; // required by the churn validation rules
+    c.optim.algorithm = Algorithm::LocalAdaAlter;
+    c.optim.warmup_steps = 10;
+    c
+}
+
+/// Train `c` on the synthetic backend; returns the result and wall time.
+fn run(c: &ExperimentConfig) -> (RunResult, f64) {
+    let p = SyntheticProblem::new(c.train.rust_math_dim, c.train.workers, c.train.seed);
+    let f: BackendFactory = Arc::new(move |w| Ok(Box::new(p.backend(w)) as Box<_>));
+    let t0 = Instant::now();
+    let r = Trainer::new(c.clone(), f).run().expect("bench run failed");
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Bytes of `a`'s final parameters whose bits differ from `b`'s.
+fn final_x_mismatch_bytes(a: &RunResult, b: &RunResult) -> f64 {
+    assert_eq!(a.final_x.len(), b.final_x.len(), "dimension mismatch");
+    let words = a
+        .final_x
+        .iter()
+        .zip(&b.final_x)
+        .filter(|(x, y)| x.to_bits() != y.to_bits())
+        .count();
+    (4 * words) as f64
+}
+
+/// Bytes of `a`'s logged loss trace whose bits differ from `b`'s.
+fn loss_trace_mismatch_bytes(a: &RunResult, b: &RunResult) -> f64 {
+    assert_eq!(a.recorder.steps.len(), b.recorder.steps.len(), "trace length mismatch");
+    let words = a
+        .recorder
+        .steps
+        .iter()
+        .zip(&b.recorder.steps)
+        .filter(|(p, q)| p.step != q.step || p.train_loss.to_bits() != q.train_loss.to_bits())
+        .count();
+    (8 * words) as f64
+}
+
+/// Recovery-time-to-parity: the number of steps after `from_step` until
+/// the churned run `a` stays within `tol` (relative) of the reference `b`
+/// for the rest of the run. 0 = immediate parity; capped at the end of
+/// the run if the trajectories never lock.
+fn parity_steps(a: &RunResult, b: &RunResult, from_step: u64, tol: f64) -> u64 {
+    assert_eq!(a.recorder.steps.len(), b.recorder.steps.len(), "trace length mismatch");
+    let mut last_bad = from_step;
+    for (p, q) in a.recorder.steps.iter().zip(&b.recorder.steps) {
+        assert_eq!(p.step, q.step, "step ids diverged");
+        if p.step < from_step {
+            continue;
+        }
+        let gap = (p.train_loss - q.train_loss).abs() / q.train_loss.abs().max(1e-12);
+        if gap > tol {
+            last_bad = p.step;
+        }
+    }
+    last_bad - from_step
+}
+
+const PARITY_TOL: f64 = 1e-3;
+
+fn main() {
+    let mut sink = BenchSink::new("elastic_churn");
+
+    // --- The standing invariant: armed-but-quiet membership engine ------
+    // An autoscale-armed run whose thresholds never trip must be
+    // bitwise-identical to the default fault-free trainer.
+    {
+        let base = cfg(4, 160);
+        let mut armed = base.clone();
+        armed.faults.autoscale = true;
+        armed.faults.autoscale_straggler_s = 1e9;
+        armed.faults.autoscale_drift = 1e18;
+        let (a, _) = run(&base);
+        let (b, wall) = run(&armed);
+        let fx = final_x_mismatch_bytes(&a, &b);
+        let tr = loss_trace_mismatch_bytes(&a, &b);
+        println!(
+            "churn_free_invariant     final_x mismatch {fx:>4.0} B  trace mismatch {tr:>4.0} B  \
+             wall {wall:.2}s"
+        );
+        sink.value(
+            "churn_free_invariant",
+            &[
+                ("final_x_mismatch_bytes", fx),
+                ("loss_trace_mismatch_bytes", tr),
+                ("steps_per_s", 160.0 / wall),
+            ],
+        );
+    }
+
+    // --- Crash + rejoin -------------------------------------------------
+    {
+        let steps = 240;
+        let reference = cfg(4, steps);
+        let mut churn = reference.clone();
+        churn.faults.crash_worker = 2;
+        churn.faults.crash_step = 21;
+        churn.faults.rejoin_step = 29;
+        let readmit = 32; // first H=4 boundary at or after rejoin_step
+        let (r, _) = run(&reference);
+        let (c1, wall) = run(&churn);
+        let (c2, _) = run(&churn);
+        let parity = parity_steps(&c1, &r, readmit, PARITY_TOL);
+        let replay = final_x_mismatch_bytes(&c1, &c2) + loss_trace_mismatch_bytes(&c1, &c2);
+        println!(
+            "rejoin_recovery          parity after {parity:>3} steps \
+             ({:>2} rounds)  replay mismatch {replay:.0} B  wall {wall:.2}s",
+            parity.div_ceil(H)
+        );
+        sink.value(
+            "rejoin_recovery",
+            &[
+                ("parity_steps", parity as f64),
+                ("parity_rounds", parity.div_ceil(H) as f64),
+                ("replay_mismatch_bytes", replay),
+                ("steps_per_s", steps as f64 / wall),
+            ],
+        );
+    }
+
+    // --- Scale-up: 3 workers grow to 4 ---------------------------------
+    {
+        let steps = 240;
+        let reference = cfg(4, steps);
+        let mut churn = reference.clone();
+        churn.faults.spawn_workers = 1;
+        churn.faults.spawn_step = 80;
+        let admit = 80; // spawn_step is itself an H=4 boundary
+        let (r, _) = run(&reference);
+        let (c, wall) = run(&churn);
+        let parity = parity_steps(&c, &r, admit, PARITY_TOL);
+        println!(
+            "scaleup_recovery         parity after {parity:>3} steps \
+             ({:>2} rounds)  wall {wall:.2}s",
+            parity.div_ceil(H)
+        );
+        sink.value(
+            "scaleup_recovery",
+            &[
+                ("parity_steps", parity as f64),
+                ("parity_rounds", parity.div_ceil(H) as f64),
+                ("steps_per_s", steps as f64 / wall),
+            ],
+        );
+    }
+
+    // --- Spot-instance-style churn: crash + rejoin + late spawn ---------
+    {
+        let steps = 240;
+        let reference = cfg(5, steps);
+        let mut churn = reference.clone();
+        churn.faults.crash_worker = 3;
+        churn.faults.crash_step = 21;
+        churn.faults.rejoin_step = 29;
+        churn.faults.spawn_workers = 1; // worker 4 arrives late
+        churn.faults.spawn_step = 60;
+        let last_admit = 60; // the spawn boundary is the last churn event
+        let (r, _) = run(&reference);
+        let (c1, wall) = run(&churn);
+        let (c2, _) = run(&churn);
+        let parity = parity_steps(&c1, &r, last_admit, PARITY_TOL);
+        let replay = final_x_mismatch_bytes(&c1, &c2) + loss_trace_mismatch_bytes(&c1, &c2);
+        println!(
+            "spot_churn               parity after {parity:>3} steps \
+             ({:>2} rounds)  replay mismatch {replay:.0} B  wall {wall:.2}s",
+            parity.div_ceil(H)
+        );
+        sink.value(
+            "spot_churn",
+            &[
+                ("parity_steps", parity as f64),
+                ("parity_rounds", parity.div_ceil(H) as f64),
+                ("replay_mismatch_bytes", replay),
+                ("steps_per_s", steps as f64 / wall),
+            ],
+        );
+    }
+
+    sink.finish();
+}

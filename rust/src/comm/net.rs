@@ -41,7 +41,7 @@ use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -69,6 +69,12 @@ use crate::util::kernels;
 /// 3 *before* replying — a mid-round process death the leader must absorb
 /// as a `Crashed` tombstone.
 pub const EXIT_AT_STEP_ENV: &str = "ADAALTER_EXIT_AT_STEP";
+
+/// Env var for the graceful-leave tests: a worker process that reads a
+/// `SyncStep`/`LocalStep` command for this (1-based) step writes a `Leave`
+/// frame and exits cleanly (code 0) *before* executing it — a voluntary
+/// departure the leader bills as a leave, not a crash (DESIGN.md §10).
+pub const LEAVE_AT_STEP_ENV: &str = "ADAALTER_LEAVE_AT_STEP";
 
 /// Writer-queue depth per peer: deep enough that the strict lockstep
 /// protocol (≤ a few in-flight frames per worker) never blocks the
@@ -582,7 +588,11 @@ impl Bound {
     /// the protocol version, a fresh in-range worker id and the matching
     /// config fingerprint; violators get an `ErrMsg` frame and are
     /// dropped while the leader keeps listening. Returns the running
-    /// transport (reader/writer threads spawned per peer).
+    /// transport (reader/writer threads spawned per peer). The listener
+    /// stays open on an accept thread for the lifetime of the transport:
+    /// late `Join` handshakes from relaunched worker processes are parked
+    /// until the leader admits them at a sync-round boundary
+    /// ([`TcpTransport::admit_join`], DESIGN.md §10).
     pub fn handshake(
         self,
         specs: &[WorkerSpec],
@@ -664,12 +674,33 @@ impl Bound {
             conns[w] = Some(stream);
             connected += 1;
         }
+        // Rejoin acks are pre-encoded with the crash schedule stripped:
+        // a relaunched worker must not replay the death that took it out.
+        let ack_payloads = specs
+            .iter()
+            .map(|s| {
+                let mut p = encode_hello_ack(n, s);
+                p[8..16].copy_from_slice(&0u64.to_le_bytes());
+                p
+            })
+            .collect();
         TcpTransport::start(
             conns.into_iter().map(|c| c.expect("all connected")).collect(),
             state,
             counters,
+            JoinSource { listener: self.listener, fingerprint, nodelay },
+            ack_payloads,
         )
     }
+}
+
+/// What the accept thread needs to validate and park late `Join`
+/// handshakes: the still-open listener plus the initial handshake's
+/// fingerprint and socket options.
+struct JoinSource {
+    listener: NetListener,
+    fingerprint: u64,
+    nodelay: bool,
 }
 
 struct Peer {
@@ -690,17 +721,83 @@ struct Peer {
 /// and full-barrier runs fail with a clean protocol error, never a hang.
 pub struct TcpTransport {
     peers: Vec<Peer>,
-    events: Receiver<(usize, Option<Frame>)>,
+    events: Receiver<(usize, u64, Option<Frame>)>,
+    /// Kept open so [`TcpTransport::admit_join`] can spawn reader threads
+    /// for re-admitted peers; consequently the event channel never closes
+    /// on its own and `recv` detects the all-dead state explicitly.
+    ev_tx: Sender<(usize, u64, Option<Frame>)>,
     state: Arc<Mutex<WireState>>,
     counters: Arc<NetCounters>,
     /// Synthesized tombstones queued ahead of socket events.
     synth: VecDeque<Reply>,
     dead: Vec<bool>,
+    /// Peers whose last word was a voluntary `Leave` frame — their
+    /// subsequent EOF is expected, not a crash.
+    left: Vec<bool>,
+    /// Step of the last frame received from each peer (postmortem
+    /// context for the all-workers-disconnected error).
+    last_step: Vec<u64>,
+    /// Per-peer connection epoch: reader threads stamp their events with
+    /// the generation they were spawned under, so a stale EOF from a
+    /// replaced connection cannot kill a re-admitted peer.
+    gen: Vec<u64>,
     /// Commands in flight per worker (≤ 1 in the lockstep protocol).
     outstanding: Vec<usize>,
     /// Per-worker reassembly of shard-tagged `State` frames
     /// (`comm.shards > 1`; idle on the dense plan).
     assembly: Vec<ShardAssembly>,
+    /// Pre-encoded rejoin `HelloAck` payloads (crash schedule stripped).
+    ack_payloads: Vec<Vec<u8>>,
+    /// Validated late handshakes parked by the accept thread, awaiting
+    /// boundary admission.
+    pending: Arc<Mutex<Vec<(usize, NetStream)>>>,
+    accept_stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+/// Spawn the reader/writer thread pair for one connected peer. The
+/// reader stamps every event with `generation` so replaced connections
+/// can be told apart from live ones.
+fn spawn_peer(
+    w: usize,
+    generation: u64,
+    stream: NetStream,
+    ev_tx: &Sender<(usize, u64, Option<Frame>)>,
+    counters: &Arc<NetCounters>,
+) -> Result<Peer> {
+    let mut rd = stream.try_clone()?;
+    let mut wr = stream;
+    let (tx, rx) = std::sync::mpsc::sync_channel::<Frame>(WRITER_QUEUE);
+    let rc = Arc::clone(counters);
+    let etx = ev_tx.clone();
+    let reader = std::thread::spawn(move || loop {
+        match Frame::read_from(&mut rd) {
+            Ok(Some(f)) => {
+                rc.add_total(f.wire_len() as u64);
+                if etx.send((w, generation, Some(f))).is_err() {
+                    break;
+                }
+            }
+            // Clean EOF and read errors alike mean the peer is gone
+            // mid-protocol; the leader turns this into a Crashed
+            // tombstone (or absorbs it silently after a Leave).
+            Ok(None) | Err(_) => {
+                let _ = etx.send((w, generation, None));
+                break;
+            }
+        }
+    });
+    let wc = Arc::clone(counters);
+    let writer = std::thread::spawn(move || {
+        while let Ok(f) = rx.recv() {
+            if f.write_to(&mut wr).is_err() {
+                break;
+            }
+            wc.add_total(f.wire_len() as u64);
+            let _ = wr.flush();
+        }
+    });
+    Ok(Peer { tx: Some(tx), writer: Some(writer), reader: Some(reader) })
 }
 
 impl TcpTransport {
@@ -721,55 +818,97 @@ impl TcpTransport {
         streams: Vec<NetStream>,
         state: Arc<Mutex<WireState>>,
         counters: Arc<NetCounters>,
+        join: JoinSource,
+        ack_payloads: Vec<Vec<u8>>,
     ) -> Result<TcpTransport> {
         let n = streams.len();
-        let (ev_tx, ev_rx) = std::sync::mpsc::channel::<(usize, Option<Frame>)>();
+        let (ev_tx, ev_rx) = std::sync::mpsc::channel::<(usize, u64, Option<Frame>)>();
         let mut peers = Vec::with_capacity(n);
         for (w, stream) in streams.into_iter().enumerate() {
-            let mut rd = stream.try_clone()?;
-            let mut wr = stream;
-            let (tx, rx) = std::sync::mpsc::sync_channel::<Frame>(WRITER_QUEUE);
-            let rc = Arc::clone(&counters);
-            let etx = ev_tx.clone();
-            let reader = std::thread::spawn(move || loop {
-                match Frame::read_from(&mut rd) {
-                    Ok(Some(f)) => {
-                        rc.add_total(f.wire_len() as u64);
-                        if etx.send((w, Some(f))).is_err() {
-                            break;
-                        }
-                    }
-                    // Clean EOF and read errors alike mean the peer is
-                    // gone mid-protocol; the leader turns this into a
-                    // Crashed tombstone.
-                    Ok(None) | Err(_) => {
-                        let _ = etx.send((w, None));
-                        break;
-                    }
-                }
-            });
-            let wc = Arc::clone(&counters);
-            let writer = std::thread::spawn(move || {
-                while let Ok(f) = rx.recv() {
-                    if f.write_to(&mut wr).is_err() {
-                        break;
-                    }
-                    wc.add_total(f.wire_len() as u64);
-                    let _ = wr.flush();
-                }
-            });
-            peers.push(Peer { tx: Some(tx), writer: Some(writer), reader: Some(reader) });
+            peers.push(spawn_peer(w, 0, stream, &ev_tx, &counters)?);
         }
-        drop(ev_tx);
+        // The accept thread: poll the still-open listener, validate late
+        // `Join` handshakes (kind, id range, fingerprint — same rules as
+        // the initial hello) and park them for boundary admission. The
+        // `HelloAck` is deliberately NOT sent here: admission is the
+        // leader's decision, and the ack is the admission signal the
+        // rejoining worker blocks on.
+        let pending: Arc<Mutex<Vec<(usize, NetStream)>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept_stop = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let pending = Arc::clone(&pending);
+            let stop = Arc::clone(&accept_stop);
+            let counters = Arc::clone(&counters);
+            let JoinSource { listener, fingerprint, nodelay } = join;
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let mut stream = match listener.accept() {
+                        Ok(s) => s,
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                            continue;
+                        }
+                        Err(_) => break,
+                    };
+                    stream.set_read_timeout(Some(Duration::from_secs(5)));
+                    let join = match Frame::read_from(&mut stream) {
+                        Ok(Some(f)) if f.kind == FrameKind::Join && f.payload.len() == 8 => f,
+                        // Not a valid late handshake: drop and keep
+                        // listening.
+                        _ => continue,
+                    };
+                    counters.add_total(join.wire_len() as u64);
+                    let w = join.worker as usize;
+                    let peer_fp =
+                        u64::from_le_bytes(join.payload[..8].try_into().expect("sized"));
+                    let reject = if w >= n {
+                        Some(format!("worker id {w} out of range (cluster size {n})"))
+                    } else if peer_fp != fingerprint {
+                        Some(format!(
+                            "config mismatch: worker fingerprint {peer_fp:#018x} != leader \
+                             {fingerprint:#018x} — leader and workers must run the identical \
+                             experiment config"
+                        ))
+                    } else {
+                        None
+                    };
+                    if let Some(msg) = reject {
+                        let f = Frame {
+                            kind: FrameKind::ErrMsg,
+                            codec: CODEC_RAW,
+                            flags: 0,
+                            worker: join.worker,
+                            step: 0,
+                            payload: msg.into_bytes(),
+                        };
+                        counters.add_total(f.wire_len() as u64);
+                        let _ = f.write_to(&mut stream);
+                        continue;
+                    }
+                    stream.set_nodelay(nodelay);
+                    if let Ok(mut p) = pending.lock() {
+                        p.push((w, stream));
+                    }
+                }
+            })
+        };
         Ok(TcpTransport {
             peers,
             events: ev_rx,
+            ev_tx,
             state,
             counters,
             synth: VecDeque::new(),
             dead: vec![false; n],
+            left: vec![false; n],
+            last_step: vec![0; n],
+            gen: vec![0; n],
             outstanding: vec![0; n],
             assembly: (0..n).map(|_| ShardAssembly::default()).collect(),
+            ack_payloads,
+            pending,
+            accept_stop,
+            accept_thread: Some(accept_thread),
         })
     }
 
@@ -781,6 +920,79 @@ impl TcpTransport {
     /// The shared traffic counters (for end-of-run reporting).
     pub fn counters(&self) -> Arc<NetCounters> {
         Arc::clone(&self.counters)
+    }
+
+    /// Is peer `w`'s socket dead (crashed or departed)? Out-of-range ids
+    /// read as dead.
+    pub fn peer_dead(&self, w: usize) -> bool {
+        self.dead.get(w).copied().unwrap_or(true)
+    }
+
+    /// Worker ids with a validated late handshake parked and awaiting
+    /// admission (sorted, deduplicated). Non-blocking — the accept thread
+    /// fills the queue; the leader polls it at sync-round boundaries.
+    pub fn poll_joins(&self) -> Vec<usize> {
+        let p = self.pending.lock().expect("pending-join lock poisoned");
+        let mut ids: Vec<usize> = p.iter().map(|&(w, _)| w).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Admit worker `w`'s parked late handshake: send the rejoin
+    /// `HelloAck` (crash schedule stripped), replace the dead peer's
+    /// reader/writer threads with a pair on the new connection, and reset
+    /// the peer's protocol state. The caller (the leader, at a sync-round
+    /// boundary) then warm-starts the worker via the normal
+    /// `InstallState` catch-up path. If the worker reconnected more than
+    /// once, the newest connection wins and stale ones are dropped.
+    pub fn admit_join(&mut self, w: usize) -> Result<()> {
+        if w >= self.n() {
+            return Err(Error::Protocol(format!("no worker {w}")));
+        }
+        let mut stream = {
+            let mut p = self.pending.lock().expect("pending-join lock poisoned");
+            let mut found = None;
+            let mut i = 0;
+            while i < p.len() {
+                if p[i].0 == w {
+                    found = Some(p.remove(i).1);
+                } else {
+                    i += 1;
+                }
+            }
+            found.ok_or_else(|| {
+                Error::Protocol(format!("no pending join from worker {w} to admit"))
+            })?
+        };
+        let ack = Frame {
+            kind: FrameKind::HelloAck,
+            codec: CODEC_RAW,
+            flags: 0,
+            worker: w as u32,
+            step: 0,
+            payload: self.ack_payloads[w].clone(),
+        };
+        self.counters.add_total(ack.wire_len() as u64);
+        ack.write_to(&mut stream)?;
+        stream.set_read_timeout(None);
+        // New connection epoch: events from the replaced connection's
+        // reader (e.g. its trailing EOF) are ignored from here on.
+        self.gen[w] += 1;
+        let peer = spawn_peer(w, self.gen[w], stream, &self.ev_tx, &self.counters)?;
+        let mut old = std::mem::replace(&mut self.peers[w], peer);
+        old.tx = None;
+        if let Some(j) = old.writer.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = old.reader.take() {
+            let _ = j.join();
+        }
+        self.dead[w] = false;
+        self.left[w] = false;
+        self.outstanding[w] = 0;
+        self.assembly[w] = ShardAssembly::default();
+        Ok(())
     }
 
     /// Send `make(w)` to every worker.
@@ -836,8 +1048,20 @@ impl TcpTransport {
             return Ok(r);
         }
         loop {
+            // The event channel stays open for the transport's lifetime
+            // (`ev_tx` is held for join admissions), so the all-dead
+            // terminal state is detected explicitly instead of via
+            // channel closure.
+            if self.dead.iter().all(|&d| d) {
+                return Err(self.all_disconnected());
+            }
             match self.events.recv() {
-                Ok((w, Some(frame))) => {
+                Ok((w, g, _)) if g != self.gen[w] => {
+                    // Stale event from a connection that was since
+                    // replaced by a rejoin admission.
+                }
+                Ok((w, _, Some(frame))) => {
+                    self.last_step[w] = frame.step;
                     if let Some(reply) = self.frame_to_reply(w, frame)? {
                         self.outstanding[w] = self.outstanding[w].saturating_sub(1);
                         return Ok(reply);
@@ -845,26 +1069,57 @@ impl TcpTransport {
                     // Partial shard frame of a sync collect in flight —
                     // keep reading until its last shard lands.
                 }
-                Ok((w, None)) => {
+                Ok((w, _, None)) => {
                     if !self.dead[w] {
                         self.dead[w] = true;
-                        if self.outstanding[w] > 0 {
+                        // A voluntary Leave already answered the command
+                        // in flight; the trailing EOF is expected and
+                        // must not be billed as a crash.
+                        if !self.left[w] && self.outstanding[w] > 0 {
                             self.outstanding[w] = 0;
                             return Ok(Reply::Crashed { worker: w, step: 0 });
                         }
+                        self.outstanding[w] = 0;
                     }
                     // No command in flight: remember the death, keep
                     // waiting for the workers that are.
                 }
-                Err(_) => return Err(Error::Protocol("all workers disconnected".into())),
+                Err(_) => return Err(self.all_disconnected()),
             }
         }
+    }
+
+    /// The terminal no-peers-left error, with the per-peer postmortem the
+    /// ISSUE asks for: each worker's last-known protocol state and the
+    /// step of its last frame — so a real-cluster failure report starts
+    /// from the membership picture, not a bare string.
+    fn all_disconnected(&self) -> Error {
+        let states: Vec<String> = (0..self.n())
+            .map(|w| {
+                let state = if self.left[w] {
+                    "left"
+                } else if self.dead[w] {
+                    "crashed"
+                } else {
+                    "active"
+                };
+                format!("w{w}: {state}, last frame at step {}", self.last_step[w])
+            })
+            .collect();
+        Error::Protocol(format!(
+            "all workers disconnected (last-known peer states: {})",
+            states.join("; ")
+        ))
     }
 
     /// Best-effort shutdown: `stop(w)` to every live peer, then join the
     /// per-peer threads (workers close their sockets on `Stop`, which
     /// unblocks the readers).
     pub fn shutdown(&mut self, mut stop: impl FnMut(usize) -> Cmd) {
+        self.accept_stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.accept_thread.take() {
+            let _ = j.join();
+        }
         for w in 0..self.peers.len() {
             if !self.dead[w] {
                 if let Ok(frame) = self.cmd_to_frame(w, stop(w)) {
@@ -1132,6 +1387,12 @@ impl TcpTransport {
             }
             FrameKind::Ready => Reply::Ready { worker: w },
             FrameKind::Crashed => Reply::Crashed { worker: w, step: f.step },
+            FrameKind::Leave => {
+                // Voluntary departure: the peer's trailing EOF is now
+                // expected and must not synthesize a crash tombstone.
+                self.left[w] = true;
+                Reply::Left { worker: w, step: f.step }
+            }
             FrameKind::ErrMsg => Reply::Err {
                 worker: w,
                 msg: String::from_utf8_lossy(&f.payload).into_owned(),
@@ -1195,6 +1456,36 @@ impl LeaderLink {
         match self {
             LeaderLink::Chan(t) => t.send_to(w, cmd),
             LeaderLink::Net(t) => t.send_to(w, cmd),
+        }
+    }
+
+    /// Worker ids with a late wire handshake awaiting admission. Always
+    /// empty in-process: channel cells never reconnect — plan rejoins
+    /// revive them directly via `InstallState`.
+    pub fn poll_joins(&self) -> Vec<usize> {
+        match self {
+            LeaderLink::Chan(_) => Vec::new(),
+            LeaderLink::Net(t) => t.poll_joins(),
+        }
+    }
+
+    /// Admit a parked late handshake ([`TcpTransport::admit_join`]).
+    pub fn admit_join(&mut self, w: usize) -> Result<()> {
+        match self {
+            LeaderLink::Chan(_) => Err(Error::Protocol(format!(
+                "admit_join({w}) over the in-process transport (no wire, no late handshakes)"
+            ))),
+            LeaderLink::Net(t) => t.admit_join(w),
+        }
+    }
+
+    /// Is worker `w`'s connection dead at the transport level? Always
+    /// false in-process (channel cells outlive their scheduled crashes
+    /// and can be revived; there is no socket to lose).
+    pub fn peer_dead(&self, w: usize) -> bool {
+        match self {
+            LeaderLink::Chan(_) => false,
+            LeaderLink::Net(t) => t.peer_dead(w),
         }
     }
 
@@ -1644,6 +1935,7 @@ impl WorkerShim {
         match reply {
             Reply::Ready { .. } => Frame::control(FrameKind::Ready, worker, step),
             Reply::Crashed { step: s, .. } => Frame::control(FrameKind::Crashed, worker, s),
+            Reply::Left { step: s, .. } => Frame::control(FrameKind::Leave, worker, s),
             Reply::Err { msg, .. } => Frame {
                 kind: FrameKind::ErrMsg,
                 codec: CODEC_RAW,
@@ -1791,6 +2083,12 @@ fn connect_with_retry(cfg: &ExperimentConfig, kind: SocketKind, addr: &str) -> R
 /// the `[net]` budget), handshake, spawn the unchanged [`worker_loop`]
 /// cell, and shim frames ⇄ commands until `Stop`.
 ///
+/// With `rejoin` set (`--rejoin`), the handshake opens with a `Join`
+/// frame instead of `Hello`: a relaunched worker announcing itself to a
+/// live run. The leader parks the connection and answers the `HelloAck`
+/// only when it admits the worker at the next sync-round boundary, so
+/// the ack wait can span a local phase.
+///
 /// The cell, backends, kernels and codec draws are byte-for-byte the
 /// in-process ones — the only new code on this path is (de)framing.
 pub fn run_worker(
@@ -1798,6 +2096,7 @@ pub fn run_worker(
     worker: usize,
     connect_flag: &str,
     port_file: Option<&str>,
+    rejoin: bool,
 ) -> Result<()> {
     crate::util::simd::set_mode(crate::util::simd::SimdMode::from_config(&cfg.exec)?);
     let kind = SocketKind::from_transport(&cfg.comm.transport).ok_or_else(|| {
@@ -1810,10 +2109,11 @@ pub fn run_worker(
     let mut stream = connect_with_retry(cfg, kind, &addr)?;
     stream.set_nodelay(cfg.net.nodelay);
 
-    // Handshake.
+    // Handshake: Hello for the initial roll call, Join for a relaunched
+    // worker rejoining a live run (same payload, same validation).
     let fp = wire::config_fingerprint(cfg);
     Frame {
-        kind: FrameKind::Hello,
+        kind: if rejoin { FrameKind::Join } else { FrameKind::Hello },
         codec: CODEC_RAW,
         flags: 0,
         worker: worker as u32,
@@ -1860,6 +2160,8 @@ pub fn run_worker(
 
     let exit_at: Option<u64> =
         std::env::var(EXIT_AT_STEP_ENV).ok().and_then(|v| v.parse().ok());
+    let leave_at: Option<u64> =
+        std::env::var(LEAVE_AT_STEP_ENV).ok().and_then(|v| v.parse().ok());
     let mut shim = WorkerShim {
         codec: WireState::codec_for(cfg),
         n: ack.n,
@@ -1886,7 +2188,7 @@ pub fn run_worker(
         return Err(Error::Protocol("worker cell failed to start".into()));
     }
 
-    let run = shim_loop(&mut stream, &mut shim, &cmd_tx, &reply_rx, exit_at);
+    let run = shim_loop(&mut stream, &mut shim, &cmd_tx, &reply_rx, exit_at, leave_at);
     drop(cmd_tx);
     let _ = cell.join();
     run
@@ -1898,6 +2200,7 @@ fn shim_loop(
     cmd_tx: &Sender<Cmd>,
     reply_rx: &Receiver<Reply>,
     exit_at: Option<u64>,
+    leave_at: Option<u64>,
 ) -> Result<()> {
     loop {
         let frame = match Frame::read_from(stream)? {
@@ -1908,6 +2211,15 @@ fn shim_loop(
                 ))
             }
         };
+        if matches!(frame.kind, FrameKind::SyncStep | FrameKind::LocalStep)
+            && leave_at == Some(frame.step)
+        {
+            // Graceful departure: announce the leave in place of the
+            // step reply, then exit cleanly — the leader bills a leave,
+            // not a crash.
+            Frame::control(FrameKind::Leave, shim.w as u32, frame.step).write_to(stream)?;
+            return Ok(());
+        }
         let is_stop = frame.kind == FrameKind::Stop;
         let cmd = match shim.frame_to_cmd(&frame, exit_at)? {
             Some(c) => c,

@@ -109,6 +109,16 @@ pub enum FrameKind {
     Crashed = 14,
     /// Either direction: a fatal error message (payload: UTF-8).
     ErrMsg = 15,
+    /// Worker → leader: late handshake of a relaunched worker process
+    /// (same shape as [`FrameKind::Hello`]: protocol version in `step`,
+    /// config fingerprint as payload). The leader parks the connection
+    /// until its membership layer admits the worker at the next sync
+    /// boundary — the `HelloAck` is the admission signal.
+    Join = 16,
+    /// Worker → leader: voluntary departure at `step` (empty payload).
+    /// The peer closes its socket right after; the leader bills the
+    /// departure as a leave, not a crash.
+    Leave = 17,
 }
 
 impl FrameKind {
@@ -131,6 +141,8 @@ impl FrameKind {
             13 => Ready,
             14 => Crashed,
             15 => ErrMsg,
+            16 => Join,
+            17 => Leave,
             other => {
                 return Err(Error::Protocol(format!("unknown frame kind {other}")))
             }
@@ -138,7 +150,7 @@ impl FrameKind {
     }
 
     /// All kinds — the property tests sweep every one.
-    pub const ALL: [FrameKind; 15] = [
+    pub const ALL: [FrameKind; 17] = [
         FrameKind::Hello,
         FrameKind::HelloAck,
         FrameKind::SyncStep,
@@ -154,6 +166,8 @@ impl FrameKind {
         FrameKind::Ready,
         FrameKind::Crashed,
         FrameKind::ErrMsg,
+        FrameKind::Join,
+        FrameKind::Leave,
     ];
 }
 
@@ -524,7 +538,8 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
          data:{zs}|{mk}|{ni}|{eb};\
          comm:{tr}|{cmp}|{ql}|{tk}|{shards};\
          sync:{sp}|{hm}|{gf}|{ge}|{dt}|{tcf};\
-         faults:{sw}|{sf}|{stp}|{sts}|{cw}|{cs}|{q}|{to}|{ds};\
+         faults:{sw}|{sf}|{stp}|{sts}|{cw}|{cs}|{q}|{to}|{ds}\
+         |{rj}|{spw}|{sps}|{asc}|{asp}|{ass}|{asd};\
          precision:{pw}|{ps}",
         preset = t.preset,
         w = t.workers,
@@ -568,6 +583,13 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
         q = cfg.faults.quorum,
         to = cfg.faults.timeout_s,
         ds = cfg.faults.drop_slowest,
+        rj = cfg.faults.rejoin_step,
+        spw = cfg.faults.spawn_workers,
+        sps = cfg.faults.spawn_step,
+        asc = cfg.faults.autoscale,
+        asp = cfg.faults.autoscale_patience,
+        ass = cfg.faults.autoscale_straggler_s,
+        asd = cfg.faults.autoscale_drift,
         pw = cfg.precision.wire,
         ps = cfg.precision.state,
     );
@@ -800,6 +822,14 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.comm.shards = 4;
         assert_ne!(config_fingerprint(&a), config_fingerprint(&c), "shards");
+        // Elastic-membership keys shape who participates when — leader
+        // and (re)joining workers must agree on the schedule.
+        let mut d = ExperimentConfig::default();
+        d.faults.rejoin_step = 9;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&d), "rejoin");
+        let mut e = ExperimentConfig::default();
+        e.faults.autoscale = true;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&e), "autoscale");
     }
 
     #[test]

@@ -75,6 +75,28 @@
 //! `benches/straggler_recovery.rs` sweeps full-barrier vs. quorum vs.
 //! backup-worker sync under one slow worker of eight.
 //!
+//! Elastic membership (DESIGN.md §10) rides on the same section — churn
+//! that *recovers* instead of only shrinking:
+//!
+//! ```toml
+//! [faults]
+//! rejoin_step = 570    # the crashed worker comes back at this step…
+//!                      # (re-admitted at the next sync boundary)
+//! spawn_workers = 1    # the 1 highest worker id starts absent…
+//! spawn_step = 0       # …joining at this step (0 = queued spare, only
+//!                      # admitted by the autoscaler)
+//! autoscale = true     # telemetry-driven membership: admit spares on
+//!                      # sustained drift, retire persistent stragglers
+//! autoscale_patience = 4      # consecutive rounds before acting
+//! autoscale_drift = 0.5       # drift_sq >= this counts as "drifty"
+//! autoscale_straggler_s = 0.05 # barrier wait above this is "congested"
+//! ```
+//!
+//! The `elastic-spot` preset below is the canonical example;
+//! `benches/elastic_churn.rs` measures recovery-time-to-parity and
+//! `tests/integration_elastic.rs` pins the membership machine, including
+//! kill/relaunch `--rejoin` over real sockets.
+//!
 //! # The `[exec]` section
 //!
 //! Every preset (and config file) may also pick the execution engine's
@@ -360,6 +382,32 @@ quorum = 7
 "#,
     },
     Preset {
+        name: "elastic-spot",
+        summary: "Spot-fleet churn: 1 of 6 workers dies and rejoins under quorum-3; autoscaler admits a queued spare on sustained drift",
+        toml: r#"
+[train]
+workers = 6
+sync_period = 4
+steps = 2000
+steps_per_epoch = 500
+backend = "rust_math"
+fused = false
+[optim]
+algorithm = "local_adaalter"
+[faults]
+quorum = 3
+crash_worker = 4
+crash_step = 400
+rejoin_step = 570
+spawn_workers = 1
+spawn_step = 0
+autoscale = true
+autoscale_patience = 4
+autoscale_drift = 0.5
+autoscale_straggler_s = 0.05
+"#,
+    },
+    Preset {
         name: "parallel-hosts",
         summary: "Paper default on the threaded execution engine (8 workers over 4 host threads)",
         toml: r#"
@@ -525,10 +573,24 @@ mod tests {
         assert_eq!(c.faults.quorum, 7);
         assert!(!c.train.fused);
         assert!(c.faults.is_active() && c.faults.partial());
-        // Every other preset keeps the fault-free (bitwise-seed) trainer.
-        for p in PRESETS.iter().filter(|p| p.name != "straggler-quorum") {
+        // Every other preset keeps the fault-free (bitwise-seed) trainer —
+        // except the elastic-membership scenario, which churns by design.
+        let churny = ["straggler-quorum", "elastic-spot"];
+        for p in PRESETS.iter().filter(|p| !churny.contains(&p.name)) {
             assert!(!load_preset(p.name).unwrap().faults.is_active(), "{}", p.name);
         }
+    }
+
+    #[test]
+    fn elastic_preset_selects_churn_and_autoscale() {
+        let c = load_preset("elastic-spot").unwrap();
+        assert_eq!(c.faults.crash_worker, 4);
+        assert_eq!(c.faults.rejoin_step, 570);
+        assert_eq!((c.faults.spawn_workers, c.faults.spawn_step), (1, 0));
+        assert!(c.faults.autoscale && c.faults.has_churn());
+        assert_eq!(c.faults.autoscale_patience, 4);
+        assert_eq!(c.faults.quorum, 3);
+        assert!(!c.train.fused);
     }
 
     #[test]

@@ -226,7 +226,7 @@ impl Default for TrainConfig {
     }
 }
 
-/// Data-pipeline parameters (synthetic corpus; DESIGN.md §11).
+/// Data-pipeline parameters (synthetic corpus; DESIGN.md §12).
 #[derive(Clone, Debug)]
 pub struct DataConfig {
     /// Zipf exponent of the unigram distribution.
@@ -667,6 +667,18 @@ impl PrecisionConfig {
 /// * `crash_worker` / `crash_step` — worker `crash_worker` (−1 = none)
 ///   dies permanently at iteration `crash_step`.
 ///
+/// Elastic membership (DESIGN.md "Elastic membership & recovery"):
+///
+/// * `rejoin_step` — the crashed worker comes back at this step,
+///   re-admitted at the next sync boundary via `InstallState` (0 = never).
+/// * `spawn_workers` / `spawn_step` — the N *highest* worker ids start
+///   absent and join at `spawn_step` (`spawn_step = 0` queues them as
+///   autoscale spares).
+/// * `autoscale` + `autoscale_patience` / `autoscale_straggler_s` /
+///   `autoscale_drift` — telemetry-driven membership: admit queued spares
+///   on persistently healthy high-drift rounds, drop the slowest worker
+///   after persistently congested rounds.
+///
 /// Participation policy for synchronization rounds (local algorithms):
 ///
 /// * `quorum` — close a round once this many live workers arrived, then
@@ -696,6 +708,30 @@ pub struct FaultsConfig {
     pub timeout_s: f64,
     /// Backup-worker policy: drop the k slowest arrivals each round (0 = off).
     pub drop_slowest: usize,
+    /// Step (1-based, > `crash_step`) at which the crashed worker rejoins
+    /// the live set — re-admitted at the next sync boundary and
+    /// warm-started via `InstallState`. 0 = the crash is permanent.
+    pub rejoin_step: u64,
+    /// How many of the *highest* worker ids start absent and join later
+    /// (scheduled scale-up, or queued autoscale spares). 0 = none.
+    pub spawn_workers: usize,
+    /// Step (1-based) at which spawned workers join. 0 queues them as
+    /// spares that only the autoscale policy admits (requires
+    /// `autoscale = true`).
+    pub spawn_step: u64,
+    /// Telemetry-driven elastic membership: consume the per-round
+    /// drift/straggler observations to admit queued spares and drop
+    /// persistent stragglers at sync boundaries.
+    pub autoscale: bool,
+    /// Consecutive rounds a trigger condition must persist before the
+    /// autoscale policy acts (≥ 1).
+    pub autoscale_patience: u64,
+    /// Straggler-spread threshold, virtual seconds: rounds whose barrier
+    /// wait exceeds this count toward dropping the slowest worker.
+    pub autoscale_straggler_s: f64,
+    /// Drift threshold (accumulated Σ‖Δx‖² per round): healthy rounds at
+    /// or above it count toward admitting a queued spare.
+    pub autoscale_drift: f64,
 }
 
 impl Default for FaultsConfig {
@@ -710,6 +746,13 @@ impl Default for FaultsConfig {
             quorum: 0,
             timeout_s: 0.0,
             drop_slowest: 0,
+            rejoin_step: 0,
+            spawn_workers: 0,
+            spawn_step: 0,
+            autoscale: false,
+            autoscale_patience: 2,
+            autoscale_straggler_s: 0.05,
+            autoscale_drift: 0.0,
         }
     }
 }
@@ -721,11 +764,18 @@ impl FaultsConfig {
             || self.stall_prob > 0.0
             || self.crash_worker >= 0
             || self.partial()
+            || self.has_churn()
     }
 
     /// Is a partial-participation policy (quorum / backup-worker) selected?
     pub fn partial(&self) -> bool {
         self.quorum > 0 || self.drop_slowest > 0
+    }
+
+    /// Does the section schedule elastic membership — a rejoin, spawned
+    /// workers, or the telemetry-driven autoscale policy?
+    pub fn has_churn(&self) -> bool {
+        self.rejoin_step > 0 || self.spawn_workers > 0 || self.autoscale
     }
 
     /// The `[faults]` self-contained bounds — shared by
@@ -780,6 +830,45 @@ impl FaultsConfig {
                  participation policies (set one of them to 0)"
                     .into(),
             ));
+        }
+        if self.rejoin_step > 0 {
+            if self.crash_worker < 0 {
+                return Err(Error::Config(
+                    "faults.rejoin_step requires faults.crash_worker \
+                     (only a crashed worker can rejoin)"
+                        .into(),
+                ));
+            }
+            if self.rejoin_step <= self.crash_step {
+                return Err(Error::Config(format!(
+                    "faults.rejoin_step ({}) must be > faults.crash_step ({})",
+                    self.rejoin_step, self.crash_step
+                )));
+            }
+        }
+        if self.spawn_workers > 0 && self.spawn_step == 0 && !self.autoscale {
+            return Err(Error::Config(
+                "faults.spawn_step must be >= 1 when faults.spawn_workers is \
+                 set (or faults.autoscale = true to queue them as spares)"
+                    .into(),
+            ));
+        }
+        if self.autoscale && self.autoscale_patience < 1 {
+            return Err(Error::Config(
+                "faults.autoscale_patience must be >= 1".into(),
+            ));
+        }
+        if !(self.autoscale_straggler_s >= 0.0 && self.autoscale_straggler_s.is_finite()) {
+            return Err(Error::Config(format!(
+                "faults.autoscale_straggler_s must be a finite value >= 0, got {}",
+                self.autoscale_straggler_s
+            )));
+        }
+        if !(self.autoscale_drift >= 0.0 && self.autoscale_drift.is_finite()) {
+            return Err(Error::Config(format!(
+                "faults.autoscale_drift must be a finite value >= 0, got {}",
+                self.autoscale_drift
+            )));
         }
         Ok(())
     }
@@ -889,6 +978,13 @@ pub const KNOWN_KEYS: &[&str] = &[
     "faults.quorum",
     "faults.timeout_s",
     "faults.drop_slowest",
+    "faults.rejoin_step",
+    "faults.spawn_workers",
+    "faults.spawn_step",
+    "faults.autoscale",
+    "faults.autoscale_patience",
+    "faults.autoscale_straggler_s",
+    "faults.autoscale_drift",
     "exec.parallelism",
     "exec.threads",
     "exec.simd",
@@ -1017,6 +1113,35 @@ impl ExperimentConfig {
         c.faults.timeout_s = doc.float_or("faults.timeout_s", c.faults.timeout_s)?;
         c.faults.drop_slowest =
             doc.int_or("faults.drop_slowest", c.faults.drop_slowest as i64)? as usize;
+        let rejoin_step = doc.int_or("faults.rejoin_step", c.faults.rejoin_step as i64)?;
+        if rejoin_step < 0 {
+            return Err(Error::Config(format!(
+                "faults.rejoin_step must be >= 0, got {rejoin_step}"
+            )));
+        }
+        c.faults.rejoin_step = rejoin_step as u64;
+        c.faults.spawn_workers =
+            doc.int_or("faults.spawn_workers", c.faults.spawn_workers as i64)? as usize;
+        let spawn_step = doc.int_or("faults.spawn_step", c.faults.spawn_step as i64)?;
+        if spawn_step < 0 {
+            return Err(Error::Config(format!(
+                "faults.spawn_step must be >= 0, got {spawn_step}"
+            )));
+        }
+        c.faults.spawn_step = spawn_step as u64;
+        c.faults.autoscale = doc.bool_or("faults.autoscale", c.faults.autoscale)?;
+        let patience =
+            doc.int_or("faults.autoscale_patience", c.faults.autoscale_patience as i64)?;
+        if patience < 0 {
+            return Err(Error::Config(format!(
+                "faults.autoscale_patience must be >= 0, got {patience}"
+            )));
+        }
+        c.faults.autoscale_patience = patience as u64;
+        c.faults.autoscale_straggler_s = doc
+            .float_or("faults.autoscale_straggler_s", c.faults.autoscale_straggler_s)?;
+        c.faults.autoscale_drift =
+            doc.float_or("faults.autoscale_drift", c.faults.autoscale_drift)?;
 
         c.exec.parallelism = doc.str_or("exec.parallelism", &c.exec.parallelism)?;
         let exec_threads = doc.int_or("exec.threads", c.exec.threads as i64)?;
@@ -1199,7 +1324,7 @@ impl ExperimentConfig {
                 // Snapshots happen at sync boundaries, which adaptive
                 // policies only know at runtime.
                 return Err(Error::Config(format!(
-                    "checkpointing requires sync.policy = \"fixed\" \
+                    "train.checkpoint_every requires sync.policy = \"fixed\" \
                      (adaptive policy {:?} decides boundaries at runtime)",
                     self.sync.policy
                 )));
@@ -1295,13 +1420,59 @@ impl ExperimentConfig {
                 ));
             }
         }
-        if f.is_active() && self.train.checkpoint_every > 0 {
-            return Err(Error::Config(
-                "train.checkpoint_every requires an empty [faults] section \
-                 (fault-plan progress is not checkpointed)"
-                    .into(),
-            ));
+        if f.has_churn() {
+            // Elastic membership warm-starts (re)admitted workers through
+            // the local algorithms' InstallState catch-up path at a sync
+            // boundary — there is no such boundary for fully-synchronous
+            // algorithms, and the fused/compressed paths assume a fixed
+            // participant set.
+            if !self.optim.algorithm.is_local() {
+                return Err(Error::Config(format!(
+                    "faults.rejoin_step/spawn_workers/autoscale require a local \
+                     algorithm ({} has no sync boundary to warm-start at)",
+                    self.optim.algorithm
+                )));
+            }
+            if self.comm.compression != "none" {
+                return Err(Error::Config(
+                    "faults.rejoin_step/spawn_workers/autoscale require \
+                     comm.compression = \"none\" (delta/error-feedback streams \
+                     are keyed by a fixed participant set)"
+                        .into(),
+                ));
+            }
+            if self.train.fused {
+                return Err(Error::Config(
+                    "faults.rejoin_step/spawn_workers/autoscale require \
+                     train.fused = false (elastic rounds use the split \
+                     grad + rust-update path)"
+                        .into(),
+                ));
+            }
+            if f.spawn_workers >= workers {
+                return Err(Error::Config(format!(
+                    "faults.spawn_workers ({}) must leave at least one initial \
+                     worker (train.workers = {workers})",
+                    f.spawn_workers
+                )));
+            }
+            if f.quorum > workers - f.spawn_workers {
+                return Err(Error::Config(format!(
+                    "faults.quorum ({}) is unreachable before the {} spawned \
+                     workers join ({} workers start live)",
+                    f.quorum,
+                    f.spawn_workers,
+                    workers - f.spawn_workers
+                )));
+            }
         }
+        // Checkpointing under an active scenario is well-defined since the
+        // fault plan is a pure function of `(seed, worker, step)`: snapshots
+        // happen at sync boundaries (checkpoint_every % H == 0) where every
+        // live replica holds the installed average, and a resume
+        // reconstructs the membership table from the replayed plan. The
+        // still-forbidden combination — checkpointing under an *adaptive*
+        // sync policy — is rejected by [`ExperimentConfig::validate`].
         Ok(())
     }
 
@@ -1572,6 +1743,51 @@ mod tests {
     }
 
     #[test]
+    fn elastic_membership_keys_parse_and_validate() {
+        let doc = TomlDoc::parse(
+            "[train]\nfused = false\n\
+             [faults]\ncrash_worker = 2\ncrash_step = 8\nrejoin_step = 13\n\
+             spawn_workers = 1\nspawn_step = 0\nautoscale = true\n\
+             autoscale_patience = 3\nautoscale_straggler_s = 0.1\n\
+             autoscale_drift = 2.0\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.faults.rejoin_step, 13);
+        assert_eq!(c.faults.spawn_workers, 1);
+        assert_eq!(c.faults.spawn_step, 0);
+        assert!(c.faults.autoscale);
+        assert_eq!(c.faults.autoscale_patience, 3);
+        assert_eq!(c.faults.autoscale_straggler_s, 0.1);
+        assert_eq!(c.faults.autoscale_drift, 2.0);
+        assert!(c.faults.has_churn() && c.faults.is_active());
+        // A churn-free section has no membership schedule.
+        assert!(!ExperimentConfig::default().faults.has_churn());
+    }
+
+    #[test]
+    fn checkpointing_now_composes_with_faults_under_fixed_policy() {
+        // Lifted ban: boundary snapshots under an active scenario are
+        // well-defined (the plan replays from the seed on resume).
+        let doc = TomlDoc::parse(
+            "[train]\nfused = false\ncheckpoint_every = 4\n\
+             [faults]\ncrash_worker = 1\ncrash_step = 8\nquorum = 2\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(c.faults.is_active() && c.train.checkpoint_every == 4);
+        // Still forbidden, by field name: checkpointing under an adaptive
+        // policy (boundaries only known at runtime).
+        let doc = TomlDoc::parse(
+            "[train]\ncheckpoint_every = 4\n[sync]\npolicy = \"drift\"\n",
+        )
+        .unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("train.checkpoint_every"), "{err}");
+        assert!(err.contains("fixed"), "{err}");
+    }
+
+    #[test]
     fn faults_negative_paths_name_the_field() {
         // Every invalid combination must come back as Err with a message
         // naming the offending field — never a panic mid-run.
@@ -1592,11 +1808,47 @@ mod tests {
                  compression = \"qsgd\"\n[faults]\nquorum = 4\n",
                 "comm.compression",
             ),
-            // crash with checkpointing enabled
+            // rejoin without a crash to rejoin from
+            ("[train]\nfused = false\n[faults]\nrejoin_step = 8\n",
+             "faults.rejoin_step"),
+            // rejoin not after the crash
             (
-                "[faults]\ncrash_worker = 1\ncrash_step = 8\n\
-                 [train]\ncheckpoint_every = 4\n",
-                "checkpoint_every",
+                "[train]\nfused = false\n\
+                 [faults]\ncrash_worker = 1\ncrash_step = 8\nrejoin_step = 8\n",
+                "faults.rejoin_step",
+            ),
+            // spawned workers with neither a spawn step nor autoscale
+            ("[train]\nfused = false\n[faults]\nspawn_workers = 1\n",
+             "faults.spawn_step"),
+            // everyone spawned: no initial worker
+            (
+                "[train]\nworkers = 2\nfused = false\n\
+                 [faults]\nspawn_workers = 2\nspawn_step = 4\n",
+                "faults.spawn_workers",
+            ),
+            // quorum unreachable before the spawned workers join
+            (
+                "[train]\nworkers = 4\nfused = false\n\
+                 [faults]\nquorum = 4\nspawn_workers = 1\nspawn_step = 8\n",
+                "faults.quorum",
+            ),
+            // churn over the fused device path
+            (
+                "[faults]\ncrash_worker = 1\ncrash_step = 4\nrejoin_step = 9\n",
+                "train.fused",
+            ),
+            // churn needs a local algorithm (no boundary to warm-start at)
+            (
+                "[train]\nsync_period = 1\nfused = false\n\
+                 [optim]\nalgorithm = \"adagrad\"\n\
+                 [faults]\nautoscale = true\n",
+                "local",
+            ),
+            // zero patience can never trigger
+            (
+                "[train]\nfused = false\n\
+                 [faults]\nautoscale = true\nautoscale_patience = 0\n",
+                "faults.autoscale_patience",
             ),
             // crash without a crash step
             ("[faults]\ncrash_worker = 1\n", "faults.crash_step"),

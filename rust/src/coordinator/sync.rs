@@ -437,6 +437,82 @@ impl SyncPolicy for TimeBudget {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Autoscaling: telemetry-driven membership decisions (DESIGN.md §10).
+// ---------------------------------------------------------------------------
+
+/// A membership action the autoscaler asks the trainer to take at the
+/// next sync-round boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Admit one queued spare worker (warm-started via `InstallState`).
+    Admit,
+    /// Retire the slowest live worker (billed as a voluntary leave).
+    Drop,
+}
+
+/// CADA-style elastic-membership policy (`[faults] autoscale`): consumes
+/// the same per-round [`SyncObservation`] telemetry the sync policies do
+/// and votes on membership instead of on the period. Deterministic — a
+/// pure function of the observation stream, so two runs with identical
+/// plans make identical scaling decisions.
+///
+/// Rules (evaluated once per executed sync round):
+///
+/// * straggler spread above `faults.autoscale_straggler_s` for
+///   `faults.autoscale_patience` consecutive rounds → [`ScaleAction::Drop`]
+///   (shed the persistent straggler; the trainer guards quorum).
+/// * healthy rounds (spread under the threshold) with realized drift at or
+///   above `faults.autoscale_drift` for `patience` consecutive rounds →
+///   [`ScaleAction::Admit`] (more replicas to average down the variance,
+///   if a spare is queued).
+///
+/// Both counters reset after an action fires, so decisions are paced at
+/// least `patience` rounds apart.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscalePolicy {
+    drift: f64,
+    straggler_s: f64,
+    patience: u64,
+    healthy: u64,
+    congested: u64,
+}
+
+impl AutoscalePolicy {
+    /// Thresholds straight from the `[faults]` config keys; `patience ≥ 1`
+    /// (config validation guarantees it).
+    pub fn new(drift: f64, straggler_s: f64, patience: u64) -> Self {
+        AutoscalePolicy { drift, straggler_s, patience, healthy: 0, congested: 0 }
+    }
+
+    /// Feed one executed round's telemetry; returns the action to take at
+    /// this boundary, if any.
+    pub fn observe(&mut self, obs: &SyncObservation) -> Option<ScaleAction> {
+        if obs.straggler_s > self.straggler_s {
+            self.congested += 1;
+            self.healthy = 0;
+        } else {
+            self.congested = 0;
+            if obs.drift_sq >= self.drift {
+                self.healthy += 1;
+            } else {
+                self.healthy = 0;
+            }
+        }
+        if self.congested >= self.patience {
+            self.congested = 0;
+            self.healthy = 0;
+            return Some(ScaleAction::Drop);
+        }
+        if self.healthy >= self.patience {
+            self.congested = 0;
+            self.healthy = 0;
+            return Some(ScaleAction::Admit);
+        }
+        None
+    }
+}
+
 /// Build the policy the `[sync]` config section asks for (re-validating,
 /// so programmatically-built configs hit the same rules TOML loads do).
 /// Fully-synchronous algorithms always get `FixedPeriod(1)` — they
@@ -770,6 +846,58 @@ mod tests {
         o.total_comm_s = 0.0;
         p.observe(&o);
         assert_eq!(p.period_hint(), Some(1));
+    }
+
+    #[test]
+    fn autoscale_drops_persistent_stragglers_and_admits_when_healthy() {
+        // spread threshold 0.05 s, drift threshold 1.0, patience 2.
+        let mut p = AutoscalePolicy::new(1.0, 0.05, 2);
+        let mut o = obs(4, SyncReason::Period, 1);
+        // Two congested rounds in a row → Drop, counters reset.
+        o.straggler_s = 0.2;
+        assert_eq!(p.observe(&o), None);
+        assert_eq!(p.observe(&o), Some(ScaleAction::Drop));
+        assert_eq!(p.observe(&o), None, "counters must reset after an action");
+        // Healthy + drifty rounds → Admit after `patience` rounds.
+        o.straggler_s = 0.0;
+        o.drift_sq = 3.0;
+        assert_eq!(p.observe(&o), None);
+        assert_eq!(p.observe(&o), Some(ScaleAction::Admit));
+        // A congested round resets the healthy streak.
+        assert_eq!(p.observe(&o), None);
+        o.straggler_s = 0.2;
+        assert_eq!(p.observe(&o), None);
+        o.straggler_s = 0.0;
+        assert_eq!(p.observe(&o), None, "healthy streak restarted");
+        assert_eq!(p.observe(&o), Some(ScaleAction::Admit));
+        // Healthy but low-drift rounds trigger nothing, ever.
+        o.drift_sq = 0.0;
+        for _ in 0..16 {
+            assert_eq!(p.observe(&o), None);
+        }
+    }
+
+    #[test]
+    fn autoscale_is_deterministic_over_replayed_telemetry() {
+        prop::check("autoscale replays identically", 50, |g| {
+            let patience = g.u64_in(1..4);
+            let thr = g.f64_in(0.01..0.2);
+            let stream: Vec<(f64, f64)> =
+                (0..40).map(|_| (g.f64_in(0.0..0.3), g.f64_in(0.0..2.0))).collect();
+            let run = |stream: &[(f64, f64)]| -> Vec<Option<ScaleAction>> {
+                let mut p = AutoscalePolicy::new(1.0, thr, patience);
+                stream
+                    .iter()
+                    .map(|&(sp, dr)| {
+                        let mut o = obs(1, SyncReason::Period, 1);
+                        o.straggler_s = sp;
+                        o.drift_sq = dr;
+                        p.observe(&o)
+                    })
+                    .collect()
+            };
+            prop::assert_that(run(&stream) == run(&stream), "replay diverged")
+        });
     }
 
     #[test]

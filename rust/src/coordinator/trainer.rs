@@ -50,11 +50,12 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::executor::{spawn_worker_hosts, Parallelism};
 use crate::coordinator::schedule::WarmupSchedule;
 use crate::coordinator::sync::{
-    build_policy, StepObservation, SyncObservation, SyncPolicy, SyncReason,
+    build_policy, AutoscalePolicy, ScaleAction, StepObservation, SyncObservation, SyncPolicy,
+    SyncReason,
 };
 use crate::coordinator::worker::{Cmd, Reply, WorkerSpec};
 use crate::error::{Error, Result};
-use crate::metrics::TrainRecorder;
+use crate::metrics::{FaultEvent, TrainRecorder};
 use crate::optim;
 use crate::sim::{Calibration, Charge, FaultPlan, VirtualClock};
 use crate::util::pool::{ArcSlot, BufferPool};
@@ -167,7 +168,7 @@ impl Trainer {
             }
             None => FaultPlan::from_config(cfg),
         };
-        let faults_on = !plan.is_empty() || cfg.faults.partial();
+        let faults_on = !plan.is_empty() || cfg.faults.partial() || cfg.faults.autoscale;
         if faults_on || cfg.faults.is_active() {
             // TOML-loaded configs already passed these rules; re-run them
             // for programmatically-built configs (field-named errors, not
@@ -176,21 +177,19 @@ impl Trainer {
             // crash worker must error, not silently yield an empty plan.
             cfg.validate_faults()?;
         }
-        if faults_on {
-            if self.resume.is_some() {
-                return Err(Error::Config(
-                    "resume is not supported with an active [faults] scenario \
-                     (fault-plan progress is not checkpointed)"
-                        .into(),
-                ));
-            }
-            if cfg.train.checkpoint_every > 0 {
-                return Err(Error::Config(
-                    "train.checkpoint_every requires an empty [faults] section \
-                     (fault-plan progress is not checkpointed)"
-                        .into(),
-                ));
-            }
+        // Checkpointing and resume compose with `[faults]` (DESIGN.md
+        // §10): the plan is a pure function of `(seed, worker, step)`, so
+        // a resumed run replays the exact same schedule from `start_step`
+        // without any plan progress in the checkpoint. The one combination
+        // still outside the format is the autoscaler: its patience
+        // counters accumulate over telemetry history, which a checkpoint
+        // does not carry.
+        if self.resume.is_some() && cfg.faults.autoscale {
+            return Err(Error::Config(
+                "faults.autoscale is not supported with resume \
+                 (autoscale patience counters are not checkpointed)"
+                    .into(),
+            ));
         }
         // The per-iteration sync decision is the policy's (DESIGN.md §5);
         // non-local algorithms always get FixedPeriod(1).
@@ -265,7 +264,10 @@ impl Trainer {
                 allow_fused,
                 collect_update_sq,
                 bf16_state,
-                crash_step: plan.crash_step(w),
+                // A crash already behind the resume point never replays:
+                // the plan's liveness windows (not the tombstone) decide
+                // whether the worker is alive at `start_step`.
+                crash_step: plan.crash_step(w).filter(|&c| c > start_step),
             })
             .collect();
 
@@ -353,9 +355,28 @@ impl Trainer {
             },
             start_step,
             resume_acc,
-            plan,
             faults_on,
-            alive: vec![true; n],
+            // Membership starts from the plan's liveness windows at the
+            // first iteration: spawn-scheduled workers and spares are not
+            // addressed until admitted, and a resume inside a crash window
+            // starts with that worker out (readmitted at its rejoin
+            // boundary exactly as the uninterrupted run would).
+            alive: (0..n).map(|w| plan.alive(w, start_step + 1)).collect(),
+            left: vec![false; n],
+            spares: (0..n).filter(|&w| plan.is_spare(w)).collect(),
+            autoscale: if cfg.faults.autoscale {
+                Some(AutoscalePolicy::new(
+                    cfg.faults.autoscale_drift,
+                    cfg.faults.autoscale_straggler_s,
+                    cfg.faults.autoscale_patience,
+                ))
+            } else {
+                None
+            },
+            round_crashes: 0,
+            round_leaves: 0,
+            round_joins: 0,
+            plan,
             phase_s: vec![0.0; n],
             phase_nominal_s: 0.0,
             pool: BufferPool::new(),
@@ -384,6 +405,15 @@ impl Trainer {
 /// `Reply::Err` across every gather/recv site.
 fn worker_err(worker: usize, msg: String) -> Error {
     Error::Protocol(format!("worker {worker}: {msg}"))
+}
+
+/// Per-worker outcome of a fault-aware gather: a payload, a crash
+/// tombstone, or a voluntary departure (`Leave` — billed distinctly from
+/// a crash; DESIGN.md §10).
+enum Gathered<T> {
+    Ok(T),
+    Crashed,
+    Left,
 }
 
 /// Internal driver state (separated so shutdown can run after errors).
@@ -416,8 +446,24 @@ struct LeaderLoop<'a> {
     /// Gate for every fault code path: false ⇒ the leader loop is the
     /// exact (bitwise) fault-free protocol.
     faults_on: bool,
-    /// Per-worker liveness (false once a crash tombstone arrived).
+    /// Per-worker liveness (false once a crash tombstone arrived, or
+    /// before a spawn-scheduled worker's admission boundary).
     alive: Vec<bool>,
+    /// Per-worker voluntary-departure flag (graceful `Leave` frame, or
+    /// retired by the autoscaler): these workers are gone on purpose —
+    /// never billed as crashes and never plan-readmitted (DESIGN.md §10).
+    left: Vec<bool>,
+    /// Spare workers (`faults.spawn_step = 0`) queued for autoscale
+    /// admission, in id order.
+    spares: Vec<usize>,
+    /// Telemetry-driven elastic membership (`faults.autoscale`).
+    autoscale: Option<AutoscalePolicy>,
+    /// Crashes discovered since the last recorded fault event.
+    round_crashes: u64,
+    /// Voluntary departures since the last recorded fault event.
+    round_leaves: u64,
+    /// Admissions performed at the last round boundary.
+    round_joins: u64,
     /// Per-worker virtual arrival time within the current local phase —
     /// the straggler signal partial rounds select on.
     phase_s: Vec<f64>,
@@ -667,8 +713,9 @@ impl<'a> LeaderLoop<'a> {
             scratch: pool.take(d),
         })?;
         let replies = self.transport.gather_from(&targets, |r| match r {
-            Reply::Grad { worker, loss, grad } => Ok((worker, Some((loss, grad)))),
-            Reply::Crashed { worker, .. } => Ok((worker, None)),
+            Reply::Grad { worker, loss, grad } => Ok((worker, Gathered::Ok((loss, grad)))),
+            Reply::Crashed { worker, .. } => Ok((worker, Gathered::Crashed)),
+            Reply::Left { worker, .. } => Ok((worker, Gathered::Left)),
             Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
             _ => Err(Error::Protocol("expected Grad".into())),
         })?;
@@ -678,12 +725,20 @@ impl<'a> LeaderLoop<'a> {
         let mut grads: Vec<Vec<f32>> = Vec::new();
         for (&w, rep) in targets.iter().zip(replies) {
             match rep {
-                Some((loss, grad)) => {
+                Gathered::Ok((loss, grad)) => {
                     close = close.max(self.worker_iter_s(w, t));
                     losses.push(loss as f64);
                     grads.push(grad);
                 }
-                None => self.alive[w] = false,
+                Gathered::Crashed => {
+                    self.alive[w] = false;
+                    self.round_crashes += 1;
+                }
+                Gathered::Left => {
+                    self.alive[w] = false;
+                    self.left[w] = true;
+                    self.round_leaves += 1;
+                }
             }
         }
         if grads.is_empty() {
@@ -697,16 +752,22 @@ impl<'a> LeaderLoop<'a> {
         let rep_g = self.coll.gather_grads(&mut grads)?;
         self.apply_comm(rep_b.merge(rep_g));
         // Every fully-synchronous iteration is a round: log its
-        // participation too (here `dropped` counts workers whose crash was
-        // discovered during this very round).
-        self.recorder.fault_event(
-            t,
-            targets.len() as u64,
-            grads.len() as u64,
-            (targets.len() - grads.len()) as u64,
-            wait,
-            self.clock.now_s(),
-        );
+        // participation too (here `dropped` counts workers whose departure
+        // was discovered during this very round).
+        self.recorder.fault_event(FaultEvent {
+            step: t,
+            alive: targets.len() as u64,
+            participants: grads.len() as u64,
+            dropped: (targets.len() - grads.len()) as u64,
+            crashes: self.round_crashes,
+            leaves: self.round_leaves,
+            joins: self.round_joins,
+            wait_s: wait,
+            virtual_s: self.clock.now_s(),
+        });
+        self.round_crashes = 0;
+        self.round_leaves = 0;
+        self.round_joins = 0;
         let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
 
         let opt = self.opt.as_mut().expect("sync iteration without optimizer");
@@ -741,9 +802,10 @@ impl<'a> LeaderLoop<'a> {
         self.transport.broadcast_to(&targets, |_| Cmd::LocalStep { t, lr })?;
         let replies = self.transport.gather_from(&targets, |r| match r {
             Reply::StepDone { worker, loss, update_sq } => {
-                Ok((worker, Some((loss, update_sq))))
+                Ok((worker, Gathered::Ok((loss, update_sq))))
             }
-            Reply::Crashed { worker, .. } => Ok((worker, None)),
+            Reply::Crashed { worker, .. } => Ok((worker, Gathered::Crashed)),
+            Reply::Left { worker, .. } => Ok((worker, Gathered::Left)),
             Reply::Err { worker, msg } => Err(worker_err(worker, msg)),
             _ => Err(Error::Protocol("expected StepDone".into())),
         })?;
@@ -752,13 +814,21 @@ impl<'a> LeaderLoop<'a> {
         let mut upds: Vec<f64> = Vec::new();
         for (&w, rep) in targets.iter().zip(&replies) {
             match rep {
-                Some((loss, update_sq)) => {
+                Gathered::Ok((loss, update_sq)) => {
                     let t_w = self.worker_iter_s(w, t);
                     self.phase_s[w] += t_w;
                     losses.push(*loss as f64);
                     upds.push(*update_sq);
                 }
-                None => self.alive[w] = false,
+                Gathered::Crashed => {
+                    self.alive[w] = false;
+                    self.round_crashes += 1;
+                }
+                Gathered::Left => {
+                    self.alive[w] = false;
+                    self.left[w] = true;
+                    self.round_leaves += 1;
+                }
             }
         }
         if losses.is_empty() {
@@ -876,7 +946,9 @@ impl<'a> LeaderLoop<'a> {
         })?;
         self.wait_ready()?;
         self.recycle_states(states);
-        self.record_round(t, reason, report, 0.0);
+        // Fault-free runs never configure the autoscaler (`faults_on`
+        // routes them away from this path), so the decision is vacuous.
+        let _ = self.record_round(t, reason, report, 0.0);
         Ok(())
     }
 
@@ -885,14 +957,16 @@ impl<'a> LeaderLoop<'a> {
     /// [`SyncObservation`]. `straggler_floor_s` lets the fault path raise
     /// the straggler observation to the barrier wait it actually measured
     /// (0 in the fault-free path — `report.straggler_s` is never negative,
-    /// so the floor is then a no-op, bit for bit).
+    /// so the floor is then a no-op, bit for bit). The same observation
+    /// feeds the autoscaler (when configured); its membership decision is
+    /// returned to the fault path for execution at this boundary.
     fn record_round(
         &mut self,
         t: u64,
         reason: SyncReason,
         report: CommReport,
         straggler_floor_s: f64,
-    ) {
+    ) -> Option<ScaleAction> {
         self.apply_comm(report);
         let (rounds, _) = self.recorder.comm();
         self.recorder.sync_event(
@@ -903,7 +977,7 @@ impl<'a> LeaderLoop<'a> {
             self.clock.now_s(),
         );
         self.last_sync_t = t;
-        self.policy.observe(&SyncObservation {
+        let obs = SyncObservation {
             t,
             reason,
             rounds,
@@ -913,7 +987,9 @@ impl<'a> LeaderLoop<'a> {
             drift_sq: report.drift_sq,
             virtual_now_s: self.clock.now_s(),
             total_comm_s: self.clock.total(Charge::Communication),
-        });
+        };
+        self.policy.observe(&obs);
+        self.autoscale.as_mut().and_then(|a| a.observe(&obs))
     }
 
     /// Fault-aware sync round (DESIGN.md §6): live workers offer their
@@ -975,19 +1051,120 @@ impl<'a> LeaderLoop<'a> {
         if wait_s > 0.0 {
             self.clock.advance(Charge::Straggler, wait_s);
         }
-        self.record_round(t, reason, outcome.report, wait_s);
-        self.recorder.fault_event(
-            t,
-            targets.len() as u64,
-            outcome.participants.len() as u64,
-            outcome.dropped.len() as u64,
+        let scale = self.record_round(t, reason, outcome.report, wait_s);
+        // The membership boundary (DESIGN.md §10): every admission path —
+        // wire rejoins, plan-scheduled rejoins/spawns, autoscale — runs
+        // here, warm-starting newcomers from this round's averaged state,
+        // so a worker admitted at `t` is indistinguishable from one that
+        // installed the average like everyone else.
+        self.membership_boundary(t, scale, &avg_x, &avg_acc)?;
+        self.recorder.fault_event(FaultEvent {
+            step: t,
+            alive: targets.len() as u64,
+            participants: outcome.participants.len() as u64,
+            dropped: outcome.dropped.len() as u64,
+            crashes: self.round_crashes,
+            leaves: self.round_leaves,
+            joins: self.round_joins,
             wait_s,
-            self.clock.now_s(),
-        );
+            virtual_s: self.clock.now_s(),
+        });
+        self.round_crashes = 0;
+        self.round_leaves = 0;
+        self.round_joins = 0;
         for &w in &targets {
             self.phase_s[w] = 0.0;
         }
         self.phase_nominal_s = 0.0;
+        Ok(())
+    }
+
+    /// Execute this boundary's membership changes (DESIGN.md §10), in a
+    /// deterministic order: wire rejoins first (late `Join` handshakes
+    /// parked by the networked transport's accept loop), then
+    /// plan-scheduled rejoins and spawns, then the autoscaler's decision.
+    /// Every admitted worker is warm-started from the boundary's averaged
+    /// `(x, A²)` via the ordinary `InstallState` catch-up and acks Ready
+    /// before the next phase begins.
+    fn membership_boundary(
+        &mut self,
+        t: u64,
+        scale: Option<ScaleAction>,
+        avg_x: &Arc<Vec<f32>>,
+        avg_acc: &Option<Arc<Vec<f32>>>,
+    ) -> Result<()> {
+        for w in self.transport.poll_joins() {
+            if self.alive[w] {
+                // Stale or duplicate handshake for a live peer: ignore it
+                // (the parked stream is dropped by the next admission).
+                continue;
+            }
+            self.transport.admit_join(w)?;
+            self.admit_worker(w, avg_x, avg_acc)?;
+        }
+        for w in 0..self.n() {
+            if !self.alive[w]
+                && !self.left[w]
+                && !self.transport.peer_dead(w)
+                && self.plan.readmit_step(w).is_some_and(|s| s <= t)
+                && self.plan.alive(w, t + 1)
+            {
+                self.admit_worker(w, avg_x, avg_acc)?;
+            }
+        }
+        match scale {
+            Some(ScaleAction::Admit) => {
+                let spare = self
+                    .spares
+                    .iter()
+                    .copied()
+                    .find(|&w| !self.alive[w] && !self.left[w] && !self.transport.peer_dead(w));
+                if let Some(w) = spare {
+                    self.admit_worker(w, avg_x, avg_acc)?;
+                }
+            }
+            Some(ScaleAction::Drop) => {
+                // Retire the slowest live worker — but never below the
+                // participation floor the config promises.
+                let floor = self.cfg.faults.quorum.max(1);
+                let live = self.alive_ids();
+                if live.len() > floor {
+                    let slowest = live.into_iter().max_by(|&a, &b| {
+                        self.phase_s[a]
+                            .partial_cmp(&self.phase_s[b])
+                            .expect("phase times are finite")
+                            .then(a.cmp(&b))
+                    });
+                    if let Some(w) = slowest {
+                        self.alive[w] = false;
+                        self.left[w] = true;
+                        self.round_leaves += 1;
+                    }
+                }
+            }
+            None => {}
+        }
+        Ok(())
+    }
+
+    /// Admit (or re-admit) worker `w` at a sync boundary: install the
+    /// boundary's averaged state, wait for its Ready ack, and mark it
+    /// live with a clean phase clock.
+    fn admit_worker(
+        &mut self,
+        w: usize,
+        avg_x: &Arc<Vec<f32>>,
+        avg_acc: &Option<Arc<Vec<f32>>>,
+    ) -> Result<()> {
+        self.transport.send_to(
+            w,
+            Cmd::InstallState { x: Arc::clone(avg_x), acc: avg_acc.clone() },
+        )?;
+        self.wait_ready_from(&[w])?;
+        self.alive[w] = true;
+        self.left[w] = false;
+        self.phase_s[w] = 0.0;
+        self.round_joins += 1;
         Ok(())
     }
 
@@ -1008,7 +1185,21 @@ impl<'a> LeaderLoop<'a> {
         let vectors = if algo.is_local() {
             // Raw snapshot: checkpoints are observer reads, not rounds —
             // they must carry exact f32 state even over a lossy wire.
-            let states = self.collect_states(true)?;
+            // Under `[faults]` only live workers are asked; `t` is a sync
+            // boundary (validated), so every live replica holds the same
+            // installed average and the lowest live id's state is THE
+            // state.
+            let states = if self.faults_on {
+                let targets = self.alive_ids();
+                if targets.is_empty() {
+                    return Err(Error::Protocol(format!(
+                        "all workers crashed before checkpoint at {t}"
+                    )));
+                }
+                self.collect_states_from(&targets, true)?
+            } else {
+                self.collect_states(true)?
+            };
             let (x0, acc0) = &states[0];
             let vectors = match algo {
                 Algorithm::LocalAdaAlter => {
@@ -1446,7 +1637,24 @@ mod tests {
         let err = Trainer::new(cfg, f).run().err().expect("must fail");
         assert!(err.to_string().contains("train.fused"), "{err}");
 
-        // resume under an active fault scenario.
+        // resume under the autoscaler: the one fault feature whose state
+        // (patience counters) a checkpoint cannot reconstruct.
+        let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 8);
+        cfg.train.fused = false;
+        cfg.faults.autoscale = true;
+        let d = cfg.train.rust_math_dim;
+        let f = synthetic_factory(&cfg);
+        let mut t = Trainer::new(cfg, f);
+        t.resume = Some(crate::coordinator::Checkpoint {
+            step: 4,
+            algorithm: Algorithm::LocalAdaAlter,
+            vectors: vec![vec![0.0; d], vec![1.0; d], vec![1.0; d]],
+        });
+        let err = t.run().err().expect("must fail");
+        assert!(err.to_string().contains("faults.autoscale"), "{err}");
+
+        // ...but resume under a plain fault scenario is now supported: the
+        // plan replays as a pure function of `(seed, worker, step)`.
         let mut cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 8);
         cfg.faults.slow_workers = 1;
         let d = cfg.train.rust_math_dim;
@@ -1457,8 +1665,7 @@ mod tests {
             algorithm: Algorithm::LocalAdaAlter,
             vectors: vec![vec![0.0; d], vec![1.0; d], vec![1.0; d]],
         });
-        let err = t.run().err().expect("must fail");
-        assert!(err.to_string().contains("[faults]"), "{err}");
+        t.run().expect("resume under [faults] must run");
 
         // plan/worker-count mismatch.
         let cfg = config(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 8);

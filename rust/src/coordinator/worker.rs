@@ -137,6 +137,16 @@ pub enum Reply {
         /// The 1-based iteration the schedule killed it at.
         step: u64,
     },
+    /// The worker departed voluntarily at `step` (graceful leave,
+    /// DESIGN.md §10). Unlike [`Reply::Crashed`] this is not billed as a
+    /// failure: the leader retires the worker from the live set without
+    /// counting it against the crash telemetry.
+    Left {
+        /// Replying worker id.
+        worker: usize,
+        /// The 1-based iteration the worker left at.
+        step: u64,
+    },
     /// Fatal worker error.
     Err {
         /// Replying worker id.
@@ -269,14 +279,28 @@ impl WorkerCell {
             }
         }
         if self.dead {
-            if matches!(cmd, Cmd::Stop) {
-                return CellFlow::Stopped;
+            match &cmd {
+                Cmd::Stop => return CellFlow::Stopped,
+                // Elastic membership (DESIGN.md §10): the leader re-admits
+                // a crashed local-algorithm worker at a sync-round boundary
+                // by re-broadcasting the averaged state. The install revives
+                // the cell — warm-started at the boundary, it is bitwise
+                // indistinguishable from a worker that never left. The
+                // crash schedule is one-shot, so it is cleared on revival.
+                Cmd::InstallState { .. } if !matches!(self.local, LocalState::None) => {
+                    self.dead = false;
+                    self.crash_at = None;
+                }
+                _ => {
+                    // Release any payload the command carried before
+                    // replying (the leader recycles broadcast Arcs once all
+                    // handles drop).
+                    let step = self.crash_at.unwrap_or(0);
+                    drop(cmd);
+                    let _ = tx.send(Reply::Crashed { worker, step });
+                    return CellFlow::Continue;
+                }
             }
-            // Release any payload the command carried before replying
-            // (the leader recycles broadcast Arcs once all handles drop).
-            drop(cmd);
-            let _ = tx.send(Reply::Crashed { worker, step: self.crash_at.unwrap_or(0) });
-            return CellFlow::Continue;
         }
         match cmd {
             Cmd::SyncStep { t, x, mut scratch } => {

@@ -40,7 +40,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
             "experiment", "config", "set", "artifacts", "workers", "out-dir", "resume",
             "role", "listen", "connect", "worker-id", "port-file",
         ],
-        &["no-fused", "quiet", "help"],
+        &["no-fused", "quiet", "help", "rejoin"],
     )?;
     match args.command.as_str() {
         "" | "help" => {
@@ -71,6 +71,7 @@ USAGE:
   adaalter train ... --resume <checkpoint.bin>
   adaalter train ... --role leader --listen 127.0.0.1:0 --port-file <p>
   adaalter train ... --role worker --worker-id <i> --connect <addr>
+  adaalter train ... --role worker --worker-id <i> --connect <addr> --rejoin
   adaalter presets
   adaalter inspect [--artifacts <dir>]
   adaalter epoch-model
@@ -133,6 +134,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 w,
                 args.get_or("connect", ""),
                 args.get("port-file"),
+                args.has("rejoin"),
             );
         }
         other => {

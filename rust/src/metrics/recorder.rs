@@ -80,6 +80,15 @@ pub struct FaultEvent {
     /// rounds; for fully-synchronous rounds, crashes discovered during
     /// the round itself.
     pub dropped: u64,
+    /// Workers that crashed (involuntarily) during this round's phase.
+    pub crashes: u64,
+    /// Workers that departed voluntarily (graceful `Leave`, or retired by
+    /// the autoscaler) during this round's phase — billed distinctly from
+    /// crashes (DESIGN.md §10).
+    pub leaves: u64,
+    /// Workers admitted or re-admitted at this round's boundary (plan
+    /// rejoins/spawns, wire rejoins, autoscale admissions).
+    pub joins: u64,
     /// Barrier wait beyond the nominal phase time, virtual seconds
     /// (charged to [`crate::sim::Charge::Straggler`]).
     pub wait_s: f64,
@@ -210,24 +219,9 @@ impl TrainRecorder {
     }
 
     /// Record one executed round's participation accounting (fault runs
-    /// only — one event per sync round, DESIGN.md §6).
-    pub fn fault_event(
-        &mut self,
-        step: u64,
-        alive: u64,
-        participants: u64,
-        dropped: u64,
-        wait_s: f64,
-        virtual_s: f64,
-    ) {
-        self.fault_events.push(FaultEvent {
-            step,
-            alive,
-            participants,
-            dropped,
-            wait_s,
-            virtual_s,
-        });
+    /// only — one event per sync round, DESIGN.md §6/§10).
+    pub fn fault_event(&mut self, event: FaultEvent) {
+        self.fault_events.push(event);
     }
 
     /// Record a held-out evaluation.
@@ -310,7 +304,17 @@ impl TrainRecorder {
     pub fn write_faults_csv(&self, path: &str) -> Result<()> {
         let mut w = CsvWriter::create(
             path,
-            &["step", "alive", "participants", "dropped", "wait_s", "virtual_s"],
+            &[
+                "step",
+                "alive",
+                "participants",
+                "dropped",
+                "crashes",
+                "leaves",
+                "joins",
+                "wait_s",
+                "virtual_s",
+            ],
         )?;
         for e in &self.fault_events {
             w.row(&[
@@ -318,6 +322,9 @@ impl TrainRecorder {
                 e.alive.to_string(),
                 e.participants.to_string(),
                 e.dropped.to_string(),
+                e.crashes.to_string(),
+                e.leaves.to_string(),
+                e.joins.to_string(),
                 format!("{:.6}", e.wait_s),
                 format!("{:.3}", e.virtual_s),
             ])?;
@@ -419,17 +426,43 @@ mod tests {
         let p = dir.join("faults.csv");
         let mut r = TrainRecorder::new(10);
         assert!(r.fault_events.is_empty());
-        r.fault_event(4, 8, 7, 1, 0.551250, 1.5);
-        r.fault_event(8, 8, 8, 0, 0.0, 3.0);
+        r.fault_event(FaultEvent {
+            step: 4,
+            alive: 8,
+            participants: 7,
+            dropped: 1,
+            crashes: 1,
+            leaves: 0,
+            joins: 0,
+            wait_s: 0.551250,
+            virtual_s: 1.5,
+        });
+        r.fault_event(FaultEvent {
+            step: 8,
+            alive: 8,
+            participants: 8,
+            dropped: 0,
+            crashes: 0,
+            leaves: 1,
+            joins: 2,
+            wait_s: 0.0,
+            virtual_s: 3.0,
+        });
         assert_eq!(r.fault_events.len(), 2);
         assert_eq!(r.fault_events[0].dropped, 1);
+        assert_eq!(r.fault_events[1].joins, 2);
         // Events don't touch the traffic accounting.
         assert_eq!(r.comm(), (0, 0));
         r.write_faults_csv(p.to_str().unwrap()).unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
         assert_eq!(s.lines().count(), 3);
-        assert!(s.lines().next().unwrap().contains("participants"));
+        let header = s.lines().next().unwrap();
+        assert!(header.contains("participants"));
+        assert!(header.contains("crashes") && header.contains("leaves"));
+        assert!(header.contains("joins"));
         assert!(s.contains("0.551250"));
+        // Row 2: leave and join columns land in the right cells.
+        assert!(s.lines().nth(2).unwrap().contains("8,8,8,0,0,1,2,"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -2,7 +2,7 @@
 //! and Fig. 2 reproductions.
 //!
 //! For a calibrated cluster ([`super::calib::Calibration`]) and an
-//! algorithm, the per-iteration time decomposes (DESIGN.md §10) as
+//! algorithm, the per-iteration time decomposes (DESIGN.md §11) as
 //!
 //! ```text
 //!   t_iter = max(t_compute, t_dataload(n))  +  t_sync_visible(n, v) / H

@@ -12,7 +12,14 @@
 //!   worker `w` loses a fixed number of virtual seconds at step `t`;
 //! * **permanent crashes** — worker `w` executes steps `t < crash_step`
 //!   and is dead from `crash_step` on (the worker thread answers further
-//!   step commands with a tombstone reply instead of a gradient).
+//!   step commands with a tombstone reply instead of a gradient);
+//! * **rejoins** — a crashed worker comes back at `rejoin_step`: the
+//!   leader's membership table re-admits it at the next sync-round
+//!   boundary and warm-starts it through the `InstallState` catch-up
+//!   path (DESIGN.md "Elastic membership & recovery");
+//! * **spawns** — worker `w` is absent at startup and only joins the
+//!   live set at `spawn_step` (`Some(0)` marks a *queued spare* that
+//!   only the telemetry-driven autoscale policy may admit).
 //!
 //! Everything is a pure function of `(config seed, worker, step)` — the
 //! same keying discipline the gradient streams use — so a scenario
@@ -45,6 +52,12 @@ pub struct FaultPlan {
     stall_dur_s: f64,
     /// Per-worker crash step (the worker executes steps `t < crash`).
     crash: Vec<Option<u64>>,
+    /// Per-worker rejoin step: a crashed worker is scheduled live again
+    /// for `t >= rejoin` (requires a crash step, and `rejoin > crash`).
+    rejoin: Vec<Option<u64>>,
+    /// Per-worker spawn step: the worker is absent before `spawn`.
+    /// `Some(0)` marks a queued spare only the autoscale policy admits.
+    spawn: Vec<Option<u64>>,
 }
 
 impl FaultPlan {
@@ -56,6 +69,8 @@ impl FaultPlan {
             stall_prob: 0.0,
             stall_dur_s: 0.0,
             crash: vec![None; n],
+            rejoin: vec![None; n],
+            spawn: vec![None; n],
         }
     }
 
@@ -78,6 +93,15 @@ impl FaultPlan {
         }
         if f.crash_worker >= 0 && (f.crash_worker as usize) < n {
             plan.crash[f.crash_worker as usize] = Some(f.crash_step);
+            if f.rejoin_step > 0 {
+                plan.rejoin[f.crash_worker as usize] = Some(f.rejoin_step);
+            }
+        }
+        // Spawned workers (scheduled scale-up / autoscale spares) take the
+        // *highest* ids, like `slow_workers` — worker 0 stays present (it
+        // is also the eval worker).
+        for w in n.saturating_sub(f.spawn_workers)..n {
+            plan.spawn[w] = Some(f.spawn_step);
         }
         plan
     }
@@ -93,6 +117,14 @@ impl FaultPlan {
         self.slow.iter().all(|&f| f == 1.0)
             && self.stall_prob == 0.0
             && self.crash.iter().all(Option::is_none)
+            && !self.has_churn()
+    }
+
+    /// Does the plan schedule any membership change beyond a permanent
+    /// crash — a rejoin or a spawned/spare worker?
+    pub fn has_churn(&self) -> bool {
+        self.rejoin.iter().any(Option::is_some)
+            || self.spawn.iter().any(Option::is_some)
     }
 
     /// Builder: re-seed the stall stream.
@@ -116,6 +148,22 @@ impl FaultPlan {
         self
     }
 
+    /// Builder: schedule crashed worker `w` to rejoin at `step` (strictly
+    /// after its crash step; re-admitted at the next sync boundary ≥ step).
+    pub fn with_rejoin(mut self, w: usize, step: u64) -> Self {
+        let crash = self.crash[w].expect("rejoin requires a crash step");
+        assert!(step > crash, "rejoin step must be > crash step");
+        self.rejoin[w] = Some(step);
+        self
+    }
+
+    /// Builder: worker `w` is absent until `step` (admitted at the first
+    /// sync boundary ≥ step). `step = 0` queues it as an autoscale spare.
+    pub fn with_spawn(mut self, w: usize, step: u64) -> Self {
+        self.spawn[w] = Some(step);
+        self
+    }
+
     /// Builder: transient stalls of `dur_s` virtual seconds with
     /// per-(worker, step) probability `prob`.
     pub fn with_stalls(mut self, prob: f64, dur_s: f64) -> Self {
@@ -136,9 +184,50 @@ impl FaultPlan {
         self.crash[w]
     }
 
-    /// Is worker `w` still alive at iteration `t` (1-based)?
+    /// Worker `w`'s scheduled rejoin step, if its crash is temporary.
+    pub fn rejoin_step(&self, w: usize) -> Option<u64> {
+        self.rejoin[w]
+    }
+
+    /// Worker `w`'s spawn step, if it starts absent (`Some(0)` = spare).
+    pub fn spawn_step(&self, w: usize) -> Option<u64> {
+        self.spawn[w]
+    }
+
+    /// Is worker `w` a queued spare — absent until the autoscale policy
+    /// admits it?
+    pub fn is_spare(&self, w: usize) -> bool {
+        self.spawn[w] == Some(0)
+    }
+
+    /// The step at which an absent worker `w` becomes schedulable again
+    /// (the leader admits it at the first sync boundary ≥ this step):
+    /// the spawn step for spawned workers, the rejoin step for temporary
+    /// crashes. `None` for permanent crashes and queued spares.
+    pub fn readmit_step(&self, w: usize) -> Option<u64> {
+        if let Some(s) = self.spawn[w] {
+            return if s > 0 { Some(s) } else { None };
+        }
+        if self.crash[w].is_some() {
+            self.rejoin[w]
+        } else {
+            None
+        }
+    }
+
+    /// Is worker `w` scheduled live at iteration `t` (1-based)? Absent
+    /// before its spawn step, dead in the `[crash, rejoin)` window (or
+    /// from `crash` on when no rejoin is scheduled).
     pub fn alive(&self, w: usize, t: u64) -> bool {
-        self.crash[w].map_or(true, |c| t < c)
+        if let Some(s) = self.spawn[w] {
+            if s == 0 || t < s {
+                return false;
+            }
+        }
+        match self.crash[w] {
+            None => true,
+            Some(c) => t < c || self.rejoin[w].is_some_and(|r| t >= r),
+        }
     }
 
     /// The stall worker `w` suffers at step `t`, in virtual seconds — a
@@ -272,5 +361,60 @@ mod tests {
     #[should_panic(expected = "slow factor")]
     fn builder_rejects_speedups() {
         let _ = FaultPlan::none(2).with_slow(0, 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "rejoin step")]
+    fn builder_rejects_rejoin_before_crash() {
+        let _ = FaultPlan::none(2).with_crash(1, 10).with_rejoin(1, 10);
+    }
+
+    #[test]
+    fn churn_schedule_windows_liveness() {
+        let p = FaultPlan::none(4)
+            .with_crash(1, 8)
+            .with_rejoin(1, 13)
+            .with_spawn(3, 5);
+        assert!(p.has_churn() && !p.is_empty());
+        // Crash window [8, 13): dead inside, alive either side.
+        assert!(p.alive(1, 7) && !p.alive(1, 8) && !p.alive(1, 12));
+        assert!(p.alive(1, 13) && p.alive(1, 500));
+        assert_eq!(p.readmit_step(1), Some(13));
+        // Spawned worker: absent before 5, present after.
+        assert!(!p.alive(3, 1) && !p.alive(3, 4) && p.alive(3, 5));
+        assert_eq!(p.readmit_step(3), Some(5));
+        assert!(!p.is_spare(3));
+        // A queued spare is never plan-alive and has no readmit step.
+        let q = FaultPlan::none(2).with_spawn(1, 0);
+        assert!(q.is_spare(1) && q.has_churn());
+        assert!((1..100).all(|t| !q.alive(1, t)));
+        assert_eq!(q.readmit_step(1), None);
+        // Permanent crashes keep the pre-churn contract.
+        let perm = FaultPlan::none(2).with_crash(0, 3);
+        assert!(!perm.has_churn());
+        assert_eq!(perm.readmit_step(0), None);
+        assert!((3..100).all(|t| !perm.alive(0, t)));
+    }
+
+    #[test]
+    fn from_config_builds_rejoin_and_spawn_schedules() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.workers = 4;
+        cfg.faults.crash_worker = 1;
+        cfg.faults.crash_step = 6;
+        cfg.faults.rejoin_step = 11;
+        cfg.faults.spawn_workers = 1;
+        cfg.faults.spawn_step = 9;
+        let p = FaultPlan::from_config(&cfg);
+        assert_eq!(p.rejoin_step(1), Some(11));
+        assert_eq!(p.spawn_step(3), Some(9));
+        assert!(p.has_churn());
+        // Replay: the schedule is a pure function of the config.
+        let q = FaultPlan::from_config(&cfg);
+        for w in 0..4 {
+            for t in 1..64 {
+                assert_eq!(p.alive(w, t), q.alive(w, t), "w={w} t={t}");
+            }
+        }
     }
 }

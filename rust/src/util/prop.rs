@@ -1,7 +1,7 @@
 //! Hand-rolled property-testing mini-framework.
 //!
 //! The offline image has no `proptest`, so coordinator invariants (routing,
-//! batching, sync-state — DESIGN.md §11) are checked with this harness: a
+//! batching, sync-state — DESIGN.md §12) are checked with this harness: a
 //! seeded generator API + a runner that, on failure, re-runs with a reduced
 //! "size" parameter to report the smallest failing scale it can find
 //! (coarse-grained shrinking: sizes shrink, seeds are reported verbatim so

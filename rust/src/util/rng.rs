@@ -128,7 +128,7 @@ impl Rng {
 
 /// Precomputed inverse-CDF table for a Zipf distribution over `n` items.
 ///
-/// The synthetic corpus (DESIGN.md §11) approximates the 1B-word benchmark's
+/// The synthetic corpus (DESIGN.md §12) approximates the 1B-word benchmark's
 /// heavy-tailed unigram distribution with Zipf(s≈1.1); sampling must be O(1)
 /// amortised, so we binary-search a cumulative table.
 #[derive(Clone)]

@@ -163,11 +163,24 @@ pub fn spawn_leader(cfg_path: &str, dir: &str) -> ChildGuard {
 /// Spawn worker `w` against [`spawn_leader`]'s port file, with extra
 /// environment variables (fault injection) applied.
 pub fn spawn_worker(cfg_path: &str, dir: &str, w: usize, env: &[(String, String)]) -> ChildGuard {
+    spawn_worker_with(cfg_path, dir, w, &[], env)
+}
+
+/// [`spawn_worker`] with extra CLI flags — e.g. `--rejoin` for a
+/// relaunched worker id reconnecting to a live run (integration_elastic).
+pub fn spawn_worker_with(
+    cfg_path: &str,
+    dir: &str,
+    w: usize,
+    extra_args: &[&str],
+    env: &[(String, String)],
+) -> ChildGuard {
     let mut cmd = std::process::Command::new(adaalter_bin());
     cmd.args(["train", "--config", cfg_path, "--role", "worker"])
         .args(["--worker-id", &w.to_string()])
         .args(["--port-file", &format!("{dir}/leader.addr")])
         .arg("--quiet")
+        .args(extra_args)
         .stdout(std::process::Stdio::null());
     for (k, v) in env {
         cmd.env(k, v);

@@ -72,6 +72,62 @@ fn resume_exact_local_sgd() {
     resume_equals_straight(Algorithm::LocalSgd, SyncPeriod::Every(4), 32, 64);
 }
 
+/// The lifted checkpoint × faults ban, end to end: a run with a crash
+/// *and* a scheduled rejoin checkpoints at a boundary mid-scenario, and
+/// the resumed run is bitwise-equal to the uninterrupted one. The resume
+/// lands inside the crash window (crash 10 ≤ 16 < rejoin 23), so the
+/// membership table must be reconstructed from the replayed plan: worker
+/// 2 starts the resumed run absent and is re-admitted at the t = 24
+/// boundary exactly as the straight run re-admits it.
+#[test]
+fn resume_under_fault_scenario_equals_uninterrupted() {
+    let dir = tmpdir("faulted_resume");
+    let faulted = |steps: u64, ck: u64| {
+        let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), steps, ck, &dir);
+        c.train.fused = false;
+        c.faults.crash_worker = 2;
+        c.faults.crash_step = 10;
+        c.faults.rejoin_step = 23;
+        c
+    };
+
+    let c_straight = faulted(40, 0);
+    let r_straight = Trainer::new(c_straight.clone(), factory(&c_straight)).run().unwrap();
+
+    let c_half = faulted(16, 16);
+    let _ = Trainer::new(c_half.clone(), factory(&c_half)).run().unwrap();
+    let ck = Checkpoint::load(format!("{dir}/ck.bin")).unwrap();
+    assert_eq!(ck.step, 16);
+
+    let c_rest = faulted(40, 0);
+    let mut t = Trainer::new(c_rest.clone(), factory(&c_rest));
+    t.resume = Some(ck);
+    let r_resumed = t.run().unwrap();
+
+    assert_eq!(
+        r_straight.final_x, r_resumed.final_x,
+        "resumed faulted run diverged from the uninterrupted one"
+    );
+    assert_eq!(
+        r_straight.final_eval.as_ref().unwrap().loss.to_bits(),
+        r_resumed.final_eval.as_ref().unwrap().loss.to_bits()
+    );
+    // Both runs re-admitted worker 2 at the t = 24 boundary.
+    let joined = |r: &adaalter::coordinator::RunResult| {
+        r.recorder
+            .fault_events
+            .iter()
+            .find(|e| e.joins > 0)
+            .map(|e| (e.step, e.joins, e.crashes))
+    };
+    assert_eq!(joined(&r_straight), Some((24, 1, 0)), "straight-run admission");
+    assert_eq!(joined(&r_resumed), Some((24, 1, 0)), "resumed-run admission");
+    // The straight run additionally saw the crash itself.
+    assert!(r_straight.recorder.fault_events.iter().any(|e| e.crashes == 1));
+    assert!(r_resumed.recorder.fault_events.iter().all(|e| e.crashes == 0));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn config_rejects_misaligned_checkpoint_cadence() {
     let dir = tmpdir("misaligned");

@@ -1,0 +1,364 @@
+//! Elastic membership & crash recovery (DESIGN.md §10): workers that
+//! join, rejoin, and resume — in-process and over real sockets.
+//!
+//! * Plan-scheduled churn: a crashed worker with a `rejoin_step` is
+//!   re-admitted at the next sync boundary via the ordinary
+//!   `InstallState` catch-up; `spawn_workers` join a smaller initial
+//!   fleet mid-run; both are pure functions of `(seed, worker, step)` and
+//!   replay byte-identically.
+//! * Telemetry-driven autoscaling: the `[faults] autoscale` policy admits
+//!   queued spares on healthy drift and retires persistent stragglers as
+//!   voluntary leaves — and with thresholds that never fire, the run is
+//!   bitwise-identical to the default fault-free trainer.
+//! * Real sockets: a worker process killed mid-run relaunches with
+//!   `--rejoin`, is admitted through the late `Join` handshake, and the
+//!   run converges to the same final eval as a never-killed quorum run;
+//!   a voluntary `Leave` is billed as a leave, not a crash.
+//!
+//! CI runs this suite serialized (`--test-threads=1`) in release, like
+//! the net suite — the multi-process scenarios spawn real OS processes.
+
+mod common;
+
+use adaalter::config::{Algorithm, ExperimentConfig, SyncPeriod, TomlDoc};
+use adaalter::coordinator::RunResult;
+use adaalter::metrics::FaultEvent;
+use adaalter::util::prop;
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+/// The H=4 local-AdaAlter shape every in-process elastic scenario uses.
+fn elastic_cfg(workers: usize, steps: u64) -> ExperimentConfig {
+    let mut c = common::cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), workers, steps);
+    c.train.fused = false; // no-op on rust_math; required by churn validation
+    c
+}
+
+/// The fault event recorded at round `step`, or a panic naming it.
+fn event_at(r: &RunResult, step: u64) -> FaultEvent {
+    *r.recorder
+        .fault_events
+        .iter()
+        .find(|e| e.step == step)
+        .unwrap_or_else(|| panic!("no fault event at step {step}"))
+}
+
+/// Sum a named column of a `faults_<tag>.csv` written by a leader process.
+fn csv_column_sum(csv: &str, name: &str) -> f64 {
+    let mut lines = csv.lines();
+    let header: Vec<&str> = lines.next().expect("csv header").split(',').collect();
+    let idx = header
+        .iter()
+        .position(|h| *h == name)
+        .unwrap_or_else(|| panic!("faults csv has no {name:?} column: {header:?}"));
+    lines
+        .map(|l| {
+            l.split(',')
+                .nth(idx)
+                .unwrap_or_else(|| panic!("short csv row {l:?}"))
+                .parse::<f64>()
+                .unwrap_or_else(|e| panic!("bad {name} value in {l:?}: {e}"))
+        })
+        .sum()
+}
+
+// ---------------------------------------------------------------------------
+// In-process: plan-scheduled churn
+// ---------------------------------------------------------------------------
+
+/// A crashed worker with a scheduled rejoin is re-admitted at the first
+/// boundary at or after `rejoin_step`, warm-started from the boundary's
+/// averaged state, and the fleet is whole again for the rest of the run.
+#[test]
+fn crashed_worker_rejoins_at_the_next_sync_boundary() {
+    let mut c = elastic_cfg(4, 48);
+    c.faults.crash_worker = 2;
+    c.faults.crash_step = 9;
+    c.faults.rejoin_step = 15;
+    let r = common::run(c);
+
+    // The crash at t = 9 surfaces in the t = 12 round's accounting...
+    let e12 = event_at(&r, 12);
+    assert_eq!((e12.alive, e12.crashes, e12.joins), (3, 1, 0), "crash round: {e12:?}");
+    // ...and the t = 16 boundary (first with 15 <= t) re-admits worker 2.
+    let e16 = event_at(&r, 16);
+    assert_eq!((e16.alive, e16.joins, e16.leaves), (3, 1, 0), "rejoin round: {e16:?}");
+    // From the next phase on the fleet is whole again, with no churn.
+    assert!(r
+        .recorder
+        .fault_events
+        .iter()
+        .filter(|e| e.step >= 20)
+        .all(|e| e.alive == 4 && e.participants == 4 && e.joins == 0 && e.crashes == 0));
+    // Nothing in this scenario is a voluntary departure.
+    assert!(r.recorder.fault_events.iter().all(|e| e.leaves == 0));
+    assert!(r.final_eval.expect("final eval").loss.is_finite());
+}
+
+/// `spawn_workers`: the highest worker id starts absent and joins the
+/// live set at the first boundary at or after `spawn_step`.
+#[test]
+fn spawned_worker_joins_the_initial_fleet_mid_run() {
+    let mut c = elastic_cfg(4, 40);
+    c.faults.spawn_workers = 1;
+    c.faults.spawn_step = 9;
+    let r = common::run(c);
+
+    for s in [4u64, 8] {
+        let e = event_at(&r, s);
+        assert_eq!((e.alive, e.joins), (3, 0), "pre-spawn round {s}: {e:?}");
+    }
+    let e12 = event_at(&r, 12);
+    assert_eq!((e12.alive, e12.joins, e12.crashes), (3, 1, 0), "spawn round: {e12:?}");
+    assert!(r
+        .recorder
+        .fault_events
+        .iter()
+        .filter(|e| e.step >= 16)
+        .all(|e| e.alive == 4 && e.participants == 4 && e.joins == 0));
+    assert!(r.final_eval.expect("final eval").loss.is_finite());
+}
+
+/// The standing invariant, extended to the membership engine: a
+/// `[faults]` table that only arms the autoscaler — with thresholds no
+/// round ever trips — is bitwise-identical to the default fault-free run.
+#[test]
+fn churn_free_autoscale_run_is_bitwise_identical_to_default() {
+    let base = common::cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 4, 48);
+    let mut c = base.clone();
+    c.train.fused = false; // no-op on rust_math; required by validation
+    c.faults.autoscale = true;
+    c.faults.autoscale_straggler_s = 1e9; // no round is ever "congested"
+    c.faults.autoscale_drift = 1e18; // no round is ever "drifty"
+    let a = common::run(base);
+    let b = common::run(c);
+    common::assert_bitwise_eq(&a, &b, "churn-free autoscale vs default");
+    // The armed engine logs one participation event per round — all quiet.
+    assert!(a.recorder.fault_events.is_empty());
+    assert!(!b.recorder.fault_events.is_empty());
+    assert!(b
+        .recorder
+        .fault_events
+        .iter()
+        .all(|e| e.crashes == 0 && e.leaves == 0 && e.joins == 0 && e.dropped == 0));
+}
+
+/// Seeded churn plans replay byte-identically: two runs of the same
+/// config produce bit-equal training data and byte-equal fault CSVs.
+#[test]
+fn seeded_churn_plans_replay_byte_identically() {
+    let dir = common::tmpdir("churn_replay");
+    prop::check("churn plans replay", 6, |g| {
+        let workers = g.usize_in(3..5);
+        let steps = 4 * g.u64_in(6..11); // 24..=40, whole phases
+        let mut c = elastic_cfg(workers, steps);
+        c.train.seed = g.u64_in(1..1_000_000);
+        c.faults.crash_worker = 1;
+        c.faults.crash_step = g.u64_in(2..steps);
+        if g.usize_in(0..2) == 1 {
+            // A rejoin past the end of the run is a permanent crash.
+            c.faults.rejoin_step = c.faults.crash_step + g.u64_in(1..12);
+        }
+        if g.usize_in(0..2) == 1 {
+            c.faults.spawn_workers = 1;
+            c.faults.spawn_step = g.u64_in(1..steps);
+        }
+        let a = common::run(c.clone());
+        let b = common::run(c);
+        common::assert_bitwise_eq(&a, &b, "churn replay");
+        let (pa, pb) = (format!("{dir}/a.csv"), format!("{dir}/b.csv"));
+        a.recorder.write_faults_csv(&pa).unwrap();
+        b.recorder.write_faults_csv(&pb).unwrap();
+        prop::assert_that(
+            std::fs::read_to_string(&pa).unwrap() == std::fs::read_to_string(&pb).unwrap(),
+            "fault CSVs must replay byte-identically",
+        )
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// In-process: telemetry-driven autoscaling
+// ---------------------------------------------------------------------------
+
+/// Healthy, drifty rounds admit a queued spare (`spawn_step = 0`) after
+/// `autoscale_patience` rounds.
+#[test]
+fn autoscale_admits_a_queued_spare_after_patience() {
+    let mut c = elastic_cfg(4, 48);
+    c.faults.spawn_workers = 1; // worker 3 is the queued spare
+    c.faults.spawn_step = 0;
+    c.faults.autoscale = true;
+    c.faults.autoscale_drift = 0.0; // every healthy round counts as drifty
+    c.faults.autoscale_straggler_s = 1e9; // never congested
+    c.faults.autoscale_patience = 2;
+    let r = common::run(c);
+
+    let e4 = event_at(&r, 4);
+    assert_eq!((e4.alive, e4.joins), (3, 0), "first round: {e4:?}");
+    // Two healthy rounds -> the t = 8 boundary admits the spare.
+    let e8 = event_at(&r, 8);
+    assert_eq!((e8.alive, e8.joins, e8.leaves), (3, 1, 0), "admission round: {e8:?}");
+    // The spare pool is exhausted: later Admit votes are no-ops.
+    assert!(r
+        .recorder
+        .fault_events
+        .iter()
+        .filter(|e| e.step >= 12)
+        .all(|e| e.alive == 4 && e.participants == 4 && e.joins == 0));
+    assert!(r.final_eval.expect("final eval").loss.is_finite());
+}
+
+/// Persistently congested rounds retire the slowest live worker — billed
+/// as a voluntary leave, never a crash — and the barrier wait vanishes.
+#[test]
+fn autoscale_retires_a_persistent_straggler_as_a_leave() {
+    let mut c = elastic_cfg(4, 48);
+    c.faults.slow_workers = 1; // worker 3 is 4x slow
+    c.faults.slow_factor = 4.0;
+    c.faults.autoscale = true;
+    c.faults.autoscale_straggler_s = 1e-6; // any real wait is congestion
+    c.faults.autoscale_drift = 1e18; // never vote Admit
+    c.faults.autoscale_patience = 2;
+    let r = common::run(c);
+
+    let e4 = event_at(&r, 4);
+    assert!(e4.wait_s > 0.0, "full barrier must wait on the slow worker: {e4:?}");
+    assert_eq!((e4.alive, e4.leaves), (4, 0), "first round: {e4:?}");
+    // Two congested rounds -> the t = 8 boundary drops the straggler.
+    let e8 = event_at(&r, 8);
+    assert_eq!((e8.alive, e8.leaves, e8.crashes), (4, 1, 0), "drop round: {e8:?}");
+    // The survivors run in lockstep: no barrier wait, no more churn.
+    assert!(r
+        .recorder
+        .fault_events
+        .iter()
+        .filter(|e| e.step >= 12)
+        .all(|e| e.alive == 3 && e.participants == 3 && e.wait_s == 0.0 && e.leaves == 0));
+    assert!(r.recorder.fault_events.iter().all(|e| e.crashes == 0));
+    assert!(r.final_eval.expect("final eval").loss.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// Real sockets: kill, relaunch --rejoin, voluntary leave
+// ---------------------------------------------------------------------------
+
+/// One networked elastic deployment's experiment TOML: H = 4
+/// local-AdaAlter under a quorum of 2, so the run survives the gap
+/// between a worker's death and its relaunch.
+fn elastic_toml(workers: usize, steps: u64, dim: usize, log_every: u64) -> String {
+    format!(
+        "[train]\n\
+         workers = {workers}\n\
+         sync_period = 4\n\
+         steps = {steps}\n\
+         steps_per_epoch = 50\n\
+         log_every = {log_every}\n\
+         fused = false\n\
+         backend = \"rust_math\"\n\
+         rust_math_dim = {dim}\n\
+         [optim]\n\
+         algorithm = \"local_adaalter\"\n\
+         warmup_steps = 10\n\
+         [comm]\n\
+         transport = \"tcp\"\n\
+         [faults]\n\
+         quorum = 2\n\
+         [net]\n\
+         listen = \"127.0.0.1:0\"\n\
+         connect_timeout_s = 60.0\n"
+    )
+}
+
+/// Leader faults CSV for [`elastic_toml`] runs (tag = algo_wN_hH).
+fn faults_csv(dir: &str, workers: usize) -> String {
+    let path = format!("{dir}/faults_local_adaalter_w{workers}_h4.csv");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+/// The tentpole, end to end over real TCP: a worker process killed
+/// mid-run is relaunched with `--rejoin`, admitted through the late
+/// `Join` handshake at a sync boundary, catches up via `InstallState`,
+/// and the run converges to the same final eval as an uninterrupted
+/// quorum run.
+#[test]
+fn killed_worker_process_rejoins_over_tcp_and_converges() {
+    let dir = common::tmpdir("tcp_rejoin");
+    // Enough steps that the relaunch (tens of milliseconds after the
+    // kill) lands well inside the run on any host; boundaries come every
+    // 4 steps, so admission follows almost immediately.
+    let toml = elastic_toml(3, 10_000, 256, 200);
+    let cfg_path = common::write_cfg(&dir, &toml);
+    let mut leader = common::spawn_leader(&cfg_path, &dir);
+    let mut w0 = common::spawn_worker(&cfg_path, &dir, 0, &[]);
+    let mut w1 = common::spawn_worker(&cfg_path, &dir, 1, &[]);
+    let kill = vec![(adaalter::comm::net::EXIT_AT_STEP_ENV.to_string(), "7".to_string())];
+    let mut w2 = common::spawn_worker(&cfg_path, &dir, 2, &kill);
+
+    let limit = std::time::Duration::from_secs(120);
+    let st = w2.wait_within(limit);
+    assert_eq!(st.code(), Some(3), "worker 2 must die through the kill hook: {st}");
+
+    // Relaunch the same worker id against the live run.
+    let mut w2b = common::spawn_worker_with(&cfg_path, &dir, 2, &["--rejoin"], &[]);
+    let st = w2b.wait_within(limit);
+    assert!(st.success(), "relaunched worker 2 must rejoin and finish: {st}");
+    for (g, name) in [(&mut w0, "worker 0"), (&mut w1, "worker 1")] {
+        let st = g.wait_within(limit);
+        assert!(st.success(), "{name} failed: {st}");
+    }
+    let st = leader.wait_within(limit);
+    assert!(st.success(), "leader failed: {st}");
+
+    // The leader billed exactly one crash and (at least) one admission.
+    let csv = faults_csv(&dir, 3);
+    assert_eq!(csv_column_sum(&csv, "crashes"), 1.0, "exactly one crash billed");
+    assert!(csv_column_sum(&csv, "joins") >= 1.0, "the relaunch must be admitted");
+    assert_eq!(csv_column_sum(&csv, "leaves"), 0.0, "nothing left voluntarily");
+
+    // Convergence: same final eval as the uninterrupted quorum run (the
+    // crash window perturbs the trajectory, so this is a closeness pin,
+    // not a bitwise one).
+    let rep = common::net_report(&dir);
+    let bits = u64::from_str_radix(
+        rep.req("final_eval_loss_bits").unwrap().str().expect("final eval recorded"),
+        16,
+    )
+    .unwrap();
+    let got = f64::from_bits(bits);
+    let ref_toml = toml.replace("transport = \"tcp\"", "transport = \"simulated\"");
+    let ref_cfg = ExperimentConfig::from_doc(&TomlDoc::parse(&ref_toml).unwrap()).unwrap();
+    let want = common::run(ref_cfg).final_eval.expect("reference eval").loss;
+    assert!(
+        (got - want).abs() <= 0.1 * want.abs() + 1e-6,
+        "rejoined run must converge with the uninterrupted one: got {got}, want {want}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A voluntary departure over the wire: the worker sends a `Leave` frame
+/// and exits cleanly; the leader bills a leave, not a crash, and the
+/// quorum run finishes on the remaining fleet.
+#[test]
+fn voluntary_leave_over_tcp_is_billed_as_leave_not_crash() {
+    let toml = elastic_toml(3, 400, 64, 50);
+    let env = vec![(
+        2usize,
+        adaalter::comm::net::LEAVE_AT_STEP_ENV.to_string(),
+        "30".to_string(),
+    )];
+    let run = common::run_net(&toml, 3, "tcp_leave", &env);
+    assert!(run.workers[2].success(), "leaving worker exits clean: {}", run.workers[2]);
+    for (w, st) in run.workers.iter().take(2).enumerate() {
+        assert!(st.success(), "worker {w} failed: {st}");
+    }
+    assert!(run.leader.success(), "leader must finish on the remainder: {}", run.leader);
+
+    let csv = faults_csv(&run.out_dir, 3);
+    assert_eq!(csv_column_sum(&csv, "leaves"), 1.0, "one voluntary leave billed");
+    assert_eq!(csv_column_sum(&csv, "crashes"), 0.0, "a leave is not a crash");
+    assert_eq!(csv_column_sum(&csv, "joins"), 0.0, "nothing rejoined");
+    std::fs::remove_dir_all(&run.out_dir).ok();
+}

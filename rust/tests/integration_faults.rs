@@ -203,6 +203,7 @@ fn reply_kind(r: &Reply) -> &'static str {
         Reply::Eval { .. } => "Eval",
         Reply::Ready { .. } => "Ready",
         Reply::Crashed { .. } => "Crashed",
+        Reply::Left { .. } => "Left",
         Reply::Err { .. } => "Err",
     }
 }
@@ -320,23 +321,34 @@ fn invalid_fault_configs_error_before_running() {
     let err = ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
     assert!(err.contains("faults.quorum"), "{err}");
 
-    // crash + checkpointing (the "crash with checkpoint resume" class).
+    // crash + checkpointing is now a supported combination (the fault
+    // plan replays as a pure function of the seed) — but only under the
+    // fixed sync policy, where boundaries are known ahead of time.
     let doc = TomlDoc::parse(
         "[train]\ncheckpoint_every = 4\n[faults]\ncrash_worker = 1\ncrash_step = 3\n",
     )
     .unwrap();
+    ExperimentConfig::from_doc(&doc).expect("checkpointing under [faults] must validate");
+    let doc = TomlDoc::parse(
+        "[train]\ncheckpoint_every = 4\n[sync]\npolicy = \"growing\"\n\
+         [faults]\ncrash_worker = 1\ncrash_step = 3\n",
+    )
+    .unwrap();
     let err = ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
-    assert!(err.contains("checkpoint_every"), "{err}");
+    assert!(err.contains("train.checkpoint_every"), "{err}");
 
     // quorum over the fused device path.
     let doc = TomlDoc::parse("[faults]\nquorum = 2\n").unwrap();
     let err = ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
     assert!(err.contains("train.fused"), "{err}");
 
-    // And the programmatic mirror: a Trainer fed a resume checkpoint
-    // under an active scenario refuses up front.
+    // And the programmatic mirror: resume now composes with a plain
+    // scenario (the plan replays from the seed), but the autoscaler's
+    // patience counters are not checkpointed — that combination still
+    // refuses up front, naming the field.
     let mut c = cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 2, 8);
-    c.faults.slow_workers = 1;
+    c.train.fused = false;
+    c.faults.autoscale = true;
     let d = c.train.rust_math_dim;
     let f = factory(&c);
     let mut t = Trainer::new(c, f);
@@ -346,7 +358,7 @@ fn invalid_fault_configs_error_before_running() {
         vectors: vec![vec![0.0; d], vec![1.0; d], vec![1.0; d]],
     });
     let err = t.run().err().expect("must fail").to_string();
-    assert!(err.contains("[faults]"), "{err}");
+    assert!(err.contains("faults.autoscale"), "{err}");
 }
 
 /// A quorum made unreachable by a crash (programmatic plan, so config
