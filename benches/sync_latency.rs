@@ -1,0 +1,243 @@
+//! Sync-round latency under the `[comm] pipeline` knob (DESIGN.md
+//! §"Pipelined sync rounds"): per-round wall clock with the pipeline off
+//! vs depth ∈ {2, 4}, at n ∈ {4, 8} workers over k = 8 leader shards —
+//! both through the in-process collective (true per-round p50/p99 over
+//! repeated `sync_round` calls) and over real loopback TCP deployments.
+//!
+//! TCP rounds cannot be sampled individually from outside the leader, so
+//! the per-round estimate differences two deployments of the same config
+//! (long minus short run, divided by the sync-count delta) — process
+//! spawn, handshake and teardown cancel out.
+//!
+//! Ratcheted metrics: `accounted_minus_booked_bytes` must stay exactly 0
+//! per TCP cell (pipelining must not move a byte of accounting), and the
+//! `pipeline_speedup_*` rates warn below their conservative baseline
+//! floors (wall clock depends on the runner). The `round_*_ns` readings
+//! are informational.
+//!
+//! Run: `cargo bench --bench sync_latency`
+//! Knob: ADAALTER_BENCH_DIM (default 262,144 — a 1 MiB vector).
+
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use adaalter::comm::{ChannelCollective, Collective};
+use adaalter::util::json::Json;
+use adaalter::util::rng::Rng;
+use adaalter::util::timing::{black_box, BenchSink};
+
+/// The compiled `adaalter` CLI binary under test.
+const BIN: &str = env!("CARGO_BIN_EXE_adaalter");
+
+/// Leader shard count for every cell (the ISSUE acceptance shape).
+const SHARDS: usize = 8;
+
+fn env_or(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn randn(d: usize, seed: u64) -> Vec<f32> {
+    let mut v = vec![0.0f32; d];
+    Rng::new(seed).fill_normal(&mut v, 1.0);
+    v
+}
+
+/// (p50, p99) of a sorted-in-place nanosecond sample.
+fn percentiles(samples: &mut [f64]) -> (f64, f64) {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let p50 = samples[samples.len() / 2];
+    let p99 = samples[(samples.len() * 99) / 100];
+    (p50, p99)
+}
+
+/// True per-round p50/p99 through the in-process sharded collective:
+/// time each `sync_round` (x and acc families, exactly what the trainer
+/// issues at a Local AdaAlter boundary) individually.
+fn inproc_round_ns(n: usize, d: usize, depth: usize, rounds: usize) -> Vec<f64> {
+    let mut coll = ChannelCollective::pipelined(n, d, SHARDS, depth);
+    let states: Vec<Vec<f32>> = (0..n).map(|w| randn(d, 10 + w as u64)).collect();
+    let accs: Vec<Vec<f32>> = (0..n).map(|w| randn(d, 20 + w as u64)).collect();
+    let xs: Vec<&[f32]> = states.iter().map(|v| v.as_slice()).collect();
+    let acc_refs: Vec<&[f32]> = accs.iter().map(|v| v.as_slice()).collect();
+    let mut avg_x = vec![0.0f32; d];
+    let mut avg_acc = vec![0.0f32; d];
+    // Warm-up: faults in the staging buffers and spins up the executor.
+    for _ in 0..3 {
+        coll.sync_round(&xs, Some(&acc_refs), &mut avg_x, Some(&mut avg_acc)).unwrap();
+    }
+    (0..rounds)
+        .map(|_| {
+            let t0 = Instant::now();
+            coll.sync_round(&xs, Some(&acc_refs), &mut avg_x, Some(&mut avg_acc)).unwrap();
+            let ns = t0.elapsed().as_nanos() as f64;
+            black_box(avg_x[0]);
+            ns
+        })
+        .collect()
+}
+
+/// Kill-on-drop child, so one failed role never strands the fleet.
+struct Guard(Child);
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Wait for a clean exit with a hard deadline (a deadlock must fail the
+/// bench, not hang CI).
+fn wait(g: &mut Guard, label: &str) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if let Some(st) = g.0.try_wait().expect("try_wait failed") {
+            assert!(st.success(), "{label} failed: {st}");
+            return;
+        }
+        assert!(Instant::now() < deadline, "{label} did not exit within 120s");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// One loopback deployment (H = 1 Local AdaAlter, k = [`SHARDS`],
+/// `pipeline = depth`): returns its `net_report.json` and the end-to-end
+/// wall time in seconds.
+fn deploy(tag: &str, n: usize, d: usize, depth: usize, steps: u64) -> (Json, f64) {
+    let dir = std::env::temp_dir().join(format!("adaalter_bench_sl_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let dir = dir.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(format!("{dir}/leader.addr"));
+    let _ = std::fs::remove_file(format!("{dir}/net_report.json"));
+    let toml = format!(
+        "[train]\n\
+         workers = {n}\n\
+         sync_period = 1\n\
+         steps = {steps}\n\
+         log_every = 64\n\
+         backend = \"rust_math\"\n\
+         rust_math_dim = {d}\n\
+         [optim]\n\
+         algorithm = \"local_adaalter\"\n\
+         warmup_steps = 10\n\
+         [comm]\n\
+         transport = \"tcp\"\n\
+         shards = {SHARDS}\n\
+         pipeline = {depth}\n\
+         [net]\n\
+         listen = \"127.0.0.1:0\"\n\
+         connect_timeout_s = 60.0\n"
+    );
+    let cfg = format!("{dir}/cfg.toml");
+    std::fs::write(&cfg, toml).expect("write config");
+
+    let t0 = Instant::now();
+    let mut leader = Guard(
+        Command::new(BIN)
+            .args(["train", "--config", &cfg, "--role", "leader"])
+            .args(["--port-file", &format!("{dir}/leader.addr")])
+            .args(["--out-dir", &dir, "--quiet"])
+            .stdout(Stdio::null())
+            .spawn()
+            .expect("spawn leader"),
+    );
+    let mut kids: Vec<Guard> = (0..n)
+        .map(|w| {
+            Guard(
+                Command::new(BIN)
+                    .args(["train", "--config", &cfg, "--role", "worker"])
+                    .args(["--worker-id", &w.to_string()])
+                    .args(["--port-file", &format!("{dir}/leader.addr")])
+                    .arg("--quiet")
+                    .stdout(Stdio::null())
+                    .spawn()
+                    .expect("spawn worker"),
+            )
+        })
+        .collect();
+    for (w, g) in kids.iter_mut().enumerate() {
+        wait(g, &format!("worker {w}"));
+    }
+    wait(&mut leader, "leader");
+    let wall = t0.elapsed().as_secs_f64();
+
+    let path = format!("{dir}/net_report.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+    (Json::parse(&text).expect("net_report.json parses"), wall)
+}
+
+/// Startup-cancelled per-round estimate over loopback TCP, plus the long
+/// run's exact accounting drift (must be 0).
+fn tcp_round_ns(tag: &str, n: usize, d: usize, depth: usize) -> (f64, f64) {
+    let (short_steps, long_steps) = (8u64, 56u64);
+    let (rep_s, wall_s) = deploy(&format!("{tag}_s"), n, d, depth, short_steps);
+    let (rep_l, wall_l) = deploy(&format!("{tag}_l"), n, d, depth, long_steps);
+    let num = |rep: &Json, k: &str| rep.req(k).unwrap().num().unwrap();
+    let dsyncs = num(&rep_l, "syncs") - num(&rep_s, "syncs");
+    assert!(dsyncs > 0.0, "{tag}: long run must sync more than the short run");
+    let round_ns = (wall_l - wall_s).max(0.0) * 1e9 / dsyncs;
+    let drift = num(&rep_l, "accounted_bytes") - num(&rep_l, "booked_bytes");
+    (round_ns, drift)
+}
+
+fn main() {
+    let d: usize = env_or("ADAALTER_BENCH_DIM", 1 << 18);
+    let rounds = 40usize;
+    let mut sink = BenchSink::new("sync_latency");
+    sink.value("config", &[("dim", d as f64), ("shards", SHARDS as f64)]);
+    println!("=== sync-round latency (d = {d}, k = {SHARDS} shards) ===\n");
+
+    for n in [4usize, 8] {
+        // In-process: true per-round samples.
+        let mut off = inproc_round_ns(n, d, 0, rounds);
+        let (off_p50, off_p99) = percentiles(&mut off);
+        sink.value(
+            &format!("inproc_n{n}_k{SHARDS}_off"),
+            &[("round_p50_ns", off_p50), ("round_p99_ns", off_p99)],
+        );
+        println!("inproc  n={n} off      p50 {:>10.0} ns  p99 {:>10.0} ns", off_p50, off_p99);
+        for depth in [2usize, 4] {
+            let mut ns = inproc_round_ns(n, d, depth, rounds);
+            let (p50, p99) = percentiles(&mut ns);
+            sink.value(
+                &format!("inproc_n{n}_k{SHARDS}_d{depth}"),
+                &[
+                    ("round_p50_ns", p50),
+                    ("round_p99_ns", p99),
+                    ("pipeline_speedup_p50", off_p50 / p50),
+                ],
+            );
+            println!(
+                "inproc  n={n} depth {depth}  p50 {:>10.0} ns  p99 {:>10.0} ns  speedup {:.2}x",
+                p50,
+                p99,
+                off_p50 / p50
+            );
+        }
+
+        // Loopback TCP: startup-cancelled per-round estimates.
+        let (off_ns, off_drift) = tcp_round_ns(&format!("n{n}_off"), n, d, 0);
+        sink.value(
+            &format!("tcp_n{n}_k{SHARDS}_off"),
+            &[("round_est_ns", off_ns), ("accounted_minus_booked_bytes", off_drift)],
+        );
+        println!("tcp     n={n} off      round {:>10.0} ns", off_ns);
+        for depth in [2usize, 4] {
+            let (ns, drift) = tcp_round_ns(&format!("n{n}_d{depth}"), n, d, depth);
+            sink.value(
+                &format!("tcp_n{n}_k{SHARDS}_d{depth}"),
+                &[
+                    ("round_est_ns", ns),
+                    ("accounted_minus_booked_bytes", drift),
+                    ("pipeline_speedup_round", off_ns / ns),
+                ],
+            );
+            println!(
+                "tcp     n={n} depth {depth}  round {:>10.0} ns  speedup {:.2}x",
+                ns,
+                off_ns / ns
+            );
+        }
+    }
+    sink.finish();
+}

@@ -32,7 +32,8 @@
 
 use crate::comm::compress::{QsgdEncoded, QsgdQuantizer, SparseGrad, TopKSparsifier};
 use crate::comm::netmodel::{NetModel, Topology};
-use crate::comm::shard::{mean_into_sharded, ShardPlan};
+use crate::comm::shard::{mean_into_sharded, mean_into_sharded_exec, ShardPlan};
+use crate::coordinator::executor::Executor;
 use crate::config::ExperimentConfig;
 use crate::error::{Error, Result};
 use crate::sim::Calibration;
@@ -388,10 +389,18 @@ fn check_acc_pairing(accs_some: bool, avg_some: bool) -> Result<()> {
 /// ([`ShardPlan`]) — the dataflow the k shard servers execute in
 /// parallel — which is bitwise-identical to the dense mean (per-coordinate
 /// kernels; pinned in `comm::shard`).
+///
+/// With `comm.pipeline = depth ≥ 2` the per-shard means additionally fan
+/// out over a scoped-thread [`Executor`] ([`mean_into_sharded_exec`]) —
+/// shard *i* reduces while shard *i+1* is still being staged. Still
+/// bitwise-identical: the per-range kernels and their internal operation
+/// order are untouched, only the shard schedule overlaps.
 pub struct ChannelCollective {
     n: usize,
     d: usize,
     plan: ShardPlan,
+    exec: Executor,
+    pipeline: usize,
 }
 
 impl ChannelCollective {
@@ -404,7 +413,20 @@ impl ChannelCollective {
     /// `n` workers, model dimension `d`, `shards` leader shards
     /// (`comm.shards`; range partition of `[0, d)`).
     pub fn sharded(n: usize, d: usize, shards: usize) -> Self {
-        ChannelCollective { n, d, plan: ShardPlan::new(d, shards) }
+        ChannelCollective::pipelined(n, d, shards, 0)
+    }
+
+    /// [`ChannelCollective::sharded`] with a `comm.pipeline` depth:
+    /// `depth ≥ 2` reduces up to `depth` shard ranges concurrently
+    /// (capped at the shard count); `0` and `1` are the serial schedule.
+    pub fn pipelined(n: usize, d: usize, shards: usize, depth: usize) -> Self {
+        let plan = ShardPlan::new(d, shards);
+        let exec = if depth >= 2 && plan.shards() > 1 {
+            Executor::threads(depth.min(plan.shards()))
+        } else {
+            Executor::serial()
+        };
+        ChannelCollective { n, d, plan, exec, pipeline: depth }
     }
 
     /// Model dimension.
@@ -416,6 +438,17 @@ impl ChannelCollective {
     pub fn plan(&self) -> &ShardPlan {
         &self.plan
     }
+
+    /// The executor the per-shard reduction stage fans over (serial
+    /// unless a `comm.pipeline` depth ≥ 2 was configured).
+    pub fn exec(&self) -> &Executor {
+        &self.exec
+    }
+
+    /// The configured `comm.pipeline` depth (0 = off).
+    pub fn pipeline(&self) -> usize {
+        self.pipeline
+    }
 }
 
 impl Collective for ChannelCollective {
@@ -424,11 +457,15 @@ impl Collective for ChannelCollective {
     }
 
     fn label(&self) -> String {
-        if self.plan.is_dense() {
-            "channel".into()
+        let mut l = if self.plan.is_dense() {
+            "channel".to_string()
         } else {
             format!("channel(shards={})", self.plan.shards())
+        };
+        if self.pipeline > 0 {
+            l.push_str(&format!("+pipe({})", self.pipeline));
         }
+        l
     }
 
     fn gather_grads(&mut self, grads: &mut [Vec<f32>]) -> Result<CommReport> {
@@ -445,7 +482,7 @@ impl Collective for ChannelCollective {
     }
 
     fn allreduce_mean(&mut self, inputs: &[&[f32]], out: &mut [f32]) -> Result<CommReport> {
-        mean_into_sharded(&self.plan, inputs, out);
+        mean_into_sharded_exec(&self.plan, &self.exec, inputs, out);
         Ok(CommReport {
             rounds: 1,
             drift_sq: mean_sq_dist(inputs, out),
@@ -461,9 +498,9 @@ impl Collective for ChannelCollective {
         avg_acc: Option<&mut [f32]>,
     ) -> Result<CommReport> {
         check_acc_pairing(accs.is_some(), avg_acc.is_some())?;
-        mean_into_sharded(&self.plan, xs, avg_x);
+        mean_into_sharded_exec(&self.plan, &self.exec, xs, avg_x);
         if let (Some(accs), Some(avg_acc)) = (accs, avg_acc) {
-            mean_into_sharded(&self.plan, accs, avg_acc);
+            mean_into_sharded_exec(&self.plan, &self.exec, accs, avg_acc);
         }
         Ok(CommReport {
             rounds: 1,
@@ -847,7 +884,21 @@ impl CompressedCollective {
             }
         }
         mean_buf.resize(d, 0.0);
-        kernels::mean_into(&delta_bufs[..sources.len()], mean_buf);
+        // The reduction stage. With a pipelined sharded plan the
+        // per-range means fan over the inner executor (bitwise ≡ the
+        // dense mean, pinned in comm::shard); otherwise the dense
+        // alloc-free kernel. (The lossy codecs only ever see the dense
+        // plan, so only f32/bf16 wires can take the fanned branch.)
+        use crate::coordinator::executor::Parallelism;
+        if !inner.plan().is_dense()
+            && !matches!(inner.exec().parallelism(), Parallelism::Serial)
+        {
+            let refs: Vec<&[f32]> =
+                delta_bufs[..sources.len()].iter().map(|v| v.as_slice()).collect();
+            mean_into_sharded_exec(inner.plan(), inner.exec(), &refs, mean_buf);
+        } else {
+            kernels::mean_into(&delta_bufs[..sources.len()], mean_buf);
+        }
         // Down leg: each shard server broadcasts its averaged range to all
         // n workers (again summing to exactly the dense bill).
         let plan = inner.plan();
@@ -1034,7 +1085,7 @@ pub fn build_collective(
         )));
     }
     let n = cfg.train.workers;
-    let base = ChannelCollective::sharded(n, d, cfg.comm.shards);
+    let base = ChannelCollective::pipelined(n, d, cfg.comm.shards, cfg.comm.pipeline);
     let coll: Box<dyn Collective> = match cfg.comm.compression.as_str() {
         "none" => match cfg.comm.transport.as_str() {
             // The bf16 wire rides the compressed-collective machinery

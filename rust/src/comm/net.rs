@@ -51,18 +51,20 @@ use crate::comm::collective::{
     down_stream, grad_stream, mean_sq_dist, up_stream, Collective, CommReport, StreamFamily,
 };
 use crate::comm::netmodel::NetModel;
-use crate::comm::shard::ShardPlan;
+use crate::comm::shard::{mean_into_sharded_exec, ShardPlan};
 use crate::comm::transport::ChannelTransport;
 use crate::comm::wire::{
-    self, flags_shard, shard_flags, Frame, FrameKind, PayloadCodec, CODEC_RAW, FLAG_RAW,
-    PROTOCOL_VERSION,
+    self, flags_shard, shard_flags, Frame, FrameBatch, FrameKind, PayloadCodec, CODEC_RAW,
+    FLAG_RAW, MAX_BATCH, PROTOCOL_VERSION,
 };
 use crate::config::ExperimentConfig;
 use crate::coordinator::backend::EvalMetrics;
+use crate::coordinator::executor::{Executor, Parallelism};
 use crate::coordinator::factory::make_factory;
 use crate::coordinator::worker::{worker_loop, Cmd, Reply, WorkerSpec};
 use crate::error::{Error, Result};
 use crate::util::kernels;
+use crate::util::pool::{BytePool, PoolStats};
 
 /// Env var for the failure-path tests: a worker process that reads a
 /// `SyncStep`/`LocalStep` command for this (1-based) step exits with code
@@ -196,6 +198,17 @@ impl Write for NetStream {
         match self {
             NetStream::Tcp(s) => s.write(buf),
             NetStream::Uds(s) => s.write(buf),
+        }
+    }
+
+    // Delegate so a coalesced FrameBatch submission reaches the kernel as
+    // one writev(2) instead of the Write default's first-buffer-only
+    // fallback (which would degrade the pipelined path to a syscall per
+    // frame section).
+    fn write_vectored(&mut self, bufs: &[std::io::IoSlice<'_>]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write_vectored(bufs),
+            NetStream::Uds(s) => s.write_vectored(bufs),
         }
     }
 
@@ -600,6 +613,7 @@ impl Bound {
         nodelay: bool,
         state: Arc<Mutex<WireState>>,
         counters: Arc<NetCounters>,
+        pipeline: usize,
     ) -> Result<TcpTransport> {
         let n = specs.len();
         let deadline = Instant::now() + self.timeout;
@@ -690,6 +704,7 @@ impl Bound {
             counters,
             JoinSource { listener: self.listener, fingerprint, nodelay },
             ack_payloads,
+            pipeline,
         )
     }
 }
@@ -753,17 +768,34 @@ pub struct TcpTransport {
     pending: Arc<Mutex<Vec<(usize, NetStream)>>>,
     accept_stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    /// `comm.pipeline` depth for the writer threads (< 2 = serial path).
+    pipeline: usize,
+    /// Shared wire-payload staging pool: `cmd_to_frame` takes buffers
+    /// here, coalescing writers recycle them after submission — the
+    /// encode → frame → queue cycle is allocation-free at steady state.
+    pool: Arc<Mutex<BytePool>>,
 }
 
 /// Spawn the reader/writer thread pair for one connected peer. The
 /// reader stamps every event with `generation` so replaced connections
 /// can be told apart from live ones.
+///
+/// `pipeline < 2` keeps the writer on the strictly-serial path (one
+/// encode, one write, one flush per frame — today's behavior by
+/// construction). `pipeline ≥ 2` turns on frame coalescing: the writer
+/// drains up to `pipeline` already-queued frames per wake-up, stages
+/// their headers in one reusable buffer, and submits all
+/// `[header][payload]` pairs with a single vectored write + flush,
+/// recycling payload buffers into `pool` afterwards. Scheduling only:
+/// the per-peer frame order is FIFO either way.
 fn spawn_peer(
     w: usize,
     generation: u64,
     stream: NetStream,
     ev_tx: &Sender<(usize, u64, Option<Frame>)>,
     counters: &Arc<NetCounters>,
+    pipeline: usize,
+    pool: &Arc<Mutex<BytePool>>,
 ) -> Result<Peer> {
     let mut rd = stream.try_clone()?;
     let mut wr = stream;
@@ -788,14 +820,48 @@ fn spawn_peer(
         }
     });
     let wc = Arc::clone(counters);
+    let wp = Arc::clone(pool);
+    let depth = pipeline.clamp(1, MAX_BATCH);
     let writer = std::thread::spawn(move || {
-        while let Ok(f) = rx.recv() {
-            if f.write_to(&mut wr).is_err() {
+        if depth < 2 {
+            while let Ok(f) = rx.recv() {
+                if f.write_to(&mut wr).is_err() {
+                    break;
+                }
+                wc.add_total(f.wire_len() as u64);
+                let _ = wr.flush();
+            }
+            return;
+        }
+        let mut batch = FrameBatch::new();
+        // `recv` keeps yielding frames buffered before the sender closed,
+        // and each iteration writes + flushes everything it staged before
+        // blocking again — so channel close (shutdown, Leave) can never
+        // strand a staged partial batch.
+        while let Ok(first) = rx.recv() {
+            batch.stage(first);
+            while batch.len() < depth {
+                match rx.try_recv() {
+                    Ok(f) => batch.stage(f),
+                    Err(_) => break,
+                }
+            }
+            let bytes = batch.wire_len();
+            let ok = batch.write_to(&mut wr).is_ok();
+            // Recycle payload allocations for the next round's encodes.
+            // The pool is an optimization, never a correctness dependency:
+            // under lock contention the buffers are simply dropped.
+            match wp.try_lock() {
+                Ok(mut p) => batch.recycle_into(&mut p),
+                Err(_) => batch.clear(),
+            }
+            if !ok {
                 break;
             }
-            wc.add_total(f.wire_len() as u64);
+            wc.add_total(bytes);
             let _ = wr.flush();
         }
+        let _ = wr.flush();
     });
     Ok(Peer { tx: Some(tx), writer: Some(writer), reader: Some(reader) })
 }
@@ -820,12 +886,14 @@ impl TcpTransport {
         counters: Arc<NetCounters>,
         join: JoinSource,
         ack_payloads: Vec<Vec<u8>>,
+        pipeline: usize,
     ) -> Result<TcpTransport> {
         let n = streams.len();
         let (ev_tx, ev_rx) = std::sync::mpsc::channel::<(usize, u64, Option<Frame>)>();
+        let pool = Arc::new(Mutex::new(BytePool::new()));
         let mut peers = Vec::with_capacity(n);
         for (w, stream) in streams.into_iter().enumerate() {
-            peers.push(spawn_peer(w, 0, stream, &ev_tx, &counters)?);
+            peers.push(spawn_peer(w, 0, stream, &ev_tx, &counters, pipeline, &pool)?);
         }
         // The accept thread: poll the still-open listener, validate late
         // `Join` handshakes (kind, id range, fingerprint — same rules as
@@ -909,6 +977,8 @@ impl TcpTransport {
             pending,
             accept_stop,
             accept_thread: Some(accept_thread),
+            pipeline,
+            pool,
         })
     }
 
@@ -979,7 +1049,15 @@ impl TcpTransport {
         // New connection epoch: events from the replaced connection's
         // reader (e.g. its trailing EOF) are ignored from here on.
         self.gen[w] += 1;
-        let peer = spawn_peer(w, self.gen[w], stream, &self.ev_tx, &self.counters)?;
+        let peer = spawn_peer(
+            w,
+            self.gen[w],
+            stream,
+            &self.ev_tx,
+            &self.counters,
+            self.pipeline,
+            &self.pool,
+        )?;
         let mut old = std::mem::replace(&mut self.peers[w], peer);
         old.tx = None;
         if let Some(j) = old.writer.take() {
@@ -1140,6 +1218,21 @@ impl TcpTransport {
         }
     }
 
+    /// A cleared payload staging buffer from the shared pool (falls back
+    /// to a fresh `Vec` when a writer thread holds the pool lock — the
+    /// pool is an optimization, never a correctness dependency).
+    fn take_buf(&self) -> Vec<u8> {
+        match self.pool.try_lock() {
+            Ok(mut p) => p.take(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Cumulative hit/miss/drop counters of the wire payload pool.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.lock().map(|p| p.stats()).unwrap_or_default()
+    }
+
     /// Encode a leader command into its wire frame, billing the payload
     /// per the accounting rules (DESIGN.md §4): `SyncStep` pushes and
     /// `InstallState` pulls are billed; control frames, `Eval` payloads
@@ -1148,8 +1241,8 @@ impl TcpTransport {
         let worker = w as u32;
         Ok(match cmd {
             Cmd::SyncStep { t, x, scratch: _ } => {
+                let mut payload = self.take_buf();
                 let mut wd = lock(&self.state);
-                let mut payload = Vec::new();
                 // bf16 wire: ship the bf16 image (x is already on the
                 // grid after the collective's broadcast). QSGD ships the
                 // dense f32 model — the leader owns x, and the pull is
@@ -1189,9 +1282,9 @@ impl TcpTransport {
                 payload: Vec::new(),
             },
             Cmd::InstallState { x, acc } => {
+                let mut p = self.take_buf();
                 let mut wd = lock(&self.state);
                 let (payload, tag) = if wd.codec.is_f32() {
-                    let mut p = Vec::new();
                     put_f32s(&mut p, &x);
                     if let Some(a) = acc.as_deref() {
                         put_f32s(&mut p, a);
@@ -1209,7 +1302,7 @@ impl TcpTransport {
                                 .into(),
                         )
                     })?;
-                    let p = stash.payload.clone();
+                    p.extend_from_slice(&stash.payload);
                     stash.remaining = stash.remaining.saturating_sub(1);
                     if stash.remaining == 0 {
                         wd.install = None;
@@ -1577,6 +1670,12 @@ pub struct WireCollective {
     net: NetModel,
     inner_label: String,
     is_bf16: bool,
+    /// Leader-side reduction executor: serial by default, fanned over
+    /// `min(pipeline, shards)` scoped threads when `[comm] pipeline ≥ 2`
+    /// on a sharded plan (bitwise-identical, see [`mean_into_sharded_exec`]).
+    exec: Executor,
+    /// Configured `[comm] pipeline` depth (0 = off).
+    pipeline: usize,
     mean_buf: Vec<f32>,
     hat_buf: Vec<f32>,
     enc_buf: Vec<u8>,
@@ -1592,10 +1691,26 @@ impl WireCollective {
             net,
             inner_label,
             is_bf16,
+            exec: Executor::serial(),
+            pipeline: 0,
             mean_buf: Vec::new(),
             hat_buf: Vec::new(),
             enc_buf: Vec::new(),
         }
+    }
+
+    /// Apply the `[comm] pipeline` knob: depth ≥ 2 on a sharded plan fans
+    /// the sync-round reduction over scoped threads; anything else keeps
+    /// the serial executor (`depth = 1` ≡ off by construction).
+    pub fn with_pipeline(mut self, depth: usize) -> Self {
+        let shards = lock(&self.state).plan.shards();
+        self.exec = if depth >= 2 && shards > 1 {
+            Executor::threads(depth.min(shards))
+        } else {
+            Executor::serial()
+        };
+        self.pipeline = depth;
+        self
     }
 }
 
@@ -1603,6 +1718,7 @@ impl WireCollective {
 /// leg, advance the base, and return the billed bytes (up + down legs).
 fn family_round(
     wd: &mut WireState,
+    exec: &Executor,
     family: StreamFamily,
     out: &mut [f32],
     payload: &mut Vec<u8>,
@@ -1610,6 +1726,7 @@ fn family_round(
     hat: &mut Vec<f32>,
 ) -> Result<u64> {
     let (n, d) = (wd.n, wd.d);
+    let plan = wd.plan.clone();
     {
         let pend = match family {
             StreamFamily::SyncX => &mut wd.pending_x,
@@ -1625,7 +1742,13 @@ fn family_round(
             })?);
         }
         mean.resize(d, 0.0);
-        kernels::mean_into(&deltas, mean);
+        if !plan.is_dense() && !matches!(exec.parallelism(), Parallelism::Serial) {
+            // Pipelined leader: reduce the shard ranges in parallel —
+            // bitwise-identical to the dense mean (pinned in comm::shard).
+            mean_into_sharded_exec(&plan, exec, &deltas, mean);
+        } else {
+            kernels::mean_into(&deltas, mean);
+        }
         for p in pend.iter_mut() {
             *p = None;
         }
@@ -1660,10 +1783,15 @@ impl Collective for WireCollective {
 
     fn label(&self) -> String {
         let wd = lock(&self.state);
-        if wd.plan.is_dense() {
-            format!("net({})", self.inner_label)
+        let pipe = if self.pipeline > 0 {
+            format!("+pipe({})", self.pipeline)
         } else {
-            format!("net({}, shards={})", self.inner_label, wd.plan.shards())
+            String::new()
+        };
+        if wd.plan.is_dense() {
+            format!("net({}){pipe}", self.inner_label)
+        } else {
+            format!("net({}, shards={}){pipe}", self.inner_label, wd.plan.shards())
         }
     }
 
@@ -1739,6 +1867,7 @@ impl Collective for WireCollective {
         self.enc_buf.clear();
         let mut bytes = family_round(
             &mut wd,
+            &self.exec,
             StreamFamily::SyncX,
             avg_x,
             &mut self.enc_buf,
@@ -1751,6 +1880,7 @@ impl Collective for WireCollective {
         if let (Some(_), Some(avg_acc)) = (accs, avg_acc) {
             bytes += family_round(
                 &mut wd,
+                &self.exec,
                 StreamFamily::SyncAcc,
                 avg_acc,
                 &mut self.enc_buf,

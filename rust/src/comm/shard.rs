@@ -15,6 +15,8 @@
 
 use std::ops::Range;
 
+use crate::coordinator::executor::Executor;
+
 /// The range partition for a `d`-dimensional vector over `k` shards.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardPlan {
@@ -103,6 +105,41 @@ pub fn mean_into_sharded(plan: &ShardPlan, inputs: &[&[f32]], out: &mut [f32]) {
     }
 }
 
+/// [`mean_into_sharded`] fanned over an [`Executor`] — the pipelined
+/// leader's parallel reduction stage (`[comm] pipeline`, DESIGN.md
+/// §"Pipelined sync rounds"). Each shard's range is reduced by exactly
+/// the same per-range [`crate::util::math::mean_into`] call the serial
+/// path makes, on a disjoint `&mut` slice of `out`, so the result is
+/// **bitwise-identical** to the serial (and dense) mean no matter how
+/// the executor schedules the shards — only wall-clock changes.
+pub fn mean_into_sharded_exec(
+    plan: &ShardPlan,
+    exec: &Executor,
+    inputs: &[&[f32]],
+    out: &mut [f32],
+) {
+    use crate::coordinator::executor::Parallelism;
+    if plan.is_dense() || matches!(exec.parallelism(), Parallelism::Serial) {
+        mean_into_sharded(plan, inputs, out);
+        return;
+    }
+    // Carve `out` into the plan's disjoint per-shard windows so each
+    // parallel task owns its slice exclusively.
+    let mut parts: Vec<(Range<usize>, &mut [f32])> = Vec::with_capacity(plan.shards());
+    let mut rest = out;
+    for r in plan.ranges() {
+        let (head, tail) = rest.split_at_mut(r.len());
+        rest = tail;
+        if !r.is_empty() {
+            parts.push((r, head));
+        }
+    }
+    exec.for_each(&mut parts, |_, (r, window)| {
+        let subs: Vec<&[f32]> = inputs.iter().map(|v| &v[r.clone()]).collect();
+        crate::util::math::mean_into(&subs, window);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +198,29 @@ mod tests {
                 prop::assert_that(p.range(s).contains(&i), "shard_of lands in its range")?;
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn properties_exec_parallel_mean_is_bitwise_serial() {
+        prop::check("executor-fanned shard mean ≡ serial, bitwise", 60, |g| {
+            let d = 1 + g.usize_in(0..400);
+            let k = 1 + g.usize_in(0..10);
+            let n = 1 + g.usize_in(0..5);
+            let threads = 1 + g.usize_in(0..4);
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| g.f32_in(-4.0..4.0)).collect())
+                .collect();
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let plan = ShardPlan::new(d, k);
+            let mut serial = vec![0.0f32; d];
+            mean_into_sharded(&plan, &refs, &mut serial);
+            let mut parallel = vec![0.0f32; d];
+            mean_into_sharded_exec(&plan, &Executor::threads(threads), &refs, &mut parallel);
+            prop::assert_that(
+                serial.iter().zip(&parallel).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "bitwise equal",
+            )
         });
     }
 

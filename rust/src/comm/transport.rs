@@ -112,23 +112,46 @@ impl<C, R> ChannelTransport<C, R> {
             .map_err(|_| Error::Protocol("all workers disconnected".into()))
     }
 
-    /// Gather exactly one reply per worker; `sel` extracts the worker index
-    /// and payload (and turns error replies into `Err`). Duplicate or
-    /// missing replies are protocol violations.
-    pub fn gather<T>(&self, mut sel: impl FnMut(R) -> Result<(usize, T)>) -> Result<Vec<T>> {
+    /// Gather exactly one reply per worker, delivering each to `each` in
+    /// **arrival order** as it lands — the streaming form the pipelined
+    /// sync path builds on (`[comm] pipeline`): the leader can stage or
+    /// reduce worker `w`'s payload while the remaining workers are still
+    /// replying, instead of barriering on the full set first. Duplicate
+    /// or unknown-worker replies are protocol violations.
+    pub fn gather_each<T>(
+        &self,
+        mut sel: impl FnMut(R) -> Result<(usize, T)>,
+        mut each: impl FnMut(usize, T) -> Result<()>,
+    ) -> Result<()> {
         let n = self.n();
-        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut seen = vec![false; n];
         let mut got = 0;
         while got < n {
             let (w, v) = sel(self.recv()?)?;
-            let slot = out
+            let slot = seen
                 .get_mut(w)
                 .ok_or_else(|| Error::Protocol(format!("reply from unknown worker {w}")))?;
-            if slot.replace(v).is_some() {
+            if std::mem::replace(slot, true) {
                 return Err(Error::Protocol(format!("duplicate reply from worker {w}")));
             }
+            each(w, v)?;
             got += 1;
         }
+        Ok(())
+    }
+
+    /// Gather exactly one reply per worker; `sel` extracts the worker index
+    /// and payload (and turns error replies into `Err`). Duplicate or
+    /// missing replies are protocol violations. (The barrier form of
+    /// [`ChannelTransport::gather_each`]: results returned in worker
+    /// order once all have arrived.)
+    pub fn gather<T>(&self, sel: impl FnMut(R) -> Result<(usize, T)>) -> Result<Vec<T>> {
+        let n = self.n();
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        self.gather_each(sel, |w, v| {
+            out[w] = Some(v);
+            Ok(())
+        })?;
         Ok(out.into_iter().map(|v| v.unwrap()).collect())
     }
 
@@ -221,6 +244,30 @@ mod tests {
         assert_eq!((w, v), (1, 42));
         assert!(t.send_to(7, Some(0)).is_err());
         t.shutdown(|_| None);
+    }
+
+    #[test]
+    fn gather_each_streams_in_arrival_order() {
+        // Replies queued 2, 0, 1 — the streaming gather must deliver them
+        // in exactly that arrival order, not worker order.
+        let (tx0, _rx0) = channel::<Option<u64>>();
+        let (tx1, _rx1) = channel::<Option<u64>>();
+        let (tx2, _rx2) = channel::<Option<u64>>();
+        let (reply_tx, reply_rx) = channel();
+        for w in [2usize, 0, 1] {
+            reply_tx.send((w, w as u64 * 10)).unwrap();
+        }
+        let t = ChannelTransport::from_parts(vec![tx0, tx1, tx2], reply_rx, Vec::new());
+        let mut order = Vec::new();
+        t.gather_each(
+            |(w, v)| Ok((w, v)),
+            |w, v| {
+                order.push((w, v));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(order, vec![(2, 20), (0, 0), (1, 10)]);
     }
 
     #[test]

@@ -202,6 +202,25 @@ impl Frame {
     /// Serialize to bytes.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Serialize, appending to `out` — the allocation-free form the
+    /// coalescing writer threads use to stage several frames into one
+    /// pooled buffer before a single vectored submission.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.reserve(self.wire_len());
+        self.encode_header_into(out);
+        out.extend_from_slice(&self.payload);
+    }
+
+    /// Serialize only the [`HEADER_LEN`]-byte header (which covers the
+    /// payload via its length and CRC fields), appending to `out`. The
+    /// zero-copy writer path stages headers contiguously and submits
+    /// `[header][payload]` pairs with `write_vectored`, so payload bytes
+    /// go from their staging buffer to the socket without being copied.
+    pub fn encode_header_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&MAGIC.to_le_bytes());
         out.push(PROTOCOL_VERSION);
         out.push(self.kind as u8);
@@ -211,8 +230,6 @@ impl Frame {
         out.extend_from_slice(&self.step.to_le_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&crc32(&self.payload).to_le_bytes());
-        out.extend_from_slice(&self.payload);
-        out
     }
 
     /// Decode one frame from the front of `buf`. Returns the frame and the
@@ -268,6 +285,113 @@ impl Frame {
         })?;
         check_crc(&payload, crc)?;
         Ok(Some(Frame { kind, codec, flags, worker, step, payload }))
+    }
+}
+
+/// Hard cap on frames coalesced into one [`FrameBatch`] submission —
+/// bounds the stack-allocated `IoSlice` table (2 slices per frame) and
+/// matches the `comm.pipeline` validation ceiling.
+pub const MAX_BATCH: usize = 16;
+
+/// A coalesced batch of frames staged for one vectored socket
+/// submission — the pipelined writer-thread path (`[comm] pipeline`).
+///
+/// [`FrameBatch::stage`] encodes each frame's 28-byte header into one
+/// contiguous reusable buffer and keeps the frame (payload untouched);
+/// [`FrameBatch::write_to`] submits all `[header][payload]` pairs with a
+/// single `write_vectored` call (looping on partial writes), so payload
+/// bytes travel from their staging buffers to the socket **without ever
+/// being copied** — frame-at-a-time `Frame::encode` copied every payload
+/// into a fresh allocation per frame. [`FrameBatch::recycle_into`]
+/// returns the payload buffers to a [`BytePool`] afterwards, making the
+/// whole encode → frame → queue → write cycle allocation-free at steady
+/// state (pinned in `rust/tests/integration_alloc.rs`).
+#[derive(Default)]
+pub struct FrameBatch {
+    headers: Vec<u8>,
+    frames: Vec<Frame>,
+}
+
+impl FrameBatch {
+    /// Empty batch (buffers grow to the working set, then stay).
+    pub fn new() -> FrameBatch {
+        FrameBatch::default()
+    }
+
+    /// Frames currently staged.
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Is nothing staged?
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Total wire bytes of the staged frames (headers + payloads).
+    pub fn wire_len(&self) -> u64 {
+        self.frames.iter().map(|f| f.wire_len() as u64).sum()
+    }
+
+    /// Stage `frame`: its header is encoded now, its payload referenced
+    /// in place. Panics if the batch is already at [`MAX_BATCH`].
+    pub fn stage(&mut self, frame: Frame) {
+        assert!(self.frames.len() < MAX_BATCH, "FrameBatch over MAX_BATCH");
+        frame.encode_header_into(&mut self.headers);
+        self.frames.push(frame);
+    }
+
+    /// Write every staged frame with vectored submission, handling short
+    /// writes. The staged frames stay in the batch (for byte accounting
+    /// and payload recycling) until [`FrameBatch::recycle_into`] or
+    /// [`FrameBatch::clear`].
+    pub fn write_to(&mut self, w: &mut impl Write) -> std::io::Result<()> {
+        let total = self.headers.len() + self.frames.iter().map(|f| f.payload.len()).sum::<usize>();
+        let mut written = 0usize;
+        while written < total {
+            // Rebuild the slice table past what already went out — stack
+            // storage only, no allocation on the resume path either.
+            let mut slices = [std::io::IoSlice::new(&[]); 2 * MAX_BATCH];
+            let mut ns = 0usize;
+            let mut pos = 0usize;
+            for (i, f) in self.frames.iter().enumerate() {
+                let header = &self.headers[i * HEADER_LEN..(i + 1) * HEADER_LEN];
+                for part in [header, f.payload.as_slice()] {
+                    let end = pos + part.len();
+                    if end > written && !part.is_empty() {
+                        slices[ns] = std::io::IoSlice::new(&part[written.saturating_sub(pos)..]);
+                        ns += 1;
+                    }
+                    pos = end;
+                }
+            }
+            let n = w.write_vectored(&slices[..ns])?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "socket accepted 0 bytes of a staged frame batch",
+                ));
+            }
+            written += n;
+        }
+        Ok(())
+    }
+
+    /// Drop the staged frames, returning their payload allocations to
+    /// `pool` for the next round's encodes.
+    pub fn recycle_into(&mut self, pool: &mut crate::util::pool::BytePool) {
+        self.headers.clear();
+        for f in self.frames.drain(..) {
+            if f.payload.capacity() > 0 {
+                pool.put(f.payload);
+            }
+        }
+    }
+
+    /// Drop the staged frames without recycling.
+    pub fn clear(&mut self) {
+        self.headers.clear();
+        self.frames.clear();
     }
 }
 
@@ -527,8 +651,10 @@ fn unpack_levels(bytes: &[u8], s: u8, d: usize, out: &mut Vec<i8>) -> Result<()>
 /// FNV-1a hash of the semantically-relevant config surface — the
 /// handshake's config-hash check. Covers everything that shapes the
 /// training trajectory ([train]/[optim]/[data]/[comm]/[sync]/[faults]/
-/// [precision]); excludes output paths, `[net]` addressing and `[exec]`
-/// (pure wall-clock knobs), so leader and workers may differ in those.
+/// [precision]); excludes output paths, `[net]` addressing, `[exec]` and
+/// `comm.pipeline` (pure wall-clock knobs — pipelined scheduling is
+/// bitwise-identical by construction), so leader and workers may differ
+/// in those.
 pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
     let t = &cfg.train;
     let o = &cfg.optim;
@@ -814,6 +940,11 @@ mod tests {
         b.out_dir = "elsewhere".into();
         b.exec.threads = 3;
         b.net.latency_us = 1.0;
+        // comm.pipeline is pure leader-side scheduling (bitwise-identical
+        // runs by construction), so like [exec] it must not enter the
+        // handshake fingerprint — a pipelined leader accepts workers that
+        // never heard of the knob.
+        b.comm.pipeline = 4;
         assert_eq!(config_fingerprint(&a), config_fingerprint(&b), "non-semantic");
         b.train.seed += 1;
         assert_ne!(config_fingerprint(&a), config_fingerprint(&b), "semantic");
@@ -844,5 +975,102 @@ mod tests {
             assert_eq!(flags_shard(f | FLAG_RAW), s);
             assert_eq!((f | FLAG_RAW) & FLAG_RAW, FLAG_RAW);
         }
+    }
+
+    /// A writer that accepts at most `max` bytes per call — exercises
+    /// the batch writer's partial-write resume path, including splits
+    /// inside headers and inside payloads.
+    struct Trickle {
+        out: Vec<u8>,
+        max: usize,
+    }
+
+    impl std::io::Write for Trickle {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.max);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn frame_batch_bytes_equal_sequential_encodes() {
+        prop::check("batched vectored write ≡ frame-at-a-time encode", 60, |g| {
+            let k = 1 + g.usize_in(0..MAX_BATCH);
+            let frames: Vec<Frame> = (0..k).map(|_| arb_frame(g, 256)).collect();
+            let mut expect = Vec::new();
+            for f in &frames {
+                expect.extend_from_slice(&f.encode());
+            }
+            let mut batch = FrameBatch::new();
+            for f in &frames {
+                batch.stage(f.clone());
+            }
+            prop::assert_that(batch.len() == k, "len tracks staged frames")?;
+            prop::assert_that(batch.wire_len() == expect.len() as u64, "wire_len")?;
+            let mut sink = Vec::new();
+            batch.write_to(&mut sink).map_err(|e| e.to_string())?;
+            prop::assert_that(sink == expect, "byte-identical wire image")?;
+            // The staged bytes decode back to the original frames.
+            let mut rest: &[u8] = &sink;
+            for f in &frames {
+                let (back, used) = Frame::decode(rest).map_err(|e| e.to_string())?;
+                prop::assert_that(&back == f, "decoded frame mismatch")?;
+                rest = &rest[used..];
+            }
+            prop::assert_that(rest.is_empty(), "no trailing bytes")
+        });
+    }
+
+    #[test]
+    fn frame_batch_survives_short_writes() {
+        prop::check("batched write resumes across short writes", 40, |g| {
+            let k = 1 + g.usize_in(0..MAX_BATCH);
+            let frames: Vec<Frame> = (0..k).map(|_| arb_frame(g, 128)).collect();
+            let mut expect = Vec::new();
+            for f in &frames {
+                expect.extend_from_slice(&f.encode());
+            }
+            let mut batch = FrameBatch::new();
+            for f in &frames {
+                batch.stage(f.clone());
+            }
+            // max = 1..17 bytes per call splits inside headers and
+            // payloads; the default `write_vectored` also only consumes
+            // the first non-empty slice per call, exercising the table
+            // rebuild.
+            let mut w = Trickle { out: Vec::new(), max: 1 + g.usize_in(0..17) };
+            batch.write_to(&mut w).map_err(|e| e.to_string())?;
+            prop::assert_that(w.out == expect, "byte-identical after short writes")
+        });
+    }
+
+    #[test]
+    fn frame_batch_recycles_payload_buffers() {
+        let mut pool = crate::util::pool::BytePool::new();
+        let mut batch = FrameBatch::new();
+        batch.stage(Frame {
+            kind: FrameKind::SyncStep,
+            codec: CODEC_RAW,
+            flags: 0,
+            worker: 0,
+            step: 1,
+            payload: vec![1, 2, 3],
+        });
+        // Payload-less control frames have no allocation to recycle.
+        batch.stage(Frame::control(FrameKind::Stop, 1, 1));
+        let mut sink = Vec::new();
+        batch.write_to(&mut sink).unwrap();
+        batch.recycle_into(&mut pool);
+        assert!(batch.is_empty());
+        assert_eq!(pool.parked(), 1, "one owned payload returned");
+        assert!(pool.take().is_empty(), "recycled buffer comes back cleared");
+        // A cleared batch is reusable: staging again starts fresh.
+        batch.stage(Frame::control(FrameKind::Ready, 2, 2));
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.wire_len(), HEADER_LEN as u64);
     }
 }

@@ -337,6 +337,16 @@ pub struct CommConfig {
     /// `net.topology = "ps"` and an elementwise codec
     /// (`comm.compression = "none"`; f32/bf16 wire both compose).
     pub shards: usize,
+    /// Sync-round software-pipeline depth (DESIGN.md §"Pipelined sync
+    /// rounds"). 0 (default) keeps today's strictly-serial round; depth
+    /// d ≥ 1 lets up to d shards be in flight at once — shard *i*
+    /// reducing on the leader while shard *i+1* is still arriving and
+    /// shard *i−1* is being encoded and written out — and turns on frame
+    /// coalescing + vectored submission in the socket writer threads.
+    /// Pure scheduling: pipelined runs are bitwise-identical to
+    /// `pipeline = 0` (per-shard reduction order is unchanged), so this
+    /// knob is excluded from the config fingerprint like `[exec]`.
+    pub pipeline: usize,
     /// QSGD quantization levels s (1..=127). Default 15 → 2s+1 = 31
     /// symbols → 5-bit codes per coordinate on the wire.
     pub qsgd_levels: u8,
@@ -350,6 +360,7 @@ impl Default for CommConfig {
             transport: "simulated".into(),
             compression: "none".into(),
             shards: 1,
+            pipeline: 0,
             qsgd_levels: 15,
             topk_keep: 0.01,
         }
@@ -418,6 +429,15 @@ impl CommConfig {
                  (got {:?}; qsgd/topk quantize against whole-vector state \
                  and do not commute with a range partition)",
                 self.compression
+            )));
+        }
+        if self.pipeline > 16 {
+            // Each in-flight shard pins a staging buffer on the leader
+            // and every writer thread; past the shard count extra depth
+            // buys nothing, and 16 is already past any useful k.
+            return Err(Error::Config(format!(
+                "comm.pipeline must be in 0..=16, got {}",
+                self.pipeline
             )));
         }
         if !(1..=127).contains(&self.qsgd_levels) {
@@ -961,6 +981,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "comm.transport",
     "comm.compression",
     "comm.shards",
+    "comm.pipeline",
     "comm.qsgd_levels",
     "comm.topk_keep",
     "sync.policy",
@@ -1076,6 +1097,13 @@ impl ExperimentConfig {
             )));
         }
         c.comm.shards = shards as usize;
+        let pipeline = doc.int_or("comm.pipeline", c.comm.pipeline as i64)?;
+        if !(0..=16).contains(&pipeline) {
+            return Err(Error::Config(format!(
+                "comm.pipeline must be in 0..=16, got {pipeline}"
+            )));
+        }
+        c.comm.pipeline = pipeline as usize;
         let levels = doc.int_or("comm.qsgd_levels", c.comm.qsgd_levels as i64)?;
         if !(1..=127).contains(&levels) {
             return Err(Error::Config(format!(
@@ -1643,6 +1671,29 @@ mod tests {
         c.comm.shards = 2;
         let err = c.validate().unwrap_err();
         assert!(err.to_string().contains("comm.shards"), "{err}");
+    }
+
+    #[test]
+    fn pipeline_knob_parses_and_validates() {
+        // Default off ≡ today's strictly-serial round.
+        assert_eq!(ExperimentConfig::default().comm.pipeline, 0);
+        let doc = TomlDoc::parse("[comm]\nshards = 8\npipeline = 4\n").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.comm.pipeline, 4);
+        c.validate().unwrap();
+        // Bounds: 0..=16 at parse AND validate time.
+        let doc = TomlDoc::parse("[comm]\npipeline = 17\n").unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+        assert!(err.to_string().contains("comm.pipeline"), "{err}");
+        let mut c = ExperimentConfig::default();
+        c.comm.pipeline = 17;
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("comm.pipeline"), "{err}");
+        // The knob composes with every transport — depth on a dense plan
+        // simply collapses to the serial executor.
+        let mut c = ExperimentConfig::default();
+        c.comm.pipeline = 2;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -308,4 +308,51 @@ mod tests {
         let mut out: Vec<Option<u8>> = vec![None; 2];
         Executor::serial().map(&mut s, &mut out, |_, v| *v);
     }
+
+    #[test]
+    fn properties_pipelined_completion_is_a_stage_preserving_permutation() {
+        // The `[comm] pipeline` hazard model: shard i's internal stages
+        // (gather → reduce → encode) must run in order, while distinct
+        // shards may interleave and complete in any order. Pinned by
+        // logging every (shard, stage) event across layouts and checking
+        // (a) the completion sequence is a permutation of 0..k and (b)
+        // each shard's own events appear in stage order — FIFO per shard,
+        // free interleave across shards.
+        use crate::util::prop;
+        use std::sync::Mutex;
+        const STAGES: usize = 3;
+        prop::check("pipelined shard events: per-shard FIFO, global permutation", 30, |g| {
+            let k = 1 + g.usize_in(0..12);
+            let threads = 1 + g.usize_in(0..5);
+            let log: Mutex<Vec<(usize, usize)>> = Mutex::new(Vec::new());
+            let mut shards: Vec<usize> = (0..k).collect();
+            Executor::threads(threads).for_each(&mut shards, |_, s| {
+                for stage in 0..STAGES {
+                    log.lock().unwrap().push((*s, stage));
+                    // Jitter the interleave so schedules actually differ.
+                    if (*s + stage) % 2 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+            let events = log.into_inner().unwrap();
+            prop::assert_that(events.len() == k * STAGES, "every stage logged once")?;
+            // (a) completion order (each shard's final stage) is a
+            // permutation of 0..k.
+            let mut done: Vec<usize> =
+                events.iter().filter(|(_, st)| *st == STAGES - 1).map(|(s, _)| *s).collect();
+            done.sort_unstable();
+            prop::assert_that(done == (0..k).collect::<Vec<_>>(), "completions form 0..k")?;
+            // (b) per-shard internal order is preserved.
+            for s in 0..k {
+                let stages: Vec<usize> =
+                    events.iter().filter(|(sh, _)| *sh == s).map(|(_, st)| *st).collect();
+                prop::assert_that(
+                    stages == (0..STAGES).collect::<Vec<_>>(),
+                    format!("shard {s} stages out of order: {stages:?}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
 }

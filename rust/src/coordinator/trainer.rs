@@ -303,19 +303,26 @@ impl Trainer {
                 cfg.net.nodelay,
                 Arc::clone(&state),
                 Arc::clone(&counters),
+                cfg.comm.pipeline,
             )?;
             let coll: Box<dyn Collective> = if cfg.comm.compression == "qsgd" {
-                Box::new(WireCollective::new(
-                    state,
-                    NetModel::from_config(&cfg.net).with_shards(cfg.comm.shards),
-                    format!("qsgd(s={})", cfg.comm.qsgd_levels),
-                ))
+                Box::new(
+                    WireCollective::new(
+                        state,
+                        NetModel::from_config(&cfg.net).with_shards(cfg.comm.shards),
+                        format!("qsgd(s={})", cfg.comm.qsgd_levels),
+                    )
+                    .with_pipeline(cfg.comm.pipeline),
+                )
             } else if cfg.precision.wire_bf16() {
-                Box::new(WireCollective::new(
-                    state,
-                    NetModel::from_config(&cfg.net).with_shards(cfg.comm.shards),
-                    "bf16".into(),
-                ))
+                Box::new(
+                    WireCollective::new(
+                        state,
+                        NetModel::from_config(&cfg.net).with_shards(cfg.comm.shards),
+                        "bf16".into(),
+                    )
+                    .with_pipeline(cfg.comm.pipeline),
+                )
             } else {
                 build_collective(cfg, &self.calibration, d)?
             };
@@ -391,6 +398,13 @@ impl Trainer {
         // transport this also joins the socket threads, so the traffic
         // counters read below are final.
         run.shutdown();
+        // Surface the run's pool counters: leader f32 scratch merged with
+        // the networked transport's wire byte pool (if any).
+        let mut pool_stats = run.pool.stats();
+        if let LeaderLink::Net(t) = &run.transport {
+            pool_stats = pool_stats.merge(&t.pool_stats());
+        }
+        run.recorder.set_pool_stats(pool_stats);
         out.map(|(final_x, final_eval)| RunResult {
             final_x,
             recorder: run.recorder,

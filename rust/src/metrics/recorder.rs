@@ -9,6 +9,7 @@ use std::time::Instant;
 
 use crate::error::Result;
 use crate::util::csv::CsvWriter;
+use crate::util::pool::PoolStats;
 
 /// One logged training step (averaged over workers).
 #[derive(Clone, Copy, Debug)]
@@ -121,6 +122,10 @@ pub struct TrainRecorder {
     /// Label of the sync policy that scheduled the rounds
     /// (e.g. "fixed(H=4)", "drift(θ=1, H≤64)").
     sync_policy: String,
+    /// Buffer-pool counters at run end (leader f32 scratch pool merged
+    /// with the wire byte pool) — set by the trainer so runs can check
+    /// the zero-steady-state-allocation pools actually warmed up.
+    pool_stats: PoolStats,
 }
 
 impl TrainRecorder {
@@ -141,6 +146,7 @@ impl TrainRecorder {
             syncs: 0,
             transport: String::new(),
             sync_policy: String::new(),
+            pool_stats: PoolStats::default(),
         }
     }
 
@@ -162,6 +168,16 @@ impl TrainRecorder {
     /// The sync-policy label ("" if never set).
     pub fn sync_policy(&self) -> &str {
         &self.sync_policy
+    }
+
+    /// Record the run's final buffer-pool counters (hit/miss/drop).
+    pub fn set_pool_stats(&mut self, stats: PoolStats) {
+        self.pool_stats = stats;
+    }
+
+    /// The recorded buffer-pool counters (all-zero if never set).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool_stats
     }
 
     /// Epoch coordinate of a step.
@@ -390,6 +406,15 @@ mod tests {
         assert_eq!(r.sync_policy(), "");
         r.set_sync_policy("fixed(H=4)".into());
         assert_eq!(r.sync_policy(), "fixed(H=4)");
+    }
+
+    #[test]
+    fn pool_stats_roundtrip() {
+        let mut r = TrainRecorder::new(10);
+        assert_eq!(r.pool_stats(), PoolStats::default());
+        let s = PoolStats { hits: 7, misses: 2, dropped: 1 };
+        r.set_pool_stats(s);
+        assert_eq!(r.pool_stats(), s);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Step-scoped buffer reuse for the training hot paths (DESIGN.md §7).
 //!
-//! Two small tools with one goal: steady-state training should not touch
-//! the allocator.
+//! Three small tools with one goal: steady-state training should not
+//! touch the allocator.
 //!
 //! * [`BufferPool`] — a free-list of `f32` scratch vectors. The leader
 //!   owns one: gradient buffers ride `Cmd::SyncStep` down to the workers
@@ -11,16 +11,56 @@
 //!   allocations out on the next round. (Codec scratch — QSGD level
 //!   buffers, top-k select indices, delta staging — is owned by the codec
 //!   and collective structs directly, since its shapes are fixed.)
+//! * [`BytePool`] — the same free-list idea for `u8` wire buffers: the
+//!   pipelined socket path ([`crate::comm::net`]) stages encoded frames
+//!   in pooled byte buffers so encode → frame → queue is copy-free and
+//!   allocation-free at steady state, with multiple buffers in flight
+//!   when `[comm] pipeline` overlaps shards.
 //! * [`ArcSlot`] — a recycler for `Arc<Vec<f32>>` broadcast payloads: the
 //!   leader ships one shared payload per round ([`std::sync::Arc`] clones,
 //!   not vector clones), and once every worker has dropped its handle the
 //!   same allocation is refilled for the next round instead of
 //!   reallocated.
 //!
+//! Both pools are capped: `put` beyond the high-water mark drops the
+//! buffer instead of parking it, so a deep `[comm] pipeline` (many
+//! in-flight shard buffers) cannot silently hoard memory. Hit/miss
+//! counters are surfaced through `metrics/recorder.rs` for runs that
+//! want to check the pool actually warmed up.
+//!
 //! The counting-allocator test (`rust/tests/integration_alloc.rs`) pins
 //! the zero-steady-state-allocation property of the paths built on these.
 
 use std::sync::Arc;
+
+/// Default high-water mark for pooled buffers: the leader's working set
+/// is O(workers + pipeline depth) buffers per family, and 64 covers the
+/// validated maxima (64 workers / depth 16) with room to spare.
+pub const DEFAULT_POOL_CAP: usize = 64;
+
+/// Cumulative take/put statistics for a pool ([`BufferPool::stats`],
+/// [`BytePool::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `take` calls served from the free-list (no allocation).
+    pub hits: u64,
+    /// `take` calls that had to allocate (empty free-list).
+    pub misses: u64,
+    /// `put` calls dropped because the pool was at its cap.
+    pub dropped: u64,
+}
+
+impl PoolStats {
+    /// Sum with another pool's counters (for aggregating the f32 and
+    /// byte pools into one recorder line).
+    pub fn merge(&self, other: &PoolStats) -> PoolStats {
+        PoolStats {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            dropped: self.dropped + other.dropped,
+        }
+    }
+}
 
 /// A free-list of reusable `f32` scratch vectors.
 ///
@@ -28,34 +68,133 @@ use std::sync::Arc;
 /// (contents unspecified — callers must overwrite); [`BufferPool::put`]
 /// returns it for reuse. Taking from an empty pool allocates, so steady
 /// state is allocation-free once the pool has warmed up to the working
-/// set.
-#[derive(Default)]
+/// set. The free-list is capped at a high-water mark ([`DEFAULT_POOL_CAP`]
+/// unless [`BufferPool::with_cap`] chose otherwise): returns beyond the
+/// cap drop the buffer.
 pub struct BufferPool {
     free: Vec<Vec<f32>>,
+    cap: usize,
+    stats: PoolStats,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::with_cap(DEFAULT_POOL_CAP)
+    }
 }
 
 impl BufferPool {
-    /// Empty pool.
+    /// Empty pool with the default cap.
     pub fn new() -> Self {
         BufferPool::default()
+    }
+
+    /// Empty pool that parks at most `cap` buffers.
+    pub fn with_cap(cap: usize) -> Self {
+        BufferPool { free: Vec::new(), cap, stats: PoolStats::default() }
     }
 
     /// Take a buffer of length `len` (zero-filled only on fresh
     /// allocation; reused buffers keep stale contents).
     pub fn take(&mut self, len: usize) -> Vec<f32> {
-        let mut v = self.free.pop().unwrap_or_default();
-        v.resize(len, 0.0);
-        v
+        match self.free.pop() {
+            Some(mut v) => {
+                self.stats.hits += 1;
+                v.resize(len, 0.0);
+                v
+            }
+            None => {
+                self.stats.misses += 1;
+                vec![0.0; len]
+            }
+        }
     }
 
-    /// Return a buffer for reuse.
+    /// Return a buffer for reuse; dropped if the pool is at its cap.
     pub fn put(&mut self, v: Vec<f32>) {
-        self.free.push(v);
+        if self.free.len() < self.cap {
+            self.free.push(v);
+        } else {
+            self.stats.dropped += 1;
+        }
     }
 
     /// Buffers currently parked in the pool (diagnostics / tests).
     pub fn parked(&self) -> usize {
         self.free.len()
+    }
+
+    /// Cumulative hit/miss/drop counters.
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+}
+
+/// A free-list of reusable `u8` wire-staging buffers.
+///
+/// Same contract as [`BufferPool`] but for encoded payload bytes:
+/// [`BytePool::take`] hands back a *cleared* buffer (`len == 0`,
+/// capacity retained) ready for `encode_into`-style appends, and
+/// [`BytePool::put`] parks it again up to the cap. The networked
+/// transport keeps one per staging site so a pipelined round recycles
+/// the same handful of allocations no matter how many frames it
+/// coalesces.
+pub struct BytePool {
+    free: Vec<Vec<u8>>,
+    cap: usize,
+    stats: PoolStats,
+}
+
+impl Default for BytePool {
+    fn default() -> Self {
+        BytePool::with_cap(DEFAULT_POOL_CAP)
+    }
+}
+
+impl BytePool {
+    /// Empty pool with the default cap.
+    pub fn new() -> Self {
+        BytePool::default()
+    }
+
+    /// Empty pool that parks at most `cap` buffers.
+    pub fn with_cap(cap: usize) -> Self {
+        BytePool { free: Vec::new(), cap, stats: PoolStats::default() }
+    }
+
+    /// Take an empty buffer (capacity reused from a parked buffer when
+    /// one is available).
+    pub fn take(&mut self) -> Vec<u8> {
+        match self.free.pop() {
+            Some(mut v) => {
+                self.stats.hits += 1;
+                v.clear();
+                v
+            }
+            None => {
+                self.stats.misses += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer for reuse; dropped if the pool is at its cap.
+    pub fn put(&mut self, v: Vec<u8>) {
+        if self.free.len() < self.cap {
+            self.free.push(v);
+        } else {
+            self.stats.dropped += 1;
+        }
+    }
+
+    /// Buffers currently parked in the pool (diagnostics / tests).
+    pub fn parked(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Cumulative hit/miss/drop counters.
+    pub fn stats(&self) -> PoolStats {
+        self.stats
     }
 }
 
@@ -120,6 +259,63 @@ mod tests {
         let mut p = BufferPool::new();
         let v = p.take(4);
         assert_eq!(v, vec![0.0f32; 4]);
+    }
+
+    #[test]
+    fn pool_counts_hits_and_misses() {
+        let mut p = BufferPool::new();
+        let a = p.take(8); // miss: empty pool
+        p.put(a);
+        let b = p.take(8); // hit: recycled
+        p.put(b);
+        assert_eq!(p.stats(), PoolStats { hits: 1, misses: 1, dropped: 0 });
+    }
+
+    #[test]
+    fn pool_cap_drops_beyond_high_water() {
+        let mut p = BufferPool::with_cap(2);
+        for _ in 0..4 {
+            let v = p.take(8);
+            // Hold nothing back: every put past the cap must be dropped,
+            // not parked.
+            p.put(v);
+        }
+        let extra_a = p.take(8);
+        let extra_b = p.take(8);
+        let extra_c = p.take(8);
+        p.put(extra_a);
+        p.put(extra_b);
+        p.put(extra_c);
+        assert_eq!(p.parked(), 2, "cap = 2 must bound the free-list");
+        assert_eq!(p.stats().dropped, 1);
+        // The cap never affects take: it still serves from the list.
+        let v = p.take(4);
+        assert_eq!(v.len(), 4);
+        assert_eq!(p.parked(), 1);
+    }
+
+    #[test]
+    fn byte_pool_recycles_cleared() {
+        let mut p = BytePool::with_cap(2);
+        let mut a = p.take();
+        a.extend_from_slice(&[1, 2, 3, 4]);
+        let ptr = a.as_ptr();
+        p.put(a);
+        let b = p.take();
+        assert!(b.is_empty(), "recycled byte buffers come back cleared");
+        assert_eq!(b.as_ptr(), ptr, "capacity is reused, not reallocated");
+        p.put(b);
+        p.put(vec![9; 8]);
+        p.put(vec![9; 8]); // past cap = 2 → dropped
+        assert_eq!(p.parked(), 2);
+        assert_eq!(p.stats().dropped, 1);
+    }
+
+    #[test]
+    fn pool_stats_merge_sums() {
+        let a = PoolStats { hits: 1, misses: 2, dropped: 3 };
+        let b = PoolStats { hits: 10, misses: 20, dropped: 30 };
+        assert_eq!(a.merge(&b), PoolStats { hits: 11, misses: 22, dropped: 33 });
     }
 
     #[test]

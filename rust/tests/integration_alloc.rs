@@ -195,6 +195,53 @@ fn steady_state_hot_paths_allocate_zero() {
         assert_eq!(got, 0, "{codec} compressed sync round allocated");
     }
 
+    // --- pipelined wire staging: encode → frame → batch → vectored write -
+    //
+    // The `[comm] pipeline` writer path end to end as the coalescing
+    // writer threads run it: take a pooled staging buffer, encode the
+    // payload into it, wrap it in a frame, stage the frame's header into
+    // the batch, submit everything with one vectored write, recycle the
+    // payload buffers. After one warm-up round the cycle must be
+    // allocation-free — the same handful of buffers circulates forever.
+    {
+        use adaalter::comm::wire::{Frame, FrameBatch, FrameKind, PayloadCodec};
+        use adaalter::util::pool::BytePool;
+        let src = randn(d, 110);
+        let mut pool = BytePool::new();
+        let mut batch = FrameBatch::new();
+        let mut sink = std::io::sink();
+        let mut round = |codec: &mut PayloadCodec,
+                         pool: &mut BytePool,
+                         batch: &mut FrameBatch,
+                         sink: &mut std::io::Sink| {
+            for w in 0..n as u32 {
+                let mut payload = pool.take();
+                codec.encode_vec(0, &src, &mut payload);
+                batch.stage(Frame {
+                    kind: FrameKind::SyncStep,
+                    codec: codec.tag(),
+                    flags: 0,
+                    worker: w,
+                    step: 1,
+                    payload,
+                });
+            }
+            batch.write_to(sink).unwrap();
+            batch.recycle_into(pool);
+        };
+        for codec in [PayloadCodec::F32, PayloadCodec::Bf16] {
+            let mut codec = codec;
+            // Warm-up: grows the pool to the in-flight working set.
+            round(&mut codec, &mut pool, &mut batch, &mut sink);
+            let got = allocs_during(|| {
+                for _ in 0..5 {
+                    round(&mut codec, &mut pool, &mut batch, &mut sink);
+                }
+            });
+            assert_eq!(got, 0, "pipelined wire staging allocated ({:?} tag)", codec.tag());
+        }
+    }
+
     // --- buffer pool and Arc recycling -----------------------------------
     {
         let mut pool = BufferPool::new();

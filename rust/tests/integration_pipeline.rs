@@ -1,0 +1,315 @@
+//! Pipelined sync-round pins (`[comm] pipeline`; DESIGN.md §"Pipelined
+//! sync rounds"): the software pipeline — parallel leader shard
+//! reduction, coalesced vectored writer submission, pooled wire staging
+//! buffers — is **scheduling only**. Every depth must reproduce the
+//! strictly-serial round bit for bit (final parameters, per-step loss
+//! bits, final-eval bits) with the real accounted socket bytes still
+//! exactly equal to the booked α–β accounting, over real loopback TCP
+//! deployments and through the in-process collectives alike. A clean
+//! voluntary `Leave` with coalescing on must not strand queued frames
+//! (the flush-on-close drain).
+//!
+//! CI runs this suite serialized (`--test-threads=1`) in release.
+
+mod common;
+
+use adaalter::config::{Algorithm, ExperimentConfig, SyncPeriod, TomlDoc};
+use adaalter::coordinator::RunResult;
+use adaalter::util::json::Json;
+
+/// One pipelined deployment's experiment TOML: synthetic backend at
+/// d = 64, every step logged, `shards`/`pipeline` on the comm section.
+/// Lossy codecs keep the dense plan (`comm.shards > 1` requires a
+/// lossless payload), so their pipeline exercises the writer coalescing
+/// alone.
+fn pipe_toml(
+    algo: &str,
+    h: u64,
+    workers: usize,
+    steps: u64,
+    codec: &str,
+    shards: usize,
+    pipeline: usize,
+) -> String {
+    let comm = match codec {
+        "f32" => format!("[comm]\ntransport = \"tcp\"\nshards = {shards}\npipeline = {pipeline}\n"),
+        "bf16" => format!(
+            "[comm]\ntransport = \"tcp\"\nshards = {shards}\npipeline = {pipeline}\n\
+             [precision]\nwire = \"bf16\"\n"
+        ),
+        "qsgd" => {
+            assert_eq!(shards, 1, "lossy codecs keep the dense plan");
+            format!(
+                "[comm]\ntransport = \"tcp\"\ncompression = \"qsgd\"\nqsgd_levels = 15\n\
+                 pipeline = {pipeline}\n"
+            )
+        }
+        other => panic!("unknown codec {other}"),
+    };
+    format!(
+        "[train]\n\
+         workers = {workers}\n\
+         sync_period = {h}\n\
+         steps = {steps}\n\
+         steps_per_epoch = 50\n\
+         log_every = 1\n\
+         backend = \"rust_math\"\n\
+         rust_math_dim = 64\n\
+         [optim]\n\
+         algorithm = \"{algo}\"\n\
+         warmup_steps = 10\n\
+         {comm}\
+         [net]\n\
+         listen = \"127.0.0.1:0\"\n\
+         connect_timeout_s = 60.0\n"
+    )
+}
+
+/// The strictly-serial in-process oracle for a pipelined networked TOML:
+/// same experiment, equivalent in-process transport, `pipeline = 0` —
+/// so the pin literally reads "pipelined deployment ≡ unpipelined
+/// reference, bitwise".
+fn serial_reference(toml: &str, codec: &str) -> RunResult {
+    let swap = match codec {
+        "f32" => "transport = \"simulated\"",
+        _ => "transport = \"channel\"",
+    };
+    let ref_toml = toml
+        .replace("transport = \"tcp\"", swap)
+        .replace(&format!("pipeline = {}", pipeline_of(toml)), "pipeline = 0");
+    let cfg = ExperimentConfig::from_doc(&TomlDoc::parse(&ref_toml).unwrap()).unwrap();
+    common::run(cfg)
+}
+
+/// The `pipeline = N` value a [`pipe_toml`] document carries.
+fn pipeline_of(toml: &str) -> usize {
+    toml.lines()
+        .find_map(|l| l.trim().strip_prefix("pipeline = "))
+        .expect("pipe_toml always writes a pipeline key")
+        .parse()
+        .expect("pipeline value parses")
+}
+
+fn u64_field(rep: &Json, key: &str) -> u64 {
+    rep.req(key).unwrap().num().unwrap() as u64
+}
+
+/// The deployment report carries the reference's exact bits, and the
+/// real accounted socket payload bytes equal the booked α–β accounting.
+fn assert_report_matches(rep: &Json, r: &RunResult, what: &str) {
+    let got: Vec<u32> = rep
+        .req("final_x_bits")
+        .unwrap()
+        .arr()
+        .unwrap()
+        .iter()
+        .map(|j| j.num().unwrap() as u32)
+        .collect();
+    let want: Vec<u32> = r.final_x.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got, want, "{what}: final x diverged");
+
+    let steps = rep.req("steps").unwrap().arr().unwrap();
+    assert_eq!(steps.len(), r.recorder.steps.len(), "{what}: trace lengths differ");
+    for (row, p) in steps.iter().zip(&r.recorder.steps) {
+        let row = row.arr().unwrap();
+        assert_eq!(row[0].num().unwrap() as u64, p.step, "{what}: step ids diverged");
+        assert_eq!(
+            row[1].str().unwrap(),
+            format!("{:016x}", p.train_loss.to_bits()),
+            "{what}: loss trace diverged at step {}",
+            p.step
+        );
+    }
+
+    let eval = r.final_eval.as_ref().expect("reference has a final eval");
+    assert_eq!(
+        rep.req("final_eval_loss_bits").unwrap().str().unwrap(),
+        format!("{:016x}", eval.loss.to_bits()),
+        "{what}: final eval diverged"
+    );
+
+    let (syncs, booked) = r.recorder.comm();
+    assert_eq!(u64_field(rep, "syncs"), syncs, "{what}: sync counts differ");
+    assert_eq!(u64_field(rep, "booked_bytes"), booked, "{what}: booked bytes differ");
+    assert_eq!(
+        u64_field(rep, "accounted_bytes"),
+        booked,
+        "{what}: real socket bytes != booked accounting"
+    );
+    assert!(
+        u64_field(rep, "total_bytes") > u64_field(rep, "accounted_bytes"),
+        "{what}: total wire traffic must exceed the accounted payloads"
+    );
+}
+
+/// Run one pipelined deployment fault-free and pin it against the
+/// strictly-serial in-process oracle.
+fn pin(algo: &str, h: u64, workers: usize, codec: &str, shards: usize, depth: usize, tag: &str) {
+    let steps = 36;
+    let toml = pipe_toml(algo, h, workers, steps, codec, shards, depth);
+    let run = common::run_net(&toml, workers, tag, &[]);
+    for (w, st) in run.workers.iter().enumerate() {
+        assert!(st.success(), "{tag}: worker {w} failed: {st}");
+    }
+    assert!(run.leader.success(), "{tag}: leader failed: {}", run.leader);
+    let rep = common::net_report(&run.out_dir);
+    let reference = serial_reference(&toml, codec);
+    assert_report_matches(&rep, &reference, tag);
+    std::fs::remove_dir_all(&run.out_dir).ok();
+}
+
+// --- Real loopback TCP: pipelined ≡ unpipelined, exactly accounted --------
+
+#[test]
+fn tcp_pipelined_f32_sharded_pins_bitwise() {
+    // The acceptance shape: 8 leader shards, pipeline depths 2 and 4.
+    pin("local_adaalter", 4, 4, "f32", 8, 2, "pipe_f32_laa_h4_w4_d2");
+    pin("local_adaalter", 4, 4, "f32", 8, 4, "pipe_f32_laa_h4_w4_d4");
+    pin("adagrad", 1, 2, "f32", 4, 4, "pipe_f32_adagrad_w2_d4");
+}
+
+#[test]
+fn tcp_pipelined_bf16_and_qsgd_pin_bitwise() {
+    // bf16: sharded plan + parallel reduction + coalescing writers.
+    pin("local_adaalter", 4, 4, "bf16", 4, 2, "pipe_bf16_laa_h4_w4_d2");
+    // QSGD: dense plan — the pipeline is pure writer coalescing here,
+    // and the per-stream RNG burn order must survive it.
+    pin("local_adaalter", 4, 2, "qsgd", 1, 4, "pipe_qsgd_laa_h4_w2_d4");
+}
+
+/// Two real deployments of the *same* experiment — coalescing on vs off —
+/// must publish byte-identical reports: same bits, same booked bytes,
+/// same accounted socket bytes.
+#[test]
+fn pipelined_deployment_report_equals_unpipelined_deployment() {
+    let on = pipe_toml("local_adaalter", 4, 2, 24, "f32", 4, 4);
+    let off = on.replace("pipeline = 4", "pipeline = 0");
+    let run_on = common::run_net(&on, 2, "pipe_on", &[]);
+    let run_off = common::run_net(&off, 2, "pipe_off", &[]);
+    assert!(run_on.leader.success() && run_off.leader.success());
+    let rep_on = common::net_report(&run_on.out_dir);
+    let rep_off = common::net_report(&run_off.out_dir);
+    for key in ["final_x_bits", "steps", "final_eval_loss_bits", "syncs", "booked_bytes"] {
+        assert_eq!(
+            rep_on.req(key).unwrap().dump(),
+            rep_off.req(key).unwrap().dump(),
+            "deployment reports diverged on {key}"
+        );
+    }
+    // Accounted socket bytes are exact on both sides — coalescing must
+    // not change what is billed, only how many syscalls carry it.
+    assert_eq!(
+        u64_field(&rep_on, "accounted_bytes"),
+        u64_field(&rep_off, "accounted_bytes"),
+        "accounted bytes diverged between depths"
+    );
+    std::fs::remove_dir_all(&run_on.out_dir).ok();
+    std::fs::remove_dir_all(&run_off.out_dir).ok();
+}
+
+// --- In-process: pipeline = off ≡ depth = 1 ≡ depth = 4, all codecs -------
+
+/// `pipeline = 0`, `1` and `4` through the in-process collectives
+/// (sharded channel f32, bf16 wire, QSGD) are bitwise-identical — the
+/// satellite permutation property made end-to-end: whatever order the
+/// executor completes shards in, the round's bits never move.
+#[test]
+fn pipeline_depth_is_bitwise_invisible_in_process() {
+    let shapes: &[(&str, usize)] = &[("f32", 8), ("bf16", 4), ("qsgd", 1)];
+    for &(codec, shards) in shapes {
+        let mk = |depth: usize| {
+            let mut c = common::cfg(Algorithm::LocalAdaAlter, SyncPeriod::Every(4), 4, 40);
+            c.comm.transport = "channel".into();
+            c.comm.shards = shards;
+            c.comm.pipeline = depth;
+            match codec {
+                "bf16" => c.precision.wire = "bf16".into(),
+                "qsgd" => {
+                    c.comm.compression = "qsgd".into();
+                    c.comm.qsgd_levels = 15;
+                }
+                _ => {}
+            }
+            common::run(c)
+        };
+        let off = mk(0);
+        let d1 = mk(1);
+        let d4 = mk(4);
+        common::assert_bitwise_eq(&off, &d1, &format!("{codec}: off vs depth 1"));
+        common::assert_bitwise_eq(&off, &d4, &format!("{codec}: off vs depth 4"));
+        let (s0, b0) = off.recorder.comm();
+        let (s4, b4) = d4.recorder.comm();
+        assert_eq!((s0, b0), (s4, b4), "{codec}: booked accounting moved with depth");
+    }
+}
+
+// --- Flush-on-close: a clean Leave never strands coalesced frames ---------
+
+fn faults_csv(dir: &str, workers: usize) -> String {
+    let path = format!("{dir}/faults_local_adaalter_w{workers}_h4.csv");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+fn csv_column_sum(csv: &str, name: &str) -> f64 {
+    let mut lines = csv.lines();
+    let header: Vec<&str> = lines.next().expect("csv header").split(',').collect();
+    let idx = header
+        .iter()
+        .position(|h| *h == name)
+        .unwrap_or_else(|| panic!("faults csv has no {name:?} column: {header:?}"));
+    lines
+        .map(|l| {
+            l.split(',')
+                .nth(idx)
+                .unwrap_or_else(|| panic!("short csv row {l:?}"))
+                .parse::<f64>()
+                .unwrap_or_else(|e| panic!("bad {name} value in {l:?}: {e}"))
+        })
+        .sum()
+}
+
+/// The shutdown-drain regression pin: with coalescing writers on, a
+/// worker leaving voluntarily mid-run must still get every queued frame
+/// — including the final partial batch — onto the wire before its
+/// socket closes. A dropped frame would surface as a crash tombstone
+/// (or a hang) instead of the clean leave billed here.
+#[test]
+fn leave_mid_round_with_pipeline_drains_final_frames() {
+    let toml = format!(
+        "[train]\n\
+         workers = 3\n\
+         sync_period = 4\n\
+         steps = 400\n\
+         steps_per_epoch = 50\n\
+         log_every = 50\n\
+         fused = false\n\
+         backend = \"rust_math\"\n\
+         rust_math_dim = 64\n\
+         [optim]\n\
+         algorithm = \"local_adaalter\"\n\
+         warmup_steps = 10\n\
+         [comm]\n\
+         transport = \"tcp\"\n\
+         pipeline = 4\n\
+         [faults]\n\
+         quorum = 2\n\
+         [net]\n\
+         listen = \"127.0.0.1:0\"\n\
+         connect_timeout_s = 60.0\n"
+    );
+    let env = vec![(
+        2usize,
+        adaalter::comm::net::LEAVE_AT_STEP_ENV.to_string(),
+        "30".to_string(),
+    )];
+    let run = common::run_net(&toml, 3, "pipe_leave", &env);
+    assert!(run.workers[2].success(), "leaving worker exits clean: {}", run.workers[2]);
+    for (w, st) in run.workers.iter().take(2).enumerate() {
+        assert!(st.success(), "worker {w} failed: {st}");
+    }
+    assert!(run.leader.success(), "leader must finish on the remainder: {}", run.leader);
+    let csv = faults_csv(&run.out_dir, 3);
+    assert_eq!(csv_column_sum(&csv, "leaves"), 1.0, "one voluntary leave billed");
+    assert_eq!(csv_column_sum(&csv, "crashes"), 0.0, "a dropped frame would bill a crash");
+    std::fs::remove_dir_all(&run.out_dir).ok();
+}
